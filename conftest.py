@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `pytest python/tests/` work from the root
+by putting the python/ package directory on sys.path (the tests import the
+`compile` package)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,81 @@
+//! Second domain workload (paper §IV motivates ML inference): download
+//! model weights (large object, network-bound prepare) then run a
+//! compute-bound forward pass — here the real benchmark artifact's matmul
+//! executed through PJRT stands in for the inference compute.
+//!
+//! Demonstrates that the Minos public API is workload-agnostic: the same
+//! coordinator, platform, and billing stack runs a differently-shaped
+//! `FunctionSpec`, and the instance-selection effect carries over.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example ml_inference
+//! ```
+
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::runtime::Runtime;
+use minos::sim::SimTime;
+use minos::stats::descriptive::Summary;
+use minos::util::prng::Rng;
+use minos::util::timefmt::signed_pct;
+use minos::workload::inference::inference_spec;
+
+fn main() -> anyhow::Result<()> {
+    // The inference-shaped function: 8 MB weights download, ~800 ms
+    // forward pass, shorter benchmark budget.
+    let mut cfg = ExperimentConfig::paper_day(1);
+    cfg.seed = 0x17FE2;
+    cfg.function = inference_spec();
+    cfg.minos.benchmark.base_ms = 200.0; // fits the shorter prepare step
+    cfg.vus.horizon = SimTime::from_secs(600.0);
+
+    let outcome = runner::run_paired(&cfg, None)?;
+    println!("== ML-inference workload: Minos vs baseline ==");
+    println!(
+        "compute mean:  {} ({})",
+        format_pair(
+            minos::stats::mean(&outcome.minos.analysis_durations()),
+            minos::stats::mean(&outcome.baseline.analysis_durations())
+        ),
+        signed_pct(outcome.analysis_improvement_pct())
+    );
+    println!(
+        "requests:      {} vs {} ({})",
+        outcome.minos.successful(),
+        outcome.baseline.successful(),
+        signed_pct(outcome.successful_requests_improvement_pct())
+    );
+    println!(
+        "cost per 1M:   {:.3} vs {:.3} USD ({})",
+        outcome.minos.cost_per_million_usd(),
+        outcome.baseline.cost_per_million_usd(),
+        signed_pct(outcome.cost_saving_pct())
+    );
+
+    // Run the *real* compute phase for a sample of requests: the benchmark
+    // artifact's Pallas matmul through PJRT.
+    if let Ok(rt) = Runtime::load_default() {
+        let n = rt.bench_dim() * rt.bench_dim();
+        let mut rng = Rng::new(9);
+        let weights: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.05).collect();
+        let mut latencies = Vec::new();
+        for _ in 0..32 {
+            let activations: Vec<f32> =
+                (0..n).map(|_| rng.normal() as f32).collect();
+            let out = rt.exec_benchmark(&activations, &weights)?;
+            latencies.push(out.elapsed.as_secs_f64() * 1e3);
+        }
+        let s = Summary::of(&latencies).unwrap();
+        println!(
+            "\nreal forward-pass compute (256×256 Pallas matmul via PJRT): \
+             p50 {:.2} ms, p95 {:.2} ms over {} executions",
+            s.median, s.p95, s.n
+        );
+    } else {
+        println!("\n(run `make artifacts` to enable the real compute phase)");
+    }
+    Ok(())
+}
+
+fn format_pair(a: f64, b: f64) -> String {
+    format!("{a:.0} ms vs {b:.0} ms")
+}

@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts, execute both HLO modules through
+//! PJRT, and run one tiny Minos-vs-baseline comparison.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use minos::coordinator::{ElysiumJudge, Verdict};
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::runtime::Runtime;
+use minos::workload::weather;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (L1 Pallas kernels lowered through the L2
+    //    JAX model into HLO text) and compile them on the PJRT CPU client.
+    let rt = Runtime::load_default()?;
+    println!("runtime loaded: {rt:?}");
+
+    // 2. Execute the weather analysis on a fresh synthetic dataset.
+    let w = weather::generate(123);
+    let out = rt.exec_linreg(&w.x, &w.y, &w.x_next)?;
+    println!(
+        "weather analysis: predicted tomorrow = {:.2} °C (last observed {:.2} °C), \
+         exec {:.2} ms",
+        out.prediction,
+        w.y.last().unwrap(),
+        out.elapsed.as_secs_f64() * 1e3
+    );
+
+    // 3. Execute the cold-start benchmark (tiled Pallas matmul) and judge
+    //    it against an elysium threshold, exactly like a cold-started
+    //    instance would.
+    let n = rt.bench_dim() * rt.bench_dim();
+    let a: Vec<f32> = (0..n).map(|i| (i % 17) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
+    let bench = rt.exec_benchmark(&a, &b)?;
+    let bench_ms = bench.elapsed.as_secs_f64() * 1e3;
+    let judge = ElysiumJudge::new(bench_ms * 1.5); // generous threshold
+    println!(
+        "cold-start benchmark: checksum {:.1}, {:.2} ms → {}",
+        bench.checksum,
+        bench_ms,
+        match judge.judge(bench_ms) {
+            Verdict::Pass => "PASS (instance joins the warm pool)",
+            Verdict::Terminate => "TERMINATE (re-queue + crash)",
+        }
+    );
+
+    // 4. One short simulated day, Minos vs baseline.
+    let cfg = ExperimentConfig::smoke(1, 42);
+    let o = runner::run_paired(&cfg, None)?;
+    println!(
+        "2-minute day 2 sim: analysis {:+.1}%, requests {:+.1}%, cost {:+.1}% \
+         (terminations: {})",
+        o.analysis_improvement_pct(),
+        o.successful_requests_improvement_pct(),
+        o.cost_saving_pct(),
+        o.minos.terminations
+    );
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end driver (DESIGN.md §6): the paper's full weather data-
+//! processing workflow on the real three-layer stack.
+//!
+//! What this does, in order:
+//! 1. loads the AOT artifacts and **calibrates** the simulator's timing
+//!    anchors from real PJRT executions;
+//! 2. runs the **pre-test** (10 VUs × 1 min) to set the elysium threshold
+//!    at the 60th percentile of benchmark durations (paper §III-A);
+//! 3. runs a full paper day (10 VUs × 30 min) for **both conditions**,
+//!    with every completed invocation executing the weather-regression
+//!    HLO through PJRT and verifying the prediction against the Rust OLS
+//!    oracle in-loop;
+//! 4. reports latency / throughput / cost, Minos vs baseline.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example weather_workflow
+//! ```
+//! Pass `--short` for a 3-minute day (CI-friendly).
+
+use minos::experiment::{config::ExperimentConfig, report, runner};
+use minos::runtime::{calibrate::Calibration, Runtime};
+use minos::sim::SimTime;
+use minos::stats::descriptive::Summary;
+use minos::util::timefmt::{human_duration_ms, signed_pct};
+
+fn main() -> anyhow::Result<()> {
+    let short = std::env::args().any(|a| a == "--short");
+
+    // --- 1. runtime + calibration -------------------------------------
+    let rt = Runtime::load_default()?;
+    let cal = Calibration::measure(&rt, 9)?;
+    println!("[calibrate] {}", cal.report());
+
+    // --- 2. pre-test ----------------------------------------------------
+    let mut cfg = ExperimentConfig::paper_day(1);
+    cfg.seed = 0x7EA7;
+    if short {
+        cfg.vus.horizon = SimTime::from_secs(180.0);
+    }
+    let pre = runner::run_pretest(&cfg, Some(&rt))?;
+    let s = pre.summary();
+    println!(
+        "[pretest] {} samples, median {:.0} ms, CoV {:.3} → elysium P{:.0} = {:.1} ms",
+        s.n,
+        s.median,
+        s.cov(),
+        pre.percentile,
+        pre.threshold_ms
+    );
+
+    // --- 3. the paired day with real execution ------------------------
+    let day = runner::run_paired(&cfg, Some(&rt))?;
+    println!(
+        "[run] minos: {} successful ({} terminations, {} cold starts); \
+         baseline: {} successful",
+        day.minos.successful(),
+        day.minos.terminations,
+        day.minos.cold_starts,
+        day.baseline.successful()
+    );
+    println!("[run] real PJRT executions: {}", rt.executions.get());
+
+    // Verify all real predictions were recorded and plausible.
+    let preds: Vec<f64> = day
+        .minos
+        .records
+        .iter()
+        .filter_map(|r| r.prediction.map(|p| p as f64))
+        .collect();
+    assert_eq!(preds.len() as u64, day.minos.successful());
+    let ps = Summary::of(&preds).unwrap();
+    println!(
+        "[verify] {} predictions, range [{:.1}, {:.1}] °C — all checked \
+         in-loop against the Rust OLS oracle",
+        ps.n, ps.min, ps.max
+    );
+
+    // --- 4. report -----------------------------------------------------
+    let lat_m = Summary::of(&day.minos.latencies()).unwrap();
+    let lat_b = Summary::of(&day.baseline.latencies()).unwrap();
+    let horizon_s = cfg.vus.horizon.as_secs();
+    println!("\n== weather workflow: Minos vs baseline ==");
+    println!(
+        "latency p50:     {:>10} vs {:>10}  ({})",
+        human_duration_ms(lat_m.median),
+        human_duration_ms(lat_b.median),
+        signed_pct((lat_b.median - lat_m.median) / lat_b.median * 100.0)
+    );
+    println!(
+        "latency p95:     {:>10} vs {:>10}",
+        human_duration_ms(lat_m.p95),
+        human_duration_ms(lat_b.p95)
+    );
+    println!(
+        "throughput:      {:>10.2} vs {:>10.2} req/s  ({})",
+        day.minos.successful() as f64 / horizon_s,
+        day.baseline.successful() as f64 / horizon_s,
+        signed_pct(day.successful_requests_improvement_pct())
+    );
+    println!(
+        "analysis mean:   {:>10} vs {:>10}  ({})",
+        human_duration_ms(minos::stats::mean(&day.minos.analysis_durations())),
+        human_duration_ms(minos::stats::mean(&day.baseline.analysis_durations())),
+        signed_pct(day.analysis_improvement_pct())
+    );
+    println!(
+        "cost per 1M:     {:>10.3} vs {:>10.3} USD  (saving {})",
+        day.minos.cost_per_million_usd(),
+        day.baseline.cost_per_million_usd(),
+        signed_pct(day.cost_saving_pct())
+    );
+    println!();
+    print!("{}", report::fig7_report(&day, 30.0, horizon_s));
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT pipeline: lower the L2 computations to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (all under artifacts/):
+  linreg.hlo.txt        weather_fit_predict(X[512,16], y[512], x_next[16])
+                        -> (theta[16], y_pred)          [return_tuple=True]
+  bench_matmul.hlo.txt  benchmark(A[256,256], B[256,256]) -> (checksum,)
+  fixture_x.f32 / fixture_y.f32 / fixture_xnext.f32
+                        a seed-0 weather dataset (little-endian raw f32)
+  fixture_theta.f32 / fixture_pred.f32
+                        oracle outputs for that dataset (jnp reference path)
+  fixture_bench_a.f32 / fixture_bench_b.f32 / fixture_bench_sum.f32
+                        benchmark inputs + oracle checksum
+  meta.json             shapes, dtypes, ridge, file inventory, versions
+
+The Makefile re-runs this only when compile/ sources change; the Rust binary
+is self-contained once artifacts exist.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+FIXTURE_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write_f32(path: str, arr) -> None:
+    np.asarray(arr, dtype="<f4").tofile(path)
+
+
+def lower_linreg() -> str:
+    spec_x = jax.ShapeDtypeStruct((model.N_DAYS, model.N_FEATURES), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((model.N_DAYS,), jnp.float32)
+    spec_n = jax.ShapeDtypeStruct((model.N_FEATURES,), jnp.float32)
+    lowered = jax.jit(model.weather_fit_predict).lower(spec_x, spec_y, spec_n)
+    return to_hlo_text(lowered)
+
+
+def lower_benchmark() -> str:
+    spec = jax.ShapeDtypeStruct((model.BENCH_DIM, model.BENCH_DIM), jnp.float32)
+    lowered = jax.jit(model.benchmark).lower(spec, spec)
+    return to_hlo_text(lowered)
+
+
+def bake_fixtures(outdir: str) -> dict:
+    """Fixed-seed inputs + jnp-oracle outputs for Rust integration tests."""
+    x, y, x_next = model.make_weather_dataset(FIXTURE_SEED)
+    theta = ref.ols_fit_ref(x, y, ridge=model.RIDGE)
+    pred = jnp.dot(x_next, theta)
+
+    key_a, key_b = jax.random.split(jax.random.PRNGKey(FIXTURE_SEED + 1))
+    a = jax.random.normal(key_a, (model.BENCH_DIM, model.BENCH_DIM), jnp.float32)
+    b = jax.random.normal(key_b, (model.BENCH_DIM, model.BENCH_DIM), jnp.float32)
+    bench_sum = ref.benchmark_checksum_ref(a, b)
+
+    files = {
+        "fixture_x.f32": x,
+        "fixture_y.f32": y,
+        "fixture_xnext.f32": x_next,
+        "fixture_theta.f32": theta,
+        "fixture_pred.f32": jnp.atleast_1d(pred),
+        "fixture_bench_a.f32": a,
+        "fixture_bench_b.f32": b,
+        "fixture_bench_sum.f32": jnp.atleast_1d(bench_sum),
+    }
+    for name, arr in files.items():
+        _write_f32(os.path.join(outdir, name), arr)
+    return {
+        "seed": FIXTURE_SEED,
+        "pred": float(pred),
+        "bench_sum": float(bench_sum),
+        "files": {n: list(np.asarray(a).shape) for n, a in files.items()},
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt",
+                        help="path of the primary artifact; siblings go next to it")
+    args = parser.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    linreg_text = lower_linreg()
+    bench_text = lower_benchmark()
+    with open(os.path.join(outdir, "linreg.hlo.txt"), "w") as f:
+        f.write(linreg_text)
+    with open(os.path.join(outdir, "bench_matmul.hlo.txt"), "w") as f:
+        f.write(bench_text)
+    # model.hlo.txt is the Makefile's stamp target; keep it the linreg module.
+    with open(args.out, "w") as f:
+        f.write(linreg_text)
+
+    fixtures = bake_fixtures(outdir)
+    meta = {
+        "jax_version": jax.__version__,
+        "n_days": model.N_DAYS,
+        "n_features": model.N_FEATURES,
+        "bench_dim": model.BENCH_DIM,
+        "ridge": model.RIDGE,
+        "artifacts": {
+            "linreg": "linreg.hlo.txt",
+            "benchmark": "bench_matmul.hlo.txt",
+        },
+        "fixtures": fixtures,
+    }
+    with open(os.path.join(outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(
+        f"wrote linreg ({len(linreg_text)} chars), bench ({len(bench_text)} chars), "
+        f"fixtures (pred={fixtures['pred']:.4f}, bench_sum={fixtures['bench_sum']:.1f}) "
+        f"to {outdir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

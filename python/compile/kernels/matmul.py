@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: tiled matrix multiplication.
+
+This is the CPU benchmark Minos runs on every cold start (paper §III-A,
+following ref. [10], "serverless big data processing using matrix
+multiplication as example"). On the real platform the benchmark stresses the
+shared CPU; in this reproduction the same computation is lowered AOT into the
+benchmark artifact that the Rust coordinator executes and times.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the kernel is written
+TPU-idiomatically — the grid walks (M/bm, N/bn, K/bk) output/contraction
+tiles, each step multiplying a VMEM-resident (bm, bk) x (bk, bn) pair on the
+MXU and accumulating f32 into the output tile, which stays VMEM-resident
+across the innermost (contraction) grid dimension. BlockSpecs express the
+HBM<->VMEM schedule explicitly; `interpret=True` is mandatory for CPU PJRT
+execution (real-TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """Grid point (i, j, k): o[i,j] += x[i,k] @ y[k,j], zero-init at k == 0.
+
+    The output tile is revisited across the contraction dimension (its index
+    map ignores k), so it acts as the MXU-style f32 accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled Pallas matmul: (m, k) @ (k, n) -> (m, n) in float32.
+
+    Block sizes are clamped to the problem size so small shapes (used by the
+    hypothesis sweeps) work without padding; dimensions must be divisible by
+    the (clamped) block sizes.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def benchmark_checksum(
+    x: jax.Array, y: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """The Minos cold-start benchmark computation.
+
+    Returns a scalar checksum of the product so the AOT artifact's output
+    transfer is negligible next to the compute being timed (the Rust runtime
+    times the whole execute call).
+    """
+    c = matmul(x, y, interpret=interpret)
+    return jnp.sum(c, dtype=jnp.float32)

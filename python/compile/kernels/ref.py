@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes. The oracles are also what the
+AOT pipeline uses to bake expected outputs into artifacts/fixture_* for the
+Rust integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32 reference for kernels.matmul.matmul."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def benchmark_checksum_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Scalar checksum reference for the benchmark computation."""
+    return jnp.sum(matmul_ref(x, y), dtype=jnp.float32)
+
+
+def normal_equations_ref(
+    x: jax.Array, y: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """f32 reference for kernels.linreg.normal_equations."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    return xf.T @ xf, xf.T @ yf
+
+
+def ols_fit_ref(x: jax.Array, y: jax.Array, *, ridge: float = 1e-6) -> jax.Array:
+    """Dense reference for kernels.linreg.ols_fit (same ridge convention)."""
+    xtx, xty = normal_equations_ref(x, y)
+    k = xtx.shape[0]
+    return jnp.linalg.solve(xtx + ridge * jnp.eye(k, dtype=jnp.float32), xty)

@@ -1,0 +1,110 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+The Minos evaluation workload (paper SIII-A) is a weather-prediction
+function: download a CSV of past daily weather for one location, fit a
+linear regression, predict tomorrow. This module defines the two
+computations that get AOT-lowered into HLO artifacts for the Rust
+coordinator:
+
+- ``weather_fit_predict``: the *analysis* step — OLS fit via the Pallas
+  normal-equations kernel + next-day prediction.
+- ``benchmark``: the *cold-start benchmark* — the Pallas tiled matmul with a
+  scalar checksum output.
+
+Python runs only at build time (``make artifacts``); the Rust request path
+executes the lowered HLO through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import linreg, matmul
+
+# Canonical AOT shapes. The weather design matrix is (N_DAYS, N_FEATURES):
+# 512 past days x [intercept, 4 seasonal harmonics (sin/cos annual +
+# semi-annual), linear trend, temperature lags, padding] = 16 features,
+# sized so row panels tile cleanly (DESIGN.md SHardware-Adaptation).
+N_DAYS = 512
+N_FEATURES = 16
+BENCH_DIM = 256  # the benchmark multiplies two (256, 256) f32 matrices
+RIDGE = 1e-4  # fixed at lowering time; baked into the artifact
+
+
+def weather_fit_predict(x, y, x_next):
+    """Fit OLS on (x, y) and predict for feature row ``x_next``.
+
+    Returns ``(theta, y_pred)`` — the Rust side logs theta for debugging and
+    uses y_pred as the function's response payload.
+    """
+    theta = linreg.ols_fit(x, y, ridge=RIDGE)
+    y_pred = jnp.dot(x_next.astype(jnp.float32), theta)
+    return theta, y_pred
+
+
+def benchmark(a, b):
+    """The Minos cold-start CPU benchmark (scalar checksum output)."""
+    return matmul.benchmark_checksum(a, b)
+
+
+def make_weather_dataset(seed: int, n_days: int = N_DAYS, n_features: int = N_FEATURES):
+    """Synthetic daily-temperature dataset mirroring the paper's CSV.
+
+    Temperature model: annual + semi-annual seasonality, a mild warming
+    trend, and AR(1) day-to-day noise — enough structure that the regression
+    is well-posed and the predicted value is physically plausible. Features
+    are [1, sin/cos(annual), sin/cos(semi-annual), trend, lag-1..lag-8,
+    zero-padding] to fill ``n_features``.
+
+    Returns (X, y, x_next) as float32 arrays; x_next is the feature row for
+    "tomorrow" (day index n_days).
+    """
+    key = jax.random.PRNGKey(seed)
+    n_lags = 8
+    n_total = n_days + n_lags + 1  # lag warmup + tomorrow
+    t = jnp.arange(n_total, dtype=jnp.float32)
+    annual = 2.0 * jnp.pi * t / 365.25
+    base = (
+        10.0
+        + 8.0 * jnp.sin(annual)
+        - 3.0 * jnp.cos(annual)
+        + 1.5 * jnp.sin(2.0 * annual)
+        + 0.002 * t
+    )
+    # AR(1) noise, phi = 0.7
+    eps = 1.2 * jax.random.normal(key, (n_total,), dtype=jnp.float32)
+
+    def ar_step(carry, e):
+        nxt = 0.7 * carry + e
+        return nxt, nxt
+
+    _, noise = jax.lax.scan(ar_step, jnp.float32(0.0), eps)
+    temp = base + noise
+
+    def feature_row(day):
+        ann = 2.0 * jnp.pi * day / 365.25
+        det = jnp.stack(
+            [
+                jnp.float32(1.0) + 0.0 * day,
+                jnp.sin(ann),
+                jnp.cos(ann),
+                jnp.sin(2.0 * ann),
+                jnp.cos(2.0 * ann),
+                day / 365.25,
+            ]
+        )
+        lags = jax.lax.dynamic_slice(
+            temp, (day.astype(jnp.int32) - n_lags,), (n_lags,)
+        )
+        row = jnp.concatenate([det, lags[::-1]])
+        pad = n_features - row.shape[0]
+        return jnp.pad(row, (0, pad)) if pad > 0 else row[:n_features]
+
+    days = jnp.arange(n_lags, n_lags + n_days, dtype=jnp.float32)
+    x_mat = jax.vmap(feature_row)(days)
+    y_vec = temp[n_lags : n_lags + n_days]
+    x_next = feature_row(jnp.float32(n_lags + n_days))
+    return (
+        x_mat.astype(jnp.float32),
+        y_vec.astype(jnp.float32),
+        x_next.astype(jnp.float32),
+    )

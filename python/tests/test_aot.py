@@ -1,0 +1,60 @@
+"""AOT pipeline: lowering produces parseable HLO text + consistent fixtures."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_linreg_produces_hlo_text():
+    text = aot.lower_linreg()
+    assert "ENTRY" in text and "HloModule" in text
+    # jax >= 0.5 serialized protos are rejected downstream; text must be ASCII
+    text.encode("ascii")
+
+
+def test_lower_benchmark_produces_hlo_text():
+    text = aot.lower_benchmark()
+    assert "ENTRY" in text
+    assert "dot" in text  # the matmul must survive lowering
+
+
+def test_bake_fixtures_roundtrip(tmp_path):
+    info = aot.bake_fixtures(str(tmp_path))
+    x = np.fromfile(tmp_path / "fixture_x.f32", dtype="<f4")
+    assert x.size == model.N_DAYS * model.N_FEATURES
+    pred = np.fromfile(tmp_path / "fixture_pred.f32", dtype="<f4")
+    assert pred.size == 1
+    assert abs(float(pred[0]) - info["pred"]) < 1e-4
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "meta.json")),
+    reason="run `make artifacts` first",
+)
+def test_existing_artifacts_consistent():
+    with open(os.path.join(ARTIFACTS, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["n_days"] == model.N_DAYS
+    assert meta["bench_dim"] == model.BENCH_DIM
+    for rel in meta["artifacts"].values():
+        path = os.path.join(ARTIFACTS, rel)
+        with open(path) as fh:
+            head = fh.read(64)
+        assert "HloModule" in head
+    pred = np.fromfile(os.path.join(ARTIFACTS, "fixture_pred.f32"), dtype="<f4")
+    assert abs(float(pred[0]) - meta["fixtures"]["pred"]) < 1e-4
+
+
+def test_artifacts_are_custom_call_free():
+    """Regression guard: the pinned xla_extension 0.5.1 on the Rust side
+    rejects TYPED_FFI custom calls (e.g. LAPACK lowerings of cho_solve /
+    linalg.solve). The AOT artifacts must stay pure-HLO."""
+    for text in (aot.lower_linreg(), aot.lower_benchmark()):
+        assert "custom-call" not in text, "artifact contains a custom call"

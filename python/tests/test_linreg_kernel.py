@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas normal-equations kernel vs jnp oracle + lstsq."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linreg, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+NS = st.sampled_from([8, 16, 32, 64, 128, 256, 512])
+KS = st.sampled_from([1, 2, 4, 8, 16])
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=NS, k=KS, seed=st.integers(0, 2**31 - 1))
+def test_normal_equations_matches_ref(n, k, seed):
+    key1, key2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(key1, (n, k), jnp.float32)
+    y = jax.random.normal(key2, (n,), jnp.float32)
+    xtx, xty = linreg.normal_equations(x, y)
+    rxtx, rxty = ref.normal_equations_ref(x, y)
+    assert xtx.shape == (k, k) and xty.shape == (k,)
+    np.testing.assert_allclose(np.asarray(xtx), np.asarray(rxtx), rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(xty), np.asarray(rxty), rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([128, 256, 512]),
+    bn=st.sampled_from([32, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normal_equations_panel_invariance(n, bn, seed):
+    """Streaming accumulation must not depend on row-panel size."""
+    key1, key2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(key1, (n, 8), jnp.float32)
+    y = jax.random.normal(key2, (n,), jnp.float32)
+    xtx_a, xty_a = linreg.normal_equations(x, y, block_n=bn)
+    xtx_b, xty_b = ref.normal_equations_ref(x, y)
+    np.testing.assert_allclose(np.asarray(xtx_a), np.asarray(xtx_b), rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(xty_a), np.asarray(xty_b), rtol=2e-5, atol=2e-4)
+
+
+def test_normal_equations_gram_symmetry():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (256, 16), jnp.float32)
+    y = jnp.ones((256,), jnp.float32)
+    xtx, _ = linreg.normal_equations(x, y)
+    np.testing.assert_allclose(np.asarray(xtx), np.asarray(xtx).T, atol=1e-5)
+
+
+def test_normal_equations_gram_psd():
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (128, 8), jnp.float32)
+    xtx, _ = linreg.normal_equations(x, jnp.zeros((128,), jnp.float32))
+    eig = np.linalg.eigvalsh(np.asarray(xtx))
+    assert eig.min() > -1e-3
+
+
+def test_normal_equations_shape_mismatch():
+    with pytest.raises(AssertionError):
+        linreg.normal_equations(
+            jnp.zeros((16, 4), jnp.float32), jnp.zeros((8,), jnp.float32)
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([64, 128, 512]), k=KS, seed=st.integers(0, 2**31 - 1))
+def test_ols_fit_matches_lstsq(n, k, seed):
+    key1, key2, key3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(key1, (n, k), jnp.float32)
+    theta_true = jax.random.normal(key2, (k,), jnp.float32)
+    y = x @ theta_true + 0.01 * jax.random.normal(key3, (n,), jnp.float32)
+    theta = linreg.ols_fit(x, y, ridge=1e-6)
+    theta_ref, *_ = jnp.linalg.lstsq(x, y)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_ref), rtol=1e-2, atol=1e-2)
+
+
+def test_ols_fit_recovers_exact_solution():
+    """Noiseless well-conditioned system: fit must recover theta exactly."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (512, 8), jnp.float32)
+    theta_true = jnp.arange(1.0, 9.0, dtype=jnp.float32)
+    y = x @ theta_true
+    theta = linreg.ols_fit(x, y, ridge=1e-8)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_true), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_spd_solve_matches_dense_solver(k, seed):
+    """The pure-HLO Gauss-Jordan solve must agree with jnp.linalg.solve on
+    random SPD systems (it exists precisely to avoid that LAPACK call in
+    the AOT artifact)."""
+    key1, key2 = jax.random.split(jax.random.PRNGKey(seed))
+    m = jax.random.normal(key1, (k, k), jnp.float32)
+    a = m @ m.T + jnp.eye(k, dtype=jnp.float32) * (k + 1.0)
+    b = jax.random.normal(key2, (k,), jnp.float32)
+    got = linreg.spd_solve(a, b)
+    want = jnp.linalg.solve(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_spd_solve_identity():
+    b = jnp.arange(1.0, 9.0, dtype=jnp.float32)
+    got = linreg.spd_solve(jnp.eye(8, dtype=jnp.float32), b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(b), atol=1e-6)

@@ -1,0 +1,92 @@
+"""L1 correctness: Pallas tiled matmul vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.matmul_ref is
+the core correctness signal for the benchmark artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 4, 8, 16, 32, 64, 128, 256])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, dtype, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (m, k), dtype)
+    y = _rand(k2, (k, n), dtype)
+    got = matmul.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    assert got.shape == (m, n) and got.dtype == jnp.float32
+    # Blocked accumulation reorders f32 sums vs the single-dot reference;
+    # tolerance scales with the contraction depth.
+    tol = 1e-4 * max(1.0, k / 64) if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([128, 256]),
+    bm=st.sampled_from([32, 64, 128]),
+    bn=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_shape_invariance(m, bm, bn, bk, seed):
+    """Result must not depend on the VMEM tiling choice."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (m, m), jnp.float32)
+    y = _rand(k2, (m, m), jnp.float32)
+    got = matmul.matmul(x, y, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_rejects_mismatched_contraction():
+    x = jnp.zeros((4, 8), jnp.float32)
+    y = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul.matmul(x, y)
+
+
+def test_matmul_rejects_indivisible_blocks():
+    x = jnp.zeros((100, 100), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul.matmul(x, x, block_m=64, block_n=64, block_k=64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=st.sampled_from([64, 128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_benchmark_checksum_matches_ref(dim, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (dim, dim), jnp.float32)
+    b = _rand(k2, (dim, dim), jnp.float32)
+    got = matmul.benchmark_checksum(a, b)
+    want = ref.benchmark_checksum_ref(a, b)
+    assert got.shape == ()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_matmul_identity():
+    x = jnp.eye(64, dtype=jnp.float32) * 3.0
+    got = matmul.matmul(x, jnp.eye(64, dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), atol=1e-6)
+
+
+def test_matmul_zero_propagation():
+    x = jnp.zeros((32, 32), jnp.float32)
+    y = jnp.ones((32, 32), jnp.float32)
+    assert float(jnp.abs(matmul.matmul(x, y)).max()) == 0.0

@@ -1,0 +1,77 @@
+"""L2 correctness: weather model shapes, oracle agreement, dataset sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_weather_dataset_shapes():
+    x, y, x_next = model.make_weather_dataset(0)
+    assert x.shape == (model.N_DAYS, model.N_FEATURES)
+    assert y.shape == (model.N_DAYS,)
+    assert x_next.shape == (model.N_FEATURES,)
+    assert x.dtype == y.dtype == x_next.dtype == jnp.float32
+
+
+def test_weather_dataset_deterministic():
+    a = model.make_weather_dataset(42)
+    b = model.make_weather_dataset(42)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v))
+
+
+def test_weather_dataset_seed_sensitivity():
+    a, _, _ = model.make_weather_dataset(1)
+    b, _, _ = model.make_weather_dataset(2)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_weather_dataset_intercept_column():
+    x, _, x_next = model.make_weather_dataset(5)
+    np.testing.assert_array_equal(np.asarray(x[:, 0]), np.ones(model.N_DAYS))
+    assert float(x_next[0]) == 1.0
+
+
+def test_weather_temperatures_plausible():
+    _, y, _ = model.make_weather_dataset(9)
+    arr = np.asarray(y)
+    assert arr.min() > -40.0 and arr.max() < 60.0
+    # seasonality should produce a spread of at least several degrees
+    assert arr.max() - arr.min() > 5.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fit_predict_matches_oracle(seed):
+    x, y, x_next = model.make_weather_dataset(seed)
+    theta, pred = model.weather_fit_predict(x, y, x_next)
+    theta_ref = ref.ols_fit_ref(x, y, ridge=model.RIDGE)
+    pred_ref = float(jnp.dot(x_next, theta_ref))
+    assert theta.shape == (model.N_FEATURES,)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_ref), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(pred), pred_ref, rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_prediction_is_plausible_temperature(seed):
+    """The regression must actually predict weather, not garbage."""
+    x, y, x_next = model.make_weather_dataset(seed)
+    _, pred = model.weather_fit_predict(x, y, x_next)
+    recent = float(np.asarray(y)[-1])
+    assert abs(float(pred) - recent) < 15.0
+
+
+def test_benchmark_scalar_output():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (model.BENCH_DIM, model.BENCH_DIM), jnp.float32)
+    out = model.benchmark(a, a)
+    assert out.shape == ()
+    want = ref.benchmark_checksum_ref(a, a)
+    np.testing.assert_allclose(float(out), float(want), rtol=1e-4)

@@ -1,0 +1,84 @@
+//! Ablation (paper §II-C "What and how long to benchmark"): sweep the
+//! benchmark's base duration. Short benchmarks are noisy judges (more
+//! mis-selections); long benchmarks stop hiding inside the download and
+//! delay the analysis, eroding the gains.
+//!
+//! Run: `cargo bench --bench ablation_benchmark_length`
+
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::sim::SimTime;
+use minos::testkit::bench::time_median;
+use minos::util::csvio::Csv;
+
+fn main() {
+    let lengths_ms = [25.0, 50.0, 100.0, 200.0, 350.0, 500.0, 800.0, 1_200.0];
+    let mut csv = Csv::new(&[
+        "bench_ms",
+        "analysis_improvement_pct",
+        "requests_improvement_pct",
+        "cost_saving_pct",
+        "mean_exec_overhead_ms",
+    ]);
+    println!(
+        "{:>9} {:>12} {:>12} {:>9} {:>14}",
+        "bench ms", "analysis Δ%", "requests Δ%", "cost Δ%", "exec overhead"
+    );
+    let t = time_median("ablation: benchmark-length sweep", 1, || {
+        for &len in &lengths_ms {
+            let mut acc = (0.0, 0.0, 0.0, 0.0);
+            let reps = 3;
+            for s in 0..reps {
+                let mut cfg = ExperimentConfig::paper_day(1);
+                cfg.seed = 0xBE7C + s;
+                cfg.vus.horizon = SimTime::from_secs(600.0);
+                cfg.minos.benchmark.base_ms = len;
+                let o = runner::run_paired(&cfg, None).unwrap();
+                acc.0 += o.analysis_improvement_pct();
+                acc.1 += o.successful_requests_improvement_pct();
+                acc.2 += o.cost_saving_pct();
+                // Exec overhead attributable to the gate: how much longer
+                // cold passing executions ran vs prepare+analysis alone.
+                let overhead: f64 = o
+                    .minos
+                    .records
+                    .iter()
+                    .filter(|r| r.cold && r.bench_ms.is_some())
+                    .map(|r| {
+                        (r.exec_ms
+                            - (r.prepare_ms
+                                + r.analysis_ms
+                                + cfg.function.overhead_ms))
+                            .max(0.0)
+                    })
+                    .sum::<f64>()
+                    / o.minos.records.iter().filter(|r| r.cold).count().max(1) as f64;
+                acc.3 += overhead;
+            }
+            let n = reps as f64;
+            println!(
+                "{:>9.0} {:>12.2} {:>12.2} {:>9.2} {:>14.1}",
+                len,
+                acc.0 / n,
+                acc.1 / n,
+                acc.2 / n,
+                acc.3 / n
+            );
+            csv.push(vec![
+                format!("{len}"),
+                format!("{:.2}", acc.0 / n),
+                format!("{:.2}", acc.1 / n),
+                format!("{:.2}", acc.2 / n),
+                format!("{:.1}", acc.3 / n),
+            ]);
+        }
+    });
+    println!("\n{}", t.report());
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/ablation_benchmark_length.csv")).unwrap();
+    println!("rows written to results/ablation_benchmark_length.csv");
+    println!(
+        "\nexpected shape: gains rise as the benchmark becomes a reliable \
+         judge, then fall once it no longer hides inside the ~500 ms \
+         download (exec overhead column grows) — §II-C's 'no one-size-fits-all'."
+    );
+}

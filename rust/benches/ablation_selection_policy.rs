@@ -1,0 +1,125 @@
+//! Ablation: does *selection* drive the gains, or just restarts?
+//!
+//! Compares four policies on identical platform days, all paying the same
+//! gate cost (every enabled policy runs and bills the benchmark):
+//! - **baseline** — no gate at all;
+//! - **random-kill** — terminate cold starts at the Elysium-matched rate
+//!   but with *no* performance signal (pure churn control);
+//! - **elysium** — the paper's mechanism (benchmark vs P60 threshold);
+//! - **oracle** — judge on the true perf factor (unobservable in reality;
+//!   the per-cold-start upper bound a perfect centralized scheduler —
+//!   §V's related-work comparator — could achieve).
+//!
+//! Expected shape: baseline ≈ random-kill ≪ elysium ≤ oracle. Random kill
+//! must yield ≈0 improvement (restarting without selecting re-draws from
+//! the same distribution); Elysium must capture most of the oracle's
+//! headroom (its benchmark is a low-noise proxy for the true factor).
+//!
+//! Run: `cargo bench --bench ablation_selection_policy`
+
+use minos::coordinator::{MinosConfig, SelectionPolicy};
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::sim::SimTime;
+use minos::stats::descriptive::mean;
+use minos::util::csvio::Csv;
+
+fn main() {
+    let reps = 4u64;
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    let mut eval = |label: &str, make: &dyn Fn(&ExperimentConfig, f64) -> MinosConfig| {
+        let mut analysis = Vec::new();
+        let mut requests = Vec::new();
+        let mut cost = Vec::new();
+        for s in 0..reps {
+            let mut cfg = ExperimentConfig::paper_day(1);
+            cfg.seed = 0x5E1 + s;
+            cfg.vus.horizon = SimTime::from_secs(900.0);
+            let pre = runner::run_pretest(&cfg, None).unwrap();
+            let minos_cfg = make(&cfg, pre.threshold_ms);
+            let treated = runner::run_single(&cfg, &minos_cfg, 0, false, None).unwrap();
+            let base =
+                runner::run_single(&cfg, &MinosConfig::baseline(), 2, false, None).unwrap();
+            let b = mean(&base.analysis_durations());
+            analysis.push((b - mean(&treated.analysis_durations())) / b * 100.0);
+            requests.push(
+                (treated.successful() as f64 - base.successful() as f64)
+                    / base.successful() as f64
+                    * 100.0,
+            );
+            let bc = base.cost_per_million_usd();
+            cost.push((bc - treated.cost_per_million_usd()) / bc * 100.0);
+        }
+        rows.push((
+            label.to_string(),
+            mean(&analysis),
+            mean(&requests),
+            mean(&cost),
+        ));
+    };
+
+    eval("baseline", &|_cfg, _th| MinosConfig::baseline());
+    eval("random-kill@0.4", &|cfg, _th| MinosConfig {
+        enabled: true,
+        policy: SelectionPolicy::RandomKill { rate: 0.4 },
+        elysium_threshold_ms: f64::INFINITY,
+        ..cfg.minos.clone()
+    });
+    eval("elysium@P60", &|cfg, th| MinosConfig {
+        enabled: true,
+        policy: SelectionPolicy::Elysium,
+        elysium_threshold_ms: th,
+        ..cfg.minos.clone()
+    });
+    eval("oracle", &|cfg, th| MinosConfig {
+        enabled: true,
+        // Map the pre-tested duration threshold onto a true-factor bound:
+        // bench_ms = base_ms / factor  =>  min_factor = base_ms / threshold.
+        policy: SelectionPolicy::OracleFactor {
+            min_factor: cfg.minos.benchmark.base_ms / th,
+        },
+        elysium_threshold_ms: f64::INFINITY,
+        ..cfg.minos.clone()
+    });
+
+    println!(
+        "{:<16} {:>12} {:>12} {:>9}",
+        "policy", "analysis Δ%", "requests Δ%", "cost Δ%"
+    );
+    let mut csv = Csv::new(&["policy", "analysis_pct", "requests_pct", "cost_pct"]);
+    for (label, a, r, c) in &rows {
+        println!("{label:<16} {a:>12.2} {r:>12.2} {c:>9.2}");
+        csv.push(vec![
+            label.clone(),
+            format!("{a:.2}"),
+            format!("{r:.2}"),
+            format!("{c:.2}"),
+        ]);
+    }
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/ablation_selection_policy.csv")).unwrap();
+    println!("\nrows written to results/ablation_selection_policy.csv");
+
+    // Shape assertions: selection matters, churn alone does not.
+    let get = |l: &str| rows.iter().find(|r| r.0 == l).unwrap();
+    let rand = get("random-kill@0.4");
+    let ely = get("elysium@P60");
+    let ora = get("oracle");
+    assert!(
+        rand.1.abs() < 3.0,
+        "random kill should be ~zero improvement, got {:+.2}%",
+        rand.1
+    );
+    assert!(
+        ely.1 > rand.1 + 2.0,
+        "elysium must beat random kill: {:+.2}% vs {:+.2}%",
+        ely.1,
+        rand.1
+    );
+    assert!(
+        ely.1 > 0.55 * ora.1,
+        "elysium should capture most of the oracle headroom: {:+.2}% vs {:+.2}%",
+        ely.1,
+        ora.1
+    );
+}

@@ -1,0 +1,77 @@
+//! Ablation (paper §II-A "How much to terminate?"): sweep the elysium
+//! percentile and measure the trade-off the paper describes — higher
+//! required performance means faster subsequent requests but more wasted
+//! re-queues; lower requirements are cheap short-term but slower long-run.
+//!
+//! Run: `cargo bench --bench ablation_termination_rate`
+
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::sim::SimTime;
+use minos::testkit::bench::time_median;
+use minos::util::csvio::Csv;
+
+fn main() {
+    let percentiles = [0.1, 10.0, 25.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 95.0];
+    let mut csv = Csv::new(&[
+        "percentile",
+        "threshold_ms",
+        "termination_rate",
+        "analysis_improvement_pct",
+        "requests_improvement_pct",
+        "cost_saving_pct",
+        "forced_passes",
+    ]);
+    println!(
+        "{:>5} {:>11} {:>10} {:>12} {:>12} {:>9} {:>7}",
+        "P", "thresh ms", "term rate", "analysis Δ%", "requests Δ%", "cost Δ%", "forced"
+    );
+    let t = time_median("ablation: percentile sweep (10 × 10-min days)", 1, || {
+        for &pct in &percentiles {
+            // Average over 3 seeds per point to tame the instance lottery.
+            let mut acc = (0.0, 0.0, 0.0, 0.0, 0.0, 0u64);
+            let reps = 3;
+            for s in 0..reps {
+                let mut cfg = ExperimentConfig::paper_day(1);
+                cfg.seed = 0xAB1 + s;
+                cfg.vus.horizon = SimTime::from_secs(600.0);
+                cfg.elysium_percentile = pct;
+                let o = runner::run_paired(&cfg, None).unwrap();
+                acc.0 += o.minos.threshold_ms;
+                acc.1 += o.minos.termination_rate();
+                acc.2 += o.analysis_improvement_pct();
+                acc.3 += o.successful_requests_improvement_pct();
+                acc.4 += o.cost_saving_pct();
+                acc.5 += o.minos.forced_passes;
+            }
+            let n = reps as f64;
+            println!(
+                "{:>5.0} {:>11.1} {:>10.2} {:>12.2} {:>12.2} {:>9.2} {:>7}",
+                pct,
+                acc.0 / n,
+                acc.1 / n,
+                acc.2 / n,
+                acc.3 / n,
+                acc.4 / n,
+                acc.5
+            );
+            csv.push(vec![
+                format!("{pct}"),
+                format!("{:.1}", acc.0 / n),
+                format!("{:.3}", acc.1 / n),
+                format!("{:.2}", acc.2 / n),
+                format!("{:.2}", acc.3 / n),
+                format!("{:.2}", acc.4 / n),
+                acc.5.to_string(),
+            ]);
+        }
+    });
+    println!("\n{}", t.report());
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/ablation_termination_rate.csv")).unwrap();
+    println!("rows written to results/ablation_termination_rate.csv");
+    println!(
+        "\nexpected shape: analysis improvement grows with the percentile; \
+         request/cost gains peak at a moderate percentile and fall once \
+         termination churn (and forced passes) dominate — the §II-A optimum."
+    );
+}

@@ -1,0 +1,59 @@
+//! Ablation: Minos's gain as a function of platform variability — the
+//! paper's core premise ("the optimal termination rate depends on ... the
+//! performance variability of the platform", §II-A) and the mechanism
+//! behind the day-to-day spread in Figs. 4–6.
+//!
+//! Run: `cargo bench --bench ablation_variability`
+
+use minos::experiment::sweep;
+use minos::testkit::bench::time_median;
+
+fn main() {
+    let sigmas = [0.0, 0.02, 0.05, 0.08, 0.11, 0.14, 0.17, 0.20];
+    let mut points = Vec::new();
+    let t = time_median("ablation: variability sweep (8 σ × 4 seeds × 10 min)", 1, || {
+        points = sweep::variability_sensitivity(&sigmas, 4, 600.0).unwrap();
+    });
+    println!("{}\n", t.report());
+    println!(
+        "{:>6} {:>14} {:>12} {:>9} {:>10}",
+        "sigma", "analysis Δ% (sd)", "requests Δ%", "cost Δ%", "term rate"
+    );
+    for p in &points {
+        println!(
+            "{:>6.2} {:>9.2} ({:>4.2}) {:>12.2} {:>9.2} {:>10.2}",
+            p.x,
+            p.analysis_pct_mean,
+            p.analysis_pct_sd,
+            p.requests_pct_mean,
+            p.cost_pct_mean,
+            p.termination_rate_mean
+        );
+    }
+    let _ = std::fs::create_dir_all("results");
+    sweep::to_csv("node_sigma", &points)
+        .save(std::path::Path::new("results/ablation_variability.csv"))
+        .unwrap();
+    println!("\nrows written to results/ablation_variability.csv");
+    println!(
+        "\nexpected shape: ~zero gain on a homogeneous platform (σ=0 — nothing \
+         to select), monotonically growing gain with spread; the paper's \
+         per-day effect sizes (4.3%–13%) are this curve sampled at the \
+         week's daily sigmas."
+    );
+
+    // Shape assertions.
+    let first = &points[0];
+    let last = points.last().unwrap();
+    assert!(
+        first.analysis_pct_mean.abs() < 2.5,
+        "σ=0 should be ~zero gain, got {:+.2}%",
+        first.analysis_pct_mean
+    );
+    assert!(
+        last.analysis_pct_mean > first.analysis_pct_mean + 4.0,
+        "gain must grow with variability: σ=0 {:+.2}% vs σ=0.2 {:+.2}%",
+        first.analysis_pct_mean,
+        last.analysis_pct_mean
+    );
+}

@@ -1,0 +1,61 @@
+//! Regenerates paper Fig. 4: median (and average) linear-regression step
+//! duration per day, Minos vs baseline, over the full 7-day × 30-min
+//! paper workload.
+//!
+//! Paper's shape: Minos faster every day; max improvement > 13 % (day 2),
+//! min 4.3 % (days 3 and 5); overall 7.8 %. Absolute level ~2.0–2.5 s on
+//! the 256 MB tier (y-axis 1 000–3 000 ms).
+//!
+//! Run: `cargo bench --bench fig4_regression_duration`
+
+use minos::experiment::{config::ExperimentConfig, figures, runner};
+use minos::testkit::bench::time_median;
+
+fn main() {
+    let mut base = ExperimentConfig::paper_day(0);
+    base.seed = 0x31A5;
+    let mut outcomes = Vec::new();
+    let t = time_median("fig4: 7 paper days (paired, 30 min, 10 VUs)", 3, || {
+        outcomes = runner::run_week(&base, 7, None).unwrap();
+        outcomes.len()
+    });
+    println!("{}", t.report());
+    println!();
+    let (rows, csv) = figures::fig4(&outcomes);
+    println!(
+        "{:>4} {:>14} {:>14} {:>8} {:>13} {:>13} {:>8}",
+        "day", "base med ms", "minos med ms", "med Δ%", "base avg ms", "minos avg ms", "avg Δ%"
+    );
+    for r in &rows {
+        println!(
+            "{:>4} {:>14.0} {:>14.0} {:>8.2} {:>13.0} {:>13.0} {:>8.2}",
+            r.day,
+            r.baseline_median_ms,
+            r.minos_median_ms,
+            r.median_improvement_pct,
+            r.baseline_mean_ms,
+            r.minos_mean_ms,
+            r.mean_improvement_pct
+        );
+    }
+    let overall = figures::fig4_overall_improvement_pct(&outcomes);
+    println!("\noverall mean-analysis improvement: {overall:+.2}%  (paper: 7.8%)");
+    let min_day = rows.iter().map(|r| r.mean_improvement_pct).fold(f64::INFINITY, f64::min);
+    let max_day =
+        rows.iter().map(|r| r.mean_improvement_pct).fold(f64::NEG_INFINITY, f64::max);
+    println!("per-day range: {min_day:+.2}% .. {max_day:+.2}%  (paper: 4.3% .. >13%)");
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/fig4.csv")).unwrap();
+    println!("rows written to results/fig4.csv");
+
+    // Shape assertions (who wins): Minos faster on average every day.
+    for r in &rows {
+        assert!(
+            r.mean_improvement_pct > 0.0,
+            "day {}: Minos did not win ({:+.2}%)",
+            r.day,
+            r.mean_improvement_pct
+        );
+    }
+    assert!(overall > 3.0, "overall improvement too small: {overall:+.2}%");
+}

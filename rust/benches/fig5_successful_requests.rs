@@ -1,0 +1,48 @@
+//! Regenerates paper Fig. 5: successful requests per day.
+//!
+//! Paper's shape: Minos ahead on all days except one (max +7.3 % on day 1,
+//! −<1 % on day 5); overall +2.3 %. Absolute level 4 000–5 000 requests per
+//! 30-minute day with 10 closed-loop VUs.
+//!
+//! Run: `cargo bench --bench fig5_successful_requests`
+
+use minos::experiment::{config::ExperimentConfig, figures, runner};
+use minos::testkit::bench::time_median;
+
+fn main() {
+    let mut base = ExperimentConfig::paper_day(0);
+    base.seed = 0x31A5;
+    let mut outcomes = Vec::new();
+    let t = time_median("fig5: 7 paper days (paired, 30 min, 10 VUs)", 3, || {
+        outcomes = runner::run_week(&base, 7, None).unwrap();
+        outcomes.len()
+    });
+    println!("{}", t.report());
+    println!();
+    let (rows, csv) = figures::fig5(&outcomes);
+    println!("{:>4} {:>10} {:>10} {:>8}", "day", "baseline", "minos", "Δ%");
+    for r in &rows {
+        println!(
+            "{:>4} {:>10} {:>10} {:>8.2}",
+            r.day, r.baseline_successful, r.minos_successful, r.improvement_pct
+        );
+    }
+    let overall = figures::fig5_overall_improvement_pct(&outcomes);
+    println!("\noverall successful-request improvement: {overall:+.2}%  (paper: +2.3%)");
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/fig5.csv")).unwrap();
+    println!("rows written to results/fig5.csv");
+
+    // Shape assertions: absolute level in the paper's band; aggregate win.
+    for r in &rows {
+        assert!(
+            (3_500..=5_500).contains(&(r.baseline_successful as i64)),
+            "day {}: baseline count {} outside the paper's regime",
+            r.day,
+            r.baseline_successful
+        );
+    }
+    assert!(overall > 0.0, "Minos must win in aggregate, got {overall:+.2}%");
+    let winning_days = rows.iter().filter(|r| r.improvement_pct > 0.0).count();
+    assert!(winning_days >= 5, "Minos should win most days, won {winning_days}/7");
+}

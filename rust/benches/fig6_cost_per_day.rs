@@ -1,0 +1,63 @@
+//! Regenerates paper Fig. 6: average total cost per million successful
+//! requests per day (terminated attempts included in the numerator).
+//!
+//! Paper's shape: y-range $12–14; Minos saves > 3 % on the first and last
+//! day, closely tracks the baseline otherwise; overall −0.9 %.
+//!
+//! Run: `cargo bench --bench fig6_cost_per_day`
+
+use minos::experiment::{config::ExperimentConfig, figures, runner};
+use minos::testkit::bench::time_median;
+
+fn main() {
+    let mut base = ExperimentConfig::paper_day(0);
+    base.seed = 0x31A5;
+    let mut outcomes = Vec::new();
+    let t = time_median("fig6: 7 paper days (paired, 30 min, 10 VUs)", 3, || {
+        outcomes = runner::run_week(&base, 7, None).unwrap();
+        outcomes.len()
+    });
+    println!("{}", t.report());
+    println!();
+    let (rows, csv) = figures::fig6(&outcomes);
+    println!("{:>4} {:>13} {:>13} {:>9}", "day", "baseline $/M", "minos $/M", "saving%");
+    for r in &rows {
+        println!(
+            "{:>4} {:>13.3} {:>13.3} {:>9.2}",
+            r.day, r.baseline_usd_per_million, r.minos_usd_per_million, r.saving_pct
+        );
+    }
+    let overall = figures::fig6_overall_saving_pct(&outcomes);
+    println!("\noverall cost saving: {overall:+.2}%  (paper: 0.9%)");
+    println!(
+        "terminated-attempt cost share (minos): {:.2}%",
+        outcomes
+            .iter()
+            .map(|o| {
+                let term: f64 = o
+                    .minos
+                    .cost_events
+                    .iter()
+                    .filter(|e| e.terminated)
+                    .map(|e| e.usd)
+                    .sum();
+                term / o.minos.total_cost_usd() * 100.0
+            })
+            .sum::<f64>()
+            / outcomes.len() as f64
+    );
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/fig6.csv")).unwrap();
+    println!("rows written to results/fig6.csv");
+
+    // Shape assertions: cost level in the paper's band; aggregate saving.
+    for r in &rows {
+        assert!(
+            (11.0..16.0).contains(&r.baseline_usd_per_million),
+            "day {}: baseline ${:.2}/M outside the paper's regime",
+            r.day,
+            r.baseline_usd_per_million
+        );
+    }
+    assert!(overall > 0.0, "Minos must save in aggregate, got {overall:+.2}%");
+}

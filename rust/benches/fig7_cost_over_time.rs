@@ -1,0 +1,59 @@
+//! Regenerates paper Fig. 7: running average cost per million successful
+//! requests over the 30-minute experiment, Minos vs baseline.
+//!
+//! Paper's shape: Minos costs more for roughly the first 200 s (the
+//! termination burst), crosses under, is majority-cheaper after ~670 s and
+//! cheaper for 76 % of the total duration; y-range $10–25 early, settling
+//! to ~$13.
+//!
+//! Run: `cargo bench --bench fig7_cost_over_time`
+
+use minos::experiment::{config::ExperimentConfig, figures, runner};
+use minos::testkit::bench::time_median;
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper_day(0);
+    cfg.seed = 0x31A5;
+    let horizon_s = cfg.vus.horizon.as_secs();
+    let mut outcome = None;
+    let t = time_median("fig7: 1 paper day (paired, 30 min, 10 VUs)", 3, || {
+        outcome = Some(runner::run_paired(&cfg, None).unwrap());
+    });
+    println!("{}", t.report());
+    println!();
+    let outcome = outcome.unwrap();
+    let (series, csv) = figures::fig7(&outcome, 10.0, horizon_s);
+    println!("{:>7} {:>13} {:>13} {:>8}", "t [s]", "baseline $/M", "minos $/M", "cheaper");
+    for &(ts, b, m) in series.points.iter().step_by(6) {
+        println!(
+            "{ts:>7.0} {b:>13.3} {m:>13.3} {:>8}",
+            if m < b { "minos" } else { "base" }
+        );
+    }
+    println!(
+        "\nminos cheaper for {:.0}% of the horizon  (paper: 76%)",
+        series.fraction_cheaper * 100.0
+    );
+    println!(
+        "majority-cheaper after: {}  (paper: 670 s)",
+        series
+            .majority_cheaper_after_s
+            .map(|t| format!("{t:.0} s"))
+            .unwrap_or_else(|| "never".into())
+    );
+    let _ = std::fs::create_dir_all("results");
+    csv.save(std::path::Path::new("results/fig7.csv")).unwrap();
+    println!("rows written to results/fig7.csv");
+
+    // Shape assertions.
+    assert!(series.points.len() > 100, "series too sparse");
+    assert!(
+        series.fraction_cheaper > 0.5,
+        "Minos should be cheaper most of the time: {:.2}",
+        series.fraction_cheaper
+    );
+    // Early premium relative to Minos's own settled cost.
+    let first = series.points.first().unwrap().2;
+    let last = series.points.last().unwrap().2;
+    assert!(first > last, "expected early termination-cost premium");
+}

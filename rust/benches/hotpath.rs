@@ -1,0 +1,138 @@
+//! Hot-path microbenchmarks (the §Perf L3 targets): event-queue
+//! throughput, platform placement, stats updates, PRNG, end-to-end
+//! simulation rate, and — when artifacts are present — real PJRT
+//! execution latency.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use minos::coordinator::MinosConfig;
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::platform::{FaasPlatform, Placement, PlatformConfig};
+use minos::runtime::Runtime;
+use minos::sim::{EventQueue, SimTime};
+use minos::stats::{P2Quantile, Welford};
+use minos::testkit::bench::{throughput, time_median};
+use minos::util::prng::Rng;
+
+fn main() {
+    println!("== L3 hot-path microbenchmarks ==\n");
+
+    // Event queue: schedule+pop cycles.
+    let n_ev = 1_000_000u64;
+    let t = time_median("event queue: 1M schedule+pop", 7, || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut acc = 0u64;
+        for i in 0..n_ev {
+            q.schedule_in_ms((i % 97) as f64, i);
+            if i % 4 == 3 {
+                while let Some((_, e)) = q.pop() {
+                    acc ^= e;
+                    if q.len() < 2 {
+                        break;
+                    }
+                }
+            }
+        }
+        while let Some((_, e)) = q.pop() {
+            acc ^= e;
+        }
+        acc
+    });
+    println!("{}  ({:.1} M events/s)", t.report(), throughput(&t, n_ev * 2) / 1e6);
+
+    // Platform placement churn.
+    let n_place = 100_000u64;
+    let t = time_median("platform: 100k place/release cycles", 5, || {
+        let mut p = FaasPlatform::new(PlatformConfig::default(), 0, 1);
+        let mut now = SimTime::ZERO;
+        let mut live = Vec::new();
+        for i in 0..n_place {
+            now = now.plus_ms(1.0);
+            match p.place(now) {
+                Placement::Warm(id) => live.push(id),
+                Placement::Cold { id, .. } => {
+                    p.cold_start_ready(id);
+                    live.push(id);
+                }
+                Placement::Saturated => {}
+            }
+            if i % 2 == 1 {
+                if let Some(id) = live.pop() {
+                    p.release(id, now);
+                }
+            }
+        }
+        p.warm_hits
+    });
+    println!("{}  ({:.2} M placements/s)", t.report(), throughput(&t, n_place) / 1e6);
+
+    // Stats accumulators.
+    let n_stats = 1_000_000u64;
+    let t = time_median("stats: 1M Welford + P2 updates", 7, || {
+        let mut w = Welford::new();
+        let mut p2 = P2Quantile::new(0.6);
+        let mut rng = Rng::new(3);
+        for _ in 0..n_stats {
+            let x = rng.lognormal(0.0, 0.1);
+            w.push(x);
+            p2.push(x);
+        }
+        (w.mean(), p2.estimate())
+    });
+    println!("{}  ({:.1} M updates/s)", t.report(), throughput(&t, n_stats) / 1e6);
+
+    // PRNG.
+    let n_rng = 10_000_000u64;
+    let t = time_median("prng: 10M lognormal draws", 7, || {
+        let mut rng = Rng::new(9);
+        let mut acc = 0.0;
+        for _ in 0..n_rng {
+            acc += rng.lognormal(0.0, 0.1);
+        }
+        acc
+    });
+    println!("{}  ({:.1} M draws/s)", t.report(), throughput(&t, n_rng) / 1e6);
+
+    // End-to-end simulation throughput: one full paired paper day.
+    let mut cfg = ExperimentConfig::paper_day(1);
+    cfg.seed = 0x40B5;
+    let mut n_requests = 0u64;
+    let t = time_median("end-to-end: 1 paired paper day (30 min)", 5, || {
+        let o = runner::run_paired(&cfg, None).unwrap();
+        n_requests = o.minos.successful() + o.baseline.successful();
+        n_requests
+    });
+    println!(
+        "{}  ({:.0}k simulated requests/s)",
+        t.report(),
+        throughput(&t, n_requests) / 1e3
+    );
+
+    // Baseline-only single run (the inner loop the harness repeats).
+    let base = MinosConfig::baseline();
+    let t = time_median("end-to-end: 1 baseline run (30 min)", 5, || {
+        runner::run_single(&cfg, &base, 0, false, None).unwrap().successful()
+    });
+    println!("{}", t.report());
+
+    // Real PJRT execution latency (L1/L2 anchors), if artifacts exist.
+    match Runtime::load_default() {
+        Ok(rt) => {
+            println!("\n== runtime (real PJRT) ==\n");
+            let n = rt.bench_dim() * rt.bench_dim();
+            let mut rng = Rng::new(11);
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let t = time_median("pjrt: benchmark matmul (256x256)", 15, || {
+                rt.exec_benchmark(&a, &b).unwrap().checksum
+            });
+            println!("{}", t.report());
+            let w = minos::workload::weather::generate(0);
+            let t = time_median("pjrt: weather linreg (512x16)", 15, || {
+                rt.exec_linreg(&w.x, &w.y, &w.x_next).unwrap().prediction
+            });
+            println!("{}", t.report());
+        }
+        Err(_) => println!("\n(run `make artifacts` to enable the PJRT benches)"),
+    }
+}

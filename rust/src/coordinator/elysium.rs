@@ -1,0 +1,100 @@
+//! The elysium threshold judge (paper §II-B).
+//!
+//! Each newly started instance decides *locally* whether it is good enough,
+//! from a single configured value — no central scheduler, no outside
+//! communication during calls. The judge compares the benchmark duration to
+//! the threshold: at or below ⇒ the instance ascends to the warm pool
+//! ("Elysium"); above ⇒ it is terminated ("Tartarus").
+
+use crate::stats::descriptive;
+
+/// Judgment outcome for a cold-started instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Instance is fast enough: keep it, re-use it for later invocations.
+    Pass,
+    /// Instance is too slow: re-queue the invocation and crash.
+    Terminate,
+}
+
+/// Stateless threshold judge.
+#[derive(Debug, Clone, Copy)]
+pub struct ElysiumJudge {
+    /// Benchmark durations at or below this pass, ms.
+    pub threshold_ms: f64,
+}
+
+impl ElysiumJudge {
+    pub fn new(threshold_ms: f64) -> ElysiumJudge {
+        ElysiumJudge { threshold_ms }
+    }
+
+    /// Build from pre-test benchmark durations at the target percentile:
+    /// `percentile = 60` keeps the fastest 40 % (the paper's setting).
+    pub fn from_pretest(scores_ms: &[f64], percentile: f64) -> ElysiumJudge {
+        ElysiumJudge { threshold_ms: descriptive::percentile(scores_ms, percentile) }
+    }
+
+    /// Judge one benchmark duration.
+    #[inline]
+    pub fn judge(&self, bench_ms: f64) -> Verdict {
+        if bench_ms <= self.threshold_ms {
+            Verdict::Pass
+        } else {
+            Verdict::Terminate
+        }
+    }
+
+    /// Expected termination rate if scores are drawn from the pre-test
+    /// distribution (1 - percentile/100 by construction).
+    pub fn expected_termination_rate(percentile: f64) -> f64 {
+        1.0 - percentile / 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn judges_against_threshold() {
+        let j = ElysiumJudge::new(400.0);
+        assert_eq!(j.judge(399.9), Verdict::Pass);
+        assert_eq!(j.judge(400.0), Verdict::Pass);
+        assert_eq!(j.judge(400.1), Verdict::Terminate);
+    }
+
+    #[test]
+    fn from_pretest_p60_keeps_fastest_40pct() {
+        // Construct scores where the 60th percentile is known.
+        let scores: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let j = ElysiumJudge::from_pretest(&scores, 60.0);
+        let passed = scores.iter().filter(|&&s| j.judge(s) == Verdict::Pass).count();
+        // Exactly the scores <= P60 pass; with 1..=100 that is 60-61 values.
+        assert!((59..=61).contains(&passed), "passed {passed}");
+    }
+
+    #[test]
+    fn pass_rate_matches_percentile_on_fresh_draws() {
+        let mut rng = Rng::new(1);
+        let pretest: Vec<f64> = (0..5000).map(|_| 350.0 * rng.lognormal(0.0, 0.12)).collect();
+        let j = ElysiumJudge::from_pretest(&pretest, 60.0);
+        let fresh: Vec<f64> = (0..20_000).map(|_| 350.0 * rng.lognormal(0.0, 0.12)).collect();
+        let pass_rate =
+            fresh.iter().filter(|&&s| j.judge(s) == Verdict::Pass).count() as f64
+                / fresh.len() as f64;
+        assert!((pass_rate - 0.60).abs() < 0.02, "pass rate {pass_rate}");
+    }
+
+    #[test]
+    fn infinite_threshold_passes_everything() {
+        let j = ElysiumJudge::new(f64::INFINITY);
+        assert_eq!(j.judge(1e12), Verdict::Pass);
+    }
+
+    #[test]
+    fn expected_termination_rate_formula() {
+        assert!((ElysiumJudge::expected_termination_rate(60.0) - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,168 @@
+//! The cold-start decision state machine (paper Fig. 2).
+//!
+//! On every invocation the *prepare* step always runs. If the invocation
+//! cold-started a new instance, the benchmark runs in parallel with
+//! prepare; Minos then judges the result against the elysium threshold.
+//! Pass ⇒ continue to the main part (and the instance joins the warm pool
+//! afterwards). Fail ⇒ re-queue the invocation and crash the instance.
+//! The emergency exit (§II-A) bypasses the benchmark entirely when the
+//! invocation has already been re-queued `retry_cap` times.
+
+use super::config::{MinosConfig, SelectionPolicy};
+use super::elysium::{ElysiumJudge, Verdict};
+use super::queue::Invocation;
+
+/// What the instance does after the cold-start gate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ColdStartDecision {
+    /// Run the main part; instance will be kept warm afterwards.
+    Run {
+        /// The benchmark was skipped because the retry cap was reached.
+        forced: bool,
+        /// Benchmark duration (ms) if it ran (None when forced and the
+        /// benchmark was skipped).
+        bench_ms: Option<f64>,
+    },
+    /// Re-queue the invocation, crash the instance. Carries the benchmark
+    /// duration, which is billed (the instance consumed that time).
+    TerminateAndRequeue { bench_ms: f64 },
+}
+
+/// Decide the fate of a cold-started instance serving `inv`.
+///
+/// `bench_ms` is the measured benchmark duration, computed lazily — it is
+/// only consumed when Minos is enabled and the emergency exit does not
+/// trigger (every enabled policy runs the benchmark, so comparison
+/// policies pay identical gate costs). `perf_factor` is the instance's
+/// true speed (used by `OracleFactor` only — the simulator knows it, a
+/// real platform would not) and `draw` is a caller-supplied uniform [0,1)
+/// variate (used by `RandomKill` only). When Minos is disabled the
+/// decision is always `Run { forced: false, bench_ms: None }` (the
+/// baseline runs no benchmark at all, §III-A).
+pub fn decide_cold_start(
+    cfg: &MinosConfig,
+    inv: &Invocation,
+    perf_factor: f64,
+    draw: f64,
+    bench_ms: impl FnOnce() -> f64,
+) -> ColdStartDecision {
+    if !cfg.enabled {
+        return ColdStartDecision::Run { forced: false, bench_ms: None };
+    }
+    if inv.retries >= cfg.retry_cap {
+        // Emergency exit: too many terminations already — platform is
+        // unusually slow or we are unlucky; accept without benchmarking.
+        return ColdStartDecision::Run { forced: true, bench_ms: None };
+    }
+    let bench = bench_ms();
+    let verdict = match cfg.policy {
+        SelectionPolicy::Elysium => {
+            ElysiumJudge::new(cfg.elysium_threshold_ms).judge(bench)
+        }
+        SelectionPolicy::RandomKill { rate } => {
+            if draw < rate {
+                Verdict::Terminate
+            } else {
+                Verdict::Pass
+            }
+        }
+        SelectionPolicy::OracleFactor { min_factor } => {
+            if perf_factor >= min_factor {
+                Verdict::Pass
+            } else {
+                Verdict::Terminate
+            }
+        }
+    };
+    match verdict {
+        Verdict::Pass => ColdStartDecision::Run { forced: false, bench_ms: Some(bench) },
+        Verdict::Terminate => ColdStartDecision::TerminateAndRequeue { bench_ms: bench },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn inv(retries: u32) -> Invocation {
+        Invocation {
+            id: 1,
+            vu: 0,
+            submitted_at: SimTime::ZERO,
+            retries,
+            forced_pass: false,
+        }
+    }
+
+    fn cfg(threshold: f64) -> MinosConfig {
+        MinosConfig {
+            elysium_threshold_ms: threshold,
+            ..MinosConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn disabled_minos_always_runs_without_benchmark() {
+        let mut called = false;
+        let d = decide_cold_start(&MinosConfig::baseline(), &inv(0), 1.0, 0.5, || {
+            called = true;
+            1.0
+        });
+        assert_eq!(d, ColdStartDecision::Run { forced: false, bench_ms: None });
+        assert!(!called, "baseline must not run the benchmark");
+    }
+
+    #[test]
+    fn fast_instance_passes() {
+        let d = decide_cold_start(&cfg(400.0), &inv(0), 1.0, 0.5, || 350.0);
+        assert_eq!(d, ColdStartDecision::Run { forced: false, bench_ms: Some(350.0) });
+    }
+
+    #[test]
+    fn slow_instance_terminates() {
+        let d = decide_cold_start(&cfg(400.0), &inv(0), 1.0, 0.5, || 450.0);
+        assert_eq!(d, ColdStartDecision::TerminateAndRequeue { bench_ms: 450.0 });
+    }
+
+    #[test]
+    fn emergency_exit_at_cap() {
+        let c = cfg(400.0);
+        let mut called = false;
+        let d = decide_cold_start(&c, &inv(c.retry_cap), 1.0, 0.5, || {
+            called = true;
+            10_000.0
+        });
+        assert_eq!(d, ColdStartDecision::Run { forced: true, bench_ms: None });
+        assert!(!called, "emergency exit must skip the benchmark");
+    }
+
+    #[test]
+    fn random_kill_uses_draw_not_benchmark() {
+        let mut c = cfg(400.0);
+        c.policy = SelectionPolicy::RandomKill { rate: 0.3 };
+        // draw below rate: terminate even with a perfect benchmark
+        let d = decide_cold_start(&c, &inv(0), 1.0, 0.1, || 10.0);
+        assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
+        // draw above rate: pass even with a terrible benchmark
+        let d = decide_cold_start(&c, &inv(0), 1.0, 0.9, || 10_000.0);
+        assert!(matches!(d, ColdStartDecision::Run { forced: false, .. }));
+    }
+
+    #[test]
+    fn oracle_judges_on_true_factor() {
+        let mut c = cfg(400.0);
+        c.policy = SelectionPolicy::OracleFactor { min_factor: 1.05 };
+        let d = decide_cold_start(&c, &inv(0), 1.2, 0.5, || 10_000.0);
+        assert!(matches!(d, ColdStartDecision::Run { forced: false, .. }));
+        let d = decide_cold_start(&c, &inv(0), 0.9, 0.5, || 10.0);
+        assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
+    }
+
+    #[test]
+    fn below_cap_still_judges() {
+        let c = cfg(400.0);
+        let d = decide_cold_start(&c, &inv(c.retry_cap - 1), 1.0, 0.5, || 450.0);
+        assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
+    }
+}

@@ -1,0 +1,36 @@
+//! The Minos coordinator — the paper's system contribution (paper §II).
+//!
+//! Users submit invocations to a queue. On a *cold start*, the instance
+//! runs a short CPU benchmark in parallel with the function's prepare
+//! (download) step, then judges the result against the **elysium
+//! threshold**: pass ⇒ the instance keeps running and later joins the warm
+//! pool of known-good instances; fail ⇒ the invocation is re-queued and the
+//! instance crashes itself, forcing the platform to place it elsewhere.
+//! Warm placements skip the benchmark entirely (their instance already
+//! passed once). A retry cap ("emergency exit", §II-A) marks an invocation
+//! good without benchmarking after too many consecutive terminations.
+//!
+//! Modules:
+//! - [`config`] — the per-function Minos configuration (stored as part of
+//!   function config; no outside communication during calls, §II-B);
+//! - [`benchmark`] — the cold-start benchmark specification and scoring;
+//! - [`elysium`] — the threshold judge;
+//! - [`queue`] — the invocation queue with re-queue + retry counters;
+//! - [`lifecycle`] — the cold-start decision state machine (Fig. 2);
+//! - [`pretest`] — offline threshold calibration (§II-B-a);
+//! - [`online`] — live threshold recalculation (§IV future work, built
+//!   first-class on Welford + P²).
+
+pub mod benchmark;
+pub mod config;
+pub mod elysium;
+pub mod lifecycle;
+pub mod online;
+pub mod pretest;
+pub mod queue;
+
+pub use benchmark::BenchmarkSpec;
+pub use config::{MinosConfig, SelectionPolicy};
+pub use elysium::{ElysiumJudge, Verdict};
+pub use lifecycle::{decide_cold_start, ColdStartDecision};
+pub use queue::{Invocation, InvocationQueue};

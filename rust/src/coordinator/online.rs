@@ -1,0 +1,147 @@
+//! Online elysium-threshold recalculation (paper §IV, "Online calculation
+//! of the elysium threshold").
+//!
+//! The paper's future-work sketch: after finishing its benchmark, every
+//! instance reports the result to a centralized collector; the collector
+//! periodically recomputes the threshold and pushes it to the function
+//! configuration. Storing all past results is infeasible at scale, so the
+//! collector estimates the percentile online (P², ref. [12]) and tracks
+//! mean/variance online (Welford, ref. [13]). The collector is *not* a
+//! single point of failure: if it stalls, instances keep using the last
+//! pushed threshold (temporarily suboptimal performance, nothing worse).
+
+use crate::stats::p2::P2Quantile;
+use crate::stats::welford::Welford;
+
+/// Centralized threshold collector.
+#[derive(Debug, Clone)]
+pub struct OnlineThreshold {
+    /// Target percentile in (0, 100).
+    pub percentile: f64,
+    quantile: P2Quantile,
+    pub moments: Welford,
+    /// Recompute-and-push period, in number of reports.
+    pub update_every: u64,
+    /// The currently *published* threshold (what instances judge against).
+    published_ms: f64,
+    reports_since_push: u64,
+    pub pushes: u64,
+}
+
+impl OnlineThreshold {
+    /// Start with an initial threshold (e.g. from a short pre-test, or
+    /// `f64::INFINITY` to accept everything until enough data arrives).
+    pub fn new(percentile: f64, initial_threshold_ms: f64, update_every: u64) -> Self {
+        assert!((0.0..100.0).contains(&percentile) && percentile > 0.0);
+        assert!(update_every > 0);
+        OnlineThreshold {
+            percentile,
+            quantile: P2Quantile::new(percentile / 100.0),
+            moments: Welford::new(),
+            update_every,
+            published_ms: initial_threshold_ms,
+            reports_since_push: 0,
+            pushes: 0,
+        }
+    }
+
+    /// An instance reports its benchmark duration. Returns `Some(new)` when
+    /// the collector (re)publishes the threshold this report.
+    pub fn report(&mut self, bench_ms: f64) -> Option<f64> {
+        self.quantile.push(bench_ms);
+        self.moments.push(bench_ms);
+        self.reports_since_push += 1;
+        if self.reports_since_push >= self.update_every && self.quantile.count() >= 5 {
+            self.reports_since_push = 0;
+            self.pushes += 1;
+            self.published_ms = self.quantile.estimate();
+            Some(self.published_ms)
+        } else {
+            None
+        }
+    }
+
+    /// The threshold instances currently judge against.
+    pub fn published(&self) -> f64 {
+        self.published_ms
+    }
+
+    /// Current internal estimate (may be newer than the published value).
+    pub fn estimate(&self) -> f64 {
+        self.quantile.estimate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::percentile;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn converges_to_true_percentile() {
+        let mut rng = Rng::new(1);
+        let mut ot = OnlineThreshold::new(60.0, f64::INFINITY, 50);
+        let mut all = Vec::new();
+        for _ in 0..10_000 {
+            let s = 350.0 * rng.lognormal(0.0, 0.12);
+            all.push(s);
+            ot.report(s);
+        }
+        let exact = percentile(&all, 60.0);
+        let got = ot.published();
+        assert!(
+            (got - exact).abs() / exact < 0.02,
+            "published {got}, exact {exact}"
+        );
+        assert!(ot.pushes >= 190, "pushes {}", ot.pushes);
+    }
+
+    #[test]
+    fn publishes_on_schedule() {
+        let mut ot = OnlineThreshold::new(50.0, 100.0, 10);
+        let mut published = 0;
+        for i in 0..100 {
+            if ot.report(50.0 + i as f64).is_some() {
+                published += 1;
+            }
+        }
+        assert_eq!(published, 10);
+    }
+
+    #[test]
+    fn keeps_last_threshold_between_pushes() {
+        let mut ot = OnlineThreshold::new(50.0, 123.0, 1_000);
+        for _ in 0..10 {
+            ot.report(50.0);
+        }
+        // Not enough reports for a push: still the initial value.
+        assert_eq!(ot.published(), 123.0);
+    }
+
+    #[test]
+    fn adapts_to_distribution_shift() {
+        // Platform slows down mid-stream: the published threshold must rise.
+        let mut rng = Rng::new(2);
+        let mut ot = OnlineThreshold::new(60.0, f64::INFINITY, 25);
+        for _ in 0..2_000 {
+            ot.report(350.0 * rng.lognormal(0.0, 0.1));
+        }
+        let before = ot.published();
+        for _ in 0..8_000 {
+            ot.report(500.0 * rng.lognormal(0.0, 0.1));
+        }
+        let after = ot.published();
+        assert!(after > before * 1.2, "before {before}, after {after}");
+    }
+
+    #[test]
+    fn tracks_moments() {
+        let mut ot = OnlineThreshold::new(60.0, 0.0, 10);
+        for x in [1.0, 2.0, 3.0] {
+            ot.report(x);
+        }
+        assert_eq!(ot.moments.count(), 3);
+        assert!((ot.moments.mean() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,85 @@
+//! Pre-testing: offline elysium-threshold calibration (paper §II-B-a).
+//!
+//! Before the main workload, Minos runs a short benchmarking phase with
+//! termination disabled, collects the benchmark durations of the instances
+//! the platform hands out, and sets the threshold to the target percentile
+//! (the paper uses the 60th percentile measured by 10 VUs over one minute).
+
+use crate::stats::descriptive::{self, Summary};
+
+/// Result of a pre-test run.
+#[derive(Debug, Clone)]
+pub struct PretestReport {
+    /// Benchmark durations observed during the pre-test, ms.
+    pub scores_ms: Vec<f64>,
+    /// Target percentile (e.g. 60.0 ⇒ fastest 40 % pass).
+    pub percentile: f64,
+    /// The calibrated elysium threshold, ms.
+    pub threshold_ms: f64,
+}
+
+impl PretestReport {
+    /// Calibrate from observed benchmark durations.
+    pub fn from_scores(scores_ms: Vec<f64>, percentile: f64) -> PretestReport {
+        assert!(
+            !scores_ms.is_empty(),
+            "pre-test produced no benchmark scores"
+        );
+        assert!((0.0..=100.0).contains(&percentile));
+        let threshold_ms = descriptive::percentile(&scores_ms, percentile);
+        PretestReport { scores_ms, percentile, threshold_ms }
+    }
+
+    /// Expected termination rate under this calibration.
+    pub fn expected_termination_rate(&self) -> f64 {
+        1.0 - self.percentile / 100.0
+    }
+
+    /// Distribution summary for reports.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.scores_ms).expect("non-empty by construction")
+    }
+
+    /// Fraction of the pre-test scores that would pass the threshold —
+    /// a self-consistency check (should be ≈ percentile / 100).
+    pub fn self_pass_rate(&self) -> f64 {
+        let pass =
+            self.scores_ms.iter().filter(|&&s| s <= self.threshold_ms).count();
+        pass as f64 / self.scores_ms.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn threshold_is_requested_percentile() {
+        let scores: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let r = PretestReport::from_scores(scores, 60.0);
+        assert!((r.threshold_ms - 60.4).abs() < 1e-9); // linear interpolation
+        assert!((r.expected_termination_rate() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn self_pass_rate_consistent() {
+        let mut rng = Rng::new(1);
+        let scores: Vec<f64> =
+            (0..2_000).map(|_| 350.0 * rng.lognormal(0.0, 0.12)).collect();
+        let r = PretestReport::from_scores(scores, 60.0);
+        assert!((r.self_pass_rate() - 0.60).abs() < 0.02, "{}", r.self_pass_rate());
+    }
+
+    #[test]
+    #[should_panic(expected = "no benchmark scores")]
+    fn empty_scores_panic() {
+        PretestReport::from_scores(vec![], 60.0);
+    }
+
+    #[test]
+    fn summary_available() {
+        let r = PretestReport::from_scores(vec![300.0, 350.0, 400.0], 60.0);
+        assert_eq!(r.summary().n, 3);
+    }
+}

@@ -1,0 +1,97 @@
+//! Experiment configuration (paper §III-A, "Environment Configuration").
+
+use crate::coordinator::MinosConfig;
+use crate::platform::billing::Billing;
+use crate::platform::PlatformConfig;
+use crate::workload::{FunctionSpec, VirtualUsers};
+
+/// Full configuration of one experiment day.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Day index (selects the day's variability regime; paper: 7 days).
+    pub day: u32,
+    /// Master seed; everything stochastic forks from this.
+    pub seed: u64,
+    /// Main-workload virtual users (paper: 10 VUs × 30 min, 1 s think).
+    pub vus: VirtualUsers,
+    /// Pre-test virtual users (paper: 10 VUs × 1 min).
+    pub pretest_vus: VirtualUsers,
+    /// Elysium percentile: threshold = this percentile of pre-test scores
+    /// (paper: 60 ⇒ fastest 40 % pass).
+    pub elysium_percentile: f64,
+    /// During the pre-test, benchmark on warm invocations too (collects
+    /// more samples from the same instance pool; the instances themselves
+    /// are never terminated either way).
+    pub pretest_bench_warm: bool,
+    pub platform: PlatformConfig,
+    pub function: FunctionSpec,
+    /// Template for the Minos condition (threshold filled in by pre-test).
+    pub minos: MinosConfig,
+    pub billing: Billing,
+    /// Enable the online-threshold collector (§IV) instead of the fixed
+    /// pre-tested threshold: (update_every_reports).
+    pub online_update_every: Option<u64>,
+    /// Open-loop mode: Poisson arrivals at this rate (requests/s) replace
+    /// the closed-loop virtual users. This is the paper's actual
+    /// deployment model (§IV "Workload Limitations": Minos requires an
+    /// asynchronous queued workload); the closed loop is only the paper's
+    /// load generator. `None` = closed loop.
+    pub open_loop_rate_rps: Option<f64>,
+}
+
+impl ExperimentConfig {
+    /// The paper's configuration for a given day.
+    pub fn paper_day(day: u32) -> ExperimentConfig {
+        ExperimentConfig {
+            day,
+            seed: 0x31A5 + day as u64, // per-day platform lottery
+            vus: VirtualUsers::paper(),
+            pretest_vus: VirtualUsers::pretest(),
+            elysium_percentile: 60.0,
+            pretest_bench_warm: true,
+            platform: PlatformConfig::default(),
+            function: FunctionSpec::weather(),
+            minos: MinosConfig::paper_default(),
+            billing: Billing::paper(),
+            online_update_every: None,
+            open_loop_rate_rps: None,
+        }
+    }
+
+    /// A scaled-down configuration for fast tests (2-minute horizon).
+    pub fn smoke(day: u32, seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_day(day);
+        cfg.seed = seed;
+        cfg.vus.horizon = crate::sim::SimTime::from_secs(120.0);
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_day_matches_paper_parameters() {
+        let c = ExperimentConfig::paper_day(0);
+        assert_eq!(c.vus.n_vus, 10);
+        assert_eq!(c.vus.horizon.as_secs(), 1_800.0);
+        assert_eq!(c.pretest_vus.horizon.as_secs(), 60.0);
+        assert_eq!(c.elysium_percentile, 60.0);
+        assert_eq!(c.billing.tier().memory_mb, 256);
+        assert!(c.minos.enabled);
+    }
+
+    #[test]
+    fn days_differ_in_seed() {
+        assert_ne!(
+            ExperimentConfig::paper_day(0).seed,
+            ExperimentConfig::paper_day(1).seed
+        );
+    }
+
+    #[test]
+    fn smoke_is_short() {
+        assert_eq!(ExperimentConfig::smoke(0, 1).vus.horizon.as_secs(), 120.0);
+    }
+}

@@ -1,0 +1,282 @@
+//! Figure emitters: compute exactly the rows/series the paper's Figs. 4–7
+//! report, from a week of paired outcomes.
+//!
+//! Each emitter returns a typed row set plus a [`crate::util::csvio::Csv`]
+//! rendering; the bench binaries print them and EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+use crate::stats::descriptive::{mean, median};
+use crate::util::csvio::Csv;
+
+use super::runner::PairedOutcome;
+
+/// Fig. 4 — per-day linear-regression (analysis) duration.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub day: u32,
+    pub baseline_median_ms: f64,
+    pub minos_median_ms: f64,
+    pub baseline_mean_ms: f64,
+    pub minos_mean_ms: f64,
+    pub median_improvement_pct: f64,
+    pub mean_improvement_pct: f64,
+}
+
+pub fn fig4(outcomes: &[PairedOutcome]) -> (Vec<Fig4Row>, Csv) {
+    let rows: Vec<Fig4Row> = outcomes
+        .iter()
+        .map(|o| {
+            let b = o.baseline.analysis_durations();
+            let m = o.minos.analysis_durations();
+            let (bm, mm) = (median(&b), median(&m));
+            let (ba, ma) = (mean(&b), mean(&m));
+            Fig4Row {
+                day: o.day + 1,
+                baseline_median_ms: bm,
+                minos_median_ms: mm,
+                baseline_mean_ms: ba,
+                minos_mean_ms: ma,
+                median_improvement_pct: (bm - mm) / bm * 100.0,
+                mean_improvement_pct: (ba - ma) / ba * 100.0,
+            }
+        })
+        .collect();
+    let mut csv = Csv::new(&[
+        "day",
+        "baseline_median_ms",
+        "minos_median_ms",
+        "baseline_mean_ms",
+        "minos_mean_ms",
+        "median_improvement_pct",
+        "mean_improvement_pct",
+    ]);
+    for r in &rows {
+        csv.push(vec![
+            r.day.to_string(),
+            format!("{:.1}", r.baseline_median_ms),
+            format!("{:.1}", r.minos_median_ms),
+            format!("{:.1}", r.baseline_mean_ms),
+            format!("{:.1}", r.minos_mean_ms),
+            format!("{:.2}", r.median_improvement_pct),
+            format!("{:.2}", r.mean_improvement_pct),
+        ]);
+    }
+    (rows, csv)
+}
+
+/// Overall mean analysis improvement across the week (paper: 7.8 %).
+pub fn fig4_overall_improvement_pct(outcomes: &[PairedOutcome]) -> f64 {
+    let b: Vec<f64> =
+        outcomes.iter().flat_map(|o| o.baseline.analysis_durations()).collect();
+    let m: Vec<f64> = outcomes.iter().flat_map(|o| o.minos.analysis_durations()).collect();
+    (mean(&b) - mean(&m)) / mean(&b) * 100.0
+}
+
+/// Fig. 5 — successful requests per day.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub day: u32,
+    pub baseline_successful: u64,
+    pub minos_successful: u64,
+    pub improvement_pct: f64,
+}
+
+pub fn fig5(outcomes: &[PairedOutcome]) -> (Vec<Fig5Row>, Csv) {
+    let rows: Vec<Fig5Row> = outcomes
+        .iter()
+        .map(|o| Fig5Row {
+            day: o.day + 1,
+            baseline_successful: o.baseline.successful(),
+            minos_successful: o.minos.successful(),
+            improvement_pct: o.successful_requests_improvement_pct(),
+        })
+        .collect();
+    let mut csv = Csv::new(&["day", "baseline_successful", "minos_successful", "improvement_pct"]);
+    for r in &rows {
+        csv.push(vec![
+            r.day.to_string(),
+            r.baseline_successful.to_string(),
+            r.minos_successful.to_string(),
+            format!("{:.2}", r.improvement_pct),
+        ]);
+    }
+    (rows, csv)
+}
+
+/// Overall extra successful requests across the week (paper: +2.3 %).
+pub fn fig5_overall_improvement_pct(outcomes: &[PairedOutcome]) -> f64 {
+    let b: u64 = outcomes.iter().map(|o| o.baseline.successful()).sum();
+    let m: u64 = outcomes.iter().map(|o| o.minos.successful()).sum();
+    (m as f64 - b as f64) / b as f64 * 100.0
+}
+
+/// Fig. 6 — average total cost per million successful requests per day.
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub day: u32,
+    pub baseline_usd_per_million: f64,
+    pub minos_usd_per_million: f64,
+    pub saving_pct: f64,
+}
+
+pub fn fig6(outcomes: &[PairedOutcome]) -> (Vec<Fig6Row>, Csv) {
+    let rows: Vec<Fig6Row> = outcomes
+        .iter()
+        .map(|o| Fig6Row {
+            day: o.day + 1,
+            baseline_usd_per_million: o.baseline.cost_per_million_usd(),
+            minos_usd_per_million: o.minos.cost_per_million_usd(),
+            saving_pct: o.cost_saving_pct(),
+        })
+        .collect();
+    let mut csv =
+        Csv::new(&["day", "baseline_usd_per_million", "minos_usd_per_million", "saving_pct"]);
+    for r in &rows {
+        csv.push(vec![
+            r.day.to_string(),
+            format!("{:.3}", r.baseline_usd_per_million),
+            format!("{:.3}", r.minos_usd_per_million),
+            format!("{:.2}", r.saving_pct),
+        ]);
+    }
+    (rows, csv)
+}
+
+/// Overall cost saving across the week (paper: 0.9 %).
+pub fn fig6_overall_saving_pct(outcomes: &[PairedOutcome]) -> f64 {
+    let b_cost: f64 = outcomes.iter().map(|o| o.baseline.total_cost_usd()).sum();
+    let b_n: u64 = outcomes.iter().map(|o| o.baseline.successful()).sum();
+    let m_cost: f64 = outcomes.iter().map(|o| o.minos.total_cost_usd()).sum();
+    let m_n: u64 = outcomes.iter().map(|o| o.minos.successful()).sum();
+    let b = b_cost / b_n as f64;
+    let m = m_cost / m_n as f64;
+    (b - m) / b * 100.0
+}
+
+/// Fig. 7 — running average cost per million successful requests over the
+/// experiment duration, plus the crossover statistics the paper quotes.
+#[derive(Debug, Clone)]
+pub struct Fig7Series {
+    /// (t_seconds, baseline $/M, minos $/M) on a uniform grid.
+    pub points: Vec<(f64, f64, f64)>,
+    /// First time after which Minos stays cheaper on >50 % of sampled
+    /// points so far (paper: 670 s).
+    pub majority_cheaper_after_s: Option<f64>,
+    /// Fraction of the horizon where Minos is cheaper (paper: 76 %).
+    pub fraction_cheaper: f64,
+}
+
+pub fn fig7(outcome: &PairedOutcome, step_s: f64, horizon_s: f64) -> (Fig7Series, Csv) {
+    let b = outcome.baseline.cost_series(step_s, horizon_s);
+    let m = outcome.minos.cost_series(step_s, horizon_s);
+    // Align on the common time grid (both series start once the first
+    // request completes; join on t).
+    let mut points = Vec::new();
+    let mut bi = 0usize;
+    for &(t, mv) in &m {
+        while bi < b.len() && b[bi].0 < t - 1e-9 {
+            bi += 1;
+        }
+        if bi < b.len() && (b[bi].0 - t).abs() < 1e-9 {
+            points.push((t, b[bi].1, mv));
+        }
+    }
+    let cheaper_flags: Vec<bool> = points.iter().map(|&(_, bv, mv)| mv < bv).collect();
+    let fraction_cheaper = if cheaper_flags.is_empty() {
+        0.0
+    } else {
+        cheaper_flags.iter().filter(|&&c| c).count() as f64 / cheaper_flags.len() as f64
+    };
+    // Paper's "after 670 s Minos was cheaper for more than 50 % of time":
+    // earliest t where the running majority of sampled points is cheaper.
+    let mut majority_cheaper_after_s = None;
+    let mut cheap = 0usize;
+    for (i, &c) in cheaper_flags.iter().enumerate() {
+        if c {
+            cheap += 1;
+        }
+        if cheap * 2 > i + 1 {
+            majority_cheaper_after_s = Some(points[i].0);
+            break;
+        }
+    }
+    let series = Fig7Series { points, majority_cheaper_after_s, fraction_cheaper };
+    let mut csv = Csv::new(&["t_s", "baseline_usd_per_million", "minos_usd_per_million"]);
+    for &(t, bv, mv) in &series.points {
+        csv.push(vec![
+            format!("{t:.0}"),
+            format!("{bv:.3}"),
+            format!("{mv:.3}"),
+        ]);
+    }
+    (series, csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::config::ExperimentConfig;
+    use crate::experiment::runner::run_paired;
+
+    fn outcomes() -> Vec<PairedOutcome> {
+        (0..2)
+            .map(|d| run_paired(&ExperimentConfig::smoke(d, 40 + d as u64), None).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn fig4_rows_consistent() {
+        let o = outcomes();
+        let (rows, csv) = fig4(&o);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(csv.rows.len(), 2);
+        for r in &rows {
+            assert!(r.baseline_median_ms > 500.0);
+            // improvement_pct consistent with the medians
+            let recompute =
+                (r.baseline_median_ms - r.minos_median_ms) / r.baseline_median_ms * 100.0;
+            assert!((recompute - r.median_improvement_pct).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fig5_counts_match_results() {
+        let o = outcomes();
+        let (rows, _) = fig5(&o);
+        assert_eq!(rows[0].baseline_successful, o[0].baseline.successful());
+        assert_eq!(rows[1].minos_successful, o[1].minos.successful());
+    }
+
+    #[test]
+    fn fig6_in_plausible_cost_range() {
+        let o = outcomes();
+        let (rows, _) = fig6(&o);
+        for r in &rows {
+            assert!(
+                (8.0..25.0).contains(&r.baseline_usd_per_million),
+                "cost {} out of range",
+                r.baseline_usd_per_million
+            );
+        }
+    }
+
+    #[test]
+    fn fig7_series_aligned_and_bounded() {
+        let o = &outcomes()[0];
+        let (series, csv) = fig7(o, 10.0, 120.0);
+        assert!(!series.points.is_empty());
+        assert_eq!(csv.rows.len(), series.points.len());
+        assert!((0.0..=1.0).contains(&series.fraction_cheaper));
+        for w in series.points.windows(2) {
+            assert!(w[1].0 > w[0].0, "time grid must increase");
+        }
+    }
+
+    #[test]
+    fn overall_aggregates_finite() {
+        let o = outcomes();
+        assert!(fig4_overall_improvement_pct(&o).is_finite());
+        assert!(fig5_overall_improvement_pct(&o).is_finite());
+        assert!(fig6_overall_saving_pct(&o).is_finite());
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-invocation records and run-level aggregates — the measurements the
+//! paper reports: execution time, download duration, analysis duration,
+//! benchmark duration/success, retry count (§III-A "Workload"), plus the
+//! billing stream Fig. 6/7 are computed from.
+
+use crate::sim::SimTime;
+
+/// One successfully completed invocation.
+#[derive(Debug, Clone)]
+pub struct InvocationRecord {
+    pub inv_id: u64,
+    pub vu: u32,
+    pub submitted_at: SimTime,
+    pub completed_at: SimTime,
+    /// 1 + number of Minos terminations this invocation suffered.
+    pub attempts: u32,
+    /// The retry cap forced this invocation past the benchmark.
+    pub forced: bool,
+    /// The final (successful) attempt ran on a cold-started instance.
+    pub cold: bool,
+    /// Durations of the successful attempt, ms.
+    pub prepare_ms: f64,
+    pub analysis_ms: f64,
+    /// Billed execution duration of the successful attempt, ms.
+    pub exec_ms: f64,
+    /// Benchmark duration on the successful attempt (None: warm/forced/baseline).
+    pub bench_ms: Option<f64>,
+    /// Real PJRT prediction, when the runner executes artifacts.
+    pub prediction: Option<f32>,
+}
+
+impl InvocationRecord {
+    /// End-to-end latency seen by the virtual user, ms.
+    pub fn latency_ms(&self) -> f64 {
+        self.completed_at.ms_since(self.submitted_at)
+    }
+}
+
+/// One billed attempt (successful or terminated), for the cost stream.
+#[derive(Debug, Clone, Copy)]
+pub struct CostEvent {
+    pub at: SimTime,
+    pub usd: f64,
+    /// Attempt ended in a Minos termination.
+    pub terminated: bool,
+}
+
+/// Everything measured during one run (one condition, one day).
+#[derive(Debug, Clone, Default)]
+pub struct RunResult {
+    pub records: Vec<InvocationRecord>,
+    pub cost_events: Vec<CostEvent>,
+    /// Benchmark durations of every benchmarked cold start (incl. failed).
+    pub bench_scores: Vec<f64>,
+    pub terminations: u64,
+    pub forced_passes: u64,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub expired: u64,
+    /// Instances recycled by the platform's lifetime cap.
+    pub recycled: u64,
+    /// The elysium threshold in force (∞ for baseline / pretest).
+    pub threshold_ms: f64,
+    /// Published online-threshold updates (when the §IV collector is on).
+    pub online_pushes: u64,
+}
+
+impl RunResult {
+    /// Number of successful requests (Fig. 5's metric).
+    pub fn successful(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    /// Total cost over all billed attempts, USD (Fig. 3 / Fig. 6 basis).
+    pub fn total_cost_usd(&self) -> f64 {
+        self.cost_events.iter().map(|e| e.usd).sum()
+    }
+
+    /// Average cost per million successful requests, USD (Fig. 6 metric).
+    pub fn cost_per_million_usd(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.total_cost_usd() / self.records.len() as f64 * 1e6
+    }
+
+    /// Analysis durations, ms (Fig. 4 metric).
+    pub fn analysis_durations(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.analysis_ms).collect()
+    }
+
+    pub fn prepare_durations(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.prepare_ms).collect()
+    }
+
+    pub fn exec_durations(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.exec_ms).collect()
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.latency_ms()).collect()
+    }
+
+    /// Observed termination rate among benchmarked cold starts.
+    pub fn termination_rate(&self) -> f64 {
+        if self.bench_scores.is_empty() {
+            return 0.0;
+        }
+        self.terminations as f64 / self.bench_scores.len() as f64
+    }
+
+    /// Running cost-per-success series on a fixed time grid (Fig. 7).
+    /// Returns (t_seconds, cost_per_million) points.
+    pub fn cost_series(&self, step_s: f64, horizon_s: f64) -> Vec<(f64, f64)> {
+        let mut points = Vec::new();
+        let mut cost_idx = 0usize;
+        let mut rec_idx = 0usize;
+        let mut cum_cost = 0.0f64;
+        let mut cum_success = 0u64;
+        // Events must be scanned in time order; records are completion-
+        // ordered by construction, cost events likewise.
+        let mut t = step_s;
+        while t <= horizon_s + 1e-9 {
+            let cutoff = SimTime::from_secs(t);
+            while cost_idx < self.cost_events.len()
+                && self.cost_events[cost_idx].at <= cutoff
+            {
+                cum_cost += self.cost_events[cost_idx].usd;
+                cost_idx += 1;
+            }
+            while rec_idx < self.records.len()
+                && self.records[rec_idx].completed_at <= cutoff
+            {
+                cum_success += 1;
+                rec_idx += 1;
+            }
+            if cum_success > 0 {
+                points.push((t, cum_cost / cum_success as f64 * 1e6));
+            }
+            t += step_s;
+        }
+        points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(completed_s: f64, analysis: f64) -> InvocationRecord {
+        InvocationRecord {
+            inv_id: 1,
+            vu: 0,
+            submitted_at: SimTime::ZERO,
+            completed_at: SimTime::from_secs(completed_s),
+            attempts: 1,
+            forced: false,
+            cold: false,
+            prepare_ms: 500.0,
+            analysis_ms: analysis,
+            exec_ms: 2_900.0,
+            bench_ms: None,
+            prediction: None,
+        }
+    }
+
+    fn cost(at_s: f64, usd: f64) -> CostEvent {
+        CostEvent { at: SimTime::from_secs(at_s), usd, terminated: false }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = RunResult {
+            records: vec![rec(1.0, 2_000.0), rec(2.0, 2_200.0)],
+            cost_events: vec![cost(1.0, 1e-5), cost(2.0, 1.2e-5)],
+            ..Default::default()
+        };
+        assert_eq!(r.successful(), 2);
+        assert!((r.total_cost_usd() - 2.2e-5).abs() < 1e-12);
+        assert!((r.cost_per_million_usd() - 11.0).abs() < 1e-9);
+        assert_eq!(r.analysis_durations(), vec![2_000.0, 2_200.0]);
+    }
+
+    #[test]
+    fn latency_is_submit_to_complete() {
+        let mut record = rec(3.0, 2_000.0);
+        record.submitted_at = SimTime::from_secs(1.0);
+        assert!((record.latency_ms() - 2_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_series_is_running_average() {
+        let r = RunResult {
+            records: vec![rec(10.0, 1.0), rec(30.0, 1.0)],
+            cost_events: vec![cost(5.0, 10e-6), cost(25.0, 14e-6)],
+            ..Default::default()
+        };
+        let series = r.cost_series(10.0, 40.0);
+        // t=10: cost 10e-6 over 1 success = $10/M
+        assert!((series[0].1 - 10.0).abs() < 1e-9);
+        // t=30: cost 24e-6 over 2 successes = $12/M
+        let at30 = series.iter().find(|(t, _)| (*t - 30.0).abs() < 1e-9).unwrap();
+        assert!((at30.1 - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_is_safe() {
+        let r = RunResult::default();
+        assert_eq!(r.successful(), 0);
+        assert_eq!(r.cost_per_million_usd(), 0.0);
+        assert_eq!(r.termination_rate(), 0.0);
+        assert!(r.cost_series(10.0, 100.0).is_empty());
+    }
+}

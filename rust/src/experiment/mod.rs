@@ -1,0 +1,19 @@
+//! The experiment harness: everything needed to regenerate the paper's
+//! evaluation (Figs. 4–7) plus the ablations DESIGN.md calls out.
+//!
+//! A *run* is one condition (Minos or baseline) on one simulated day; a
+//! *paired outcome* is both conditions on the identical platform draw
+//! (same seed ⇒ same node pool and placement lottery, mirroring the paper
+//! running both functions "at the same time"); a *week* is seven paired
+//! outcomes with per-day variability regimes.
+
+pub mod config;
+pub mod figures;
+pub mod metrics;
+pub mod report;
+pub mod runner;
+pub mod sweep;
+
+pub use config::ExperimentConfig;
+pub use metrics::{InvocationRecord, RunResult};
+pub use runner::{run_paired, run_pretest, run_single, run_week, PairedOutcome};

@@ -1,0 +1,167 @@
+//! Human-readable experiment reports: the week summary the CLI prints and
+//! EXPERIMENTS.md quotes, with bootstrap CIs on the headline claims.
+
+use std::fmt::Write as _;
+
+use crate::stats::bootstrap;
+use crate::util::prng::Rng;
+use crate::util::timefmt::signed_pct;
+
+use super::figures;
+use super::runner::PairedOutcome;
+
+/// Render the full week report (Figs. 4–6 tables + overall numbers).
+pub fn week_report(outcomes: &[PairedOutcome]) -> String {
+    let mut out = String::new();
+    let mut rng = Rng::new(0xC1);
+
+    let _ = writeln!(out, "== Fig. 4: linear-regression (analysis) duration per day ==");
+    let (rows4, _) = figures::fig4(outcomes);
+    let _ = writeln!(
+        out,
+        "{:>4} {:>14} {:>14} {:>10} {:>13} {:>13} {:>10}",
+        "day", "base med ms", "minos med ms", "med Δ", "base avg ms", "minos avg ms", "avg Δ"
+    );
+    for r in &rows4 {
+        let _ = writeln!(
+            out,
+            "{:>4} {:>14.0} {:>14.0} {:>10} {:>13.0} {:>13.0} {:>10}",
+            r.day,
+            r.baseline_median_ms,
+            r.minos_median_ms,
+            signed_pct(r.median_improvement_pct),
+            r.baseline_mean_ms,
+            r.minos_mean_ms,
+            signed_pct(r.mean_improvement_pct),
+        );
+    }
+    let overall4 = figures::fig4_overall_improvement_pct(outcomes);
+    let b_all: Vec<f64> =
+        outcomes.iter().flat_map(|o| o.baseline.analysis_durations()).collect();
+    let m_all: Vec<f64> = outcomes.iter().flat_map(|o| o.minos.analysis_durations()).collect();
+    let ci = bootstrap::improvement_ci(&b_all, &m_all, 300, 0.95, &mut rng);
+    let _ = writeln!(
+        out,
+        "overall analysis improvement: {} (95% CI [{:.1}%, {:.1}%]; paper: 7.8%)\n",
+        signed_pct(overall4),
+        ci.lo,
+        ci.hi
+    );
+
+    let _ = writeln!(out, "== Fig. 5: successful requests per day ==");
+    let (rows5, _) = figures::fig5(outcomes);
+    let _ = writeln!(out, "{:>4} {:>10} {:>10} {:>9}", "day", "baseline", "minos", "Δ");
+    for r in &rows5 {
+        let _ = writeln!(
+            out,
+            "{:>4} {:>10} {:>10} {:>9}",
+            r.day,
+            r.baseline_successful,
+            r.minos_successful,
+            signed_pct(r.improvement_pct)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "overall successful-request improvement: {} (paper: +2.3%)\n",
+        signed_pct(figures::fig5_overall_improvement_pct(outcomes))
+    );
+
+    let _ = writeln!(out, "== Fig. 6: cost per million successful requests ==");
+    let (rows6, _) = figures::fig6(outcomes);
+    let _ = writeln!(out, "{:>4} {:>12} {:>12} {:>9}", "day", "baseline $", "minos $", "saving");
+    for r in &rows6 {
+        let _ = writeln!(
+            out,
+            "{:>4} {:>12.3} {:>12.3} {:>9}",
+            r.day,
+            r.baseline_usd_per_million,
+            r.minos_usd_per_million,
+            signed_pct(r.saving_pct)
+        );
+    }
+    let _ = writeln!(
+        out,
+        "overall cost saving: {} (paper: 0.9%)\n",
+        signed_pct(figures::fig6_overall_saving_pct(outcomes))
+    );
+
+    let _ = writeln!(out, "== run health ==");
+    for o in outcomes {
+        let _ = writeln!(
+            out,
+            "day {}: threshold {:.0} ms, terminations {}, term-rate {:.2}, \
+             forced {}, cold {}, warm {}, online pushes {}",
+            o.day + 1,
+            o.minos.threshold_ms,
+            o.minos.terminations,
+            o.minos.termination_rate(),
+            o.minos.forced_passes,
+            o.minos.cold_starts,
+            o.minos.warm_hits,
+            o.minos.online_pushes,
+        );
+    }
+    out
+}
+
+/// Render the Fig. 7 report for one day.
+pub fn fig7_report(outcome: &PairedOutcome, step_s: f64, horizon_s: f64) -> String {
+    let (series, _) = figures::fig7(outcome, step_s, horizon_s);
+    let mut out = String::new();
+    let base_pts: Vec<(f64, f64)> =
+        series.points.iter().map(|&(t, b, _)| (t, b)).collect();
+    let minos_pts: Vec<(f64, f64)> =
+        series.points.iter().map(|&(t, _, m)| (t, m)).collect();
+    let _ = writeln!(
+        out,
+        "== Fig. 7: running avg cost per 1M successful requests (day {}) ==",
+        outcome.day + 1
+    );
+    if !base_pts.is_empty() {
+        out.push_str(&crate::util::plot::line_chart(
+            &[("baseline $/M", &base_pts), ("minos $/M", &minos_pts)],
+            64,
+            14,
+        ));
+        out.push('\n');
+    }
+    let _ = writeln!(out, "{:>7} {:>12} {:>12} {:>8}", "t [s]", "baseline $", "minos $", "cheaper");
+    for &(t, b, m) in series.points.iter().step_by(3) {
+        let _ = writeln!(
+            out,
+            "{t:>7.0} {b:>12.3} {m:>12.3} {:>8}",
+            if m < b { "minos" } else { "base" }
+        );
+    }
+    let _ = writeln!(
+        out,
+        "minos cheaper for {:.0}% of the horizon (paper: 76%); \
+         majority-cheaper after {} (paper: 670 s)",
+        series.fraction_cheaper * 100.0,
+        series
+            .majority_cheaper_after_s
+            .map(|t| format!("{t:.0} s"))
+            .unwrap_or_else(|| "never".into()),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::config::ExperimentConfig;
+    use crate::experiment::runner::run_paired;
+
+    #[test]
+    fn reports_render() {
+        let o = vec![run_paired(&ExperimentConfig::smoke(0, 50), None).unwrap()];
+        let week = week_report(&o);
+        assert!(week.contains("Fig. 4"));
+        assert!(week.contains("Fig. 5"));
+        assert!(week.contains("Fig. 6"));
+        assert!(week.contains("overall"));
+        let f7 = fig7_report(&o[0], 10.0, 120.0);
+        assert!(f7.contains("Fig. 7"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Structured parameter sweeps over paired experiments.
+//!
+//! The figure benches answer "does the paper reproduce"; the sweeps here
+//! answer "when does Minos help" — the sensitivity analyses DESIGN.md's
+//! shape expectations rest on. Each sweep runs paired days across seeds
+//! and aggregates the three headline deltas with their spread.
+
+use anyhow::Result;
+
+use crate::sim::SimTime;
+use crate::stats::descriptive::{mean, std_dev};
+use crate::util::csvio::Csv;
+
+use super::config::ExperimentConfig;
+use super::runner::{run_paired, PairedOutcome};
+
+/// Aggregated outcome of one sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// The swept parameter's value at this point.
+    pub x: f64,
+    pub analysis_pct_mean: f64,
+    pub analysis_pct_sd: f64,
+    pub requests_pct_mean: f64,
+    pub cost_pct_mean: f64,
+    pub termination_rate_mean: f64,
+}
+
+/// Run `seeds_per_point` paired days at each parameter value produced by
+/// `configure` and aggregate the headline deltas.
+pub fn sweep(
+    xs: &[f64],
+    seeds_per_point: u64,
+    horizon_s: f64,
+    mut configure: impl FnMut(&mut ExperimentConfig, f64),
+) -> Result<Vec<SweepPoint>> {
+    let mut points = Vec::with_capacity(xs.len());
+    for &x in xs {
+        let mut analysis = Vec::new();
+        let mut requests = Vec::new();
+        let mut cost = Vec::new();
+        let mut term = Vec::new();
+        for s in 0..seeds_per_point {
+            let mut cfg = ExperimentConfig::paper_day(1);
+            cfg.seed = 0x57EE + s * 7919;
+            cfg.vus.horizon = SimTime::from_secs(horizon_s);
+            configure(&mut cfg, x);
+            let o: PairedOutcome = run_paired(&cfg, None)?;
+            analysis.push(o.analysis_improvement_pct());
+            requests.push(o.successful_requests_improvement_pct());
+            cost.push(o.cost_saving_pct());
+            term.push(o.minos.termination_rate());
+        }
+        points.push(SweepPoint {
+            x,
+            analysis_pct_mean: mean(&analysis),
+            analysis_pct_sd: std_dev(&analysis),
+            requests_pct_mean: mean(&requests),
+            cost_pct_mean: mean(&cost),
+            termination_rate_mean: mean(&term),
+        });
+    }
+    Ok(points)
+}
+
+/// The paper's core premise, quantified: Minos's gain as a function of
+/// platform variability (node-pool sigma). Every other knob at paper
+/// defaults.
+pub fn variability_sensitivity(
+    sigmas: &[f64],
+    seeds_per_point: u64,
+    horizon_s: f64,
+) -> Result<Vec<SweepPoint>> {
+    sweep(sigmas, seeds_per_point, horizon_s, |cfg, sigma| {
+        cfg.platform.variability.node_sigma_by_day = vec![sigma];
+    })
+}
+
+/// Render sweep points as CSV.
+pub fn to_csv(x_name: &str, points: &[SweepPoint]) -> Csv {
+    let mut csv = Csv::new(&[
+        x_name,
+        "analysis_pct_mean",
+        "analysis_pct_sd",
+        "requests_pct_mean",
+        "cost_pct_mean",
+        "termination_rate_mean",
+    ]);
+    for p in points {
+        csv.push(vec![
+            format!("{}", p.x),
+            format!("{:.3}", p.analysis_pct_mean),
+            format!("{:.3}", p.analysis_pct_sd),
+            format!("{:.3}", p.requests_pct_mean),
+            format!("{:.3}", p.cost_pct_mean),
+            format!("{:.3}", p.termination_rate_mean),
+        ]);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_one_point_per_x() {
+        let pts = sweep(&[0.05, 0.15], 2, 90.0, |cfg, sigma| {
+            cfg.platform.variability.node_sigma_by_day = vec![sigma];
+        })
+        .unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].x, 0.05);
+        assert!(pts.iter().all(|p| p.analysis_pct_mean.is_finite()));
+    }
+
+    #[test]
+    fn variability_sensitivity_is_increasing() {
+        // The paper's premise at test scale: more platform variability,
+        // more Minos gain (averaged over seeds to beat lottery noise).
+        let pts = variability_sensitivity(&[0.02, 0.20], 4, 150.0).unwrap();
+        assert!(
+            pts[1].analysis_pct_mean > pts[0].analysis_pct_mean + 1.0,
+            "gain at σ=0.20 ({:.2}%) should clearly exceed σ=0.02 ({:.2}%)",
+            pts[1].analysis_pct_mean,
+            pts[0].analysis_pct_mean
+        );
+    }
+
+    #[test]
+    fn csv_rendering() {
+        let pts = vec![SweepPoint {
+            x: 0.1,
+            analysis_pct_mean: 5.0,
+            analysis_pct_sd: 1.0,
+            requests_pct_mean: 3.0,
+            cost_pct_mean: 4.0,
+            termination_rate_mean: 0.4,
+        }];
+        let csv = to_csv("sigma", &pts);
+        assert_eq!(csv.rows.len(), 1);
+        assert_eq!(csv.header[0], "sigma");
+    }
+}

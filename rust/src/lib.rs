@@ -1,0 +1,33 @@
+//! # Minos — FaaS instance selection exploiting cloud performance variation
+//!
+//! Reproduction of *"Minos: Exploiting Cloud Performance Variation with
+//! Function-as-a-Service Instance Selection"* (Schirmer et al., CS.DC 2025)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the Minos coordinator (cold-start benchmarking,
+//!   elysium-threshold judging, self-termination + re-queueing) plus every
+//!   substrate the paper depends on: a discrete-event FaaS platform
+//!   simulator with a calibrated performance-variability model, a GCF
+//!   billing model, a closed-loop virtual-user workload driver, and the
+//!   experiment harness regenerating every figure in the paper.
+//! - **L2** — the weather linear-regression workload as a JAX compute graph
+//!   (`python/compile/model.py`), AOT-lowered once to HLO text.
+//! - **L1** — Pallas kernels (`python/compile/kernels/`): the tiled-matmul
+//!   cold-start benchmark and the fused normal-equations OLS kernel.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT and executes
+//! them from the Rust request path; Python never runs at request time.
+
+pub mod coordinator;
+pub mod experiment;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias (anyhow-based; library APIs with structured
+/// failure modes define their own error enums instead).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,213 @@
+//! Minos CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   week       run the paper's 7-day experiment (Figs. 4-6) and print the report
+//!   fig7       run one day and print the Fig. 7 cost-over-time series
+//!   pretest    run the pre-test calibration and print the threshold
+//!   calibrate  measure real PJRT execution of the AOT artifacts
+//!   sweep      ablation: elysium percentile sweep (termination-rate trade-off)
+//!   online     run one day with the SIV online-threshold collector
+//!
+//! `--real` executes the weather-regression HLO artifact through PJRT for
+//! every completed invocation (verifying numerics against the Rust oracle);
+//! without it the runs are pure simulation (identical decision dynamics).
+
+use anyhow::{bail, Result};
+
+use minos::experiment::{config::ExperimentConfig, figures, report, runner};
+use minos::runtime::{calibrate::Calibration, Runtime};
+use minos::util::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["real", "verbose"])
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "week" => cmd_week(&args),
+        "fig7" => cmd_fig7(&args),
+        "pretest" => cmd_pretest(&args),
+        "calibrate" => cmd_calibrate(),
+        "sweep" => cmd_sweep(&args),
+        "online" => cmd_online(&args),
+        "openloop" => cmd_openloop(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `minos help`"),
+    }
+}
+
+const HELP: &str = "\
+minos — FaaS instance selection exploiting cloud performance variation
+
+USAGE: minos <command> [options]
+
+COMMANDS:
+  week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --real]
+  fig7       cost-over-time series for one day      [--day N --seed N --step S]
+  pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
+  calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
+  sweep      elysium-percentile ablation            [--day N --seed N]
+  online     one day with the online threshold      [--day N --seed N --every N]
+  openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R]
+";
+
+fn load_runtime(args: &Args) -> Result<Option<Runtime>> {
+    if args.flag("real") {
+        Ok(Some(Runtime::load_default()?))
+    } else {
+        Ok(None)
+    }
+}
+
+fn u(args: &Args, key: &str, default: u64) -> Result<u64> {
+    args.get_u64(key, default).map_err(anyhow::Error::msg)
+}
+
+fn f(args: &Args, key: &str, default: f64) -> Result<f64> {
+    args.get_f64(key, default).map_err(anyhow::Error::msg)
+}
+
+fn cmd_week(args: &Args) -> Result<()> {
+    let days = u(args, "days", 7)? as u32;
+    let seed = u(args, "seed", 0x31A5)?;
+    let rt = load_runtime(args)?;
+    let mut base = ExperimentConfig::paper_day(0);
+    base.seed = seed;
+    let outcomes = runner::run_week(&base, days, rt.as_ref())?;
+    print!("{}", report::week_report(&outcomes));
+    if let Some(rt) = &rt {
+        println!("\nreal PJRT executions: {}", rt.executions.get());
+    }
+    Ok(())
+}
+
+fn cmd_fig7(args: &Args) -> Result<()> {
+    let day = u(args, "day", 0)? as u32;
+    let seed = u(args, "seed", 0x31A5 + day as u64)?;
+    let step = f(args, "step", 10.0)?;
+    let rt = load_runtime(args)?;
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    let outcome = runner::run_paired(&cfg, rt.as_ref())?;
+    print!("{}", report::fig7_report(&outcome, step, cfg.vus.horizon.as_secs()));
+    Ok(())
+}
+
+fn cmd_pretest(args: &Args) -> Result<()> {
+    let day = u(args, "day", 0)? as u32;
+    let seed = u(args, "seed", 0x31A5 + day as u64)?;
+    let pct = f(args, "percentile", 60.0)?;
+    let rt = load_runtime(args)?;
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    cfg.elysium_percentile = pct;
+    let r = runner::run_pretest(&cfg, rt.as_ref())?;
+    let s = r.summary();
+    println!(
+        "pre-test: {} benchmark samples; mean {:.1} ms, median {:.1} ms, \
+         p95 {:.1} ms, CoV {:.3}",
+        s.n, s.mean, s.median, s.p95, s.cov()
+    );
+    println!(
+        "elysium threshold (P{:.0}): {:.1} ms  (expected termination rate {:.0}%)",
+        r.percentile,
+        r.threshold_ms,
+        r.expected_termination_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let c = Calibration::measure(&rt, 15)?;
+    println!("{}", c.report());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let day = u(args, "day", 1)? as u32;
+    let seed = u(args, "seed", 0x31A5 + day as u64)?;
+    println!(
+        "{:>10} {:>12} {:>10} {:>12} {:>12} {:>10}",
+        "percentile", "thresh ms", "term rate", "analysis d%", "requests d%", "cost d%"
+    );
+    for pct in [0.1, 20.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0] {
+        let mut cfg = ExperimentConfig::paper_day(day);
+        cfg.seed = seed;
+        cfg.elysium_percentile = pct;
+        let o = runner::run_paired(&cfg, None)?;
+        println!(
+            "{:>10.0} {:>12.1} {:>10.2} {:>12.2} {:>12.2} {:>10.2}",
+            pct,
+            o.minos.threshold_ms,
+            o.minos.termination_rate(),
+            o.analysis_improvement_pct(),
+            o.successful_requests_improvement_pct(),
+            o.cost_saving_pct(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_openloop(args: &Args) -> Result<()> {
+    let day = u(args, "day", 1)? as u32;
+    let seed = u(args, "seed", 0x31A5 + day as u64)?;
+    let rate = f(args, "rate", 3.0)?;
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    cfg.open_loop_rate_rps = Some(rate);
+    let o = runner::run_paired(&cfg, None)?;
+    println!(
+        "open loop @ {rate} req/s (Poisson, {} min horizon):",
+        cfg.vus.horizon.as_secs() / 60.0
+    );
+    println!(
+        "  minos    {} successful, {} terminations, {} cold starts",
+        o.minos.successful(),
+        o.minos.terminations,
+        o.minos.cold_starts
+    );
+    println!("  baseline {} successful", o.baseline.successful());
+    println!(
+        "  analysis {:+.2}%  requests {:+.2}%  cost {:+.2}%",
+        o.analysis_improvement_pct(),
+        o.successful_requests_improvement_pct(),
+        o.cost_saving_pct()
+    );
+    Ok(())
+}
+
+fn cmd_online(args: &Args) -> Result<()> {
+    let day = u(args, "day", 0)? as u32;
+    let seed = u(args, "seed", 0x31A5 + day as u64)?;
+    let every = u(args, "every", 10)?;
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    cfg.online_update_every = Some(every);
+    let outcome = runner::run_paired(&cfg, None)?;
+    println!(
+        "online threshold (update every {every} reports): {} pushes",
+        outcome.minos.online_pushes
+    );
+    println!(
+        "analysis improvement {:+.2}%  requests {:+.2}%  cost saving {:+.2}%",
+        outcome.analysis_improvement_pct(),
+        outcome.successful_requests_improvement_pct(),
+        outcome.cost_saving_pct(),
+    );
+    let (rows, _) = figures::fig4(std::slice::from_ref(&outcome));
+    println!(
+        "day {}: baseline median {:.0} ms -> minos median {:.0} ms",
+        rows[0].day, rows[0].baseline_median_ms, rows[0].minos_median_ms
+    );
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Google Cloud Functions billing model (paper Fig. 3 and §II-A).
+//!
+//! GCF charges per unit of execution time — compute rates scale with the
+//! memory size (which fixes the CPU allocation) — plus a flat fee per
+//! invocation. The paper's cost equation (Fig. 3):
+//!
+//! ```text
+//! c_total = c_exec · (Σ d_term + Σ d_pass + Σ d_reuse)
+//!         + c_inv  · (n_term + n_pass + n_reuse)
+//! ```
+//!
+//! Rates below follow the GCF gen-1 price list (GB-s + GHz-s) with the
+//! published memory→CPU tier table, extended to the 32 GB tier the paper
+//! mentions. Billing granularity is configurable; the paper's analysis
+//! assumes fine-grained (ms) billing, and an ablation bench explores 100 ms
+//! rounding.
+
+/// Price per GB-second of memory, USD.
+pub const USD_PER_GB_S: f64 = 0.000_002_5;
+/// Price per GHz-second of CPU, USD.
+pub const USD_PER_GHZ_S: f64 = 0.000_010_0;
+/// Price per invocation, USD.
+pub const USD_PER_INVOCATION: f64 = 0.000_000_4;
+
+/// A GCF memory tier with its CPU allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tier {
+    pub memory_mb: u32,
+    pub cpu_ghz: f64,
+}
+
+/// The GCF tier table (gen-1 published tiers; 16/32 GB extrapolated from
+/// the gen-2 vCPU scaling the paper's "32 GB" remark refers to).
+pub const TIERS: &[Tier] = &[
+    Tier { memory_mb: 128, cpu_ghz: 0.2 },
+    Tier { memory_mb: 256, cpu_ghz: 0.4 },
+    Tier { memory_mb: 512, cpu_ghz: 0.8 },
+    Tier { memory_mb: 1024, cpu_ghz: 1.4 },
+    Tier { memory_mb: 2048, cpu_ghz: 2.4 },
+    Tier { memory_mb: 4096, cpu_ghz: 4.8 },
+    Tier { memory_mb: 8192, cpu_ghz: 4.8 },
+    Tier { memory_mb: 16384, cpu_ghz: 9.6 },
+    Tier { memory_mb: 32768, cpu_ghz: 19.2 },
+];
+
+/// The paper's experiment configuration: 256 MB ⇒ 0.167 vCPU (≈0.4 GHz of
+/// a 2.4 GHz core).
+pub const PAPER_TIER_MB: u32 = 256;
+
+/// Billing calculator for one function configuration.
+#[derive(Debug, Clone)]
+pub struct Billing {
+    tier: Tier,
+    /// Durations are rounded **up** to a multiple of this before pricing.
+    pub granularity_ms: f64,
+}
+
+impl Billing {
+    /// Look up a tier by memory size.
+    pub fn for_memory(memory_mb: u32) -> Option<Billing> {
+        TIERS.iter().find(|t| t.memory_mb == memory_mb).map(|&tier| Billing {
+            tier,
+            granularity_ms: 1.0,
+        })
+    }
+
+    /// The paper's configuration (256 MB, ms-granularity billing).
+    pub fn paper() -> Billing {
+        Billing::for_memory(PAPER_TIER_MB).expect("paper tier in table")
+    }
+
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Cost of one second of execution (GB-s + GHz-s terms), USD.
+    pub fn exec_usd_per_s(&self) -> f64 {
+        let gb = self.tier.memory_mb as f64 / 1024.0;
+        gb * USD_PER_GB_S + self.tier.cpu_ghz * USD_PER_GHZ_S
+    }
+
+    /// Round a duration up to the billing granularity.
+    pub fn billable_ms(&self, duration_ms: f64) -> f64 {
+        if duration_ms <= 0.0 {
+            return 0.0;
+        }
+        (duration_ms / self.granularity_ms).ceil() * self.granularity_ms
+    }
+
+    /// Execution cost of one invocation of the given duration, USD
+    /// (excludes the per-invocation fee).
+    pub fn exec_cost_usd(&self, duration_ms: f64) -> f64 {
+        self.billable_ms(duration_ms) / 1000.0 * self.exec_usd_per_s()
+    }
+
+    /// Full cost of one invocation: execution + invocation fee (Fig. 3).
+    pub fn invocation_cost_usd(&self, duration_ms: f64) -> f64 {
+        self.exec_cost_usd(duration_ms) + USD_PER_INVOCATION
+    }
+
+    /// How many ms of execution the per-invocation fee equals (§II-A's
+    /// "roughly 50 ms at 128 MB, < 3 ms at 32 GB" comparison).
+    pub fn invocation_fee_as_exec_ms(&self) -> f64 {
+        USD_PER_INVOCATION / self.exec_usd_per_s() * 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tier_rates() {
+        let b = Billing::paper();
+        assert_eq!(b.tier().memory_mb, 256);
+        // 0.25 GB * 2.5e-6 + 0.4 GHz * 1e-5 = 6.25e-7 + 4e-6 = 4.625e-6 $/s
+        assert!((b.exec_usd_per_s() - 4.625e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig6_cost_range_for_paper_workload() {
+        // ~2.9 s executions at 256 MB should land in the paper's Fig. 6
+        // range of $12–14 per million successful requests.
+        let b = Billing::paper();
+        let per_request = b.invocation_cost_usd(2_900.0);
+        let per_million = per_request * 1e6;
+        assert!(
+            (12.0..14.5).contains(&per_million),
+            "cost per million: {per_million}"
+        );
+    }
+
+    #[test]
+    fn invocation_fee_equivalents() {
+        // §II-A: the fee is worth much more exec time at small tiers than
+        // at the 32 GB tier (< 3 ms claim).
+        let small = Billing::for_memory(128).unwrap();
+        let big = Billing::for_memory(32768).unwrap();
+        assert!(small.invocation_fee_as_exec_ms() > 100.0);
+        assert!(big.invocation_fee_as_exec_ms() < 3.0);
+    }
+
+    #[test]
+    fn cost_monotone_in_duration_and_memory() {
+        let b = Billing::paper();
+        assert!(b.exec_cost_usd(2000.0) > b.exec_cost_usd(1000.0));
+        let costs: Vec<f64> = TIERS
+            .iter()
+            .map(|t| Billing::for_memory(t.memory_mb).unwrap().exec_cost_usd(1000.0))
+            .collect();
+        for w in costs.windows(2) {
+            assert!(w[1] >= w[0], "cost not monotone in memory: {costs:?}");
+        }
+    }
+
+    #[test]
+    fn granularity_rounds_up() {
+        let mut b = Billing::paper();
+        b.granularity_ms = 100.0;
+        assert_eq!(b.billable_ms(101.0), 200.0);
+        assert_eq!(b.billable_ms(100.0), 100.0);
+        assert_eq!(b.billable_ms(0.0), 0.0);
+        b.granularity_ms = 1.0;
+        assert_eq!(b.billable_ms(100.4), 101.0);
+    }
+
+    #[test]
+    fn unknown_memory_rejected() {
+        assert!(Billing::for_memory(333).is_none());
+    }
+
+    #[test]
+    fn fig3_decomposition() {
+        // c_total over a mixed batch equals the sum of its Fig. 3 terms.
+        let b = Billing::paper();
+        let d_term = [350.0, 420.0];
+        let d_pass = [2_900.0];
+        let d_reuse = [2_850.0, 2_750.0, 2_800.0];
+        let total: f64 = d_term
+            .iter()
+            .chain(&d_pass)
+            .chain(&d_reuse)
+            .map(|&d| b.invocation_cost_usd(d))
+            .sum();
+        let exec_part: f64 = d_term
+            .iter()
+            .chain(&d_pass)
+            .chain(&d_reuse)
+            .map(|&d| b.exec_cost_usd(d))
+            .sum();
+        let inv_part = 6.0 * USD_PER_INVOCATION;
+        assert!((total - (exec_part + inv_part)).abs() < 1e-15);
+    }
+}

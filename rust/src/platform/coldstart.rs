@@ -1,0 +1,70 @@
+//! Cold-start latency model.
+//!
+//! Starting a new instance requires the platform to pick a worker node, pull
+//! the code, and boot the sandbox (paper §I; ref. [5] surveys influencing
+//! factors). GCF cold starts for small Go functions cluster in the few
+//! hundred ms range with a right tail; we model platform setup as lognormal
+//! plus a fixed app-init term.
+
+use crate::util::prng::Rng;
+
+/// Cold-start delay distribution.
+#[derive(Debug, Clone)]
+pub struct ColdStartModel {
+    /// Median platform setup time (sandbox boot, code pull), ms.
+    pub median_ms: f64,
+    /// Lognormal sigma of the setup time.
+    pub sigma: f64,
+    /// Deterministic user-code initialization (runtime boot, imports), ms.
+    pub app_init_ms: f64,
+}
+
+impl Default for ColdStartModel {
+    fn default() -> Self {
+        ColdStartModel { median_ms: 230.0, sigma: 0.35, app_init_ms: 60.0 }
+    }
+}
+
+impl ColdStartModel {
+    /// Sample one cold-start delay in ms.
+    pub fn sample_ms(&self, rng: &mut Rng) -> f64 {
+        debug_assert!(self.median_ms > 0.0);
+        rng.lognormal(self.median_ms.ln(), self.sigma) + self.app_init_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::{median, Summary};
+
+    #[test]
+    fn median_matches_config() {
+        let m = ColdStartModel::default();
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..30_001).map(|_| m.sample_ms(&mut rng)).collect();
+        let med = median(&xs);
+        let want = m.median_ms + m.app_init_ms;
+        assert!(
+            (med - want).abs() / want < 0.03,
+            "median {med}, want ~{want}"
+        );
+    }
+
+    #[test]
+    fn right_tail_exists() {
+        let m = ColdStartModel::default();
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..20_000).map(|_| m.sample_ms(&mut rng)).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert!(s.p95 > s.median * 1.3, "p95 {} median {}", s.p95, s.median);
+        assert!(s.min >= m.app_init_ms);
+    }
+
+    #[test]
+    fn zero_sigma_is_deterministic() {
+        let m = ColdStartModel { median_ms: 100.0, sigma: 0.0, app_init_ms: 10.0 };
+        let mut rng = Rng::new(3);
+        assert!((m.sample_ms(&mut rng) - 110.0).abs() < 1e-9);
+    }
+}

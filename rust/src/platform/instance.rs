@@ -1,0 +1,121 @@
+//! Function instances: the isolated environments the platform starts on
+//! worker nodes to run user code (one concurrent request each, GCF-style).
+
+use crate::sim::SimTime;
+
+use super::node::NodeId;
+
+/// Platform-unique instance identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u64);
+
+/// Lifecycle state of an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Cold start in progress; becomes Busy when the environment is up.
+    Starting,
+    /// Serving an invocation.
+    Busy,
+    /// Warm and available for re-use.
+    Idle,
+    /// Gone (crashed by Minos, expired idle, or platform reclaim).
+    Terminated,
+}
+
+/// One function instance.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub node: NodeId,
+    pub state: InstanceState,
+    /// Instance-level performance offset (× node factor), fixed at placement.
+    pub offset: f64,
+    /// Platform-imposed maximum lifetime: the instance is recycled (not
+    /// re-used) once `created_at + max_lifetime_ms` passes. GCF recycles
+    /// instances on the order of minutes-to-tens-of-minutes.
+    pub max_lifetime_ms: f64,
+    pub created_at: SimTime,
+    pub last_used: SimTime,
+    pub invocations_served: u64,
+    /// Whether this instance passed the Minos benchmark (cold-start gate).
+    /// `None` = never benchmarked (baseline runs / warm placement).
+    pub benchmark_score: Option<f64>,
+}
+
+impl Instance {
+    pub fn new(
+        id: InstanceId,
+        node: NodeId,
+        offset: f64,
+        max_lifetime_ms: f64,
+        now: SimTime,
+    ) -> Instance {
+        Instance {
+            id,
+            node,
+            state: InstanceState::Starting,
+            offset,
+            max_lifetime_ms,
+            created_at: now,
+            last_used: now,
+            invocations_served: 0,
+            benchmark_score: None,
+        }
+    }
+
+    pub fn is_live(&self) -> bool {
+        self.state != InstanceState::Terminated
+    }
+
+    /// Has the platform-imposed lifetime elapsed at `now`?
+    pub fn lifetime_expired(&self, now: SimTime) -> bool {
+        now.ms_since(self.created_at) >= self.max_lifetime_ms
+    }
+
+    /// Idle duration at `now` (0 unless idle).
+    pub fn idle_ms(&self, now: SimTime) -> f64 {
+        if self.state == InstanceState::Idle {
+            now.ms_since(self.last_used)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_instance_is_starting() {
+        let i = Instance::new(InstanceId(1), NodeId(2), 1.01, 1e9, SimTime::from_ms(5.0));
+        assert_eq!(i.state, InstanceState::Starting);
+        assert!(i.is_live());
+        assert_eq!(i.invocations_served, 0);
+        assert!(i.benchmark_score.is_none());
+    }
+
+    #[test]
+    fn idle_ms_only_when_idle() {
+        let mut i = Instance::new(InstanceId(1), NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        i.state = InstanceState::Busy;
+        assert_eq!(i.idle_ms(SimTime::from_ms(100.0)), 0.0);
+        i.state = InstanceState::Idle;
+        i.last_used = SimTime::from_ms(40.0);
+        assert_eq!(i.idle_ms(SimTime::from_ms(100.0)), 60.0);
+    }
+
+    #[test]
+    fn lifetime_expiry() {
+        let i = Instance::new(InstanceId(1), NodeId(0), 1.0, 500.0, SimTime::ZERO);
+        assert!(!i.lifetime_expired(SimTime::from_ms(499.0)));
+        assert!(i.lifetime_expired(SimTime::from_ms(500.0)));
+    }
+
+    #[test]
+    fn terminated_is_not_live() {
+        let mut i = Instance::new(InstanceId(1), NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        i.state = InstanceState::Terminated;
+        assert!(!i.is_live());
+    }
+}

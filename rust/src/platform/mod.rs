@@ -1,0 +1,23 @@
+//! FaaS platform simulator — the substrate substitution for Google Cloud
+//! Functions (DESIGN.md §2).
+//!
+//! Minos interacts with the platform only through a narrow contract:
+//! invocations get placed on a warm instance if one is idle, otherwise a new
+//! instance cold-starts on a shared worker node whose utilization the user
+//! cannot influence (paper Fig. 1); instances can crash themselves, which
+//! evicts them; execution time is billed per unit of duration plus a
+//! per-invocation fee (paper Fig. 3). This module implements exactly that
+//! contract with a performance-variability model calibrated to published
+//! FaaS measurement studies (paper refs. [8], [16], [23]).
+
+pub mod billing;
+pub mod coldstart;
+pub mod instance;
+pub mod node;
+pub mod platform;
+pub mod scheduler;
+pub mod variability;
+
+pub use instance::{Instance, InstanceId, InstanceState};
+pub use node::{Node, NodeId};
+pub use platform::{FaasPlatform, Placement, PlatformConfig};

@@ -1,0 +1,124 @@
+//! Worker nodes: the shared machines function instances land on.
+//!
+//! A node's *performance factor* (higher = faster) captures the aggregate
+//! effect of co-tenant contention: context switches, cache pressure, CPU
+//! throttling. The factor is sampled per node per day from the variability
+//! model and drifts slowly via a mean-reverting (Ornstein–Uhlenbeck) walk —
+//! matching the observation (paper §I, refs. [8], [23]) that some machines
+//! are persistently faster over the horizon of one experiment, with mild
+//! temporal wander.
+
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+
+/// Index of a worker node within the platform's pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// One shared worker node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Day-level base performance factor (1.0 = nominal speed).
+    base_factor: f64,
+    /// Current OU-drift multiplier (mean 1.0).
+    drift: f64,
+    /// OU mean-reversion rate per hour.
+    ou_theta: f64,
+    /// OU stationary standard deviation.
+    ou_sigma: f64,
+    /// Last time the drift was advanced.
+    last_update: SimTime,
+    /// How many instances this node currently hosts (for utilization stats).
+    pub resident_instances: u32,
+}
+
+impl Node {
+    pub fn new(id: NodeId, base_factor: f64, ou_theta: f64, ou_sigma: f64) -> Node {
+        Node {
+            id,
+            base_factor,
+            drift: 1.0,
+            ou_theta,
+            ou_sigma,
+            last_update: SimTime::ZERO,
+            resident_instances: 0,
+        }
+    }
+
+    /// The node's day-level base factor (before drift/diurnal terms).
+    pub fn base_factor(&self) -> f64 {
+        self.base_factor
+    }
+
+    /// Advance the OU drift to `now` and return the current factor
+    /// (base × drift). Exact OU transition: for elapsed time dt,
+    /// `x' = mu + (x - mu) e^{-θ dt} + sigma sqrt(1 - e^{-2θ dt}) · N(0,1)`.
+    pub fn factor_at(&mut self, now: SimTime, rng: &mut Rng) -> f64 {
+        let dt_hours = now.ms_since(self.last_update) / 3_600_000.0;
+        if dt_hours > 0.0 && self.ou_sigma > 0.0 {
+            let decay = (-self.ou_theta * dt_hours).exp();
+            let stationary_mix = (1.0 - decay * decay).sqrt();
+            self.drift = 1.0 + (self.drift - 1.0) * decay
+                + self.ou_sigma * stationary_mix * rng.normal();
+            // Keep the multiplier physical (a node can't be infinitely slow).
+            self.drift = self.drift.clamp(0.5, 1.5);
+        }
+        self.last_update = now;
+        self.base_factor * self.drift
+    }
+
+    /// Peek the factor without advancing the stochastic state (testing).
+    pub fn factor_nominal(&self) -> f64 {
+        self.base_factor * self.drift
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_starts_at_base() {
+        let mut n = Node::new(NodeId(0), 1.1, 0.5, 0.02);
+        let mut rng = Rng::new(1);
+        let f = n.factor_at(SimTime::ZERO, &mut rng);
+        assert!((f - 1.1).abs() < 1e-12, "no time elapsed, no drift: {f}");
+    }
+
+    #[test]
+    fn drift_is_mean_reverting() {
+        // Long-run mean of factor/base must stay near 1.0.
+        let mut n = Node::new(NodeId(0), 1.0, 1.0, 0.05);
+        let mut rng = Rng::new(2);
+        let mut sum = 0.0;
+        let mut count = 0;
+        for step in 1..2_000u64 {
+            let t = SimTime::from_secs(step as f64 * 60.0);
+            sum += n.factor_at(t, &mut rng);
+            count += 1;
+        }
+        let mean = sum / count as f64;
+        assert!((mean - 1.0).abs() < 0.02, "OU mean {mean}");
+    }
+
+    #[test]
+    fn drift_bounded() {
+        let mut n = Node::new(NodeId(0), 1.0, 0.1, 0.2);
+        let mut rng = Rng::new(3);
+        for step in 1..5_000u64 {
+            let f = n.factor_at(SimTime::from_secs(step as f64 * 30.0), &mut rng);
+            assert!((0.4..=1.6).contains(&f), "factor escaped bounds: {f}");
+        }
+    }
+
+    #[test]
+    fn zero_sigma_means_constant() {
+        let mut n = Node::new(NodeId(1), 0.9, 1.0, 0.0);
+        let mut rng = Rng::new(4);
+        for step in 1..100u64 {
+            let f = n.factor_at(SimTime::from_secs(step as f64), &mut rng);
+            assert_eq!(f, 0.9);
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! The platform facade: node pool + scheduler + variability + cold starts.
+//!
+//! This is the boundary Minos sees (paper Fig. 1): submit an invocation and
+//! get either a warm instance or a cold-starting one on an unknown node;
+//! crash an instance and it is gone. Everything stochastic is driven by
+//! forked substreams of one seed, so paired Minos/baseline runs share the
+//! identical platform draw sequence.
+
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+
+use super::coldstart::ColdStartModel;
+use super::instance::{InstanceId, InstanceState};
+use super::node::{Node, NodeId};
+use super::scheduler::Scheduler;
+use super::variability::VariabilityConfig;
+
+/// Platform-level configuration.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Size of the worker-node pool new instances are placed on.
+    pub n_nodes: usize,
+    /// Warm instances idle longer than this are reclaimed, ms.
+    pub idle_timeout_ms: f64,
+    /// Median platform-imposed instance lifetime, ms (GCF recycles
+    /// instances after minutes-to-tens-of-minutes even when busy-warm).
+    pub instance_lifetime_median_ms: f64,
+    /// Lognormal sigma of the instance lifetime.
+    pub instance_lifetime_sigma: f64,
+    /// Upper bound on concurrently live instances (platform quota).
+    pub max_instances: usize,
+    pub variability: VariabilityConfig,
+    pub coldstart: ColdStartModel,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            n_nodes: 200,
+            idle_timeout_ms: 10.0 * 60.0 * 1000.0,
+            instance_lifetime_median_ms: 9.0 * 60.0 * 1000.0,
+            instance_lifetime_sigma: 0.45,
+            max_instances: 1000,
+            variability: VariabilityConfig::default(),
+            coldstart: ColdStartModel::default(),
+        }
+    }
+}
+
+/// Outcome of asking the platform to place an invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Placement {
+    /// Re-using a warm instance; usable immediately.
+    Warm(InstanceId),
+    /// A new instance is starting; usable at `ready_at`.
+    Cold { id: InstanceId, ready_at: SimTime },
+    /// Instance quota exhausted; caller must retry later.
+    Saturated,
+}
+
+/// The simulated FaaS platform.
+#[derive(Debug)]
+pub struct FaasPlatform {
+    pub cfg: PlatformConfig,
+    nodes: Vec<Node>,
+    pub scheduler: Scheduler,
+    /// Substream for placement choices (node picks, cold-start delays).
+    rng_place: Rng,
+    /// Substream for node OU drift.
+    rng_drift: Rng,
+    /// Substream for instance offsets.
+    rng_inst: Rng,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub expired: u64,
+    pub crashes: u64,
+    /// Instances recycled because their platform lifetime elapsed.
+    pub recycled: u64,
+}
+
+impl FaasPlatform {
+    /// Build the platform for a given `day`, sampling the node pool from
+    /// the day's variability regime. `seed` controls all platform
+    /// randomness; the same seed reproduces the same platform exactly.
+    pub fn new(cfg: PlatformConfig, day: u32, seed: u64) -> FaasPlatform {
+        FaasPlatform::new_salted(cfg, day, seed, 0)
+    }
+
+    /// Like [`FaasPlatform::new`], but with a `salt` that varies the
+    /// placement/drift/offset lotteries while keeping the *same* node pool.
+    /// The pre-test runs with a different salt than the main run: same
+    /// platform day, different instance draws — exactly the paper's setup
+    /// where pre-test and main workload are separate deployments in the
+    /// same region. Paired Minos/baseline runs share salt 0.
+    pub fn new_salted(cfg: PlatformConfig, day: u32, seed: u64, salt: u64) -> FaasPlatform {
+        let root = Rng::new(seed);
+        let mut day_rng = root.fork(1000 + day as u64);
+        let mut node_rng = root.fork(2000 + day as u64);
+        let nodes = (0..cfg.n_nodes)
+            .map(|i| {
+                let base = cfg
+                    .variability
+                    .sample_node_factor(day, &mut day_rng, &mut node_rng);
+                Node::new(
+                    NodeId(i as u32),
+                    base,
+                    cfg.variability.ou_theta,
+                    cfg.variability.ou_sigma,
+                )
+            })
+            .collect();
+        FaasPlatform {
+            cfg,
+            nodes,
+            scheduler: Scheduler::new(),
+            rng_place: root.fork(3000 + day as u64 + salt * 101),
+            rng_drift: root.fork(4000 + day as u64 + salt * 101),
+            rng_inst: root.fork(5000 + day as u64 + salt * 101),
+            cold_starts: 0,
+            warm_hits: 0,
+            expired: 0,
+            crashes: 0,
+            recycled: 0,
+        }
+    }
+
+    /// Place an invocation: warm instance if available, else cold start.
+    pub fn place(&mut self, now: SimTime) -> Placement {
+        self.expired += self
+            .scheduler
+            .expire_idle(now, self.cfg.idle_timeout_ms)
+            .len() as u64;
+
+        if let Some(id) = self.scheduler.take_warm(now, &mut self.recycled) {
+            self.warm_hits += 1;
+            return Placement::Warm(id);
+        }
+        if self.scheduler.live_count() >= self.cfg.max_instances {
+            return Placement::Saturated;
+        }
+        let node = self.scheduler.pick_node(self.cfg.n_nodes, &mut self.rng_place);
+        let offset = self.cfg.variability.sample_instance_offset(&mut self.rng_inst);
+        let lifetime = self.rng_place.lognormal(
+            self.cfg.instance_lifetime_median_ms.ln(),
+            self.cfg.instance_lifetime_sigma,
+        );
+        let id = self.scheduler.create_instance(node, offset, lifetime, now);
+        self.nodes[node.0 as usize].resident_instances += 1;
+        let delay = self.cfg.coldstart.sample_ms(&mut self.rng_place);
+        self.cold_starts += 1;
+        Placement::Cold { id, ready_at: now.plus_ms(delay) }
+    }
+
+    /// Cold start completed; instance transitions Starting → Busy.
+    pub fn cold_start_ready(&mut self, id: InstanceId) {
+        self.scheduler.mark_running(id);
+    }
+
+    /// Current performance factor of an instance (node factor × diurnal ×
+    /// instance offset). Advances the node's OU drift to `now`.
+    pub fn perf_factor(&mut self, id: InstanceId, now: SimTime) -> f64 {
+        let inst = self.scheduler.get(id);
+        debug_assert!(inst.is_live(), "perf_factor of terminated {id:?}");
+        let node_idx = inst.node.0 as usize;
+        let offset = inst.offset;
+        let node_factor = self.nodes[node_idx].factor_at(now, &mut self.rng_drift);
+        node_factor * self.cfg.variability.diurnal(now) * offset
+    }
+
+    /// Per-invocation multiplicative duration noise.
+    pub fn invocation_noise(&mut self) -> f64 {
+        self.cfg.variability.sample_invocation_noise(&mut self.rng_inst)
+    }
+
+    /// Invocation finished normally; instance joins the warm pool.
+    pub fn release(&mut self, id: InstanceId, now: SimTime) {
+        self.scheduler.release(id, now);
+    }
+
+    /// Minos crash (or any abnormal exit): the instance is gone.
+    pub fn crash(&mut self, id: InstanceId) {
+        let node = self.scheduler.get(id).node;
+        self.scheduler.terminate(id);
+        self.crashes += 1;
+        let n = &mut self.nodes[node.0 as usize];
+        n.resident_instances = n.resident_instances.saturating_sub(1);
+    }
+
+    /// Node base-factor snapshot (for calibration reports / tests).
+    pub fn node_base_factors(&self) -> Vec<f64> {
+        self.nodes.iter().map(|n| n.base_factor()).collect()
+    }
+
+    /// Warm-pool instance perf offsets paired with their node base factors
+    /// (used to verify the Minos filtering effect in tests).
+    pub fn live_instance_factors(&self) -> Vec<f64> {
+        self.scheduler
+            .instances
+            .values()
+            .filter(|i| i.is_live() && i.state != InstanceState::Starting)
+            .map(|i| self.nodes[i.node.0 as usize].factor_nominal() * i.offset)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> FaasPlatform {
+        FaasPlatform::new(PlatformConfig::default(), 0, 42)
+    }
+
+    #[test]
+    fn same_seed_same_platform() {
+        let a = platform();
+        let b = platform();
+        assert_eq!(a.node_base_factors(), b.node_base_factors());
+    }
+
+    #[test]
+    fn different_days_resample_nodes() {
+        let a = FaasPlatform::new(PlatformConfig::default(), 0, 42);
+        let b = FaasPlatform::new(PlatformConfig::default(), 1, 42);
+        assert_ne!(a.node_base_factors(), b.node_base_factors());
+    }
+
+    #[test]
+    fn first_placement_is_cold() {
+        let mut p = platform();
+        match p.place(SimTime::ZERO) {
+            Placement::Cold { ready_at, .. } => {
+                assert!(ready_at > SimTime::ZERO);
+            }
+            other => panic!("expected cold start, got {other:?}"),
+        }
+        assert_eq!(p.cold_starts, 1);
+    }
+
+    #[test]
+    fn warm_reuse_after_release() {
+        let mut p = platform();
+        let id = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, ready_at } => {
+                p.cold_start_ready(id);
+                p.release(id, ready_at);
+                id
+            }
+            other => panic!("{other:?}"),
+        };
+        match p.place(SimTime::from_secs(1.0)) {
+            Placement::Warm(w) => assert_eq!(w, id),
+            other => panic!("expected warm hit, got {other:?}"),
+        }
+        assert_eq!(p.warm_hits, 1);
+    }
+
+    #[test]
+    fn crash_prevents_reuse() {
+        let mut p = platform();
+        let id = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        p.cold_start_ready(id);
+        p.crash(id);
+        match p.place(SimTime::from_secs(1.0)) {
+            Placement::Cold { id: id2, .. } => assert_ne!(id, id2),
+            other => panic!("expected cold start, got {other:?}"),
+        }
+        assert_eq!(p.crashes, 1);
+    }
+
+    #[test]
+    fn idle_instances_expire() {
+        let mut cfg = PlatformConfig::default();
+        cfg.idle_timeout_ms = 1_000.0;
+        let mut p = FaasPlatform::new(cfg, 0, 7);
+        let id = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, ready_at } => {
+                p.cold_start_ready(id);
+                p.release(id, ready_at);
+                id
+            }
+            other => panic!("{other:?}"),
+        };
+        // Past the idle timeout the warm pool is swept at placement time.
+        match p.place(SimTime::from_secs(10.0)) {
+            Placement::Cold { id: id2, .. } => assert_ne!(id, id2),
+            other => panic!("expected cold start, got {other:?}"),
+        }
+        assert_eq!(p.expired, 1);
+    }
+
+    #[test]
+    fn quota_saturates() {
+        let mut cfg = PlatformConfig::default();
+        cfg.max_instances = 2;
+        let mut p = FaasPlatform::new(cfg, 0, 9);
+        assert!(matches!(p.place(SimTime::ZERO), Placement::Cold { .. }));
+        assert!(matches!(p.place(SimTime::ZERO), Placement::Cold { .. }));
+        assert_eq!(p.place(SimTime::ZERO), Placement::Saturated);
+    }
+
+    #[test]
+    fn perf_factor_composes_offset() {
+        let mut p = platform();
+        let id = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        p.cold_start_ready(id);
+        let f = p.perf_factor(id, SimTime::from_ms(1.0));
+        assert!(f > 0.3 && f < 3.0, "factor {f}");
+    }
+
+    #[test]
+    fn higher_sigma_day_has_wider_node_spread() {
+        use crate::stats::descriptive::Summary;
+        let cfg = PlatformConfig { n_nodes: 2000, ..Default::default() };
+        // Default day sigmas: day 1 = 0.16, day 4 = 0.055.
+        let hi = FaasPlatform::new(cfg.clone(), 1, 11);
+        let lo = FaasPlatform::new(cfg, 4, 11);
+        let cov_hi = Summary::of(&hi.node_base_factors()).unwrap().cov();
+        let cov_lo = Summary::of(&lo.node_base_factors()).unwrap().cov();
+        assert!(cov_hi > cov_lo * 1.8, "cov_hi {cov_hi} cov_lo {cov_lo}");
+    }
+}

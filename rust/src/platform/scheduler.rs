@@ -1,0 +1,239 @@
+//! Placement: which execution environment serves an invocation (paper §II).
+//!
+//! GCF-style policy: route to an idle *warm* instance when one exists
+//! (most-recently-used first, which maximizes re-use of the hottest
+//! instance and lets the others expire); otherwise cold-start a new
+//! instance on a worker node the user cannot choose (uniform over the
+//! pool — the lottery Minos plays).
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+
+use super::instance::{Instance, InstanceId, InstanceState};
+use super::node::NodeId;
+
+/// Warm-pool and instance-table bookkeeping.
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    /// All instances ever created (terminated ones stay for metrics).
+    pub instances: HashMap<InstanceId, Instance>,
+    /// Idle instances ordered oldest→newest by when they became idle
+    /// (placement pops from the back = MRU).
+    warm: Vec<InstanceId>,
+    next_id: u64,
+    /// Live (non-terminated) instance count, maintained incrementally —
+    /// `place()` consults it on every call, so it must be O(1) (§Perf:
+    /// the original `values().filter(is_live).count()` scan was the top
+    /// cost in the placement hot path).
+    live: usize,
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of idle warm instances.
+    pub fn warm_count(&self) -> usize {
+        self.warm.len()
+    }
+
+    /// Number of live (non-terminated) instances. O(1).
+    pub fn live_count(&self) -> usize {
+        debug_assert_eq!(
+            self.live,
+            self.instances.values().filter(|i| i.is_live()).count(),
+            "live counter drifted"
+        );
+        self.live
+    }
+
+    /// Take the most-recently-used warm instance, marking it Busy.
+    /// Instances whose platform lifetime has elapsed are recycled
+    /// (terminated) instead of being handed out; `recycled` counts them.
+    pub fn take_warm(&mut self, now: SimTime, recycled: &mut u64) -> Option<InstanceId> {
+        while let Some(id) = self.warm.pop() {
+            let inst = self.instances.get_mut(&id).expect("warm id in table");
+            debug_assert_eq!(inst.state, InstanceState::Idle);
+            if inst.lifetime_expired(now) {
+                inst.state = InstanceState::Terminated;
+                self.live -= 1;
+                *recycled += 1;
+                continue;
+            }
+            inst.state = InstanceState::Busy;
+            inst.last_used = now;
+            return Some(id);
+        }
+        None
+    }
+
+    /// Create a new (cold-starting) instance on `node`.
+    pub fn create_instance(
+        &mut self,
+        node: NodeId,
+        offset: f64,
+        max_lifetime_ms: f64,
+        now: SimTime,
+    ) -> InstanceId {
+        self.next_id += 1;
+        self.live += 1;
+        let id = InstanceId(self.next_id);
+        self.instances
+            .insert(id, Instance::new(id, node, offset, max_lifetime_ms, now));
+        id
+    }
+
+    /// Pick a node for a new instance: uniform over the pool.
+    pub fn pick_node(&self, n_nodes: usize, rng: &mut Rng) -> NodeId {
+        NodeId(rng.below(n_nodes) as u32)
+    }
+
+    /// Cold start finished: the instance begins serving.
+    pub fn mark_running(&mut self, id: InstanceId) {
+        let inst = self.instances.get_mut(&id).expect("instance exists");
+        debug_assert_eq!(inst.state, InstanceState::Starting);
+        inst.state = InstanceState::Busy;
+    }
+
+    /// Invocation finished: instance returns to the warm pool.
+    pub fn release(&mut self, id: InstanceId, now: SimTime) {
+        let inst = self.instances.get_mut(&id).expect("instance exists");
+        debug_assert_eq!(inst.state, InstanceState::Busy);
+        inst.state = InstanceState::Idle;
+        inst.last_used = now;
+        inst.invocations_served += 1;
+        debug_assert!(!self.warm.contains(&id), "double release of {id:?}");
+        self.warm.push(id);
+    }
+
+    /// Instance gone (Minos crash or platform reclaim while busy/starting).
+    pub fn terminate(&mut self, id: InstanceId) {
+        let inst = self.instances.get_mut(&id).expect("instance exists");
+        if inst.is_live() {
+            self.live -= 1;
+        }
+        inst.state = InstanceState::Terminated;
+        self.warm.retain(|&w| w != id);
+    }
+
+    /// Expire warm instances idle longer than `timeout_ms`. Returns the
+    /// expired ids (caller records metrics).
+    pub fn expire_idle(&mut self, now: SimTime, timeout_ms: f64) -> Vec<InstanceId> {
+        let mut expired = Vec::new();
+        let live = &mut self.live;
+        self.warm.retain(|&id| {
+            let inst = self.instances.get_mut(&id).expect("warm id in table");
+            if now.ms_since(inst.last_used) >= timeout_ms {
+                inst.state = InstanceState::Terminated;
+                *live -= 1;
+                expired.push(id);
+                false
+            } else {
+                true
+            }
+        });
+        expired
+    }
+
+    pub fn get(&self, id: InstanceId) -> &Instance {
+        &self.instances[&id]
+    }
+
+    pub fn get_mut(&mut self, id: InstanceId) -> &mut Instance {
+        self.instances.get_mut(&id).expect("instance exists")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched_with_idle(n: usize) -> (Scheduler, Vec<InstanceId>) {
+        let mut s = Scheduler::new();
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let id = s.create_instance(NodeId(i as u32), 1.0, 1e9, SimTime::ZERO);
+            s.mark_running(id);
+            s.release(id, SimTime::from_ms(i as f64));
+            ids.push(id);
+        }
+        (s, ids)
+    }
+
+    #[test]
+    fn warm_placement_is_mru() {
+        let (mut s, ids) = sched_with_idle(3);
+        // Last released (ids[2]) must be taken first.
+        let mut rec = 0;
+        assert_eq!(s.take_warm(SimTime::from_ms(10.0), &mut rec), Some(ids[2]));
+        assert_eq!(s.take_warm(SimTime::from_ms(10.0), &mut rec), Some(ids[1]));
+        assert_eq!(s.warm_count(), 1);
+    }
+
+    #[test]
+    fn take_warm_empty_is_none() {
+        let mut s = Scheduler::new();
+        let mut rec = 0;
+        assert_eq!(s.take_warm(SimTime::ZERO, &mut rec), None);
+    }
+
+    #[test]
+    fn terminate_removes_from_warm_pool() {
+        let (mut s, ids) = sched_with_idle(2);
+        s.terminate(ids[1]);
+        assert_eq!(s.warm_count(), 1);
+        let mut rec = 0;
+        assert_eq!(s.take_warm(SimTime::from_ms(5.0), &mut rec), Some(ids[0]));
+        assert!(!s.get(ids[1]).is_live());
+    }
+
+    #[test]
+    fn expire_idle_respects_timeout() {
+        let (mut s, ids) = sched_with_idle(3);
+        // Instances became idle at t=0,1,2 ms. Timeout 1.5ms at now=3ms
+        // expires those idle >= 1.5ms: ids[0] (3ms) and ids[1] (2ms).
+        let expired = s.expire_idle(SimTime::from_ms(3.0), 1.5);
+        assert_eq!(expired, vec![ids[0], ids[1]]);
+        assert_eq!(s.warm_count(), 1);
+        assert_eq!(s.live_count(), 1);
+    }
+
+    #[test]
+    fn release_increments_served() {
+        let mut s = Scheduler::new();
+        let id = s.create_instance(NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        s.mark_running(id);
+        s.release(id, SimTime::from_ms(1.0));
+        let mut rec = 0;
+        let got = s.take_warm(SimTime::from_ms(2.0), &mut rec).unwrap();
+        s.release(got, SimTime::from_ms(3.0));
+        assert_eq!(s.get(id).invocations_served, 2);
+    }
+
+    #[test]
+    fn take_warm_recycles_expired_lifetimes() {
+        let mut s = Scheduler::new();
+        let id = s.create_instance(NodeId(0), 1.0, 100.0, SimTime::ZERO);
+        s.mark_running(id);
+        s.release(id, SimTime::from_ms(1.0));
+        let mut rec = 0;
+        // Lifetime (100 ms) elapsed: the instance is recycled, not reused.
+        assert_eq!(s.take_warm(SimTime::from_ms(200.0), &mut rec), None);
+        assert_eq!(rec, 1);
+        assert!(!s.get(id).is_live());
+    }
+
+    #[test]
+    fn pick_node_uniform_coverage() {
+        let s = Scheduler::new();
+        let mut rng = Rng::new(1);
+        let mut seen = vec![false; 16];
+        for _ in 0..2_000 {
+            seen[s.pick_node(16, &mut rng).0 as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

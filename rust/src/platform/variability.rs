@@ -1,0 +1,177 @@
+//! The performance-variability model — the phenomenon Minos exploits.
+//!
+//! Calibration targets (paper §I/§III plus the cited measurement studies):
+//! - node-to-node spread: lognormal base factors with per-day sigma in the
+//!   5–16 % range, giving instance-duration CoVs around 10 %;
+//! - day-to-day drift: each day resamples the node pool with its own sigma
+//!   and a small mean shift, which is what makes per-day effect sizes vary
+//!   (paper Fig. 4: 4.3 %–13 % improvement depending on the day);
+//! - diurnal modulation: the authors' "Night Shift" study (ref. [8]) found
+//!   >10 % faster platforms at night; a sinusoid with configurable
+//!   amplitude reproduces that for long-horizon simulations;
+//! - instance-level jitter: two instances on the same node still differ
+//!   slightly (scheduling luck), modeled as a small lognormal at placement;
+//! - invocation-level noise: per-request lognormal on every duration.
+
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+
+/// Tunable parameters of the variability model.
+#[derive(Debug, Clone)]
+pub struct VariabilityConfig {
+    /// Lognormal sigma of node base factors per day-of-week (cycled).
+    /// Varied per day to reproduce Fig. 4's day-dependent effect sizes.
+    pub node_sigma_by_day: Vec<f64>,
+    /// Small day-level mean shift sigma (platform-wide good/bad days).
+    pub day_mean_sigma: f64,
+    /// Diurnal amplitude a: factor multiplied by `1 + a·cos(2π(t - peak)/24h)`.
+    pub diurnal_amplitude: f64,
+    /// Hour of day (0–24) at which the platform is fastest (night).
+    pub diurnal_peak_hour: f64,
+    /// OU mean-reversion rate (per hour) for node drift.
+    pub ou_theta: f64,
+    /// OU stationary sigma for node drift.
+    pub ou_sigma: f64,
+    /// Lognormal sigma of the instance-level offset at placement.
+    pub instance_sigma: f64,
+    /// Lognormal sigma of per-invocation duration noise.
+    pub invocation_sigma: f64,
+}
+
+impl Default for VariabilityConfig {
+    fn default() -> Self {
+        VariabilityConfig {
+            // Seven values cycled by day index; chosen so the week contains
+            // high-variability days (big Minos wins) and low-variability
+            // days (Minos ~ breakeven), as in the paper's Figs. 4–6.
+            node_sigma_by_day: vec![0.13, 0.16, 0.07, 0.10, 0.055, 0.09, 0.12],
+            day_mean_sigma: 0.015,
+            diurnal_amplitude: 0.0, // off for 30-min windows; ablations enable
+            diurnal_peak_hour: 3.0,
+            ou_theta: 0.8,
+            ou_sigma: 0.015,
+            instance_sigma: 0.03,
+            invocation_sigma: 0.02,
+        }
+    }
+}
+
+impl VariabilityConfig {
+    /// Node-base lognormal sigma for a given day index (cycles weekly).
+    pub fn node_sigma(&self, day: u32) -> f64 {
+        let v = &self.node_sigma_by_day;
+        v[day as usize % v.len()]
+    }
+
+    /// Sample a node base factor for `day`. Median 1.0 × day-level shift.
+    ///
+    /// We sample `exp(N(-sigma²/2, sigma))` so the *mean* (not just the
+    /// median) stays at ~1.0 × day_shift — otherwise higher-sigma days
+    /// would be systematically faster on average, conflating variability
+    /// with speed.
+    pub fn sample_node_factor(&self, day: u32, day_rng: &mut Rng, node_rng: &mut Rng) -> f64 {
+        let sigma = self.node_sigma(day);
+        let day_shift = 1.0 + self.day_mean_sigma * day_rng.normal();
+        let ln = node_rng.lognormal(-0.5 * sigma * sigma, sigma);
+        (ln * day_shift).clamp(0.4, 2.5)
+    }
+
+    /// Diurnal speed multiplier at a virtual time-of-day.
+    pub fn diurnal(&self, now: SimTime) -> f64 {
+        if self.diurnal_amplitude == 0.0 {
+            return 1.0;
+        }
+        let hours = now.as_secs() / 3600.0;
+        let phase = 2.0 * std::f64::consts::PI * (hours - self.diurnal_peak_hour) / 24.0;
+        1.0 + self.diurnal_amplitude * phase.cos()
+    }
+
+    /// Instance-level offset drawn once at placement.
+    pub fn sample_instance_offset(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(-0.5 * self.instance_sigma * self.instance_sigma, self.instance_sigma)
+    }
+
+    /// Per-invocation multiplicative noise on durations.
+    pub fn sample_invocation_noise(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(
+            -0.5 * self.invocation_sigma * self.invocation_sigma,
+            self.invocation_sigma,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::Summary;
+
+    #[test]
+    fn day_sigma_cycles() {
+        let c = VariabilityConfig::default();
+        assert_eq!(c.node_sigma(0), c.node_sigma(7));
+        assert_eq!(c.node_sigma(1), c.node_sigma(8));
+    }
+
+    #[test]
+    fn node_factors_have_unit_mean_and_target_cov() {
+        let c = VariabilityConfig { day_mean_sigma: 0.0, ..Default::default() };
+        for day in 0..7 {
+            let mut day_rng = Rng::new(100 + day as u64);
+            let mut node_rng = Rng::new(200 + day as u64);
+            let xs: Vec<f64> = (0..20_000)
+                .map(|_| c.sample_node_factor(day, &mut day_rng, &mut node_rng))
+                .collect();
+            let s = Summary::of(&xs).unwrap();
+            assert!((s.mean - 1.0).abs() < 0.01, "day {day} mean {}", s.mean);
+            let want = c.node_sigma(day);
+            assert!(
+                (s.cov() - want).abs() < 0.015,
+                "day {day} cov {} want {want}",
+                s.cov()
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_peaks_at_configured_hour() {
+        let c = VariabilityConfig {
+            diurnal_amplitude: 0.1,
+            diurnal_peak_hour: 3.0,
+            ..Default::default()
+        };
+        let at_peak = c.diurnal(SimTime::from_secs(3.0 * 3600.0));
+        let at_trough = c.diurnal(SimTime::from_secs(15.0 * 3600.0));
+        assert!((at_peak - 1.1).abs() < 1e-9);
+        assert!((at_trough - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_disabled_is_identity() {
+        let c = VariabilityConfig::default();
+        assert_eq!(c.diurnal(SimTime::from_secs(12.0 * 3600.0)), 1.0);
+    }
+
+    #[test]
+    fn noise_terms_center_on_one() {
+        let c = VariabilityConfig::default();
+        let mut rng = Rng::new(5);
+        let inst: Vec<f64> = (0..20_000).map(|_| c.sample_instance_offset(&mut rng)).collect();
+        let noise: Vec<f64> =
+            (0..20_000).map(|_| c.sample_invocation_noise(&mut rng)).collect();
+        assert!((Summary::of(&inst).unwrap().mean - 1.0).abs() < 0.01);
+        assert!((Summary::of(&noise).unwrap().mean - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn factors_stay_physical() {
+        let c = VariabilityConfig::default();
+        let mut a = Rng::new(6);
+        let mut b = Rng::new(7);
+        for day in 0..28 {
+            for _ in 0..1000 {
+                let f = c.sample_node_factor(day, &mut a, &mut b);
+                assert!((0.4..=2.5).contains(&f));
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Artifact discovery and fixture loading.
+//!
+//! `make artifacts` populates `artifacts/` with HLO text modules, raw-f32
+//! fixture tensors, and `meta.json` (shapes + oracle outputs). This module
+//! finds and validates them so the runtime and integration tests have one
+//! authoritative view.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Locations of the AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub linreg_hlo: PathBuf,
+    pub bench_hlo: PathBuf,
+    pub meta: Json,
+}
+
+impl ArtifactStore {
+    /// Discover artifacts under `dir` and validate `meta.json`.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let meta_text = fs::read_to_string(&meta_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                meta_path.display()
+            )
+        })?;
+        let meta = json::parse(&meta_text)
+            .map_err(|e| anyhow::anyhow!("parsing meta.json: {e}"))?;
+        let rel = |key: &str| -> Result<PathBuf> {
+            let name = meta
+                .get("artifacts")
+                .and_then(|a| a.get(key))
+                .and_then(Json::as_str)
+                .with_context(|| format!("meta.json missing artifacts.{key}"))?;
+            Ok(dir.join(name))
+        };
+        let store = ArtifactStore {
+            linreg_hlo: rel("linreg")?,
+            bench_hlo: rel("benchmark")?,
+            dir,
+            meta,
+        };
+        for p in [&store.linreg_hlo, &store.bench_hlo] {
+            if !p.exists() {
+                bail!("artifact {} missing — run `make artifacts`", p.display());
+            }
+        }
+        Ok(store)
+    }
+
+    /// Default location relative to the repo root / current directory.
+    pub fn discover_default() -> Result<ArtifactStore> {
+        for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(candidate).join("meta.json").exists() {
+                return ArtifactStore::discover(candidate);
+            }
+        }
+        ArtifactStore::discover("artifacts") // for the error message
+    }
+
+    /// Problem shapes recorded at lowering time.
+    pub fn n_days(&self) -> usize {
+        self.meta_num("n_days") as usize
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.meta_num("n_features") as usize
+    }
+
+    pub fn bench_dim(&self) -> usize {
+        self.meta_num("bench_dim") as usize
+    }
+
+    fn meta_num(&self, key: &str) -> f64 {
+        self.meta
+            .get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("meta.json missing numeric {key}"))
+    }
+
+    /// Load the baked fixture tensors + oracle outputs.
+    pub fn fixtures(&self) -> Result<Fixtures> {
+        let read = |name: &str| -> Result<Vec<f32>> { read_f32(&self.dir.join(name)) };
+        let oracle_pred = read("fixture_pred.f32")?;
+        let oracle_bench = read("fixture_bench_sum.f32")?;
+        Ok(Fixtures {
+            x: read("fixture_x.f32")?,
+            y: read("fixture_y.f32")?,
+            x_next: read("fixture_xnext.f32")?,
+            oracle_theta: read("fixture_theta.f32")?,
+            oracle_pred: *oracle_pred.first().context("empty fixture_pred")?,
+            bench_a: read("fixture_bench_a.f32")?,
+            bench_b: read("fixture_bench_b.f32")?,
+            oracle_bench_sum: *oracle_bench.first().context("empty bench_sum")?,
+        })
+    }
+}
+
+/// Fixed-seed inputs with Python-side (jnp oracle) expected outputs.
+#[derive(Debug, Clone)]
+pub struct Fixtures {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub x_next: Vec<f32>,
+    pub oracle_theta: Vec<f32>,
+    pub oracle_pred: f32,
+    pub bench_a: Vec<f32>,
+    pub bench_b: Vec<f32>,
+    pub oracle_bench_sum: f32,
+}
+
+/// Read a little-endian raw f32 file.
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes =
+        fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require `make artifacts`; they are skipped (not failed)
+    // when the artifacts are absent so `cargo test` works pre-build.
+    fn store() -> Option<ArtifactStore> {
+        ArtifactStore::discover_default().ok()
+    }
+
+    #[test]
+    fn discovers_and_validates() {
+        let Some(s) = store() else { return };
+        assert!(s.linreg_hlo.exists());
+        assert!(s.bench_hlo.exists());
+        assert_eq!(s.n_days(), 512);
+        assert_eq!(s.n_features(), 16);
+        assert_eq!(s.bench_dim(), 256);
+    }
+
+    #[test]
+    fn fixtures_have_consistent_shapes() {
+        let Some(s) = store() else { return };
+        let f = s.fixtures().unwrap();
+        assert_eq!(f.x.len(), s.n_days() * s.n_features());
+        assert_eq!(f.y.len(), s.n_days());
+        assert_eq!(f.x_next.len(), s.n_features());
+        assert_eq!(f.oracle_theta.len(), s.n_features());
+        assert_eq!(f.bench_a.len(), s.bench_dim() * s.bench_dim());
+        assert!(f.oracle_pred.is_finite());
+    }
+
+    #[test]
+    fn meta_pred_matches_fixture_file() {
+        let Some(s) = store() else { return };
+        let f = s.fixtures().unwrap();
+        let meta_pred = s
+            .meta
+            .get("fixtures")
+            .and_then(|m| m.get("pred"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((f.oracle_pred as f64 - meta_pred).abs() < 1e-3);
+    }
+
+    #[test]
+    fn missing_dir_is_a_clear_error() {
+        let err = ArtifactStore::discover("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,102 @@
+//! Timing anchors: tie the simulator's virtual durations to *real measured
+//! execution* of the identical HLO modules.
+//!
+//! The paper's durations are on GCF's 0.167-vCPU tier; our host CPU is much
+//! faster. We measure the real local wall-clock of the benchmark and
+//! analysis executables, then report the scale factor that maps local time
+//! onto the paper's regime (Fig. 4 shows ~2.0–2.5 s regression steps). The
+//! simulator uses the paper-regime anchors; examples that execute for real
+//! report both numbers.
+
+use anyhow::Result;
+
+use super::engine::Runtime;
+use crate::stats::descriptive;
+use crate::util::prng::Rng;
+
+/// Measured local timings and derived paper-regime anchors.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Median local wall-clock of one benchmark execution, ms.
+    pub local_bench_ms: f64,
+    /// Median local wall-clock of one analysis execution, ms.
+    pub local_analysis_ms: f64,
+    /// Anchor: benchmark duration on a nominal paper-tier instance, ms.
+    pub paper_bench_ms: f64,
+    /// Anchor: analysis duration on a nominal paper-tier instance, ms.
+    pub paper_analysis_ms: f64,
+    /// Derived local→paper slowdown factor (how much slower 0.167 vCPU is).
+    pub tier_scale: f64,
+}
+
+/// The paper-regime anchors (from Fig. 4's y-range and the need for the
+/// benchmark to hide inside the ~500 ms download, §II-C).
+pub const PAPER_ANALYSIS_MS: f64 = 2_300.0;
+pub const PAPER_BENCH_MS: f64 = 350.0;
+
+impl Calibration {
+    /// Measure `reps` executions of each module and derive anchors.
+    pub fn measure(rt: &Runtime, reps: usize) -> Result<Calibration> {
+        assert!(reps >= 3, "need a few reps for a stable median");
+        let mut rng = Rng::new(0xCA11B);
+        let dim = rt.bench_dim();
+        let a: Vec<f32> = (0..dim * dim).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..dim * dim).map(|_| rng.normal() as f32).collect();
+        let nd = rt.n_days();
+        let nf = rt.n_features();
+        let x: Vec<f32> = (0..nd * nf).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..nd).map(|_| rng.normal() as f32).collect();
+        let xn: Vec<f32> = (0..nf).map(|_| rng.normal() as f32).collect();
+
+        // Warm-up (first execution includes one-time lazy setup).
+        rt.exec_benchmark(&a, &b)?;
+        rt.exec_linreg(&x, &y, &xn)?;
+
+        let mut bench_ms = Vec::with_capacity(reps);
+        let mut analysis_ms = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            bench_ms.push(rt.exec_benchmark(&a, &b)?.elapsed.as_secs_f64() * 1e3);
+            analysis_ms.push(rt.exec_linreg(&x, &y, &xn)?.elapsed.as_secs_f64() * 1e3);
+        }
+        let local_bench_ms = descriptive::median(&bench_ms);
+        let local_analysis_ms = descriptive::median(&analysis_ms);
+        Ok(Calibration {
+            local_bench_ms,
+            local_analysis_ms,
+            paper_bench_ms: PAPER_BENCH_MS,
+            paper_analysis_ms: PAPER_ANALYSIS_MS,
+            tier_scale: PAPER_ANALYSIS_MS / local_analysis_ms.max(1e-6),
+        })
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "local bench {:.3} ms, local analysis {:.3} ms; \
+             paper-tier anchors: bench {:.0} ms, analysis {:.0} ms \
+             (tier scale ×{:.0})",
+            self.local_bench_ms,
+            self.local_analysis_ms,
+            self.paper_bench_ms,
+            self.paper_analysis_ms,
+            self.tier_scale
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactStore;
+
+    #[test]
+    fn calibration_produces_positive_anchors() {
+        let Ok(store) = ArtifactStore::discover_default() else { return };
+        let rt =
+            Runtime::load(&store).expect("artifacts present but failed to load/compile");
+        let c = Calibration::measure(&rt, 3).unwrap();
+        assert!(c.local_bench_ms > 0.0);
+        assert!(c.local_analysis_ms > 0.0);
+        assert!(c.tier_scale > 1.0, "host should be faster than 0.167 vCPU");
+        assert!(c.report().contains("paper-tier"));
+    }
+}

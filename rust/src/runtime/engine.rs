@@ -1,0 +1,205 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate: one CPU client, one compiled executable per HLO
+//! artifact, typed execute helpers that move f32 slices in and out. The
+//! artifacts are lowered with `return_tuple=True`, so outputs decompose
+//! with `to_tupleN`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::artifacts::ArtifactStore;
+
+/// Output of one weather-analysis execution.
+#[derive(Debug, Clone)]
+pub struct LinregOutput {
+    pub theta: Vec<f32>,
+    pub prediction: f32,
+    /// Wall-clock of the `execute` call (compile-side timing anchor).
+    pub elapsed: Duration,
+}
+
+/// Output of one benchmark execution.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOutput {
+    pub checksum: f32,
+    pub elapsed: Duration,
+}
+
+/// Compiled executables bound to a PJRT CPU client.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    linreg: xla::PjRtLoadedExecutable,
+    bench: xla::PjRtLoadedExecutable,
+    n_days: usize,
+    n_features: usize,
+    bench_dim: usize,
+    /// Cumulative number of executions (metrics).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("n_days", &self.n_days)
+            .field("n_features", &self.n_features)
+            .field("bench_dim", &self.bench_dim)
+            .field("executions", &self.executions.get())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Compile both artifacts on a fresh CPU client.
+    pub fn load(store: &ArtifactStore) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        Ok(Runtime {
+            linreg: compile(&store.linreg_hlo)?,
+            bench: compile(&store.bench_hlo)?,
+            n_days: store.n_days(),
+            n_features: store.n_features(),
+            bench_dim: store.bench_dim(),
+            client,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load from the default artifact location.
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&ArtifactStore::discover_default()?)
+    }
+
+    pub fn n_days(&self) -> usize {
+        self.n_days
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn bench_dim(&self) -> usize {
+        self.bench_dim
+    }
+
+    /// Execute the weather analysis: OLS fit + next-day prediction.
+    ///
+    /// `x` is row-major `(n_days, n_features)`, `y` is `(n_days,)`,
+    /// `x_next` is `(n_features,)`.
+    pub fn exec_linreg(&self, x: &[f32], y: &[f32], x_next: &[f32]) -> Result<LinregOutput> {
+        anyhow::ensure!(
+            x.len() == self.n_days * self.n_features,
+            "x has {} elements, want {}",
+            x.len(),
+            self.n_days * self.n_features
+        );
+        anyhow::ensure!(y.len() == self.n_days, "y has {} elements", y.len());
+        anyhow::ensure!(
+            x_next.len() == self.n_features,
+            "x_next has {} elements",
+            x_next.len()
+        );
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[self.n_days as i64, self.n_features as i64])?;
+        let ly = xla::Literal::vec1(y);
+        let ln = xla::Literal::vec1(x_next);
+        let start = Instant::now();
+        let result = self.linreg.execute::<xla::Literal>(&[lx, ly, ln])?[0][0]
+            .to_literal_sync()?;
+        let elapsed = start.elapsed();
+        self.executions.set(self.executions.get() + 1);
+        let (theta_lit, pred_lit) = result.to_tuple2()?;
+        Ok(LinregOutput {
+            theta: theta_lit.to_vec::<f32>()?,
+            prediction: pred_lit.to_vec::<f32>()?[0],
+            elapsed,
+        })
+    }
+
+    /// Execute the cold-start benchmark (tiled Pallas matmul checksum).
+    pub fn exec_benchmark(&self, a: &[f32], b: &[f32]) -> Result<BenchOutput> {
+        let n = self.bench_dim * self.bench_dim;
+        anyhow::ensure!(a.len() == n && b.len() == n, "benchmark inputs must be {n}");
+        let la = xla::Literal::vec1(a)
+            .reshape(&[self.bench_dim as i64, self.bench_dim as i64])?;
+        let lb = xla::Literal::vec1(b)
+            .reshape(&[self.bench_dim as i64, self.bench_dim as i64])?;
+        let start = Instant::now();
+        let result =
+            self.bench.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let elapsed = start.elapsed();
+        self.executions.set(self.executions.get() + 1);
+        let checksum_lit = result.to_tuple1()?;
+        Ok(BenchOutput { checksum: checksum_lit.to_vec::<f32>()?[0], elapsed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactStore;
+
+    fn runtime() -> Option<(Runtime, ArtifactStore)> {
+        // Missing artifacts => skip; broken artifacts must fail loudly.
+        let store = ArtifactStore::discover_default().ok()?;
+        let rt =
+            Runtime::load(&store).expect("artifacts present but failed to load/compile");
+        Some((rt, store))
+    }
+
+    #[test]
+    fn linreg_matches_python_oracle() {
+        let Some((rt, store)) = runtime() else { return };
+        let f = store.fixtures().unwrap();
+        let out = rt.exec_linreg(&f.x, &f.y, &f.x_next).unwrap();
+        assert!(
+            (out.prediction - f.oracle_pred).abs() < 1e-2,
+            "prediction {} vs oracle {}",
+            out.prediction,
+            f.oracle_pred
+        );
+        for (i, (got, want)) in out.theta.iter().zip(&f.oracle_theta).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-2 * want.abs().max(1.0),
+                "theta[{i}]: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn benchmark_matches_python_oracle() {
+        let Some((rt, store)) = runtime() else { return };
+        let f = store.fixtures().unwrap();
+        let out = rt.exec_benchmark(&f.bench_a, &f.bench_b).unwrap();
+        let rel = (out.checksum - f.oracle_bench_sum).abs()
+            / f.oracle_bench_sum.abs().max(1.0);
+        assert!(rel < 1e-3, "checksum {} vs {}", out.checksum, f.oracle_bench_sum);
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let Some((rt, _)) = runtime() else { return };
+        assert!(rt.exec_linreg(&[0.0; 3], &[0.0; 512], &[0.0; 16]).is_err());
+        assert!(rt.exec_benchmark(&[0.0; 4], &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn execution_counter_increments() {
+        let Some((rt, store)) = runtime() else { return };
+        let f = store.fixtures().unwrap();
+        let before = rt.executions.get();
+        rt.exec_benchmark(&f.bench_a, &f.bench_b).unwrap();
+        assert_eq!(rt.executions.get(), before + 1);
+    }
+}

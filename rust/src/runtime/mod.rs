@@ -1,0 +1,15 @@
+//! XLA/PJRT runtime: loads the AOT-lowered HLO artifacts and executes them
+//! on the request path.
+//!
+//! This is the boundary between the Rust coordinator (L3) and the JAX/
+//! Pallas layers (L2/L1): `python/compile/aot.py` lowers the weather model
+//! and the benchmark kernel to HLO **text** once at build time
+//! (`make artifacts`); this module compiles those artifacts with the PJRT
+//! CPU client and runs them with zero Python anywhere near the hot path.
+
+pub mod artifacts;
+pub mod calibrate;
+pub mod engine;
+
+pub use artifacts::{ArtifactStore, Fixtures};
+pub use engine::Runtime;

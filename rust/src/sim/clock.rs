@@ -1,0 +1,78 @@
+//! Virtual time. Milliseconds are the paper's billing granularity unit;
+//! we track microseconds internally so sub-millisecond scheduling (e.g.
+//! judging immediately after a benchmark) stays strictly ordered.
+
+/// A point in virtual time, in microseconds since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_ms(ms: f64) -> SimTime {
+        debug_assert!(ms >= 0.0, "negative duration {ms}");
+        SimTime((ms * 1_000.0).round() as u64)
+    }
+
+    pub fn from_secs(s: f64) -> SimTime {
+        SimTime::from_ms(s * 1_000.0)
+    }
+
+    pub fn as_ms(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    /// Advance by a duration in ms.
+    pub fn plus_ms(self, ms: f64) -> SimTime {
+        SimTime(self.0 + SimTime::from_ms(ms).0)
+    }
+
+    /// Duration since `earlier`, in ms (saturating).
+    pub fn ms_since(self, earlier: SimTime) -> f64 {
+        (self.0.saturating_sub(earlier.0)) as f64 / 1_000.0
+    }
+}
+
+impl std::fmt::Display for SimTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", crate::util::timefmt::hms_ms(self.0 / 1_000))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        let t = SimTime::from_ms(1_234.567);
+        assert!((t.as_ms() - 1_234.567).abs() < 1e-3);
+        assert!((SimTime::from_secs(2.0).as_secs() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::from_ms(100.0).plus_ms(50.5);
+        assert!((t.as_ms() - 150.5).abs() < 1e-3);
+        assert!((t.ms_since(SimTime::from_ms(100.0)) - 50.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn saturating_since() {
+        assert_eq!(SimTime::ZERO.ms_since(SimTime::from_ms(10.0)), 0.0);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime::from_ms(1.0) < SimTime::from_ms(1.001));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(SimTime::from_secs(61.0).to_string(), "0:01:01.000");
+    }
+}

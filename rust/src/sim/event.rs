@@ -1,0 +1,181 @@
+//! The event queue: a binary heap ordered by (time, sequence number).
+//!
+//! The sequence number makes simultaneous events FIFO, which is what keeps
+//! paired Minos/baseline runs deterministic and reproducible across runs.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::clock::SimTime;
+
+/// A time-ordered queue of domain events `E`.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+    now: SimTime,
+    popped: u64,
+    pushed: u64,
+}
+
+#[derive(Debug)]
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+            popped: 0,
+            pushed: 0,
+        }
+    }
+
+    /// Current virtual time (the time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at`. Panics if `at` is in the
+    /// past — scheduling into the past is always a simulation bug.
+    pub fn schedule(&mut self, at: SimTime, event: E) {
+        assert!(
+            at >= self.now,
+            "scheduling into the past: at={at:?} now={:?}",
+            self.now
+        );
+        self.seq += 1;
+        self.pushed += 1;
+        self.heap.push(Reverse(Entry { time: at, seq: self.seq, event }));
+    }
+
+    /// Schedule `event` after a delay in milliseconds from now.
+    pub fn schedule_in_ms(&mut self, delay_ms: f64, event: E) {
+        let at = self.now.plus_ms(delay_ms);
+        self.schedule(at, event);
+    }
+
+    /// Pop the next event, advancing the clock. None when drained.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let Reverse(entry) = self.heap.pop()?;
+        debug_assert!(entry.time >= self.now, "time went backwards");
+        self.now = entry.time;
+        self.popped += 1;
+        Some((entry.time, entry.event))
+    }
+
+    /// Peek the time of the next event without advancing.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// (pushed, popped) counters — used by throughput benchmarks.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.pushed, self.popped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_ms(30.0), "c");
+        q.schedule(SimTime::from_ms(10.0), "a");
+        q.schedule(SimTime::from_ms(20.0), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn simultaneous_events_are_fifo() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_ms(5.0);
+        for i in 0..100 {
+            q.schedule(t, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_in_ms(10.0, ());
+        q.schedule_in_ms(5.0, ());
+        let mut last = SimTime::ZERO;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now(), SimTime::from_ms(10.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn rejects_past_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_ms(10.0), ());
+        q.pop();
+        q.schedule(SimTime::from_ms(5.0), ());
+    }
+
+    #[test]
+    fn relative_scheduling_uses_now() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_ms(100.0), 1);
+        q.pop();
+        q.schedule_in_ms(50.0, 2);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime::from_ms(150.0));
+    }
+
+    #[test]
+    fn counters_track() {
+        let mut q = EventQueue::new();
+        q.schedule_in_ms(1.0, ());
+        q.schedule_in_ms(2.0, ());
+        q.pop();
+        assert_eq!(q.counters(), (2, 1));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+    }
+}

@@ -1,0 +1,15 @@
+//! Discrete-event simulation substrate.
+//!
+//! The FaaS platform, the Minos instance lifecycle, and the virtual-user
+//! workload all run on a single deterministic virtual clock. The engine is
+//! deliberately minimal: a monotone event queue ([`event::EventQueue`]) that
+//! the experiment runner drains, matching on a domain event enum. This keeps
+//! all domain logic in one place (`experiment::runner`) and the substrate
+//! free of borrow gymnastics.
+
+pub mod clock;
+pub mod event;
+pub mod trace;
+
+pub use clock::SimTime;
+pub use event::EventQueue;

@@ -1,0 +1,126 @@
+//! Optional event tracing for debugging and for the Fig. 7 time series.
+//!
+//! A `Trace` is a bounded ring of timestamped strings plus typed counters;
+//! cheap enough to leave enabled in experiments (it only formats when the
+//! verbosity admits the record).
+
+use super::clock::SimTime;
+use std::collections::BTreeMap;
+
+/// Trace verbosity levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off,
+    Summary,
+    Detail,
+}
+
+/// Bounded simulation trace.
+#[derive(Debug)]
+pub struct Trace {
+    level: Level,
+    cap: usize,
+    records: Vec<(SimTime, String)>,
+    dropped: u64,
+    counters: BTreeMap<&'static str, u64>,
+}
+
+impl Trace {
+    pub fn new(level: Level, cap: usize) -> Self {
+        Trace { level, cap, records: Vec::new(), dropped: 0, counters: BTreeMap::new() }
+    }
+
+    pub fn off() -> Self {
+        Trace::new(Level::Off, 0)
+    }
+
+    /// Record a detail-level message (lazily formatted).
+    pub fn detail(&mut self, at: SimTime, f: impl FnOnce() -> String) {
+        self.record(Level::Detail, at, f);
+    }
+
+    /// Record a summary-level message.
+    pub fn summary(&mut self, at: SimTime, f: impl FnOnce() -> String) {
+        self.record(Level::Summary, at, f);
+    }
+
+    fn record(&mut self, lvl: Level, at: SimTime, f: impl FnOnce() -> String) {
+        if self.level < lvl {
+            return;
+        }
+        if self.records.len() >= self.cap {
+            self.dropped += 1;
+            return;
+        }
+        self.records.push((at, f()));
+    }
+
+    /// Bump a named counter (always on — counters are O(1)).
+    pub fn count(&mut self, key: &'static str) {
+        *self.counters.entry(key).or_insert(0) += 1;
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn records(&self) -> &[(SimTime, String)] {
+        &self.records
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (t, msg) in &self.records {
+            out.push_str(&format!("[{t}] {msg}\n"));
+        }
+        for (k, v) in &self.counters {
+            out.push_str(&format!("# {k} = {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_level() {
+        let mut t = Trace::new(Level::Summary, 10);
+        t.summary(SimTime::ZERO, || "kept".into());
+        t.detail(SimTime::ZERO, || "dropped".into());
+        assert_eq!(t.records().len(), 1);
+    }
+
+    #[test]
+    fn bounded_capacity() {
+        let mut t = Trace::new(Level::Detail, 2);
+        for i in 0..5 {
+            t.detail(SimTime::ZERO, || format!("r{i}"));
+        }
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn counters_always_work() {
+        let mut t = Trace::off();
+        t.count("cold_starts");
+        t.count("cold_starts");
+        assert_eq!(t.counter("cold_starts"), 2);
+        assert_eq!(t.counter("missing"), 0);
+    }
+
+    #[test]
+    fn render_contains_records() {
+        let mut t = Trace::new(Level::Detail, 8);
+        t.detail(SimTime::from_ms(1.0), || "hello".into());
+        t.count("x");
+        let s = t.render();
+        assert!(s.contains("hello") && s.contains("# x = 1"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Bootstrap confidence intervals for experiment reporting.
+//!
+//! The paper reports point estimates per day; our harness additionally
+//! attaches percentile-bootstrap CIs so the "who wins" claims in
+//! EXPERIMENTS.md are backed by uncertainty estimates.
+
+use crate::stats::descriptive;
+use crate::util::prng::Rng;
+
+/// Percentile-bootstrap confidence interval for a statistic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ci {
+    pub point: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Bootstrap CI for an arbitrary statistic of one sample.
+pub fn bootstrap_ci(
+    xs: &[f64],
+    stat: impl Fn(&[f64]) -> f64,
+    n_resamples: usize,
+    level: f64,
+    rng: &mut Rng,
+) -> Ci {
+    assert!(!xs.is_empty() && n_resamples > 0 && (0.0..1.0).contains(&(1.0 - level)));
+    let point = stat(xs);
+    let mut stats = Vec::with_capacity(n_resamples);
+    let mut resample = vec![0.0; xs.len()];
+    for _ in 0..n_resamples {
+        for slot in resample.iter_mut() {
+            *slot = xs[rng.below(xs.len())];
+        }
+        stats.push(stat(&resample));
+    }
+    stats.sort_by(|a, b| a.partial_cmp(b).expect("NaN in bootstrap stats"));
+    let alpha = (1.0 - level) / 2.0;
+    Ci {
+        point,
+        lo: descriptive::percentile_of_sorted(&stats, alpha * 100.0),
+        hi: descriptive::percentile_of_sorted(&stats, (1.0 - alpha) * 100.0),
+    }
+}
+
+/// CI for the relative improvement `(a - b) / a` (e.g. baseline vs Minos
+/// mean durations), resampling both groups independently.
+pub fn improvement_ci(
+    baseline: &[f64],
+    treatment: &[f64],
+    n_resamples: usize,
+    level: f64,
+    rng: &mut Rng,
+) -> Ci {
+    assert!(!baseline.is_empty() && !treatment.is_empty());
+    let imp = |b: &[f64], t: &[f64]| {
+        let mb = descriptive::mean(b);
+        (mb - descriptive::mean(t)) / mb * 100.0
+    };
+    let point = imp(baseline, treatment);
+    let mut stats = Vec::with_capacity(n_resamples);
+    let mut rb = vec![0.0; baseline.len()];
+    let mut rt = vec![0.0; treatment.len()];
+    for _ in 0..n_resamples {
+        for slot in rb.iter_mut() {
+            *slot = baseline[rng.below(baseline.len())];
+        }
+        for slot in rt.iter_mut() {
+            *slot = treatment[rng.below(treatment.len())];
+        }
+        stats.push(imp(&rb, &rt));
+    }
+    stats.sort_by(|a, b| a.partial_cmp(b).expect("NaN"));
+    let alpha = (1.0 - level) / 2.0;
+    Ci {
+        point,
+        lo: descriptive::percentile_of_sorted(&stats, alpha * 100.0),
+        hi: descriptive::percentile_of_sorted(&stats, (1.0 - alpha) * 100.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci_brackets_point_for_mean() {
+        let mut rng = Rng::new(10);
+        let xs: Vec<f64> = (0..500).map(|_| rng.normal_ms(10.0, 2.0)).collect();
+        let ci = bootstrap_ci(&xs, descriptive::mean, 500, 0.95, &mut rng);
+        assert!(ci.lo <= ci.point && ci.point <= ci.hi);
+        assert!((ci.point - 10.0).abs() < 0.5);
+        assert!(ci.hi - ci.lo < 1.0, "CI too wide: {ci:?}");
+    }
+
+    #[test]
+    fn ci_narrows_with_sample_size() {
+        let mut rng = Rng::new(11);
+        let small: Vec<f64> = (0..30).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let large: Vec<f64> = (0..3000).map(|_| rng.normal_ms(0.0, 1.0)).collect();
+        let ci_s = bootstrap_ci(&small, descriptive::mean, 400, 0.95, &mut rng);
+        let ci_l = bootstrap_ci(&large, descriptive::mean, 400, 0.95, &mut rng);
+        assert!(ci_l.hi - ci_l.lo < ci_s.hi - ci_s.lo);
+    }
+
+    #[test]
+    fn improvement_detects_real_difference() {
+        let mut rng = Rng::new(12);
+        let base: Vec<f64> = (0..800).map(|_| rng.normal_ms(100.0, 5.0)).collect();
+        let faster: Vec<f64> = (0..800).map(|_| rng.normal_ms(92.0, 5.0)).collect();
+        let ci = improvement_ci(&base, &faster, 400, 0.95, &mut rng);
+        assert!(ci.point > 6.0 && ci.point < 10.0, "{ci:?}");
+        assert!(ci.lo > 5.0, "improvement CI should exclude zero: {ci:?}");
+    }
+
+    #[test]
+    fn improvement_near_zero_for_identical() {
+        let mut rng = Rng::new(13);
+        let xs: Vec<f64> = (0..500).map(|_| rng.normal_ms(50.0, 3.0)).collect();
+        let ci = improvement_ci(&xs, &xs, 300, 0.95, &mut rng);
+        assert!(ci.lo <= 0.0 && ci.hi >= 0.0, "{ci:?}");
+    }
+}

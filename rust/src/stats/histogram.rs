@@ -1,0 +1,141 @@
+//! Fixed-bucket latency histogram for metrics reporting.
+
+/// Histogram over `[lo, hi)` with uniform buckets plus under/overflow.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
+        assert!(hi > lo && n_buckets > 0);
+        Histogram {
+            lo,
+            hi,
+            buckets: vec![0; n_buckets],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let w = (self.hi - self.lo) / n as f64;
+            let idx = (((x - self.lo) / w) as usize).min(n - 1);
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (midpoint convention).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.lo;
+        }
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.lo + w * (i as f64 + 0.5);
+            }
+        }
+        self.hi
+    }
+
+    /// Render a compact ASCII sparkline-style report.
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.buckets.iter().copied().max().unwrap_or(1).max(1);
+        let w = (self.hi - self.lo) / self.buckets.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).ceil() as usize);
+            out.push_str(&format!(
+                "{:>10.1} - {:<10.1} |{:<w$}| {}\n",
+                self.lo + w * i as f64,
+                self.lo + w * (i + 1) as f64,
+                bar,
+                c,
+                w = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_mean() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn under_over_flow() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.record(-5.0);
+        h.record(2.0);
+        h.record(0.5);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.0), 0.0); // underflow clamps to lo
+    }
+
+    #[test]
+    fn quantile_approximates() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..1000 {
+            h.record((i % 100) as f64);
+        }
+        let med = h.quantile(0.5);
+        assert!((med - 50.0).abs() < 2.0, "median {med}");
+    }
+
+    #[test]
+    fn ascii_renders_nonempty() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        h.record(1.0);
+        h.record(1.5);
+        assert!(h.ascii(20).contains('#'));
+    }
+}

@@ -1,0 +1,19 @@
+//! Statistics substrate.
+//!
+//! The paper needs both *offline* statistics (pre-testing computes a
+//! percentile of benchmark scores, §II-B-a; the evaluation reports medians,
+//! means, and per-day aggregates) and *online* statistics (§IV proposes live
+//! elysium-threshold recalculation using online mean/variance — Welford,
+//! ref. [13] — and online percentile estimation — the P² algorithm,
+//! ref. [12]). Both are implemented here and cross-validated against each
+//! other in tests.
+
+pub mod bootstrap;
+pub mod descriptive;
+pub mod histogram;
+pub mod p2;
+pub mod welford;
+
+pub use descriptive::{mean, median, percentile, std_dev, Summary};
+pub use p2::P2Quantile;
+pub use welford::Welford;

@@ -1,0 +1,218 @@
+//! P² online quantile estimation (Jain & Chlamtac 1985 — paper §IV ref. [12]).
+//!
+//! Estimates a single quantile with O(1) memory using five markers whose
+//! heights are adjusted by piecewise-parabolic interpolation. The paper's
+//! future-work section proposes exactly this for live elysium-threshold
+//! recalculation when storing all past benchmark results is infeasible.
+
+/// Online estimator for quantile `p` (0 < p < 1).
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights (estimated values).
+    q: [f64; 5],
+    /// Marker positions (1-based observation ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+    /// First five observations, collected before the markers initialize.
+    init: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1), got {p}");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            init: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Incorporate one observation.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                self.init
+                    .sort_by(|a, b| a.partial_cmp(b).expect("NaN in P2 input"));
+                for i in 0..5 {
+                    self.q[i] = self.init[i];
+                }
+            }
+            return;
+        }
+
+        // Find cell k such that q[k] <= x < q[k+1]; adjust extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.q[i] && x < self.q[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // Adjust interior markers if they drifted off their desired position.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (qm, q0, qp) = (self.q[i - 1], self.q[i], self.q[i + 1]);
+        let (nm, n0, np) = (self.n[i - 1], self.n[i], self.n[i + 1]);
+        q0 + d / (np - nm)
+            * ((n0 - nm + d) * (qp - q0) / (np - n0)
+                + (np - n0 - d) * (q0 - qm) / (n0 - nm))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current quantile estimate. For fewer than five observations, falls
+    /// back to the exact small-sample percentile.
+    pub fn estimate(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if self.init.len() < 5 && self.count <= 5 {
+            let mut xs = self.init.clone();
+            xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN"));
+            return crate::stats::descriptive::percentile_of_sorted(&xs, self.p * 100.0);
+        }
+        self.q[2]
+    }
+
+    /// Estimate is always bracketed by the observed extremes.
+    pub fn min_seen(&self) -> f64 {
+        if self.init.len() < 5 {
+            self.init.iter().copied().fold(f64::INFINITY, f64::min)
+        } else {
+            self.q[0]
+        }
+    }
+
+    pub fn max_seen(&self) -> f64 {
+        if self.init.len() < 5 {
+            self.init.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+        } else {
+            self.q[4]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::percentile;
+    use crate::util::prng::Rng;
+
+    fn check_against_exact(p: f64, gen: impl Fn(&mut Rng) -> f64, tol_rel: f64) {
+        let mut rng = Rng::new(33);
+        let mut est = P2Quantile::new(p);
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            let x = gen(&mut rng);
+            est.push(x);
+            xs.push(x);
+        }
+        let exact = percentile(&xs, p * 100.0);
+        let got = est.estimate();
+        let err = (got - exact).abs() / exact.abs().max(1e-9);
+        assert!(err < tol_rel, "p={p}: exact {exact}, P2 {got}, rel err {err}");
+    }
+
+    #[test]
+    fn median_of_uniform() {
+        check_against_exact(0.5, |r| r.f64() * 10.0, 0.02);
+    }
+
+    #[test]
+    fn p60_of_lognormal() {
+        // The paper's elysium threshold is the 60th percentile of benchmark
+        // durations; lognormal matches the perf-variability model.
+        check_against_exact(0.60, |r| 350.0 * r.lognormal(0.0, 0.12), 0.02);
+    }
+
+    #[test]
+    fn p95_of_normal() {
+        check_against_exact(0.95, |r| r.normal_ms(100.0, 15.0), 0.03);
+    }
+
+    #[test]
+    fn small_sample_exact_fallback() {
+        let mut est = P2Quantile::new(0.5);
+        for x in [5.0, 1.0, 3.0] {
+            est.push(x);
+        }
+        assert_eq!(est.estimate(), 3.0);
+    }
+
+    #[test]
+    fn estimate_bracketed_by_extremes() {
+        let mut rng = Rng::new(4);
+        let mut est = P2Quantile::new(0.6);
+        for _ in 0..1_000 {
+            est.push(rng.lognormal(0.0, 0.5));
+        }
+        let e = est.estimate();
+        assert!(e >= est.min_seen() && e <= est.max_seen());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_invalid_quantile() {
+        P2Quantile::new(1.0);
+    }
+
+    #[test]
+    fn constant_stream() {
+        let mut est = P2Quantile::new(0.6);
+        for _ in 0..100 {
+            est.push(7.0);
+        }
+        assert!((est.estimate() - 7.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Welford's online mean/variance (paper §IV, ref. [13]).
+//!
+//! The online-threshold service (`coordinator::online`) uses this to track
+//! the benchmark-score distribution without storing past results — exactly
+//! the constraint the paper describes for large-scale deployments.
+
+/// Online mean and variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Incorporate one observation. O(1) time, O(1) memory.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        let delta2 = x - self.mean;
+        self.m2 += delta * delta2;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1); 0.0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Merge another accumulator (parallel-streams variant of the update).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n_total = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n_total as f64;
+        self.m2 += other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n_total as f64;
+        self.n = n_total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_exact_computation() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..5_000).map(|_| rng.lognormal(0.0, 0.3)).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - descriptive::mean(&xs)).abs() < 1e-10);
+        assert!((w.std_dev() - descriptive::std_dev(&xs)).abs() < 1e-9);
+        assert_eq!(w.count(), 5_000);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut w = Welford::new();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.variance(), 0.0);
+        w.push(3.5);
+        assert_eq!(w.mean(), 3.5);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..1_000).map(|_| rng.normal_ms(5.0, 2.0)).collect();
+        let (a_half, b_half) = xs.split_at(400);
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        let mut seq = Welford::new();
+        for &x in a_half {
+            a.push(x);
+            seq.push(x);
+        }
+        for &x in b_half {
+            b.push(x);
+            seq.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), seq.count());
+        assert!((a.mean() - seq.mean()).abs() < 1e-10);
+        assert!((a.variance() - seq.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Welford::new();
+        a.push(1.0);
+        a.push(2.0);
+        let before = (a.count(), a.mean(), a.variance());
+        a.merge(&Welford::new());
+        assert_eq!(before, (a.count(), a.mean(), a.variance()));
+        let mut e = Welford::new();
+        e.merge(&a);
+        assert_eq!(e.count(), 2);
+    }
+
+    #[test]
+    fn numerically_stable_for_large_offsets() {
+        // Classic catastrophic-cancellation case for naive sum-of-squares.
+        let mut w = Welford::new();
+        for x in [1e9 + 4.0, 1e9 + 7.0, 1e9 + 13.0, 1e9 + 16.0] {
+            w.push(x);
+        }
+        assert!((w.variance() - 30.0).abs() < 1e-6, "var {}", w.variance());
+    }
+}

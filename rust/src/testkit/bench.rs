@@ -1,0 +1,74 @@
+//! Tiny timing harness for the `harness = false` bench binaries
+//! (criterion is not in the offline vendor set).
+//!
+//! Methodology: warm up, run `reps` timed iterations, report median and
+//! spread. Medians over ≥5 reps are stable enough for the regeneration
+//! benches (which measure seconds-long simulations) and for the hot-path
+//! microbenches (which loop millions of operations per iteration).
+
+use std::time::Instant;
+
+/// Result of one timed measurement.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub reps: usize,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>10.3} ms  (min {:>9.3}, max {:>9.3}, n={})",
+            self.name, self.median_ms, self.min_ms, self.max_ms, self.reps
+        )
+    }
+}
+
+/// Time `f` `reps` times (after one warm-up call) and report the median.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn time_median<T>(name: &str, reps: usize, mut f: impl FnMut() -> T) -> Timing {
+    assert!(reps >= 1);
+    std::hint::black_box(f()); // warm-up
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        samples.push(start.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        name: name.to_string(),
+        reps,
+        median_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+        max_ms: *samples.last().unwrap(),
+    }
+}
+
+/// Throughput helper: ops/second given a per-iteration op count.
+pub fn throughput(t: &Timing, ops_per_rep: u64) -> f64 {
+    ops_per_rep as f64 / (t.median_ms / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let t = time_median("noop-loop", 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(t.median_ms >= 0.0);
+        assert!(t.min_ms <= t.median_ms && t.median_ms <= t.max_ms);
+        assert!(t.report().contains("noop-loop"));
+        assert!(throughput(&t, 10_000) > 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Testing substrate: a dependency-free property-testing kit (the offline
+//! image vendors no proptest) and shared scenario builders.
+
+pub mod bench;
+pub mod prop;
+pub mod scenarios;

@@ -1,0 +1,38 @@
+//! Shared scenario builders for tests and property checks.
+
+use crate::coordinator::MinosConfig;
+use crate::experiment::config::ExperimentConfig;
+use crate::sim::SimTime;
+
+/// A fast experiment config (short horizon, fewer nodes) whose statistics
+/// are still meaningful; `seed` and `day` vary the platform lottery.
+pub fn quick_config(day: u32, seed: u64, horizon_s: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    cfg.vus.horizon = SimTime::from_secs(horizon_s);
+    cfg.platform.n_nodes = 100;
+    cfg
+}
+
+/// A Minos config with a concrete threshold (no pretest needed).
+pub fn minos_with_threshold(threshold_ms: f64) -> MinosConfig {
+    MinosConfig {
+        elysium_threshold_ms: threshold_ms,
+        ..MinosConfig::paper_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_work() {
+        let cfg = quick_config(3, 99, 60.0);
+        assert_eq!(cfg.day, 3);
+        assert_eq!(cfg.vus.horizon.as_secs(), 60.0);
+        let m = minos_with_threshold(123.0);
+        assert!(m.enabled);
+        assert_eq!(m.elysium_threshold_ms, 123.0);
+    }
+}

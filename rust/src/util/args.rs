@@ -1,0 +1,141 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args,
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    ///
+    /// Keys listed in `flag_names` are boolean flags and consume no value;
+    /// every other `--key` consumes the following token (or `=value`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    args.options.insert(body.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    /// Error if any option key is not in the allowed set (typo guard).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k}; known: {}", known.join(", ")));
+            }
+        }
+        for k in &self.flags {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--days", "7", "--seed=42", "run"], &[]);
+        assert_eq!(a.get("days"), Some("7"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flags_consume_no_value() {
+        let a = parse(&["--verbose", "pretest"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pretest"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--days".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_f64("sigma", 0.1).unwrap(), 0.1);
+        assert_eq!(a.get_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["--dyas", "7"], &[]);
+        assert!(a.check_known(&["days"]).is_err());
+        let b = parse(&["--days", "7"], &[]);
+        assert!(b.check_known(&["days"]).is_ok());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--days", "x"], &[]);
+        assert!(a.get_u64("days", 1).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Tiny CSV writer/reader used for experiment outputs and the synthetic
+//! weather dataset (the paper's function downloads a weather CSV; our
+//! workload generator produces structurally identical files).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// In-memory CSV table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics in debug builds on arity mismatch.
+    pub fn push(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len(), "CSV arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Append a row of display-formatted cells.
+    pub fn push_display<T: std::fmt::Display>(&mut self, row: &[T]) {
+        self.push(row.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+
+    /// Parse CSV text (quoted fields with `""` escapes supported).
+    pub fn parse(text: &str) -> Result<Csv, String> {
+        let mut lines = split_records(text);
+        if lines.is_empty() {
+            return Err("empty CSV".into());
+        }
+        let header = lines.remove(0);
+        let ncols = header.len();
+        for (i, row) in lines.iter().enumerate() {
+            if row.len() != ncols {
+                return Err(format!(
+                    "row {} has {} fields, header has {}",
+                    i + 1,
+                    row.len(),
+                    ncols
+                ));
+            }
+        }
+        Ok(Csv { header, rows: lines })
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// All values of a column parsed as f64.
+    pub fn col_f64(&self, name: &str) -> Result<Vec<f64>, String> {
+        let idx = self.col(name).ok_or_else(|| format!("no column {name:?}"))?;
+        self.rows
+            .iter()
+            .map(|r| r[idx].parse::<f64>().map_err(|e| format!("{name}: {e}")))
+            .collect()
+    }
+}
+
+fn write_row(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains([',', '"', '\n']) {
+            let _ = write!(out, "\"{}\"", cell.replace('"', "\"\""));
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+fn split_records(text: &str) -> Vec<Vec<String>> {
+    let mut records = Vec::new();
+    let mut field = String::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' if chars.peek() == Some(&'"') => {
+                    chars.next();
+                    field.push('"');
+                }
+                '"' => in_quotes = false,
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut row));
+                }
+                '\r' => {}
+                c => field.push(c),
+            }
+        }
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        records.push(row);
+    }
+    records
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut c = Csv::new(&["day", "temp"]);
+        c.push(vec!["1".into(), "12.5".into()]);
+        c.push(vec!["2".into(), "-3".into()]);
+        let back = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(back.header, vec!["day", "temp"]);
+        assert_eq!(back.rows.len(), 2);
+        assert_eq!(back.col_f64("temp").unwrap(), vec![12.5, -3.0]);
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let mut c = Csv::new(&["loc", "note"]);
+        c.push(vec!["Berlin, DE".into(), "said \"hi\"\nline2".into()]);
+        let back = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(back.rows[0][0], "Berlin, DE");
+        assert_eq!(back.rows[0][1], "said \"hi\"\nline2");
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(Csv::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn missing_column_errors() {
+        let c = Csv::parse("a\n1\n").unwrap();
+        assert!(c.col_f64("zzz").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained utility layer: deterministic PRNG, JSON/CSV I/O, CLI
+//! argument parsing, and time formatting.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure (no `rand`, `serde`, `clap`), so these are first-party — which
+//! the simulator wants anyway: splittable seeded randomness and stable,
+//! dependency-free serialization.
+
+pub mod args;
+pub mod csvio;
+pub mod json;
+pub mod plot;
+pub mod prng;
+pub mod timefmt;

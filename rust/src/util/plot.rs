@@ -1,0 +1,100 @@
+//! Terminal line plots for the figure reports (no plotting deps offline;
+//! the CSVs in `results/` feed real plotting tools, this renders the same
+//! series inline for quick inspection).
+
+/// Render one or more named series as an ASCII line chart.
+///
+/// All series share the x grid of the first series; y is auto-scaled over
+/// the union of values. Width/height are the plot area in characters.
+pub fn line_chart(
+    series: &[(&str, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(width >= 10 && height >= 4);
+    let all: Vec<(f64, f64)> =
+        series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let (mut x_lo, mut x_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_lo, mut y_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x_lo = x_lo.min(x);
+        x_hi = x_hi.max(x);
+        y_lo = y_lo.min(y);
+        y_hi = y_hi.max(y);
+    }
+    if (y_hi - y_lo).abs() < 1e-12 {
+        y_hi = y_lo + 1.0;
+    }
+    if (x_hi - x_lo).abs() < 1e-12 {
+        x_hi = x_lo + 1.0;
+    }
+
+    let marks = ['*', '+', 'o', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in *pts {
+            let cx = ((x - x_lo) / (x_hi - x_lo) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y_lo) / (y_hi - y_lo) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            let col = cx.min(width - 1);
+            // Later series overwrite earlier ones where they collide.
+            grid[row][col] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let y_val = y_hi - (y_hi - y_lo) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{y_val:>9.2} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>9}  {:<w$.0}{:>8.0}\n",
+        "",
+        x_lo,
+        x_hi,
+        w = width - 8
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    out.push_str(&format!("{:>9}  {}\n", "", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let a: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 13.5)).collect();
+        let b: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 12.5 + 3.0 / (i + 1) as f64)).collect();
+        let s = line_chart(&[("baseline", &a), ("minos", &b)], 60, 12);
+        assert!(s.contains('*') && s.contains('+'));
+        assert!(s.contains("baseline") && s.contains("minos"));
+        assert!(s.lines().count() >= 14);
+    }
+
+    #[test]
+    fn handles_empty_and_flat() {
+        assert_eq!(line_chart(&[("x", &[])], 20, 5), "(no data)\n");
+        let flat = [(0.0, 1.0), (1.0, 1.0)];
+        let s = line_chart(&[("flat", &flat)], 20, 5);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_tiny_canvas() {
+        line_chart(&[("x", &[(0.0, 0.0)])], 2, 2);
+    }
+}

@@ -1,0 +1,52 @@
+//! Formatting helpers for simulation timestamps and durations.
+
+/// Format milliseconds as `h:mm:ss.mmm` (stable width for logs).
+pub fn hms_ms(ms: u64) -> String {
+    let total_s = ms / 1000;
+    let frac = ms % 1000;
+    let h = total_s / 3600;
+    let m = (total_s % 3600) / 60;
+    let s = total_s % 60;
+    format!("{h}:{m:02}:{s:02}.{frac:03}")
+}
+
+/// Human-scale duration: picks ms / s / min, 1 decimal.
+pub fn human_duration_ms(ms: f64) -> String {
+    if ms < 1_000.0 {
+        format!("{ms:.1} ms")
+    } else if ms < 120_000.0 {
+        format!("{:.2} s", ms / 1000.0)
+    } else {
+        format!("{:.1} min", ms / 60_000.0)
+    }
+}
+
+/// Percentage with sign, 1 decimal: `+7.3%` / `-0.9%`.
+pub fn signed_pct(x: f64) -> String {
+    format!("{}{:.1}%", if x >= 0.0 { "+" } else { "" }, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hms_formats() {
+        assert_eq!(hms_ms(0), "0:00:00.000");
+        assert_eq!(hms_ms(61_250), "0:01:01.250");
+        assert_eq!(hms_ms(3_600_000 + 123), "1:00:00.123");
+    }
+
+    #[test]
+    fn human_durations() {
+        assert_eq!(human_duration_ms(0.5), "0.5 ms");
+        assert_eq!(human_duration_ms(2_300.0), "2.30 s");
+        assert_eq!(human_duration_ms(1_800_000.0), "30.0 min");
+    }
+
+    #[test]
+    fn signed_percentages() {
+        assert_eq!(signed_pct(7.3), "+7.3%");
+        assert_eq!(signed_pct(-0.9), "-0.9%");
+    }
+}

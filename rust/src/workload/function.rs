@@ -1,0 +1,117 @@
+//! The function specification: phase structure and virtual durations.
+//!
+//! Every invocation runs prepare (download) then analysis (regression),
+//! plus small fixed runtime overheads. The *analysis* phase is CPU-bound
+//! and scales with the instance's performance factor — that is the part
+//! Minos speeds up. The *prepare* phase is network-bound and does not.
+
+use crate::util::prng::Rng;
+
+use super::download::NetworkModel;
+
+/// Virtual durations of one invocation's phases, ms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseDurations {
+    pub prepare_ms: f64,
+    pub analysis_ms: f64,
+    pub overhead_ms: f64,
+}
+
+impl PhaseDurations {
+    /// Total execution duration (what the platform bills for a completed
+    /// invocation).
+    pub fn total_ms(&self) -> f64 {
+        self.prepare_ms + self.analysis_ms + self.overhead_ms
+    }
+}
+
+/// A deployed function's workload shape.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    /// Analysis duration on a nominal (factor 1.0) instance, ms.
+    /// Calibrated to the paper regime (`runtime::calibrate`).
+    pub base_analysis_ms: f64,
+    /// Fixed request/response + framework overhead per invocation, ms.
+    pub overhead_ms: f64,
+    /// Size of the downloaded object, bytes.
+    pub download_bytes: usize,
+    pub network: NetworkModel,
+}
+
+impl FunctionSpec {
+    /// The paper's weather workload (Fig. 4 regime: ~2.0–2.5 s analysis on
+    /// the 256 MB tier, ~0.5 s download of a ~15 KB CSV).
+    pub fn weather() -> FunctionSpec {
+        FunctionSpec {
+            base_analysis_ms: crate::runtime::calibrate::PAPER_ANALYSIS_MS,
+            overhead_ms: 90.0,
+            download_bytes: 15_000,
+            network: NetworkModel::default(),
+        }
+    }
+
+    /// Sample the phase durations of one invocation on an instance with
+    /// `perf_factor` (higher = faster ⇒ shorter analysis).
+    ///
+    /// `noise` is the per-invocation multiplicative duration noise from the
+    /// platform's variability model (applies to the CPU-bound part only).
+    pub fn sample(&self, perf_factor: f64, noise: f64, rng: &mut Rng) -> PhaseDurations {
+        debug_assert!(perf_factor > 0.0 && noise > 0.0);
+        PhaseDurations {
+            prepare_ms: self.network.duration_ms(self.download_bytes, rng),
+            analysis_ms: self.base_analysis_ms / perf_factor * noise,
+            overhead_ms: self.overhead_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::Summary;
+
+    #[test]
+    fn faster_instance_shorter_analysis() {
+        let spec = FunctionSpec::weather();
+        let mut rng = Rng::new(1);
+        let d_fast = spec.sample(1.2, 1.0, &mut rng);
+        let d_slow = spec.sample(0.8, 1.0, &mut rng);
+        assert!(d_fast.analysis_ms < d_slow.analysis_ms);
+        assert!(
+            (d_slow.analysis_ms / d_fast.analysis_ms - 1.5).abs() < 1e-9,
+            "CPU part scales exactly with the factor"
+        );
+    }
+
+    #[test]
+    fn prepare_is_perf_independent() {
+        let spec = FunctionSpec::weather();
+        let mut rng_a = Rng::new(2);
+        let mut rng_b = Rng::new(2);
+        let fast: Vec<f64> =
+            (0..2_000).map(|_| spec.sample(1.3, 1.0, &mut rng_a).prepare_ms).collect();
+        let slow: Vec<f64> =
+            (0..2_000).map(|_| spec.sample(0.7, 1.0, &mut rng_b).prepare_ms).collect();
+        // Same rng seed, same sequence: prepare identical regardless of perf.
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn totals_in_paper_regime() {
+        // Nominal instance ⇒ total execution ≈ 2.8–3.0 s, matching the
+        // paper's ~4 s closed-loop period (incl. 1 s think time) and the
+        // Fig. 6 cost range.
+        let spec = FunctionSpec::weather();
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> =
+            (0..5_000).map(|_| spec.sample(1.0, 1.0, &mut rng).total_ms()).collect();
+        let mean = Summary::of(&xs).unwrap().mean;
+        assert!((2_600.0..3_200.0).contains(&mean), "mean total {mean}");
+    }
+
+    #[test]
+    fn total_is_sum_of_phases() {
+        let d = PhaseDurations { prepare_ms: 1.0, analysis_ms: 2.0, overhead_ms: 0.5 };
+        assert!((d.total_ms() - 3.5).abs() < 1e-12);
+    }
+}

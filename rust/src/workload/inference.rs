@@ -1,0 +1,67 @@
+//! Secondary workload: an ML-inference-shaped function (paper §IV names
+//! "machine learning inference" as a prime Minos use case: download model
+//! weights first — network-bound — then run compute-bound inference).
+//!
+//! The compute phase re-uses the benchmark artifact's matmul as its real
+//! computation (examples/ml_inference.rs executes it through PJRT), so the
+//! whole three-layer path is exercised by a second, differently-shaped
+//! workload: larger download, shorter compute, tighter latency target.
+
+use super::download::NetworkModel;
+use super::function::FunctionSpec;
+
+/// An inference-flavoured function spec.
+pub fn inference_spec() -> FunctionSpec {
+    FunctionSpec {
+        // One forward pass is much shorter than the weather regression...
+        base_analysis_ms: 800.0,
+        overhead_ms: 60.0,
+        // ...but the model weights are a much bigger object (~8 MB).
+        download_bytes: 8_000_000,
+        network: NetworkModel {
+            // Model pulls sustain higher throughput (bigger object, fewer
+            // per-request overheads dominate).
+            base_latency_ms: 180.0,
+            latency_sigma: 0.20,
+            bandwidth_mbps: 60.0,
+            bandwidth_sigma: 0.25,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::Summary;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn download_dominates_prepare() {
+        let spec = inference_spec();
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> =
+            (0..3_000).map(|_| spec.sample(1.0, 1.0, &mut rng).prepare_ms).collect();
+        let mean = Summary::of(&xs).unwrap().mean;
+        // 8 MB at ~60 MB/s ≈ 133 ms + latency ≈ 320 ms total
+        assert!((250.0..450.0).contains(&mean), "prepare mean {mean}");
+    }
+
+    #[test]
+    fn compute_shorter_than_weather() {
+        assert!(
+            inference_spec().base_analysis_ms
+                < FunctionSpec::weather().base_analysis_ms
+        );
+    }
+
+    #[test]
+    fn still_benchmarkable() {
+        // The prepare step must still (mostly) cover a shortened benchmark.
+        let spec = inference_spec();
+        let mut rng = Rng::new(2);
+        let covered = (0..5_000)
+            .filter(|_| spec.sample(1.0, 1.0, &mut rng).prepare_ms >= 200.0)
+            .count();
+        assert!(covered as f64 / 5_000.0 > 0.7);
+    }
+}

@@ -1,0 +1,19 @@
+//! The evaluation workloads (paper §III-A) and the workload driver.
+//!
+//! Primary workload: the weather-prediction data-processing function —
+//! download a CSV of past daily weather (network-bound prepare step, during
+//! which Minos benchmarks), then fit a linear regression and predict
+//! tomorrow (CPU-bound analysis step, executed for real through the L2/L1
+//! artifacts). Secondary workload: an ML-inference-shaped function (§IV
+//! motivates Minos for ML inference) exercising the same phase structure.
+
+pub mod download;
+pub mod function;
+pub mod inference;
+pub mod oracle;
+pub mod vu;
+pub mod weather;
+
+pub use download::NetworkModel;
+pub use function::{FunctionSpec, PhaseDurations};
+pub use vu::VirtualUsers;

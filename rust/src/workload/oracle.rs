@@ -1,0 +1,145 @@
+//! Rust-side OLS oracle: an independent implementation of the analysis
+//! computation, used to verify the HLO artifacts' numerics on *any* input
+//! the Rust workload generates (the Python fixtures only pin one seed).
+//!
+//! Normal equations with the same ridge term as the AOT model, solved by
+//! Cholesky — small (16×16), so a dense textbook implementation is exact
+//! enough in f64.
+
+/// Ridge used by the lowered artifact (see `python/compile/model.py`).
+pub const RIDGE: f64 = 1e-4;
+
+/// Fit OLS via ridge-stabilized normal equations. `x` row-major (n × k).
+/// Returns theta (k).
+pub fn ols_fit(x: &[f32], y: &[f32], n: usize, k: usize) -> Vec<f64> {
+    assert_eq!(x.len(), n * k);
+    assert_eq!(y.len(), n);
+    // Gram = XtX + ridge·I, moment = Xty, in f64.
+    let mut gram = vec![0.0f64; k * k];
+    let mut moment = vec![0.0f64; k];
+    for row in 0..n {
+        let xr = &x[row * k..(row + 1) * k];
+        let yv = y[row] as f64;
+        for i in 0..k {
+            let xi = xr[i] as f64;
+            moment[i] += xi * yv;
+            for j in i..k {
+                gram[i * k + j] += xi * xr[j] as f64;
+            }
+        }
+    }
+    for i in 0..k {
+        for j in 0..i {
+            gram[i * k + j] = gram[j * k + i]; // symmetrize lower triangle
+        }
+        gram[i * k + i] += RIDGE;
+    }
+    let chol = cholesky(&gram, k);
+    cho_solve(&chol, &moment, k)
+}
+
+/// Predict for one feature row.
+pub fn predict(theta: &[f64], x_next: &[f32]) -> f64 {
+    theta.iter().zip(x_next).map(|(t, x)| t * *x as f64).sum()
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix (row-major k×k). Panics on non-PD input.
+fn cholesky(a: &[f64], k: usize) -> Vec<f64> {
+    let mut l = vec![0.0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut sum = a[i * k + j];
+            for p in 0..j {
+                sum -= l[i * k + p] * l[j * k + p];
+            }
+            if i == j {
+                assert!(sum > 0.0, "matrix not positive definite at {i}");
+                l[i * k + i] = sum.sqrt();
+            } else {
+                l[i * k + j] = sum / l[j * k + j];
+            }
+        }
+    }
+    l
+}
+
+/// Solve L Lᵀ x = b given the Cholesky factor L.
+fn cho_solve(l: &[f64], b: &[f64], k: usize) -> Vec<f64> {
+    // Forward: L z = b
+    let mut z = vec![0.0f64; k];
+    for i in 0..k {
+        let mut sum = b[i];
+        for j in 0..i {
+            sum -= l[i * k + j] * z[j];
+        }
+        z[i] = sum / l[i * k + i];
+    }
+    // Backward: Lᵀ x = z
+    let mut xout = vec![0.0f64; k];
+    for i in (0..k).rev() {
+        let mut sum = z[i];
+        for j in (i + 1)..k {
+            sum -= l[j * k + i] * xout[j];
+        }
+        xout[i] = sum / l[i * k + i];
+    }
+    xout
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn recovers_known_coefficients() {
+        let mut rng = Rng::new(1);
+        let (n, k) = (400, 6);
+        let theta_true: Vec<f64> = (0..k).map(|i| (i as f64) - 2.0).collect();
+        let mut x = Vec::with_capacity(n * k);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let target: f64 =
+                row.iter().zip(&theta_true).map(|(x, t)| *x as f64 * t).sum();
+            x.extend(&row);
+            y.push(target as f32);
+        }
+        let theta = ols_fit(&x, &y, n, k);
+        for (got, want) in theta.iter().zip(&theta_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn prediction_consistent() {
+        let theta = [1.0, 2.0, -0.5];
+        let x_next = [1.0f32, 3.0, 4.0];
+        assert!((predict(&theta, &x_next) - (1.0 + 6.0 - 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn handles_weather_design_matrix() {
+        // The real workload's design matrix includes zero-padded columns;
+        // the ridge keeps the system solvable.
+        let w = crate::workload::weather::generate(0);
+        let theta = ols_fit(
+            &w.x,
+            &w.y,
+            crate::workload::weather::N_DAYS,
+            crate::workload::weather::N_FEATURES,
+        );
+        let pred = predict(&theta, &w.x_next);
+        let last = *w.y.last().unwrap() as f64;
+        assert!((pred - last).abs() < 15.0, "pred {pred}, last temp {last}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not positive definite")]
+    fn cholesky_rejects_indefinite() {
+        // -I is not PD.
+        let a = vec![-1.0, 0.0, 0.0, -1.0];
+        cholesky(&a, 2);
+    }
+}

@@ -1,0 +1,76 @@
+//! Closed-loop virtual users (paper §III-A).
+//!
+//! "One experiment comprises ten virtual users that send a request, wait
+//! for it to complete, and then wait one more second before sending the
+//! next request over a total duration of 30 minutes." The VU driver is
+//! deliberately dumb — all intelligence lives in Minos and the platform.
+
+use crate::sim::SimTime;
+
+/// The closed-loop virtual user population.
+#[derive(Debug, Clone)]
+pub struct VirtualUsers {
+    pub n_vus: u32,
+    /// Think time between completion and the next request, ms.
+    pub think_ms: f64,
+    /// VUs stop *submitting* after this horizon (in-flight requests finish).
+    pub horizon: SimTime,
+}
+
+impl VirtualUsers {
+    /// The paper's configuration: 10 VUs, 1 s think time, 30 min.
+    pub fn paper() -> VirtualUsers {
+        VirtualUsers {
+            n_vus: 10,
+            think_ms: 1_000.0,
+            horizon: SimTime::from_secs(30.0 * 60.0),
+        }
+    }
+
+    /// The paper's pre-test configuration: 10 VUs for one minute.
+    pub fn pretest() -> VirtualUsers {
+        VirtualUsers {
+            n_vus: 10,
+            think_ms: 1_000.0,
+            horizon: SimTime::from_secs(60.0),
+        }
+    }
+
+    /// May a VU submit a new request at `now`?
+    pub fn may_submit(&self, now: SimTime) -> bool {
+        now < self.horizon
+    }
+
+    /// When does a VU whose request completed at `now` submit next?
+    pub fn next_submit_at(&self, now: SimTime) -> SimTime {
+        now.plus_ms(self.think_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config() {
+        let v = VirtualUsers::paper();
+        assert_eq!(v.n_vus, 10);
+        assert_eq!(v.think_ms, 1_000.0);
+        assert_eq!(v.horizon, SimTime::from_secs(1_800.0));
+    }
+
+    #[test]
+    fn submission_window() {
+        let v = VirtualUsers::paper();
+        assert!(v.may_submit(SimTime::ZERO));
+        assert!(v.may_submit(SimTime::from_secs(1_799.9)));
+        assert!(!v.may_submit(SimTime::from_secs(1_800.0)));
+    }
+
+    #[test]
+    fn think_time_applied() {
+        let v = VirtualUsers::paper();
+        let next = v.next_submit_at(SimTime::from_secs(10.0));
+        assert_eq!(next, SimTime::from_secs(11.0));
+    }
+}

@@ -1,0 +1,147 @@
+//! Synthetic weather data — the Rust-side equivalent of the CSV the paper's
+//! function downloads (per-location daily temperatures).
+//!
+//! Mirrors `python/compile/model.py::make_weather_dataset` structurally
+//! (seasonality + trend + AR(1) noise; features = intercept, annual and
+//! semi-annual harmonics, trend, eight temperature lags, zero padding) but
+//! is generated independently in Rust: the HLO artifacts are shape-fixed,
+//! value-generic, and Rust verifies their output against its own OLS oracle
+//! (`workload::oracle`), while the Python fixtures pin the cross-language
+//! numerics.
+
+use crate::util::csvio::Csv;
+use crate::util::prng::Rng;
+
+/// Shapes must match the AOT artifacts (see `artifacts/meta.json`).
+pub const N_DAYS: usize = 512;
+pub const N_FEATURES: usize = 16;
+const N_LAGS: usize = 8;
+
+/// A generated weather dataset ready for the analysis step.
+#[derive(Debug, Clone)]
+pub struct WeatherData {
+    /// Row-major design matrix (N_DAYS × N_FEATURES).
+    pub x: Vec<f32>,
+    /// Observed temperatures (N_DAYS).
+    pub y: Vec<f32>,
+    /// Feature row for "tomorrow".
+    pub x_next: Vec<f32>,
+    /// The raw daily series the CSV carries (N_DAYS + lags + 1).
+    pub temps: Vec<f32>,
+}
+
+/// Generate the dataset for a location seed.
+pub fn generate(seed: u64) -> WeatherData {
+    let mut rng = Rng::new(seed);
+    let n_total = N_DAYS + N_LAGS + 1;
+    let mut temps = Vec::with_capacity(n_total);
+    let mut ar = 0.0f64;
+    for t in 0..n_total {
+        let tf = t as f64;
+        let annual = 2.0 * std::f64::consts::PI * tf / 365.25;
+        let base = 10.0 + 8.0 * annual.sin() - 3.0 * annual.cos()
+            + 1.5 * (2.0 * annual).sin()
+            + 0.002 * tf;
+        ar = 0.7 * ar + 1.2 * rng.normal();
+        temps.push((base + ar) as f32);
+    }
+
+    let feature_row = |day: usize, temps: &[f32]| -> Vec<f32> {
+        let tf = day as f64;
+        let annual = 2.0 * std::f64::consts::PI * tf / 365.25;
+        let mut row = vec![
+            1.0f32,
+            annual.sin() as f32,
+            annual.cos() as f32,
+            (2.0 * annual).sin() as f32,
+            (2.0 * annual).cos() as f32,
+            (tf / 365.25) as f32,
+        ];
+        for lag in 1..=N_LAGS {
+            row.push(temps[day - lag]);
+        }
+        row.resize(N_FEATURES, 0.0);
+        row
+    };
+
+    let mut x = Vec::with_capacity(N_DAYS * N_FEATURES);
+    let mut y = Vec::with_capacity(N_DAYS);
+    for day in N_LAGS..N_LAGS + N_DAYS {
+        x.extend(feature_row(day, &temps));
+        y.push(temps[day]);
+    }
+    let x_next = feature_row(N_LAGS + N_DAYS, &temps);
+    WeatherData { x, y, x_next, temps }
+}
+
+impl WeatherData {
+    /// Render the CSV the function "downloads" (day index + temperature),
+    /// and whose byte size feeds the network model.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&["day", "temperature_c"]);
+        for (i, t) in self.temps.iter().enumerate() {
+            csv.push(vec![i.to_string(), format!("{t:.2}")]);
+        }
+        csv
+    }
+
+    /// Size in bytes of the serialized CSV (drives download duration).
+    pub fn csv_bytes(&self) -> usize {
+        self.to_csv().to_string().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_artifacts() {
+        let w = generate(0);
+        assert_eq!(w.x.len(), N_DAYS * N_FEATURES);
+        assert_eq!(w.y.len(), N_DAYS);
+        assert_eq!(w.x_next.len(), N_FEATURES);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(generate(7).x, generate(7).x);
+        assert_ne!(generate(7).x, generate(8).x);
+    }
+
+    #[test]
+    fn intercept_column_is_ones() {
+        let w = generate(3);
+        for row in 0..N_DAYS {
+            assert_eq!(w.x[row * N_FEATURES], 1.0);
+        }
+        assert_eq!(w.x_next[0], 1.0);
+    }
+
+    #[test]
+    fn temperatures_plausible() {
+        let w = generate(5);
+        let min = w.y.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = w.y.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(min > -40.0 && max < 60.0, "range [{min}, {max}]");
+        assert!(max - min > 5.0, "seasonality should spread temps");
+    }
+
+    #[test]
+    fn lag_features_reference_history() {
+        let w = generate(11);
+        // Row 0 is day N_LAGS; its first lag feature is temps[N_LAGS - 1].
+        assert_eq!(w.x[6], w.temps[N_LAGS - 1]);
+    }
+
+    #[test]
+    fn csv_roundtrip_and_size() {
+        let w = generate(2);
+        let csv = w.to_csv();
+        assert_eq!(csv.rows.len(), w.temps.len());
+        let parsed = crate::util::csvio::Csv::parse(&csv.to_string()).unwrap();
+        let temps = parsed.col_f64("temperature_c").unwrap();
+        assert!((temps[0] - w.temps[0] as f64).abs() < 0.01);
+        assert!(w.csv_bytes() > 4_000, "CSV should be a few KB");
+    }
+}

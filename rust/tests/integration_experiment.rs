@@ -1,0 +1,182 @@
+//! Integration tests: the full simulation stack at reduced scale, asserting
+//! the paper's qualitative claims (DESIGN.md §5 "shape expectations").
+
+use minos::coordinator::MinosConfig;
+use minos::experiment::config::ExperimentConfig;
+use minos::experiment::{figures, runner};
+use minos::sim::SimTime;
+use minos::stats::descriptive::mean;
+
+/// A medium-length config: long enough for stable statistics, short enough
+/// for CI (5 simulated minutes, ~750 requests per condition).
+fn medium(day: u32, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    cfg.vus.horizon = SimTime::from_secs(300.0);
+    cfg
+}
+
+#[test]
+fn minos_improves_analysis_duration_on_high_variability_days() {
+    // Day 1 uses the week's highest node sigma (0.16): the selection effect
+    // must be clearly positive.
+    let o = runner::run_paired(&medium(1, 101), None).unwrap();
+    let imp = o.analysis_improvement_pct();
+    assert!(imp > 3.0, "expected clear improvement, got {imp:.2}%");
+    assert!(imp < 25.0, "implausibly large improvement {imp:.2}%");
+}
+
+#[test]
+fn improvement_scales_with_platform_variability() {
+    // Average over several seeds to beat the instance lottery noise:
+    // high-sigma days must show a larger analysis improvement than the
+    // lowest-sigma day (paper: effect sizes differ by day).
+    let avg = |day: u32| -> f64 {
+        (0..6)
+            .map(|s| {
+                runner::run_paired(&medium(day, 500 + s), None)
+                    .unwrap()
+                    .analysis_improvement_pct()
+            })
+            .sum::<f64>()
+            / 6.0
+    };
+    let hi = avg(1); // sigma 0.16
+    let lo = avg(4); // sigma 0.055
+    assert!(
+        hi > lo + 1.0,
+        "improvement should grow with variability: hi {hi:.2}% lo {lo:.2}%"
+    );
+}
+
+#[test]
+fn terminated_instances_are_never_reused() {
+    // Every completed record's instance must have passed (or skipped) the
+    // gate; verify via run health: terminations happened, yet all warm
+    // hits landed on live instances (enforced by debug asserts inside the
+    // scheduler) and every completion is accounted for.
+    let cfg = medium(0, 77);
+    let pre = runner::run_pretest(&cfg, None).unwrap();
+    let minos = MinosConfig {
+        elysium_threshold_ms: pre.threshold_ms,
+        ..MinosConfig::paper_default()
+    };
+    let r = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    assert!(r.terminations > 0, "high-sigma day should terminate some instances");
+    assert_eq!(
+        r.cold_starts,
+        r.terminations + r.records.iter().filter(|x| x.cold).count() as u64,
+        "every cold start either terminated or completed exactly once"
+    );
+}
+
+#[test]
+fn passing_benchmarks_imply_faster_pool() {
+    // The mean analysis duration on warm (re-used, i.e. gate-passed)
+    // instances must beat the baseline's warm mean.
+    let o = runner::run_paired(&medium(1, 303), None).unwrap();
+    let warm = |r: &minos::experiment::metrics::RunResult| {
+        let xs: Vec<f64> = r
+            .records
+            .iter()
+            .filter(|x| !x.cold)
+            .map(|x| x.analysis_ms)
+            .collect();
+        mean(&xs)
+    };
+    let m = warm(&o.minos);
+    let b = warm(&o.baseline);
+    assert!(m < b, "warm-pool analysis: minos {m:.0} !< baseline {b:.0}");
+}
+
+#[test]
+fn fig7_cost_crossover_dynamics() {
+    // Minos starts more expensive (termination burst at cold start), then
+    // undercuts the baseline for most of the horizon (paper Fig. 7).
+    let mut cfg = ExperimentConfig::paper_day(1);
+    cfg.seed = 0x31A6;
+    cfg.vus.horizon = SimTime::from_secs(900.0);
+    let o = runner::run_paired(&cfg, None).unwrap();
+    let (series, _) = figures::fig7(&o, 10.0, 900.0);
+    assert!(series.points.len() > 50);
+    assert!(
+        series.fraction_cheaper > 0.5,
+        "minos should be cheaper most of the time, got {:.2}",
+        series.fraction_cheaper
+    );
+    // Early phase: the cold-start termination burst makes Minos's own
+    // running cost-per-success start above its final settled value (the
+    // paper's "higher cost for the first 200 s" effect, measured against
+    // Minos's own steady state to be robust to the baseline's lottery).
+    let minos_first = series.points.first().unwrap().2;
+    let minos_last = series.points.last().unwrap().2;
+    assert!(
+        minos_first > minos_last,
+        "expected early termination-cost premium: first {minos_first:.2} \
+         !> settled {minos_last:.2}"
+    );
+}
+
+#[test]
+fn online_threshold_matches_pretest_quality() {
+    // §IV: the online collector should reach a similar improvement to the
+    // offline pre-test (temporarily suboptimal is acceptable, broken isn't).
+    let mut cfg = medium(1, 404);
+    cfg.online_update_every = Some(10);
+    let online = runner::run_paired(&cfg, None).unwrap();
+    assert!(online.minos.online_pushes > 0, "collector never published");
+    let imp = online.analysis_improvement_pct();
+    assert!(imp > 0.0, "online threshold gave no improvement: {imp:.2}%");
+}
+
+#[test]
+fn week_aggregates_reproduce_paper_shape() {
+    // Scaled-down week (5-min days): Minos wins analysis duration every
+    // day; wins requests and cost in aggregate.
+    let mut base = ExperimentConfig::paper_day(0);
+    base.seed = 0xBEEF;
+    base.vus.horizon = SimTime::from_secs(300.0);
+    let outcomes = runner::run_week(&base, 7, None).unwrap();
+    let (rows4, _) = figures::fig4(&outcomes);
+    for r in &rows4 {
+        assert!(
+            r.mean_improvement_pct > 0.0,
+            "day {}: analysis regressed ({:.2}%)",
+            r.day,
+            r.mean_improvement_pct
+        );
+    }
+    assert!(figures::fig4_overall_improvement_pct(&outcomes) > 3.0);
+    assert!(figures::fig5_overall_improvement_pct(&outcomes) > 0.0);
+    assert!(figures::fig6_overall_saving_pct(&outcomes) > 0.0);
+    // Fig. 6 cost level sanity: the paper's y-range is $12–14 per million.
+    let (rows6, _) = figures::fig6(&outcomes);
+    for r in &rows6 {
+        assert!(
+            (10.0..17.0).contains(&r.baseline_usd_per_million),
+            "cost level {:.2} outside plausible range",
+            r.baseline_usd_per_million
+        );
+    }
+}
+
+#[test]
+fn longer_runs_increase_minos_benefit() {
+    // Paper: "letting MINOS run for a longer time increases its benefits"
+    // — the warm pool amortizes the termination investment. Compare the
+    // fraction-cheaper statistic between a short and a long horizon.
+    let frac = |secs: f64| {
+        let mut cfg = ExperimentConfig::paper_day(1);
+        cfg.seed = 0xFEED;
+        cfg.vus.horizon = SimTime::from_secs(secs);
+        let o = runner::run_paired(&cfg, None).unwrap();
+        let (s, _) = figures::fig7(&o, 10.0, secs);
+        s.fraction_cheaper
+    };
+    let short = frac(120.0);
+    let long = frac(1_200.0);
+    assert!(
+        long >= short,
+        "benefit should grow with duration: short {short:.2}, long {long:.2}"
+    );
+}

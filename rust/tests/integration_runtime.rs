@@ -1,0 +1,83 @@
+//! Integration tests over the real PJRT runtime: AOT artifacts are loaded,
+//! executed, and cross-checked against both the Python-side jnp oracle
+//! (fixtures) and the independent Rust OLS oracle on fresh data.
+//!
+//! These tests require `make artifacts`; they skip (not fail) when the
+//! artifacts are absent so `cargo test` works on a fresh checkout.
+
+use minos::experiment::config::ExperimentConfig;
+use minos::experiment::runner;
+use minos::runtime::{ArtifactStore, Runtime};
+use minos::sim::SimTime;
+use minos::workload::{oracle, weather};
+
+fn runtime() -> Option<(Runtime, ArtifactStore)> {
+    // Missing artifacts => skip (fresh checkout); present-but-broken
+    // artifacts must FAIL, not silently skip.
+    let store = ArtifactStore::discover_default().ok()?;
+    let rt = Runtime::load(&store).expect("artifacts present but failed to load/compile");
+    Some((rt, store))
+}
+
+#[test]
+fn linreg_artifact_matches_rust_oracle_on_many_seeds() {
+    let Some((rt, _)) = runtime() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for seed in [0u64, 1, 7, 42, 1_000, 0xDEAD] {
+        let w = weather::generate(seed);
+        let out = rt.exec_linreg(&w.x, &w.y, &w.x_next).unwrap();
+        let theta = oracle::ols_fit(&w.x, &w.y, weather::N_DAYS, weather::N_FEATURES);
+        let want = oracle::predict(&theta, &w.x_next);
+        let got = out.prediction as f64;
+        assert!(
+            (got - want).abs() < 0.05 * want.abs().max(1.0),
+            "seed {seed}: PJRT {got} vs oracle {want}"
+        );
+        // Theta agreement, coefficient by coefficient.
+        for (i, (g, w_)) in out.theta.iter().zip(&theta).enumerate() {
+            assert!(
+                (*g as f64 - w_).abs() < 0.02 * w_.abs().max(1.0),
+                "seed {seed} theta[{i}]: {g} vs {w_}"
+            );
+        }
+    }
+}
+
+#[test]
+fn benchmark_artifact_is_deterministic() {
+    let Some((rt, store)) = runtime() else { return };
+    let f = store.fixtures().unwrap();
+    let a = rt.exec_benchmark(&f.bench_a, &f.bench_b).unwrap();
+    let b = rt.exec_benchmark(&f.bench_a, &f.bench_b).unwrap();
+    assert_eq!(a.checksum, b.checksum, "same inputs, same checksum");
+}
+
+#[test]
+fn full_run_with_real_execution() {
+    // The headline end-to-end composition: the discrete-event system with
+    // every completed invocation executing the weather-regression HLO
+    // through PJRT, verified in-loop against the Rust oracle.
+    let Some((rt, _)) = runtime() else { return };
+    let mut cfg = ExperimentConfig::smoke(0, 21);
+    cfg.vus.horizon = SimTime::from_secs(45.0);
+    let outcome = runner::run_paired(&cfg, Some(&rt)).unwrap();
+    assert!(outcome.minos.successful() > 30);
+    // Every record carries a real prediction, and predictions are plausible
+    // temperatures.
+    for rec in outcome.minos.records.iter().chain(&outcome.baseline.records) {
+        let p = rec.prediction.expect("real run must record predictions");
+        assert!((-40.0..60.0).contains(&(p as f64)), "prediction {p}");
+    }
+    assert!(rt.executions.get() > 60, "PJRT executions: {}", rt.executions.get());
+}
+
+#[test]
+fn pretest_with_real_runtime() {
+    let Some((rt, _)) = runtime() else { return };
+    let mut cfg = ExperimentConfig::paper_day(0);
+    cfg.seed = 99;
+    let report = runner::run_pretest(&cfg, Some(&rt)).unwrap();
+    assert!(report.threshold_ms.is_finite() && report.threshold_ms > 0.0);
+}

@@ -1,0 +1,316 @@
+//! Property-based tests on system invariants, via the first-party
+//! `testkit::prop` kit (DESIGN.md §6).
+//!
+//! Invariants covered:
+//! 1. invocation conservation across arbitrary queue interleavings;
+//! 2. billing monotonicity in duration and memory, and granularity bounds;
+//! 3. the scheduler never hands out a terminated/expired instance;
+//! 4. Minos filtering stochastically improves the warm pool;
+//! 5. P² tracks exact percentiles; Welford matches exact moments;
+//! 6. end-to-end: no run loses or duplicates requests, and every record
+//!    respects the retry cap.
+
+use minos::coordinator::queue::InvocationQueue;
+use minos::coordinator::MinosConfig;
+use minos::experiment::runner::run_single;
+use minos::platform::billing::{Billing, TIERS};
+use minos::platform::{FaasPlatform, Placement, PlatformConfig};
+use minos::sim::SimTime;
+use minos::stats::{descriptive, P2Quantile, Welford};
+use minos::testkit::{prop, scenarios};
+use minos::util::prng::Rng;
+
+#[test]
+fn prop_queue_conservation_under_arbitrary_interleaving() {
+    prop::check(
+        "queue-conservation",
+        |rng| {
+            let n_ops = prop::sized(rng, 400);
+            prop::vec_of(rng, n_ops, |r| r.below(4) as u8)
+        },
+        |ops| {
+            let mut q = InvocationQueue::new();
+            let mut in_flight = Vec::new();
+            let mut t = 0.0;
+            for &op in ops {
+                t += 1.0;
+                match op {
+                    0 => {
+                        q.submit(0, SimTime::from_ms(t));
+                    }
+                    1 => {
+                        if let Some(inv) = q.take() {
+                            in_flight.push(inv);
+                        }
+                    }
+                    2 => {
+                        if let Some(inv) = in_flight.pop() {
+                            q.requeue(inv);
+                        }
+                    }
+                    _ => {
+                        if let Some(inv) = in_flight.pop() {
+                            q.complete(&inv);
+                        }
+                    }
+                }
+                if !q.conserved() {
+                    return Err(format!(
+                        "conservation broken: submitted {} completed {} queued {} in_flight {}",
+                        q.submitted,
+                        q.completed,
+                        q.len(),
+                        q.in_flight
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_billing_monotone_and_granularity_bounded() {
+    prop::check(
+        "billing-monotonicity",
+        |rng| {
+            let d1 = rng.range(0.0, 10_000.0);
+            let d2 = rng.range(0.0, 10_000.0);
+            let tier = TIERS[rng.below(TIERS.len())].memory_mb;
+            let gran = [1.0, 10.0, 100.0][rng.below(3)];
+            (d1, d2, tier, gran)
+        },
+        |&(d1, d2, tier, gran)| {
+            let mut b = Billing::for_memory(tier).expect("tier in table");
+            b.granularity_ms = gran;
+            let (lo, hi) = if d1 <= d2 { (d1, d2) } else { (d2, d1) };
+            if b.exec_cost_usd(lo) > b.exec_cost_usd(hi) + 1e-18 {
+                return Err(format!("cost not monotone: {lo} vs {hi}"));
+            }
+            // Rounding never bills more than one extra granule.
+            let billed = b.billable_ms(hi);
+            if billed < hi - 1e-9 || billed >= hi + gran {
+                return Err(format!("billable {billed} outside [{hi}, {hi}+{gran})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_never_hands_out_dead_instances() {
+    prop::check(
+        "scheduler-liveness",
+        |rng| {
+            let seed = rng.next_u64();
+            let n_steps = prop::sized(rng, 300);
+            (seed, n_steps)
+        },
+        |&(seed, n_steps)| {
+            let mut cfg = PlatformConfig::default();
+            cfg.instance_lifetime_median_ms = 5_000.0; // aggressive recycling
+            cfg.idle_timeout_ms = 8_000.0;
+            let mut p = FaasPlatform::new(cfg, 0, seed);
+            let mut rng = Rng::new(seed ^ 1);
+            let mut busy: Vec<minos::platform::InstanceId> = Vec::new();
+            let mut t = SimTime::ZERO;
+            for _ in 0..n_steps {
+                t = t.plus_ms(rng.range(1.0, 2_000.0));
+                match rng.below(3) {
+                    0 => match p.place(t) {
+                        Placement::Warm(id) => {
+                            let inst = p.scheduler.get(id);
+                            if !inst.is_live() {
+                                return Err(format!("warm placement of dead {id:?}"));
+                            }
+                            if inst.lifetime_expired(t) {
+                                return Err(format!("warm placement of expired {id:?}"));
+                            }
+                            busy.push(id);
+                        }
+                        Placement::Cold { id, ready_at } => {
+                            p.cold_start_ready(id);
+                            busy.push(id);
+                            t = t.max(ready_at);
+                        }
+                        Placement::Saturated => {}
+                    },
+                    1 => {
+                        if let Some(id) = busy.pop() {
+                            p.release(id, t);
+                        }
+                    }
+                    _ => {
+                        if let Some(id) = busy.pop() {
+                            p.crash(id);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_minos_filter_improves_surviving_pool() {
+    // Instances whose benchmark passes a P60 threshold must be faster on
+    // average than the unfiltered population — the core selection effect.
+    prop::check(
+        "elysium-selection-effect",
+        |rng| (rng.next_u64(), 0.05 + rng.f64() * 0.15),
+        |&(seed, sigma)| {
+            let mut rng = Rng::new(seed);
+            let factors: Vec<f64> =
+                (0..4_000).map(|_| rng.lognormal(0.0, sigma)).collect();
+            let bench: Vec<f64> = factors.iter().map(|f| 350.0 / f).collect();
+            let threshold = descriptive::percentile(&bench, 60.0);
+            let survivors: Vec<f64> = factors
+                .iter()
+                .zip(&bench)
+                .filter(|(_, &b)| b <= threshold)
+                .map(|(&f, _)| f)
+                .collect();
+            let all_mean = descriptive::mean(&factors);
+            let surv_mean = descriptive::mean(&survivors);
+            if surv_mean <= all_mean {
+                return Err(format!(
+                    "survivors not faster: {surv_mean} <= {all_mean} (sigma {sigma})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_p2_tracks_exact_percentile() {
+    prop::check(
+        "p2-accuracy",
+        |rng| {
+            let seed = rng.next_u64();
+            let q = 0.1 + rng.f64() * 0.8;
+            let n = 2_000 + prop::sized(rng, 8_000);
+            (seed, q, n)
+        },
+        |&(seed, q, n)| {
+            let mut rng = Rng::new(seed);
+            let mut est = P2Quantile::new(q);
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let x = rng.lognormal(0.0, 0.3);
+                est.push(x);
+                xs.push(x);
+            }
+            let exact = descriptive::percentile(&xs, q * 100.0);
+            let got = est.estimate();
+            let rel = (got - exact).abs() / exact;
+            if rel > 0.08 {
+                return Err(format!("q={q}: exact {exact}, P2 {got}, rel {rel}"));
+            }
+            if got < est.min_seen() || got > est.max_seen() {
+                return Err("estimate escaped observed range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_welford_matches_exact_moments() {
+    prop::check(
+        "welford-exactness",
+        |rng| {
+            let n = prop::sized(rng, 2_000);
+            prop::vec_of(rng, n.max(2), |r| r.normal_ms(50.0, 20.0))
+        },
+        |xs| {
+            let mut w = Welford::new();
+            for &x in xs {
+                w.push(x);
+            }
+            let em = descriptive::mean(xs);
+            let es = descriptive::std_dev(xs);
+            if (w.mean() - em).abs() > 1e-9 * em.abs().max(1.0) {
+                return Err(format!("mean {} vs {}", w.mean(), em));
+            }
+            if (w.std_dev() - es).abs() > 1e-7 * es.abs().max(1.0) {
+                return Err(format!("std {} vs {}", w.std_dev(), es));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_end_to_end_run_invariants() {
+    // Short full-system runs under random thresholds/seeds: requests are
+    // never lost or duplicated; attempts respect the retry cap; billed
+    // events are all positive; completion times are within horizon + slack.
+    prop::check(
+        "run-invariants",
+        |rng| {
+            let seed = rng.next_u64();
+            let day = rng.below(7) as u32;
+            let threshold = 250.0 + rng.f64() * 300.0;
+            (seed, day, threshold)
+        },
+        |&(seed, day, threshold)| {
+            let cfg = scenarios::quick_config(day, seed, 90.0);
+            let minos = scenarios::minos_with_threshold(threshold);
+            let r = run_single(&cfg, &minos, 0, false, None)
+                .map_err(|e| e.to_string())?;
+            // Unique invocation ids among completions.
+            let mut ids: Vec<u64> = r.records.iter().map(|x| x.inv_id).collect();
+            let n = ids.len();
+            ids.sort();
+            ids.dedup();
+            if ids.len() != n {
+                return Err("duplicate completed invocation".into());
+            }
+            for rec in &r.records {
+                if rec.attempts > minos.retry_cap + 1 {
+                    return Err(format!("attempts {} over cap", rec.attempts));
+                }
+                if rec.completed_at < rec.submitted_at {
+                    return Err("time travel".into());
+                }
+                if rec.exec_ms <= 0.0 || rec.analysis_ms <= 0.0 {
+                    return Err("non-positive durations".into());
+                }
+            }
+            if r.cost_events.iter().any(|e| e.usd <= 0.0) {
+                return Err("non-positive cost event".into());
+            }
+            let term_events =
+                r.cost_events.iter().filter(|e| e.terminated).count() as u64;
+            if term_events != r.terminations {
+                return Err(format!(
+                    "terminated cost events {} != terminations {}",
+                    term_events, r.terminations
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_baseline_never_benchmarks_or_terminates() {
+    prop::check(
+        "baseline-purity",
+        |rng| (rng.next_u64(), rng.below(7) as u32),
+        |&(seed, day)| {
+            let cfg = scenarios::quick_config(day, seed, 60.0);
+            let r = run_single(&cfg, &MinosConfig::baseline(), 0, false, None)
+                .map_err(|e| e.to_string())?;
+            if r.terminations != 0 || !r.bench_scores.is_empty() {
+                return Err("baseline ran Minos machinery".into());
+            }
+            if r.records.iter().any(|rec| rec.bench_ms.is_some() || rec.forced) {
+                return Err("baseline records carry benchmark state".into());
+            }
+            Ok(())
+        },
+    );
+}
