@@ -1,6 +1,9 @@
 """Repo-root pytest config: make `pytest python/tests/` work from the root
 by putting the python/ package directory on sys.path (the tests import the
-`compile` package)."""
+`compile` package).
+
+The full check gate (rustfmt + clippy + tier-1 cargo tests + these pytest
+suites) is `scripts/check.sh`; run it before sending changes."""
 
 import os
 import sys

@@ -1,0 +1,102 @@
+//! Trace-replay throughput benchmarks: how fast the engine generates and
+//! replays a large multi-function trace.
+//!
+//! The dispatch hot path (TraceArrival → Dispatch → start → Finish) does no
+//! per-event allocation — arrivals are indexed out of one shared schedule —
+//! so replay throughput is bounded by the event queue and placement, not by
+//! the workload driver. The headline measurement replays a ≥100k-invocation
+//! synthetic trace (2 h × 8 functions) through a single deployment; a
+//! second measurement runs the full per-function engine (pre-test +
+//! replay per function) on a smaller trace.
+//!
+//! Run: `cargo bench --bench trace_replay`
+
+use minos::coordinator::MinosConfig;
+use minos::experiment::{config::ExperimentConfig, runner};
+use minos::testkit::bench::{throughput, time_median};
+use minos::trace::{FunctionRegistry, ReplaySchedule, SynthConfig};
+
+fn main() {
+    println!("== trace replay benchmarks ==\n");
+
+    // Trace generation itself.
+    let synth = SynthConfig {
+        n_functions: 8,
+        hours: 2.0,
+        total_rate_rps: 14.5,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut n_records = 0usize;
+    let t = time_median("synth: 2 h × 8 fn trace", 3, || {
+        let tr = synth.generate();
+        n_records = tr.len();
+        n_records
+    });
+    println!(
+        "{}  ({:.1}k records, {:.2} M records/s)",
+        t.report(),
+        n_records as f64 / 1e3,
+        throughput(&t, n_records as u64) / 1e6
+    );
+
+    let trace = synth.generate();
+    assert!(
+        trace.len() >= 100_000,
+        "benchmark needs a ≥100k-invocation trace, got {}",
+        trace.len()
+    );
+
+    // Dispatch hot path: the whole trace replayed through one baseline
+    // deployment (no gate, no pre-test) — pure arrival/dispatch/finish
+    // churn at ~14.5 requests/s over 2 simulated hours.
+    let schedule = std::sync::Arc::new(ReplaySchedule {
+        arrivals: trace.records().iter().map(|r| (r.t, r.payload_scale)).collect(),
+    });
+    let mut cfg = ExperimentConfig::paper_day(0);
+    cfg.seed = 0xBE7C;
+    cfg.replay = Some(schedule);
+    let base = MinosConfig::baseline();
+    let mut completed = 0u64;
+    let t = time_median("replay: ≥100k invocations, one deployment", 3, || {
+        let r = runner::run_single(&cfg, &base, 0, false, None).unwrap();
+        completed = r.successful();
+        completed
+    });
+    assert_eq!(
+        completed as usize,
+        trace.len(),
+        "every replayed invocation must complete"
+    );
+    println!(
+        "{}  ({:.1}k replayed invocations/s)",
+        t.report(),
+        throughput(&t, completed) / 1e3
+    );
+
+    // Full multi-function engine: per-function pre-test + replay across
+    // 8 heterogeneous deployments.
+    let small = SynthConfig {
+        n_functions: 8,
+        hours: 0.25,
+        total_rate_rps: 8.0,
+        seed: 43,
+        ..Default::default()
+    }
+    .generate();
+    let registry = FunctionRegistry::demo(small.n_functions());
+    let trace_cfg = ExperimentConfig::paper_day(1);
+    let mut done = 0u64;
+    let t = time_median("run_trace: 8-fn engine (pretests + replay)", 3, || {
+        let o = runner::run_trace(&trace_cfg, &registry, &small, None).unwrap();
+        done = o.total_completed();
+        done
+    });
+    println!(
+        "{}  ({} of {} trace invocations completed, {:.1}k/s)",
+        t.report(),
+        done,
+        small.len(),
+        throughput(&t, done) / 1e3
+    );
+}

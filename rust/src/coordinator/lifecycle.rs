@@ -92,6 +92,7 @@ mod tests {
             submitted_at: SimTime::ZERO,
             retries,
             forced_pass: false,
+            payload_scale: 1.0,
         }
     }
 

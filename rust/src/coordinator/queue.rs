@@ -22,6 +22,10 @@ pub struct Invocation {
     pub retries: u32,
     /// Set when the retry cap forced this invocation to skip the benchmark.
     pub forced_pass: bool,
+    /// Request payload size relative to the function's nominal request
+    /// (1.0 for closed-loop/open-loop modes; trace replay sets it from the
+    /// trace record).
+    pub payload_scale: f64,
 }
 
 /// FIFO invocation queue with conservation counters.
@@ -42,6 +46,12 @@ impl InvocationQueue {
 
     /// Submit a brand-new invocation from a virtual user.
     pub fn submit(&mut self, vu: u32, now: SimTime) -> Invocation {
+        self.submit_scaled(vu, 1.0, now)
+    }
+
+    /// Submit with an explicit payload scale (trace-replay arrivals).
+    pub fn submit_scaled(&mut self, vu: u32, payload_scale: f64, now: SimTime) -> Invocation {
+        debug_assert!(payload_scale > 0.0, "payload scale must be positive");
         self.next_id += 1;
         self.submitted += 1;
         let inv = Invocation {
@@ -50,6 +60,7 @@ impl InvocationQueue {
             submitted_at: now,
             retries: 0,
             forced_pass: false,
+            payload_scale,
         };
         self.q.push_back(inv);
         inv
@@ -168,6 +179,19 @@ mod tests {
         let again = q.take().unwrap();
         assert_eq!(again.id, a.id);
         assert_eq!(again.retries, 0);
+    }
+
+    #[test]
+    fn payload_scale_defaults_and_survives_requeue() {
+        let mut q = InvocationQueue::new();
+        assert_eq!(q.submit(0, SimTime::ZERO).payload_scale, 1.0);
+        let big = q.submit_scaled(1, 3.5, SimTime::ZERO);
+        assert_eq!(big.payload_scale, 3.5);
+        let _ = q.take().unwrap(); // the plain one
+        let taken = q.take().unwrap();
+        q.requeue(taken);
+        assert_eq!(q.q.back().unwrap().payload_scale, 3.5);
+        assert!(q.conserved());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Experiment configuration (paper §III-A, "Environment Configuration").
 
+use std::sync::Arc;
+
 use crate::coordinator::MinosConfig;
 use crate::platform::billing::Billing;
 use crate::platform::PlatformConfig;
+use crate::trace::ReplaySchedule;
 use crate::workload::{FunctionSpec, VirtualUsers};
 
 /// Full configuration of one experiment day.
@@ -37,6 +40,12 @@ pub struct ExperimentConfig {
     /// asynchronous queued workload); the closed loop is only the paper's
     /// load generator. `None` = closed loop.
     pub open_loop_rate_rps: Option<f64>,
+    /// Trace-replay mode: deterministic arrivals at the scheduled times
+    /// with per-arrival payload scales, replacing both the closed loop and
+    /// the Poisson open loop. Shared (`Arc`) because multi-function runs
+    /// clone the config per function. Takes precedence over
+    /// `open_loop_rate_rps`.
+    pub replay: Option<Arc<ReplaySchedule>>,
 }
 
 impl ExperimentConfig {
@@ -55,6 +64,7 @@ impl ExperimentConfig {
             billing: Billing::paper(),
             online_update_every: None,
             open_loop_rate_rps: None,
+            replay: None,
         }
     }
 

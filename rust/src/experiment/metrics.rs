@@ -143,6 +143,65 @@ impl RunResult {
     }
 }
 
+/// Per-function aggregate of one trace-replay run — the row the
+/// multi-function report prints (p50/p95 durations, cost, termination
+/// rate, all per function id).
+#[derive(Debug, Clone)]
+pub struct FunctionBreakdown {
+    pub function: u32,
+    pub name: String,
+    /// Arrivals the trace addressed to this function.
+    pub arrivals: u64,
+    pub successful: u64,
+    /// End-to-end (submit → complete) latency percentiles, ms.
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    /// Billed execution-duration percentiles, ms.
+    pub p50_exec_ms: f64,
+    pub p95_exec_ms: f64,
+    pub terminations: u64,
+    /// Terminations / benchmarked cold starts.
+    pub termination_rate: f64,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub total_cost_usd: f64,
+    pub cost_per_million_usd: f64,
+    /// Elysium threshold in force for this function.
+    pub threshold_ms: f64,
+}
+
+impl FunctionBreakdown {
+    /// Aggregate one function's run into its report row.
+    pub fn from_run(function: u32, name: &str, arrivals: u64, r: &RunResult) -> FunctionBreakdown {
+        let pct = |xs: &[f64], q: f64| -> f64 {
+            if xs.is_empty() {
+                0.0
+            } else {
+                crate::stats::percentile(xs, q)
+            }
+        };
+        let lat = r.latencies();
+        let exec = r.exec_durations();
+        FunctionBreakdown {
+            function,
+            name: name.to_string(),
+            arrivals,
+            successful: r.successful(),
+            p50_latency_ms: pct(&lat, 50.0),
+            p95_latency_ms: pct(&lat, 95.0),
+            p50_exec_ms: pct(&exec, 50.0),
+            p95_exec_ms: pct(&exec, 95.0),
+            terminations: r.terminations,
+            termination_rate: r.termination_rate(),
+            cold_starts: r.cold_starts,
+            warm_hits: r.warm_hits,
+            total_cost_usd: r.total_cost_usd(),
+            cost_per_million_usd: r.cost_per_million_usd(),
+            threshold_ms: r.threshold_ms,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +269,46 @@ mod tests {
         assert_eq!(r.cost_per_million_usd(), 0.0);
         assert_eq!(r.termination_rate(), 0.0);
         assert!(r.cost_series(10.0, 100.0).is_empty());
+    }
+
+    #[test]
+    fn function_breakdown_aggregates() {
+        let mut records = Vec::new();
+        for i in 0..100u64 {
+            let mut x = rec(i as f64 + 2.0, 2_000.0);
+            x.submitted_at = SimTime::from_secs(i as f64);
+            x.exec_ms = 1_000.0 + i as f64 * 10.0; // 1000..1990
+            records.push(x);
+        }
+        let r = RunResult {
+            records,
+            cost_events: vec![cost(1.0, 2e-5)],
+            terminations: 5,
+            bench_scores: vec![300.0; 20],
+            cold_starts: 7,
+            warm_hits: 93,
+            threshold_ms: 410.0,
+            ..Default::default()
+        };
+        let b = FunctionBreakdown::from_run(3, "weather-3", 100, &r);
+        assert_eq!(b.function, 3);
+        assert_eq!(b.successful, 100);
+        assert_eq!(b.arrivals, 100);
+        assert!((b.p50_exec_ms - 1_495.0).abs() < 1e-9);
+        assert!((b.p95_exec_ms - 1_940.5).abs() < 1e-9);
+        assert!((b.termination_rate - 0.25).abs() < 1e-12);
+        assert!((b.total_cost_usd - 2e-5).abs() < 1e-18);
+        assert!((b.cost_per_million_usd - 0.2).abs() < 1e-9);
+        assert_eq!(b.threshold_ms, 410.0);
+        assert!(b.p50_latency_ms > 0.0);
+    }
+
+    #[test]
+    fn function_breakdown_of_empty_run() {
+        let b = FunctionBreakdown::from_run(0, "idle", 0, &RunResult::default());
+        assert_eq!(b.successful, 0);
+        assert_eq!(b.p50_latency_ms, 0.0);
+        assert_eq!(b.p95_exec_ms, 0.0);
+        assert_eq!(b.termination_rate, 0.0);
     }
 }

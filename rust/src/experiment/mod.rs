@@ -15,5 +15,8 @@ pub mod runner;
 pub mod sweep;
 
 pub use config::ExperimentConfig;
-pub use metrics::{InvocationRecord, RunResult};
-pub use runner::{run_paired, run_pretest, run_single, run_week, PairedOutcome};
+pub use metrics::{FunctionBreakdown, InvocationRecord, RunResult};
+pub use runner::{
+    run_paired, run_pretest, run_single, run_trace, run_week, FunctionRunOutcome,
+    PairedOutcome, TraceOutcome,
+};

@@ -8,7 +8,8 @@ use crate::util::prng::Rng;
 use crate::util::timefmt::signed_pct;
 
 use super::figures;
-use super::runner::PairedOutcome;
+use super::metrics::FunctionBreakdown;
+use super::runner::{PairedOutcome, TraceOutcome};
 
 /// Render the full week report (Figs. 4–6 tables + overall numbers).
 pub fn week_report(outcomes: &[PairedOutcome]) -> String {
@@ -147,11 +148,85 @@ pub fn fig7_report(outcome: &PairedOutcome, step_s: f64, horizon_s: f64) -> Stri
     out
 }
 
+/// Render the per-function breakdown of a trace replay.
+pub fn trace_report(outcome: &TraceOutcome) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== trace replay: per-function breakdown ==");
+    let _ = writeln!(
+        out,
+        "{:>4} {:<14} {:>8} {:>8} {:>9} {:>9} {:>9} {:>6} {:>6} {:>7} {:>7} {:>10}",
+        "id", "function", "arrived", "done", "lat p50", "lat p95", "thresh",
+        "term", "rate", "cold", "warm", "$ / M"
+    );
+    let mut rows = Vec::with_capacity(outcome.per_function.len());
+    for f in &outcome.per_function {
+        rows.push(FunctionBreakdown::from_run(
+            f.id.0,
+            &f.name,
+            f.arrivals as u64,
+            &f.result,
+        ));
+    }
+    for b in &rows {
+        let _ = writeln!(
+            out,
+            "{:>4} {:<14} {:>8} {:>8} {:>9.0} {:>9.0} {:>9.0} {:>6} {:>6.2} {:>7} {:>7} {:>10.3}",
+            b.function,
+            b.name,
+            b.arrivals,
+            b.successful,
+            b.p50_latency_ms,
+            b.p95_latency_ms,
+            b.threshold_ms,
+            b.terminations,
+            b.termination_rate,
+            b.cold_starts,
+            b.warm_hits,
+            b.cost_per_million_usd,
+        );
+    }
+    let completed = outcome.total_completed();
+    let _ = writeln!(
+        out,
+        "total: {} arrivals, {} completed, {} terminations, ${:.6} \
+         ({:.3} $/M successful)",
+        outcome.total_arrivals(),
+        completed,
+        outcome.total_terminations(),
+        outcome.total_cost_usd(),
+        if completed > 0 {
+            outcome.total_cost_usd() / completed as f64 * 1e6
+        } else {
+            0.0
+        },
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::experiment::config::ExperimentConfig;
     use crate::experiment::runner::run_paired;
+
+    #[test]
+    fn trace_report_renders_per_function_rows() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 2,
+            hours: 0.03,
+            total_rate_rps: 2.0,
+            seed: 3,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let cfg = ExperimentConfig::smoke(0, 51);
+        let o = crate::experiment::runner::run_trace(&cfg, &registry, &trace, None).unwrap();
+        let rpt = trace_report(&o);
+        assert!(rpt.contains("per-function breakdown"), "{rpt}");
+        assert!(rpt.contains("weather-0"), "{rpt}");
+        assert!(rpt.contains("total:"), "{rpt}");
+    }
 
     #[test]
     fn reports_render() {

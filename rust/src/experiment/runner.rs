@@ -31,6 +31,7 @@ use crate::coordinator::MinosConfig;
 use crate::platform::{FaasPlatform, InstanceId, Placement};
 use crate::runtime::Runtime;
 use crate::sim::{EventQueue, SimTime};
+use crate::trace::{FunctionId, FunctionRegistry, Trace};
 use crate::util::prng::Rng;
 use crate::workload::weather;
 
@@ -42,6 +43,9 @@ use super::metrics::{CostEvent, InvocationRecord, RunResult};
 enum Event {
     /// Open-loop mode: a Poisson arrival (schedules its own successor).
     Arrival,
+    /// Trace-replay mode: the `idx`-th scheduled arrival (schedules its
+    /// successor at the next trace timestamp — no allocation per event).
+    TraceArrival { idx: usize },
     /// A virtual user submits a new request.
     Submit { vu: u32 },
     /// Try to place the queue head.
@@ -102,16 +106,23 @@ pub fn run_single(
         Vec::new()
     };
 
-    match cfg.open_loop_rate_rps {
-        // Open loop: one Poisson arrival process drives the queue.
-        Some(rate) => {
-            assert!(rate > 0.0, "open-loop rate must be positive");
-            events.schedule(SimTime::ZERO, Event::Arrival);
+    if let Some(schedule) = &cfg.replay {
+        // Trace replay: arrivals happen exactly when the trace says.
+        if let Some(&(t0, _)) = schedule.arrivals.first() {
+            events.schedule(t0, Event::TraceArrival { idx: 0 });
         }
-        // Closed loop (the paper's load generator): all VUs submit at t=0.
-        None => {
-            for vu in 0..cfg.vus.n_vus {
-                events.schedule(SimTime::ZERO, Event::Submit { vu });
+    } else {
+        match cfg.open_loop_rate_rps {
+            // Open loop: one Poisson arrival process drives the queue.
+            Some(rate) => {
+                assert!(rate > 0.0, "open-loop rate must be positive");
+                events.schedule(SimTime::ZERO, Event::Arrival);
+            }
+            // Closed loop (the paper's load generator): all VUs submit at t=0.
+            None => {
+                for vu in 0..cfg.vus.n_vus {
+                    events.schedule(SimTime::ZERO, Event::Submit { vu });
+                }
             }
         }
     }
@@ -128,6 +139,20 @@ pub fn run_single(
                     let rate = cfg.open_loop_rate_rps.expect("arrival without rate");
                     let gap_ms = rng_workload.exponential(rate) * 1_000.0;
                     events.schedule_in_ms(gap_ms, Event::Arrival);
+                }
+            }
+
+            Event::TraceArrival { idx } => {
+                let schedule = cfg.replay.as_ref().expect("trace arrival without schedule");
+                let (_, payload_scale) = schedule.arrivals[idx];
+                // Round-robin the VU id: it only selects the dataset for
+                // real execution; the trace, not a think loop, drives load.
+                let vu = arrival_rr % cfg.vus.n_vus.max(1);
+                arrival_rr = arrival_rr.wrapping_add(1);
+                queue.submit_scaled(vu, payload_scale, now);
+                events.schedule(now, Event::Dispatch);
+                if let Some(&(t_next, _)) = schedule.arrivals.get(idx + 1) {
+                    events.schedule(t_next, Event::TraceArrival { idx: idx + 1 });
                 }
             }
 
@@ -241,9 +266,9 @@ pub fn run_single(
                     bench_ms: rec.bench_ms,
                     prediction,
                 });
-                // Closed loop: the VU thinks, then submits again.
-                // (Open-loop arrivals schedule themselves instead.)
-                if cfg.open_loop_rate_rps.is_none() {
+                // Closed loop: the VU thinks, then submits again. (Open-
+                // loop and trace-replay arrivals schedule themselves.)
+                if cfg.open_loop_rate_rps.is_none() && cfg.replay.is_none() {
                     let next = cfg.vus.next_submit_at(now);
                     events.schedule(next, Event::Submit { vu: inv.vu });
                 }
@@ -287,7 +312,7 @@ fn start_invocation(
         ctx;
     let perf = platform.perf_factor(inst, now);
     let noise = platform.invocation_noise();
-    let phases = cfg.function.sample(perf, noise, rng);
+    let phases = cfg.function.sample_scaled(perf, noise, inv.payload_scale, rng);
 
     if cold {
         let draw = rng.f64();
@@ -403,6 +428,9 @@ fn verify_against_oracle(
 pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<PretestReport> {
     let mut pretest_cfg = cfg.clone();
     pretest_cfg.vus = cfg.pretest_vus.clone();
+    // The pre-test is always the paper's closed-loop calibration workload,
+    // even when the main run replays a trace.
+    pretest_cfg.replay = None;
     let minos = MinosConfig {
         enabled: true,
         elysium_threshold_ms: f64::INFINITY,
@@ -479,6 +507,101 @@ pub fn run_week(
             run_paired(&cfg, runtime)
         })
         .collect()
+}
+
+/// Per-function outcome of a trace replay.
+#[derive(Debug)]
+pub struct FunctionRunOutcome {
+    pub id: FunctionId,
+    pub name: String,
+    /// Arrivals the trace addressed to this function.
+    pub arrivals: usize,
+    /// This function's own pre-test (its threshold calibration).
+    pub pretest: PretestReport,
+    pub result: RunResult,
+}
+
+/// Outcome of replaying a multi-function trace.
+#[derive(Debug)]
+pub struct TraceOutcome {
+    pub per_function: Vec<FunctionRunOutcome>,
+}
+
+impl TraceOutcome {
+    pub fn total_arrivals(&self) -> usize {
+        self.per_function.iter().map(|f| f.arrivals).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.per_function.iter().map(|f| f.result.successful()).sum()
+    }
+
+    pub fn total_cost_usd(&self) -> f64 {
+        self.per_function.iter().map(|f| f.result.total_cost_usd()).sum()
+    }
+
+    pub fn total_terminations(&self) -> u64 {
+        self.per_function.iter().map(|f| f.result.terminations).sum()
+    }
+}
+
+/// Replay a multi-function trace: each function in the registry is its own
+/// deployment (own warm pool, own instance lottery — exactly how FaaS
+/// platforms isolate functions), pre-tested for its own elysium threshold,
+/// then driven by the trace's arrivals for that function id. Functions the
+/// trace never invokes are skipped.
+pub fn run_trace(
+    base: &ExperimentConfig,
+    registry: &FunctionRegistry,
+    trace: &Trace,
+    runtime: Option<&Runtime>,
+) -> Result<TraceOutcome> {
+    // Refuse partial coverage: silently dropping records whose function id
+    // has no profile would make the totals read as a complete replay.
+    anyhow::ensure!(
+        trace.n_functions() <= registry.len(),
+        "trace addresses function ids up to {} but the registry defines only {} \
+         profiles",
+        trace.n_functions().saturating_sub(1),
+        registry.len()
+    );
+    let mut per_function = Vec::new();
+    // One O(N) pass splits the trace into per-function schedules.
+    let mut schedules = trace.schedules(registry.len());
+    for profile in registry.iter() {
+        let schedule = std::mem::take(&mut schedules[profile.id.0 as usize]);
+        if schedule.is_empty() {
+            continue;
+        }
+        let mut cfg = base.clone();
+        cfg.function = profile.spec.clone();
+        cfg.minos = profile.minos.clone();
+        cfg.elysium_percentile = profile.elysium_percentile;
+        cfg.open_loop_rate_rps = None;
+        cfg.replay = None;
+        // Separate deployments get separate platform lotteries.
+        cfg.seed = base
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(profile.id.0 as u64 + 1));
+        // Calibrate this function's threshold (closed-loop pre-test,
+        // paper §II-B-a), then replay its slice of the trace.
+        let pretest = run_pretest(&cfg, runtime)?;
+        let minos_cfg = MinosConfig {
+            elysium_threshold_ms: pretest.threshold_ms,
+            ..cfg.minos.clone()
+        };
+        let arrivals = schedule.len();
+        cfg.replay = Some(std::sync::Arc::new(schedule));
+        let result = run_single(&cfg, &minos_cfg, 0, false, runtime)?;
+        per_function.push(FunctionRunOutcome {
+            id: profile.id,
+            name: profile.name.clone(),
+            arrivals,
+            pretest,
+            result,
+        });
+    }
+    Ok(TraceOutcome { per_function })
 }
 
 #[cfg(test)]
@@ -598,5 +721,127 @@ mod tests {
         }
         assert!(saw_forced > 0, "no forced cold completions observed");
         assert_eq!(r.forced_passes, saw_forced);
+    }
+
+    #[test]
+    fn replay_arrivals_follow_schedule() {
+        let mut cfg = ExperimentConfig::smoke(0, 21);
+        let schedule = crate::trace::ReplaySchedule::from_times_ms(&[
+            0.0, 500.0, 1_000.0, 1_000.0, 2_000.0,
+        ]);
+        cfg.replay = Some(std::sync::Arc::new(schedule));
+        let r = run_single(&cfg, &MinosConfig::baseline(), 0, false, None).unwrap();
+        assert_eq!(r.successful(), 5, "every scheduled arrival must complete");
+        let mut subs: Vec<f64> =
+            r.records.iter().map(|x| x.submitted_at.as_ms()).collect();
+        subs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(subs, vec![0.0, 500.0, 1_000.0, 1_000.0, 2_000.0]);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut cfg = ExperimentConfig::smoke(1, 22);
+        let schedule = std::sync::Arc::new(crate::trace::ReplaySchedule::from_times_ms(
+            &(0..200).map(|i| i as f64 * 400.0).collect::<Vec<f64>>(),
+        ));
+        cfg.replay = Some(schedule);
+        let minos = MinosConfig {
+            elysium_threshold_ms: 380.0,
+            ..MinosConfig::paper_default()
+        };
+        let a = run_single(&cfg, &minos, 0, false, None).unwrap();
+        let b = run_single(&cfg, &minos, 0, false, None).unwrap();
+        assert_eq!(a.successful(), b.successful());
+        assert_eq!(a.terminations, b.terminations);
+        assert!((a.total_cost_usd() - b.total_cost_usd()).abs() < 1e-15);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.completed_at, y.completed_at);
+        }
+    }
+
+    #[test]
+    fn payload_scale_lengthens_execution() {
+        let schedule = |scale: f64| {
+            std::sync::Arc::new(crate::trace::ReplaySchedule {
+                arrivals: (0..50)
+                    .map(|i| (SimTime::from_ms(i as f64 * 5_000.0), scale))
+                    .collect(),
+            })
+        };
+        let mut small = ExperimentConfig::smoke(0, 23);
+        small.replay = Some(schedule(1.0));
+        let mut big = ExperimentConfig::smoke(0, 23);
+        big.replay = Some(schedule(3.0));
+        let base = MinosConfig::baseline();
+        let r_small = run_single(&small, &base, 0, false, None).unwrap();
+        let r_big = run_single(&big, &base, 0, false, None).unwrap();
+        let m_small = crate::stats::mean(&r_small.exec_durations());
+        let m_big = crate::stats::mean(&r_big.exec_durations());
+        assert!(
+            m_big > m_small * 1.8,
+            "3× payload should roughly triple the data phases: {m_small} vs {m_big}"
+        );
+    }
+
+    #[test]
+    fn trace_run_reports_per_function() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 3,
+            hours: 0.05,
+            total_rate_rps: 2.0,
+            seed: 7,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let cfg = ExperimentConfig::smoke(1, 31);
+        let o = run_trace(&cfg, &registry, &trace, None).unwrap();
+        // One outcome per function the trace actually invokes (a bursty
+        // function can legitimately stay silent over a short window).
+        let ids: Vec<FunctionId> = o.per_function.iter().map(|f| f.id).collect();
+        assert_eq!(ids, trace.function_ids());
+        for f in &o.per_function {
+            assert_eq!(
+                f.result.successful(),
+                f.arrivals as u64,
+                "function {} must complete every trace arrival",
+                f.name
+            );
+            assert!(f.pretest.threshold_ms.is_finite() && f.pretest.threshold_ms > 0.0);
+            assert_eq!(f.arrivals, trace.count_for(f.id));
+        }
+        assert_eq!(o.total_completed(), trace.len() as u64);
+        assert_eq!(o.total_arrivals(), trace.len());
+        assert!(o.total_cost_usd() > 0.0);
+        // Deployments are independent: per-function thresholds differ
+        // (different lotteries). f0 (hot Poisson) and f2 (diurnal) always
+        // have arrivals at these rates.
+        let th = |id: u32| {
+            o.per_function
+                .iter()
+                .find(|f| f.id == FunctionId(id))
+                .expect("function present")
+                .pretest
+                .threshold_ms
+        };
+        assert_ne!(th(0), th(2));
+    }
+
+    #[test]
+    fn trace_run_rejects_uncovered_function_ids() {
+        use crate::trace::{FunctionId as Fid, Trace, TraceRecord};
+        let trace = Trace::from_records(vec![
+            TraceRecord { t: SimTime::ZERO, function: Fid(0), payload_scale: 1.0 },
+            TraceRecord {
+                t: SimTime::from_ms(10.0),
+                function: Fid(3),
+                payload_scale: 1.0,
+            },
+        ]);
+        let registry = crate::trace::FunctionRegistry::demo(2);
+        let cfg = ExperimentConfig::smoke(0, 61);
+        let err = run_trace(&cfg, &registry, &trace, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("registry"), "unhelpful error: {msg}");
     }
 }

@@ -25,6 +25,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -1,21 +1,26 @@
 //! Minos CLI — the L3 leader entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (keep in sync with the `HELP` const below):
 //!   week       run the paper's 7-day experiment (Figs. 4-6) and print the report
 //!   fig7       run one day and print the Fig. 7 cost-over-time series
 //!   pretest    run the pre-test calibration and print the threshold
 //!   calibrate  measure real PJRT execution of the AOT artifacts
 //!   sweep      ablation: elysium percentile sweep (termination-rate trade-off)
 //!   online     run one day with the SIV online-threshold collector
+//!   openloop   one day with Poisson (async-queue) arrivals instead of VUs
+//!   replay     replay a multi-function trace (CSV file or seeded synthetic)
 //!
 //! `--real` executes the weather-regression HLO artifact through PJRT for
 //! every completed invocation (verifying numerics against the Rust oracle);
 //! without it the runs are pure simulation (identical decision dynamics).
 
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
 use minos::experiment::{config::ExperimentConfig, figures, report, runner};
-use minos::runtime::{calibrate::Calibration, Runtime};
+use minos::runtime::{calibrate::Calibration, ArtifactStore, Runtime};
+use minos::trace::{io as trace_io, FunctionRegistry, SynthConfig};
 use minos::util::args::Args;
 
 fn main() {
@@ -26,7 +31,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["real", "verbose"])
+    let args = Args::parse(std::env::args().skip(1), &["real", "verbose", "synth"])
         .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -37,6 +42,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "online" => cmd_online(&args),
         "openloop" => cmd_openloop(&args),
+        "replay" => cmd_replay(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -58,6 +64,8 @@ COMMANDS:
   sweep      elysium-percentile ablation            [--day N --seed N]
   online     one day with the online threshold      [--day N --seed N --every N]
   openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R]
+  replay     multi-function trace replay             [--trace FILE | --synth]
+             [--functions N --hours H --rate R --day N --seed N --out FILE]
 ";
 
 fn load_runtime(args: &Args) -> Result<Option<Runtime>> {
@@ -127,6 +135,19 @@ fn cmd_pretest(args: &Args) -> Result<()> {
 }
 
 fn cmd_calibrate() -> Result<()> {
+    // Skip (exit 0) with a clear message when the prerequisites are
+    // absent, rather than failing: calibration is optional tooling.
+    if ArtifactStore::discover_default().is_err() {
+        println!("calibrate: artifacts not found — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    if !Runtime::pjrt_enabled() {
+        println!(
+            "calibrate: this build has no PJRT support (built without the \
+             `pjrt` feature); skipping"
+        );
+        return Ok(());
+    }
     let rt = Runtime::load_default()?;
     let c = Calibration::measure(&rt, 15)?;
     println!("{}", c.report());
@@ -183,6 +204,76 @@ fn cmd_openloop(args: &Args) -> Result<()> {
         o.successful_requests_improvement_pct(),
         o.cost_saving_pct()
     );
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let day = u(args, "day", 0)? as u32;
+    let seed = u(args, "seed", 0x31A5)?;
+    let rt = load_runtime(args)?;
+    let trace = if let Some(path) = args.get("trace") {
+        trace_io::read_csv(Path::new(path)).map_err(anyhow::Error::msg)?
+    } else if args.flag("synth") {
+        let n_functions = u(args, "functions", 8)? as usize;
+        let hours = f(args, "hours", 2.0)?;
+        let rate = f(args, "rate", 2.0)?;
+        if n_functions == 0 {
+            bail!("--functions must be at least 1");
+        }
+        if !(hours.is_finite() && hours > 0.0) {
+            bail!("--hours must be a positive number");
+        }
+        if !(rate.is_finite() && rate >= 0.0) {
+            bail!("--rate must be a non-negative number");
+        }
+        SynthConfig {
+            n_functions,
+            hours,
+            total_rate_rps: rate,
+            seed,
+            ..SynthConfig::default()
+        }
+        .generate()
+    } else {
+        bail!("replay needs --trace FILE or --synth (see `minos help`)");
+    };
+    if trace.is_empty() {
+        bail!("trace contains no invocations");
+    }
+    if let Some(out) = args.get("out") {
+        trace_io::write_csv(&trace, Path::new(out))?;
+        println!("trace written to {out} ({} records)", trace.len());
+    }
+    // Numeric ids are used verbatim, so the demo registry is sized
+    // max-id+1: guard against sparse hashed numeric ids blowing it up.
+    // Name labels are interned to dense ids (max id + 1 == distinct
+    // count), so they only hit the absolute cap, never the sparsity one.
+    let n_functions = trace.n_functions();
+    let distinct = trace.function_ids().len();
+    if n_functions > 4_096 && n_functions > 4 * distinct {
+        bail!(
+            "trace uses sparse numeric function ids (max id {}, only {distinct} \
+             distinct): renumber them densely, or use name labels — those are \
+             interned to dense ids",
+            n_functions - 1
+        );
+    }
+    if n_functions > 65_536 {
+        bail!("trace addresses {n_functions} functions; the demo registry caps at 65536");
+    }
+    println!(
+        "replaying {} invocations across {distinct} functions (span {})",
+        trace.len(),
+        trace.span()
+    );
+    let registry = FunctionRegistry::demo(n_functions);
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    let outcome = runner::run_trace(&cfg, &registry, &trace, rt.as_ref())?;
+    print!("{}", report::trace_report(&outcome));
+    if let Some(rt) = &rt {
+        println!("real PJRT executions: {}", rt.executions.get());
+    }
     Ok(())
 }
 

@@ -227,6 +227,87 @@ mod tests {
     }
 
     #[test]
+    fn take_warm_recycles_run_of_expired_then_returns_valid() {
+        let mut s = Scheduler::new();
+        // Oldest instance has a long lifetime; the two released after it
+        // (popped first under MRU) have already-elapsed lifetimes.
+        let keeper = s.create_instance(NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        s.mark_running(keeper);
+        s.release(keeper, SimTime::from_ms(1.0));
+        let mut doomed = Vec::new();
+        for i in 0..2 {
+            let id = s.create_instance(NodeId(1 + i), 1.0, 50.0, SimTime::ZERO);
+            s.mark_running(id);
+            s.release(id, SimTime::from_ms(2.0 + i as f64));
+            doomed.push(id);
+        }
+        let mut rec = 0;
+        // Both expired MRU entries are recycled in one call; the valid
+        // oldest instance comes out.
+        assert_eq!(s.take_warm(SimTime::from_ms(500.0), &mut rec), Some(keeper));
+        assert_eq!(rec, 2);
+        assert!(doomed.iter().all(|&id| !s.get(id).is_live()));
+        assert_eq!(s.warm_count(), 0);
+        assert_eq!(s.live_count(), 1);
+    }
+
+    #[test]
+    fn live_counter_consistent_across_crash_and_terminate_paths() {
+        let mut s = Scheduler::new();
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            let id = s.create_instance(NodeId(i as u32), 1.0, 1e9, SimTime::ZERO);
+            s.mark_running(id);
+            ids.push(id);
+        }
+        assert_eq!(s.live_count(), 6);
+        // Crash one while busy.
+        s.terminate(ids[0]);
+        assert_eq!(s.live_count(), 5);
+        // Release the rest, then terminate one from the warm pool.
+        for &id in &ids[1..] {
+            s.release(id, SimTime::from_ms(1.0));
+        }
+        s.terminate(ids[1]);
+        assert_eq!(s.live_count(), 4);
+        assert_eq!(s.warm_count(), 4);
+        // Expire two via idle timeout (idle since 1 ms, now 100 ms).
+        let expired = s.expire_idle(SimTime::from_ms(100.0), 50.0);
+        assert_eq!(expired.len(), 4);
+        // live_count() itself cross-checks the incremental counter against
+        // a full table scan in debug builds.
+        assert_eq!(s.live_count(), 0);
+    }
+
+    #[test]
+    fn terminate_of_dead_instance_does_not_double_count() {
+        let mut s = Scheduler::new();
+        let a = s.create_instance(NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        let b = s.create_instance(NodeId(1), 1.0, 1e9, SimTime::ZERO);
+        s.mark_running(a);
+        s.mark_running(b);
+        s.terminate(a);
+        s.terminate(a); // double-terminate must be a no-op for the counter
+        assert_eq!(s.live_count(), 1);
+        s.terminate(b);
+        assert_eq!(s.live_count(), 0);
+    }
+
+    #[test]
+    fn mru_order_interleaves_with_reuse() {
+        // Release a, b, then re-use b (MRU), release it again: order of
+        // preference stays b (refreshed), then a.
+        let (mut s, ids) = sched_with_idle(2);
+        let mut rec = 0;
+        let got = s.take_warm(SimTime::from_ms(5.0), &mut rec).unwrap();
+        assert_eq!(got, ids[1]);
+        s.release(got, SimTime::from_ms(6.0));
+        assert_eq!(s.take_warm(SimTime::from_ms(7.0), &mut rec), Some(ids[1]));
+        assert_eq!(s.take_warm(SimTime::from_ms(7.0), &mut rec), Some(ids[0]));
+        assert_eq!(s.take_warm(SimTime::from_ms(7.0), &mut rec), None);
+    }
+
+    #[test]
     fn pick_node_uniform_coverage() {
         let s = Scheduler::new();
         let mut rng = Rng::new(1);

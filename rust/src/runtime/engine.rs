@@ -4,12 +4,15 @@
 //! artifact, typed execute helpers that move f32 slices in and out. The
 //! artifacts are lowered with `return_tuple=True`, so outputs decompose
 //! with `to_tupleN`.
+//!
+//! The `xla` bindings are not part of the hermetic vendor set, so the real
+//! engine is gated behind the `pjrt` cargo feature. Without it this module
+//! compiles a stub [`Runtime`] with the identical API whose `load` fails
+//! with a clear message — simulation-only commands (everything except
+//! `--real` and `calibrate`) never notice the difference. Callers that want
+//! to *skip* rather than fail check [`Runtime::pjrt_enabled`].
 
-use std::time::{Duration, Instant};
-
-use anyhow::{Context, Result};
-
-use super::artifacts::ArtifactStore;
+use std::time::Duration;
 
 /// Output of one weather-analysis execution.
 #[derive(Debug, Clone)]
@@ -27,123 +30,218 @@ pub struct BenchOutput {
     pub elapsed: Duration,
 }
 
-/// Compiled executables bound to a PJRT CPU client.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    linreg: xla::PjRtLoadedExecutable,
-    bench: xla::PjRtLoadedExecutable,
-    n_days: usize,
-    n_features: usize,
-    bench_dim: usize,
-    /// Cumulative number of executions (metrics).
-    pub executions: std::cell::Cell<u64>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_engine {
+    use std::time::Instant;
 
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime")
-            .field("n_days", &self.n_days)
-            .field("n_features", &self.n_features)
-            .field("bench_dim", &self.bench_dim)
-            .field("executions", &self.executions.get())
-            .finish()
+    use anyhow::{Context, Result};
+
+    use super::{BenchOutput, LinregOutput};
+    use crate::runtime::artifacts::ArtifactStore;
+
+    /// Compiled executables bound to a PJRT CPU client.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        linreg: xla::PjRtLoadedExecutable,
+        bench: xla::PjRtLoadedExecutable,
+        n_days: usize,
+        n_features: usize,
+        bench_dim: usize,
+        /// Cumulative number of executions (metrics).
+        pub executions: std::cell::Cell<u64>,
+    }
+
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Runtime")
+                .field("n_days", &self.n_days)
+                .field("n_features", &self.n_features)
+                .field("bench_dim", &self.bench_dim)
+                .field("executions", &self.executions.get())
+                .finish()
+        }
+    }
+
+    impl Runtime {
+        /// Whether this build can execute artifacts through PJRT.
+        pub const fn pjrt_enabled() -> bool {
+            true
+        }
+
+        /// Compile both artifacts on a fresh CPU client.
+        pub fn load(store: &ArtifactStore) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 artifact path")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))
+            };
+            Ok(Runtime {
+                linreg: compile(&store.linreg_hlo)?,
+                bench: compile(&store.bench_hlo)?,
+                n_days: store.n_days(),
+                n_features: store.n_features(),
+                bench_dim: store.bench_dim(),
+                client,
+                executions: std::cell::Cell::new(0),
+            })
+        }
+
+        /// Load from the default artifact location.
+        pub fn load_default() -> Result<Runtime> {
+            Runtime::load(&ArtifactStore::discover_default()?)
+        }
+
+        pub fn n_days(&self) -> usize {
+            self.n_days
+        }
+
+        pub fn n_features(&self) -> usize {
+            self.n_features
+        }
+
+        pub fn bench_dim(&self) -> usize {
+            self.bench_dim
+        }
+
+        /// Execute the weather analysis: OLS fit + next-day prediction.
+        ///
+        /// `x` is row-major `(n_days, n_features)`, `y` is `(n_days,)`,
+        /// `x_next` is `(n_features,)`.
+        pub fn exec_linreg(
+            &self,
+            x: &[f32],
+            y: &[f32],
+            x_next: &[f32],
+        ) -> Result<LinregOutput> {
+            anyhow::ensure!(
+                x.len() == self.n_days * self.n_features,
+                "x has {} elements, want {}",
+                x.len(),
+                self.n_days * self.n_features
+            );
+            anyhow::ensure!(y.len() == self.n_days, "y has {} elements", y.len());
+            anyhow::ensure!(
+                x_next.len() == self.n_features,
+                "x_next has {} elements",
+                x_next.len()
+            );
+            let lx = xla::Literal::vec1(x)
+                .reshape(&[self.n_days as i64, self.n_features as i64])?;
+            let ly = xla::Literal::vec1(y);
+            let ln = xla::Literal::vec1(x_next);
+            let start = Instant::now();
+            let result = self.linreg.execute::<xla::Literal>(&[lx, ly, ln])?[0][0]
+                .to_literal_sync()?;
+            let elapsed = start.elapsed();
+            self.executions.set(self.executions.get() + 1);
+            let (theta_lit, pred_lit) = result.to_tuple2()?;
+            Ok(LinregOutput {
+                theta: theta_lit.to_vec::<f32>()?,
+                prediction: pred_lit.to_vec::<f32>()?[0],
+                elapsed,
+            })
+        }
+
+        /// Execute the cold-start benchmark (tiled Pallas matmul checksum).
+        pub fn exec_benchmark(&self, a: &[f32], b: &[f32]) -> Result<BenchOutput> {
+            let n = self.bench_dim * self.bench_dim;
+            anyhow::ensure!(a.len() == n && b.len() == n, "benchmark inputs must be {n}");
+            let la = xla::Literal::vec1(a)
+                .reshape(&[self.bench_dim as i64, self.bench_dim as i64])?;
+            let lb = xla::Literal::vec1(b)
+                .reshape(&[self.bench_dim as i64, self.bench_dim as i64])?;
+            let start = Instant::now();
+            let result =
+                self.bench.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+            let elapsed = start.elapsed();
+            self.executions.set(self.executions.get() + 1);
+            let checksum_lit = result.to_tuple1()?;
+            Ok(BenchOutput { checksum: checksum_lit.to_vec::<f32>()?[0], elapsed })
+        }
     }
 }
 
-impl Runtime {
-    /// Compile both artifacts on a fresh CPU client.
-    pub fn load(store: &ArtifactStore) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        };
-        Ok(Runtime {
-            linreg: compile(&store.linreg_hlo)?,
-            bench: compile(&store.bench_hlo)?,
-            n_days: store.n_days(),
-            n_features: store.n_features(),
-            bench_dim: store.bench_dim(),
-            client,
-            executions: std::cell::Cell::new(0),
-        })
+#[cfg(feature = "pjrt")]
+pub use pjrt_engine::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_engine {
+    use anyhow::{bail, Result};
+
+    use super::{BenchOutput, LinregOutput};
+    use crate::runtime::artifacts::ArtifactStore;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: minos was built without the \
+         `pjrt` feature (the `xla` bindings are not in the hermetic vendor set); \
+         simulation-only commands work without it";
+
+    /// API-identical stand-in compiled when the `pjrt` feature is off.
+    /// `load` always fails, so no instance of this type ever exists at
+    /// runtime; the methods only satisfy the call sites.
+    pub struct Runtime {
+        /// Cumulative number of executions (always 0 in the stub).
+        pub executions: std::cell::Cell<u64>,
     }
 
-    /// Load from the default artifact location.
-    pub fn load_default() -> Result<Runtime> {
-        Runtime::load(&ArtifactStore::discover_default()?)
+    impl std::fmt::Debug for Runtime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Runtime").field("pjrt", &false).finish()
+        }
     }
 
-    pub fn n_days(&self) -> usize {
-        self.n_days
-    }
+    impl Runtime {
+        /// Whether this build can execute artifacts through PJRT.
+        pub const fn pjrt_enabled() -> bool {
+            false
+        }
 
-    pub fn n_features(&self) -> usize {
-        self.n_features
-    }
+        /// Always fails with a clear message in stub builds.
+        pub fn load(_store: &ArtifactStore) -> Result<Runtime> {
+            bail!("{UNAVAILABLE}")
+        }
 
-    pub fn bench_dim(&self) -> usize {
-        self.bench_dim
-    }
+        /// Load from the default artifact location (fails in stub builds;
+        /// missing artifacts are reported first for a clearer message).
+        pub fn load_default() -> Result<Runtime> {
+            Runtime::load(&ArtifactStore::discover_default()?)
+        }
 
-    /// Execute the weather analysis: OLS fit + next-day prediction.
-    ///
-    /// `x` is row-major `(n_days, n_features)`, `y` is `(n_days,)`,
-    /// `x_next` is `(n_features,)`.
-    pub fn exec_linreg(&self, x: &[f32], y: &[f32], x_next: &[f32]) -> Result<LinregOutput> {
-        anyhow::ensure!(
-            x.len() == self.n_days * self.n_features,
-            "x has {} elements, want {}",
-            x.len(),
-            self.n_days * self.n_features
-        );
-        anyhow::ensure!(y.len() == self.n_days, "y has {} elements", y.len());
-        anyhow::ensure!(
-            x_next.len() == self.n_features,
-            "x_next has {} elements",
-            x_next.len()
-        );
-        let lx = xla::Literal::vec1(x)
-            .reshape(&[self.n_days as i64, self.n_features as i64])?;
-        let ly = xla::Literal::vec1(y);
-        let ln = xla::Literal::vec1(x_next);
-        let start = Instant::now();
-        let result = self.linreg.execute::<xla::Literal>(&[lx, ly, ln])?[0][0]
-            .to_literal_sync()?;
-        let elapsed = start.elapsed();
-        self.executions.set(self.executions.get() + 1);
-        let (theta_lit, pred_lit) = result.to_tuple2()?;
-        Ok(LinregOutput {
-            theta: theta_lit.to_vec::<f32>()?,
-            prediction: pred_lit.to_vec::<f32>()?[0],
-            elapsed,
-        })
-    }
+        pub fn n_days(&self) -> usize {
+            0
+        }
 
-    /// Execute the cold-start benchmark (tiled Pallas matmul checksum).
-    pub fn exec_benchmark(&self, a: &[f32], b: &[f32]) -> Result<BenchOutput> {
-        let n = self.bench_dim * self.bench_dim;
-        anyhow::ensure!(a.len() == n && b.len() == n, "benchmark inputs must be {n}");
-        let la = xla::Literal::vec1(a)
-            .reshape(&[self.bench_dim as i64, self.bench_dim as i64])?;
-        let lb = xla::Literal::vec1(b)
-            .reshape(&[self.bench_dim as i64, self.bench_dim as i64])?;
-        let start = Instant::now();
-        let result =
-            self.bench.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
-        let elapsed = start.elapsed();
-        self.executions.set(self.executions.get() + 1);
-        let checksum_lit = result.to_tuple1()?;
-        Ok(BenchOutput { checksum: checksum_lit.to_vec::<f32>()?[0], elapsed })
+        pub fn n_features(&self) -> usize {
+            0
+        }
+
+        pub fn bench_dim(&self) -> usize {
+            0
+        }
+
+        pub fn exec_linreg(
+            &self,
+            _x: &[f32],
+            _y: &[f32],
+            _x_next: &[f32],
+        ) -> Result<LinregOutput> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        pub fn exec_benchmark(&self, _a: &[f32], _b: &[f32]) -> Result<BenchOutput> {
+            bail!("{UNAVAILABLE}")
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_engine::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -151,11 +249,30 @@ mod tests {
     use crate::runtime::artifacts::ArtifactStore;
 
     fn runtime() -> Option<(Runtime, ArtifactStore)> {
+        if !Runtime::pjrt_enabled() {
+            eprintln!("skipping: built without the `pjrt` feature");
+            return None;
+        }
         // Missing artifacts => skip; broken artifacts must fail loudly.
         let store = ArtifactStore::discover_default().ok()?;
         let rt =
             Runtime::load(&store).expect("artifacts present but failed to load/compile");
         Some((rt, store))
+    }
+
+    #[test]
+    fn stub_build_reports_itself() {
+        if Runtime::pjrt_enabled() {
+            return;
+        }
+        let err = Runtime::load_default().unwrap_err();
+        // Either artifacts are missing (discovery error) or the stub
+        // reports the missing feature — both must say what to do.
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("make artifacts") || msg.contains("pjrt"),
+            "unhelpful error: {msg}"
+        );
     }
 
     #[test]

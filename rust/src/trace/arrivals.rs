@@ -1,0 +1,291 @@
+//! Composable arrival-process generators for the trace engine.
+//!
+//! Four processes cover the workload shapes the FaaS literature replays:
+//!
+//! - **Poisson** — homogeneous open-loop arrivals (memoryless, the M/·/·
+//!   baseline every queueing comparison starts from);
+//! - **OnOff** — a two-state Markov-modulated Poisson process: exponential
+//!   ON periods emitting arrivals, exponential OFF silences. This is the
+//!   standard bursty-traffic model; its inter-arrival CoV exceeds 1;
+//! - **Diurnal** — non-homogeneous Poisson whose rate follows the same
+//!   sinusoid as the platform's variability model (the authors' "Night
+//!   Shift" motivation), sampled exactly via Lewis–Shedler thinning;
+//! - **Replay** — deterministic playback of recorded offsets (order
+//!   preserved on equal timestamps).
+//!
+//! All generators are driven by the repo's splittable [`Rng`], so a seed
+//! fully determines a trace.
+
+use crate::util::prng::Rng;
+
+/// An arrival process over a finite horizon.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `rate_rps` requests/second.
+    Poisson { rate_rps: f64 },
+    /// Markov-modulated on/off bursts: while ON, Poisson arrivals at
+    /// `rate_on_rps`; OFF emits nothing. Sojourn times are exponential
+    /// with the given means. Long-run mean rate is
+    /// `rate_on_rps · mean_on_s / (mean_on_s + mean_off_s)`.
+    OnOff {
+        rate_on_rps: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Non-homogeneous Poisson with diurnal rate
+    /// `base_rate_rps · (1 + amplitude·cos(2π(h − peak_hour)/24))`,
+    /// `h` = hours since trace start. `amplitude` in `[0, 1)`.
+    Diurnal {
+        base_rate_rps: f64,
+        amplitude: f64,
+        peak_hour: f64,
+    },
+    /// Deterministic replay of recorded arrival offsets (ms, sorted
+    /// non-decreasing; equal timestamps keep their order).
+    Replay { times_ms: Vec<f64> },
+}
+
+impl ArrivalProcess {
+    /// Long-run mean arrival rate, requests/second (replay: empirical).
+    pub fn mean_rate_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => *rate_rps,
+            ArrivalProcess::OnOff { rate_on_rps, mean_on_s, mean_off_s } => {
+                rate_on_rps * mean_on_s / (mean_on_s + mean_off_s)
+            }
+            ArrivalProcess::Diurnal { base_rate_rps, .. } => *base_rate_rps,
+            ArrivalProcess::Replay { times_ms } => {
+                let span_s = times_ms.last().copied().unwrap_or(0.0) / 1_000.0;
+                if span_s > 0.0 {
+                    times_ms.len() as f64 / span_s
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Generate arrival times in milliseconds, ascending, over
+    /// `[0, horizon_s)`. Deterministic given the process and `rng` state.
+    pub fn sample_times_ms(&self, horizon_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let horizon_ms = horizon_s * 1_000.0;
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                assert!(*rate_rps >= 0.0, "negative rate");
+                let mut out = Vec::new();
+                if *rate_rps == 0.0 {
+                    return out;
+                }
+                let mut t = rng.exponential(*rate_rps) * 1_000.0;
+                while t < horizon_ms {
+                    out.push(t);
+                    t += rng.exponential(*rate_rps) * 1_000.0;
+                }
+                out
+            }
+
+            ArrivalProcess::OnOff { rate_on_rps, mean_on_s, mean_off_s } => {
+                assert!(
+                    *rate_on_rps >= 0.0 && *mean_on_s > 0.0 && *mean_off_s > 0.0,
+                    "OnOff parameters must be positive"
+                );
+                let mut out = Vec::new();
+                if *rate_on_rps == 0.0 {
+                    return out;
+                }
+                // Start in the stationary state distribution so the mean
+                // rate holds from t = 0, not only asymptotically.
+                let p_on = mean_on_s / (mean_on_s + mean_off_s);
+                let mut on = rng.chance(p_on);
+                let mut t = 0.0f64; // current phase start, ms
+                while t < horizon_ms {
+                    if on {
+                        let end =
+                            (t + rng.exponential(1.0 / mean_on_s) * 1_000.0).min(horizon_ms);
+                        let mut a = t + rng.exponential(*rate_on_rps) * 1_000.0;
+                        while a < end {
+                            out.push(a);
+                            a += rng.exponential(*rate_on_rps) * 1_000.0;
+                        }
+                        t = end;
+                    } else {
+                        t += rng.exponential(1.0 / mean_off_s) * 1_000.0;
+                    }
+                    on = !on;
+                }
+                out
+            }
+
+            ArrivalProcess::Diurnal { base_rate_rps, amplitude, peak_hour } => {
+                assert!(
+                    (0.0..1.0).contains(amplitude),
+                    "diurnal amplitude must be in [0, 1)"
+                );
+                assert!(*base_rate_rps >= 0.0, "negative rate");
+                let mut out = Vec::new();
+                if *base_rate_rps == 0.0 {
+                    return out;
+                }
+                // Lewis–Shedler thinning against the envelope rate.
+                let rate_max = base_rate_rps * (1.0 + amplitude);
+                let mut t = 0.0f64;
+                loop {
+                    t += rng.exponential(rate_max) * 1_000.0;
+                    if t >= horizon_ms {
+                        break;
+                    }
+                    let h = t / 3_600_000.0;
+                    let phase =
+                        2.0 * std::f64::consts::PI * (h - peak_hour) / 24.0;
+                    let rate_t = base_rate_rps * (1.0 + amplitude * phase.cos());
+                    if rng.f64() < rate_t / rate_max {
+                        out.push(t);
+                    }
+                }
+                out
+            }
+
+            ArrivalProcess::Replay { times_ms } => {
+                debug_assert!(
+                    times_ms.windows(2).all(|w| w[0] <= w[1]),
+                    "replay offsets must be sorted"
+                );
+                times_ms.iter().copied().filter(|&t| t < horizon_ms).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::descriptive::Summary;
+
+    fn inter_arrivals(times: &[f64]) -> Vec<f64> {
+        times.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    #[test]
+    fn seeded_determinism_all_processes() {
+        let processes = [
+            ArrivalProcess::Poisson { rate_rps: 3.0 },
+            ArrivalProcess::OnOff { rate_on_rps: 9.0, mean_on_s: 30.0, mean_off_s: 60.0 },
+            ArrivalProcess::Diurnal { base_rate_rps: 3.0, amplitude: 0.5, peak_hour: 3.0 },
+        ];
+        for p in &processes {
+            let a = p.sample_times_ms(600.0, &mut Rng::new(42));
+            let b = p.sample_times_ms(600.0, &mut Rng::new(42));
+            let c = p.sample_times_ms(600.0, &mut Rng::new(43));
+            assert_eq!(a, b, "same seed must reproduce {p:?}");
+            assert_ne!(a, c, "different seed must differ {p:?}");
+            assert!(!a.is_empty());
+        }
+    }
+
+    #[test]
+    fn poisson_mean_inter_arrival_matches_rate() {
+        let rate = 5.0; // ⇒ mean gap 200 ms
+        let p = ArrivalProcess::Poisson { rate_rps: rate };
+        let times = p.sample_times_ms(20_000.0, &mut Rng::new(7));
+        let gaps = inter_arrivals(&times);
+        assert!(gaps.len() > 50_000, "only {} arrivals", gaps.len());
+        let mean = Summary::of(&gaps).unwrap().mean;
+        assert!(
+            (mean - 200.0).abs() < 6.0,
+            "mean inter-arrival {mean} ms, want ~200 ms"
+        );
+        assert_eq!(p.mean_rate_rps(), rate);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_within_horizon() {
+        let processes = [
+            ArrivalProcess::Poisson { rate_rps: 4.0 },
+            ArrivalProcess::OnOff { rate_on_rps: 12.0, mean_on_s: 10.0, mean_off_s: 20.0 },
+            ArrivalProcess::Diurnal { base_rate_rps: 4.0, amplitude: 0.8, peak_hour: 0.0 },
+        ];
+        for p in &processes {
+            let times = p.sample_times_ms(300.0, &mut Rng::new(11));
+            assert!(times.windows(2).all(|w| w[0] <= w[1]), "unsorted {p:?}");
+            assert!(times.iter().all(|&t| (0.0..300_000.0).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn replay_preserves_order_on_equal_timestamps() {
+        // Duplicated timestamps must come out in input order and count.
+        let p = ArrivalProcess::Replay {
+            times_ms: vec![10.0, 50.0, 50.0, 50.0, 120.0],
+        };
+        let times = p.sample_times_ms(1.0, &mut Rng::new(1));
+        assert_eq!(times, vec![10.0, 50.0, 50.0, 50.0, 120.0]);
+        // Horizon clips strictly.
+        let clipped = p.sample_times_ms(0.12, &mut Rng::new(1));
+        assert_eq!(clipped, vec![10.0, 50.0, 50.0, 50.0]);
+    }
+
+    #[test]
+    fn onoff_is_burstier_than_poisson() {
+        // Matched mean rate: OnOff (1/3 duty cycle at 3× rate) vs Poisson.
+        let rate = 2.0;
+        let onoff = ArrivalProcess::OnOff {
+            rate_on_rps: rate * 3.0,
+            mean_on_s: 40.0,
+            mean_off_s: 80.0,
+        };
+        let poisson = ArrivalProcess::Poisson { rate_rps: rate };
+        assert!((onoff.mean_rate_rps() - rate).abs() < 1e-12);
+        let g_b = inter_arrivals(&onoff.sample_times_ms(40_000.0, &mut Rng::new(3)));
+        let g_p = inter_arrivals(&poisson.sample_times_ms(40_000.0, &mut Rng::new(3)));
+        let cov_b = Summary::of(&g_b).unwrap().cov();
+        let cov_p = Summary::of(&g_p).unwrap().cov();
+        assert!(
+            cov_b > cov_p + 0.3,
+            "on/off CoV {cov_b:.2} should exceed Poisson CoV {cov_p:.2}"
+        );
+    }
+
+    #[test]
+    fn diurnal_concentrates_arrivals_at_peak() {
+        let p = ArrivalProcess::Diurnal {
+            base_rate_rps: 1.0,
+            amplitude: 0.8,
+            peak_hour: 3.0,
+        };
+        let day_s = 24.0 * 3_600.0;
+        let times = p.sample_times_ms(day_s, &mut Rng::new(5));
+        let in_window = |center_h: f64| -> usize {
+            let lo = (center_h - 2.0) * 3_600_000.0;
+            let hi = (center_h + 2.0) * 3_600_000.0;
+            times.iter().filter(|&&t| t >= lo && t < hi).count()
+        };
+        let peak = in_window(3.0);
+        let trough = in_window(15.0);
+        assert!(
+            peak as f64 > trough as f64 * 2.0,
+            "peak {peak} vs trough {trough}: diurnal modulation missing"
+        );
+    }
+
+    #[test]
+    fn zero_rate_processes_are_silent() {
+        let mut rng = Rng::new(9);
+        assert!(ArrivalProcess::Poisson { rate_rps: 0.0 }
+            .sample_times_ms(100.0, &mut rng)
+            .is_empty());
+        assert!(ArrivalProcess::OnOff {
+            rate_on_rps: 0.0,
+            mean_on_s: 1.0,
+            mean_off_s: 1.0
+        }
+        .sample_times_ms(100.0, &mut rng)
+        .is_empty());
+        assert!(ArrivalProcess::Diurnal {
+            base_rate_rps: 0.0,
+            amplitude: 0.5,
+            peak_hour: 0.0
+        }
+        .sample_times_ms(100.0, &mut rng)
+        .is_empty());
+    }
+}

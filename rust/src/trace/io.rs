@@ -1,0 +1,180 @@
+//! Trace CSV I/O on top of `util::csvio`.
+//!
+//! Canonical columns: `t_ms,function_id,payload_scale`. The reader is
+//! deliberately liberal, dslab/Azure-trace style: alternate column names
+//! are accepted, `payload_scale` is optional (default 1.0), and the
+//! function column may hold either numeric ids or opaque names (Azure
+//! publishes hashed app names) — names are interned to dense ids in
+//! first-seen order. Rows may be unsorted; parsing stable-sorts by time,
+//! so same-timestamp rows replay in file order.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use crate::sim::SimTime;
+use crate::util::csvio::Csv;
+
+use super::model::{FunctionId, Trace, TraceRecord};
+
+/// Accepted names for the arrival-time column (milliseconds).
+pub const TIME_COLUMNS: &[&str] = &["t_ms", "timestamp_ms", "time_ms", "invocation_time_ms"];
+/// Accepted names for the function column (numeric id or opaque name).
+pub const FUNCTION_COLUMNS: &[&str] = &["function_id", "function", "func", "app"];
+/// Accepted names for the optional payload-scale column.
+pub const PAYLOAD_COLUMNS: &[&str] = &["payload_scale", "scale", "payload"];
+
+/// Render a trace as a canonical CSV table.
+pub fn to_csv(trace: &Trace) -> Csv {
+    let mut csv = Csv::new(&["t_ms", "function_id", "payload_scale"]);
+    for r in trace.records() {
+        csv.push(vec![
+            format!("{:.3}", r.t.as_ms()),
+            r.function.0.to_string(),
+            format!("{:.6}", r.payload_scale),
+        ]);
+    }
+    csv
+}
+
+/// Write a trace to `path` as CSV.
+pub fn write_csv(trace: &Trace, path: &Path) -> std::io::Result<()> {
+    to_csv(trace).save(path)
+}
+
+/// Read a trace from a CSV file.
+pub fn read_csv(path: &Path) -> Result<Trace, String> {
+    let text = fs::read_to_string(path)
+        .map_err(|e| format!("reading trace {}: {e}", path.display()))?;
+    parse_csv(&text)
+}
+
+/// Parse CSV text into a [`Trace`].
+pub fn parse_csv(text: &str) -> Result<Trace, String> {
+    let csv = Csv::parse(text)?;
+    let find = |names: &[&str]| -> Option<usize> {
+        names.iter().find_map(|n| csv.col(n))
+    };
+    let tcol = find(TIME_COLUMNS).ok_or_else(|| {
+        format!("no time column; expected one of {TIME_COLUMNS:?}")
+    })?;
+    let fcol = find(FUNCTION_COLUMNS).ok_or_else(|| {
+        format!("no function column; expected one of {FUNCTION_COLUMNS:?}")
+    })?;
+    let pcol = find(PAYLOAD_COLUMNS);
+
+    // Function ids: numeric when every row parses as u32, otherwise
+    // opaque names interned to dense ids in first-seen order (O(1) per
+    // row via the hash table — Azure traces have ~10k distinct apps).
+    let all_numeric = csv.rows.iter().all(|r| r[fcol].parse::<u32>().is_ok());
+    let mut name_ids: HashMap<String, u32> = HashMap::new();
+    let mut intern = |name: &str| -> u32 {
+        if let Some(&id) = name_ids.get(name) {
+            id
+        } else {
+            let id = name_ids.len() as u32;
+            name_ids.insert(name.to_string(), id);
+            id
+        }
+    };
+
+    let mut records = Vec::with_capacity(csv.rows.len());
+    for (i, row) in csv.rows.iter().enumerate() {
+        let t_ms: f64 = row[tcol]
+            .parse()
+            .map_err(|e| format!("row {}: bad time {:?}: {e}", i + 1, row[tcol]))?;
+        if !t_ms.is_finite() || t_ms < 0.0 {
+            return Err(format!("row {}: time {t_ms} out of range", i + 1));
+        }
+        let function = if all_numeric {
+            FunctionId(row[fcol].parse::<u32>().expect("checked numeric"))
+        } else {
+            FunctionId(intern(&row[fcol]))
+        };
+        let payload_scale = match pcol {
+            None => 1.0,
+            Some(c) => row[c]
+                .parse::<f64>()
+                .map_err(|e| format!("row {}: bad payload {:?}: {e}", i + 1, row[c]))?,
+        };
+        if !payload_scale.is_finite() || payload_scale <= 0.0 {
+            return Err(format!("row {}: payload scale {payload_scale} must be positive", i + 1));
+        }
+        records.push(TraceRecord { t: SimTime::from_ms(t_ms), function, payload_scale });
+    }
+    Ok(Trace::from_records(records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synth::SynthConfig;
+
+    #[test]
+    fn roundtrip_through_csv() {
+        let trace = SynthConfig { hours: 0.05, ..Default::default() }.generate();
+        assert!(!trace.is_empty());
+        let text = to_csv(&trace).to_string();
+        let back = parse_csv(&text).unwrap();
+        assert_eq!(back.len(), trace.len());
+        assert_eq!(back.n_functions(), trace.n_functions());
+        for (a, b) in trace.records().iter().zip(back.records()) {
+            assert_eq!(a.function, b.function);
+            // Times survive to the 1 µs SimTime grid; payloads to 6 dp.
+            assert!((a.t.as_ms() - b.t.as_ms()).abs() < 1e-2);
+            assert!((a.payload_scale - b.payload_scale).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn alternate_headers_and_default_payload() {
+        let text = "timestamp_ms,app\n1000,7\n500,3\n";
+        let t = parse_csv(text).unwrap();
+        assert_eq!(t.len(), 2);
+        // Sorted by time; numeric ids honoured; payload defaults to 1.0.
+        assert_eq!(t.records()[0].function, FunctionId(3));
+        assert_eq!(t.records()[1].function, FunctionId(7));
+        assert!(t.records().iter().all(|r| r.payload_scale == 1.0));
+    }
+
+    #[test]
+    fn opaque_function_names_are_interned_in_first_seen_order() {
+        let text = "t_ms,function\n0,checkout\n1,thumbnail\n2,checkout\n";
+        let t = parse_csv(text).unwrap();
+        let ids: Vec<u32> = t.records().iter().map(|r| r.function.0).collect();
+        assert_eq!(ids, vec![0, 1, 0]);
+        assert_eq!(t.n_functions(), 2);
+    }
+
+    #[test]
+    fn unsorted_rows_sort_stably() {
+        // Equal timestamps: file order is the tiebreak.
+        let text = "t_ms,function_id,payload_scale\n50,1,2.0\n10,0,1.0\n50,1,3.0\n";
+        let t = parse_csv(text).unwrap();
+        let scales: Vec<f64> = t.records().iter().map(|r| r.payload_scale).collect();
+        assert_eq!(scales, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        assert!(parse_csv("nope\n1\n").is_err(), "missing columns");
+        assert!(parse_csv("t_ms,function_id\nx,0\n").is_err(), "bad time");
+        assert!(parse_csv("t_ms,function_id\n-5,0\n").is_err(), "negative time");
+        assert!(
+            parse_csv("t_ms,function_id,payload_scale\n1,0,0\n").is_err(),
+            "zero payload"
+        );
+        assert!(parse_csv("", ).is_err(), "empty text");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("minos-trace-io-test");
+        let path = dir.join("trace.csv");
+        let trace = SynthConfig { hours: 0.02, n_functions: 3, ..Default::default() }.generate();
+        write_csv(&trace, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.len(), trace.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,36 @@
+//! Trace-driven multi-function workload engine.
+//!
+//! The paper evaluates Minos under a single closed-loop workload (10 VUs,
+//! one weather function). This subsystem opens the evaluation to realistic
+//! shared, bursty, multi-tenant traffic, the way SeBS and Azure-trace
+//! replay harnesses do it: a *trace* of timestamped invocations across many
+//! functions is replayed against the platform, each function carrying its
+//! own phase profile and Minos configuration.
+//!
+//! - [`arrivals`] — composable arrival-process generators: homogeneous
+//!   Poisson, Markov-modulated on/off bursts, diurnal-rate-modulated
+//!   (non-homogeneous, via thinning), and deterministic replay;
+//! - [`model`] — the trace data model: [`TraceRecord`]s sorted by time,
+//!   plus per-function [`ReplaySchedule`] extraction for the runner;
+//! - [`io`] — Azure-Functions-style CSV read/write on `util::csvio`;
+//! - [`synth`] — a seeded synthetic trace generator: multi-hour,
+//!   multi-function, heavy-tailed (Zipf) per-function popularity;
+//! - [`registry`] — function id → [`registry::FunctionProfile`] mapping
+//!   (phase profile + per-function Minos config), so warm pools and
+//!   elysium thresholds are judged per function.
+//!
+//! The experiment side lives in `experiment::runner::run_trace` (per-
+//! function pre-test + replay) and `experiment::metrics::FunctionBreakdown`
+//! (per-function p50/p95, cost, termination rate); the CLI exposes it as
+//! `minos replay`.
+
+pub mod arrivals;
+pub mod io;
+pub mod model;
+pub mod registry;
+pub mod synth;
+
+pub use arrivals::ArrivalProcess;
+pub use model::{FunctionId, ReplaySchedule, Trace, TraceRecord};
+pub use registry::{FunctionProfile, FunctionRegistry};
+pub use synth::SynthConfig;

@@ -1,0 +1,227 @@
+//! The trace data model: timestamped multi-function invocation records.
+//!
+//! A [`Trace`] is the unit the replay engine consumes: records sorted by
+//! timestamp (stable on ties, so input order is an explicit tiebreak), each
+//! naming a [`FunctionId`] and a payload scale (1.0 = the function's
+//! nominal request; larger = proportionally more data to download and
+//! analyze — how Azure-style traces express heterogeneous request sizes).
+
+use crate::sim::SimTime;
+
+/// Identifier of a deployed function within a trace/registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FunctionId(pub u32);
+
+impl std::fmt::Display for FunctionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "f{}", self.0)
+    }
+}
+
+/// One invocation in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    /// Arrival time relative to trace start.
+    pub t: SimTime,
+    pub function: FunctionId,
+    /// Per-invocation payload multiplier (1.0 = nominal).
+    pub payload_scale: f64,
+}
+
+/// A time-sorted multi-function invocation trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    /// Build a trace, sorting records by time. The sort is stable, so
+    /// records with equal timestamps keep their input order — that makes
+    /// replay deterministic for traces with coarse (e.g. 1 s) timestamps.
+    pub fn from_records(mut records: Vec<TraceRecord>) -> Trace {
+        records.sort_by_key(|r| r.t);
+        Trace { records }
+    }
+
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Number of functions addressed by the trace (max id + 1).
+    pub fn n_functions(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.function.0)
+            .max()
+            .map_or(0, |m| m as usize + 1)
+    }
+
+    /// Timestamp of the last record (trace span).
+    pub fn span(&self) -> SimTime {
+        self.records.last().map_or(SimTime::ZERO, |r| r.t)
+    }
+
+    /// Distinct function ids, ascending.
+    pub fn function_ids(&self) -> Vec<FunctionId> {
+        let mut ids: Vec<FunctionId> = self.records.iter().map(|r| r.function).collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+
+    /// Number of records addressed to `id`.
+    pub fn count_for(&self, id: FunctionId) -> usize {
+        self.records.iter().filter(|r| r.function == id).count()
+    }
+
+    /// Extract the replay schedule (arrival time, payload scale) for one
+    /// function, preserving trace order.
+    pub fn schedule_for(&self, id: FunctionId) -> ReplaySchedule {
+        ReplaySchedule {
+            arrivals: self
+                .records
+                .iter()
+                .filter(|r| r.function == id)
+                .map(|r| (r.t, r.payload_scale))
+                .collect(),
+        }
+    }
+
+    /// One-pass schedule extraction for every function id in
+    /// `0..n_functions` (O(N), vs calling [`Trace::schedule_for`] per
+    /// function which is O(N) *each*). Records addressing ids outside the
+    /// range are ignored.
+    pub fn schedules(&self, n_functions: usize) -> Vec<ReplaySchedule> {
+        let mut out = vec![ReplaySchedule::default(); n_functions];
+        for r in &self.records {
+            if let Some(s) = out.get_mut(r.function.0 as usize) {
+                s.arrivals.push((r.t, r.payload_scale));
+            }
+        }
+        out
+    }
+}
+
+/// The per-function arrival schedule the runner replays: `(when, payload)`
+/// pairs in non-decreasing time order.
+#[derive(Debug, Clone, Default)]
+pub struct ReplaySchedule {
+    pub arrivals: Vec<(SimTime, f64)>,
+}
+
+impl ReplaySchedule {
+    /// Build from raw millisecond offsets, all at nominal payload.
+    pub fn from_times_ms(times_ms: &[f64]) -> ReplaySchedule {
+        ReplaySchedule {
+            arrivals: times_ms.iter().map(|&t| (SimTime::from_ms(t), 1.0)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t_ms: f64, f: u32, scale: f64) -> TraceRecord {
+        TraceRecord {
+            t: SimTime::from_ms(t_ms),
+            function: FunctionId(f),
+            payload_scale: scale,
+        }
+    }
+
+    #[test]
+    fn from_records_sorts_by_time() {
+        let t = Trace::from_records(vec![rec(30.0, 0, 1.0), rec(10.0, 1, 1.0), rec(20.0, 0, 1.0)]);
+        let times: Vec<f64> = t.records().iter().map(|r| r.t.as_ms()).collect();
+        assert_eq!(times, vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn equal_timestamps_keep_input_order() {
+        // Three records at the same instant, distinct payloads as markers.
+        let t = Trace::from_records(vec![
+            rec(5.0, 2, 1.0),
+            rec(5.0, 0, 2.0),
+            rec(5.0, 1, 3.0),
+            rec(1.0, 1, 0.5),
+        ]);
+        let order: Vec<u32> = t.records().iter().map(|r| r.function.0).collect();
+        assert_eq!(order, vec![1, 2, 0, 1], "stable sort must keep tie order");
+    }
+
+    #[test]
+    fn function_accounting() {
+        let t = Trace::from_records(vec![rec(1.0, 0, 1.0), rec(2.0, 3, 1.0), rec(3.0, 0, 1.0)]);
+        assert_eq!(t.n_functions(), 4);
+        assert_eq!(t.count_for(FunctionId(0)), 2);
+        assert_eq!(t.count_for(FunctionId(2)), 0);
+        assert_eq!(t.function_ids(), vec![FunctionId(0), FunctionId(3)]);
+        assert_eq!(t.span(), SimTime::from_ms(3.0));
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn schedule_extraction_preserves_order_and_payload() {
+        let t = Trace::from_records(vec![
+            rec(1.0, 0, 1.0),
+            rec(2.0, 1, 4.0),
+            rec(2.0, 1, 5.0),
+            rec(3.0, 0, 1.0),
+        ]);
+        let s = t.schedule_for(FunctionId(1));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.arrivals[0], (SimTime::from_ms(2.0), 4.0));
+        assert_eq!(s.arrivals[1], (SimTime::from_ms(2.0), 5.0));
+    }
+
+    #[test]
+    fn schedules_matches_per_function_extraction() {
+        let t = Trace::from_records(vec![
+            rec(1.0, 0, 1.0),
+            rec(2.0, 2, 4.0),
+            rec(2.0, 2, 5.0),
+            rec(3.0, 0, 1.0),
+            rec(4.0, 9, 1.0), // out of range for n_functions = 3: ignored
+        ]);
+        let all = t.schedules(3);
+        assert_eq!(all.len(), 3);
+        for (i, s) in all.iter().enumerate() {
+            assert_eq!(s.arrivals, t.schedule_for(FunctionId(i as u32)).arrivals);
+        }
+        assert!(all[1].is_empty());
+        assert_eq!(all[2].len(), 2);
+    }
+
+    #[test]
+    fn empty_trace_is_safe() {
+        let t = Trace::default();
+        assert!(t.is_empty());
+        assert_eq!(t.n_functions(), 0);
+        assert_eq!(t.span(), SimTime::ZERO);
+        assert!(t.schedule_for(FunctionId(0)).is_empty());
+    }
+
+    #[test]
+    fn schedule_from_times() {
+        let s = ReplaySchedule::from_times_ms(&[0.0, 100.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.arrivals[1], (SimTime::from_ms(100.0), 1.0));
+    }
+}

@@ -1,0 +1,183 @@
+//! Function registry: trace function ids → deployable function profiles.
+//!
+//! A [`FunctionProfile`] is everything a deployment needs: the phase
+//! profile ([`FunctionSpec`]) and the per-function Minos configuration
+//! (the paper stores the elysium threshold *in the function config*,
+//! §II-B — so a multi-function platform naturally judges each function
+//! against its own threshold, calibrated by its own pre-test). The demo
+//! registry cycles the three workload archetypes — weather regression,
+//! ML inference, and a payload-scaled batch-analytics variant — with
+//! deterministic per-function parameter variation.
+
+use crate::coordinator::MinosConfig;
+use crate::workload::download::NetworkModel;
+use crate::workload::inference::inference_spec;
+use crate::workload::FunctionSpec;
+
+use super::model::FunctionId;
+
+/// One deployed function: identity, workload shape, Minos policy.
+#[derive(Debug, Clone)]
+pub struct FunctionProfile {
+    pub id: FunctionId,
+    pub name: String,
+    pub spec: FunctionSpec,
+    /// Minos template for this function (threshold filled by pre-test).
+    pub minos: MinosConfig,
+    /// Elysium percentile used by this function's pre-test.
+    pub elysium_percentile: f64,
+}
+
+/// Dense id-indexed collection of function profiles.
+#[derive(Debug, Clone, Default)]
+pub struct FunctionRegistry {
+    profiles: Vec<FunctionProfile>,
+}
+
+impl FunctionRegistry {
+    pub fn new() -> FunctionRegistry {
+        FunctionRegistry::default()
+    }
+
+    /// Add a profile; ids must be dense and in order (id == index).
+    pub fn push(&mut self, profile: FunctionProfile) {
+        assert_eq!(
+            profile.id.0 as usize,
+            self.profiles.len(),
+            "registry ids must be dense and ordered"
+        );
+        self.profiles.push(profile);
+    }
+
+    pub fn get(&self, id: FunctionId) -> Option<&FunctionProfile> {
+        self.profiles.get(id.0 as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &FunctionProfile> {
+        self.profiles.iter()
+    }
+
+    /// A deterministic `n`-function registry cycling the three archetypes
+    /// (weather, inference, batch) with mild per-function variation, so a
+    /// replayed trace exercises heterogeneous phase profiles.
+    pub fn demo(n: usize) -> FunctionRegistry {
+        let mut reg = FunctionRegistry::new();
+        for i in 0..n {
+            let (kind, mut spec) = match i % 3 {
+                0 => ("weather", FunctionSpec::weather()),
+                1 => ("inference", inference_spec()),
+                _ => ("batch", batch_spec()),
+            };
+            // Deterministic ±12 % analysis-time variation across copies of
+            // the same archetype — sibling deployments are never identical.
+            let variation = 1.0 + 0.04 * ((i / 3) % 7) as f64 - 0.12;
+            spec.base_analysis_ms *= variation.max(0.7);
+            reg.push(FunctionProfile {
+                id: FunctionId(i as u32),
+                name: format!("{kind}-{i}"),
+                spec,
+                minos: MinosConfig::paper_default(),
+                elysium_percentile: 60.0,
+            });
+        }
+        reg
+    }
+}
+
+/// The payload-scaled batch-analytics archetype: a large object download
+/// followed by a long CPU-bound aggregation. Both phases stretch with the
+/// trace's `payload_scale`, so this function is where heterogeneous
+/// request sizes bite (see `FunctionSpec::sample_scaled`).
+pub fn batch_spec() -> FunctionSpec {
+    FunctionSpec {
+        base_analysis_ms: 3_600.0,
+        overhead_ms: 110.0,
+        download_bytes: 2_000_000,
+        network: NetworkModel {
+            base_latency_ms: 300.0,
+            latency_sigma: 0.20,
+            bandwidth_mbps: 50.0,
+            bandwidth_sigma: 0.25,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_cycles_archetypes() {
+        let reg = FunctionRegistry::demo(7);
+        assert_eq!(reg.len(), 7);
+        assert!(reg.get(FunctionId(0)).unwrap().name.starts_with("weather"));
+        assert!(reg.get(FunctionId(1)).unwrap().name.starts_with("inference"));
+        assert!(reg.get(FunctionId(2)).unwrap().name.starts_with("batch"));
+        assert!(reg.get(FunctionId(3)).unwrap().name.starts_with("weather"));
+        assert!(reg.get(FunctionId(7)).is_none());
+    }
+
+    #[test]
+    fn demo_is_deterministic_and_varied() {
+        let a = FunctionRegistry::demo(6);
+        let b = FunctionRegistry::demo(6);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.spec.base_analysis_ms, y.spec.base_analysis_ms);
+            assert_eq!(x.name, y.name);
+        }
+        // Same archetype, different copy ⇒ different analysis time.
+        let w0 = a.get(FunctionId(0)).unwrap().spec.base_analysis_ms;
+        let w3 = a.get(FunctionId(3)).unwrap().spec.base_analysis_ms;
+        assert_ne!(w0, w3);
+    }
+
+    #[test]
+    fn ids_must_be_dense() {
+        let mut reg = FunctionRegistry::new();
+        reg.push(FunctionProfile {
+            id: FunctionId(0),
+            name: "a".into(),
+            spec: FunctionSpec::weather(),
+            minos: MinosConfig::paper_default(),
+            elysium_percentile: 60.0,
+        });
+        assert_eq!(reg.len(), 1);
+        assert!(!reg.is_empty());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut reg2 = reg.clone();
+            reg2.push(FunctionProfile {
+                id: FunctionId(5),
+                name: "b".into(),
+                spec: FunctionSpec::weather(),
+                minos: MinosConfig::paper_default(),
+                elysium_percentile: 60.0,
+            });
+        }));
+        assert!(r.is_err(), "sparse ids must be rejected");
+    }
+
+    #[test]
+    fn batch_spec_is_payload_heavy() {
+        let b = batch_spec();
+        assert!(b.base_analysis_ms > FunctionSpec::weather().base_analysis_ms);
+        assert!(b.download_bytes > FunctionSpec::weather().download_bytes);
+    }
+
+    #[test]
+    fn every_profile_carries_its_own_minos_config() {
+        let reg = FunctionRegistry::demo(4);
+        for p in reg.iter() {
+            assert!(p.minos.enabled);
+            assert!(p.minos.elysium_threshold_ms.is_infinite(), "pre-test fills this in");
+            assert_eq!(p.elysium_percentile, 60.0);
+        }
+    }
+}

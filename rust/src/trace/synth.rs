@@ -1,0 +1,177 @@
+//! Seeded synthetic trace generator: multi-hour, multi-function traces
+//! with heavy-tailed per-function popularity.
+//!
+//! Popularity follows a Zipf law (the canonical fit for per-application
+//! invocation counts in the Azure Functions traces: a few hot functions,
+//! a long cold tail). Each function is assigned an arrival-process
+//! archetype by id — Poisson, bursty on/off, diurnal — so a single trace
+//! exercises every generator in [`super::arrivals`]. Payload scales are
+//! lognormal around 1.0. Everything forks from one seed: the same
+//! [`SynthConfig`] always yields byte-identical traces.
+
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+
+use super::arrivals::ArrivalProcess;
+use super::model::{FunctionId, Trace, TraceRecord};
+
+/// Parameters of one synthetic trace.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub n_functions: usize,
+    /// Trace span, hours.
+    pub hours: f64,
+    /// Aggregate arrival rate across all functions, requests/second.
+    pub total_rate_rps: f64,
+    /// Zipf popularity exponent (0 = uniform; ~1 matches the Azure trace).
+    pub zipf_exponent: f64,
+    /// Lognormal sigma of per-invocation payload scale (0 = all nominal).
+    pub payload_sigma: f64,
+    /// Master seed; the trace is a pure function of this config.
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n_functions: 8,
+            hours: 2.0,
+            total_rate_rps: 2.0,
+            zipf_exponent: 1.0,
+            payload_sigma: 0.25,
+            seed: 0x7ACE,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// Normalized Zipf popularity weights, hottest function first.
+    pub fn popularity(&self) -> Vec<f64> {
+        let raw: Vec<f64> = (0..self.n_functions)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(self.zipf_exponent))
+            .collect();
+        let sum: f64 = raw.iter().sum();
+        raw.into_iter().map(|w| w / sum).collect()
+    }
+
+    /// The arrival-process archetype assigned to function `i`, carrying
+    /// that function's share of the aggregate rate.
+    pub fn process_for(&self, i: usize, rate_rps: f64) -> ArrivalProcess {
+        match i % 3 {
+            0 => ArrivalProcess::Poisson { rate_rps },
+            // 1/3 duty cycle at 3× rate keeps the long-run mean at
+            // `rate_rps` while making the function visibly bursty.
+            1 => ArrivalProcess::OnOff {
+                rate_on_rps: rate_rps * 3.0,
+                mean_on_s: 120.0,
+                mean_off_s: 240.0,
+            },
+            _ => ArrivalProcess::Diurnal {
+                base_rate_rps: rate_rps,
+                amplitude: 0.6,
+                peak_hour: 3.0,
+            },
+        }
+    }
+
+    /// Generate the trace.
+    pub fn generate(&self) -> Trace {
+        assert!(self.n_functions > 0, "need at least one function");
+        assert!(self.hours > 0.0 && self.total_rate_rps >= 0.0);
+        let root = Rng::new(self.seed);
+        let horizon_s = self.hours * 3_600.0;
+        let weights = self.popularity();
+        let sigma = self.payload_sigma;
+        let mut records = Vec::new();
+        for (i, w) in weights.iter().enumerate() {
+            let process = self.process_for(i, self.total_rate_rps * w);
+            let mut rng_arrivals = root.fork(10 + i as u64);
+            let mut rng_payload = root.fork(100_000 + i as u64);
+            for t_ms in process.sample_times_ms(horizon_s, &mut rng_arrivals) {
+                let payload_scale = if sigma > 0.0 {
+                    rng_payload.lognormal(-0.5 * sigma * sigma, sigma)
+                } else {
+                    1.0
+                };
+                records.push(TraceRecord {
+                    t: SimTime::from_ms(t_ms),
+                    function: FunctionId(i as u32),
+                    payload_scale,
+                });
+            }
+        }
+        Trace::from_records(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_config() {
+        let cfg = SynthConfig { hours: 0.2, ..Default::default() };
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.records(), b.records());
+        let c = SynthConfig { seed: 1, ..cfg }.generate();
+        assert_ne!(a.records(), c.records());
+    }
+
+    #[test]
+    fn popularity_is_normalized_and_heavy_tailed() {
+        let cfg = SynthConfig { n_functions: 10, zipf_exponent: 1.0, ..Default::default() };
+        let w = cfg.popularity();
+        assert_eq!(w.len(), 10);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > 2.0 * w[3], "head {} vs {}", w[0], w[3]);
+        assert!(w.windows(2).all(|p| p[0] >= p[1]), "weights must be descending");
+    }
+
+    #[test]
+    fn trace_matches_config_shape() {
+        let cfg = SynthConfig {
+            n_functions: 6,
+            hours: 0.5,
+            total_rate_rps: 4.0,
+            ..Default::default()
+        };
+        let t = cfg.generate();
+        assert_eq!(t.n_functions(), 6, "every function must appear");
+        // ~4 rps × 1800 s = ~7200 records.
+        assert!(
+            (5_500..9_000).contains(&t.len()),
+            "unexpected record count {}",
+            t.len()
+        );
+        // Hottest function dominates the tail function.
+        let head = t.count_for(FunctionId(0));
+        let tail = t.count_for(FunctionId(5));
+        assert!(head > 2 * tail, "head {head} vs tail {tail}");
+        // Sorted, in-horizon, positive payloads.
+        let rs = t.records();
+        assert!(rs.windows(2).all(|w| w[0].t <= w[1].t));
+        assert!(rs.iter().all(|r| r.payload_scale > 0.0));
+        assert!(t.span() < SimTime::from_secs(1_800.0));
+    }
+
+    #[test]
+    fn payload_sigma_zero_means_nominal() {
+        let cfg = SynthConfig {
+            n_functions: 2,
+            hours: 0.05,
+            payload_sigma: 0.0,
+            ..Default::default()
+        };
+        assert!(cfg.generate().records().iter().all(|r| r.payload_scale == 1.0));
+    }
+
+    #[test]
+    fn record_count_scales_with_hours() {
+        let short = SynthConfig { hours: 0.25, ..Default::default() }.generate();
+        let long = SynthConfig { hours: 1.0, ..Default::default() }.generate();
+        let ratio = long.len() as f64 / short.len().max(1) as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -56,10 +56,26 @@ impl FunctionSpec {
     /// `noise` is the per-invocation multiplicative duration noise from the
     /// platform's variability model (applies to the CPU-bound part only).
     pub fn sample(&self, perf_factor: f64, noise: f64, rng: &mut Rng) -> PhaseDurations {
-        debug_assert!(perf_factor > 0.0 && noise > 0.0);
+        self.sample_scaled(perf_factor, noise, 1.0, rng)
+    }
+
+    /// Like [`FunctionSpec::sample`], but for a request whose payload is
+    /// `payload_scale` × the nominal size (trace-driven workloads carry
+    /// heterogeneous request sizes). Both data-dependent phases stretch
+    /// linearly: more bytes to download, more rows to analyze; the fixed
+    /// per-invocation overhead does not.
+    pub fn sample_scaled(
+        &self,
+        perf_factor: f64,
+        noise: f64,
+        payload_scale: f64,
+        rng: &mut Rng,
+    ) -> PhaseDurations {
+        debug_assert!(perf_factor > 0.0 && noise > 0.0 && payload_scale > 0.0);
+        let bytes = (self.download_bytes as f64 * payload_scale).round() as usize;
         PhaseDurations {
-            prepare_ms: self.network.duration_ms(self.download_bytes, rng),
-            analysis_ms: self.base_analysis_ms / perf_factor * noise,
+            prepare_ms: self.network.duration_ms(bytes.max(1), rng),
+            analysis_ms: self.base_analysis_ms * payload_scale / perf_factor * noise,
             overhead_ms: self.overhead_ms,
         }
     }
@@ -107,6 +123,31 @@ mod tests {
             (0..5_000).map(|_| spec.sample(1.0, 1.0, &mut rng).total_ms()).collect();
         let mean = Summary::of(&xs).unwrap().mean;
         assert!((2_600.0..3_200.0).contains(&mean), "mean total {mean}");
+    }
+
+    #[test]
+    fn payload_scale_stretches_data_phases_only() {
+        let spec = FunctionSpec::weather();
+        // Same rng stream for both draws ⇒ identical jitter; the ratio is
+        // exactly the payload scale for analysis, and prepare grows too.
+        let mut rng_a = Rng::new(10);
+        let mut rng_b = Rng::new(10);
+        let nominal = spec.sample_scaled(1.0, 1.0, 1.0, &mut rng_a);
+        let doubled = spec.sample_scaled(1.0, 1.0, 2.0, &mut rng_b);
+        assert!((doubled.analysis_ms / nominal.analysis_ms - 2.0).abs() < 1e-9);
+        assert!(doubled.prepare_ms > nominal.prepare_ms);
+        assert_eq!(doubled.overhead_ms, nominal.overhead_ms);
+    }
+
+    #[test]
+    fn sample_is_nominal_scaled() {
+        let spec = FunctionSpec::weather();
+        let mut rng_a = Rng::new(11);
+        let mut rng_b = Rng::new(11);
+        assert_eq!(
+            spec.sample(1.1, 1.0, &mut rng_a),
+            spec.sample_scaled(1.1, 1.0, 1.0, &mut rng_b)
+        );
     }
 
     #[test]

@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Repo-wide check gate: formatting, lints, and the tier-1 test suite.
+#
+# Usage: scripts/check.sh [--fast]
+#   --fast   skip the release build (debug tests only)
+#
+# Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
+# Python-side tests (python/tests, via the repo-root conftest.py) run when
+# pytest is available; they are skipped otherwise since the JAX toolchain
+# is optional in CI images.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[ "${1:-}" = "--fast" ] && FAST=1
+
+echo "== cargo fmt --check =="
+cargo fmt --all --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+if [ "$FAST" -eq 0 ]; then
+    echo "== cargo build --release =="
+    cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+if command -v pytest >/dev/null 2>&1; then
+    echo "== pytest python/tests =="
+    pytest -q python/tests || exit 1
+else
+    echo "(pytest not available; skipping python/tests)"
+fi
+
+echo "all checks passed"
