@@ -11,8 +11,10 @@ use minos::testkit::bench::time_median;
 fn main() {
     let sigmas = [0.0, 0.02, 0.05, 0.08, 0.11, 0.14, 0.17, 0.20];
     let mut points = Vec::new();
-    let t = time_median("ablation: variability sweep (8 σ × 4 seeds × 10 min)", 1, || {
-        points = sweep::variability_sensitivity(&sigmas, 4, 600.0).unwrap();
+    // All cores: the 32 (σ, seed) paired runs are independent and the
+    // aggregated points are bit-identical at any thread count.
+    let t = time_median("ablation: variability sweep (8 σ × 4 seeds × 10 min, auto threads)", 1, || {
+        points = sweep::variability_sensitivity(&sigmas, 4, 600.0, 0).unwrap();
     });
     println!("{}\n", t.report());
     println!(

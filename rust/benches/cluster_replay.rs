@@ -1,0 +1,103 @@
+//! Multi-region shared-node replay throughput at 1, 2, and max threads.
+//!
+//! The cluster engine's parallel units are (a) per-(region, function)
+//! pre-tests and (b) per-region sub-simulations — both embarrassingly
+//! parallel with results merged in index order, so the totals must be
+//! bit-identical at every thread count while wall-clock drops. This bench
+//! anchors both properties: it measures events/second of a ≥100k-record,
+//! 4-region, 12-function replay and reports the speedup of 2 and max
+//! threads over the sequential baseline.
+//!
+//! Run: `cargo bench --bench cluster_replay`
+
+use minos::experiment::{cluster::run_cluster, config::ExperimentConfig};
+use minos::platform::ClusterConfig;
+use minos::testkit::bench::{throughput, time_median};
+use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::parallel;
+
+fn main() {
+    println!("== cluster replay benchmarks ==\n");
+
+    const N_REGIONS: usize = 4;
+    let synth = SynthConfig {
+        n_functions: 12,
+        n_regions: N_REGIONS,
+        region_spill: 0.15,
+        hours: 1.0,
+        total_rate_rps: 30.0,
+        seed: 4242,
+        ..Default::default()
+    };
+    let trace = synth.generate();
+    assert!(
+        trace.len() >= 100_000,
+        "benchmark needs a ≥100k-invocation trace, got {}",
+        trace.len()
+    );
+    assert_eq!(trace.n_regions(), N_REGIONS);
+    println!(
+        "trace: {} invocations, {} functions, {} regions over {:.1} h\n",
+        trace.len(),
+        trace.n_functions(),
+        trace.n_regions(),
+        synth.hours
+    );
+
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(N_REGIONS);
+    let cfg = ExperimentConfig::paper_day(0);
+
+    let max_threads = parallel::available_threads();
+    let mut thread_counts = vec![1usize, 2, max_threads];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let mut baseline_ms: Option<f64> = None;
+    let mut reference: Option<(u64, u64, u64)> = None;
+    for &threads in &thread_counts {
+        let mut events = 0u64;
+        let mut fingerprint = (0u64, 0u64, 0u64);
+        let t = time_median(
+            &format!("cluster replay: 4 regions, --threads {threads}"),
+            3,
+            || {
+                let o = run_cluster(&cfg, &registry, &trace, &cluster, threads).unwrap();
+                events = o.total_events_handled();
+                fingerprint = (
+                    o.total_completed(),
+                    o.total_terminations(),
+                    o.total_cost_usd().to_bits(),
+                );
+                events
+            },
+        );
+        // Thread count must never change the physics: identical totals,
+        // identical cost bits.
+        match &reference {
+            None => reference = Some(fingerprint),
+            Some(want) => assert_eq!(
+                &fingerprint, want,
+                "--threads {threads} changed the replay outcome"
+            ),
+        }
+        let speedup = match baseline_ms {
+            None => {
+                baseline_ms = Some(t.median_ms);
+                1.0
+            }
+            Some(base) => base / t.median_ms,
+        };
+        println!(
+            "{}  ({:.0}k events/s, {:.2}x vs 1 thread)",
+            t.report(),
+            throughput(&t, events) / 1e3,
+            speedup
+        );
+    }
+    let (completed, terminations, _) = reference.expect("at least one measurement");
+    println!(
+        "\nall thread counts bit-identical: {} completed, {} terminations",
+        completed, terminations
+    );
+}

@@ -1,0 +1,567 @@
+//! Multi-region, shared-node cluster replay.
+//!
+//! A trace whose records carry region ids is replayed against a
+//! [`ClusterConfig`]: each region is an independent [`FaasPlatform`] (its
+//! own variability regime, cold-start model, node pool and lottery), and
+//! *within* a region every function the trace routes there deploys onto
+//! the **shared** node pool — co-located instances contend on the same
+//! node speed factors and the same instance quota, with isolated
+//! per-function warm pools (`FaasPlatform::place_deploy`). This replaces
+//! the one-isolated-platform-per-function shape of
+//! `runner::run_trace` for cluster scenarios.
+//!
+//! Execution plan (both phases deterministic at any thread count):
+//!
+//! 1. **Pre-tests** — every `(region, function)` deployment calibrates its
+//!    own elysium threshold on that region's platform (paper §II-B-a);
+//!    the pairs are independent, so they fan out over
+//!    `util::parallel::map_indexed`.
+//! 2. **Replay** — one [`RegionWorld`] sub-simulation per region, driven
+//!    by the shared `sim` kernel; regions share nothing, so they also run
+//!    in parallel and merge in region order.
+
+use anyhow::Result;
+
+use crate::coordinator::pretest::PretestReport;
+use crate::coordinator::queue::{Invocation, InvocationQueue};
+use crate::coordinator::MinosConfig;
+use crate::platform::{
+    ClusterConfig, DeployId, FaasPlatform, InstanceId, Placement, RegionConfig, RegionId,
+};
+use crate::sim::{EventQueue, SimTime, Simulation, World};
+use crate::trace::{FunctionId, FunctionRegistry, Trace, TraceRecord};
+use crate::util::parallel;
+use crate::util::prng::Rng;
+use crate::workload::FunctionSpec;
+
+use super::config::ExperimentConfig;
+use super::metrics::RunResult;
+use super::runner::run_pretest;
+use super::world::{
+    gate_and_start, settle_crash, settle_finish, CrashRecord, DeploymentCtx, FinishRecord,
+    StartOutcome,
+};
+
+/// Domain events of a region sub-simulation. `slot` indexes the region's
+/// deployment table. Like the single-deployment `Event`, the bulky
+/// payloads are boxed to keep the enum within 64 bytes.
+#[derive(Debug)]
+enum CEvent {
+    /// The `idx`-th arrival of the region's merged schedule (schedules
+    /// its successor; no allocation per event).
+    TraceArrival { idx: usize },
+    /// Try to place the head of one deployment's queue.
+    Dispatch { slot: u32 },
+    /// A cold start finished; the instance begins serving `inv`.
+    ColdReady { slot: u32, inst: InstanceId, inv: Invocation },
+    /// A Minos-terminated instance crashes after its benchmark.
+    CrashRequeue { slot: u32, inst: InstanceId, crash: Box<CrashRecord> },
+    /// An invocation completed successfully.
+    Finish { slot: u32, inst: InstanceId, rec: Box<FinishRecord> },
+}
+
+/// One function's deployment inside a region.
+#[derive(Debug)]
+struct DeployState {
+    function: FunctionId,
+    name: String,
+    spec: FunctionSpec,
+    /// Minos config with the pre-tested threshold filled in.
+    live_minos: MinosConfig,
+    queue: InvocationQueue,
+    result: RunResult,
+    rng: Rng,
+    /// Always `None` in cluster replays (thresholds come from pre-tests);
+    /// present because the shared gate reports benchmark scores to it.
+    online: Option<crate::coordinator::online::OnlineThreshold>,
+    arrivals: usize,
+}
+
+/// A region's multi-function shared-node simulation state.
+struct RegionWorld<'a> {
+    cfg: &'a ExperimentConfig,
+    platform: FaasPlatform,
+    deploys: Vec<DeployState>,
+    /// Merged `(time, slot, payload_scale)` arrival schedule, time-sorted.
+    schedule: Vec<(SimTime, u32, f64)>,
+}
+
+impl RegionWorld<'_> {
+    fn start(
+        &mut self,
+        events: &mut EventQueue<CEvent>,
+        now: SimTime,
+        slot: u32,
+        inst: InstanceId,
+        inv: Invocation,
+        cold: bool,
+    ) {
+        let Self { platform, deploys, .. } = self;
+        let ds = &mut deploys[slot as usize];
+        let outcome = gate_and_start(
+            DeploymentCtx {
+                spec: &ds.spec,
+                minos: &ds.live_minos,
+                platform,
+                result: &mut ds.result,
+                rng: &mut ds.rng,
+                online: &mut ds.online,
+                bench_warm: false,
+            },
+            now,
+            inst,
+            inv,
+            cold,
+        );
+        match outcome {
+            StartOutcome::Terminate { at, crash } => {
+                events.schedule(at, CEvent::CrashRequeue { slot, inst, crash });
+            }
+            StartOutcome::Complete { at, rec } => {
+                events.schedule(at, CEvent::Finish { slot, inst, rec });
+            }
+        }
+    }
+}
+
+impl World for RegionWorld<'_> {
+    type Event = CEvent;
+
+    fn handle(
+        &mut self,
+        now: SimTime,
+        ev: CEvent,
+        events: &mut EventQueue<CEvent>,
+    ) -> Result<()> {
+        match ev {
+            CEvent::TraceArrival { idx } => {
+                let (_, slot, payload_scale) = self.schedule[idx];
+                self.deploys[slot as usize].queue.submit_scaled(0, payload_scale, now);
+                events.schedule(now, CEvent::Dispatch { slot });
+                if let Some(&(t_next, _, _)) = self.schedule.get(idx + 1) {
+                    events.schedule(t_next, CEvent::TraceArrival { idx: idx + 1 });
+                }
+            }
+
+            CEvent::Dispatch { slot } => {
+                let Some(inv) = self.deploys[slot as usize].queue.take() else {
+                    return Ok(());
+                };
+                match self.platform.place_deploy(DeployId(slot), now) {
+                    Placement::Warm(inst) => {
+                        self.deploys[slot as usize].result.warm_hits += 1;
+                        self.start(events, now, slot, inst, inv, false);
+                    }
+                    Placement::Cold { id, ready_at } => {
+                        self.deploys[slot as usize].result.cold_starts += 1;
+                        events.schedule(ready_at, CEvent::ColdReady { slot, inst: id, inv });
+                    }
+                    Placement::Saturated => {
+                        // Shared quota exhausted (possibly by *another*
+                        // function's fleet): back to the queue head,
+                        // retry shortly.
+                        self.deploys[slot as usize].queue.untake(inv);
+                        events.schedule_in_ms(100.0, CEvent::Dispatch { slot });
+                    }
+                }
+            }
+
+            CEvent::ColdReady { slot, inst, inv } => {
+                self.platform.cold_start_ready(inst);
+                self.start(events, now, slot, inst, inv, true);
+            }
+
+            CEvent::CrashRequeue { slot, inst, crash } => {
+                self.platform.crash(inst);
+                let ds = &mut self.deploys[slot as usize];
+                settle_crash(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &crash);
+                events.schedule_in_ms(
+                    ds.live_minos.requeue_overhead_ms,
+                    CEvent::Dispatch { slot },
+                );
+            }
+
+            CEvent::Finish { slot, inst, rec } => {
+                self.platform.release(inst, now);
+                let ds = &mut self.deploys[slot as usize];
+                settle_finish(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &rec, None);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-deployment outcome of a cluster replay.
+#[derive(Debug)]
+pub struct DeploymentOutcome {
+    pub region: RegionId,
+    pub function: FunctionId,
+    pub name: String,
+    /// Arrivals the trace routed to this (region, function) deployment.
+    pub arrivals: usize,
+    /// This deployment's own threshold calibration.
+    pub pretest: PretestReport,
+    pub result: RunResult,
+}
+
+/// Per-region outcome: platform-level counters plus one entry per
+/// deployed function.
+#[derive(Debug)]
+pub struct RegionOutcome {
+    pub region: RegionId,
+    pub region_name: String,
+    /// Platform-wide counters (shared across the region's functions).
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub expired: u64,
+    pub recycled: u64,
+    pub crashes: u64,
+    /// Events the region's sub-simulation handled (throughput metric).
+    pub events_handled: u64,
+    pub per_function: Vec<DeploymentOutcome>,
+}
+
+impl RegionOutcome {
+    pub fn arrivals(&self) -> usize {
+        self.per_function.iter().map(|f| f.arrivals).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.per_function.iter().map(|f| f.result.successful()).sum()
+    }
+
+    pub fn terminations(&self) -> u64 {
+        self.per_function.iter().map(|f| f.result.terminations).sum()
+    }
+
+    pub fn cost_usd(&self) -> f64 {
+        self.per_function.iter().map(|f| f.result.total_cost_usd()).sum()
+    }
+}
+
+/// Outcome of a full cluster replay, regions in id order.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub per_region: Vec<RegionOutcome>,
+}
+
+impl ClusterOutcome {
+    pub fn total_arrivals(&self) -> usize {
+        self.per_region.iter().map(RegionOutcome::arrivals).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.per_region.iter().map(RegionOutcome::completed).sum()
+    }
+
+    pub fn total_terminations(&self) -> u64 {
+        self.per_region.iter().map(RegionOutcome::terminations).sum()
+    }
+
+    pub fn total_cost_usd(&self) -> f64 {
+        self.per_region.iter().map(RegionOutcome::cost_usd).sum()
+    }
+
+    pub fn total_events_handled(&self) -> u64 {
+        self.per_region.iter().map(|r| r.events_handled).sum()
+    }
+}
+
+/// Replay a multi-region trace against a cluster. `threads` follows the
+/// crate convention (0 = auto, 1 = sequential); results are bit-identical
+/// at any thread count.
+pub fn run_cluster(
+    base: &ExperimentConfig,
+    registry: &FunctionRegistry,
+    trace: &Trace,
+    cluster: &ClusterConfig,
+    threads: usize,
+) -> Result<ClusterOutcome> {
+    anyhow::ensure!(!cluster.is_empty(), "cluster needs at least one region");
+    // Refuse partial coverage, like `run_trace`: silently dropping records
+    // would make the totals read as a complete replay.
+    anyhow::ensure!(
+        trace.n_functions() <= registry.len(),
+        "trace addresses function ids up to {} but the registry defines only {} \
+         profiles",
+        trace.n_functions().saturating_sub(1),
+        registry.len()
+    );
+    anyhow::ensure!(
+        trace.n_regions() <= cluster.len(),
+        "trace routes to region ids up to {} but the cluster defines only {} \
+         regions",
+        trace.n_regions().saturating_sub(1),
+        cluster.len()
+    );
+
+    let by_region = trace.records_by_region(cluster.len());
+
+    // Deployment tables: the function ids with arrivals per region,
+    // ascending (= slot order inside the region world).
+    let deployments: Vec<Vec<FunctionId>> = by_region
+        .iter()
+        .map(|records| {
+            let mut ids: Vec<u32> = records.iter().map(|r| r.function.0).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ids.into_iter().map(FunctionId).collect()
+        })
+        .collect();
+
+    // Phase A: per-(region, function) threshold calibration, in parallel.
+    let mut pretest_cfgs: Vec<ExperimentConfig> = Vec::new();
+    let mut pretest_keys: Vec<(usize, FunctionId)> = Vec::new();
+    for (r, fns) in deployments.iter().enumerate() {
+        let region = cluster.get(RegionId(r as u32)).expect("dense region ids");
+        for &f in fns {
+            let profile = registry.get(f).expect("coverage ensured above");
+            let mut cfg = base.clone();
+            cfg.platform = region.platform.clone();
+            cfg.function = profile.spec.clone();
+            cfg.minos = profile.minos.clone();
+            cfg.elysium_percentile = profile.elysium_percentile;
+            cfg.open_loop_rate_rps = None;
+            cfg.replay = None;
+            // Every (region, function) deployment draws its own pre-test
+            // lottery, derived deterministically from the master seed.
+            cfg.seed = region
+                .region_seed(base.seed)
+                .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(f.0 as u64 + 1));
+            pretest_cfgs.push(cfg);
+            pretest_keys.push((r, f));
+        }
+    }
+    let pretests: Vec<PretestReport> =
+        parallel::try_map_indexed(pretest_cfgs.len(), threads, |i| {
+            run_pretest(&pretest_cfgs[i], None)
+        })?;
+    let mut pretest_by_region: Vec<Vec<(FunctionId, PretestReport)>> =
+        (0..cluster.len()).map(|_| Vec::new()).collect();
+    for ((r, f), report) in pretest_keys.into_iter().zip(pretests) {
+        pretest_by_region[r].push((f, report));
+    }
+
+    // Phase B: independent region sub-simulations, in parallel, merged in
+    // region order.
+    let per_region: Vec<RegionOutcome> =
+        parallel::try_map_indexed(cluster.len(), threads, |r| {
+            run_region(
+                base,
+                cluster.get(RegionId(r as u32)).expect("dense region ids"),
+                registry,
+                &pretest_by_region[r],
+                &by_region[r],
+            )
+        })?;
+    Ok(ClusterOutcome { per_region })
+}
+
+/// Run one region's shared-node sub-simulation.
+fn run_region(
+    base: &ExperimentConfig,
+    region: &RegionConfig,
+    registry: &FunctionRegistry,
+    pretests: &[(FunctionId, PretestReport)],
+    records: &[TraceRecord],
+) -> Result<RegionOutcome> {
+    let platform = region.build_platform(base.day, base.seed, 0);
+    let root = Rng::new(region.region_seed(base.seed) ^ 0x9E3779B97F4A7C15);
+
+    let mut deploys = Vec::with_capacity(pretests.len());
+    let mut slot_of: Vec<u32> = vec![u32::MAX; registry.len()];
+    for (slot, (f, pretest)) in pretests.iter().enumerate() {
+        let profile = registry.get(*f).expect("coverage ensured");
+        let live_minos = MinosConfig {
+            elysium_threshold_ms: pretest.threshold_ms,
+            ..profile.minos.clone()
+        };
+        slot_of[f.0 as usize] = slot as u32;
+        deploys.push(DeployState {
+            function: *f,
+            name: profile.name.clone(),
+            spec: profile.spec.clone(),
+            result: RunResult {
+                threshold_ms: live_minos.elysium_threshold_ms,
+                ..Default::default()
+            },
+            live_minos,
+            queue: InvocationQueue::new(),
+            rng: root.fork(7_000 + base.day as u64 + slot as u64 * 31),
+            online: None,
+            arrivals: 0,
+        });
+    }
+
+    let mut schedule = Vec::with_capacity(records.len());
+    for r in records {
+        let slot = slot_of[r.function.0 as usize];
+        debug_assert_ne!(slot, u32::MAX, "record for undeployed function");
+        deploys[slot as usize].arrivals += 1;
+        schedule.push((r.t, slot, r.payload_scale));
+    }
+
+    let mut sim = Simulation::new(RegionWorld { cfg: base, platform, deploys, schedule });
+    if let Some(&(t0, _, _)) = sim.world.schedule.first() {
+        sim.events.schedule(t0, CEvent::TraceArrival { idx: 0 });
+    }
+    sim.run()?;
+    let events_handled = sim.events_handled();
+    let world = sim.into_world();
+
+    let mut per_function = Vec::with_capacity(world.deploys.len());
+    for (ds, (_, pretest)) in world.deploys.into_iter().zip(pretests) {
+        debug_assert!(ds.queue.conserved(), "invocation conservation violated");
+        per_function.push(DeploymentOutcome {
+            region: region.id,
+            function: ds.function,
+            name: ds.name,
+            arrivals: ds.arrivals,
+            pretest: pretest.clone(),
+            result: ds.result,
+        });
+    }
+    Ok(RegionOutcome {
+        region: region.id,
+        region_name: region.name.clone(),
+        cold_starts: world.platform.cold_starts,
+        warm_hits: world.platform.warm_hits,
+        expired: world.platform.expired,
+        recycled: world.platform.recycled,
+        crashes: world.platform.crashes,
+        events_handled,
+        per_function,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SynthConfig;
+
+    fn demo_trace(n_regions: usize, seed: u64) -> Trace {
+        SynthConfig {
+            n_functions: 4,
+            n_regions,
+            hours: 0.05,
+            total_rate_rps: 3.0,
+            region_spill: 0.15,
+            seed,
+            ..Default::default()
+        }
+        .generate()
+    }
+
+    #[test]
+    fn event_enum_stays_small() {
+        assert!(
+            std::mem::size_of::<CEvent>() <= 64,
+            "hot CEvent enum grew to {} bytes",
+            std::mem::size_of::<CEvent>()
+        );
+    }
+
+    #[test]
+    fn cluster_replay_completes_every_arrival() {
+        let trace = demo_trace(2, 11);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(2);
+        let cfg = ExperimentConfig::smoke(1, 77);
+        let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        assert_eq!(o.per_region.len(), 2);
+        assert_eq!(o.total_arrivals(), trace.len());
+        assert_eq!(o.total_completed(), trace.len() as u64);
+        assert!(o.total_cost_usd() > 0.0);
+        assert!(o.total_events_handled() > trace.len() as u64);
+        for r in &o.per_region {
+            assert_eq!(
+                r.arrivals(),
+                trace.count_for_region(r.region),
+                "region {} arrival accounting",
+                r.region_name
+            );
+            for f in &r.per_function {
+                assert_eq!(f.result.successful(), f.arrivals as u64);
+                assert!(f.pretest.threshold_ms.is_finite() && f.pretest.threshold_ms > 0.0);
+                assert_eq!(f.result.threshold_ms, f.pretest.threshold_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_replay_is_bit_identical_across_thread_counts() {
+        let trace = demo_trace(3, 29);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(3);
+        let cfg = ExperimentConfig::smoke(0, 99);
+        let a = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        let b = run_cluster(&cfg, &registry, &trace, &cluster, 8).unwrap();
+        assert_eq!(a.total_completed(), b.total_completed());
+        assert_eq!(a.total_terminations(), b.total_terminations());
+        assert_eq!(
+            a.total_cost_usd().to_bits(),
+            b.total_cost_usd().to_bits(),
+            "thread count changed the replay"
+        );
+        for (ra, rb) in a.per_region.iter().zip(&b.per_region) {
+            assert_eq!(ra.cold_starts, rb.cold_starts);
+            assert_eq!(ra.events_handled, rb.events_handled);
+            for (fa, fb) in ra.per_function.iter().zip(&rb.per_function) {
+                assert_eq!(fa.result.records.len(), fb.result.records.len());
+                for (x, y) in fa.result.records.iter().zip(&fb.result.records) {
+                    assert_eq!(x.completed_at, y.completed_at);
+                    assert_eq!(x.inv_id, y.inv_id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_region_functions_share_one_node_pool() {
+        // Two functions alternating on a one-node region: both fleets are
+        // forced onto the same machine (the factor-sharing itself is
+        // asserted in platform::platform::tests), and the shared platform
+        // counters must account for every attempt of either fleet.
+        let mut records = Vec::new();
+        for i in 0..30 {
+            records.push(TraceRecord {
+                t: SimTime::from_ms(i as f64 * 4_000.0),
+                function: FunctionId((i % 2) as u32),
+                region: RegionId(0),
+                payload_scale: 1.0,
+            });
+        }
+        let trace = Trace::from_records(records);
+        let registry = FunctionRegistry::demo(2);
+        let mut region = RegionConfig::demo(0);
+        region.platform.n_nodes = 1;
+        let cluster = ClusterConfig::new(vec![region]);
+        let cfg = ExperimentConfig::smoke(0, 5);
+        let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        assert_eq!(o.total_completed(), 30);
+        let r = &o.per_region[0];
+        assert_eq!(r.per_function.len(), 2);
+        // Both functions ran (interleaved) and the shared pool served
+        // them: the region's platform counters cover both fleets.
+        assert_eq!(r.cold_starts + r.warm_hits, 30 + r.terminations());
+        for f in &r.per_function {
+            assert!(f.result.successful() > 0);
+        }
+    }
+
+    #[test]
+    fn rejects_uncovered_regions_and_functions() {
+        let trace = demo_trace(3, 11);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cfg = ExperimentConfig::smoke(0, 61);
+        // Cluster smaller than the trace's region space.
+        let err = run_cluster(&cfg, &registry, &trace, &ClusterConfig::demo(2), 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("region"), "unhelpful: {err:#}");
+        // Registry smaller than the trace's function space.
+        let small = FunctionRegistry::demo(1);
+        let err = run_cluster(&cfg, &small, &trace, &ClusterConfig::demo(3), 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("registry"), "unhelpful: {err:#}");
+    }
+}

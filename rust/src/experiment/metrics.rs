@@ -202,6 +202,82 @@ impl FunctionBreakdown {
     }
 }
 
+/// Per-region aggregate of a cluster replay: the region's functions
+/// pooled into one row (latency percentiles over every completed
+/// invocation in the region, plus the shared platform counters the
+/// region-level report prints).
+#[derive(Debug, Clone)]
+pub struct RegionBreakdown {
+    pub region: u32,
+    pub name: String,
+    /// Number of functions deployed in this region.
+    pub functions: usize,
+    pub arrivals: u64,
+    pub successful: u64,
+    pub terminations: u64,
+    /// Region-platform counters (shared across the region's functions).
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    /// Pooled end-to-end latency percentiles, ms.
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub total_cost_usd: f64,
+    pub cost_per_million_usd: f64,
+}
+
+impl RegionBreakdown {
+    /// Aggregate a region's per-function runs into its report row.
+    /// `cold_starts`/`warm_hits` come from the region platform (they are
+    /// shared across functions and not attributable per run here).
+    pub fn from_runs(
+        region: u32,
+        name: &str,
+        arrivals: u64,
+        cold_starts: u64,
+        warm_hits: u64,
+        runs: &[&RunResult],
+    ) -> RegionBreakdown {
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut successful = 0u64;
+        let mut terminations = 0u64;
+        let mut total_cost_usd = 0.0f64;
+        for r in runs {
+            latencies.extend(r.latencies());
+            successful += r.successful();
+            terminations += r.terminations;
+            total_cost_usd += r.total_cost_usd();
+        }
+        // One sort serves both percentile reads (regions pool up to the
+        // whole trace's latencies).
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+        let pct = |q: f64| -> f64 {
+            if latencies.is_empty() {
+                0.0
+            } else {
+                crate::stats::descriptive::percentile_of_sorted(&latencies, q)
+            }
+        };
+        RegionBreakdown {
+            region,
+            name: name.to_string(),
+            functions: runs.len(),
+            arrivals,
+            successful,
+            terminations,
+            cold_starts,
+            warm_hits,
+            p50_latency_ms: pct(50.0),
+            p95_latency_ms: pct(95.0),
+            total_cost_usd,
+            cost_per_million_usd: if successful == 0 {
+                0.0
+            } else {
+                total_cost_usd / successful as f64 * 1e6
+            },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,5 +386,43 @@ mod tests {
         assert_eq!(b.p50_latency_ms, 0.0);
         assert_eq!(b.p95_exec_ms, 0.0);
         assert_eq!(b.termination_rate, 0.0);
+    }
+
+    #[test]
+    fn region_breakdown_pools_functions() {
+        let mut fast = RunResult::default();
+        let mut slow = RunResult::default();
+        for i in 0..10u64 {
+            let mut a = rec(i as f64 + 1.0, 100.0);
+            a.submitted_at = SimTime::from_secs(i as f64);
+            fast.records.push(a);
+            let mut b = rec(i as f64 + 3.0, 100.0);
+            b.submitted_at = SimTime::from_secs(i as f64);
+            slow.records.push(b);
+        }
+        fast.cost_events.push(cost(1.0, 1e-5));
+        slow.cost_events.push(cost(1.0, 3e-5));
+        slow.terminations = 2;
+        let b = RegionBreakdown::from_runs(1, "iowa-1", 20, 4, 16, &[&fast, &slow]);
+        assert_eq!(b.region, 1);
+        assert_eq!(b.functions, 2);
+        assert_eq!(b.arrivals, 20);
+        assert_eq!(b.successful, 20);
+        assert_eq!(b.terminations, 2);
+        assert_eq!(b.cold_starts, 4);
+        assert_eq!(b.warm_hits, 16);
+        // Latencies pooled across both functions: half at 1 s, half 3 s.
+        assert!((b.p50_latency_ms - 2_000.0).abs() < 1e-9);
+        assert!(b.p95_latency_ms >= 3_000.0 - 1e-9);
+        assert!((b.total_cost_usd - 4e-5).abs() < 1e-18);
+        assert!((b.cost_per_million_usd - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn region_breakdown_of_empty_region() {
+        let b = RegionBreakdown::from_runs(0, "ghost", 0, 0, 0, &[]);
+        assert_eq!(b.successful, 0);
+        assert_eq!(b.cost_per_million_usd, 0.0);
+        assert_eq!(b.p50_latency_ms, 0.0);
     }
 }

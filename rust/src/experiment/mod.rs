@@ -1,22 +1,38 @@
 //! The experiment harness: everything needed to regenerate the paper's
-//! evaluation (Figs. 4–7) plus the ablations DESIGN.md calls out.
+//! evaluation (Figs. 4–7) plus the ablations DESIGN.md calls out, and the
+//! cluster scenarios beyond it.
 //!
 //! A *run* is one condition (Minos or baseline) on one simulated day; a
 //! *paired outcome* is both conditions on the identical platform draw
 //! (same seed ⇒ same node pool and placement lottery, mirroring the paper
 //! running both functions "at the same time"); a *week* is seven paired
-//! outcomes with per-day variability regimes.
+//! outcomes with per-day variability regimes; a *cluster replay* drives a
+//! multi-region trace against shared-node regions.
+//!
+//! Structure of the simulation stack (the kernel/world split):
+//!
+//! - `sim::kernel` owns the event-drive loop;
+//! - [`world`] implements the paper's single-deployment semantics as a
+//!   kernel `World` (and exports the cold-start gate both worlds share);
+//! - [`cluster`] implements the multi-function shared-node region world
+//!   and the multi-region replay engine;
+//! - [`runner`] wires worlds into runs and fans independent runs out over
+//!   threads (`util::parallel`), bit-identically at any thread count.
 
+pub mod cluster;
 pub mod config;
 pub mod figures;
 pub mod metrics;
 pub mod report;
 pub mod runner;
 pub mod sweep;
+pub(crate) mod world;
 
+pub use cluster::{run_cluster, ClusterOutcome, DeploymentOutcome, RegionOutcome};
 pub use config::ExperimentConfig;
-pub use metrics::{FunctionBreakdown, InvocationRecord, RunResult};
+pub use metrics::{FunctionBreakdown, InvocationRecord, RegionBreakdown, RunResult};
 pub use runner::{
-    run_paired, run_pretest, run_single, run_trace, run_week, FunctionRunOutcome,
-    PairedOutcome, TraceOutcome,
+    run_paired, run_paired_threads, run_pretest, run_single, run_trace, run_trace_paired,
+    run_trace_threads, run_week, run_week_threads, FunctionPairedOutcome,
+    FunctionRunOutcome, PairedOutcome, TraceOutcome, TracePairedOutcome,
 };

@@ -7,9 +7,10 @@ use crate::stats::bootstrap;
 use crate::util::prng::Rng;
 use crate::util::timefmt::signed_pct;
 
+use super::cluster::ClusterOutcome;
 use super::figures;
-use super::metrics::FunctionBreakdown;
-use super::runner::{PairedOutcome, TraceOutcome};
+use super::metrics::{FunctionBreakdown, RegionBreakdown};
+use super::runner::{PairedOutcome, TraceOutcome, TracePairedOutcome};
 
 /// Render the full week report (Figs. 4–6 tables + overall numbers).
 pub fn week_report(outcomes: &[PairedOutcome]) -> String {
@@ -203,6 +204,111 @@ pub fn trace_report(outcome: &TraceOutcome) -> String {
     out
 }
 
+/// Render the per-region / per-function breakdown of a cluster replay.
+pub fn cluster_report(outcome: &ClusterOutcome) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== cluster replay: per-region / per-function breakdown ==");
+    for r in &outcome.per_region {
+        let runs: Vec<&crate::experiment::RunResult> =
+            r.per_function.iter().map(|f| &f.result).collect();
+        let rb = RegionBreakdown::from_runs(
+            r.region.0,
+            &r.region_name,
+            r.arrivals() as u64,
+            r.cold_starts,
+            r.warm_hits,
+            &runs,
+        );
+        let _ = writeln!(
+            out,
+            "region {} ({}): {} functions, {} arrivals, {} done, {} term, \
+             lat p50 {:.0} ms p95 {:.0} ms, cold {}, warm {}, {:.3} $/M",
+            rb.region,
+            rb.name,
+            rb.functions,
+            rb.arrivals,
+            rb.successful,
+            rb.terminations,
+            rb.p50_latency_ms,
+            rb.p95_latency_ms,
+            rb.cold_starts,
+            rb.warm_hits,
+            rb.cost_per_million_usd,
+        );
+        let _ = writeln!(
+            out,
+            "  {:>4} {:<14} {:>8} {:>8} {:>9} {:>9} {:>9} {:>6} {:>6} {:>10}",
+            "id", "function", "arrived", "done", "lat p50", "lat p95", "thresh",
+            "term", "rate", "$ / M"
+        );
+        for f in &r.per_function {
+            let b = FunctionBreakdown::from_run(
+                f.function.0,
+                &f.name,
+                f.arrivals as u64,
+                &f.result,
+            );
+            let _ = writeln!(
+                out,
+                "  {:>4} {:<14} {:>8} {:>8} {:>9.0} {:>9.0} {:>9.0} {:>6} {:>6.2} {:>10.3}",
+                b.function,
+                b.name,
+                b.arrivals,
+                b.successful,
+                b.p50_latency_ms,
+                b.p95_latency_ms,
+                b.threshold_ms,
+                b.terminations,
+                b.termination_rate,
+                b.cost_per_million_usd,
+            );
+        }
+    }
+    let completed = outcome.total_completed();
+    let _ = writeln!(
+        out,
+        "total: {} regions, {} arrivals, {} completed, {} terminations, \
+         ${:.6} ({:.3} $/M successful), {} events handled",
+        outcome.per_region.len(),
+        outcome.total_arrivals(),
+        completed,
+        outcome.total_terminations(),
+        outcome.total_cost_usd(),
+        if completed > 0 {
+            outcome.total_cost_usd() / completed as f64 * 1e6
+        } else {
+            0.0
+        },
+        outcome.total_events_handled(),
+    );
+    out
+}
+
+/// Render the per-function improvement table of a paired trace replay.
+pub fn trace_paired_report(outcome: &TracePairedOutcome) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== paired trace replay: per-function Minos vs baseline ==");
+    let _ = writeln!(
+        out,
+        "{:>4} {:<14} {:>8} {:>9} {:>7} {:>12} {:>10}",
+        "id", "function", "arrived", "thresh", "term", "analysis d%", "cost d%"
+    );
+    for f in &outcome.per_function {
+        let _ = writeln!(
+            out,
+            "{:>4} {:<14} {:>8} {:>9.0} {:>7} {:>12} {:>10}",
+            f.id.0,
+            f.name,
+            f.arrivals,
+            f.pretest.threshold_ms,
+            f.minos.terminations,
+            signed_pct(f.analysis_improvement_pct()),
+            signed_pct(f.cost_saving_pct()),
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +332,49 @@ mod tests {
         assert!(rpt.contains("per-function breakdown"), "{rpt}");
         assert!(rpt.contains("weather-0"), "{rpt}");
         assert!(rpt.contains("total:"), "{rpt}");
+    }
+
+    #[test]
+    fn cluster_report_renders_regions_and_functions() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 2,
+            n_regions: 2,
+            hours: 0.03,
+            total_rate_rps: 2.0,
+            seed: 9,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let cluster = crate::platform::ClusterConfig::demo(2);
+        let cfg = ExperimentConfig::smoke(0, 52);
+        let o = crate::experiment::cluster::run_cluster(&cfg, &registry, &trace, &cluster, 1)
+            .unwrap();
+        let rpt = cluster_report(&o);
+        assert!(rpt.contains("per-region"), "{rpt}");
+        assert!(rpt.contains("frankfurt-0"), "{rpt}");
+        assert!(rpt.contains("iowa-1"), "{rpt}");
+        assert!(rpt.contains("total:"), "{rpt}");
+    }
+
+    #[test]
+    fn trace_paired_report_renders_improvements() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 2,
+            hours: 0.03,
+            total_rate_rps: 2.0,
+            seed: 5,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let cfg = ExperimentConfig::smoke(1, 53);
+        let o = crate::experiment::runner::run_trace_paired(&cfg, &registry, &trace, 1)
+            .unwrap();
+        let rpt = trace_paired_report(&o);
+        assert!(rpt.contains("Minos vs baseline"), "{rpt}");
+        assert!(rpt.contains("analysis d%"), "{rpt}");
+        assert!(rpt.contains('%'), "{rpt}");
     }
 
     #[test]

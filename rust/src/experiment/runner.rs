@@ -1,74 +1,44 @@
-//! The experiment runner: the discrete-event main loop that glues virtual
-//! users → invocation queue → platform placement → Minos cold-start gate →
-//! function execution → billing (paper Figs. 1 and 2).
+//! Experiment orchestration: compose worlds, kernel, and thread pools
+//! into the paper's runs.
 //!
-//! Timeline of one invocation attempt on an instance (times relative to
-//! when the instance starts serving it):
+//! The discrete-event *loop* lives in `sim::kernel` and the domain
+//! *semantics* live in `experiment::world::MinosWorld` (single
+//! deployment) and `experiment::cluster::RegionWorld` (multi-function
+//! shared-node regions); this module only wires them together:
 //!
-//! ```text
-//! cold + Minos:   [ prepare (download) ───────────────┐
-//!                 [ benchmark ──┬ judge               │
-//!                               ├ fail: re-queue + crash (billed: bench)
-//!                               └ pass ▼              ▼
-//!                                      [ analysis ][ overhead ]  (billed:
-//!                                  max(prepare, bench) + analysis + ovh)
-//! cold baseline / forced / warm:
-//!                 [ prepare ][ analysis ][ overhead ]
-//! ```
+//! - [`run_single`] — one condition (Minos or baseline) on one day;
+//! - [`run_pretest`] — threshold calibration (paper §II-B-a);
+//! - [`run_paired`] / [`run_paired_threads`] — both paper conditions on
+//!   the identical platform draw, optionally on two threads;
+//! - [`run_week`] / [`run_week_threads`] — seven paired days, optionally
+//!   with days fanned out over a thread pool;
+//! - [`run_trace`] / [`run_trace_threads`] — multi-function trace replay
+//!   with isolated per-function deployments;
+//! - [`run_trace_paired`] — per-function paired Minos-vs-baseline trace
+//!   replays (per-function improvement figures).
 //!
-//! When a [`Runtime`] is supplied, every completed invocation *really*
-//! executes the weather-regression HLO artifact through PJRT and the
-//! prediction is verified against the Rust OLS oracle — the simulator
-//! decides *when* things happen, the artifacts decide *what* is computed.
+//! All `_threads` variants take the crate-wide thread convention
+//! (0 = auto, 1 = sequential) and produce results bit-identical to the
+//! sequential order at any thread count: every work item forks its own
+//! seeded RNG streams and results merge by index
+//! (`util::parallel::map_indexed`).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::lifecycle::{decide_cold_start, ColdStartDecision};
-use crate::coordinator::online::OnlineThreshold;
 use crate::coordinator::pretest::PretestReport;
-use crate::coordinator::queue::{Invocation, InvocationQueue};
 use crate::coordinator::MinosConfig;
-use crate::platform::{FaasPlatform, InstanceId, Placement};
 use crate::runtime::Runtime;
-use crate::sim::{EventQueue, SimTime};
-use crate::trace::{FunctionId, FunctionRegistry, Trace};
-use crate::util::prng::Rng;
-use crate::workload::weather;
+use crate::sim::Simulation;
+use crate::trace::{
+    FunctionId, FunctionProfile, FunctionRegistry, ReplaySchedule, Trace,
+};
+use crate::util::parallel;
 
 use super::config::ExperimentConfig;
-use super::metrics::{CostEvent, InvocationRecord, RunResult};
-
-/// Domain events of the simulation.
-#[derive(Debug)]
-enum Event {
-    /// Open-loop mode: a Poisson arrival (schedules its own successor).
-    Arrival,
-    /// Trace-replay mode: the `idx`-th scheduled arrival (schedules its
-    /// successor at the next trace timestamp — no allocation per event).
-    TraceArrival { idx: usize },
-    /// A virtual user submits a new request.
-    Submit { vu: u32 },
-    /// Try to place the queue head.
-    Dispatch,
-    /// A cold start finished; the instance begins serving `inv`.
-    ColdReady { inst: InstanceId, inv: Invocation },
-    /// A Minos-terminated instance crashes after its benchmark; the
-    /// invocation re-enters the queue.
-    CrashRequeue { inst: InstanceId, inv: Invocation, bench_ms: f64 },
-    /// An invocation completed successfully.
-    Finish { inst: InstanceId, inv: Invocation, rec: PendingRecord },
-}
-
-/// Record fields computed at invocation start, finalized at completion.
-#[derive(Debug, Clone)]
-struct PendingRecord {
-    cold: bool,
-    forced: bool,
-    prepare_ms: f64,
-    analysis_ms: f64,
-    exec_ms: f64,
-    bench_ms: Option<f64>,
-}
+use super::metrics::RunResult;
+use super::world::MinosWorld;
 
 /// Run one condition (Minos or baseline) for one day.
 ///
@@ -82,345 +52,11 @@ pub fn run_single(
     bench_warm: bool,
     runtime: Option<&Runtime>,
 ) -> Result<RunResult> {
-    let mut platform =
-        FaasPlatform::new_salted(cfg.platform.clone(), cfg.day, cfg.seed, salt);
-    let mut queue = InvocationQueue::new();
-    let mut events: EventQueue<Event> = EventQueue::new();
-    let mut result = RunResult {
-        threshold_ms: minos.elysium_threshold_ms,
-        ..Default::default()
-    };
-    let root = Rng::new(cfg.seed ^ 0x9E3779B97F4A7C15);
-    let mut rng_workload = root.fork(7_000 + cfg.day as u64 + salt * 31);
-    let mut online = cfg.online_update_every.map(|every| {
-        OnlineThreshold::new(cfg.elysium_percentile, minos.elysium_threshold_ms, every)
-    });
-    let mut live_minos = minos.clone();
-
-    // Per-VU weather dataset (location) for real execution.
-    let datasets: Vec<weather::WeatherData> = if runtime.is_some() {
-        (0..cfg.vus.n_vus)
-            .map(|vu| weather::generate(cfg.seed ^ (vu as u64) << 32))
-            .collect()
-    } else {
-        Vec::new()
-    };
-
-    if let Some(schedule) = &cfg.replay {
-        // Trace replay: arrivals happen exactly when the trace says.
-        if let Some(&(t0, _)) = schedule.arrivals.first() {
-            events.schedule(t0, Event::TraceArrival { idx: 0 });
-        }
-    } else {
-        match cfg.open_loop_rate_rps {
-            // Open loop: one Poisson arrival process drives the queue.
-            Some(rate) => {
-                assert!(rate > 0.0, "open-loop rate must be positive");
-                events.schedule(SimTime::ZERO, Event::Arrival);
-            }
-            // Closed loop (the paper's load generator): all VUs submit at t=0.
-            None => {
-                for vu in 0..cfg.vus.n_vus {
-                    events.schedule(SimTime::ZERO, Event::Submit { vu });
-                }
-            }
-        }
-    }
-    let mut arrival_rr: u32 = 0; // round-robin dataset assignment
-
-    while let Some((now, ev)) = events.pop() {
-        match ev {
-            Event::Arrival => {
-                if cfg.vus.may_submit(now) {
-                    let vu = arrival_rr % cfg.vus.n_vus.max(1);
-                    arrival_rr = arrival_rr.wrapping_add(1);
-                    queue.submit(vu, now);
-                    events.schedule(now, Event::Dispatch);
-                    let rate = cfg.open_loop_rate_rps.expect("arrival without rate");
-                    let gap_ms = rng_workload.exponential(rate) * 1_000.0;
-                    events.schedule_in_ms(gap_ms, Event::Arrival);
-                }
-            }
-
-            Event::TraceArrival { idx } => {
-                let schedule = cfg.replay.as_ref().expect("trace arrival without schedule");
-                let (_, payload_scale) = schedule.arrivals[idx];
-                // Round-robin the VU id: it only selects the dataset for
-                // real execution; the trace, not a think loop, drives load.
-                let vu = arrival_rr % cfg.vus.n_vus.max(1);
-                arrival_rr = arrival_rr.wrapping_add(1);
-                queue.submit_scaled(vu, payload_scale, now);
-                events.schedule(now, Event::Dispatch);
-                if let Some(&(t_next, _)) = schedule.arrivals.get(idx + 1) {
-                    events.schedule(t_next, Event::TraceArrival { idx: idx + 1 });
-                }
-            }
-
-            Event::Submit { vu } => {
-                if cfg.vus.may_submit(now) {
-                    queue.submit(vu, now);
-                    events.schedule(now, Event::Dispatch);
-                }
-            }
-
-            Event::Dispatch => {
-                let Some(inv) = queue.take() else { continue };
-                match platform.place(now) {
-                    Placement::Warm(inst) => {
-                        start_invocation(
-                            StartCtx {
-                                cfg,
-                                minos: &live_minos,
-                                platform: &mut platform,
-                                events: &mut events,
-                                result: &mut result,
-                                queue: &mut queue,
-                                rng: &mut rng_workload,
-                                online: &mut online,
-                                bench_warm,
-                            },
-                            now,
-                            inst,
-                            inv,
-                            false,
-                        );
-                    }
-                    Placement::Cold { id, ready_at } => {
-                        events.schedule(ready_at, Event::ColdReady { inst: id, inv });
-                    }
-                    Placement::Saturated => {
-                        // Platform quota: put the invocation back at the
-                        // queue head and retry shortly.
-                        queue.untake(inv);
-                        events.schedule_in_ms(100.0, Event::Dispatch);
-                    }
-                }
-            }
-
-            Event::ColdReady { inst, inv } => {
-                platform.cold_start_ready(inst);
-                start_invocation(
-                    StartCtx {
-                        cfg,
-                        minos: &live_minos,
-                        platform: &mut platform,
-                        events: &mut events,
-                        result: &mut result,
-                        queue: &mut queue,
-                        rng: &mut rng_workload,
-                        online: &mut online,
-                        bench_warm,
-                    },
-                    now,
-                    inst,
-                    inv,
-                    true,
-                );
-            }
-
-            Event::CrashRequeue { inst, inv, bench_ms } => {
-                // Bill the terminated attempt: the instance consumed the
-                // benchmark duration before crashing (Fig. 3's d_term).
-                result.cost_events.push(CostEvent {
-                    at: now,
-                    usd: cfg.billing.invocation_cost_usd(bench_ms),
-                    terminated: true,
-                });
-                result.terminations += 1;
-                platform.crash(inst);
-                queue.requeue(inv);
-                events.schedule_in_ms(live_minos.requeue_overhead_ms, Event::Dispatch);
-            }
-
-            Event::Finish { inst, inv, rec } => {
-                platform.release(inst, now);
-                queue.complete(&inv);
-                result.cost_events.push(CostEvent {
-                    at: now,
-                    usd: cfg.billing.invocation_cost_usd(rec.exec_ms),
-                    terminated: false,
-                });
-                // Online threshold updates arrive between requests (§IV).
-                if let Some(ot) = online.as_mut() {
-                    live_minos.elysium_threshold_ms = ot.published();
-                }
-                let prediction = match (runtime, datasets.get(inv.vu as usize)) {
-                    (Some(rt), Some(data)) => {
-                        let out = rt.exec_linreg(&data.x, &data.y, &data.x_next)?;
-                        verify_against_oracle(data, &out);
-                        Some(out.prediction)
-                    }
-                    _ => None,
-                };
-                result.records.push(InvocationRecord {
-                    inv_id: inv.id,
-                    vu: inv.vu,
-                    submitted_at: inv.submitted_at,
-                    completed_at: now,
-                    attempts: inv.retries + 1,
-                    forced: rec.forced,
-                    cold: rec.cold,
-                    prepare_ms: rec.prepare_ms,
-                    analysis_ms: rec.analysis_ms,
-                    exec_ms: rec.exec_ms,
-                    bench_ms: rec.bench_ms,
-                    prediction,
-                });
-                // Closed loop: the VU thinks, then submits again. (Open-
-                // loop and trace-replay arrivals schedule themselves.)
-                if cfg.open_loop_rate_rps.is_none() && cfg.replay.is_none() {
-                    let next = cfg.vus.next_submit_at(now);
-                    events.schedule(next, Event::Submit { vu: inv.vu });
-                }
-            }
-        }
-    }
-
-    debug_assert!(queue.conserved(), "invocation conservation violated");
-    result.cold_starts = platform.cold_starts;
-    result.warm_hits = platform.warm_hits;
-    result.expired = platform.expired;
-    result.recycled = platform.recycled;
-    if let Some(ot) = online {
-        result.online_pushes = ot.pushes;
-    }
-    Ok(result)
-}
-
-/// Borrow bundle for [`start_invocation`] (keeps the call sites readable).
-struct StartCtx<'a> {
-    cfg: &'a ExperimentConfig,
-    minos: &'a MinosConfig,
-    platform: &'a mut FaasPlatform,
-    events: &'a mut EventQueue<Event>,
-    result: &'a mut RunResult,
-    queue: &'a mut InvocationQueue,
-    rng: &'a mut Rng,
-    online: &'a mut Option<OnlineThreshold>,
-    bench_warm: bool,
-}
-
-/// An instance begins serving an invocation (paper Fig. 2's flow).
-fn start_invocation(
-    ctx: StartCtx<'_>,
-    now: SimTime,
-    inst: InstanceId,
-    mut inv: Invocation,
-    cold: bool,
-) {
-    let StartCtx { cfg, minos, platform, events, result, queue, rng, online, bench_warm } =
-        ctx;
-    let perf = platform.perf_factor(inst, now);
-    let noise = platform.invocation_noise();
-    let phases = cfg.function.sample_scaled(perf, noise, inv.payload_scale, rng);
-
-    if cold {
-        let draw = rng.f64();
-        let decision = decide_cold_start(minos, &inv, perf, draw, || {
-            let b = minos.benchmark.duration_ms(perf, rng);
-            result.bench_scores.push(b);
-            if let Some(ot) = online.as_mut() {
-                ot.report(b);
-            }
-            b
-        });
-        match decision {
-            ColdStartDecision::TerminateAndRequeue { bench_ms } => {
-                platform.scheduler.get_mut(inst).benchmark_score = Some(bench_ms);
-                events.schedule(
-                    now.plus_ms(bench_ms),
-                    Event::CrashRequeue { inst, inv, bench_ms },
-                );
-                return;
-            }
-            ColdStartDecision::Run { forced, bench_ms } => {
-                if forced {
-                    inv.forced_pass = true;
-                    result.forced_passes += 1;
-                }
-                if let Some(b) = bench_ms {
-                    platform.scheduler.get_mut(inst).benchmark_score = Some(b);
-                }
-                // Analysis starts once both prepare and (any) benchmark are
-                // done; the benchmark usually hides inside the download.
-                let gate_ms = match bench_ms {
-                    Some(b) => phases.prepare_ms.max(b),
-                    None => phases.prepare_ms,
-                };
-                let exec_ms = gate_ms + phases.analysis_ms + phases.overhead_ms;
-                events.schedule(
-                    now.plus_ms(exec_ms),
-                    Event::Finish {
-                        inst,
-                        inv,
-                        rec: PendingRecord {
-                            cold: true,
-                            forced,
-                            prepare_ms: phases.prepare_ms,
-                            analysis_ms: phases.analysis_ms,
-                            exec_ms,
-                            bench_ms,
-                        },
-                    },
-                );
-                return;
-            }
-        }
-    }
-
-    // Warm path: no gate. During the pre-test (`bench_warm`) the benchmark
-    // still runs — purely to collect scores; it never terminates a warm
-    // instance and its duration hides inside prepare.
-    let bench_ms = if bench_warm && minos.enabled {
-        let b = minos.benchmark.duration_ms(perf, rng);
-        result.bench_scores.push(b);
-        if let Some(ot) = online.as_mut() {
-            ot.report(b);
-        }
-        Some(b)
-    } else {
-        None
-    };
-    let gate_ms = match bench_ms {
-        Some(b) => phases.prepare_ms.max(b),
-        None => phases.prepare_ms,
-    };
-    let exec_ms = gate_ms + phases.analysis_ms + phases.overhead_ms;
-    events.schedule(
-        now.plus_ms(exec_ms),
-        Event::Finish {
-            inst,
-            inv,
-            rec: PendingRecord {
-                cold: false,
-                forced: false,
-                prepare_ms: phases.prepare_ms,
-                analysis_ms: phases.analysis_ms,
-                exec_ms,
-                bench_ms,
-            },
-        },
-    );
-    let _ = queue; // conservation counters only change on take/complete
-}
-
-/// Cross-check a real PJRT execution against the Rust OLS oracle.
-fn verify_against_oracle(
-    data: &weather::WeatherData,
-    out: &crate::runtime::engine::LinregOutput,
-) {
-    let theta = crate::workload::oracle::ols_fit(
-        &data.x,
-        &data.y,
-        weather::N_DAYS,
-        weather::N_FEATURES,
-    );
-    let want = crate::workload::oracle::predict(&theta, &data.x_next);
-    let got = out.prediction as f64;
-    assert!(
-        (got - want).abs() < 0.05 * want.abs().max(1.0),
-        "PJRT prediction {got} diverges from oracle {want}"
-    );
+    let mut sim = Simulation::new(MinosWorld::new(cfg, minos, salt, bench_warm, runtime));
+    let Simulation { world, events } = &mut sim;
+    world.seed_initial(events);
+    sim.run()?;
+    Ok(sim.into_world().finish())
 }
 
 /// Pre-test (paper §II-B-a): a short run that benchmarks but never
@@ -477,8 +113,20 @@ impl PairedOutcome {
     }
 }
 
-/// Run pre-test + paired conditions for one configured day.
+/// Run pre-test + paired conditions for one configured day (sequential).
 pub fn run_paired(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<PairedOutcome> {
+    run_paired_threads(cfg, runtime, 1)
+}
+
+/// Like [`run_paired`], but the two conditions — independent simulations
+/// on the identical platform draw — run concurrently when `threads` allows
+/// (0 = auto). Results are bit-identical to the sequential order; with a
+/// `runtime` the run stays sequential (PJRT handles are not `Sync`).
+pub fn run_paired_threads(
+    cfg: &ExperimentConfig,
+    runtime: Option<&Runtime>,
+    threads: usize,
+) -> Result<PairedOutcome> {
     let pretest = run_pretest(cfg, runtime)?;
     let minos_cfg = MinosConfig {
         enabled: true,
@@ -488,25 +136,58 @@ pub fn run_paired(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<P
     let baseline_cfg = MinosConfig { enabled: false, ..cfg.minos.clone() };
     // The paper deploys baseline and Minos as *separate functions* run at
     // the same time: same platform day, independent instance lotteries.
-    let minos = run_single(cfg, &minos_cfg, 0, false, runtime)?;
-    let baseline = run_single(cfg, &baseline_cfg, 2, false, runtime)?;
+    let (minos, baseline) = if parallel::resolve_threads(threads) >= 2 && runtime.is_none()
+    {
+        let (minos_res, baseline_res) = std::thread::scope(|s| {
+            let handle = s.spawn(|| run_single(cfg, &minos_cfg, 0, false, None));
+            let baseline = run_single(cfg, &baseline_cfg, 2, false, None);
+            let minos = match handle.join() {
+                Ok(r) => r,
+                Err(panic) => std::panic::resume_unwind(panic),
+            };
+            (minos, baseline)
+        });
+        (minos_res?, baseline_res?)
+    } else {
+        (
+            run_single(cfg, &minos_cfg, 0, false, runtime)?,
+            run_single(cfg, &baseline_cfg, 2, false, runtime)?,
+        )
+    };
     Ok(PairedOutcome { day: cfg.day, pretest, minos, baseline })
 }
 
-/// The paper's full week: seven paired days.
+/// The paper's full week: seven paired days (sequential).
 pub fn run_week(
     base: &ExperimentConfig,
     days: u32,
     runtime: Option<&Runtime>,
 ) -> Result<Vec<PairedOutcome>> {
-    (0..days)
-        .map(|d| {
-            let mut cfg = base.clone();
-            cfg.day = d;
-            cfg.seed = base.seed + d as u64;
-            run_paired(&cfg, runtime)
+    run_week_threads(base, days, runtime, 1)
+}
+
+/// Like [`run_week`], but days fan out over a thread pool (each day is a
+/// self-contained paired run with its own seed). Bit-identical to the
+/// sequential order at any `threads`.
+pub fn run_week_threads(
+    base: &ExperimentConfig,
+    days: u32,
+    runtime: Option<&Runtime>,
+    threads: usize,
+) -> Result<Vec<PairedOutcome>> {
+    let day_cfg = |d: u32| {
+        let mut cfg = base.clone();
+        cfg.day = d;
+        cfg.seed = base.seed + d as u64;
+        cfg
+    };
+    if parallel::resolve_threads(threads) >= 2 && runtime.is_none() {
+        parallel::try_map_indexed(days as usize, threads, |d| {
+            run_paired(&day_cfg(d as u32), None)
         })
-        .collect()
+    } else {
+        (0..days).map(|d| run_paired(&day_cfg(d), runtime)).collect()
+    }
 }
 
 /// Per-function outcome of a trace replay.
@@ -545,17 +226,55 @@ impl TraceOutcome {
     }
 }
 
-/// Replay a multi-function trace: each function in the registry is its own
-/// deployment (own warm pool, own instance lottery — exactly how FaaS
-/// platforms isolate functions), pre-tested for its own elysium threshold,
-/// then driven by the trace's arrivals for that function id. Functions the
-/// trace never invokes are skipped.
-pub fn run_trace(
+/// Build the per-function deployment config `run_trace` and
+/// `run_trace_paired` share: the function's own profile, percentile, and
+/// deterministic per-deployment seed.
+fn deployment_cfg(base: &ExperimentConfig, profile: &FunctionProfile) -> ExperimentConfig {
+    let mut cfg = base.clone();
+    cfg.function = profile.spec.clone();
+    cfg.minos = profile.minos.clone();
+    cfg.elysium_percentile = profile.elysium_percentile;
+    cfg.open_loop_rate_rps = None;
+    cfg.replay = None;
+    // Separate deployments get separate platform lotteries.
+    cfg.seed = base
+        .seed
+        .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(profile.id.0 as u64 + 1));
+    cfg
+}
+
+/// Pre-test + replay one function's slice of a trace.
+fn trace_item(
     base: &ExperimentConfig,
-    registry: &FunctionRegistry,
-    trace: &Trace,
+    profile: &FunctionProfile,
+    schedule: Arc<ReplaySchedule>,
     runtime: Option<&Runtime>,
-) -> Result<TraceOutcome> {
+) -> Result<FunctionRunOutcome> {
+    let mut cfg = deployment_cfg(base, profile);
+    // Calibrate this function's threshold (closed-loop pre-test,
+    // paper §II-B-a), then replay its slice of the trace.
+    let pretest = run_pretest(&cfg, runtime)?;
+    let minos_cfg = MinosConfig {
+        elysium_threshold_ms: pretest.threshold_ms,
+        ..cfg.minos.clone()
+    };
+    let arrivals = schedule.len();
+    cfg.replay = Some(schedule);
+    let result = run_single(&cfg, &minos_cfg, 0, false, runtime)?;
+    Ok(FunctionRunOutcome {
+        id: profile.id,
+        name: profile.name.clone(),
+        arrivals,
+        pretest,
+        result,
+    })
+}
+
+/// Split a trace into the non-empty per-function work items.
+fn trace_items<'r>(
+    registry: &'r FunctionRegistry,
+    trace: &Trace,
+) -> Result<Vec<(&'r FunctionProfile, Arc<ReplaySchedule>)>> {
     // Refuse partial coverage: silently dropping records whose function id
     // has no profile would make the totals read as a complete replay.
     anyhow::ensure!(
@@ -565,48 +284,133 @@ pub fn run_trace(
         trace.n_functions().saturating_sub(1),
         registry.len()
     );
-    let mut per_function = Vec::new();
     // One O(N) pass splits the trace into per-function schedules.
     let mut schedules = trace.schedules(registry.len());
+    let mut items = Vec::new();
     for profile in registry.iter() {
         let schedule = std::mem::take(&mut schedules[profile.id.0 as usize]);
         if schedule.is_empty() {
             continue;
         }
-        let mut cfg = base.clone();
-        cfg.function = profile.spec.clone();
-        cfg.minos = profile.minos.clone();
-        cfg.elysium_percentile = profile.elysium_percentile;
-        cfg.open_loop_rate_rps = None;
-        cfg.replay = None;
-        // Separate deployments get separate platform lotteries.
-        cfg.seed = base
-            .seed
-            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(profile.id.0 as u64 + 1));
-        // Calibrate this function's threshold (closed-loop pre-test,
-        // paper §II-B-a), then replay its slice of the trace.
-        let pretest = run_pretest(&cfg, runtime)?;
+        items.push((profile, Arc::new(schedule)));
+    }
+    Ok(items)
+}
+
+/// Replay a multi-function trace: each function in the registry is its own
+/// deployment (own warm pool, own instance lottery — exactly how FaaS
+/// platforms isolate functions), pre-tested for its own elysium threshold,
+/// then driven by the trace's arrivals for that function id. Functions the
+/// trace never invokes are skipped; region ids are ignored (use
+/// `experiment::cluster::run_cluster` for multi-region shared-node
+/// replay).
+pub fn run_trace(
+    base: &ExperimentConfig,
+    registry: &FunctionRegistry,
+    trace: &Trace,
+    runtime: Option<&Runtime>,
+) -> Result<TraceOutcome> {
+    run_trace_threads(base, registry, trace, runtime, 1)
+}
+
+/// Like [`run_trace`], but the per-function items (pre-test + replay) fan
+/// out over a thread pool. Bit-identical to the sequential order; with a
+/// `runtime` the run stays sequential.
+pub fn run_trace_threads(
+    base: &ExperimentConfig,
+    registry: &FunctionRegistry,
+    trace: &Trace,
+    runtime: Option<&Runtime>,
+    threads: usize,
+) -> Result<TraceOutcome> {
+    let items = trace_items(registry, trace)?;
+    let per_function = if parallel::resolve_threads(threads) >= 2 && runtime.is_none() {
+        parallel::try_map_indexed(items.len(), threads, |i| {
+            let (profile, schedule) = &items[i];
+            trace_item(base, profile, schedule.clone(), None)
+        })?
+    } else {
+        let mut out = Vec::with_capacity(items.len());
+        for (profile, schedule) in &items {
+            out.push(trace_item(base, profile, schedule.clone(), runtime)?);
+        }
+        out
+    };
+    Ok(TraceOutcome { per_function })
+}
+
+/// Per-function paired Minos-vs-baseline outcome of a trace replay.
+#[derive(Debug)]
+pub struct FunctionPairedOutcome {
+    pub id: FunctionId,
+    pub name: String,
+    pub arrivals: usize,
+    pub pretest: PretestReport,
+    pub minos: RunResult,
+    pub baseline: RunResult,
+}
+
+impl FunctionPairedOutcome {
+    /// Mean analysis-duration improvement for this function, %.
+    pub fn analysis_improvement_pct(&self) -> f64 {
+        let b = crate::stats::mean(&self.baseline.analysis_durations());
+        let m = crate::stats::mean(&self.minos.analysis_durations());
+        (b - m) / b * 100.0
+    }
+
+    /// Cost-per-success saving for this function, % (positive = cheaper).
+    pub fn cost_saving_pct(&self) -> f64 {
+        let b = self.baseline.cost_per_million_usd();
+        (b - self.minos.cost_per_million_usd()) / b * 100.0
+    }
+}
+
+/// Outcome of a paired trace replay: per-function improvement figures.
+#[derive(Debug)]
+pub struct TracePairedOutcome {
+    pub per_function: Vec<FunctionPairedOutcome>,
+}
+
+/// Replay every function's trace slice under *both* conditions — Minos
+/// and baseline on the identical platform draw (same day, independent
+/// salts, exactly like [`run_paired`]) — yielding per-function
+/// improvement figures. Items fan out over a thread pool.
+pub fn run_trace_paired(
+    base: &ExperimentConfig,
+    registry: &FunctionRegistry,
+    trace: &Trace,
+    threads: usize,
+) -> Result<TracePairedOutcome> {
+    let items = trace_items(registry, trace)?;
+    let per_function = parallel::try_map_indexed(items.len(), threads, |i| {
+        let (profile, schedule) = &items[i];
+        let mut cfg = deployment_cfg(base, profile);
+        let pretest = run_pretest(&cfg, None)?;
         let minos_cfg = MinosConfig {
             elysium_threshold_ms: pretest.threshold_ms,
             ..cfg.minos.clone()
         };
+        let baseline_cfg = MinosConfig { enabled: false, ..cfg.minos.clone() };
         let arrivals = schedule.len();
-        cfg.replay = Some(std::sync::Arc::new(schedule));
-        let result = run_single(&cfg, &minos_cfg, 0, false, runtime)?;
-        per_function.push(FunctionRunOutcome {
+        cfg.replay = Some(schedule.clone());
+        let minos = run_single(&cfg, &minos_cfg, 0, false, None)?;
+        let baseline = run_single(&cfg, &baseline_cfg, 2, false, None)?;
+        Ok(FunctionPairedOutcome {
             id: profile.id,
             name: profile.name.clone(),
             arrivals,
             pretest,
-            result,
-        });
-    }
-    Ok(TraceOutcome { per_function })
+            minos,
+            baseline,
+        })
+    })?;
+    Ok(TracePairedOutcome { per_function })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::SimTime;
 
     #[test]
     fn smoke_run_completes_requests() {
@@ -663,6 +467,50 @@ mod tests {
         assert_eq!(a.records.len(), b.records.len());
         for (x, y) in a.records.iter().zip(&b.records) {
             assert_eq!(x.completed_at, y.completed_at);
+        }
+    }
+
+    #[test]
+    fn paired_is_bit_identical_across_thread_counts() {
+        let mut cfg = ExperimentConfig::smoke(1, 12);
+        let schedule = std::sync::Arc::new(crate::trace::ReplaySchedule::from_times_ms(
+            &(0..300).map(|i| i as f64 * 350.0).collect::<Vec<f64>>(),
+        ));
+        cfg.replay = Some(schedule);
+        let seq = run_paired_threads(&cfg, None, 1).unwrap();
+        let par = run_paired_threads(&cfg, None, 8).unwrap();
+        assert_eq!(seq.pretest.threshold_ms.to_bits(), par.pretest.threshold_ms.to_bits());
+        for (a, b) in [(&seq.minos, &par.minos), (&seq.baseline, &par.baseline)] {
+            assert_eq!(a.successful(), b.successful());
+            assert_eq!(a.terminations, b.terminations);
+            assert_eq!(
+                a.total_cost_usd().to_bits(),
+                b.total_cost_usd().to_bits(),
+                "thread count changed paired-replay metrics"
+            );
+            assert_eq!(a.records.len(), b.records.len());
+            for (x, y) in a.records.iter().zip(&b.records) {
+                assert_eq!(x.completed_at, y.completed_at);
+                assert_eq!(x.inv_id, y.inv_id);
+            }
+        }
+    }
+
+    #[test]
+    fn week_parallel_matches_sequential() {
+        let mut base = ExperimentConfig::smoke(0, 14);
+        base.vus.horizon = SimTime::from_secs(60.0);
+        let seq = run_week_threads(&base, 2, None, 1).unwrap();
+        let par = run_week_threads(&base, 2, None, 4).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.day, b.day);
+            assert_eq!(a.minos.successful(), b.minos.successful());
+            assert_eq!(
+                a.minos.total_cost_usd().to_bits(),
+                b.minos.total_cost_usd().to_bits()
+            );
+            assert_eq!(a.baseline.successful(), b.baseline.successful());
         }
     }
 
@@ -760,6 +608,32 @@ mod tests {
     }
 
     #[test]
+    fn saturated_platform_retries_until_served() {
+        // A one-instance quota with a burst of simultaneous arrivals:
+        // every placement past the first hits Placement::Saturated and
+        // must untake + retry until the instance frees up. All requests
+        // still complete, serialized through the single instance.
+        let mut cfg = ExperimentConfig::smoke(0, 25);
+        cfg.platform.max_instances = 1;
+        let schedule = crate::trace::ReplaySchedule::from_times_ms(&[0.0; 12]);
+        cfg.replay = Some(std::sync::Arc::new(schedule));
+        let r = run_single(&cfg, &MinosConfig::baseline(), 0, false, None).unwrap();
+        assert_eq!(r.successful(), 12, "saturation must delay, not drop, requests");
+        // The single instance serialized the work: completions are spread
+        // out by at least one execution each (~2.9 s nominal; even on the
+        // fastest admissible instance an execution exceeds ~1 s).
+        let mut completions: Vec<f64> =
+            r.records.iter().map(|x| x.completed_at.as_ms()).collect();
+        completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in completions.windows(2) {
+            assert!(w[1] - w[0] > 800.0, "overlapping executions on 1 instance");
+        }
+        // Each request needed at most one cold start (no terminations).
+        assert_eq!(r.terminations, 0);
+        assert!(r.cold_starts <= 2, "quota of 1 cannot cold-start concurrently");
+    }
+
+    #[test]
     fn payload_scale_lengthens_execution() {
         let schedule = |scale: f64| {
             std::sync::Arc::new(crate::trace::ReplaySchedule {
@@ -828,13 +702,69 @@ mod tests {
     }
 
     #[test]
+    fn trace_parallel_matches_sequential() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 4,
+            hours: 0.04,
+            total_rate_rps: 3.0,
+            seed: 17,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let cfg = ExperimentConfig::smoke(0, 41);
+        let seq = run_trace_threads(&cfg, &registry, &trace, None, 1).unwrap();
+        let par = run_trace_threads(&cfg, &registry, &trace, None, 8).unwrap();
+        assert_eq!(seq.per_function.len(), par.per_function.len());
+        for (a, b) in seq.per_function.iter().zip(&par.per_function) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.pretest.threshold_ms.to_bits(), b.pretest.threshold_ms.to_bits());
+            assert_eq!(a.result.successful(), b.result.successful());
+            assert_eq!(
+                a.result.total_cost_usd().to_bits(),
+                b.result.total_cost_usd().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn trace_paired_reports_per_function_improvements() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 2,
+            hours: 0.06,
+            total_rate_rps: 3.0,
+            seed: 19,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let cfg = ExperimentConfig::smoke(1, 43);
+        let o = run_trace_paired(&cfg, &registry, &trace, 2).unwrap();
+        assert_eq!(o.per_function.len(), trace.function_ids().len());
+        for f in &o.per_function {
+            assert_eq!(f.minos.successful(), f.arrivals as u64);
+            assert_eq!(f.baseline.successful(), f.arrivals as u64);
+            assert!(f.baseline.bench_scores.is_empty(), "baseline must not benchmark");
+            assert!(f.analysis_improvement_pct().is_finite());
+            assert!(f.cost_saving_pct().is_finite());
+        }
+    }
+
+    #[test]
     fn trace_run_rejects_uncovered_function_ids() {
+        use crate::platform::RegionId;
         use crate::trace::{FunctionId as Fid, Trace, TraceRecord};
         let trace = Trace::from_records(vec![
-            TraceRecord { t: SimTime::ZERO, function: Fid(0), payload_scale: 1.0 },
+            TraceRecord {
+                t: SimTime::ZERO,
+                function: Fid(0),
+                region: RegionId(0),
+                payload_scale: 1.0,
+            },
             TraceRecord {
                 t: SimTime::from_ms(10.0),
                 function: Fid(3),
+                region: RegionId(0),
                 payload_scale: 1.0,
             },
         ]);

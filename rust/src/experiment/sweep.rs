@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::sim::SimTime;
 use crate::stats::descriptive::{mean, std_dev};
 use crate::util::csvio::Csv;
+use crate::util::parallel;
 
 use super::config::ExperimentConfig;
 use super::runner::{run_paired, PairedOutcome};
@@ -27,7 +28,8 @@ pub struct SweepPoint {
 }
 
 /// Run `seeds_per_point` paired days at each parameter value produced by
-/// `configure` and aggregate the headline deltas.
+/// `configure` and aggregate the headline deltas (sequential; see
+/// [`sweep_threads`] for the fan-out variant).
 pub fn sweep(
     xs: &[f64],
     seeds_per_point: u64,
@@ -36,42 +38,83 @@ pub fn sweep(
 ) -> Result<Vec<SweepPoint>> {
     let mut points = Vec::with_capacity(xs.len());
     for &x in xs {
-        let mut analysis = Vec::new();
-        let mut requests = Vec::new();
-        let mut cost = Vec::new();
-        let mut term = Vec::new();
-        for s in 0..seeds_per_point {
-            let mut cfg = ExperimentConfig::paper_day(1);
-            cfg.seed = 0x57EE + s * 7919;
-            cfg.vus.horizon = SimTime::from_secs(horizon_s);
-            configure(&mut cfg, x);
-            let o: PairedOutcome = run_paired(&cfg, None)?;
-            analysis.push(o.analysis_improvement_pct());
-            requests.push(o.successful_requests_improvement_pct());
-            cost.push(o.cost_saving_pct());
-            term.push(o.minos.termination_rate());
-        }
-        points.push(SweepPoint {
-            x,
-            analysis_pct_mean: mean(&analysis),
-            analysis_pct_sd: std_dev(&analysis),
-            requests_pct_mean: mean(&requests),
-            cost_pct_mean: mean(&cost),
-            termination_rate_mean: mean(&term),
-        });
+        let outcomes: Vec<PairedOutcome> = (0..seeds_per_point)
+            .map(|s| {
+                let mut cfg = sweep_cfg(s, horizon_s);
+                configure(&mut cfg, x);
+                run_paired(&cfg, None)
+            })
+            .collect::<Result<_>>()?;
+        points.push(aggregate_point(x, &outcomes));
     }
     Ok(points)
 }
 
+/// Like [`sweep`], but every `(point, seed)` pair — an independent paired
+/// run — fans out over a thread pool (`threads`: 0 = auto). Aggregation
+/// happens in index order, so results are bit-identical to [`sweep`].
+pub fn sweep_threads(
+    xs: &[f64],
+    seeds_per_point: u64,
+    horizon_s: f64,
+    threads: usize,
+    configure: impl Fn(&mut ExperimentConfig, f64) + Sync,
+) -> Result<Vec<SweepPoint>> {
+    let n = xs.len() * seeds_per_point as usize;
+    let outcomes: Vec<PairedOutcome> = parallel::try_map_indexed(n, threads, |i| {
+        let x = xs[i / seeds_per_point as usize];
+        let s = (i % seeds_per_point as usize) as u64;
+        let mut cfg = sweep_cfg(s, horizon_s);
+        configure(&mut cfg, x);
+        run_paired(&cfg, None)
+    })?;
+    Ok(xs
+        .iter()
+        .enumerate()
+        .map(|(pi, &x)| {
+            let lo = pi * seeds_per_point as usize;
+            let hi = lo + seeds_per_point as usize;
+            aggregate_point(x, &outcomes[lo..hi])
+        })
+        .collect())
+}
+
+/// The per-seed base config every sweep point starts from.
+fn sweep_cfg(seed_idx: u64, horizon_s: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_day(1);
+    cfg.seed = 0x57EE + seed_idx * 7919;
+    cfg.vus.horizon = SimTime::from_secs(horizon_s);
+    cfg
+}
+
+/// Aggregate one sweep point's paired outcomes into its summary row.
+fn aggregate_point(x: f64, outcomes: &[PairedOutcome]) -> SweepPoint {
+    let analysis: Vec<f64> = outcomes.iter().map(|o| o.analysis_improvement_pct()).collect();
+    let requests: Vec<f64> =
+        outcomes.iter().map(|o| o.successful_requests_improvement_pct()).collect();
+    let cost: Vec<f64> = outcomes.iter().map(|o| o.cost_saving_pct()).collect();
+    let term: Vec<f64> = outcomes.iter().map(|o| o.minos.termination_rate()).collect();
+    SweepPoint {
+        x,
+        analysis_pct_mean: mean(&analysis),
+        analysis_pct_sd: std_dev(&analysis),
+        requests_pct_mean: mean(&requests),
+        cost_pct_mean: mean(&cost),
+        termination_rate_mean: mean(&term),
+    }
+}
+
 /// The paper's core premise, quantified: Minos's gain as a function of
 /// platform variability (node-pool sigma). Every other knob at paper
-/// defaults.
+/// defaults. `threads` follows the crate convention (0 = auto,
+/// 1 = sequential); points are bit-identical at any value.
 pub fn variability_sensitivity(
     sigmas: &[f64],
     seeds_per_point: u64,
     horizon_s: f64,
+    threads: usize,
 ) -> Result<Vec<SweepPoint>> {
-    sweep(sigmas, seeds_per_point, horizon_s, |cfg, sigma| {
+    sweep_threads(sigmas, seeds_per_point, horizon_s, threads, |cfg, sigma| {
         cfg.platform.variability.node_sigma_by_day = vec![sigma];
     })
 }
@@ -118,13 +161,32 @@ mod tests {
     fn variability_sensitivity_is_increasing() {
         // The paper's premise at test scale: more platform variability,
         // more Minos gain (averaged over seeds to beat lottery noise).
-        let pts = variability_sensitivity(&[0.02, 0.20], 4, 150.0).unwrap();
+        let pts = variability_sensitivity(&[0.02, 0.20], 4, 150.0, 0).unwrap();
         assert!(
             pts[1].analysis_pct_mean > pts[0].analysis_pct_mean + 1.0,
             "gain at σ=0.20 ({:.2}%) should clearly exceed σ=0.02 ({:.2}%)",
             pts[1].analysis_pct_mean,
             pts[0].analysis_pct_mean
         );
+    }
+
+    #[test]
+    fn threaded_sweep_matches_sequential() {
+        let configure = |cfg: &mut ExperimentConfig, sigma: f64| {
+            cfg.platform.variability.node_sigma_by_day = vec![sigma];
+        };
+        let seq = sweep(&[0.05, 0.15], 2, 90.0, configure).unwrap();
+        let par = sweep_threads(&[0.05, 0.15], 2, 90.0, 4, configure).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(
+                a.analysis_pct_mean.to_bits(),
+                b.analysis_pct_mean.to_bits(),
+                "thread count changed a sweep point"
+            );
+            assert_eq!(a.cost_pct_mean.to_bits(), b.cost_pct_mean.to_bits());
+        }
     }
 
     #[test]

@@ -8,20 +8,26 @@
 //!   sweep      ablation: elysium percentile sweep (termination-rate trade-off)
 //!   online     run one day with the SIV online-threshold collector
 //!   openloop   one day with Poisson (async-queue) arrivals instead of VUs
-//!   replay     replay a multi-function trace (CSV file or seeded synthetic)
+//!   replay     replay a multi-function trace (CSV file or seeded synthetic);
+//!              `--regions N` = multi-region shared-node cluster replay,
+//!              `--paired` = per-function Minos-vs-baseline figures
 //!
 //! `--real` executes the weather-regression HLO artifact through PJRT for
 //! every completed invocation (verifying numerics against the Rust oracle);
 //! without it the runs are pure simulation (identical decision dynamics).
+//! `--threads T` fans independent runs over a worker pool (0 = all cores);
+//! results are bit-identical at any thread count.
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use minos::experiment::{config::ExperimentConfig, figures, report, runner};
+use minos::experiment::{cluster, config::ExperimentConfig, figures, report, runner};
+use minos::platform::ClusterConfig;
 use minos::runtime::{calibrate::Calibration, ArtifactStore, Runtime};
 use minos::trace::{io as trace_io, FunctionRegistry, SynthConfig};
 use minos::util::args::Args;
+use minos::util::parallel;
 
 fn main() {
     if let Err(e) = run() {
@@ -31,7 +37,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["real", "verbose", "synth"])
+    let args = Args::parse(std::env::args().skip(1), &["real", "verbose", "synth", "paired"])
         .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -57,15 +63,31 @@ minos — FaaS instance selection exploiting cloud performance variation
 USAGE: minos <command> [options]
 
 COMMANDS:
-  week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --real]
+  week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --threads T --real]
   fig7       cost-over-time series for one day      [--day N --seed N --step S]
   pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
   calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
-  sweep      elysium-percentile ablation            [--day N --seed N]
+  sweep      elysium-percentile ablation            [--day N --seed N --threads T]
   online     one day with the online threshold      [--day N --seed N --every N]
   openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R]
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
+             [--regions N --spill F --threads T --paired]
+
+REPLAY MODES:
+  default    each function replays on its own isolated platform
+  --regions N   multi-region shared-node cluster: the trace's region ids
+             route onto N demo regions (distinct variability/cold-start
+             profiles); functions within a region contend on one shared
+             node pool. With --synth, functions are spread over N home
+             regions and --spill F (default 0.1) of traffic roams.
+  --paired   per-function Minos-vs-baseline improvement figures
+
+THREADS:
+  --threads T   fan independent runs (paired conditions, week days,
+             per-function replays, regions, sweep points) over T worker
+             threads; 0 = auto (all cores), 1 = sequential. Results are
+             bit-identical at any thread count.
 ";
 
 fn load_runtime(args: &Args) -> Result<Option<Runtime>> {
@@ -87,10 +109,11 @@ fn f(args: &Args, key: &str, default: f64) -> Result<f64> {
 fn cmd_week(args: &Args) -> Result<()> {
     let days = u(args, "days", 7)? as u32;
     let seed = u(args, "seed", 0x31A5)?;
+    let threads = u(args, "threads", 0)? as usize;
     let rt = load_runtime(args)?;
     let mut base = ExperimentConfig::paper_day(0);
     base.seed = seed;
-    let outcomes = runner::run_week(&base, days, rt.as_ref())?;
+    let outcomes = runner::run_week_threads(&base, days, rt.as_ref(), threads)?;
     print!("{}", report::week_report(&outcomes));
     if let Some(rt) = &rt {
         println!("\nreal PJRT executions: {}", rt.executions.get());
@@ -157,15 +180,21 @@ fn cmd_calibrate() -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let day = u(args, "day", 1)? as u32;
     let seed = u(args, "seed", 0x31A5 + day as u64)?;
+    let threads = u(args, "threads", 0)? as usize;
+    let pcts = [0.1, 20.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0];
+    // Sweep points are independent paired runs: fan them out, print in
+    // order (identical output at any thread count).
+    let outcomes = parallel::try_map_indexed(pcts.len(), threads, |i| {
+        let mut cfg = ExperimentConfig::paper_day(day);
+        cfg.seed = seed;
+        cfg.elysium_percentile = pcts[i];
+        runner::run_paired(&cfg, None)
+    })?;
     println!(
         "{:>10} {:>12} {:>10} {:>12} {:>12} {:>10}",
         "percentile", "thresh ms", "term rate", "analysis d%", "requests d%", "cost d%"
     );
-    for pct in [0.1, 20.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0] {
-        let mut cfg = ExperimentConfig::paper_day(day);
-        cfg.seed = seed;
-        cfg.elysium_percentile = pct;
-        let o = runner::run_paired(&cfg, None)?;
+    for (pct, o) in pcts.iter().zip(&outcomes) {
         println!(
             "{:>10.0} {:>12.1} {:>10.2} {:>12.2} {:>12.2} {:>10.2}",
             pct,
@@ -210,6 +239,26 @@ fn cmd_openloop(args: &Args) -> Result<()> {
 fn cmd_replay(args: &Args) -> Result<()> {
     let day = u(args, "day", 0)? as u32;
     let seed = u(args, "seed", 0x31A5)?;
+    let threads = u(args, "threads", 0)? as usize;
+    let cluster_mode = args.get("regions").is_some();
+    let n_regions = u(args, "regions", 1)? as usize;
+    let paired = args.flag("paired");
+    if cluster_mode && n_regions == 0 {
+        bail!("--regions must be at least 1");
+    }
+    if cluster_mode && paired {
+        bail!("--paired and --regions are mutually exclusive (pick one replay mode)");
+    }
+    if (cluster_mode || paired) && args.flag("real") {
+        // Refuse rather than silently simulate: real PJRT execution is
+        // wired through the default (isolated per-function) replay only.
+        bail!("--real is not supported with --regions/--paired; drop the flag");
+    }
+    if args.get("spill").is_some() && !(cluster_mode && args.flag("synth")) {
+        // --spill only shapes synthetic multi-region traces; refuse rather
+        // than silently discard it.
+        bail!("--spill requires --synth together with --regions");
+    }
     let rt = load_runtime(args)?;
     let trace = if let Some(path) = args.get("trace") {
         trace_io::read_csv(Path::new(path)).map_err(anyhow::Error::msg)?
@@ -217,6 +266,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         let n_functions = u(args, "functions", 8)? as usize;
         let hours = f(args, "hours", 2.0)?;
         let rate = f(args, "rate", 2.0)?;
+        let spill = f(args, "spill", 0.1)?;
         if n_functions == 0 {
             bail!("--functions must be at least 1");
         }
@@ -226,10 +276,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
         if !(rate.is_finite() && rate >= 0.0) {
             bail!("--rate must be a non-negative number");
         }
+        if !(0.0..=1.0).contains(&spill) {
+            bail!("--spill must be a fraction in [0, 1]");
+        }
         SynthConfig {
             n_functions,
             hours,
             total_rate_rps: rate,
+            n_regions: if cluster_mode { n_regions } else { 1 },
+            region_spill: if cluster_mode { spill } else { 0.0 },
             seed,
             ..SynthConfig::default()
         }
@@ -261,15 +316,35 @@ fn cmd_replay(args: &Args) -> Result<()> {
     if n_functions > 65_536 {
         bail!("trace addresses {n_functions} functions; the demo registry caps at 65536");
     }
+    let registry = FunctionRegistry::demo(n_functions);
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+
+    if cluster_mode {
+        println!(
+            "cluster replay: {} invocations, {distinct} functions, {} regions \
+             (span {})",
+            trace.len(),
+            n_regions,
+            trace.span()
+        );
+        let cluster_cfg = ClusterConfig::demo(n_regions);
+        let outcome = cluster::run_cluster(&cfg, &registry, &trace, &cluster_cfg, threads)?;
+        print!("{}", report::cluster_report(&outcome));
+        return Ok(());
+    }
+
     println!(
         "replaying {} invocations across {distinct} functions (span {})",
         trace.len(),
         trace.span()
     );
-    let registry = FunctionRegistry::demo(n_functions);
-    let mut cfg = ExperimentConfig::paper_day(day);
-    cfg.seed = seed;
-    let outcome = runner::run_trace(&cfg, &registry, &trace, rt.as_ref())?;
+    if paired {
+        let outcome = runner::run_trace_paired(&cfg, &registry, &trace, threads)?;
+        print!("{}", report::trace_paired_report(&outcome));
+        return Ok(());
+    }
+    let outcome = runner::run_trace_threads(&cfg, &registry, &trace, rt.as_ref(), threads)?;
     print!("{}", report::trace_report(&outcome));
     if let Some(rt) = &rt {
         println!("real PJRT executions: {}", rt.executions.get());

@@ -1,0 +1,97 @@
+//! The cluster layer: N regions, each a full [`FaasPlatform`].
+//!
+//! A [`ClusterConfig`] is the static description the experiment layer
+//! consumes (`experiment::cluster::run_cluster`): a dense, ordered list of
+//! [`RegionConfig`]s. Regions are *independent* — separate node pools,
+//! separate lotteries, separate variability regimes — which is exactly
+//! what makes multi-region replay embarrassingly parallel: each region's
+//! sub-simulation can run on its own thread and the merged outcome is
+//! identical to the sequential order. Within a region, deployments share
+//! nodes (see [`FaasPlatform::place_deploy`]).
+
+use super::platform::FaasPlatform;
+use super::region::{RegionConfig, RegionId};
+
+/// Static description of a multi-region cluster.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterConfig {
+    regions: Vec<RegionConfig>,
+}
+
+impl ClusterConfig {
+    /// Build from explicit region configs; ids must be dense and in order
+    /// (id == index), mirroring `trace::FunctionRegistry`.
+    pub fn new(regions: Vec<RegionConfig>) -> ClusterConfig {
+        for (i, r) in regions.iter().enumerate() {
+            assert_eq!(
+                r.id.0 as usize, i,
+                "cluster region ids must be dense and ordered"
+            );
+        }
+        ClusterConfig { regions }
+    }
+
+    /// A deterministic `n`-region demo cluster cycling the region
+    /// archetypes (see [`RegionConfig::demo`]).
+    pub fn demo(n: usize) -> ClusterConfig {
+        ClusterConfig::new((0..n as u32).map(RegionConfig::demo).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn get(&self, id: RegionId) -> Option<&RegionConfig> {
+        self.regions.get(id.0 as usize)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &RegionConfig> {
+        self.regions.iter()
+    }
+
+    /// Build every region's platform for one experiment day (used by
+    /// tests and one-shot tools; the replay engine builds per region so
+    /// regions can run on separate threads).
+    pub fn build_platforms(&self, day: u32, seed: u64, salt: u64) -> Vec<FaasPlatform> {
+        self.regions.iter().map(|r| r.build_platform(day, seed, salt)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_cluster_shape() {
+        let c = ClusterConfig::demo(4);
+        assert_eq!(c.len(), 4);
+        assert!(!c.is_empty());
+        for (i, r) in c.iter().enumerate() {
+            assert_eq!(r.id, RegionId(i as u32));
+        }
+        assert!(c.get(RegionId(3)).is_some());
+        assert!(c.get(RegionId(4)).is_none());
+    }
+
+    #[test]
+    fn platforms_differ_across_regions() {
+        let c = ClusterConfig::demo(3);
+        let platforms = c.build_platforms(0, 7, 0);
+        assert_eq!(platforms.len(), 3);
+        let f0 = platforms[0].node_base_factors();
+        let f1 = platforms[1].node_base_factors();
+        assert_ne!(f0, f1, "regions must draw independent node pools");
+    }
+
+    #[test]
+    fn sparse_region_ids_rejected() {
+        let r = std::panic::catch_unwind(|| {
+            ClusterConfig::new(vec![RegionConfig::demo(1)])
+        });
+        assert!(r.is_err(), "non-dense region ids must be rejected");
+    }
+}

@@ -9,6 +9,26 @@ use super::node::NodeId;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct InstanceId(pub u64);
 
+/// Identifier of a *deployment* (one function's fleet) within a platform.
+///
+/// FaaS platforms isolate warm pools per function while co-locating the
+/// instances of many functions on the same worker nodes; `DeployId` is the
+/// key that keeps warm-pool bookkeeping per function on a shared node
+/// pool. Single-function experiments use [`DeployId::SOLO`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct DeployId(pub u32);
+
+impl DeployId {
+    /// The single deployment of a one-function platform.
+    pub const SOLO: DeployId = DeployId(0);
+}
+
+impl std::fmt::Display for DeployId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
 /// Lifecycle state of an instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InstanceState {
@@ -27,6 +47,9 @@ pub enum InstanceState {
 pub struct Instance {
     pub id: InstanceId,
     pub node: NodeId,
+    /// The deployment (function) this instance belongs to: warm re-use is
+    /// per deployment even though nodes are shared.
+    pub deploy: DeployId,
     pub state: InstanceState,
     /// Instance-level performance offset (× node factor), fixed at placement.
     pub offset: f64,
@@ -46,6 +69,7 @@ impl Instance {
     pub fn new(
         id: InstanceId,
         node: NodeId,
+        deploy: DeployId,
         offset: f64,
         max_lifetime_ms: f64,
         now: SimTime,
@@ -53,6 +77,7 @@ impl Instance {
         Instance {
             id,
             node,
+            deploy,
             state: InstanceState::Starting,
             offset,
             max_lifetime_ms,
@@ -88,16 +113,25 @@ mod tests {
 
     #[test]
     fn new_instance_is_starting() {
-        let i = Instance::new(InstanceId(1), NodeId(2), 1.01, 1e9, SimTime::from_ms(5.0));
+        let i = Instance::new(
+            InstanceId(1),
+            NodeId(2),
+            DeployId(3),
+            1.01,
+            1e9,
+            SimTime::from_ms(5.0),
+        );
         assert_eq!(i.state, InstanceState::Starting);
         assert!(i.is_live());
+        assert_eq!(i.deploy, DeployId(3));
         assert_eq!(i.invocations_served, 0);
         assert!(i.benchmark_score.is_none());
     }
 
     #[test]
     fn idle_ms_only_when_idle() {
-        let mut i = Instance::new(InstanceId(1), NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        let mut i =
+            Instance::new(InstanceId(1), NodeId(0), DeployId::SOLO, 1.0, 1e9, SimTime::ZERO);
         i.state = InstanceState::Busy;
         assert_eq!(i.idle_ms(SimTime::from_ms(100.0)), 0.0);
         i.state = InstanceState::Idle;
@@ -107,14 +141,16 @@ mod tests {
 
     #[test]
     fn lifetime_expiry() {
-        let i = Instance::new(InstanceId(1), NodeId(0), 1.0, 500.0, SimTime::ZERO);
+        let i =
+            Instance::new(InstanceId(1), NodeId(0), DeployId::SOLO, 1.0, 500.0, SimTime::ZERO);
         assert!(!i.lifetime_expired(SimTime::from_ms(499.0)));
         assert!(i.lifetime_expired(SimTime::from_ms(500.0)));
     }
 
     #[test]
     fn terminated_is_not_live() {
-        let mut i = Instance::new(InstanceId(1), NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        let mut i =
+            Instance::new(InstanceId(1), NodeId(0), DeployId::SOLO, 1.0, 1e9, SimTime::ZERO);
         i.state = InstanceState::Terminated;
         assert!(!i.is_live());
     }

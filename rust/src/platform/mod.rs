@@ -9,15 +9,28 @@
 //! per-invocation fee (paper Fig. 3). This module implements exactly that
 //! contract with a performance-variability model calibrated to published
 //! FaaS measurement studies (paper refs. [8], [16], [23]).
+//!
+//! Two structural layers extend the single-platform picture:
+//!
+//! - **deployments** ([`DeployId`]) — many functions co-located on one
+//!   platform's shared node pool with isolated per-function warm pools
+//!   ([`FaasPlatform::place_deploy`]);
+//! - **regions** ([`region`], [`cluster`]) — N independent platforms, each
+//!   with its own variability regime and cold-start model, composed into a
+//!   [`cluster::ClusterConfig`] the multi-region replay engine consumes.
 
 pub mod billing;
+pub mod cluster;
 pub mod coldstart;
 pub mod instance;
 pub mod node;
 pub mod platform;
+pub mod region;
 pub mod scheduler;
 pub mod variability;
 
-pub use instance::{Instance, InstanceId, InstanceState};
+pub use cluster::ClusterConfig;
+pub use instance::{DeployId, Instance, InstanceId, InstanceState};
 pub use node::{Node, NodeId};
 pub use platform::{FaasPlatform, Placement, PlatformConfig};
+pub use region::{RegionConfig, RegionId};

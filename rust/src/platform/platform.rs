@@ -10,7 +10,7 @@ use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
 use super::coldstart::ColdStartModel;
-use super::instance::{InstanceId, InstanceState};
+use super::instance::{DeployId, InstanceId, InstanceState};
 use super::node::{Node, NodeId};
 use super::scheduler::Scheduler;
 use super::variability::VariabilityConfig;
@@ -124,14 +124,23 @@ impl FaasPlatform {
         }
     }
 
-    /// Place an invocation: warm instance if available, else cold start.
+    /// Place an invocation of a single-function platform ([`DeployId::SOLO`]).
     pub fn place(&mut self, now: SimTime) -> Placement {
+        self.place_deploy(DeployId::SOLO, now)
+    }
+
+    /// Place an invocation of `deploy`: a warm instance of that deployment
+    /// if available, else a cold start on the *shared* node pool. The
+    /// instance quota and the node lottery are platform-wide, so
+    /// co-located deployments contend on the same machines (and the same
+    /// node speed factors); only the warm pool is per deployment.
+    pub fn place_deploy(&mut self, deploy: DeployId, now: SimTime) -> Placement {
         self.expired += self
             .scheduler
             .expire_idle(now, self.cfg.idle_timeout_ms)
             .len() as u64;
 
-        if let Some(id) = self.scheduler.take_warm(now, &mut self.recycled) {
+        if let Some(id) = self.scheduler.take_warm(deploy, now, &mut self.recycled) {
             self.warm_hits += 1;
             return Placement::Warm(id);
         }
@@ -144,7 +153,7 @@ impl FaasPlatform {
             self.cfg.instance_lifetime_median_ms.ln(),
             self.cfg.instance_lifetime_sigma,
         );
-        let id = self.scheduler.create_instance(node, offset, lifetime, now);
+        let id = self.scheduler.create_instance(node, deploy, offset, lifetime, now);
         self.nodes[node.0 as usize].resident_instances += 1;
         let delay = self.cfg.coldstart.sample_ms(&mut self.rng_place);
         self.cold_starts += 1;
@@ -312,6 +321,58 @@ mod tests {
         p.cold_start_ready(id);
         let f = p.perf_factor(id, SimTime::from_ms(1.0));
         assert!(f > 0.3 && f < 3.0, "factor {f}");
+    }
+
+    #[test]
+    fn deployments_share_nodes_but_not_warm_pools() {
+        // One node: every instance of every deployment is co-located and
+        // therefore subject to the *same* node speed factor.
+        let cfg = PlatformConfig { n_nodes: 1, ..Default::default() };
+        let mut p = FaasPlatform::new(cfg, 0, 17);
+        let a = match p.place_deploy(DeployId(0), SimTime::ZERO) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        let b = match p.place_deploy(DeployId(1), SimTime::ZERO) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        p.cold_start_ready(a);
+        p.cold_start_ready(b);
+        assert_eq!(p.scheduler.get(a).node, p.scheduler.get(b).node);
+        // At the same instant the two instances see the identical shared
+        // node factor — they differ only by their private offsets. (The
+        // second perf_factor call advances the shared OU drift by zero
+        // elapsed time, so both reads observe the same node state.)
+        let t = SimTime::from_ms(500.0);
+        let fa = p.perf_factor(a, t) / p.scheduler.get(a).offset;
+        let fb = p.perf_factor(b, t) / p.scheduler.get(b).offset;
+        assert!((fa - fb).abs() < 1e-12, "shared node factor diverged: {fa} vs {fb}");
+        // Warm pools stay isolated: releasing deployment 0's instance must
+        // not serve deployment 1.
+        p.release(a, t);
+        p.release(b, t);
+        match p.place_deploy(DeployId(1), SimTime::from_ms(600.0)) {
+            Placement::Warm(id) => assert_eq!(id, b, "foreign warm instance handed out"),
+            other => panic!("expected warm hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shared_quota_spans_deployments() {
+        let cfg = PlatformConfig { max_instances: 2, ..Default::default() };
+        let mut p = FaasPlatform::new(cfg, 0, 23);
+        assert!(matches!(
+            p.place_deploy(DeployId(0), SimTime::ZERO),
+            Placement::Cold { .. }
+        ));
+        assert!(matches!(
+            p.place_deploy(DeployId(1), SimTime::ZERO),
+            Placement::Cold { .. }
+        ));
+        // The third deployment finds the *platform* quota exhausted even
+        // though it has no instances of its own yet.
+        assert_eq!(p.place_deploy(DeployId(2), SimTime::ZERO), Placement::Saturated);
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Regions: independently-provisioned copies of the FaaS platform.
+//!
+//! "The Night Shift" (paper ref. [8], arXiv 2304.07177) measures that
+//! performance variability differs *per region* — each region has its own
+//! hardware mix, utilization rhythm, and cold-start behaviour. A
+//! [`RegionConfig`] therefore carries a complete [`PlatformConfig`] (its
+//! own [`super::variability::VariabilityConfig`] and
+//! [`super::coldstart::ColdStartModel`]); building it yields a
+//! [`FaasPlatform`] whose node lottery is seeded per region, so two
+//! regions of the same cluster never share a node pool — while functions
+//! *within* a region do (see [`FaasPlatform::place_deploy`]).
+
+use crate::util::prng::splitmix64;
+
+use super::platform::{FaasPlatform, PlatformConfig};
+
+/// Identifier of a region within a cluster (dense, 0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct RegionId(pub u32);
+
+impl std::fmt::Display for RegionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// One region: identity plus its full platform configuration.
+#[derive(Debug, Clone)]
+pub struct RegionConfig {
+    pub id: RegionId,
+    pub name: String,
+    pub platform: PlatformConfig,
+}
+
+/// Demo region archetype names (data-centre-flavoured, cycled).
+const DEMO_NAMES: [&str; 6] =
+    ["frankfurt", "iowa", "taipei", "saopaulo", "sydney", "belgium"];
+
+/// Per-archetype scale on the day-sigma vector: some regions are
+/// noticeably more variable than others (the ref. [8] observation that
+/// drives multi-region instance selection).
+const DEMO_SIGMA_SCALE: [f64; 6] = [1.0, 1.5, 0.55, 1.25, 0.8, 1.1];
+
+/// Per-archetype cold-start median scale (regional hardware/image cache).
+const DEMO_COLDSTART_SCALE: [f64; 6] = [1.0, 1.2, 0.85, 1.1, 0.95, 1.05];
+
+/// Per-archetype diurnal amplitude (long replays see night-time speedups
+/// of different strengths per region).
+const DEMO_DIURNAL_AMPLITUDE: [f64; 6] = [0.0, 0.05, 0.02, 0.08, 0.0, 0.04];
+
+impl RegionConfig {
+    /// Deterministic demo profile for region `i`: the six archetypes are
+    /// cycled with a mild per-copy drift so sibling regions are similar
+    /// but never identical.
+    pub fn demo(i: u32) -> RegionConfig {
+        let k = i as usize % DEMO_NAMES.len();
+        let copy_drift = 1.0 + 0.03 * ((i as usize / DEMO_NAMES.len()) % 5) as f64;
+        let mut platform = PlatformConfig::default();
+        let scale = DEMO_SIGMA_SCALE[k] * copy_drift;
+        platform.variability.node_sigma_by_day = platform
+            .variability
+            .node_sigma_by_day
+            .iter()
+            .map(|s| (s * scale).min(0.35))
+            .collect();
+        platform.variability.diurnal_amplitude = DEMO_DIURNAL_AMPLITUDE[k];
+        platform.coldstart.median_ms *= DEMO_COLDSTART_SCALE[k] * copy_drift;
+        RegionConfig {
+            id: RegionId(i),
+            name: format!("{}-{i}", DEMO_NAMES[k]),
+            platform,
+        }
+    }
+
+    /// Derive this region's platform seed from an experiment seed: a
+    /// SplitMix64 mix of the seed with the region id, so regions get
+    /// decorrelated node pools from one master seed.
+    pub fn region_seed(&self, seed: u64) -> u64 {
+        let mut sm = seed ^ (self.id.0 as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F);
+        splitmix64(&mut sm)
+    }
+
+    /// Build this region's platform for one experiment day.
+    pub fn build_platform(&self, day: u32, seed: u64, salt: u64) -> FaasPlatform {
+        FaasPlatform::new_salted(self.platform.clone(), day, self.region_seed(seed), salt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_regions_are_deterministic_and_distinct() {
+        let a = RegionConfig::demo(1);
+        let b = RegionConfig::demo(1);
+        assert_eq!(a.name, b.name);
+        assert_eq!(
+            a.platform.variability.node_sigma_by_day,
+            b.platform.variability.node_sigma_by_day
+        );
+        // Different archetypes differ in variability.
+        let c = RegionConfig::demo(2);
+        assert_ne!(
+            a.platform.variability.node_sigma_by_day,
+            c.platform.variability.node_sigma_by_day
+        );
+        // Same archetype, later copy: still not identical.
+        let w7 = RegionConfig::demo(7);
+        assert_ne!(
+            a.platform.variability.node_sigma_by_day,
+            w7.platform.variability.node_sigma_by_day
+        );
+        assert_ne!(a.name, w7.name);
+    }
+
+    #[test]
+    fn sigmas_stay_physical() {
+        for i in 0..40 {
+            let r = RegionConfig::demo(i);
+            for s in &r.platform.variability.node_sigma_by_day {
+                assert!(*s > 0.0 && *s <= 0.35, "region {i} sigma {s}");
+            }
+            assert!(r.platform.coldstart.median_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn region_seeds_decorrelate_node_pools() {
+        let r0 = RegionConfig::demo(0);
+        let r1 = RegionConfig::demo(6); // same archetype as 0 (cycled)
+        assert_ne!(r0.region_seed(42), r1.region_seed(42));
+        let p0 = r0.build_platform(0, 42, 0);
+        let p1 = r1.build_platform(0, 42, 0);
+        assert_ne!(p0.node_base_factors(), p1.node_base_factors());
+        // Same region, same seed: identical platform.
+        let p0b = r0.build_platform(0, 42, 0);
+        assert_eq!(p0.node_base_factors(), p0b.node_base_factors());
+    }
+
+    #[test]
+    fn region_id_displays() {
+        assert_eq!(RegionId(3).to_string(), "r3");
+    }
+}

@@ -1,17 +1,19 @@
 //! Placement: which execution environment serves an invocation (paper §II).
 //!
-//! GCF-style policy: route to an idle *warm* instance when one exists
-//! (most-recently-used first, which maximizes re-use of the hottest
-//! instance and lets the others expire); otherwise cold-start a new
-//! instance on a worker node the user cannot choose (uniform over the
-//! pool — the lottery Minos plays).
+//! GCF-style policy: route to an idle *warm* instance of the same
+//! deployment when one exists (most-recently-used first, which maximizes
+//! re-use of the hottest instance and lets the others expire); otherwise
+//! cold-start a new instance on a worker node the user cannot choose
+//! (uniform over the pool — the lottery Minos plays). Warm pools are keyed
+//! by [`DeployId`]: a platform hosts many functions whose instances share
+//! the node pool but are never handed to another function.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
-use super::instance::{Instance, InstanceId, InstanceState};
+use super::instance::{DeployId, Instance, InstanceId, InstanceState};
 use super::node::NodeId;
 
 /// Warm-pool and instance-table bookkeeping.
@@ -19,9 +21,10 @@ use super::node::NodeId;
 pub struct Scheduler {
     /// All instances ever created (terminated ones stay for metrics).
     pub instances: HashMap<InstanceId, Instance>,
-    /// Idle instances ordered oldest→newest by when they became idle
-    /// (placement pops from the back = MRU).
-    warm: Vec<InstanceId>,
+    /// Idle instances per deployment, ordered oldest→newest by when they
+    /// became idle (placement pops from the back = MRU). A `BTreeMap`
+    /// keeps cross-deployment iteration (idle expiry) deterministic.
+    warm: BTreeMap<DeployId, Vec<InstanceId>>,
     next_id: u64,
     /// Live (non-terminated) instance count, maintained incrementally —
     /// `place()` consults it on every call, so it must be O(1) (§Perf:
@@ -35,9 +38,14 @@ impl Scheduler {
         Self::default()
     }
 
-    /// Number of idle warm instances.
+    /// Number of idle warm instances across all deployments.
     pub fn warm_count(&self) -> usize {
-        self.warm.len()
+        self.warm.values().map(Vec::len).sum()
+    }
+
+    /// Number of idle warm instances of one deployment.
+    pub fn warm_count_for(&self, deploy: DeployId) -> usize {
+        self.warm.get(&deploy).map_or(0, Vec::len)
     }
 
     /// Number of live (non-terminated) instances. O(1).
@@ -50,13 +58,20 @@ impl Scheduler {
         self.live
     }
 
-    /// Take the most-recently-used warm instance, marking it Busy.
-    /// Instances whose platform lifetime has elapsed are recycled
+    /// Take the most-recently-used warm instance of `deploy`, marking it
+    /// Busy. Instances whose platform lifetime has elapsed are recycled
     /// (terminated) instead of being handed out; `recycled` counts them.
-    pub fn take_warm(&mut self, now: SimTime, recycled: &mut u64) -> Option<InstanceId> {
-        while let Some(id) = self.warm.pop() {
+    pub fn take_warm(
+        &mut self,
+        deploy: DeployId,
+        now: SimTime,
+        recycled: &mut u64,
+    ) -> Option<InstanceId> {
+        let pool = self.warm.get_mut(&deploy)?;
+        while let Some(id) = pool.pop() {
             let inst = self.instances.get_mut(&id).expect("warm id in table");
             debug_assert_eq!(inst.state, InstanceState::Idle);
+            debug_assert_eq!(inst.deploy, deploy, "warm pool holds foreign instance");
             if inst.lifetime_expired(now) {
                 inst.state = InstanceState::Terminated;
                 self.live -= 1;
@@ -70,10 +85,11 @@ impl Scheduler {
         None
     }
 
-    /// Create a new (cold-starting) instance on `node`.
+    /// Create a new (cold-starting) instance of `deploy` on `node`.
     pub fn create_instance(
         &mut self,
         node: NodeId,
+        deploy: DeployId,
         offset: f64,
         max_lifetime_ms: f64,
         now: SimTime,
@@ -82,7 +98,7 @@ impl Scheduler {
         self.live += 1;
         let id = InstanceId(self.next_id);
         self.instances
-            .insert(id, Instance::new(id, node, offset, max_lifetime_ms, now));
+            .insert(id, Instance::new(id, node, deploy, offset, max_lifetime_ms, now));
         id
     }
 
@@ -98,15 +114,17 @@ impl Scheduler {
         inst.state = InstanceState::Busy;
     }
 
-    /// Invocation finished: instance returns to the warm pool.
+    /// Invocation finished: instance returns to its deployment's warm pool.
     pub fn release(&mut self, id: InstanceId, now: SimTime) {
         let inst = self.instances.get_mut(&id).expect("instance exists");
         debug_assert_eq!(inst.state, InstanceState::Busy);
         inst.state = InstanceState::Idle;
         inst.last_used = now;
         inst.invocations_served += 1;
-        debug_assert!(!self.warm.contains(&id), "double release of {id:?}");
-        self.warm.push(id);
+        let deploy = inst.deploy;
+        let pool = self.warm.entry(deploy).or_default();
+        debug_assert!(!pool.contains(&id), "double release of {id:?}");
+        pool.push(id);
     }
 
     /// Instance gone (Minos crash or platform reclaim while busy/starting).
@@ -116,25 +134,31 @@ impl Scheduler {
             self.live -= 1;
         }
         inst.state = InstanceState::Terminated;
-        self.warm.retain(|&w| w != id);
+        let deploy = inst.deploy;
+        if let Some(pool) = self.warm.get_mut(&deploy) {
+            pool.retain(|&w| w != id);
+        }
     }
 
-    /// Expire warm instances idle longer than `timeout_ms`. Returns the
-    /// expired ids (caller records metrics).
+    /// Expire warm instances idle longer than `timeout_ms`, across every
+    /// deployment (in deployment-id order, so the returned list is
+    /// deterministic). Returns the expired ids (caller records metrics).
     pub fn expire_idle(&mut self, now: SimTime, timeout_ms: f64) -> Vec<InstanceId> {
         let mut expired = Vec::new();
-        let live = &mut self.live;
-        self.warm.retain(|&id| {
-            let inst = self.instances.get_mut(&id).expect("warm id in table");
-            if now.ms_since(inst.last_used) >= timeout_ms {
-                inst.state = InstanceState::Terminated;
-                *live -= 1;
-                expired.push(id);
-                false
-            } else {
-                true
-            }
-        });
+        let Scheduler { instances, warm, live, .. } = self;
+        for pool in warm.values_mut() {
+            pool.retain(|&id| {
+                let inst = instances.get_mut(&id).expect("warm id in table");
+                if now.ms_since(inst.last_used) >= timeout_ms {
+                    inst.state = InstanceState::Terminated;
+                    *live -= 1;
+                    expired.push(id);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
         expired
     }
 
@@ -151,11 +175,13 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    const SOLO: DeployId = DeployId::SOLO;
+
     fn sched_with_idle(n: usize) -> (Scheduler, Vec<InstanceId>) {
         let mut s = Scheduler::new();
         let mut ids = Vec::new();
         for i in 0..n {
-            let id = s.create_instance(NodeId(i as u32), 1.0, 1e9, SimTime::ZERO);
+            let id = s.create_instance(NodeId(i as u32), SOLO, 1.0, 1e9, SimTime::ZERO);
             s.mark_running(id);
             s.release(id, SimTime::from_ms(i as f64));
             ids.push(id);
@@ -168,8 +194,8 @@ mod tests {
         let (mut s, ids) = sched_with_idle(3);
         // Last released (ids[2]) must be taken first.
         let mut rec = 0;
-        assert_eq!(s.take_warm(SimTime::from_ms(10.0), &mut rec), Some(ids[2]));
-        assert_eq!(s.take_warm(SimTime::from_ms(10.0), &mut rec), Some(ids[1]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(10.0), &mut rec), Some(ids[2]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(10.0), &mut rec), Some(ids[1]));
         assert_eq!(s.warm_count(), 1);
     }
 
@@ -177,7 +203,26 @@ mod tests {
     fn take_warm_empty_is_none() {
         let mut s = Scheduler::new();
         let mut rec = 0;
-        assert_eq!(s.take_warm(SimTime::ZERO, &mut rec), None);
+        assert_eq!(s.take_warm(SOLO, SimTime::ZERO, &mut rec), None);
+    }
+
+    #[test]
+    fn warm_pools_are_per_deployment() {
+        let mut s = Scheduler::new();
+        let a = s.create_instance(NodeId(0), DeployId(0), 1.0, 1e9, SimTime::ZERO);
+        let b = s.create_instance(NodeId(0), DeployId(1), 1.0, 1e9, SimTime::ZERO);
+        s.mark_running(a);
+        s.mark_running(b);
+        s.release(a, SimTime::from_ms(1.0));
+        s.release(b, SimTime::from_ms(2.0));
+        assert_eq!(s.warm_count(), 2);
+        assert_eq!(s.warm_count_for(DeployId(0)), 1);
+        assert_eq!(s.warm_count_for(DeployId(1)), 1);
+        let mut rec = 0;
+        // Deployment 1 never receives deployment 0's instance.
+        assert_eq!(s.take_warm(DeployId(1), SimTime::from_ms(3.0), &mut rec), Some(b));
+        assert_eq!(s.take_warm(DeployId(1), SimTime::from_ms(3.0), &mut rec), None);
+        assert_eq!(s.take_warm(DeployId(0), SimTime::from_ms(3.0), &mut rec), Some(a));
     }
 
     #[test]
@@ -186,7 +231,7 @@ mod tests {
         s.terminate(ids[1]);
         assert_eq!(s.warm_count(), 1);
         let mut rec = 0;
-        assert_eq!(s.take_warm(SimTime::from_ms(5.0), &mut rec), Some(ids[0]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(5.0), &mut rec), Some(ids[0]));
         assert!(!s.get(ids[1]).is_live());
     }
 
@@ -202,13 +247,30 @@ mod tests {
     }
 
     #[test]
+    fn expire_idle_sweeps_every_deployment() {
+        let mut s = Scheduler::new();
+        let mut ids = Vec::new();
+        for d in 0..3u32 {
+            let id = s.create_instance(NodeId(d), DeployId(d), 1.0, 1e9, SimTime::ZERO);
+            s.mark_running(id);
+            s.release(id, SimTime::from_ms(d as f64));
+            ids.push(id);
+        }
+        let expired = s.expire_idle(SimTime::from_ms(100.0), 50.0);
+        // All three pools swept, in deployment-id order.
+        assert_eq!(expired, ids);
+        assert_eq!(s.warm_count(), 0);
+        assert_eq!(s.live_count(), 0);
+    }
+
+    #[test]
     fn release_increments_served() {
         let mut s = Scheduler::new();
-        let id = s.create_instance(NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        let id = s.create_instance(NodeId(0), SOLO, 1.0, 1e9, SimTime::ZERO);
         s.mark_running(id);
         s.release(id, SimTime::from_ms(1.0));
         let mut rec = 0;
-        let got = s.take_warm(SimTime::from_ms(2.0), &mut rec).unwrap();
+        let got = s.take_warm(SOLO, SimTime::from_ms(2.0), &mut rec).unwrap();
         s.release(got, SimTime::from_ms(3.0));
         assert_eq!(s.get(id).invocations_served, 2);
     }
@@ -216,12 +278,12 @@ mod tests {
     #[test]
     fn take_warm_recycles_expired_lifetimes() {
         let mut s = Scheduler::new();
-        let id = s.create_instance(NodeId(0), 1.0, 100.0, SimTime::ZERO);
+        let id = s.create_instance(NodeId(0), SOLO, 1.0, 100.0, SimTime::ZERO);
         s.mark_running(id);
         s.release(id, SimTime::from_ms(1.0));
         let mut rec = 0;
         // Lifetime (100 ms) elapsed: the instance is recycled, not reused.
-        assert_eq!(s.take_warm(SimTime::from_ms(200.0), &mut rec), None);
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(200.0), &mut rec), None);
         assert_eq!(rec, 1);
         assert!(!s.get(id).is_live());
     }
@@ -231,12 +293,12 @@ mod tests {
         let mut s = Scheduler::new();
         // Oldest instance has a long lifetime; the two released after it
         // (popped first under MRU) have already-elapsed lifetimes.
-        let keeper = s.create_instance(NodeId(0), 1.0, 1e9, SimTime::ZERO);
+        let keeper = s.create_instance(NodeId(0), SOLO, 1.0, 1e9, SimTime::ZERO);
         s.mark_running(keeper);
         s.release(keeper, SimTime::from_ms(1.0));
         let mut doomed = Vec::new();
         for i in 0..2 {
-            let id = s.create_instance(NodeId(1 + i), 1.0, 50.0, SimTime::ZERO);
+            let id = s.create_instance(NodeId(1 + i), SOLO, 1.0, 50.0, SimTime::ZERO);
             s.mark_running(id);
             s.release(id, SimTime::from_ms(2.0 + i as f64));
             doomed.push(id);
@@ -244,7 +306,7 @@ mod tests {
         let mut rec = 0;
         // Both expired MRU entries are recycled in one call; the valid
         // oldest instance comes out.
-        assert_eq!(s.take_warm(SimTime::from_ms(500.0), &mut rec), Some(keeper));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(500.0), &mut rec), Some(keeper));
         assert_eq!(rec, 2);
         assert!(doomed.iter().all(|&id| !s.get(id).is_live()));
         assert_eq!(s.warm_count(), 0);
@@ -256,7 +318,7 @@ mod tests {
         let mut s = Scheduler::new();
         let mut ids = Vec::new();
         for i in 0..6 {
-            let id = s.create_instance(NodeId(i as u32), 1.0, 1e9, SimTime::ZERO);
+            let id = s.create_instance(NodeId(i as u32), SOLO, 1.0, 1e9, SimTime::ZERO);
             s.mark_running(id);
             ids.push(id);
         }
@@ -282,8 +344,8 @@ mod tests {
     #[test]
     fn terminate_of_dead_instance_does_not_double_count() {
         let mut s = Scheduler::new();
-        let a = s.create_instance(NodeId(0), 1.0, 1e9, SimTime::ZERO);
-        let b = s.create_instance(NodeId(1), 1.0, 1e9, SimTime::ZERO);
+        let a = s.create_instance(NodeId(0), SOLO, 1.0, 1e9, SimTime::ZERO);
+        let b = s.create_instance(NodeId(1), SOLO, 1.0, 1e9, SimTime::ZERO);
         s.mark_running(a);
         s.mark_running(b);
         s.terminate(a);
@@ -299,12 +361,12 @@ mod tests {
         // preference stays b (refreshed), then a.
         let (mut s, ids) = sched_with_idle(2);
         let mut rec = 0;
-        let got = s.take_warm(SimTime::from_ms(5.0), &mut rec).unwrap();
+        let got = s.take_warm(SOLO, SimTime::from_ms(5.0), &mut rec).unwrap();
         assert_eq!(got, ids[1]);
         s.release(got, SimTime::from_ms(6.0));
-        assert_eq!(s.take_warm(SimTime::from_ms(7.0), &mut rec), Some(ids[1]));
-        assert_eq!(s.take_warm(SimTime::from_ms(7.0), &mut rec), Some(ids[0]));
-        assert_eq!(s.take_warm(SimTime::from_ms(7.0), &mut rec), None);
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(7.0), &mut rec), Some(ids[1]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(7.0), &mut rec), Some(ids[0]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(7.0), &mut rec), None);
     }
 
     #[test]

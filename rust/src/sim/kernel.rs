@@ -1,0 +1,219 @@
+//! The reusable discrete-event simulation kernel.
+//!
+//! The kernel owns the *mechanics* of a simulation — draining the
+//! [`EventQueue`] in (time, FIFO) order, advancing the clock, enforcing
+//! stop conditions — while all *semantics* live in a [`World`]: a state
+//! machine that reacts to one popped event at a time and may schedule
+//! further events. This is the split that lets one drive loop serve many
+//! scenarios (the paper's single-deployment experiment, multi-function
+//! shared-node regions, future what-ifs) instead of each scenario forking
+//! its own copy of the loop.
+//!
+//! Determinism is inherited from the queue: identical initial events and
+//! an identical `World` produce an identical event sequence, so runs are
+//! bit-reproducible — which is what makes it safe to farm independent
+//! simulations out to threads (`util::parallel`) and still merge results
+//! in a canonical order.
+
+use anyhow::Result;
+
+use super::clock::SimTime;
+use super::event::EventQueue;
+
+/// Simulation semantics: state + one handler invoked per popped event.
+///
+/// `handle` receives the event queue so it can schedule follow-up events;
+/// it must never pop. Errors abort the simulation and propagate out of
+/// [`Simulation::run`].
+pub trait World {
+    /// The domain event enum this world reacts to.
+    type Event;
+
+    /// React to `event` at virtual time `now`.
+    fn handle(
+        &mut self,
+        now: SimTime,
+        event: Self::Event,
+        events: &mut EventQueue<Self::Event>,
+    ) -> Result<()>;
+}
+
+/// Why a [`Simulation`] run returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The event queue drained completely (the normal end of a run).
+    Drained,
+    /// The next event lies beyond the configured horizon.
+    Horizon,
+    /// The configured event budget was exhausted.
+    EventLimit,
+}
+
+/// Optional stop conditions for a run. The default (`drained`) runs until
+/// the queue is empty — the mode every experiment uses, since workload
+/// drivers stop injecting events past their own horizon.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StopCondition {
+    /// Stop before handling any event scheduled strictly after this time.
+    pub horizon: Option<SimTime>,
+    /// Stop after handling this many events.
+    pub max_events: Option<u64>,
+}
+
+impl StopCondition {
+    /// Run until the queue drains (no extra conditions).
+    pub fn drained() -> StopCondition {
+        StopCondition::default()
+    }
+
+    /// Stop before the first event strictly after `horizon`.
+    pub fn at_horizon(horizon: SimTime) -> StopCondition {
+        StopCondition { horizon: Some(horizon), max_events: None }
+    }
+
+    /// Stop after handling `n` events.
+    pub fn after_events(n: u64) -> StopCondition {
+        StopCondition { horizon: None, max_events: Some(n) }
+    }
+}
+
+/// A world coupled to its event queue, driven by the kernel loop.
+pub struct Simulation<W: World> {
+    pub world: W,
+    pub events: EventQueue<W::Event>,
+}
+
+impl<W: World> Simulation<W> {
+    pub fn new(world: W) -> Simulation<W> {
+        Simulation { world, events: EventQueue::new() }
+    }
+
+    /// Schedule an event at absolute virtual time `at`.
+    pub fn schedule(&mut self, at: SimTime, event: W::Event) {
+        self.events.schedule(at, event);
+    }
+
+    /// Current virtual time (time of the last handled event).
+    pub fn now(&self) -> SimTime {
+        self.events.now()
+    }
+
+    /// Number of events handled so far.
+    pub fn events_handled(&self) -> u64 {
+        self.events.counters().1
+    }
+
+    /// Drive the loop until the queue drains.
+    pub fn run(&mut self) -> Result<StopReason> {
+        self.run_until(StopCondition::drained())
+    }
+
+    /// Drive the loop until `stop` triggers or the queue drains.
+    pub fn run_until(&mut self, stop: StopCondition) -> Result<StopReason> {
+        let mut handled: u64 = 0;
+        loop {
+            if let Some(limit) = stop.max_events {
+                if handled >= limit {
+                    return Ok(StopReason::EventLimit);
+                }
+            }
+            let Some(next_at) = self.events.peek_time() else {
+                return Ok(StopReason::Drained);
+            };
+            if let Some(h) = stop.horizon {
+                if next_at > h {
+                    return Ok(StopReason::Horizon);
+                }
+            }
+            let (now, event) = self.events.pop().expect("peeked event exists");
+            self.world.handle(now, event, &mut self.events)?;
+            handled += 1;
+        }
+    }
+
+    /// Consume the simulation, returning the final world state.
+    pub fn into_world(self) -> W {
+        self.world
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy world: every `Tick(n)` with `n > 0` schedules `Tick(n - 1)`
+    /// 10 ms later and logs its timestamp.
+    struct Countdown {
+        seen: Vec<(SimTime, u32)>,
+        fail_at: Option<u32>,
+    }
+
+    struct Tick(u32);
+
+    impl World for Countdown {
+        type Event = Tick;
+
+        fn handle(
+            &mut self,
+            now: SimTime,
+            Tick(n): Tick,
+            events: &mut EventQueue<Tick>,
+        ) -> Result<()> {
+            if self.fail_at == Some(n) {
+                anyhow::bail!("injected failure at {n}");
+            }
+            self.seen.push((now, n));
+            if n > 0 {
+                events.schedule_in_ms(10.0, Tick(n - 1));
+            }
+            Ok(())
+        }
+    }
+
+    fn countdown(fail_at: Option<u32>) -> Simulation<Countdown> {
+        let mut sim = Simulation::new(Countdown { seen: Vec::new(), fail_at });
+        sim.schedule(SimTime::ZERO, Tick(5));
+        sim
+    }
+
+    #[test]
+    fn drains_and_advances_clock() {
+        let mut sim = countdown(None);
+        assert_eq!(sim.run().unwrap(), StopReason::Drained);
+        assert_eq!(sim.events_handled(), 6);
+        assert_eq!(sim.now(), SimTime::from_ms(50.0));
+        let world = sim.into_world();
+        let ns: Vec<u32> = world.seen.iter().map(|&(_, n)| n).collect();
+        assert_eq!(ns, vec![5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn horizon_stops_before_late_events() {
+        let mut sim = countdown(None);
+        let reason = sim.run_until(StopCondition::at_horizon(SimTime::from_ms(25.0)));
+        assert_eq!(reason.unwrap(), StopReason::Horizon);
+        // Ticks at 0, 10, 20 ms ran; the 30 ms one is still queued.
+        assert_eq!(sim.world.seen.len(), 3);
+        assert_eq!(sim.events.len(), 1);
+    }
+
+    #[test]
+    fn event_limit_stops_early() {
+        let mut sim = countdown(None);
+        let reason = sim.run_until(StopCondition::after_events(2));
+        assert_eq!(reason.unwrap(), StopReason::EventLimit);
+        assert_eq!(sim.world.seen.len(), 2);
+        // Resuming finishes the run.
+        assert_eq!(sim.run().unwrap(), StopReason::Drained);
+        assert_eq!(sim.world.seen.len(), 6);
+    }
+
+    #[test]
+    fn world_errors_propagate() {
+        let mut sim = countdown(Some(3));
+        let err = sim.run().unwrap_err();
+        assert!(format!("{err}").contains("injected failure"));
+        // The failing event was consumed; earlier state is intact.
+        assert_eq!(sim.world.seen.len(), 2);
+    }
+}

@@ -1,15 +1,26 @@
 //! Discrete-event simulation substrate.
 //!
 //! The FaaS platform, the Minos instance lifecycle, and the virtual-user
-//! workload all run on a single deterministic virtual clock. The engine is
-//! deliberately minimal: a monotone event queue ([`event::EventQueue`]) that
-//! the experiment runner drains, matching on a domain event enum. This keeps
-//! all domain logic in one place (`experiment::runner`) and the substrate
-//! free of borrow gymnastics.
+//! workload all run on a single deterministic virtual clock. The substrate
+//! has two layers:
+//!
+//! - [`event::EventQueue`] — a monotone (time, FIFO) queue of domain
+//!   events; and
+//! - [`kernel::Simulation`] — the reusable drive loop: it drains the queue
+//!   and dispatches each event to a [`kernel::World`] implementation,
+//!   enforcing optional stop conditions.
+//!
+//! Domain semantics live entirely in `World` implementations under
+//! `experiment/` (`experiment::world::MinosWorld` for the paper's
+//! single-deployment runs, `experiment::cluster::RegionWorld` for
+//! multi-function shared-node regions); the kernel stays free of borrow
+//! gymnastics and scenario-specific logic.
 
 pub mod clock;
 pub mod event;
+pub mod kernel;
 pub mod trace;
 
 pub use clock::SimTime;
 pub use event::EventQueue;
+pub use kernel::{Simulation, StopCondition, StopReason, World};

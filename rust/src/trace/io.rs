@@ -1,19 +1,21 @@
 //! Trace CSV I/O on top of `util::csvio`.
 //!
-//! Canonical columns: `t_ms,function_id,payload_scale`. The reader is
-//! deliberately liberal, dslab/Azure-trace style: alternate column names
-//! are accepted, `payload_scale` is optional (default 1.0), and the
-//! function column may hold either numeric ids or opaque names (Azure
-//! publishes hashed app names) — names are interned to dense ids in
-//! first-seen order. Rows may be unsorted; parsing stable-sorts by time,
-//! so same-timestamp rows replay in file order.
+//! Canonical columns: `t_ms,function_id,region,payload_scale`. The reader
+//! is deliberately liberal, dslab/Azure-trace style: alternate column
+//! names are accepted (resolved via the shared `Csv::col_any` alias
+//! lookup), `payload_scale` and `region` are optional (defaults 1.0 and
+//! region 0), and the function/region columns may hold either numeric ids
+//! or opaque names (Azure publishes hashed app names) — names are interned
+//! to dense ids in first-seen order via the shared
+//! `util::csvio::LabelInterner`. Rows may be unsorted; parsing
+//! stable-sorts by time, so same-timestamp rows replay in file order.
 
-use std::collections::HashMap;
 use std::fs;
 use std::path::Path;
 
+use crate::platform::RegionId;
 use crate::sim::SimTime;
-use crate::util::csvio::Csv;
+use crate::util::csvio::{Csv, LabelInterner};
 
 use super::model::{FunctionId, Trace, TraceRecord};
 
@@ -21,16 +23,19 @@ use super::model::{FunctionId, Trace, TraceRecord};
 pub const TIME_COLUMNS: &[&str] = &["t_ms", "timestamp_ms", "time_ms", "invocation_time_ms"];
 /// Accepted names for the function column (numeric id or opaque name).
 pub const FUNCTION_COLUMNS: &[&str] = &["function_id", "function", "func", "app"];
+/// Accepted names for the optional region column (numeric id or name).
+pub const REGION_COLUMNS: &[&str] = &["region", "region_id", "datacenter"];
 /// Accepted names for the optional payload-scale column.
 pub const PAYLOAD_COLUMNS: &[&str] = &["payload_scale", "scale", "payload"];
 
 /// Render a trace as a canonical CSV table.
 pub fn to_csv(trace: &Trace) -> Csv {
-    let mut csv = Csv::new(&["t_ms", "function_id", "payload_scale"]);
+    let mut csv = Csv::new(&["t_ms", "function_id", "region", "payload_scale"]);
     for r in trace.records() {
         csv.push(vec![
             format!("{:.3}", r.t.as_ms()),
             r.function.0.to_string(),
+            r.region.0.to_string(),
             format!("{:.6}", r.payload_scale),
         ]);
     }
@@ -49,34 +54,44 @@ pub fn read_csv(path: &Path) -> Result<Trace, String> {
     parse_csv(&text)
 }
 
+/// An id-like column: either every row parses as `u32` (ids used
+/// verbatim) or values are opaque names interned densely in first-seen
+/// order. Azure traces have ~10k distinct apps, so interning is O(1)/row.
+struct IdColumn {
+    col: usize,
+    all_numeric: bool,
+    interner: LabelInterner,
+}
+
+impl IdColumn {
+    fn scan(csv: &Csv, col: usize) -> IdColumn {
+        let all_numeric = csv.rows.iter().all(|r| r[col].parse::<u32>().is_ok());
+        IdColumn { col, all_numeric, interner: LabelInterner::new() }
+    }
+
+    fn id(&mut self, row: &[String]) -> u32 {
+        if self.all_numeric {
+            row[self.col].parse::<u32>().expect("checked numeric")
+        } else {
+            self.interner.intern(&row[self.col])
+        }
+    }
+}
+
 /// Parse CSV text into a [`Trace`].
 pub fn parse_csv(text: &str) -> Result<Trace, String> {
     let csv = Csv::parse(text)?;
-    let find = |names: &[&str]| -> Option<usize> {
-        names.iter().find_map(|n| csv.col(n))
-    };
-    let tcol = find(TIME_COLUMNS).ok_or_else(|| {
+    let tcol = csv.col_any(TIME_COLUMNS).ok_or_else(|| {
         format!("no time column; expected one of {TIME_COLUMNS:?}")
     })?;
-    let fcol = find(FUNCTION_COLUMNS).ok_or_else(|| {
+    let fcol = csv.col_any(FUNCTION_COLUMNS).ok_or_else(|| {
         format!("no function column; expected one of {FUNCTION_COLUMNS:?}")
     })?;
-    let pcol = find(PAYLOAD_COLUMNS);
+    let rcol = csv.col_any(REGION_COLUMNS);
+    let pcol = csv.col_any(PAYLOAD_COLUMNS);
 
-    // Function ids: numeric when every row parses as u32, otherwise
-    // opaque names interned to dense ids in first-seen order (O(1) per
-    // row via the hash table — Azure traces have ~10k distinct apps).
-    let all_numeric = csv.rows.iter().all(|r| r[fcol].parse::<u32>().is_ok());
-    let mut name_ids: HashMap<String, u32> = HashMap::new();
-    let mut intern = |name: &str| -> u32 {
-        if let Some(&id) = name_ids.get(name) {
-            id
-        } else {
-            let id = name_ids.len() as u32;
-            name_ids.insert(name.to_string(), id);
-            id
-        }
-    };
+    let mut functions = IdColumn::scan(&csv, fcol);
+    let mut regions = rcol.map(|c| IdColumn::scan(&csv, c));
 
     let mut records = Vec::with_capacity(csv.rows.len());
     for (i, row) in csv.rows.iter().enumerate() {
@@ -86,10 +101,10 @@ pub fn parse_csv(text: &str) -> Result<Trace, String> {
         if !t_ms.is_finite() || t_ms < 0.0 {
             return Err(format!("row {}: time {t_ms} out of range", i + 1));
         }
-        let function = if all_numeric {
-            FunctionId(row[fcol].parse::<u32>().expect("checked numeric"))
-        } else {
-            FunctionId(intern(&row[fcol]))
+        let function = FunctionId(functions.id(row));
+        let region = match regions.as_mut() {
+            None => RegionId(0),
+            Some(rc) => RegionId(rc.id(row)),
         };
         let payload_scale = match pcol {
             None => 1.0,
@@ -100,7 +115,12 @@ pub fn parse_csv(text: &str) -> Result<Trace, String> {
         if !payload_scale.is_finite() || payload_scale <= 0.0 {
             return Err(format!("row {}: payload scale {payload_scale} must be positive", i + 1));
         }
-        records.push(TraceRecord { t: SimTime::from_ms(t_ms), function, payload_scale });
+        records.push(TraceRecord {
+            t: SimTime::from_ms(t_ms),
+            function,
+            region,
+            payload_scale,
+        });
     }
     Ok(Trace::from_records(records))
 }
@@ -112,14 +132,17 @@ mod tests {
 
     #[test]
     fn roundtrip_through_csv() {
-        let trace = SynthConfig { hours: 0.05, ..Default::default() }.generate();
+        let trace = SynthConfig { hours: 0.05, n_regions: 3, ..Default::default() }.generate();
         assert!(!trace.is_empty());
+        assert_eq!(trace.n_regions(), 3);
         let text = to_csv(&trace).to_string();
         let back = parse_csv(&text).unwrap();
         assert_eq!(back.len(), trace.len());
         assert_eq!(back.n_functions(), trace.n_functions());
+        assert_eq!(back.n_regions(), trace.n_regions());
         for (a, b) in trace.records().iter().zip(back.records()) {
             assert_eq!(a.function, b.function);
+            assert_eq!(a.region, b.region);
             // Times survive to the 1 µs SimTime grid; payloads to 6 dp.
             assert!((a.t.as_ms() - b.t.as_ms()).abs() < 1e-2);
             assert!((a.payload_scale - b.payload_scale).abs() < 1e-5);
@@ -131,10 +154,27 @@ mod tests {
         let text = "timestamp_ms,app\n1000,7\n500,3\n";
         let t = parse_csv(text).unwrap();
         assert_eq!(t.len(), 2);
-        // Sorted by time; numeric ids honoured; payload defaults to 1.0.
+        // Sorted by time; numeric ids honoured; payload defaults to 1.0;
+        // region defaults to 0.
         assert_eq!(t.records()[0].function, FunctionId(3));
         assert_eq!(t.records()[1].function, FunctionId(7));
         assert!(t.records().iter().all(|r| r.payload_scale == 1.0));
+        assert!(t.records().iter().all(|r| r.region == RegionId(0)));
+        assert_eq!(t.n_regions(), 1);
+    }
+
+    #[test]
+    fn region_column_numeric_and_named() {
+        let numeric = "t_ms,function_id,region\n0,0,1\n1,0,0\n2,1,1\n";
+        let t = parse_csv(numeric).unwrap();
+        assert_eq!(t.n_regions(), 2);
+        assert_eq!(t.records()[0].region, RegionId(1));
+        assert_eq!(t.records()[1].region, RegionId(0));
+        // Named regions are interned in first-seen order.
+        let named = "t_ms,function_id,datacenter\n0,0,eu-west\n1,0,us-east\n2,1,eu-west\n";
+        let t = parse_csv(named).unwrap();
+        let regions: Vec<u32> = t.records().iter().map(|r| r.region.0).collect();
+        assert_eq!(regions, vec![0, 1, 0]);
     }
 
     #[test]

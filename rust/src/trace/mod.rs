@@ -10,19 +10,23 @@
 //! - [`arrivals`] — composable arrival-process generators: homogeneous
 //!   Poisson, Markov-modulated on/off bursts, diurnal-rate-modulated
 //!   (non-homogeneous, via thinning), and deterministic replay;
-//! - [`model`] — the trace data model: [`TraceRecord`]s sorted by time,
-//!   plus per-function [`ReplaySchedule`] extraction for the runner;
-//! - [`io`] — Azure-Functions-style CSV read/write on `util::csvio`;
+//! - [`model`] — the trace data model: [`TraceRecord`]s sorted by time
+//!   (each carrying a function id, a region id, and a payload scale), plus
+//!   per-function [`ReplaySchedule`] and per-region record extraction;
+//! - [`io`] — Azure-Functions-style CSV read/write on `util::csvio`
+//!   (optional `region` column, numeric or interned names);
 //! - [`synth`] — a seeded synthetic trace generator: multi-hour,
-//!   multi-function, heavy-tailed (Zipf) per-function popularity;
+//!   multi-function, heavy-tailed (Zipf) per-function popularity, with
+//!   multi-region mixes (home region per function + spill fraction);
 //! - [`registry`] — function id → [`registry::FunctionProfile`] mapping
 //!   (phase profile + per-function Minos config), so warm pools and
 //!   elysium thresholds are judged per function.
 //!
-//! The experiment side lives in `experiment::runner::run_trace` (per-
-//! function pre-test + replay) and `experiment::metrics::FunctionBreakdown`
-//! (per-function p50/p95, cost, termination rate); the CLI exposes it as
-//! `minos replay`.
+//! The experiment side lives in `experiment::runner::run_trace` (isolated
+//! per-function deployments), `experiment::cluster::run_cluster`
+//! (multi-region shared-node replay) and `experiment::metrics`
+//! (per-function and per-region breakdowns); the CLI exposes both as
+//! `minos replay [--regions N]`.
 
 pub mod arrivals;
 pub mod io;

@@ -2,10 +2,12 @@
 //!
 //! A [`Trace`] is the unit the replay engine consumes: records sorted by
 //! timestamp (stable on ties, so input order is an explicit tiebreak), each
-//! naming a [`FunctionId`] and a payload scale (1.0 = the function's
+//! naming a [`FunctionId`], the [`RegionId`] the invocation is routed to
+//! (0 for single-region traces), and a payload scale (1.0 = the function's
 //! nominal request; larger = proportionally more data to download and
 //! analyze — how Azure-style traces express heterogeneous request sizes).
 
+use crate::platform::RegionId;
 use crate::sim::SimTime;
 
 /// Identifier of a deployed function within a trace/registry.
@@ -24,6 +26,8 @@ pub struct TraceRecord {
     /// Arrival time relative to trace start.
     pub t: SimTime,
     pub function: FunctionId,
+    /// Region the invocation is routed to (0 in single-region traces).
+    pub region: RegionId,
     /// Per-invocation payload multiplier (1.0 = nominal).
     pub payload_scale: f64,
 }
@@ -62,6 +66,34 @@ impl Trace {
             .map(|r| r.function.0)
             .max()
             .map_or(0, |m| m as usize + 1)
+    }
+
+    /// Number of regions addressed by the trace (max region id + 1; 0 for
+    /// an empty trace, 1 for a single-region trace).
+    pub fn n_regions(&self) -> usize {
+        self.records
+            .iter()
+            .map(|r| r.region.0)
+            .max()
+            .map_or(0, |m| m as usize + 1)
+    }
+
+    /// Number of records routed to `region`.
+    pub fn count_for_region(&self, region: RegionId) -> usize {
+        self.records.iter().filter(|r| r.region == region).count()
+    }
+
+    /// Split the trace into per-region record lists (one O(N) pass; order
+    /// within each region preserved). Records addressing regions outside
+    /// `0..n_regions` are ignored.
+    pub fn records_by_region(&self, n_regions: usize) -> Vec<Vec<TraceRecord>> {
+        let mut out = vec![Vec::new(); n_regions];
+        for r in &self.records {
+            if let Some(bucket) = out.get_mut(r.region.0 as usize) {
+                bucket.push(*r);
+            }
+        }
+        out
     }
 
     /// Timestamp of the last record (trace span).
@@ -142,8 +174,13 @@ mod tests {
         TraceRecord {
             t: SimTime::from_ms(t_ms),
             function: FunctionId(f),
+            region: RegionId(0),
             payload_scale: scale,
         }
+    }
+
+    fn rec_in(t_ms: f64, f: u32, region: u32) -> TraceRecord {
+        TraceRecord { region: RegionId(region), ..rec(t_ms, f, 1.0) }
     }
 
     #[test]
@@ -214,8 +251,39 @@ mod tests {
         let t = Trace::default();
         assert!(t.is_empty());
         assert_eq!(t.n_functions(), 0);
+        assert_eq!(t.n_regions(), 0);
         assert_eq!(t.span(), SimTime::ZERO);
         assert!(t.schedule_for(FunctionId(0)).is_empty());
+    }
+
+    #[test]
+    fn region_accounting() {
+        let t = Trace::from_records(vec![
+            rec_in(1.0, 0, 0),
+            rec_in(2.0, 1, 2),
+            rec_in(3.0, 0, 2),
+            rec_in(4.0, 2, 1),
+        ]);
+        assert_eq!(t.n_regions(), 3);
+        assert_eq!(t.count_for_region(RegionId(2)), 2);
+        assert_eq!(t.count_for_region(RegionId(7)), 0);
+    }
+
+    #[test]
+    fn records_split_by_region_preserve_order() {
+        let t = Trace::from_records(vec![
+            rec_in(1.0, 0, 1),
+            rec_in(2.0, 1, 0),
+            rec_in(2.0, 2, 1),
+            rec_in(3.0, 0, 1),
+            rec_in(9.0, 0, 5), // out of range for n_regions = 2: ignored
+        ]);
+        let split = t.records_by_region(2);
+        assert_eq!(split.len(), 2);
+        assert_eq!(split[0].len(), 1);
+        let fns: Vec<u32> = split[1].iter().map(|r| r.function.0).collect();
+        assert_eq!(fns, vec![0, 2, 0]);
+        assert!(split[1].windows(2).all(|w| w[0].t <= w[1].t));
     }
 
     #[test]

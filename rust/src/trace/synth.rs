@@ -6,9 +6,13 @@
 //! a long cold tail). Each function is assigned an arrival-process
 //! archetype by id — Poisson, bursty on/off, diurnal — so a single trace
 //! exercises every generator in [`super::arrivals`]. Payload scales are
-//! lognormal around 1.0. Everything forks from one seed: the same
-//! [`SynthConfig`] always yields byte-identical traces.
+//! lognormal around 1.0. Multi-region traces assign each function a home
+//! region (functions cycled over regions) with an optional spill fraction
+//! routed to other regions — the region mix a geo-routed deployment sees.
+//! Everything forks from one seed: the same [`SynthConfig`] always yields
+//! byte-identical traces.
 
+use crate::platform::RegionId;
 use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
@@ -27,6 +31,11 @@ pub struct SynthConfig {
     pub zipf_exponent: f64,
     /// Lognormal sigma of per-invocation payload scale (0 = all nominal).
     pub payload_sigma: f64,
+    /// Number of regions traffic is spread over (1 = single-region trace).
+    pub n_regions: usize,
+    /// Fraction of each function's traffic routed away from its home
+    /// region (uniformly over the other regions). 0 = strict home routing.
+    pub region_spill: f64,
     /// Master seed; the trace is a pure function of this config.
     pub seed: u64,
 }
@@ -39,6 +48,8 @@ impl Default for SynthConfig {
             total_rate_rps: 2.0,
             zipf_exponent: 1.0,
             payload_sigma: 0.25,
+            n_regions: 1,
+            region_spill: 0.0,
             seed: 0x7ACE,
         }
     }
@@ -74,10 +85,20 @@ impl SynthConfig {
         }
     }
 
+    /// Home region of function `i` (functions cycled over regions).
+    pub fn home_region(&self, i: usize) -> RegionId {
+        RegionId((i % self.n_regions.max(1)) as u32)
+    }
+
     /// Generate the trace.
     pub fn generate(&self) -> Trace {
         assert!(self.n_functions > 0, "need at least one function");
         assert!(self.hours > 0.0 && self.total_rate_rps >= 0.0);
+        assert!(self.n_regions >= 1, "need at least one region");
+        assert!(
+            (0.0..=1.0).contains(&self.region_spill),
+            "region_spill must be a fraction"
+        );
         let root = Rng::new(self.seed);
         let horizon_s = self.hours * 3_600.0;
         let weights = self.popularity();
@@ -87,15 +108,28 @@ impl SynthConfig {
             let process = self.process_for(i, self.total_rate_rps * w);
             let mut rng_arrivals = root.fork(10 + i as u64);
             let mut rng_payload = root.fork(100_000 + i as u64);
+            let mut rng_region = root.fork(200_000 + i as u64);
+            let home = self.home_region(i);
             for t_ms in process.sample_times_ms(horizon_s, &mut rng_arrivals) {
                 let payload_scale = if sigma > 0.0 {
                     rng_payload.lognormal(-0.5 * sigma * sigma, sigma)
                 } else {
                     1.0
                 };
+                let region = if self.n_regions > 1
+                    && self.region_spill > 0.0
+                    && rng_region.f64() < self.region_spill
+                {
+                    // Spill uniformly over the *other* regions.
+                    let hop = 1 + rng_region.below(self.n_regions - 1) as u32;
+                    RegionId((home.0 + hop) % self.n_regions as u32)
+                } else {
+                    home
+                };
                 records.push(TraceRecord {
                     t: SimTime::from_ms(t_ms),
                     function: FunctionId(i as u32),
+                    region,
                     payload_scale,
                 });
             }
@@ -165,6 +199,42 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.generate().records().iter().all(|r| r.payload_scale == 1.0));
+    }
+
+    #[test]
+    fn single_region_default_keeps_region_zero() {
+        let t = SynthConfig { hours: 0.05, ..Default::default() }.generate();
+        assert!(t.records().iter().all(|r| r.region == RegionId(0)));
+        assert_eq!(t.n_regions(), 1);
+    }
+
+    #[test]
+    fn regions_cycle_and_spill() {
+        let cfg = SynthConfig {
+            n_functions: 6,
+            n_regions: 3,
+            hours: 0.3,
+            total_rate_rps: 4.0,
+            region_spill: 0.2,
+            ..Default::default()
+        };
+        let t = cfg.generate();
+        assert_eq!(t.n_regions(), 3);
+        // Home routing dominates: function 1's home is region 1; most of
+        // its records stay there, some spill elsewhere.
+        let f1: Vec<_> = t
+            .records()
+            .iter()
+            .filter(|r| r.function == FunctionId(1))
+            .collect();
+        assert!(!f1.is_empty());
+        let at_home = f1.iter().filter(|r| r.region == RegionId(1)).count();
+        let spilled = f1.len() - at_home;
+        assert!(at_home > spilled, "home routing must dominate");
+        assert!(spilled > 0, "spill fraction 0.2 must route some traffic away");
+        // Deterministic under the same config.
+        let again = cfg.generate();
+        assert_eq!(t.records(), again.records());
     }
 
     #[test]

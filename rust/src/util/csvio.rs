@@ -71,6 +71,14 @@ impl Csv {
         self.header.iter().position(|h| h == name)
     }
 
+    /// Column index by any of several accepted header names (first listed
+    /// alias that matches wins). This is the shared low-level alias
+    /// resolution trace readers use (`trace::io` accepts dslab/Azure-style
+    /// header variants for every column).
+    pub fn col_any(&self, names: &[&str]) -> Option<usize> {
+        names.iter().find_map(|n| self.col(n))
+    }
+
     /// All values of a column parsed as f64.
     pub fn col_f64(&self, name: &str) -> Result<Vec<f64>, String> {
         let idx = self.col(name).ok_or_else(|| format!("no column {name:?}"))?;
@@ -78,6 +86,42 @@ impl Csv {
             .iter()
             .map(|r| r[idx].parse::<f64>().map_err(|e| format!("{name}: {e}")))
             .collect()
+    }
+}
+
+/// Interns opaque string labels to dense `u32` ids in first-seen order.
+///
+/// Shared by CSV readers whose id-like columns may hold either numeric ids
+/// or opaque names (Azure traces publish hashed app/region names): names
+/// map to `0, 1, 2, …` in the order they first appear, so the same file
+/// always produces the same ids.
+#[derive(Debug, Clone, Default)]
+pub struct LabelInterner {
+    ids: std::collections::HashMap<String, u32>,
+}
+
+impl LabelInterner {
+    pub fn new() -> LabelInterner {
+        LabelInterner::default()
+    }
+
+    /// Id for `name`, allocating the next dense id on first sight.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        let id = self.ids.len() as u32;
+        self.ids.insert(name.to_string(), id);
+        id
+    }
+
+    /// Number of distinct labels seen.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
     }
 }
 
@@ -168,5 +212,23 @@ mod tests {
     fn missing_column_errors() {
         let c = Csv::parse("a\n1\n").unwrap();
         assert!(c.col_f64("zzz").is_err());
+    }
+
+    #[test]
+    fn col_any_takes_first_matching_alias() {
+        let c = Csv::parse("time_ms,app\n1,x\n").unwrap();
+        assert_eq!(c.col_any(&["t_ms", "time_ms"]), Some(0));
+        assert_eq!(c.col_any(&["function_id", "app"]), Some(1));
+        assert_eq!(c.col_any(&["nope", "nada"]), None);
+    }
+
+    #[test]
+    fn interner_is_dense_and_first_seen() {
+        let mut i = LabelInterner::new();
+        assert!(i.is_empty());
+        assert_eq!(i.intern("checkout"), 0);
+        assert_eq!(i.intern("thumbnail"), 1);
+        assert_eq!(i.intern("checkout"), 0);
+        assert_eq!(i.len(), 2);
     }
 }

@@ -9,6 +9,7 @@
 pub mod args;
 pub mod csvio;
 pub mod json;
+pub mod parallel;
 pub mod plot;
 pub mod prng;
 pub mod timefmt;

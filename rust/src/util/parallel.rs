@@ -1,0 +1,161 @@
+//! Deterministic fork-join parallelism on `std::thread::scope`.
+//!
+//! Experiments are embarrassingly parallel at several granularities —
+//! paired Minos/baseline conditions, week days, per-function trace
+//! replays, per-region cluster replays, sweep points — and every work item
+//! derives all of its randomness from its own seed. [`map_indexed`]
+//! exploits that: items are claimed from an atomic counter by a small
+//! worker pool and results are reassembled **by index**, so the output is
+//! bit-identical to the sequential `(0..n).map(f)` order regardless of
+//! thread count or OS scheduling.
+//!
+//! The convention for thread counts everywhere in the crate (and the CLI's
+//! `--threads` flag): `0` means "auto" (one worker per available core),
+//! `1` means strictly sequential, `n` means at most `n` workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+/// Number of hardware threads available (at least 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user-facing thread count: `0` = auto (all cores).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_threads()
+    } else {
+        requested
+    }
+}
+
+/// Compute `f(0), f(1), …, f(n - 1)` on up to `threads` workers and return
+/// the results in index order. `threads` follows the crate convention
+/// (`0` = auto). A panic in any worker propagates to the caller.
+pub fn map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = resolve_threads(threads).min(n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let f_ref = &f;
+    let next_ref = &next;
+    let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f_ref(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(chunk) => chunk,
+                Err(panic) => std::panic::resume_unwind(panic),
+            })
+            .collect()
+    });
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for chunk in per_worker {
+        for (i, value) in chunk {
+            debug_assert!(slots[i].is_none(), "index {i} computed twice");
+            slots[i] = Some(value);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every index claimed exactly once"))
+        .collect()
+}
+
+/// Fallible [`map_indexed`]: returns the first error by index order (the
+/// same error a sequential run would surface first).
+pub fn try_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    map_indexed(n, threads, f).into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_index_order() {
+        let out = map_indexed(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_sequential_results_exactly() {
+        // A seed-dependent computation: parallel must be bit-identical.
+        let work = |i: usize| {
+            let mut rng = crate::util::prng::Rng::new(i as u64);
+            (0..50).map(|_| rng.f64()).sum::<f64>()
+        };
+        let seq = map_indexed(40, 1, work);
+        let par = map_indexed(40, 4, work);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits(), "thread count changed a result");
+        }
+    }
+
+    #[test]
+    fn runs_every_item_once() {
+        let calls = AtomicU64::new(0);
+        let out = map_indexed(257, 0, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 257);
+        assert_eq!(calls.load(Ordering::Relaxed), 257);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        assert!(map_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(map_indexed(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn try_map_surfaces_first_error_by_index() {
+        let r = try_map_indexed(10, 4, |i| {
+            if i >= 6 {
+                anyhow::bail!("item {i} failed")
+            }
+            Ok(i)
+        });
+        let msg = format!("{}", r.unwrap_err());
+        assert_eq!(msg, "item 6 failed");
+        let ok = try_map_indexed(5, 2, Ok).unwrap();
+        assert_eq!(ok, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn thread_count_resolution() {
+        assert!(available_threads() >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(0), available_threads());
+    }
+}

@@ -2,7 +2,7 @@
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
 # Usage: scripts/check.sh [--fast]
-#   --fast   skip the release build (debug tests only)
+#   --fast   skip the release build and the bench compile (debug tests only)
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -27,6 +27,13 @@ fi
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [ "$FAST" -eq 0 ]; then
+    # Bench bit-rot gate: the harness=false bench binaries are not built
+    # by `cargo test`, so compile (without running) them here.
+    echo "== cargo bench --no-run =="
+    cargo bench --no-run
+fi
 
 if command -v pytest >/dev/null 2>&1; then
     echo "== pytest python/tests =="
