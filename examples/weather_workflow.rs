@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     // Verify all real predictions were recorded and plausible.
     let preds: Vec<f64> = day
         .minos
-        .records
+        .records()
         .iter()
         .filter_map(|r| r.prediction.map(|p| p as f64))
         .collect();

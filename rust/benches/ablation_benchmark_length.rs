@@ -40,7 +40,7 @@ fn main() {
                 // cold passing executions ran vs prepare+analysis alone.
                 let overhead: f64 = o
                     .minos
-                    .records
+                    .records()
                     .iter()
                     .filter(|r| r.cold && r.bench_ms.is_some())
                     .map(|r| {
@@ -51,7 +51,7 @@ fn main() {
                             .max(0.0)
                     })
                     .sum::<f64>()
-                    / o.minos.records.iter().filter(|r| r.cold).count().max(1) as f64;
+                    / o.minos.records().iter().filter(|r| r.cold).count().max(1) as f64;
                 acc.3 += overhead;
             }
             let n = reps as f64;

@@ -34,7 +34,7 @@ fn main() {
         let predicted = MinosConfig { retry_cap: cap, ..MinosConfig::paper_default() }
             .runaway_probability(term_rate.min(0.99));
         // Observed: fraction of *cold-start chains* that hit the cap.
-        let chains = o.minos.records.iter().filter(|r| r.cold).count()
+        let chains = o.minos.records().iter().filter(|r| r.cold).count()
             + o.minos.forced_passes as usize;
         let observed = o.minos.forced_passes as f64 / chains.max(1) as f64;
         println!(

@@ -8,12 +8,17 @@
 //! 4-region, 12-function replay and reports the speedup of 2 and max
 //! threads over the sequential baseline.
 //!
-//! Run: `cargo bench --bench cluster_replay`
+//! Run: `cargo bench --bench cluster_replay [-- --json BENCH_cluster.json]`
+//!
+//! `--json PATH` writes the per-thread-count measurements (median ns +
+//! events/s) machine-readably — `scripts/bench.sh` keeps
+//! `BENCH_cluster.json` at the repo root as the perf trajectory.
 
 use minos::experiment::{cluster::run_cluster, config::ExperimentConfig};
 use minos::platform::ClusterConfig;
-use minos::testkit::bench::{throughput, time_median};
+use minos::testkit::bench::{json_output_path, throughput, time_median};
 use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::json::Json;
 use minos::util::parallel;
 
 fn main() {
@@ -55,6 +60,7 @@ fn main() {
 
     let mut baseline_ms: Option<f64> = None;
     let mut reference: Option<(u64, u64, u64)> = None;
+    let mut json_results: Vec<Json> = Vec::new();
     for &threads in &thread_counts {
         let mut events = 0u64;
         let mut fingerprint = (0u64, 0u64, 0u64);
@@ -94,10 +100,39 @@ fn main() {
             throughput(&t, events) / 1e3,
             speedup
         );
+        json_results.push(Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("threads", Json::num(threads as f64)),
+            ("median_ms", Json::num(t.median_ms)),
+            ("median_ns", Json::num(t.median_ms * 1e6)),
+            ("events", Json::num(events as f64)),
+            ("events_per_s", Json::num(throughput(&t, events))),
+            ("speedup_vs_1_thread", Json::num(speedup)),
+        ]));
     }
-    let (completed, terminations, _) = reference.expect("at least one measurement");
+    let (completed, terminations, cost_bits) = reference.expect("at least one measurement");
     println!(
         "\nall thread counts bit-identical: {} completed, {} terminations",
         completed, terminations
     );
+
+    if let Some(path) = json_output_path() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("cluster_replay")),
+            ("trace_invocations", Json::num(trace.len() as f64)),
+            ("regions", Json::num(N_REGIONS as f64)),
+            (
+                "fingerprint",
+                Json::obj(vec![
+                    ("completed", Json::num(completed as f64)),
+                    ("terminations", Json::num(terminations as f64)),
+                    ("cost_bits_hex", Json::str(&format!("{cost_bits:016x}"))),
+                ]),
+            ),
+            ("results", Json::arr(json_results)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("machine-readable results written to {path}");
+    }
 }

@@ -36,7 +36,7 @@ fn main() {
             .map(|o| {
                 let term: f64 = o
                     .minos
-                    .cost_events
+                    .cost_events()
                     .iter()
                     .filter(|e| e.terminated)
                     .map(|e| e.usd)

@@ -3,7 +3,11 @@
 //! simulation rate, and — when artifacts are present — real PJRT
 //! execution latency.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath [-- --json BENCH_hotpath.json]`
+//!
+//! `--json PATH` additionally writes the measurements machine-readably
+//! (median ns + ops/s per case) — `scripts/bench.sh` uses this to keep
+//! `BENCH_hotpath.json` at the repo root as the perf trajectory.
 
 use minos::coordinator::MinosConfig;
 use minos::experiment::{config::ExperimentConfig, runner};
@@ -11,13 +15,47 @@ use minos::platform::{FaasPlatform, Placement, PlatformConfig};
 use minos::runtime::Runtime;
 use minos::sim::{EventQueue, SimTime};
 use minos::stats::{P2Quantile, Welford};
-use minos::testkit::bench::{throughput, time_median};
+use minos::testkit::bench::{json_output_path, throughput, time_median, Timing};
+use minos::util::json::Json;
 use minos::util::prng::Rng;
+
+/// Collected (timing, ops-per-iteration) pairs for the JSON report.
+struct Report {
+    cases: Vec<(Timing, u64)>,
+}
+
+impl Report {
+    fn push(&mut self, t: &Timing, ops: u64) {
+        self.cases.push((t.clone(), ops));
+    }
+
+    fn write_json(&self, path: &str) {
+        let results = self.cases.iter().map(|(t, ops)| {
+            Json::obj(vec![
+                ("name", Json::str(&t.name)),
+                ("median_ms", Json::num(t.median_ms)),
+                ("median_ns", Json::num(t.median_ms * 1e6)),
+                ("ops_per_iteration", Json::num(*ops as f64)),
+                ("ops_per_s", Json::num(throughput(t, *ops))),
+                ("reps", Json::num(t.reps as f64)),
+            ])
+        });
+        let doc = Json::obj(vec![
+            ("bench", Json::str("hotpath")),
+            ("results", Json::arr(results)),
+        ]);
+        std::fs::write(path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("\nmachine-readable results written to {path}");
+    }
+}
 
 fn main() {
     println!("== L3 hot-path microbenchmarks ==\n");
+    let mut report = Report { cases: Vec::new() };
 
-    // Event queue: schedule+pop cycles.
+    // Event queue: schedule+pop cycles (mixed near-horizon offsets — the
+    // two-tier queue's bucket-ring case).
     let n_ev = 1_000_000u64;
     let t = time_median("event queue: 1M schedule+pop", 7, || {
         let mut q: EventQueue<u64> = EventQueue::new();
@@ -39,6 +77,7 @@ fn main() {
         acc
     });
     println!("{}  ({:.1} M events/s)", t.report(), throughput(&t, n_ev * 2) / 1e6);
+    report.push(&t, n_ev * 2);
 
     // Platform placement churn.
     let n_place = 100_000u64;
@@ -65,6 +104,7 @@ fn main() {
         p.warm_hits
     });
     println!("{}  ({:.2} M placements/s)", t.report(), throughput(&t, n_place) / 1e6);
+    report.push(&t, n_place);
 
     // Stats accumulators.
     let n_stats = 1_000_000u64;
@@ -80,6 +120,7 @@ fn main() {
         (w.mean(), p2.estimate())
     });
     println!("{}  ({:.1} M updates/s)", t.report(), throughput(&t, n_stats) / 1e6);
+    report.push(&t, n_stats);
 
     // PRNG.
     let n_rng = 10_000_000u64;
@@ -92,6 +133,7 @@ fn main() {
         acc
     });
     println!("{}  ({:.1} M draws/s)", t.report(), throughput(&t, n_rng) / 1e6);
+    report.push(&t, n_rng);
 
     // End-to-end simulation throughput: one full paired paper day.
     let mut cfg = ExperimentConfig::paper_day(1);
@@ -107,6 +149,7 @@ fn main() {
         t.report(),
         throughput(&t, n_requests) / 1e3
     );
+    report.push(&t, n_requests);
 
     // Baseline-only single run (the inner loop the harness repeats).
     let base = MinosConfig::baseline();
@@ -114,6 +157,11 @@ fn main() {
         runner::run_single(&cfg, &base, 0, false, None).unwrap().successful()
     });
     println!("{}", t.report());
+    report.push(&t, 1);
+
+    if let Some(path) = json_output_path() {
+        report.write_json(&path);
+    }
 
     // Real PJRT execution latency (L1/L2 anchors), if artifacts exist.
     match Runtime::load_default() {

@@ -377,14 +377,13 @@ fn run_region(
             ..profile.minos.clone()
         };
         slot_of[f.0 as usize] = slot as u32;
+        let mut result = RunResult::new(base.metrics);
+        result.threshold_ms = live_minos.elysium_threshold_ms;
         deploys.push(DeployState {
             function: *f,
             name: profile.name.clone(),
             spec: profile.spec.clone(),
-            result: RunResult {
-                threshold_ms: live_minos.elysium_threshold_ms,
-                ..Default::default()
-            },
+            result,
             live_minos,
             queue: InvocationQueue::new(),
             rng: root.fork(7_000 + base.day as u64 + slot as u64 * 31),
@@ -459,6 +458,13 @@ mod tests {
             "hot CEvent enum grew to {} bytes",
             std::mem::size_of::<CEvent>()
         );
+        // Queue entry = time + seq + event; bucket `Vec`s stay
+        // cache-friendly only while this holds.
+        assert!(
+            crate::sim::event::entry_bytes::<CEvent>() <= 80,
+            "queue entry grew to {} bytes",
+            crate::sim::event::entry_bytes::<CEvent>()
+        );
     }
 
     #[test]
@@ -507,8 +513,8 @@ mod tests {
             assert_eq!(ra.cold_starts, rb.cold_starts);
             assert_eq!(ra.events_handled, rb.events_handled);
             for (fa, fb) in ra.per_function.iter().zip(&rb.per_function) {
-                assert_eq!(fa.result.records.len(), fb.result.records.len());
-                for (x, y) in fa.result.records.iter().zip(&fb.result.records) {
+                assert_eq!(fa.result.records().len(), fb.result.records().len());
+                for (x, y) in fa.result.records().iter().zip(fb.result.records()) {
                     assert_eq!(x.completed_at, y.completed_at);
                     assert_eq!(x.inv_id, y.inv_id);
                 }

@@ -8,6 +8,8 @@ use crate::platform::PlatformConfig;
 use crate::trace::ReplaySchedule;
 use crate::workload::{FunctionSpec, VirtualUsers};
 
+use super::metrics::MetricsMode;
+
 /// Full configuration of one experiment day.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -46,6 +48,11 @@ pub struct ExperimentConfig {
     /// clone the config per function. Takes precedence over
     /// `open_loop_rate_rps`.
     pub replay: Option<Arc<ReplaySchedule>>,
+    /// How runs record their measurements: `Full` keeps every record
+    /// (needed for the paper figures), `Streaming` folds them into
+    /// O(1)-memory accumulators (the default for `minos replay`/`sweep`).
+    /// Sinks only observe — the mode never changes a run's physics.
+    pub metrics: MetricsMode,
 }
 
 impl ExperimentConfig {
@@ -65,6 +72,7 @@ impl ExperimentConfig {
             online_update_every: None,
             open_loop_rate_rps: None,
             replay: None,
+            metrics: MetricsMode::Full,
         }
     }
 

@@ -2,8 +2,26 @@
 //! paper reports: execution time, download duration, analysis duration,
 //! benchmark duration/success, retry count (§III-A "Workload"), plus the
 //! billing stream Fig. 6/7 are computed from.
+//!
+//! §Perf — metrics sinks. A [`RunResult`] records through a
+//! [`MetricsSink`] with two modes:
+//!
+//! - [`MetricsMode::Full`] keeps every [`InvocationRecord`] and
+//!   [`CostEvent`] (today's behavior; required by the figure emitters and
+//!   the bootstrap CIs) — memory grows linearly with the trace;
+//! - [`MetricsMode::Streaming`] folds each invocation into O(1)-memory
+//!   accumulators — Welford mean/variance, P² quantile markers, a
+//!   fixed-width latency histogram, and windowed cost totals (all from
+//!   `stats/`) — so million-invocation replays and sweeps run in constant
+//!   resident memory per invocation.
+//!
+//! Sinks only *observe* a simulation; they never feed RNG draws or event
+//! scheduling, so switching modes cannot change a run's physics (asserted
+//! by the streaming-vs-full parity tests).
 
 use crate::sim::SimTime;
+use crate::stats::histogram::Histogram;
+use crate::stats::{P2Quantile, Welford};
 
 /// One successfully completed invocation.
 #[derive(Debug, Clone)]
@@ -45,13 +63,170 @@ pub struct CostEvent {
     pub terminated: bool,
 }
 
+/// How a run records its measurements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Keep every record and cost event (exact; memory grows with the
+    /// trace). The figure emitters need this.
+    #[default]
+    Full,
+    /// Fold measurements into O(1)-memory streaming accumulators.
+    Streaming,
+}
+
+/// Streaming latency-histogram range: [0, 2 min) at 200 ms resolution.
+const LAT_HIST_MAX_MS: f64 = 120_000.0;
+const LAT_HIST_BUCKETS: usize = 600;
+/// Streaming cost-window width, seconds of virtual time.
+const COST_WINDOW_S: f64 = 60.0;
+
+/// Windowed cost/success totals on a fixed virtual-time grid: the
+/// streaming replacement for the full cost-event stream. Memory is
+/// O(sim horizon / window), independent of the invocation count.
+#[derive(Debug, Clone)]
+pub struct CostWindows {
+    width_s: f64,
+    /// Per-window (billed USD, successful completions).
+    windows: Vec<(f64, u64)>,
+}
+
+impl CostWindows {
+    fn new(width_s: f64) -> CostWindows {
+        CostWindows { width_s, windows: Vec::new() }
+    }
+
+    fn slot(&mut self, at: SimTime) -> &mut (f64, u64) {
+        let idx = (at.as_secs() / self.width_s) as usize;
+        if idx >= self.windows.len() {
+            self.windows.resize(idx + 1, (0.0, 0));
+        }
+        &mut self.windows[idx]
+    }
+
+    fn record_cost(&mut self, at: SimTime, usd: f64) {
+        self.slot(at).0 += usd;
+    }
+
+    fn record_success(&mut self, at: SimTime) {
+        self.slot(at).1 += 1;
+    }
+
+    /// Window width, seconds.
+    pub fn width_s(&self) -> f64 {
+        self.width_s
+    }
+
+    /// Running cost-per-million series at window granularity:
+    /// (window-end seconds, cumulative $ per 1M successes) for every
+    /// window with at least one cumulative success.
+    pub fn series_per_million(&self) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(self.windows.len());
+        let mut cost = 0.0f64;
+        let mut successes = 0u64;
+        for (i, &(c, n)) in self.windows.iter().enumerate() {
+            cost += c;
+            successes += n;
+            if successes > 0 {
+                out.push(((i + 1) as f64 * self.width_s, cost / successes as f64 * 1e6));
+            }
+        }
+        out
+    }
+}
+
+/// O(1)-memory accumulators for one run (the streaming sink's state).
+#[derive(Debug, Clone)]
+pub struct StreamingStats {
+    completed: u64,
+    bench_count: u64,
+    cost_total_usd: f64,
+    latency: Welford,
+    prepare: Welford,
+    analysis: Welford,
+    exec: Welford,
+    analysis_p50: P2Quantile,
+    latency_p50: P2Quantile,
+    latency_p95: P2Quantile,
+    exec_p50: P2Quantile,
+    exec_p95: P2Quantile,
+    latency_hist: Histogram,
+    cost_windows: CostWindows,
+}
+
+impl StreamingStats {
+    fn new() -> StreamingStats {
+        StreamingStats {
+            completed: 0,
+            bench_count: 0,
+            cost_total_usd: 0.0,
+            latency: Welford::new(),
+            prepare: Welford::new(),
+            analysis: Welford::new(),
+            exec: Welford::new(),
+            analysis_p50: P2Quantile::new(0.5),
+            latency_p50: P2Quantile::new(0.5),
+            latency_p95: P2Quantile::new(0.95),
+            exec_p50: P2Quantile::new(0.5),
+            exec_p95: P2Quantile::new(0.95),
+            latency_hist: Histogram::new(0.0, LAT_HIST_MAX_MS, LAT_HIST_BUCKETS),
+            cost_windows: CostWindows::new(COST_WINDOW_S),
+        }
+    }
+
+    fn record(&mut self, rec: &InvocationRecord) {
+        self.completed += 1;
+        let lat = rec.latency_ms();
+        self.latency.push(lat);
+        self.latency_p50.push(lat);
+        self.latency_p95.push(lat);
+        self.latency_hist.record(lat);
+        self.prepare.push(rec.prepare_ms);
+        self.analysis.push(rec.analysis_ms);
+        self.analysis_p50.push(rec.analysis_ms);
+        self.exec.push(rec.exec_ms);
+        self.exec_p50.push(rec.exec_ms);
+        self.exec_p95.push(rec.exec_ms);
+        self.cost_windows.record_success(rec.completed_at);
+    }
+}
+
+/// Where a run's measurements go: the full record vectors, or the
+/// streaming accumulators.
+#[derive(Debug, Clone)]
+pub enum MetricsSink {
+    Full {
+        records: Vec<InvocationRecord>,
+        cost_events: Vec<CostEvent>,
+        /// Benchmark durations of every benchmarked cold start (incl. failed).
+        bench_scores: Vec<f64>,
+    },
+    Streaming(Box<StreamingStats>),
+}
+
+impl MetricsSink {
+    fn new(mode: MetricsMode) -> MetricsSink {
+        match mode {
+            MetricsMode::Full => MetricsSink::Full {
+                records: Vec::new(),
+                cost_events: Vec::new(),
+                bench_scores: Vec::new(),
+            },
+            MetricsMode::Streaming => MetricsSink::Streaming(Box::new(StreamingStats::new())),
+        }
+    }
+}
+
+impl Default for MetricsSink {
+    fn default() -> MetricsSink {
+        MetricsSink::new(MetricsMode::Full)
+    }
+}
+
 /// Everything measured during one run (one condition, one day).
 #[derive(Debug, Clone, Default)]
 pub struct RunResult {
-    pub records: Vec<InvocationRecord>,
-    pub cost_events: Vec<CostEvent>,
-    /// Benchmark durations of every benchmarked cold start (incl. failed).
-    pub bench_scores: Vec<f64>,
+    /// Per-invocation measurements (full vectors or streaming folds).
+    pub sink: MetricsSink,
     pub terminations: u64,
     pub forced_passes: u64,
     pub cold_starts: u64,
@@ -66,86 +241,273 @@ pub struct RunResult {
 }
 
 impl RunResult {
-    /// Number of successful requests (Fig. 5's metric).
-    pub fn successful(&self) -> u64 {
-        self.records.len() as u64
+    /// A result recording through the given sink mode.
+    pub fn new(mode: MetricsMode) -> RunResult {
+        RunResult { sink: MetricsSink::new(mode), ..Default::default() }
     }
 
-    /// Total cost over all billed attempts, USD (Fig. 3 / Fig. 6 basis).
+    pub fn mode(&self) -> MetricsMode {
+        match self.sink {
+            MetricsSink::Full { .. } => MetricsMode::Full,
+            MetricsSink::Streaming(_) => MetricsMode::Streaming,
+        }
+    }
+
+    /// Record one successful completion.
+    pub fn record_invocation(&mut self, rec: InvocationRecord) {
+        match &mut self.sink {
+            MetricsSink::Full { records, .. } => records.push(rec),
+            MetricsSink::Streaming(s) => s.record(&rec),
+        }
+    }
+
+    /// Record one billed attempt.
+    pub fn record_cost(&mut self, ev: CostEvent) {
+        match &mut self.sink {
+            MetricsSink::Full { cost_events, .. } => cost_events.push(ev),
+            MetricsSink::Streaming(s) => {
+                s.cost_total_usd += ev.usd;
+                s.cost_windows.record_cost(ev.at, ev.usd);
+            }
+        }
+    }
+
+    /// Record one benchmark score (every benchmarked cold start).
+    pub fn record_bench(&mut self, score_ms: f64) {
+        match &mut self.sink {
+            MetricsSink::Full { bench_scores, .. } => bench_scores.push(score_ms),
+            MetricsSink::Streaming(s) => s.bench_count += 1,
+        }
+    }
+
+    /// The full per-invocation records (empty in streaming mode).
+    pub fn records(&self) -> &[InvocationRecord] {
+        match &self.sink {
+            MetricsSink::Full { records, .. } => records,
+            MetricsSink::Streaming(_) => &[],
+        }
+    }
+
+    /// The full billed-attempt stream (empty in streaming mode).
+    pub fn cost_events(&self) -> &[CostEvent] {
+        match &self.sink {
+            MetricsSink::Full { cost_events, .. } => cost_events,
+            MetricsSink::Streaming(_) => &[],
+        }
+    }
+
+    /// The raw benchmark scores (empty in streaming mode — use
+    /// [`RunResult::bench_count`] there).
+    pub fn bench_scores(&self) -> &[f64] {
+        match &self.sink {
+            MetricsSink::Full { bench_scores, .. } => bench_scores,
+            MetricsSink::Streaming(_) => &[],
+        }
+    }
+
+    /// Number of benchmarked cold starts (exact in both modes).
+    pub fn bench_count(&self) -> u64 {
+        match &self.sink {
+            MetricsSink::Full { bench_scores, .. } => bench_scores.len() as u64,
+            MetricsSink::Streaming(s) => s.bench_count,
+        }
+    }
+
+    /// Number of successful requests (Fig. 5's metric; exact in both modes).
+    pub fn successful(&self) -> u64 {
+        match &self.sink {
+            MetricsSink::Full { records, .. } => records.len() as u64,
+            MetricsSink::Streaming(s) => s.completed,
+        }
+    }
+
+    /// Total cost over all billed attempts, USD (Fig. 3 / Fig. 6 basis;
+    /// exact in both modes).
     pub fn total_cost_usd(&self) -> f64 {
-        self.cost_events.iter().map(|e| e.usd).sum()
+        match &self.sink {
+            MetricsSink::Full { cost_events, .. } => cost_events.iter().map(|e| e.usd).sum(),
+            MetricsSink::Streaming(s) => s.cost_total_usd,
+        }
     }
 
     /// Average cost per million successful requests, USD (Fig. 6 metric).
     pub fn cost_per_million_usd(&self) -> f64 {
-        if self.records.is_empty() {
+        let n = self.successful();
+        if n == 0 {
             return 0.0;
         }
-        self.total_cost_usd() / self.records.len() as f64 * 1e6
+        self.total_cost_usd() / n as f64 * 1e6
     }
 
-    /// Analysis durations, ms (Fig. 4 metric).
+    /// Analysis durations, ms (Fig. 4 metric; full mode only — empty when
+    /// streaming).
     pub fn analysis_durations(&self) -> Vec<f64> {
-        self.records.iter().map(|r| r.analysis_ms).collect()
+        self.records().iter().map(|r| r.analysis_ms).collect()
     }
 
     pub fn prepare_durations(&self) -> Vec<f64> {
-        self.records.iter().map(|r| r.prepare_ms).collect()
+        self.records().iter().map(|r| r.prepare_ms).collect()
     }
 
     pub fn exec_durations(&self) -> Vec<f64> {
-        self.records.iter().map(|r| r.exec_ms).collect()
+        self.records().iter().map(|r| r.exec_ms).collect()
     }
 
     pub fn latencies(&self) -> Vec<f64> {
-        self.records.iter().map(|r| r.latency_ms()).collect()
+        self.records().iter().map(|r| r.latency_ms()).collect()
+    }
+
+    /// Mean analysis duration, ms — exact in full mode, Welford in
+    /// streaming mode (same value up to floating-point association).
+    pub fn analysis_mean_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => crate::stats::mean(&self.analysis_durations()),
+            MetricsSink::Streaming(s) => s.analysis.mean(),
+        }
+    }
+
+    /// Mean end-to-end latency, ms (exact / Welford by mode).
+    pub fn latency_mean_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => crate::stats::mean(&self.latencies()),
+            MetricsSink::Streaming(s) => s.latency.mean(),
+        }
+    }
+
+    /// Mean prepare (download) duration, ms (exact / Welford by mode).
+    pub fn prepare_mean_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => crate::stats::mean(&self.prepare_durations()),
+            MetricsSink::Streaming(s) => s.prepare.mean(),
+        }
+    }
+
+    /// Median analysis duration, ms — exact in full mode, P² estimate in
+    /// streaming mode. 0.0 for an empty run.
+    pub fn analysis_median_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { records, .. } => {
+                if records.is_empty() {
+                    0.0
+                } else {
+                    crate::stats::median(&self.analysis_durations())
+                }
+            }
+            MetricsSink::Streaming(s) => s.analysis_p50.estimate(),
+        }
+    }
+
+    fn full_pct(xs: &[f64], q: f64) -> f64 {
+        if xs.is_empty() {
+            0.0
+        } else {
+            crate::stats::percentile(xs, q)
+        }
+    }
+
+    /// End-to-end latency p50, ms (exact / P² by mode).
+    pub fn latency_p50_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => Self::full_pct(&self.latencies(), 50.0),
+            MetricsSink::Streaming(s) => s.latency_p50.estimate(),
+        }
+    }
+
+    /// End-to-end latency p95, ms (exact / P² by mode).
+    pub fn latency_p95_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => Self::full_pct(&self.latencies(), 95.0),
+            MetricsSink::Streaming(s) => s.latency_p95.estimate(),
+        }
+    }
+
+    /// Billed execution-duration p50, ms (exact / P² by mode).
+    pub fn exec_p50_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => Self::full_pct(&self.exec_durations(), 50.0),
+            MetricsSink::Streaming(s) => s.exec_p50.estimate(),
+        }
+    }
+
+    /// Billed execution-duration p95, ms (exact / P² by mode).
+    pub fn exec_p95_ms(&self) -> f64 {
+        match &self.sink {
+            MetricsSink::Full { .. } => Self::full_pct(&self.exec_durations(), 95.0),
+            MetricsSink::Streaming(s) => s.exec_p95.estimate(),
+        }
+    }
+
+    /// The streaming latency histogram, when in streaming mode (used to
+    /// pool latency distributions across runs without records).
+    pub fn latency_histogram(&self) -> Option<&Histogram> {
+        match &self.sink {
+            MetricsSink::Full { .. } => None,
+            MetricsSink::Streaming(s) => Some(&s.latency_hist),
+        }
     }
 
     /// Observed termination rate among benchmarked cold starts.
     pub fn termination_rate(&self) -> f64 {
-        if self.bench_scores.is_empty() {
+        let benched = self.bench_count();
+        if benched == 0 {
             return 0.0;
         }
-        self.terminations as f64 / self.bench_scores.len() as f64
+        self.terminations as f64 / benched as f64
     }
 
-    /// Running cost-per-success series on a fixed time grid (Fig. 7).
-    /// Returns (t_seconds, cost_per_million) points.
+    /// Running cost-per-success series (Fig. 7). Returns
+    /// (t_seconds, cost_per_million) points. Full mode: exact on the
+    /// requested `step_s` grid. Streaming mode: at the sink's fixed
+    /// cost-window granularity (`step_s` is ignored), clipped to the
+    /// horizon.
     pub fn cost_series(&self, step_s: f64, horizon_s: f64) -> Vec<(f64, f64)> {
-        let mut points = Vec::new();
-        let mut cost_idx = 0usize;
-        let mut rec_idx = 0usize;
-        let mut cum_cost = 0.0f64;
-        let mut cum_success = 0u64;
-        // Events must be scanned in time order; records are completion-
-        // ordered by construction, cost events likewise.
-        let mut t = step_s;
-        while t <= horizon_s + 1e-9 {
-            let cutoff = SimTime::from_secs(t);
-            while cost_idx < self.cost_events.len()
-                && self.cost_events[cost_idx].at <= cutoff
-            {
-                cum_cost += self.cost_events[cost_idx].usd;
-                cost_idx += 1;
+        match &self.sink {
+            MetricsSink::Full { records, cost_events, .. } => {
+                let mut points = Vec::new();
+                let mut cost_idx = 0usize;
+                let mut rec_idx = 0usize;
+                let mut cum_cost = 0.0f64;
+                let mut cum_success = 0u64;
+                // Events must be scanned in time order; records are
+                // completion-ordered by construction, cost events likewise.
+                let mut t = step_s;
+                while t <= horizon_s + 1e-9 {
+                    let cutoff = SimTime::from_secs(t);
+                    while cost_idx < cost_events.len() && cost_events[cost_idx].at <= cutoff {
+                        cum_cost += cost_events[cost_idx].usd;
+                        cost_idx += 1;
+                    }
+                    while rec_idx < records.len() && records[rec_idx].completed_at <= cutoff {
+                        cum_success += 1;
+                        rec_idx += 1;
+                    }
+                    if cum_success > 0 {
+                        points.push((t, cum_cost / cum_success as f64 * 1e6));
+                    }
+                    t += step_s;
+                }
+                points
             }
-            while rec_idx < self.records.len()
-                && self.records[rec_idx].completed_at <= cutoff
-            {
-                cum_success += 1;
-                rec_idx += 1;
+            MetricsSink::Streaming(s) => {
+                let width = s.cost_windows.width_s();
+                let mut points = s.cost_windows.series_per_million();
+                // Keep every window that *starts* before the horizon and
+                // clamp its stamp to the horizon, so a partial final
+                // window still reports the data recorded inside it.
+                points.retain(|&(t, _)| t - width < horizon_s - 1e-9);
+                for p in &mut points {
+                    p.0 = p.0.min(horizon_s);
+                }
+                points
             }
-            if cum_success > 0 {
-                points.push((t, cum_cost / cum_success as f64 * 1e6));
-            }
-            t += step_s;
         }
-        points
     }
 }
 
 /// Per-function aggregate of one trace-replay run — the row the
 /// multi-function report prints (p50/p95 durations, cost, termination
-/// rate, all per function id).
+/// rate, all per function id). Works over both sink modes: exact
+/// percentiles from full records, P² estimates from streaming runs.
 #[derive(Debug, Clone)]
 pub struct FunctionBreakdown {
     pub function: u32,
@@ -173,24 +535,15 @@ pub struct FunctionBreakdown {
 impl FunctionBreakdown {
     /// Aggregate one function's run into its report row.
     pub fn from_run(function: u32, name: &str, arrivals: u64, r: &RunResult) -> FunctionBreakdown {
-        let pct = |xs: &[f64], q: f64| -> f64 {
-            if xs.is_empty() {
-                0.0
-            } else {
-                crate::stats::percentile(xs, q)
-            }
-        };
-        let lat = r.latencies();
-        let exec = r.exec_durations();
         FunctionBreakdown {
             function,
             name: name.to_string(),
             arrivals,
             successful: r.successful(),
-            p50_latency_ms: pct(&lat, 50.0),
-            p95_latency_ms: pct(&lat, 95.0),
-            p50_exec_ms: pct(&exec, 50.0),
-            p95_exec_ms: pct(&exec, 95.0),
+            p50_latency_ms: r.latency_p50_ms(),
+            p95_latency_ms: r.latency_p95_ms(),
+            p50_exec_ms: r.exec_p50_ms(),
+            p95_exec_ms: r.exec_p95_ms(),
             terminations: r.terminations,
             termination_rate: r.termination_rate(),
             cold_starts: r.cold_starts,
@@ -229,6 +582,10 @@ impl RegionBreakdown {
     /// Aggregate a region's per-function runs into its report row.
     /// `cold_starts`/`warm_hits` come from the region platform (they are
     /// shared across functions and not attributable per run here).
+    ///
+    /// Full-mode runs pool exact latencies; streaming runs pool their
+    /// fixed-width latency histograms (identical bounds merge exactly)
+    /// and read the percentiles off the merged histogram.
     pub fn from_runs(
         region: u32,
         name: &str,
@@ -237,25 +594,46 @@ impl RegionBreakdown {
         warm_hits: u64,
         runs: &[&RunResult],
     ) -> RegionBreakdown {
-        let mut latencies: Vec<f64> = Vec::new();
         let mut successful = 0u64;
         let mut terminations = 0u64;
         let mut total_cost_usd = 0.0f64;
         for r in runs {
-            latencies.extend(r.latencies());
             successful += r.successful();
             terminations += r.terminations;
             total_cost_usd += r.total_cost_usd();
         }
-        // One sort serves both percentile reads (regions pool up to the
-        // whole trace's latencies).
-        latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
-        let pct = |q: f64| -> f64 {
-            if latencies.is_empty() {
-                0.0
-            } else {
-                crate::stats::descriptive::percentile_of_sorted(&latencies, q)
+        let streaming = runs.iter().any(|r| r.mode() == MetricsMode::Streaming);
+        let (p50, p95) = if streaming {
+            let mut pooled: Option<Histogram> = None;
+            for r in runs {
+                let h = r
+                    .latency_histogram()
+                    .expect("regions must not mix full and streaming runs");
+                match &mut pooled {
+                    None => pooled = Some(h.clone()),
+                    Some(p) => p.merge(h),
+                }
             }
+            match pooled {
+                Some(h) if h.count() > 0 => (h.quantile(0.5), h.quantile(0.95)),
+                _ => (0.0, 0.0),
+            }
+        } else {
+            let mut latencies: Vec<f64> = Vec::new();
+            for r in runs {
+                latencies.extend(r.latencies());
+            }
+            // One sort serves both percentile reads (regions pool up to
+            // the whole trace's latencies).
+            latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+            let pct = |q: f64| -> f64 {
+                if latencies.is_empty() {
+                    0.0
+                } else {
+                    crate::stats::descriptive::percentile_of_sorted(&latencies, q)
+                }
+            };
+            (pct(50.0), pct(95.0))
         };
         RegionBreakdown {
             region,
@@ -266,8 +644,8 @@ impl RegionBreakdown {
             terminations,
             cold_starts,
             warm_hits,
-            p50_latency_ms: pct(50.0),
-            p95_latency_ms: pct(95.0),
+            p50_latency_ms: p50,
+            p95_latency_ms: p95,
             total_cost_usd,
             cost_per_million_usd: if successful == 0 {
                 0.0
@@ -303,13 +681,23 @@ mod tests {
         CostEvent { at: SimTime::from_secs(at_s), usd, terminated: false }
     }
 
+    fn full_with(records: Vec<InvocationRecord>, costs: Vec<CostEvent>) -> RunResult {
+        let mut r = RunResult::new(MetricsMode::Full);
+        for rec in records {
+            r.record_invocation(rec);
+        }
+        for c in costs {
+            r.record_cost(c);
+        }
+        r
+    }
+
     #[test]
     fn aggregates() {
-        let r = RunResult {
-            records: vec![rec(1.0, 2_000.0), rec(2.0, 2_200.0)],
-            cost_events: vec![cost(1.0, 1e-5), cost(2.0, 1.2e-5)],
-            ..Default::default()
-        };
+        let r = full_with(
+            vec![rec(1.0, 2_000.0), rec(2.0, 2_200.0)],
+            vec![cost(1.0, 1e-5), cost(2.0, 1.2e-5)],
+        );
         assert_eq!(r.successful(), 2);
         assert!((r.total_cost_usd() - 2.2e-5).abs() < 1e-12);
         assert!((r.cost_per_million_usd() - 11.0).abs() < 1e-9);
@@ -325,11 +713,10 @@ mod tests {
 
     #[test]
     fn cost_series_is_running_average() {
-        let r = RunResult {
-            records: vec![rec(10.0, 1.0), rec(30.0, 1.0)],
-            cost_events: vec![cost(5.0, 10e-6), cost(25.0, 14e-6)],
-            ..Default::default()
-        };
+        let r = full_with(
+            vec![rec(10.0, 1.0), rec(30.0, 1.0)],
+            vec![cost(5.0, 10e-6), cost(25.0, 14e-6)],
+        );
         let series = r.cost_series(10.0, 40.0);
         // t=10: cost 10e-6 over 1 success = $10/M
         assert!((series[0].1 - 10.0).abs() < 1e-9);
@@ -345,6 +732,11 @@ mod tests {
         assert_eq!(r.cost_per_million_usd(), 0.0);
         assert_eq!(r.termination_rate(), 0.0);
         assert!(r.cost_series(10.0, 100.0).is_empty());
+        let s = RunResult::new(MetricsMode::Streaming);
+        assert_eq!(s.successful(), 0);
+        assert_eq!(s.cost_per_million_usd(), 0.0);
+        assert_eq!(s.latency_p50_ms(), 0.0);
+        assert!(s.cost_series(10.0, 100.0).is_empty());
     }
 
     #[test]
@@ -356,16 +748,14 @@ mod tests {
             x.exec_ms = 1_000.0 + i as f64 * 10.0; // 1000..1990
             records.push(x);
         }
-        let r = RunResult {
-            records,
-            cost_events: vec![cost(1.0, 2e-5)],
-            terminations: 5,
-            bench_scores: vec![300.0; 20],
-            cold_starts: 7,
-            warm_hits: 93,
-            threshold_ms: 410.0,
-            ..Default::default()
-        };
+        let mut r = full_with(records, vec![cost(1.0, 2e-5)]);
+        r.terminations = 5;
+        for _ in 0..20 {
+            r.record_bench(300.0);
+        }
+        r.cold_starts = 7;
+        r.warm_hits = 93;
+        r.threshold_ms = 410.0;
         let b = FunctionBreakdown::from_run(3, "weather-3", 100, &r);
         assert_eq!(b.function, 3);
         assert_eq!(b.successful, 100);
@@ -395,13 +785,13 @@ mod tests {
         for i in 0..10u64 {
             let mut a = rec(i as f64 + 1.0, 100.0);
             a.submitted_at = SimTime::from_secs(i as f64);
-            fast.records.push(a);
+            fast.record_invocation(a);
             let mut b = rec(i as f64 + 3.0, 100.0);
             b.submitted_at = SimTime::from_secs(i as f64);
-            slow.records.push(b);
+            slow.record_invocation(b);
         }
-        fast.cost_events.push(cost(1.0, 1e-5));
-        slow.cost_events.push(cost(1.0, 3e-5));
+        fast.record_cost(cost(1.0, 1e-5));
+        slow.record_cost(cost(1.0, 3e-5));
         slow.terminations = 2;
         let b = RegionBreakdown::from_runs(1, "iowa-1", 20, 4, 16, &[&fast, &slow]);
         assert_eq!(b.region, 1);
@@ -424,5 +814,116 @@ mod tests {
         assert_eq!(b.successful, 0);
         assert_eq!(b.cost_per_million_usd, 0.0);
         assert_eq!(b.p50_latency_ms, 0.0);
+    }
+
+    // -- streaming sink ---------------------------------------------------
+
+    /// Push the same measurements into a full and a streaming sink.
+    fn paired_sinks(n: u64) -> (RunResult, RunResult) {
+        let mut full = RunResult::new(MetricsMode::Full);
+        let mut stream = RunResult::new(MetricsMode::Streaming);
+        for i in 0..n {
+            let mut x = rec(i as f64 + 4.0, 1_800.0 + (i % 7) as f64 * 50.0);
+            x.submitted_at = SimTime::from_secs(i as f64);
+            x.exec_ms = 2_500.0 + (i % 13) as f64 * 40.0;
+            full.record_invocation(x.clone());
+            stream.record_invocation(x);
+            let c = cost(i as f64 + 4.0, 1e-6 + i as f64 * 1e-9);
+            full.record_cost(c);
+            stream.record_cost(c);
+            if i % 5 == 0 {
+                full.record_bench(300.0 + i as f64);
+                stream.record_bench(300.0 + i as f64);
+            }
+        }
+        (full, stream)
+    }
+
+    #[test]
+    fn streaming_counts_and_totals_are_exact() {
+        let (full, stream) = paired_sinks(500);
+        assert_eq!(stream.successful(), full.successful());
+        assert_eq!(stream.bench_count(), full.bench_count());
+        // Totals agree to fp accumulation order.
+        assert!((stream.total_cost_usd() - full.total_cost_usd()).abs() < 1e-15);
+        assert!(stream.records().is_empty(), "streaming keeps no records");
+        assert!(stream.cost_events().is_empty());
+    }
+
+    #[test]
+    fn streaming_stats_track_exact_aggregates() {
+        let (full, stream) = paired_sinks(2_000);
+        let m_rel = (stream.analysis_mean_ms() - full.analysis_mean_ms()).abs()
+            / full.analysis_mean_ms();
+        assert!(m_rel < 1e-9, "means diverged: rel {m_rel}");
+        let p50_rel = (stream.latency_p50_ms() - full.latency_p50_ms()).abs()
+            / full.latency_p50_ms();
+        assert!(p50_rel < 0.05, "latency p50 diverged: rel {p50_rel}");
+        let e95_rel =
+            (stream.exec_p95_ms() - full.exec_p95_ms()).abs() / full.exec_p95_ms();
+        assert!(e95_rel < 0.05, "exec p95 diverged: rel {e95_rel}");
+    }
+
+    #[test]
+    fn streaming_cost_series_approximates_full() {
+        let (full, stream) = paired_sinks(500);
+        let f = full.cost_series(60.0, 600.0);
+        let s = stream.cost_series(60.0, 600.0);
+        assert!(!s.is_empty());
+        // Same final running average (both cumulative over everything).
+        let (_, f_last) = *f.last().unwrap();
+        let (_, s_last) = *s.last().unwrap();
+        assert!((f_last - s_last).abs() / f_last < 1e-9);
+    }
+
+    #[test]
+    fn streaming_region_breakdown_pools_histograms() {
+        let mut a = RunResult::new(MetricsMode::Streaming);
+        let mut b = RunResult::new(MetricsMode::Streaming);
+        for i in 0..200u64 {
+            let mut x = rec(i as f64 + 1.0, 100.0); // 1 s latency
+            x.submitted_at = SimTime::from_secs(i as f64);
+            a.record_invocation(x);
+            let mut y = rec(i as f64 + 3.0, 100.0); // 3 s latency
+            y.submitted_at = SimTime::from_secs(i as f64);
+            b.record_invocation(y);
+        }
+        let rb = RegionBreakdown::from_runs(0, "stream-0", 400, 2, 398, &[&a, &b]);
+        assert_eq!(rb.successful, 400);
+        // Histogram resolution is 200 ms: p50 within one bucket of 1–3 s
+        // band boundary, p95 near 3 s.
+        assert!(rb.p50_latency_ms >= 800.0 && rb.p50_latency_ms <= 3_200.0);
+        assert!((rb.p95_latency_ms - 3_000.0).abs() <= 400.0);
+    }
+
+    #[test]
+    fn streaming_cost_series_clips_partial_final_window() {
+        // Horizon 90 s is not a multiple of the 60 s window: the event at
+        // t=70 s (second window) must still be reported, stamped at the
+        // horizon, not silently dropped with its window's 120 s end-stamp.
+        let mut r = RunResult::new(MetricsMode::Streaming);
+        let mut x = rec(70.0, 100.0);
+        x.submitted_at = SimTime::from_secs(69.0);
+        r.record_invocation(x);
+        r.record_cost(cost(70.0, 7e-6));
+        let s = r.cost_series(10.0, 90.0);
+        let (t_last, v_last) = *s.last().unwrap();
+        assert!((t_last - 90.0).abs() < 1e-9, "last stamp {t_last}");
+        assert!((v_last - 7.0).abs() < 1e-9, "partial window dropped: {v_last}");
+    }
+
+    #[test]
+    fn cost_windows_series_is_cumulative() {
+        let mut w = CostWindows::new(60.0);
+        w.record_cost(SimTime::from_secs(10.0), 5e-6);
+        w.record_success(SimTime::from_secs(10.0));
+        w.record_cost(SimTime::from_secs(70.0), 5e-6);
+        w.record_success(SimTime::from_secs(70.0));
+        let s = w.series_per_million();
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 5.0).abs() < 1e-9); // $5/M after one success
+        assert!((s[1].1 - 5.0).abs() < 1e-9); // still $5/M average
+        assert_eq!(s[0].0, 60.0);
+        assert_eq!(s[1].0, 120.0);
     }
 }

@@ -30,7 +30,10 @@ pub(crate) mod world;
 
 pub use cluster::{run_cluster, ClusterOutcome, DeploymentOutcome, RegionOutcome};
 pub use config::ExperimentConfig;
-pub use metrics::{FunctionBreakdown, InvocationRecord, RegionBreakdown, RunResult};
+pub use metrics::{
+    FunctionBreakdown, InvocationRecord, MetricsMode, MetricsSink, RegionBreakdown,
+    RunResult,
+};
 pub use runner::{
     run_paired, run_paired_threads, run_pretest, run_single, run_trace, run_trace_paired,
     run_trace_threads, run_week, run_week_threads, FunctionPairedOutcome,

@@ -65,15 +65,18 @@ pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<
     let mut pretest_cfg = cfg.clone();
     pretest_cfg.vus = cfg.pretest_vus.clone();
     // The pre-test is always the paper's closed-loop calibration workload,
-    // even when the main run replays a trace.
+    // even when the main run replays a trace — and always records in full
+    // (threshold calibration needs the raw score vector; the pre-test is
+    // short, so memory is not a concern even under streaming main runs).
     pretest_cfg.replay = None;
+    pretest_cfg.metrics = super::metrics::MetricsMode::Full;
     let minos = MinosConfig {
         enabled: true,
         elysium_threshold_ms: f64::INFINITY,
         ..cfg.minos.clone()
     };
     let run = run_single(&pretest_cfg, &minos, 1, cfg.pretest_bench_warm, runtime)?;
-    Ok(PretestReport::from_scores(run.bench_scores, cfg.elysium_percentile))
+    Ok(PretestReport::from_scores(run.bench_scores().to_vec(), cfg.elysium_percentile))
 }
 
 /// Both paper conditions on the identical platform draw.
@@ -87,16 +90,17 @@ pub struct PairedOutcome {
 
 impl PairedOutcome {
     /// Mean analysis-duration improvement, % (Fig. 4's headline measure).
+    /// Works over both sink modes (exact mean / Welford mean).
     pub fn analysis_improvement_pct(&self) -> f64 {
-        let b = crate::stats::mean(&self.baseline.analysis_durations());
-        let m = crate::stats::mean(&self.minos.analysis_durations());
+        let b = self.baseline.analysis_mean_ms();
+        let m = self.minos.analysis_mean_ms();
         (b - m) / b * 100.0
     }
 
-    /// Median analysis-duration improvement, %.
+    /// Median analysis-duration improvement, % (exact / P² by mode).
     pub fn analysis_median_improvement_pct(&self) -> f64 {
-        let b = crate::stats::median(&self.baseline.analysis_durations());
-        let m = crate::stats::median(&self.minos.analysis_durations());
+        let b = self.baseline.analysis_median_ms();
+        let m = self.minos.analysis_median_ms();
         (b - m) / b * 100.0
     }
 
@@ -351,10 +355,11 @@ pub struct FunctionPairedOutcome {
 }
 
 impl FunctionPairedOutcome {
-    /// Mean analysis-duration improvement for this function, %.
+    /// Mean analysis-duration improvement for this function, % (works
+    /// over both sink modes).
     pub fn analysis_improvement_pct(&self) -> f64 {
-        let b = crate::stats::mean(&self.baseline.analysis_durations());
-        let m = crate::stats::mean(&self.minos.analysis_durations());
+        let b = self.baseline.analysis_mean_ms();
+        let m = self.minos.analysis_mean_ms();
         (b - m) / b * 100.0
     }
 
@@ -420,7 +425,7 @@ mod tests {
         // 10 VUs × 120 s at ~4 s/request ⇒ ~300 requests.
         assert!(r.successful() > 150, "only {} successes", r.successful());
         assert!(r.terminations == 0, "baseline must not terminate");
-        assert!(r.bench_scores.is_empty(), "baseline must not benchmark");
+        assert!(r.bench_scores().is_empty(), "baseline must not benchmark");
         assert_eq!(r.cold_starts as usize, 10);
     }
 
@@ -435,7 +440,7 @@ mod tests {
         assert!(r.terminations > 0, "expected terminations");
         assert!(r.successful() > 100);
         // Terminated cost events exist and carry positive cost.
-        assert!(r.cost_events.iter().any(|e| e.terminated && e.usd > 0.0));
+        assert!(r.cost_events().iter().any(|e| e.terminated && e.usd > 0.0));
     }
 
     #[test]
@@ -452,8 +457,8 @@ mod tests {
         let o = run_paired(&cfg, None).unwrap();
         // Conditions ran: both have successes; Minos has bench scores.
         assert!(o.minos.successful() > 0 && o.baseline.successful() > 0);
-        assert!(!o.minos.bench_scores.is_empty());
-        assert!(o.baseline.bench_scores.is_empty());
+        assert!(!o.minos.bench_scores().is_empty());
+        assert!(o.baseline.bench_scores().is_empty());
     }
 
     #[test]
@@ -464,8 +469,8 @@ mod tests {
         let b = run_single(&cfg, &m, 0, false, None).unwrap();
         assert_eq!(a.successful(), b.successful());
         assert!((a.total_cost_usd() - b.total_cost_usd()).abs() < 1e-15);
-        assert_eq!(a.records.len(), b.records.len());
-        for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(a.records().len(), b.records().len());
+        for (x, y) in a.records().iter().zip(b.records()) {
             assert_eq!(x.completed_at, y.completed_at);
         }
     }
@@ -488,8 +493,8 @@ mod tests {
                 b.total_cost_usd().to_bits(),
                 "thread count changed paired-replay metrics"
             );
-            assert_eq!(a.records.len(), b.records.len());
-            for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(a.records().len(), b.records().len());
+            for (x, y) in a.records().iter().zip(b.records()) {
                 assert_eq!(x.completed_at, y.completed_at);
                 assert_eq!(x.inv_id, y.inv_id);
             }
@@ -556,7 +561,7 @@ mod tests {
         // exactly the cap; warm re-uses of the forced-pass instances run
         // without a benchmark on the first attempt.
         let mut saw_forced = 0;
-        for rec in &r.records {
+        for rec in r.records() {
             if rec.cold {
                 assert_eq!(rec.attempts, minos.retry_cap + 1);
                 assert!(rec.forced);
@@ -581,7 +586,7 @@ mod tests {
         let r = run_single(&cfg, &MinosConfig::baseline(), 0, false, None).unwrap();
         assert_eq!(r.successful(), 5, "every scheduled arrival must complete");
         let mut subs: Vec<f64> =
-            r.records.iter().map(|x| x.submitted_at.as_ms()).collect();
+            r.records().iter().map(|x| x.submitted_at.as_ms()).collect();
         subs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(subs, vec![0.0, 500.0, 1_000.0, 1_000.0, 2_000.0]);
     }
@@ -602,7 +607,7 @@ mod tests {
         assert_eq!(a.successful(), b.successful());
         assert_eq!(a.terminations, b.terminations);
         assert!((a.total_cost_usd() - b.total_cost_usd()).abs() < 1e-15);
-        for (x, y) in a.records.iter().zip(&b.records) {
+        for (x, y) in a.records().iter().zip(b.records()) {
             assert_eq!(x.completed_at, y.completed_at);
         }
     }
@@ -623,7 +628,7 @@ mod tests {
         // out by at least one execution each (~2.9 s nominal; even on the
         // fastest admissible instance an execution exceeds ~1 s).
         let mut completions: Vec<f64> =
-            r.records.iter().map(|x| x.completed_at.as_ms()).collect();
+            r.records().iter().map(|x| x.completed_at.as_ms()).collect();
         completions.sort_by(|a, b| a.partial_cmp(b).unwrap());
         for w in completions.windows(2) {
             assert!(w[1] - w[0] > 800.0, "overlapping executions on 1 instance");
@@ -744,7 +749,7 @@ mod tests {
         for f in &o.per_function {
             assert_eq!(f.minos.successful(), f.arrivals as u64);
             assert_eq!(f.baseline.successful(), f.arrivals as u64);
-            assert!(f.baseline.bench_scores.is_empty(), "baseline must not benchmark");
+            assert!(f.baseline.bench_scores().is_empty(), "baseline must not benchmark");
             assert!(f.analysis_improvement_pct().is_finite());
             assert!(f.cost_saving_pct().is_finite());
         }

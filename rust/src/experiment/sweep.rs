@@ -79,11 +79,15 @@ pub fn sweep_threads(
         .collect())
 }
 
-/// The per-seed base config every sweep point starts from.
+/// The per-seed base config every sweep point starts from. Sweeps only
+/// consume run-level aggregates (means, totals, rates), so they record
+/// through the O(1)-memory streaming sink — a sweep's memory no longer
+/// grows with `seeds_per_point × horizon`.
 fn sweep_cfg(seed_idx: u64, horizon_s: f64) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_day(1);
     cfg.seed = 0x57EE + seed_idx * 7919;
     cfg.vus.horizon = SimTime::from_secs(horizon_s);
+    cfg.metrics = crate::experiment::metrics::MetricsMode::Streaming;
     cfg
 }
 

@@ -134,7 +134,7 @@ pub(crate) fn gate_and_start(
         let draw = rng.f64();
         let decision = decide_cold_start(minos, &inv, perf, draw, || {
             let b = minos.benchmark.duration_ms(perf, rng);
-            result.bench_scores.push(b);
+            result.record_bench(b);
             if let Some(ot) = online.as_mut() {
                 ot.report(b);
             }
@@ -184,7 +184,7 @@ pub(crate) fn gate_and_start(
     // instance and its duration hides inside prepare.
     let bench_ms = if bench_warm && minos.enabled {
         let b = minos.benchmark.duration_ms(perf, rng);
-        result.bench_scores.push(b);
+        result.record_bench(b);
         if let Some(ot) = online.as_mut() {
             ot.report(b);
         }
@@ -221,7 +221,7 @@ pub(crate) fn settle_crash(
     now: SimTime,
     crash: &CrashRecord,
 ) {
-    result.cost_events.push(CostEvent {
+    result.record_cost(CostEvent {
         at: now,
         usd: billing.invocation_cost_usd(crash.bench_ms),
         terminated: true,
@@ -242,12 +242,12 @@ pub(crate) fn settle_finish(
     prediction: Option<f32>,
 ) {
     queue.complete(&rec.inv);
-    result.cost_events.push(CostEvent {
+    result.record_cost(CostEvent {
         at: now,
         usd: billing.invocation_cost_usd(rec.exec_ms),
         terminated: false,
     });
-    result.records.push(finish_record(rec, now, prediction));
+    result.record_invocation(finish_record(rec, now, prediction));
 }
 
 /// Build an [`InvocationRecord`] from a finish payload (shared by both
@@ -318,16 +318,15 @@ impl<'a> MinosWorld<'a> {
         } else {
             Vec::new()
         };
+        let mut result = RunResult::new(cfg.metrics);
+        result.threshold_ms = minos.elysium_threshold_ms;
         MinosWorld {
             cfg,
             runtime,
             bench_warm,
             platform,
             queue: InvocationQueue::new(),
-            result: RunResult {
-                threshold_ms: minos.elysium_threshold_ms,
-                ..Default::default()
-            },
+            result,
             rng_workload,
             online,
             live_minos: minos.clone(),
@@ -551,13 +550,20 @@ mod tests {
 
     #[test]
     fn event_enum_stays_small() {
-        // The heap copies every event on push and pop; the per-invocation
+        // The queue copies every event on push and pop; the per-invocation
         // payloads are boxed precisely to keep this at or under 64 bytes
         // (it was 104 with FinishRecord carried inline).
         assert!(
             std::mem::size_of::<Event>() <= 64,
             "hot Event enum grew to {} bytes",
             std::mem::size_of::<Event>()
+        );
+        // The full queue entry (time + seq + event) must stay within 80
+        // bytes so the two-tier queue's bucket `Vec`s stay cache-friendly.
+        assert!(
+            crate::sim::event::entry_bytes::<Event>() <= 80,
+            "queue entry grew to {} bytes",
+            crate::sim::event::entry_bytes::<Event>()
         );
     }
 

@@ -37,8 +37,11 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["real", "verbose", "synth", "paired"])
-        .map_err(|e| anyhow::anyhow!(e))?;
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["real", "verbose", "synth", "paired", "full-records"],
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "week" => cmd_week(&args),
@@ -72,7 +75,7 @@ COMMANDS:
   openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R]
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
-             [--regions N --spill F --threads T --paired]
+             [--regions N --spill F --threads T --paired --full-records]
 
 REPLAY MODES:
   default    each function replays on its own isolated platform
@@ -82,6 +85,13 @@ REPLAY MODES:
              node pool. With --synth, functions are spread over N home
              regions and --spill F (default 0.1) of traffic roams.
   --paired   per-function Minos-vs-baseline improvement figures
+
+METRICS:
+  replay and sweep record through O(1)-memory streaming sinks (Welford +
+  P2 quantiles + latency histogram + windowed cost totals), so resident
+  memory stays constant per invocation on million-invocation traces.
+  --full-records (replay) restores the exact per-record vectors for
+  figure extraction. The sink never changes a run's physics.
 
 THREADS:
   --threads T   fan independent runs (paired conditions, week days,
@@ -188,6 +198,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let mut cfg = ExperimentConfig::paper_day(day);
         cfg.seed = seed;
         cfg.elysium_percentile = pcts[i];
+        // The sweep table only reads aggregates: stream, don't store.
+        cfg.metrics = minos::experiment::MetricsMode::Streaming;
         runner::run_paired(&cfg, None)
     })?;
     println!(
@@ -319,6 +331,13 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let registry = FunctionRegistry::demo(n_functions);
     let mut cfg = ExperimentConfig::paper_day(day);
     cfg.seed = seed;
+    // Replays default to the O(1)-memory streaming sink; --full-records
+    // restores the per-record vectors (needed only for figure extraction).
+    cfg.metrics = if args.flag("full-records") {
+        minos::experiment::MetricsMode::Full
+    } else {
+        minos::experiment::MetricsMode::Streaming
+    };
 
     if cluster_mode {
         println!(

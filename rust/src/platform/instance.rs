@@ -6,8 +6,31 @@ use crate::sim::SimTime;
 use super::node::NodeId;
 
 /// Platform-unique instance identifier.
+///
+/// Scheduler-issued ids pack a slab slot index (low 32 bits) and the
+/// slot's reuse generation (high 32 bits): terminated slots are recycled
+/// by the instance table, but the generation keeps every id ever handed
+/// out globally unique, and a stale id is caught (panics) instead of
+/// silently aliasing the slot's new tenant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct InstanceId(pub u64);
+
+impl InstanceId {
+    /// Pack a slab slot index with its reuse generation.
+    pub(crate) fn from_parts(slot: u32, generation: u32) -> InstanceId {
+        InstanceId(((generation as u64) << 32) | slot as u64)
+    }
+
+    /// The slab slot this id addresses.
+    pub(crate) fn slot(self) -> usize {
+        self.0 as u32 as usize
+    }
+
+    /// The slot generation this id was issued under.
+    pub(crate) fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
 
 /// Identifier of a *deployment* (one function's fleet) within a platform.
 ///
@@ -145,6 +168,16 @@ mod tests {
             Instance::new(InstanceId(1), NodeId(0), DeployId::SOLO, 1.0, 500.0, SimTime::ZERO);
         assert!(!i.lifetime_expired(SimTime::from_ms(499.0)));
         assert!(i.lifetime_expired(SimTime::from_ms(500.0)));
+    }
+
+    #[test]
+    fn id_packs_slot_and_generation() {
+        let id = InstanceId::from_parts(7, 3);
+        assert_eq!(id.slot(), 7);
+        assert_eq!(id.generation(), 3);
+        // Same slot, later generation: a different id.
+        assert_ne!(id, InstanceId::from_parts(7, 4));
+        assert_eq!(InstanceId::from_parts(0, 0).0, 0);
     }
 
     #[test]

@@ -135,10 +135,10 @@ impl FaasPlatform {
     /// co-located deployments contend on the same machines (and the same
     /// node speed factors); only the warm pool is per deployment.
     pub fn place_deploy(&mut self, deploy: DeployId, now: SimTime) -> Placement {
-        self.expired += self
-            .scheduler
-            .expire_idle(now, self.cfg.idle_timeout_ms)
-            .len() as u64;
+        // Allocation-free: the scheduler walks only the expired prefix of
+        // each warm pool and returns a count (§Perf — this sweep runs on
+        // every placement).
+        self.expired += self.scheduler.expire_idle(now, self.cfg.idle_timeout_ms);
 
         if let Some(id) = self.scheduler.take_warm(deploy, now, &mut self.recycled) {
             self.warm_hits += 1;
@@ -204,8 +204,7 @@ impl FaasPlatform {
     /// (used to verify the Minos filtering effect in tests).
     pub fn live_instance_factors(&self) -> Vec<f64> {
         self.scheduler
-            .instances
-            .values()
+            .iter_instances()
             .filter(|i| i.is_live() && i.state != InstanceState::Starting)
             .map(|i| self.nodes[i.node.0 as usize].factor_nominal() * i.offset)
             .collect()

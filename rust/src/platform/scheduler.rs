@@ -7,8 +7,26 @@
 //! (uniform over the pool — the lottery Minos plays). Warm pools are keyed
 //! by [`DeployId`]: a platform hosts many functions whose instances share
 //! the node pool but are never handed to another function.
-
-use std::collections::{BTreeMap, HashMap};
+//!
+//! §Perf — storage layout. The instance table is a slab: a `Vec<Slot>`
+//! indexed directly by the low bits of a dense [`InstanceId`], with a
+//! free-list recycling terminated slots (generation-tagged, so stale ids
+//! are caught, and resident memory is O(max concurrently live), not
+//! O(instances ever created)). Warm pools are intrusive doubly-linked
+//! lists threaded through the slots (oldest at the head, MRU at the
+//! tail), which makes every pool operation O(1):
+//!
+//! - `take_warm` detaches the tail;
+//! - `release` appends at the tail;
+//! - `terminate` unlinks from the middle without disturbing MRU order
+//!   (the old `Vec` pool paid an O(pool) `retain` scan here);
+//! - `expire_idle` walks each pool from its head and stops at the first
+//!   survivor — pools are ordered by idle-since time (the virtual clock
+//!   is monotone), so the expired entries are exactly a prefix. The old
+//!   implementation re-scanned every warm instance on every placement.
+//!
+//! `live` and `warm_total` are maintained incrementally and cross-checked
+//! against full-table scans in debug builds.
 
 use crate::sim::SimTime;
 use crate::util::prng::Rng;
@@ -16,21 +34,55 @@ use crate::util::prng::Rng;
 use super::instance::{DeployId, Instance, InstanceId, InstanceState};
 use super::node::NodeId;
 
+/// Null link / empty-pool sentinel for the intrusive lists.
+const NIL: u32 = u32::MAX;
+
+/// One slab slot: the instance plus its intrusive warm-pool links.
+#[derive(Debug)]
+struct Slot {
+    inst: Instance,
+    /// Bumped when the slot is reused; ids carry the generation they were
+    /// issued under (see [`InstanceId`]).
+    generation: u32,
+    /// Warm-pool neighbors (slot indices), `NIL` at the ends.
+    prev: u32,
+    next: u32,
+    /// Whether this slot is currently linked into a warm pool.
+    in_pool: bool,
+}
+
+/// One deployment's warm pool: list ends plus an O(1) length.
+#[derive(Debug, Clone)]
+struct Pool {
+    /// Oldest idle instance (first to expire).
+    head: u32,
+    /// Most recently used instance (first to be handed out).
+    tail: u32,
+    len: usize,
+}
+
+impl Default for Pool {
+    fn default() -> Pool {
+        Pool { head: NIL, tail: NIL, len: 0 }
+    }
+}
+
 /// Warm-pool and instance-table bookkeeping.
 #[derive(Debug, Default)]
 pub struct Scheduler {
-    /// All instances ever created (terminated ones stay for metrics).
-    pub instances: HashMap<InstanceId, Instance>,
-    /// Idle instances per deployment, ordered oldest→newest by when they
-    /// became idle (placement pops from the back = MRU). A `BTreeMap`
-    /// keeps cross-deployment iteration (idle expiry) deterministic.
-    warm: BTreeMap<DeployId, Vec<InstanceId>>,
-    next_id: u64,
+    /// The instance slab; slot index = `InstanceId::slot()`.
+    slots: Vec<Slot>,
+    /// Slots of terminated instances, available for reuse (LIFO).
+    free: Vec<u32>,
+    /// Per-deployment warm pools, indexed by `DeployId.0` (deployment ids
+    /// are dense). Iteration order = deployment-id order, which keeps
+    /// cross-deployment idle expiry deterministic.
+    warm: Vec<Pool>,
     /// Live (non-terminated) instance count, maintained incrementally —
-    /// `place()` consults it on every call, so it must be O(1) (§Perf:
-    /// the original `values().filter(is_live).count()` scan was the top
-    /// cost in the placement hot path).
+    /// `place()` consults it on every call, so it must be O(1).
     live: usize,
+    /// Idle warm instances across all pools, maintained incrementally.
+    warm_total: usize,
 }
 
 impl Scheduler {
@@ -38,24 +90,63 @@ impl Scheduler {
         Self::default()
     }
 
-    /// Number of idle warm instances across all deployments.
+    /// Number of idle warm instances across all deployments. O(1).
     pub fn warm_count(&self) -> usize {
-        self.warm.values().map(Vec::len).sum()
+        debug_assert_eq!(
+            self.warm_total,
+            self.warm.iter().map(|p| p.len).sum::<usize>(),
+            "warm counter drifted"
+        );
+        self.warm_total
     }
 
-    /// Number of idle warm instances of one deployment.
+    /// Number of idle warm instances of one deployment. O(1).
     pub fn warm_count_for(&self, deploy: DeployId) -> usize {
-        self.warm.get(&deploy).map_or(0, Vec::len)
+        self.warm.get(deploy.0 as usize).map_or(0, |p| p.len)
     }
 
     /// Number of live (non-terminated) instances. O(1).
     pub fn live_count(&self) -> usize {
         debug_assert_eq!(
             self.live,
-            self.instances.values().filter(|i| i.is_live()).count(),
+            self.slots.iter().filter(|s| s.inst.is_live()).count(),
             "live counter drifted"
         );
         self.live
+    }
+
+    /// Resolve an id to its slot, rejecting stale ids whose slot has been
+    /// recycled for a newer instance.
+    fn index_of(&self, id: InstanceId) -> usize {
+        let s = id.slot();
+        let slot = self.slots.get(s).expect("instance exists");
+        assert_eq!(
+            slot.generation,
+            id.generation(),
+            "stale {id:?}: slot reused by a newer instance"
+        );
+        s
+    }
+
+    /// Unlink slot `s` from `pool` in O(1), preserving the order of the
+    /// remaining entries. Does not touch `warm_total`.
+    fn unlink(slots: &mut [Slot], pool: &mut Pool, s: usize) {
+        debug_assert!(slots[s].in_pool);
+        let (prev, next) = (slots[s].prev, slots[s].next);
+        if prev == NIL {
+            pool.head = next;
+        } else {
+            slots[prev as usize].next = next;
+        }
+        if next == NIL {
+            pool.tail = prev;
+        } else {
+            slots[next as usize].prev = prev;
+        }
+        slots[s].prev = NIL;
+        slots[s].next = NIL;
+        slots[s].in_pool = false;
+        pool.len -= 1;
     }
 
     /// Take the most-recently-used warm instance of `deploy`, marking it
@@ -67,25 +158,31 @@ impl Scheduler {
         now: SimTime,
         recycled: &mut u64,
     ) -> Option<InstanceId> {
-        let pool = self.warm.get_mut(&deploy)?;
-        while let Some(id) = pool.pop() {
-            let inst = self.instances.get_mut(&id).expect("warm id in table");
+        let Scheduler { slots, free, warm, live, warm_total } = self;
+        let pool = warm.get_mut(deploy.0 as usize)?;
+        while pool.tail != NIL {
+            let s = pool.tail as usize;
+            Self::unlink(slots, pool, s);
+            *warm_total -= 1;
+            let inst = &mut slots[s].inst;
             debug_assert_eq!(inst.state, InstanceState::Idle);
             debug_assert_eq!(inst.deploy, deploy, "warm pool holds foreign instance");
             if inst.lifetime_expired(now) {
                 inst.state = InstanceState::Terminated;
-                self.live -= 1;
+                *live -= 1;
+                free.push(s as u32);
                 *recycled += 1;
                 continue;
             }
             inst.state = InstanceState::Busy;
             inst.last_used = now;
-            return Some(id);
+            return Some(inst.id);
         }
         None
     }
 
-    /// Create a new (cold-starting) instance of `deploy` on `node`.
+    /// Create a new (cold-starting) instance of `deploy` on `node`,
+    /// reusing a terminated slot when one is free.
     pub fn create_instance(
         &mut self,
         node: NodeId,
@@ -94,12 +191,30 @@ impl Scheduler {
         max_lifetime_ms: f64,
         now: SimTime,
     ) -> InstanceId {
-        self.next_id += 1;
         self.live += 1;
-        let id = InstanceId(self.next_id);
-        self.instances
-            .insert(id, Instance::new(id, node, deploy, offset, max_lifetime_ms, now));
-        id
+        match self.free.pop() {
+            Some(s) => {
+                let slot = &mut self.slots[s as usize];
+                debug_assert!(!slot.inst.is_live(), "free list held a live instance");
+                debug_assert!(!slot.in_pool, "free slot still linked in a pool");
+                slot.generation += 1;
+                let id = InstanceId::from_parts(s, slot.generation);
+                slot.inst = Instance::new(id, node, deploy, offset, max_lifetime_ms, now);
+                id
+            }
+            None => {
+                let s = self.slots.len() as u32;
+                let id = InstanceId::from_parts(s, 0);
+                self.slots.push(Slot {
+                    inst: Instance::new(id, node, deploy, offset, max_lifetime_ms, now),
+                    generation: 0,
+                    prev: NIL,
+                    next: NIL,
+                    in_pool: false,
+                });
+                id
+            }
+        }
     }
 
     /// Pick a node for a new instance: uniform over the pool.
@@ -109,65 +224,130 @@ impl Scheduler {
 
     /// Cold start finished: the instance begins serving.
     pub fn mark_running(&mut self, id: InstanceId) {
-        let inst = self.instances.get_mut(&id).expect("instance exists");
+        let inst = self.get_mut(id);
         debug_assert_eq!(inst.state, InstanceState::Starting);
         inst.state = InstanceState::Busy;
     }
 
-    /// Invocation finished: instance returns to its deployment's warm pool.
+    /// Invocation finished: instance returns to its deployment's warm pool
+    /// (appended at the MRU tail).
     pub fn release(&mut self, id: InstanceId, now: SimTime) {
-        let inst = self.instances.get_mut(&id).expect("instance exists");
-        debug_assert_eq!(inst.state, InstanceState::Busy);
-        inst.state = InstanceState::Idle;
-        inst.last_used = now;
-        inst.invocations_served += 1;
-        let deploy = inst.deploy;
-        let pool = self.warm.entry(deploy).or_default();
-        debug_assert!(!pool.contains(&id), "double release of {id:?}");
-        pool.push(id);
+        let s = self.index_of(id);
+        let deploy = self.slots[s].inst.deploy.0 as usize;
+        if deploy >= self.warm.len() {
+            self.warm.resize(deploy + 1, Pool::default());
+        }
+        let Scheduler { slots, warm, warm_total, .. } = self;
+        {
+            let inst = &mut slots[s].inst;
+            debug_assert_eq!(inst.state, InstanceState::Busy);
+            inst.state = InstanceState::Idle;
+            inst.last_used = now;
+            inst.invocations_served += 1;
+        }
+        debug_assert!(!slots[s].in_pool, "double release of {id:?}");
+        let pool = &mut warm[deploy];
+        // Pools stay ordered by idle-since time: the virtual clock is
+        // monotone, so appending keeps `head..tail` ascending — which is
+        // what lets `expire_idle` stop at the first survivor.
+        debug_assert!(
+            pool.tail == NIL || slots[pool.tail as usize].inst.last_used <= now,
+            "release out of clock order breaks the pool's expiry invariant"
+        );
+        let tail = pool.tail;
+        slots[s].prev = tail;
+        slots[s].next = NIL;
+        slots[s].in_pool = true;
+        if tail == NIL {
+            pool.head = s as u32;
+        } else {
+            slots[tail as usize].next = s as u32;
+        }
+        pool.tail = s as u32;
+        pool.len += 1;
+        *warm_total += 1;
     }
 
     /// Instance gone (Minos crash or platform reclaim while busy/starting).
+    /// Unlinking from the warm pool is O(1) and leaves the MRU order of
+    /// the remaining pool entries untouched.
     pub fn terminate(&mut self, id: InstanceId) {
-        let inst = self.instances.get_mut(&id).expect("instance exists");
-        if inst.is_live() {
-            self.live -= 1;
+        let s = self.index_of(id);
+        let Scheduler { slots, free, warm, live, warm_total } = self;
+        if !slots[s].inst.is_live() {
+            return; // double-terminate: counters and pools already settled
         }
-        inst.state = InstanceState::Terminated;
-        let deploy = inst.deploy;
-        if let Some(pool) = self.warm.get_mut(&deploy) {
-            pool.retain(|&w| w != id);
+        *live -= 1;
+        slots[s].inst.state = InstanceState::Terminated;
+        if slots[s].in_pool {
+            let pool = &mut warm[slots[s].inst.deploy.0 as usize];
+            Self::unlink(slots, pool, s);
+            *warm_total -= 1;
         }
+        free.push(s as u32);
     }
 
     /// Expire warm instances idle longer than `timeout_ms`, across every
-    /// deployment (in deployment-id order, so the returned list is
-    /// deterministic). Returns the expired ids (caller records metrics).
-    pub fn expire_idle(&mut self, now: SimTime, timeout_ms: f64) -> Vec<InstanceId> {
-        let mut expired = Vec::new();
-        let Scheduler { instances, warm, live, .. } = self;
-        for pool in warm.values_mut() {
-            pool.retain(|&id| {
-                let inst = instances.get_mut(&id).expect("warm id in table");
-                if now.ms_since(inst.last_used) >= timeout_ms {
-                    inst.state = InstanceState::Terminated;
-                    *live -= 1;
-                    expired.push(id);
-                    false
-                } else {
-                    true
+    /// deployment (in deployment-id order, so the visit order is
+    /// deterministic). Allocation-free; returns the number expired.
+    pub fn expire_idle(&mut self, now: SimTime, timeout_ms: f64) -> u64 {
+        self.expire_idle_with(now, timeout_ms, |_| {})
+    }
+
+    /// Like [`Scheduler::expire_idle`], but also pushes the expired ids
+    /// (in expiry order) into a caller-owned scratch buffer.
+    pub fn expire_idle_collect(
+        &mut self,
+        now: SimTime,
+        timeout_ms: f64,
+        out: &mut Vec<InstanceId>,
+    ) -> u64 {
+        self.expire_idle_with(now, timeout_ms, |id| out.push(id))
+    }
+
+    fn expire_idle_with(
+        &mut self,
+        now: SimTime,
+        timeout_ms: f64,
+        mut on_expired: impl FnMut(InstanceId),
+    ) -> u64 {
+        let Scheduler { slots, free, warm, live, warm_total } = self;
+        let mut expired = 0u64;
+        for pool in warm.iter_mut() {
+            // Each pool is ordered by idle-since time, so the expired
+            // entries are a prefix: walk from the oldest and stop at the
+            // first survivor.
+            while pool.head != NIL {
+                let s = pool.head as usize;
+                if now.ms_since(slots[s].inst.last_used) < timeout_ms {
+                    break;
                 }
-            });
+                Self::unlink(slots, pool, s);
+                *warm_total -= 1;
+                slots[s].inst.state = InstanceState::Terminated;
+                *live -= 1;
+                free.push(s as u32);
+                expired += 1;
+                on_expired(slots[s].inst.id);
+            }
         }
         expired
     }
 
+    /// All instances currently resident in the slab (live ones plus
+    /// terminated ones whose slot has not been recycled yet).
+    pub fn iter_instances(&self) -> impl Iterator<Item = &Instance> {
+        self.slots.iter().map(|s| &s.inst)
+    }
+
     pub fn get(&self, id: InstanceId) -> &Instance {
-        &self.instances[&id]
+        let s = self.index_of(id);
+        &self.slots[s].inst
     }
 
     pub fn get_mut(&mut self, id: InstanceId) -> &mut Instance {
-        self.instances.get_mut(&id).expect("instance exists")
+        let s = self.index_of(id);
+        &mut self.slots[s].inst
     }
 }
 
@@ -187,6 +367,13 @@ mod tests {
             ids.push(id);
         }
         (s, ids)
+    }
+
+    fn expire_ids(s: &mut Scheduler, now: SimTime, timeout_ms: f64) -> Vec<InstanceId> {
+        let mut out = Vec::new();
+        let n = s.expire_idle_collect(now, timeout_ms, &mut out);
+        assert_eq!(n as usize, out.len());
+        out
     }
 
     #[test]
@@ -236,11 +423,24 @@ mod tests {
     }
 
     #[test]
+    fn terminate_mid_pool_preserves_mru_order() {
+        // Remove the middle of a three-entry pool: the O(1) unlink must
+        // keep the MRU order of the survivors (newest first, then oldest).
+        let (mut s, ids) = sched_with_idle(3);
+        s.terminate(ids[1]);
+        assert_eq!(s.warm_count(), 2);
+        let mut rec = 0;
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(9.0), &mut rec), Some(ids[2]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(9.0), &mut rec), Some(ids[0]));
+        assert_eq!(s.take_warm(SOLO, SimTime::from_ms(9.0), &mut rec), None);
+    }
+
+    #[test]
     fn expire_idle_respects_timeout() {
         let (mut s, ids) = sched_with_idle(3);
         // Instances became idle at t=0,1,2 ms. Timeout 1.5ms at now=3ms
         // expires those idle >= 1.5ms: ids[0] (3ms) and ids[1] (2ms).
-        let expired = s.expire_idle(SimTime::from_ms(3.0), 1.5);
+        let expired = expire_ids(&mut s, SimTime::from_ms(3.0), 1.5);
         assert_eq!(expired, vec![ids[0], ids[1]]);
         assert_eq!(s.warm_count(), 1);
         assert_eq!(s.live_count(), 1);
@@ -256,11 +456,21 @@ mod tests {
             s.release(id, SimTime::from_ms(d as f64));
             ids.push(id);
         }
-        let expired = s.expire_idle(SimTime::from_ms(100.0), 50.0);
+        let expired = expire_ids(&mut s, SimTime::from_ms(100.0), 50.0);
         // All three pools swept, in deployment-id order.
         assert_eq!(expired, ids);
         assert_eq!(s.warm_count(), 0);
         assert_eq!(s.live_count(), 0);
+    }
+
+    #[test]
+    fn expire_idle_count_matches_collect() {
+        let (mut s1, _) = sched_with_idle(4);
+        let (mut s2, _) = sched_with_idle(4);
+        let count = s1.expire_idle(SimTime::from_ms(10.0), 8.0);
+        let ids = expire_ids(&mut s2, SimTime::from_ms(10.0), 8.0);
+        assert_eq!(count as usize, ids.len());
+        assert_eq!(count, 3); // idle at 0,1,2,3 ms; >= 8 ms idle at t=10
     }
 
     #[test]
@@ -334,7 +544,7 @@ mod tests {
         assert_eq!(s.live_count(), 4);
         assert_eq!(s.warm_count(), 4);
         // Expire two via idle timeout (idle since 1 ms, now 100 ms).
-        let expired = s.expire_idle(SimTime::from_ms(100.0), 50.0);
+        let expired = expire_ids(&mut s, SimTime::from_ms(100.0), 50.0);
         assert_eq!(expired.len(), 4);
         // live_count() itself cross-checks the incremental counter against
         // a full table scan in debug builds.
@@ -367,6 +577,48 @@ mod tests {
         assert_eq!(s.take_warm(SOLO, SimTime::from_ms(7.0), &mut rec), Some(ids[1]));
         assert_eq!(s.take_warm(SOLO, SimTime::from_ms(7.0), &mut rec), Some(ids[0]));
         assert_eq!(s.take_warm(SOLO, SimTime::from_ms(7.0), &mut rec), None);
+    }
+
+    #[test]
+    fn slots_recycle_with_fresh_generations() {
+        let mut s = Scheduler::new();
+        let a = s.create_instance(NodeId(0), SOLO, 1.0, 1e9, SimTime::ZERO);
+        s.mark_running(a);
+        s.terminate(a);
+        // The slot is reused, the id is new, memory does not grow.
+        let b = s.create_instance(NodeId(1), SOLO, 1.0, 1e9, SimTime::from_ms(1.0));
+        assert_ne!(a, b);
+        assert_eq!(b.slot(), a.slot());
+        assert_eq!(b.generation(), a.generation() + 1);
+        assert_eq!(s.iter_instances().count(), 1);
+        assert_eq!(s.live_count(), 1);
+        assert_eq!(s.get(b).node, NodeId(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "stale")]
+    fn stale_id_after_slot_reuse_is_rejected() {
+        let mut s = Scheduler::new();
+        let a = s.create_instance(NodeId(0), SOLO, 1.0, 1e9, SimTime::ZERO);
+        s.mark_running(a);
+        s.terminate(a);
+        let _b = s.create_instance(NodeId(1), SOLO, 1.0, 1e9, SimTime::from_ms(1.0));
+        let _ = s.get(a); // a's slot now belongs to b
+    }
+
+    #[test]
+    fn table_memory_is_bounded_by_live_instances() {
+        // Churn many short-lived instances through a small live set: the
+        // slab must stay at the high-water mark, not grow with history.
+        let mut s = Scheduler::new();
+        for round in 0..100u64 {
+            let t = SimTime::from_ms(round as f64);
+            let id = s.create_instance(NodeId(0), SOLO, 1.0, 1e9, t);
+            s.mark_running(id);
+            s.terminate(id);
+        }
+        assert_eq!(s.iter_instances().count(), 1);
+        assert_eq!(s.live_count(), 0);
     }
 
     #[test]

@@ -1,17 +1,66 @@
-//! The event queue: a binary heap ordered by (time, sequence number).
+//! The event queue: a two-tier (time, sequence-number) priority structure.
 //!
 //! The sequence number makes simultaneous events FIFO, which is what keeps
 //! paired Minos/baseline runs deterministic and reproducible across runs.
+//!
+//! §Perf: the original implementation was a single `BinaryHeap`, paying
+//! `O(log n)` comparator calls on every schedule *and* pop. Minos event
+//! streams are overwhelmingly short-horizon — dispatches at `now`,
+//! benchmark crashes a few hundred ms out, finishes a few seconds out —
+//! so the queue is now calendar-queue style:
+//!
+//! - a **near-future bucket ring**: [`RING_BUCKETS`] FIFO `Vec` buckets of
+//!   `2^`[`BUCKET_SHIFT`] µs each (≈ 2 ms buckets, ≈ 8.4 s window). A
+//!   schedule is an append plus one bitmap store; a pop drains the
+//!   earliest non-empty bucket (found by a word-wise bitmap scan) through
+//!   a small sorted `active` list;
+//! - a **far-future heap**: events beyond the ring window (long trace
+//!   gaps, think-time stragglers) spill into the old binary heap and are
+//!   merged back by comparison at pop time.
+//!
+//! The ordering contract is *exactly* the old one — strict (time, seq)
+//! order, FIFO among simultaneous events — property-tested against a
+//! reference heap model in `tests/hotpath_equivalence.rs`.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use super::clock::SimTime;
 
+/// log2 of the bucket width in µs (2^11 µs ≈ 2.05 ms per bucket).
+const BUCKET_SHIFT: u32 = 11;
+/// Number of ring buckets (power of two). Window = `RING_BUCKETS`
+/// buckets ≈ 8.4 s; events farther out spill to the far heap.
+const RING_BUCKETS: usize = 4096;
+/// Occupancy-bitmap words (64 buckets per word).
+const WORDS: usize = RING_BUCKETS / 64;
+/// Sentinel for "no active bucket".
+const NO_BUCKET: u64 = u64::MAX;
+
+/// Size in bytes of one queue entry carrying an event payload `E` — the
+/// unit the ring buckets store by value. Guarded by the worlds'
+/// `event_enum_stays_small` tests to keep buckets cache-friendly.
+pub fn entry_bytes<E>() -> usize {
+    std::mem::size_of::<Entry<E>>()
+}
+
 /// A time-ordered queue of domain events `E`.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
+    /// Near-future FIFO buckets, indexed by `(time >> BUCKET_SHIFT) % RING_BUCKETS`.
+    ring: Vec<Vec<Entry<E>>>,
+    /// One bit per ring bucket: set iff the bucket `Vec` is non-empty.
+    occupied: [u64; WORDS],
+    /// Entries currently in the ring (buckets + active list).
+    ring_len: usize,
+    /// Drain view of the earliest non-empty bucket, sorted *descending*
+    /// by (time, seq) so the next event to pop is `active.last()`.
+    active: Vec<Entry<E>>,
+    /// Absolute bucket number (`time >> BUCKET_SHIFT`) of `active`'s
+    /// entries; `NO_BUCKET` when no bucket is activated.
+    active_bucket: u64,
+    /// Far-future spill (events beyond the ring window at schedule time).
+    far: BinaryHeap<Reverse<Entry<E>>>,
     seq: u64,
     now: SimTime,
     popped: u64,
@@ -51,7 +100,12 @@ impl<E> Default for EventQueue<E> {
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            ring: (0..RING_BUCKETS).map(|_| Vec::new()).collect(),
+            occupied: [0; WORDS],
+            ring_len: 0,
+            active: Vec::new(),
+            active_bucket: NO_BUCKET,
+            far: BinaryHeap::new(),
             seq: 0,
             now: SimTime::ZERO,
             popped: 0,
@@ -74,7 +128,32 @@ impl<E> EventQueue<E> {
         );
         self.seq += 1;
         self.pushed += 1;
-        self.heap.push(Reverse(Entry { time: at, seq: self.seq, event }));
+        let entry = Entry { time: at, seq: self.seq, event };
+        let bucket = at.0 >> BUCKET_SHIFT;
+        if bucket - (self.now.0 >> BUCKET_SHIFT) >= RING_BUCKETS as u64 {
+            self.far.push(Reverse(entry));
+            return;
+        }
+        self.ring_len += 1;
+        if bucket == self.active_bucket {
+            // The bucket is mid-drain: keep `active` sorted (descending,
+            // so the earliest remains at the back). New entries land near
+            // the back — a dispatch scheduled at `now` shifts only the
+            // same-time tail.
+            let key = (entry.time, entry.seq);
+            let pos = self.active.partition_point(|e| (e.time, e.seq) > key);
+            self.active.insert(pos, entry);
+            return;
+        }
+        if self.active_bucket != NO_BUCKET && bucket < self.active_bucket {
+            // An event landed before the activated bucket (possible after
+            // popping a far-heap event): retire the drain view so the
+            // bitmap scan sees both buckets again. Rare.
+            self.retire_active();
+        }
+        let idx = bucket as usize & (RING_BUCKETS - 1);
+        self.ring[idx].push(entry);
+        self.occupied[idx >> 6] |= 1u64 << (idx & 63);
     }
 
     /// Schedule `event` after a delay in milliseconds from now.
@@ -85,7 +164,27 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock. None when drained.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let Reverse(entry) = self.heap.pop()?;
+        if self.active.is_empty() {
+            self.active_bucket = NO_BUCKET;
+            if self.ring_len > 0 {
+                self.activate_next();
+            }
+        }
+        let take_far = match (self.active.last(), self.far.peek()) {
+            (None, None) => return None,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            // `active.last()` is the ring minimum: every other ring
+            // bucket lies in a strictly later bucket window.
+            (Some(r), Some(Reverse(f))) => (f.time, f.seq) < (r.time, r.seq),
+        };
+        let entry = if take_far {
+            let Reverse(e) = self.far.pop().expect("peeked far entry exists");
+            e
+        } else {
+            self.ring_len -= 1;
+            self.active.pop().expect("peeked ring entry exists")
+        };
         debug_assert!(entry.time >= self.now, "time went backwards");
         self.now = entry.time;
         self.popped += 1;
@@ -94,20 +193,83 @@ impl<E> EventQueue<E> {
 
     /// Peek the time of the next event without advancing.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.time)
+        let ring_next = if let Some(e) = self.active.last() {
+            Some(e.time)
+        } else if self.ring_len > 0 {
+            let start = (self.now.0 >> BUCKET_SHIFT) as usize & (RING_BUCKETS - 1);
+            let idx = self.next_occupied(start).expect("ring_len > 0");
+            self.ring[idx].iter().map(|e| e.time).min()
+        } else {
+            None
+        };
+        let far_next = self.far.peek().map(|Reverse(e)| e.time);
+        match (ring_next, far_next) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.ring_len + self.far.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// (pushed, popped) counters — used by throughput benchmarks.
     pub fn counters(&self) -> (u64, u64) {
         (self.pushed, self.popped)
+    }
+
+    /// Move the earliest non-empty ring bucket into the sorted `active`
+    /// drain list. Caller guarantees `ring_len > 0` and `active` empty.
+    fn activate_next(&mut self) {
+        debug_assert!(self.active.is_empty());
+        let start = (self.now.0 >> BUCKET_SHIFT) as usize & (RING_BUCKETS - 1);
+        let idx = self.next_occupied(start).expect("ring_len > 0");
+        self.occupied[idx >> 6] &= !(1u64 << (idx & 63));
+        // Swap so both the bucket's and the drain list's capacity is kept.
+        std::mem::swap(&mut self.active, &mut self.ring[idx]);
+        self.active
+            .sort_unstable_by(|a, b| (b.time, b.seq).cmp(&(a.time, a.seq)));
+        self.active_bucket = self.active[0].time.0 >> BUCKET_SHIFT;
+    }
+
+    /// Put the remaining `active` entries back into their ring bucket
+    /// (they are re-sorted on the next activation) and deactivate.
+    fn retire_active(&mut self) {
+        debug_assert_ne!(self.active_bucket, NO_BUCKET);
+        if !self.active.is_empty() {
+            let idx = self.active_bucket as usize & (RING_BUCKETS - 1);
+            debug_assert!(self.ring[idx].is_empty(), "active bucket left residue");
+            std::mem::swap(&mut self.active, &mut self.ring[idx]);
+            self.occupied[idx >> 6] |= 1u64 << (idx & 63);
+        }
+        self.active_bucket = NO_BUCKET;
+    }
+
+    /// Index of the first occupied bucket at or after `start` in wrapped
+    /// scan order — which is exactly ascending absolute-bucket order,
+    /// since all live entries lie within one ring window of `now`.
+    fn next_occupied(&self, start: usize) -> Option<usize> {
+        let sw = start >> 6;
+        let first = self.occupied[sw] & (!0u64 << (start & 63));
+        if first != 0 {
+            return Some((sw << 6) + first.trailing_zeros() as usize);
+        }
+        for k in 1..WORDS {
+            let i = (sw + k) & (WORDS - 1);
+            let w = self.occupied[i];
+            if w != 0 {
+                return Some((i << 6) + w.trailing_zeros() as usize);
+            }
+        }
+        let wrapped = self.occupied[sw] & !(!0u64 << (start & 63));
+        if wrapped != 0 {
+            return Some((sw << 6) + wrapped.trailing_zeros() as usize);
+        }
+        None
     }
 }
 
@@ -177,5 +339,119 @@ mod tests {
         assert_eq!(q.counters(), (2, 1));
         assert_eq!(q.len(), 1);
         assert!(!q.is_empty());
+    }
+
+    /// The window a ring bucket covers, in ms (used to build cases that
+    /// deliberately cross the ring/heap boundary).
+    const WINDOW_MS: f64 = ((RING_BUCKETS as u64) << BUCKET_SHIFT) as f64 / 1_000.0;
+
+    #[test]
+    fn far_future_events_spill_and_merge_in_order() {
+        let mut q = EventQueue::new();
+        // Far beyond the ring window, then near events, then in-between.
+        q.schedule(SimTime::from_ms(3.0 * WINDOW_MS), "far");
+        q.schedule(SimTime::from_ms(1.0), "near");
+        q.schedule(SimTime::from_ms(1.5 * WINDOW_MS), "mid");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["near", "mid", "far"]);
+        assert_eq!(q.now(), SimTime::from_ms(3.0 * WINDOW_MS));
+    }
+
+    #[test]
+    fn far_and_ring_ties_stay_fifo() {
+        // An event scheduled far (into the heap), then — after the clock
+        // advances — a same-time event scheduled into the ring. FIFO by
+        // sequence number must hold across the two tiers.
+        let mut q = EventQueue::new();
+        let t_far = SimTime::from_ms(2.0 * WINDOW_MS);
+        q.schedule(t_far, 1); // heap (beyond window from t=0)
+        q.schedule(SimTime::from_ms(1.9 * WINDOW_MS), 0);
+        let (_, first) = q.pop().unwrap(); // now ≈ 1.9 windows
+        assert_eq!(first, 0);
+        q.schedule(t_far, 2); // same instant as the heap entry, later seq
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2]);
+    }
+
+    #[test]
+    fn event_before_activated_bucket_still_pops_first() {
+        // Pop at t=0, leaving a bucket at +6 ms activated; then schedule
+        // an event at +2 ms (an earlier bucket). It must pop next.
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::ZERO, "start");
+        q.schedule(SimTime::from_ms(6.0), "late");
+        assert_eq!(q.pop().unwrap().1, "start");
+        assert_eq!(q.peek_time(), Some(SimTime::from_ms(6.0)));
+        q.schedule(SimTime::from_ms(2.0), "early");
+        assert_eq!(q.peek_time(), Some(SimTime::from_ms(2.0)));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["early", "late"]);
+    }
+
+    #[test]
+    fn dispatch_pattern_interleaves_same_time_fifo() {
+        // The hot Minos pattern: pop an event, schedule a follow-up at the
+        // *same* time mid-drain, repeatedly. FIFO must hold throughout.
+        let mut q = EventQueue::new();
+        let t = SimTime::from_ms(7.0);
+        q.schedule(t, 0u32);
+        q.schedule(t, 1);
+        let mut seen = Vec::new();
+        let (_, e) = q.pop().unwrap();
+        seen.push(e);
+        q.schedule(t, 2); // lands in the bucket being drained
+        while let Some((_, e)) = q.pop() {
+            seen.push(e);
+        }
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn ring_wraps_across_many_windows() {
+        // March the clock through several full ring windows.
+        let mut q = EventQueue::new();
+        let step = WINDOW_MS / 3.0;
+        q.schedule(SimTime::ZERO, 0u64);
+        let mut last = SimTime::ZERO;
+        for i in 0..30u64 {
+            let (t, e) = q.pop().unwrap();
+            assert_eq!(e, i);
+            assert!(t >= last, "clock regressed");
+            last = t;
+            if i < 29 {
+                q.schedule_in_ms(step, i + 1);
+            }
+        }
+        assert!(q.is_empty());
+        assert!(q.now() >= SimTime::from_ms(9.0 * WINDOW_MS), "clock must span windows");
+    }
+
+    #[test]
+    fn peek_matches_pop_under_churn() {
+        let mut q = EventQueue::new();
+        let mut s = 0x9E3779B97F4A7C15u64;
+        for i in 0..2_000u64 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let delay = (s >> 33) % 20_000_000; // up to 20 s in µs
+            q.schedule(SimTime(q.now().0 + delay), i);
+            if i % 3 == 0 {
+                let peeked = q.peek_time();
+                let popped = q.pop().map(|(t, _)| t);
+                assert_eq!(peeked, popped);
+            }
+        }
+        let mut last = SimTime::ZERO;
+        while let Some(t) = q.peek_time() {
+            let (pt, _) = q.pop().unwrap();
+            assert_eq!(t, pt);
+            assert!(pt >= last);
+            last = pt;
+        }
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn entry_is_two_words_plus_payload() {
+        assert_eq!(entry_bytes::<u64>(), 24);
     }
 }

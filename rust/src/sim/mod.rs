@@ -5,7 +5,9 @@
 //! has two layers:
 //!
 //! - [`event::EventQueue`] — a monotone (time, FIFO) queue of domain
-//!   events; and
+//!   events, implemented as a two-tier calendar queue (near-future bucket
+//!   ring + far-future heap) so the dense short-horizon event streams
+//!   Minos produces schedule and pop in O(1); and
 //! - [`kernel::Simulation`] — the reusable drive loop: it drains the queue
 //!   and dispatches each event to a [`kernel::World`] implementation,
 //!   enforcing optional stop conditions.

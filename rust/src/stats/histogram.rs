@@ -45,6 +45,31 @@ impl Histogram {
         self.count
     }
 
+    /// Merge another histogram with identical bounds and bucket count
+    /// (exact: same-shape histograms add bucket-wise). Used to pool
+    /// streaming latency distributions across runs.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.lo == other.lo
+                && self.hi == other.hi
+                && self.buckets.len() == other.buckets.len(),
+            "histogram shape mismatch: [{}, {})x{} vs [{}, {})x{}",
+            self.lo,
+            self.hi,
+            self.buckets.len(),
+            other.lo,
+            other.hi,
+            other.buckets.len()
+        );
+        for (b, ob) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += ob;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -129,6 +154,39 @@ mod tests {
         }
         let med = h.quantile(0.5);
         assert!((med - 50.0).abs() < 2.0, "median {med}");
+    }
+
+    #[test]
+    fn merge_is_exact_for_same_shape() {
+        let mut a = Histogram::new(0.0, 100.0, 50);
+        let mut b = Histogram::new(0.0, 100.0, 50);
+        let mut whole = Histogram::new(0.0, 100.0, 50);
+        for i in 0..500 {
+            let x = (i % 100) as f64 + 0.5;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            whole.record(x);
+        }
+        a.record(-1.0);
+        whole.record(-1.0);
+        b.record(1e9);
+        whole.record(1e9);
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        for q in [0.1, 0.5, 0.9] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn merge_rejects_different_shapes() {
+        let mut a = Histogram::new(0.0, 100.0, 50);
+        a.merge(&Histogram::new(0.0, 100.0, 60));
     }
 
     #[test]

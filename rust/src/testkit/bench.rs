@@ -53,6 +53,19 @@ pub fn throughput(t: &Timing, ops_per_rep: u64) -> f64 {
     ops_per_rep as f64 / (t.median_ms / 1e3)
 }
 
+/// The path passed to a bench binary via `--json PATH` (or `--json=PATH`)
+/// on its command line, if any — shared by the bench mains that emit
+/// machine-readable results for `scripts/bench.sh`.
+pub fn json_output_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(p) = args.iter().find_map(|a| a.strip_prefix("--json=")) {
+        return Some(p.to_string());
+    }
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

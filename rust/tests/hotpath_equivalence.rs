@@ -1,0 +1,251 @@
+//! Hot-path refactor safety net: the two-tier event queue, the slab
+//! instance table, and the streaming metrics sink must all be *invisible*
+//! to a simulation's physics.
+//!
+//! Three layers of evidence:
+//!
+//! 1. a property test driving the two-tier [`EventQueue`] and a reference
+//!    `BinaryHeap` model (the pre-refactor implementation, re-stated
+//!    here) through random schedule/pop interleavings, asserting the
+//!    identical (time, seq, event) pop sequence;
+//! 2. streaming-vs-full parity: the same run recorded through both sinks
+//!    yields bit-identical counters and cost totals;
+//! 3. golden fingerprints: `run_paired` on a paper day and a 4-region
+//!    cluster replay are pinned to values stored in
+//!    `tests/golden_fingerprints.txt`. Regenerate with
+//!    `MINOS_WRITE_GOLDEN=1 cargo test --test hotpath_equivalence` on a
+//!    known-good commit; the file then locks future refactors to those
+//!    exact results (the test is skipped, loudly, while the file is
+//!    absent).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use minos::coordinator::MinosConfig;
+use minos::experiment::{cluster::run_cluster, runner, ExperimentConfig, MetricsMode};
+use minos::platform::ClusterConfig;
+use minos::sim::{EventQueue, SimTime};
+use minos::testkit::prop;
+use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::prng::Rng;
+
+#[test]
+fn prop_two_tier_queue_matches_reference_heap() {
+    prop::check(
+        "event-queue-equivalence",
+        |rng| {
+            let n_ops = prop::sized(rng, 600);
+            (rng.next_u64(), n_ops)
+        },
+        |&(seed, n_ops)| {
+            let mut rng = Rng::new(seed);
+            let mut q: EventQueue<u32> = EventQueue::new();
+            // Reference model: the old implementation — a min-heap of
+            // (time_us, seq, event) with a manually threaded sequence
+            // number. Both sides see identical schedule/pop sequences.
+            let mut reference: BinaryHeap<Reverse<(u64, u64, u32)>> = BinaryHeap::new();
+            let mut seq = 0u64;
+            let mut now = 0u64; // µs
+            for i in 0..n_ops as u32 {
+                if reference.is_empty() || rng.chance(0.6) {
+                    // Mix horizons: same-instant, near (in-bucket), ring
+                    // window, and far-heap spill distances.
+                    let delta_us = match rng.below(4) {
+                        0 => 0,
+                        1 => rng.below(4_000) as u64,
+                        2 => rng.below(8_000_000) as u64,
+                        _ => rng.below(120_000_000) as u64,
+                    };
+                    let at = now + delta_us;
+                    seq += 1;
+                    q.schedule(SimTime(at), i);
+                    reference.push(Reverse((at, seq, i)));
+                } else {
+                    let got = q.pop().map(|(t, e)| (t.0, e));
+                    let want = reference.pop().map(|Reverse((t, _, e))| (t, e));
+                    if got != want {
+                        return Err(format!("divergence at op {i}: got {got:?} want {want:?}"));
+                    }
+                    if let Some((t, _)) = got {
+                        now = t;
+                    }
+                }
+            }
+            loop {
+                let got = q.pop().map(|(t, e)| (t.0, e));
+                let want = reference.pop().map(|Reverse((t, _, e))| (t, e));
+                if got != want {
+                    return Err(format!("drain divergence: got {got:?} want {want:?}"));
+                }
+                if got.is_none() {
+                    return Ok(());
+                }
+            }
+        },
+    );
+}
+
+/// The sink only observes: a streaming run's counters and cost totals are
+/// bit-identical to the same run recorded in full.
+#[test]
+fn streaming_sink_matches_full_run_physics() {
+    let mut full_cfg = ExperimentConfig::smoke(1, 7_101);
+    full_cfg.metrics = MetricsMode::Full;
+    let mut stream_cfg = full_cfg.clone();
+    stream_cfg.metrics = MetricsMode::Streaming;
+
+    let minos = MinosConfig {
+        elysium_threshold_ms: 360.0,
+        ..MinosConfig::paper_default()
+    };
+    let full = runner::run_single(&full_cfg, &minos, 0, false, None).unwrap();
+    let stream = runner::run_single(&stream_cfg, &minos, 0, false, None).unwrap();
+
+    assert_eq!(full.successful(), stream.successful());
+    assert_eq!(full.terminations, stream.terminations);
+    assert_eq!(full.forced_passes, stream.forced_passes);
+    assert_eq!(full.cold_starts, stream.cold_starts);
+    assert_eq!(full.warm_hits, stream.warm_hits);
+    assert_eq!(full.expired, stream.expired);
+    assert_eq!(full.recycled, stream.recycled);
+    assert_eq!(full.bench_count(), stream.bench_count());
+    assert_eq!(
+        full.total_cost_usd().to_bits(),
+        stream.total_cost_usd().to_bits(),
+        "sink mode changed the billed stream"
+    );
+    // Aggregates agree within estimator error.
+    let mean_rel = (full.analysis_mean_ms() - stream.analysis_mean_ms()).abs()
+        / full.analysis_mean_ms();
+    assert!(mean_rel < 1e-9, "means diverged: rel {mean_rel}");
+    let p50_rel =
+        (full.latency_p50_ms() - stream.latency_p50_ms()).abs() / full.latency_p50_ms();
+    assert!(p50_rel < 0.10, "latency p50 diverged: rel {p50_rel}");
+    // Streaming kept no per-record state.
+    assert!(stream.records().is_empty());
+    assert!(stream.cost_events().is_empty());
+}
+
+/// Cluster replays under the streaming sink reproduce the full-mode
+/// totals bit-identically (per region and overall).
+#[test]
+fn streaming_cluster_replay_matches_full() {
+    let trace = SynthConfig {
+        n_functions: 3,
+        n_regions: 2,
+        hours: 0.04,
+        total_rate_rps: 3.0,
+        region_spill: 0.2,
+        seed: 99,
+        ..Default::default()
+    }
+    .generate();
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(2);
+    let mut cfg = ExperimentConfig::smoke(1, 4_242);
+    cfg.metrics = MetricsMode::Full;
+    let full = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+    cfg.metrics = MetricsMode::Streaming;
+    let stream = run_cluster(&cfg, &registry, &trace, &cluster, 2).unwrap();
+
+    assert_eq!(full.total_completed(), stream.total_completed());
+    assert_eq!(full.total_terminations(), stream.total_terminations());
+    assert_eq!(
+        full.total_cost_usd().to_bits(),
+        stream.total_cost_usd().to_bits(),
+        "sink mode or thread count changed the cluster replay"
+    );
+    assert_eq!(full.total_events_handled(), stream.total_events_handled());
+    for (a, b) in full.per_region.iter().zip(&stream.per_region) {
+        assert_eq!(a.cold_starts, b.cold_starts);
+        assert_eq!(a.warm_hits, b.warm_hits);
+        assert_eq!(a.crashes, b.crashes);
+        for (fa, fb) in a.per_function.iter().zip(&b.per_function) {
+            assert_eq!(fa.result.successful(), fb.result.successful());
+            assert_eq!(fa.result.terminations, fb.result.terminations);
+            assert_eq!(
+                fa.result.total_cost_usd().to_bits(),
+                fb.result.total_cost_usd().to_bits()
+            );
+        }
+    }
+}
+
+// -- golden fingerprints ----------------------------------------------------
+
+/// A compact, exact fingerprint of a run's physics.
+fn paired_fingerprint() -> String {
+    let mut cfg = ExperimentConfig::paper_day(1);
+    cfg.seed = 0x40B5;
+    let o = runner::run_paired(&cfg, None).unwrap();
+    format!(
+        "paired_day1 successful={}/{} terminations={} threshold_bits={:016x} \
+         cost_bits={:016x}/{:016x}",
+        o.minos.successful(),
+        o.baseline.successful(),
+        o.minos.terminations,
+        o.pretest.threshold_ms.to_bits(),
+        o.minos.total_cost_usd().to_bits(),
+        o.baseline.total_cost_usd().to_bits(),
+    )
+}
+
+fn cluster_fingerprint() -> String {
+    let trace = SynthConfig {
+        n_functions: 6,
+        n_regions: 4,
+        hours: 0.05,
+        total_rate_rps: 6.0,
+        region_spill: 0.15,
+        seed: 4242,
+        ..Default::default()
+    }
+    .generate();
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(4);
+    let cfg = ExperimentConfig::paper_day(0);
+    let o = run_cluster(&cfg, &registry, &trace, &cluster, 0).unwrap();
+    format!(
+        "cluster_4region arrivals={} completed={} terminations={} cost_bits={:016x} \
+         events={}",
+        o.total_arrivals(),
+        o.total_completed(),
+        o.total_terminations(),
+        o.total_cost_usd().to_bits(),
+        o.total_events_handled(),
+    )
+}
+
+/// Pin the paired paper day and the 4-region cluster replay to golden
+/// fingerprints. Until `tests/golden_fingerprints.txt` is generated (run
+/// once with `MINOS_WRITE_GOLDEN=1` on a trusted build), the test still
+/// asserts run-to-run determinism of both fingerprints.
+#[test]
+fn golden_fingerprints_pin_replay_physics() {
+    let golden_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden_fingerprints.txt");
+    let current = format!("{}\n{}\n", paired_fingerprint(), cluster_fingerprint());
+
+    if std::env::var("MINOS_WRITE_GOLDEN").is_ok() {
+        std::fs::write(&golden_path, &current).expect("write golden file");
+        eprintln!("golden fingerprints written to {}", golden_path.display());
+        return;
+    }
+    match std::fs::read_to_string(&golden_path) {
+        Ok(want) => assert_eq!(
+            current, want,
+            "replay physics diverged from the golden fingerprints — if the \
+             change is intentional, regenerate with MINOS_WRITE_GOLDEN=1"
+        ),
+        Err(_) => {
+            // No golden file yet: fall back to run-to-run determinism.
+            eprintln!(
+                "golden_fingerprints.txt missing; checking determinism only. \
+                 Generate it with MINOS_WRITE_GOLDEN=1 cargo test --test \
+                 hotpath_equivalence"
+            );
+            let again = format!("{}\n{}\n", paired_fingerprint(), cluster_fingerprint());
+            assert_eq!(current, again, "fingerprints are not deterministic");
+        }
+    }
+}

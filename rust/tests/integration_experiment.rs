@@ -65,7 +65,7 @@ fn terminated_instances_are_never_reused() {
     assert!(r.terminations > 0, "high-sigma day should terminate some instances");
     assert_eq!(
         r.cold_starts,
-        r.terminations + r.records.iter().filter(|x| x.cold).count() as u64,
+        r.terminations + r.records().iter().filter(|x| x.cold).count() as u64,
         "every cold start either terminated or completed exactly once"
     );
 }
@@ -77,7 +77,7 @@ fn passing_benchmarks_imply_faster_pool() {
     let o = runner::run_paired(&medium(1, 303), None).unwrap();
     let warm = |r: &minos::experiment::metrics::RunResult| {
         let xs: Vec<f64> = r
-            .records
+            .records()
             .iter()
             .filter(|x| !x.cold)
             .map(|x| x.analysis_ms)

@@ -71,7 +71,7 @@ fn full_run_with_real_execution() {
     assert!(outcome.minos.successful() > 30);
     // Every record carries a real prediction, and predictions are plausible
     // temperatures.
-    for rec in outcome.minos.records.iter().chain(&outcome.baseline.records) {
+    for rec in outcome.minos.records().iter().chain(outcome.baseline.records()) {
         let p = rec.prediction.expect("real run must record predictions");
         assert!((-40.0..60.0).contains(&(p as f64)), "prediction {p}");
     }

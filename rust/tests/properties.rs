@@ -261,14 +261,14 @@ fn prop_end_to_end_run_invariants() {
             let r = run_single(&cfg, &minos, 0, false, None)
                 .map_err(|e| e.to_string())?;
             // Unique invocation ids among completions.
-            let mut ids: Vec<u64> = r.records.iter().map(|x| x.inv_id).collect();
+            let mut ids: Vec<u64> = r.records().iter().map(|x| x.inv_id).collect();
             let n = ids.len();
             ids.sort();
             ids.dedup();
             if ids.len() != n {
                 return Err("duplicate completed invocation".into());
             }
-            for rec in &r.records {
+            for rec in r.records() {
                 if rec.attempts > minos.retry_cap + 1 {
                     return Err(format!("attempts {} over cap", rec.attempts));
                 }
@@ -279,11 +279,11 @@ fn prop_end_to_end_run_invariants() {
                     return Err("non-positive durations".into());
                 }
             }
-            if r.cost_events.iter().any(|e| e.usd <= 0.0) {
+            if r.cost_events().iter().any(|e| e.usd <= 0.0) {
                 return Err("non-positive cost event".into());
             }
             let term_events =
-                r.cost_events.iter().filter(|e| e.terminated).count() as u64;
+                r.cost_events().iter().filter(|e| e.terminated).count() as u64;
             if term_events != r.terminations {
                 return Err(format!(
                     "terminated cost events {} != terminations {}",
@@ -304,10 +304,10 @@ fn prop_baseline_never_benchmarks_or_terminates() {
             let cfg = scenarios::quick_config(day, seed, 60.0);
             let r = run_single(&cfg, &MinosConfig::baseline(), 0, false, None)
                 .map_err(|e| e.to_string())?;
-            if r.terminations != 0 || !r.bench_scores.is_empty() {
+            if r.terminations != 0 || !r.bench_scores().is_empty() {
                 return Err("baseline ran Minos machinery".into());
             }
-            if r.records.iter().any(|rec| rec.bench_ms.is_some() || rec.forced) {
+            if r.records().iter().any(|rec| rec.bench_ms.is_some() || rec.forced) {
                 return Err("baseline records carry benchmark state".into());
             }
             Ok(())

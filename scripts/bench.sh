@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Perf-trajectory gate: run the two hot-path benches and write their
+# machine-readable results to the repo root.
+#
+# Usage: scripts/bench.sh
+#
+# Produces:
+#   BENCH_hotpath.json  — microbench medians (ns) + ops/s, incl. the
+#                         end-to-end paired-paper-day request rate
+#   BENCH_cluster.json  — 4-region ≥100k-invocation replay events/s per
+#                         thread count, plus the bit-identity fingerprint
+#
+# Compare the events/s and requests/s numbers against the previous
+# committed BENCH_*.json before overwriting them: the perf acceptance
+# bar for hot-path PRs is ≥1.5x on both end-to-end rates with an
+# unchanged cluster fingerprint (cost_bits_hex / completed /
+# terminations must not move).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo bench --bench hotpath =="
+cargo bench --bench hotpath -- --json "$(pwd)/BENCH_hotpath.json"
+
+echo
+echo "== cargo bench --bench cluster_replay =="
+cargo bench --bench cluster_replay -- --json "$(pwd)/BENCH_cluster.json"
+
+echo
+echo "wrote BENCH_hotpath.json and BENCH_cluster.json"

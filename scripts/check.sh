@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast]
+# Usage: scripts/check.sh [--fast] [--bench]
 #   --fast   skip the release build and the bench compile (debug tests only)
+#   --bench  additionally run scripts/bench.sh (writes BENCH_*.json at the
+#            repo root — the hot-path perf trajectory)
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -12,7 +14,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 FAST=0
-[ "${1:-}" = "--fast" ] && FAST=1
+BENCH=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        --bench) BENCH=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench)" >&2; exit 2 ;;
+    esac
+done
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check
@@ -40,6 +49,11 @@ if command -v pytest >/dev/null 2>&1; then
     pytest -q python/tests || exit 1
 else
     echo "(pytest not available; skipping python/tests)"
+fi
+
+if [ "$BENCH" -eq 1 ]; then
+    echo "== scripts/bench.sh =="
+    scripts/bench.sh
 fi
 
 echo "all checks passed"
