@@ -34,9 +34,8 @@ fn main() -> anyhow::Result<()> {
         fixed.cost_saving_pct()
     );
 
-    // --- online collector (§IV) ----------------------------------------
-    let mut online_cfg = cfg.clone();
-    online_cfg.online_update_every = Some(10);
+    // --- online collector (§IV), via the policy API ---------------------
+    let online_cfg = cfg.clone().with_online_threshold(10);
     let online = runner::run_paired(&online_cfg, None)?;
     println!(
         "online threshold ({} pushes):      analysis {:+.2}%, requests {:+.2}%, \

@@ -5,8 +5,8 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use minos::coordinator::{ElysiumJudge, Verdict};
 use minos::experiment::{config::ExperimentConfig, runner};
+use minos::policy::{FixedThreshold, JudgeCtx, SelectionPolicy, Verdict};
 use minos::runtime::Runtime;
 use minos::workload::weather;
 
@@ -35,13 +35,14 @@ fn main() -> anyhow::Result<()> {
     let b: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
     let bench = rt.exec_benchmark(&a, &b)?;
     let bench_ms = bench.elapsed.as_secs_f64() * 1e3;
-    let judge = ElysiumJudge::new(bench_ms * 1.5); // generous threshold
+    let mut policy = FixedThreshold::new(bench_ms * 1.5); // generous threshold
+    let ctx = JudgeCtx { perf_factor: 1.0, draw: 0.5, retries: 0 };
     println!(
         "cold-start benchmark: checksum {:.1}, {:.2} ms → {}",
         bench.checksum,
         bench_ms,
-        match judge.judge(bench_ms) {
-            Verdict::Pass => "PASS (instance joins the warm pool)",
+        match policy.judge(bench_ms, &ctx) {
+            Verdict::Keep => "KEEP (instance joins the warm pool)",
             Verdict::Terminate => "TERMINATE (re-queue + crash)",
         }
     );

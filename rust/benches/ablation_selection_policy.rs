@@ -17,8 +17,9 @@
 //!
 //! Run: `cargo bench --bench ablation_selection_policy`
 
-use minos::coordinator::{MinosConfig, SelectionPolicy};
+use minos::coordinator::MinosConfig;
 use minos::experiment::{config::ExperimentConfig, runner};
+use minos::policy::PolicySpec;
 use minos::sim::SimTime;
 use minos::stats::descriptive::mean;
 use minos::util::csvio::Csv;
@@ -27,7 +28,9 @@ fn main() {
     let reps = 4u64;
     let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
 
-    let mut eval = |label: &str, make: &dyn Fn(&ExperimentConfig, f64) -> MinosConfig| {
+    // Each condition: a policy spec built from the pre-tested threshold
+    // (None = the baseline arm itself, for the zero row).
+    let mut eval = |label: &str, make: &dyn Fn(&ExperimentConfig, f64) -> Option<PolicySpec>| {
         let mut analysis = Vec::new();
         let mut requests = Vec::new();
         let mut cost = Vec::new();
@@ -36,7 +39,16 @@ fn main() {
             cfg.seed = 0x5E1 + s;
             cfg.vus.horizon = SimTime::from_secs(900.0);
             let pre = runner::run_pretest(&cfg, None).unwrap();
-            let minos_cfg = make(&cfg, pre.threshold_ms);
+            let minos_cfg = match make(&cfg, pre.threshold_ms) {
+                Some(spec) => {
+                    cfg.policy = spec;
+                    MinosConfig {
+                        elysium_threshold_ms: pre.threshold_ms,
+                        ..cfg.minos.clone()
+                    }
+                }
+                None => MinosConfig::baseline(),
+            };
             let treated = runner::run_single(&cfg, &minos_cfg, 0, false, None).unwrap();
             let base =
                 runner::run_single(&cfg, &MinosConfig::baseline(), 2, false, None).unwrap();
@@ -58,28 +70,13 @@ fn main() {
         ));
     };
 
-    eval("baseline", &|_cfg, _th| MinosConfig::baseline());
-    eval("random-kill@0.4", &|cfg, _th| MinosConfig {
-        enabled: true,
-        policy: SelectionPolicy::RandomKill { rate: 0.4 },
-        elysium_threshold_ms: f64::INFINITY,
-        ..cfg.minos.clone()
-    });
-    eval("elysium@P60", &|cfg, th| MinosConfig {
-        enabled: true,
-        policy: SelectionPolicy::Elysium,
-        elysium_threshold_ms: th,
-        ..cfg.minos.clone()
-    });
-    eval("oracle", &|cfg, th| MinosConfig {
-        enabled: true,
+    eval("baseline", &|_cfg, _th| None);
+    eval("random-kill@0.4", &|_cfg, _th| Some(PolicySpec::RandomKill { rate: 0.4 }));
+    eval("elysium@P60", &|_cfg, _th| Some(PolicySpec::Fixed));
+    eval("oracle", &|cfg, th| {
         // Map the pre-tested duration threshold onto a true-factor bound:
         // bench_ms = base_ms / factor  =>  min_factor = base_ms / threshold.
-        policy: SelectionPolicy::OracleFactor {
-            min_factor: cfg.minos.benchmark.base_ms / th,
-        },
-        elysium_threshold_ms: f64::INFINITY,
-        ..cfg.minos.clone()
+        Some(PolicySpec::OracleFactor { min_factor: cfg.minos.benchmark.base_ms / th })
     });
 
     println!(

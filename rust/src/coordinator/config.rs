@@ -5,37 +5,28 @@
 //! during calls" (§II-B). This struct is that configuration; the virtual
 //! users pass it along with every request, exactly like the prototype
 //! passes the threshold as a function parameter (§III-A).
+//!
+//! Which *rule* judges the benchmark is no longer part of this struct: the
+//! selection decision is a [`crate::policy::PolicySpec`] carried by the
+//! experiment config (with per-function overrides in the trace registry),
+//! built into fresh [`crate::policy::SelectionPolicy`] state per run. The
+//! fields here are the mechanism knobs every policy shares: the seed
+//! threshold, the retry cap, the re-queue overhead, and the benchmark
+//! itself.
 
 use super::benchmark::BenchmarkSpec;
-
-/// Which cold-start selection rule the gate applies (paper §II-B plus the
-/// comparison policies the evaluation needs).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum SelectionPolicy {
-    /// The paper's mechanism: local benchmark vs the elysium threshold.
-    Elysium,
-    /// Control: terminate cold starts uniformly at random with this
-    /// probability. Same churn as Elysium at the matched rate but *no
-    /// selection signal* — isolates "selection works" from "restarts
-    /// work" (the ablation DESIGN.md calls out).
-    RandomKill { rate: f64 },
-    /// Upper bound: judge on the *true* performance factor (unobservable
-    /// on a real platform; our simulator knows it). Instances below
-    /// `min_factor` are terminated. This is what a perfect centralized
-    /// scheduler with full information (§V, Ginzburg & Freedman's
-    /// approach) could at best achieve per cold start.
-    OracleFactor { min_factor: f64 },
-}
 
 /// Minos behaviour for one deployed function.
 #[derive(Debug, Clone)]
 pub struct MinosConfig {
     /// Master switch; `false` reproduces the paper's baseline condition
     /// ("exactly the same, except that all components of Minos are
-    /// disabled", §III-A).
+    /// disabled", §III-A) — worlds build the `NeverTerminate` policy
+    /// regardless of the configured spec.
     pub enabled: bool,
     /// Benchmark durations **at or below** this pass (ms). The pre-test
-    /// sets this to the p-th percentile of observed benchmark durations.
+    /// sets this to the p-th percentile of observed benchmark durations;
+    /// threshold policies are seeded from it.
     pub elysium_threshold_ms: f64,
     /// Emergency exit: after this many terminations of the *same*
     /// invocation, skip the benchmark and accept the instance (§II-A).
@@ -45,8 +36,6 @@ pub struct MinosConfig {
     pub requeue_overhead_ms: f64,
     /// The cold-start benchmark.
     pub benchmark: BenchmarkSpec,
-    /// The selection rule (paper mechanism by default).
-    pub policy: SelectionPolicy,
 }
 
 impl MinosConfig {
@@ -61,13 +50,19 @@ impl MinosConfig {
             retry_cap: 5,
             requeue_overhead_ms: 25.0,
             benchmark: BenchmarkSpec::default(),
-            policy: SelectionPolicy::Elysium,
         }
     }
 
     /// The paper's baseline condition.
     pub fn baseline() -> MinosConfig {
         MinosConfig { enabled: false, ..MinosConfig::paper_default() }
+    }
+
+    /// Back-compat constructor: the paper condition with a concrete
+    /// elysium threshold (what pre-test calibration used to write into
+    /// the struct by hand at every call site).
+    pub fn with_threshold(threshold_ms: f64) -> MinosConfig {
+        MinosConfig { elysium_threshold_ms: threshold_ms, ..MinosConfig::paper_default() }
     }
 
     /// Probability that an invocation hits the retry cap, given a
@@ -85,6 +80,13 @@ mod tests {
     fn paper_default_is_enabled_baseline_is_not() {
         assert!(MinosConfig::paper_default().enabled);
         assert!(!MinosConfig::baseline().enabled);
+    }
+
+    #[test]
+    fn with_threshold_seeds_the_gate() {
+        let c = MinosConfig::with_threshold(420.0);
+        assert!(c.enabled);
+        assert_eq!(c.elysium_threshold_ms, 420.0);
     }
 
     #[test]

@@ -2,14 +2,19 @@
 //!
 //! On every invocation the *prepare* step always runs. If the invocation
 //! cold-started a new instance, the benchmark runs in parallel with
-//! prepare; Minos then judges the result against the elysium threshold.
-//! Pass ⇒ continue to the main part (and the instance joins the warm pool
-//! afterwards). Fail ⇒ re-queue the invocation and crash the instance.
-//! The emergency exit (§II-A) bypasses the benchmark entirely when the
-//! invocation has already been re-queued `retry_cap` times.
+//! prepare; the deployment's [`SelectionPolicy`] then judges the result.
+//! Keep ⇒ continue to the main part (and the instance joins the warm pool
+//! afterwards). Terminate ⇒ re-queue the invocation and crash the
+//! instance. The emergency exit (§II-A) bypasses the benchmark entirely
+//! when the invocation has already been re-queued `retry_cap` times; a
+//! policy that does not benchmark at all ([`benchmarks`] is `false` — the
+//! baseline) bypasses the whole gate.
+//!
+//! [`benchmarks`]: SelectionPolicy::benchmarks
 
-use super::config::{MinosConfig, SelectionPolicy};
-use super::elysium::{ElysiumJudge, Verdict};
+use crate::policy::{BenchReport, JudgeCtx, SelectionPolicy, Verdict};
+
+use super::config::MinosConfig;
 use super::queue::Invocation;
 
 /// What the instance does after the cold-start gate.
@@ -31,22 +36,23 @@ pub enum ColdStartDecision {
 /// Decide the fate of a cold-started instance serving `inv`.
 ///
 /// `bench_ms` is the measured benchmark duration, computed lazily — it is
-/// only consumed when Minos is enabled and the emergency exit does not
-/// trigger (every enabled policy runs the benchmark, so comparison
-/// policies pay identical gate costs). `perf_factor` is the instance's
-/// true speed (used by `OracleFactor` only — the simulator knows it, a
-/// real platform would not) and `draw` is a caller-supplied uniform [0,1)
-/// variate (used by `RandomKill` only). When Minos is disabled the
-/// decision is always `Run { forced: false, bench_ms: None }` (the
-/// baseline runs no benchmark at all, §III-A).
+/// only consumed when the policy benchmarks and the emergency exit does
+/// not trigger (every benchmarking policy runs the benchmark, so
+/// comparison policies pay identical gate costs). `perf_factor` is the
+/// instance's true speed (readable by the oracle policy only — the
+/// simulator knows it, a real platform would not) and `draw` is a
+/// caller-supplied uniform [0,1) variate (consumed by the randomized
+/// policies). A non-benchmarking policy (the baseline) always yields
+/// `Run { forced: false, bench_ms: None }` without touching the closure.
 pub fn decide_cold_start(
     cfg: &MinosConfig,
+    policy: &mut dyn SelectionPolicy,
     inv: &Invocation,
     perf_factor: f64,
     draw: f64,
     bench_ms: impl FnOnce() -> f64,
 ) -> ColdStartDecision {
-    if !cfg.enabled {
+    if !policy.benchmarks() {
         return ColdStartDecision::Run { forced: false, bench_ms: None };
     }
     if inv.retries >= cfg.retry_cap {
@@ -55,27 +61,10 @@ pub fn decide_cold_start(
         return ColdStartDecision::Run { forced: true, bench_ms: None };
     }
     let bench = bench_ms();
-    let verdict = match cfg.policy {
-        SelectionPolicy::Elysium => {
-            ElysiumJudge::new(cfg.elysium_threshold_ms).judge(bench)
-        }
-        SelectionPolicy::RandomKill { rate } => {
-            if draw < rate {
-                Verdict::Terminate
-            } else {
-                Verdict::Pass
-            }
-        }
-        SelectionPolicy::OracleFactor { min_factor } => {
-            if perf_factor >= min_factor {
-                Verdict::Pass
-            } else {
-                Verdict::Terminate
-            }
-        }
-    };
-    match verdict {
-        Verdict::Pass => ColdStartDecision::Run { forced: false, bench_ms: Some(bench) },
+    policy.observe(BenchReport { score_ms: bench, warm: false });
+    let ctx = JudgeCtx { perf_factor, draw, retries: inv.retries };
+    match policy.judge(bench, &ctx) {
+        Verdict::Keep => ColdStartDecision::Run { forced: false, bench_ms: Some(bench) },
         Verdict::Terminate => ColdStartDecision::TerminateAndRequeue { bench_ms: bench },
     }
 }
@@ -83,6 +72,7 @@ pub fn decide_cold_start(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::{FixedThreshold, NeverTerminate, OracleFactor, RandomKill};
     use crate::sim::SimTime;
 
     fn inv(retries: u32) -> Invocation {
@@ -96,17 +86,14 @@ mod tests {
         }
     }
 
-    fn cfg(threshold: f64) -> MinosConfig {
-        MinosConfig {
-            elysium_threshold_ms: threshold,
-            ..MinosConfig::paper_default()
-        }
+    fn cfg() -> MinosConfig {
+        MinosConfig::paper_default()
     }
 
     #[test]
-    fn disabled_minos_always_runs_without_benchmark() {
+    fn baseline_policy_always_runs_without_benchmark() {
         let mut called = false;
-        let d = decide_cold_start(&MinosConfig::baseline(), &inv(0), 1.0, 0.5, || {
+        let d = decide_cold_start(&cfg(), &mut NeverTerminate, &inv(0), 1.0, 0.5, || {
             called = true;
             1.0
         });
@@ -116,21 +103,24 @@ mod tests {
 
     #[test]
     fn fast_instance_passes() {
-        let d = decide_cold_start(&cfg(400.0), &inv(0), 1.0, 0.5, || 350.0);
+        let mut p = FixedThreshold::new(400.0);
+        let d = decide_cold_start(&cfg(), &mut p, &inv(0), 1.0, 0.5, || 350.0);
         assert_eq!(d, ColdStartDecision::Run { forced: false, bench_ms: Some(350.0) });
     }
 
     #[test]
     fn slow_instance_terminates() {
-        let d = decide_cold_start(&cfg(400.0), &inv(0), 1.0, 0.5, || 450.0);
+        let mut p = FixedThreshold::new(400.0);
+        let d = decide_cold_start(&cfg(), &mut p, &inv(0), 1.0, 0.5, || 450.0);
         assert_eq!(d, ColdStartDecision::TerminateAndRequeue { bench_ms: 450.0 });
     }
 
     #[test]
     fn emergency_exit_at_cap() {
-        let c = cfg(400.0);
+        let c = cfg();
+        let mut p = FixedThreshold::new(400.0);
         let mut called = false;
-        let d = decide_cold_start(&c, &inv(c.retry_cap), 1.0, 0.5, || {
+        let d = decide_cold_start(&c, &mut p, &inv(c.retry_cap), 1.0, 0.5, || {
             called = true;
             10_000.0
         });
@@ -140,30 +130,29 @@ mod tests {
 
     #[test]
     fn random_kill_uses_draw_not_benchmark() {
-        let mut c = cfg(400.0);
-        c.policy = SelectionPolicy::RandomKill { rate: 0.3 };
+        let mut p = RandomKill::new(0.3);
         // draw below rate: terminate even with a perfect benchmark
-        let d = decide_cold_start(&c, &inv(0), 1.0, 0.1, || 10.0);
+        let d = decide_cold_start(&cfg(), &mut p, &inv(0), 1.0, 0.1, || 10.0);
         assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
         // draw above rate: pass even with a terrible benchmark
-        let d = decide_cold_start(&c, &inv(0), 1.0, 0.9, || 10_000.0);
+        let d = decide_cold_start(&cfg(), &mut p, &inv(0), 1.0, 0.9, || 10_000.0);
         assert!(matches!(d, ColdStartDecision::Run { forced: false, .. }));
     }
 
     #[test]
     fn oracle_judges_on_true_factor() {
-        let mut c = cfg(400.0);
-        c.policy = SelectionPolicy::OracleFactor { min_factor: 1.05 };
-        let d = decide_cold_start(&c, &inv(0), 1.2, 0.5, || 10_000.0);
+        let mut p = OracleFactor::new(1.05);
+        let d = decide_cold_start(&cfg(), &mut p, &inv(0), 1.2, 0.5, || 10_000.0);
         assert!(matches!(d, ColdStartDecision::Run { forced: false, .. }));
-        let d = decide_cold_start(&c, &inv(0), 0.9, 0.5, || 10.0);
+        let d = decide_cold_start(&cfg(), &mut p, &inv(0), 0.9, 0.5, || 10.0);
         assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
     }
 
     #[test]
     fn below_cap_still_judges() {
-        let c = cfg(400.0);
-        let d = decide_cold_start(&c, &inv(c.retry_cap - 1), 1.0, 0.5, || 450.0);
+        let c = cfg();
+        let mut p = FixedThreshold::new(400.0);
+        let d = decide_cold_start(&c, &mut p, &inv(c.retry_cap - 1), 1.0, 0.5, || 450.0);
         assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
     }
 }

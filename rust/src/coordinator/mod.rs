@@ -10,11 +10,15 @@
 //! passed once). A retry cap ("emergency exit", §II-A) marks an invocation
 //! good without benchmarking after too many consecutive terminations.
 //!
+//! The *decision rule* the gate applies (fixed threshold, online
+//! threshold, budgeted, …) is pluggable: see `crate::policy` for the
+//! `SelectionPolicy` trait and its built-ins; [`lifecycle`] orchestrates
+//! benchmark → observe → judge around whichever policy the run built.
+//!
 //! Modules:
 //! - [`config`] — the per-function Minos configuration (stored as part of
 //!   function config; no outside communication during calls, §II-B);
 //! - [`benchmark`] — the cold-start benchmark specification and scoring;
-//! - [`elysium`] — the threshold judge;
 //! - [`queue`] — the invocation queue with re-queue + retry counters;
 //! - [`lifecycle`] — the cold-start decision state machine (Fig. 2);
 //! - [`pretest`] — offline threshold calibration (§II-B-a);
@@ -23,14 +27,12 @@
 
 pub mod benchmark;
 pub mod config;
-pub mod elysium;
 pub mod lifecycle;
 pub mod online;
 pub mod pretest;
 pub mod queue;
 
 pub use benchmark::BenchmarkSpec;
-pub use config::{MinosConfig, SelectionPolicy};
-pub use elysium::{ElysiumJudge, Verdict};
+pub use config::MinosConfig;
 pub use lifecycle::{decide_cold_start, ColdStartDecision};
 pub use queue::{Invocation, InvocationQueue};

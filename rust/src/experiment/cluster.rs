@@ -10,15 +10,21 @@
 //! the one-isolated-platform-per-function shape of
 //! `runner::run_trace` for cluster scenarios.
 //!
-//! Execution plan (both phases deterministic at any thread count):
+//! Execution plan (all phases deterministic at any thread count):
 //!
+//! 0. **Routing** — the configured [`RoutingSpec`] assigns every trace
+//!    record to a region in one admission-time pass (`policy::routing`;
+//!    `TraceRegion` reproduces the trace's own ids bit-identically).
 //! 1. **Pre-tests** — every `(region, function)` deployment calibrates its
 //!    own elysium threshold on that region's platform (paper §II-B-a);
 //!    the pairs are independent, so they fan out over
 //!    `util::parallel::map_indexed`.
 //! 2. **Replay** — one [`RegionWorld`] sub-simulation per region, driven
 //!    by the shared `sim` kernel; regions share nothing, so they also run
-//!    in parallel and merge in region order.
+//!    in parallel and merge in region order. Each deployment owns a boxed
+//!    [`SelectionPolicy`] built from its profile's spec (or the
+//!    experiment default), so online thresholds and every other policy
+//!    work inside cluster replays exactly as in single-deployment runs.
 
 use anyhow::Result;
 
@@ -28,6 +34,7 @@ use crate::coordinator::MinosConfig;
 use crate::platform::{
     ClusterConfig, DeployId, FaasPlatform, InstanceId, Placement, RegionConfig, RegionId,
 };
+use crate::policy::{routing as policy_routing, RoutingSpec, SelectionPolicy};
 use crate::sim::{EventQueue, SimTime, Simulation, World};
 use crate::trace::{FunctionId, FunctionRegistry, Trace, TraceRecord};
 use crate::util::parallel;
@@ -38,8 +45,8 @@ use super::config::ExperimentConfig;
 use super::metrics::RunResult;
 use super::runner::run_pretest;
 use super::world::{
-    gate_and_start, settle_crash, settle_finish, CrashRecord, DeploymentCtx, FinishRecord,
-    StartOutcome,
+    build_policy, gate_and_start, settle_crash, settle_finish, CrashRecord, DeploymentCtx,
+    FinishRecord, RecordPool, StartOutcome,
 };
 
 /// Domain events of a region sub-simulation. `slot` indexes the region's
@@ -71,9 +78,9 @@ struct DeployState {
     queue: InvocationQueue,
     result: RunResult,
     rng: Rng,
-    /// Always `None` in cluster replays (thresholds come from pre-tests);
-    /// present because the shared gate reports benchmark scores to it.
-    online: Option<crate::coordinator::online::OnlineThreshold>,
+    /// This deployment's selection decision (fresh state per replay,
+    /// seeded with the pre-tested threshold) — online policies included.
+    policy: Box<dyn SelectionPolicy>,
     arrivals: usize,
 }
 
@@ -84,6 +91,9 @@ struct RegionWorld<'a> {
     deploys: Vec<DeployState>,
     /// Merged `(time, slot, payload_scale)` arrival schedule, time-sorted.
     schedule: Vec<(SimTime, u32, f64)>,
+    /// Free-list for the boxed event payloads (shared by the region's
+    /// deployments — they interleave on one event queue).
+    pool: RecordPool,
 }
 
 impl RegionWorld<'_> {
@@ -96,16 +106,17 @@ impl RegionWorld<'_> {
         inv: Invocation,
         cold: bool,
     ) {
-        let Self { platform, deploys, .. } = self;
+        let Self { platform, deploys, pool, .. } = self;
         let ds = &mut deploys[slot as usize];
         let outcome = gate_and_start(
             DeploymentCtx {
                 spec: &ds.spec,
                 minos: &ds.live_minos,
+                policy: ds.policy.as_mut(),
                 platform,
                 result: &mut ds.result,
                 rng: &mut ds.rng,
-                online: &mut ds.online,
+                pool,
                 bench_warm: false,
             },
             now,
@@ -175,8 +186,9 @@ impl World for RegionWorld<'_> {
                 self.platform.crash(inst);
                 let ds = &mut self.deploys[slot as usize];
                 settle_crash(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &crash);
+                self.pool.recycle_crash(crash);
                 events.schedule_in_ms(
-                    ds.live_minos.requeue_overhead_ms,
+                    self.deploys[slot as usize].live_minos.requeue_overhead_ms,
                     CEvent::Dispatch { slot },
                 );
             }
@@ -184,7 +196,10 @@ impl World for RegionWorld<'_> {
             CEvent::Finish { slot, inst, rec } => {
                 self.platform.release(inst, now);
                 let ds = &mut self.deploys[slot as usize];
+                // Pushed policy updates arrive between requests (§IV).
+                ds.policy.on_request_complete();
                 settle_finish(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &rec, None);
+                self.pool.recycle_finish(rec);
             }
         }
         Ok(())
@@ -269,7 +284,8 @@ impl ClusterOutcome {
 
 /// Replay a multi-region trace against a cluster. `threads` follows the
 /// crate convention (0 = auto, 1 = sequential); results are bit-identical
-/// at any thread count.
+/// at any thread count. `base.routing` picks the admission-time routing
+/// policy (default: honor the trace's region ids).
 pub fn run_cluster(
     base: &ExperimentConfig,
     registry: &FunctionRegistry,
@@ -287,15 +303,24 @@ pub fn run_cluster(
         trace.n_functions().saturating_sub(1),
         registry.len()
     );
-    anyhow::ensure!(
-        trace.n_regions() <= cluster.len(),
-        "trace routes to region ids up to {} but the cluster defines only {} \
-         regions",
-        trace.n_regions().saturating_sub(1),
-        cluster.len()
-    );
+    if base.routing == RoutingSpec::Trace {
+        // Only trace routing consumes the trace's region ids; the other
+        // policies re-route every record onto the cluster's regions.
+        anyhow::ensure!(
+            trace.n_regions() <= cluster.len(),
+            "trace routes to region ids up to {} but the cluster defines only {} \
+             regions",
+            trace.n_regions().saturating_sub(1),
+            cluster.len()
+        );
+    }
 
-    let by_region = trace.records_by_region(cluster.len());
+    // Phase 0: admission-time routing (one deterministic O(N) pass;
+    // TraceRegion reproduces `records_by_region` exactly).
+    let mut router = base.routing.build();
+    let by_region =
+        policy_routing::route_records(trace.records(), cluster.len(), router.as_mut())
+            .map_err(anyhow::Error::msg)?;
 
     // Deployment tables: the function ids with arrivals per region,
     // ascending (= slot order inside the region world).
@@ -379,6 +404,13 @@ fn run_region(
         slot_of[f.0 as usize] = slot as u32;
         let mut result = RunResult::new(base.metrics);
         result.threshold_ms = live_minos.elysium_threshold_ms;
+        // The deployment's policy: its profile's override, or the
+        // experiment default — seeded with its own pre-tested threshold.
+        let policy = build_policy(
+            profile.policy.unwrap_or(base.policy),
+            &live_minos,
+            profile.elysium_percentile,
+        );
         deploys.push(DeployState {
             function: *f,
             name: profile.name.clone(),
@@ -387,7 +419,7 @@ fn run_region(
             live_minos,
             queue: InvocationQueue::new(),
             rng: root.fork(7_000 + base.day as u64 + slot as u64 * 31),
-            online: None,
+            policy,
             arrivals: 0,
         });
     }
@@ -400,7 +432,13 @@ fn run_region(
         schedule.push((r.t, slot, r.payload_scale));
     }
 
-    let mut sim = Simulation::new(RegionWorld { cfg: base, platform, deploys, schedule });
+    let mut sim = Simulation::new(RegionWorld {
+        cfg: base,
+        platform,
+        deploys,
+        schedule,
+        pool: RecordPool::new(),
+    });
     if let Some(&(t0, _, _)) = sim.world.schedule.first() {
         sim.events.schedule(t0, CEvent::TraceArrival { idx: 0 });
     }
@@ -409,8 +447,9 @@ fn run_region(
     let world = sim.into_world();
 
     let mut per_function = Vec::with_capacity(world.deploys.len());
-    for (ds, (_, pretest)) in world.deploys.into_iter().zip(pretests) {
+    for (mut ds, (_, pretest)) in world.deploys.into_iter().zip(pretests) {
         debug_assert!(ds.queue.conserved(), "invocation conservation violated");
+        ds.result.online_pushes = ds.policy.pushes();
         per_function.push(DeploymentOutcome {
             region: region.id,
             function: ds.function,
@@ -553,6 +592,69 @@ mod tests {
         for f in &r.per_function {
             assert!(f.result.successful() > 0);
         }
+    }
+
+    #[test]
+    fn round_robin_routing_spreads_a_single_region_trace() {
+        // The trace tags everything region 0; round-robin admission must
+        // spread it across all three regions and still complete all of it.
+        let trace = demo_trace(1, 33);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(3);
+        let mut cfg = ExperimentConfig::smoke(0, 71);
+        cfg.routing = RoutingSpec::RoundRobin;
+        let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        assert_eq!(o.total_arrivals(), trace.len());
+        assert_eq!(o.total_completed(), trace.len() as u64);
+        for r in &o.per_region {
+            assert!(r.arrivals() > 0, "region {} got no traffic", r.region_name);
+        }
+    }
+
+    #[test]
+    fn fastest_queue_routing_is_deterministic_across_threads() {
+        let trace = demo_trace(2, 47);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(3);
+        let mut cfg = ExperimentConfig::smoke(1, 72);
+        cfg.routing = RoutingSpec::FastestQueue;
+        let a = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        let b = run_cluster(&cfg, &registry, &trace, &cluster, 8).unwrap();
+        assert_eq!(a.total_completed(), trace.len() as u64);
+        assert_eq!(
+            a.total_cost_usd().to_bits(),
+            b.total_cost_usd().to_bits(),
+            "thread count changed a fastest-queue replay"
+        );
+        // Routing beyond the trace's own region space is the point:
+        // a 2-region trace may use all 3 cluster regions.
+        assert_eq!(a.per_region.len(), 3);
+    }
+
+    #[test]
+    fn online_policy_works_inside_cluster_replays() {
+        // Arrivals spaced past the 10-minute idle timeout: every arrival
+        // cold-starts, so the §IV collector sees a steady report stream
+        // and must publish — the ROADMAP's "online thresholds inside
+        // cluster replays" item.
+        let records: Vec<TraceRecord> = (0..20)
+            .map(|i| TraceRecord {
+                t: SimTime::from_ms(i as f64 * 900_000.0),
+                function: FunctionId(0),
+                region: RegionId(0),
+                payload_scale: 1.0,
+            })
+            .collect();
+        let trace = Trace::from_records(records);
+        let registry = FunctionRegistry::demo(1);
+        let cluster = ClusterConfig::demo(1);
+        let mut cfg = ExperimentConfig::smoke(1, 73);
+        cfg.policy = crate::policy::PolicySpec::Online { update_every: 1 };
+        let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        assert_eq!(o.total_completed(), 20);
+        let pushes: u64 =
+            o.per_region.iter().flat_map(|r| &r.per_function).map(|f| f.result.online_pushes).sum();
+        assert!(pushes > 0, "online collector never published in a cluster replay");
     }
 
     #[test]

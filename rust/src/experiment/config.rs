@@ -5,6 +5,7 @@ use std::sync::Arc;
 use crate::coordinator::MinosConfig;
 use crate::platform::billing::Billing;
 use crate::platform::PlatformConfig;
+use crate::policy::{PolicySpec, RoutingSpec};
 use crate::trace::ReplaySchedule;
 use crate::workload::{FunctionSpec, VirtualUsers};
 
@@ -33,9 +34,15 @@ pub struct ExperimentConfig {
     /// Template for the Minos condition (threshold filled in by pre-test).
     pub minos: MinosConfig,
     pub billing: Billing,
-    /// Enable the online-threshold collector (§IV) instead of the fixed
-    /// pre-tested threshold: (update_every_reports).
-    pub online_update_every: Option<u64>,
+    /// The selection policy (the treated condition's decision rule; the
+    /// baseline arm always runs `NeverTerminate`). Per-function overrides
+    /// in the trace registry take precedence. Replaces the old
+    /// `online_update_every` special case — `PolicySpec::Online` is that
+    /// collector ([`ExperimentConfig::with_online_threshold`]).
+    pub policy: PolicySpec,
+    /// Cross-region routing for cluster replays (admission-time; see
+    /// `policy::routing`).
+    pub routing: RoutingSpec,
     /// Open-loop mode: Poisson arrivals at this rate (requests/s) replace
     /// the closed-loop virtual users. This is the paper's actual
     /// deployment model (§IV "Workload Limitations": Minos requires an
@@ -69,7 +76,8 @@ impl ExperimentConfig {
             function: FunctionSpec::weather(),
             minos: MinosConfig::paper_default(),
             billing: Billing::paper(),
-            online_update_every: None,
+            policy: PolicySpec::Fixed,
+            routing: RoutingSpec::Trace,
             open_loop_rate_rps: None,
             replay: None,
             metrics: MetricsMode::Full,
@@ -82,6 +90,13 @@ impl ExperimentConfig {
         cfg.seed = seed;
         cfg.vus.horizon = crate::sim::SimTime::from_secs(120.0);
         cfg
+    }
+
+    /// Back-compat constructor for the old `online_update_every: Some(n)`
+    /// field: the same configuration, expressed as a policy.
+    pub fn with_online_threshold(mut self, update_every: u64) -> ExperimentConfig {
+        self.policy = PolicySpec::Online { update_every };
+        self
     }
 }
 
@@ -106,6 +121,15 @@ mod tests {
             ExperimentConfig::paper_day(0).seed,
             ExperimentConfig::paper_day(1).seed
         );
+    }
+
+    #[test]
+    fn policy_defaults_to_the_paper_gate() {
+        let c = ExperimentConfig::paper_day(0);
+        assert_eq!(c.policy, PolicySpec::Fixed);
+        assert_eq!(c.routing, RoutingSpec::Trace);
+        let online = c.with_online_threshold(25);
+        assert_eq!(online.policy, PolicySpec::Online { update_every: 25 });
     }
 
     #[test]

@@ -68,8 +68,11 @@ pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<
     // even when the main run replays a trace — and always records in full
     // (threshold calibration needs the raw score vector; the pre-test is
     // short, so memory is not a concern even under streaming main runs).
+    // It also always runs the fixed gate at threshold ∞ (benchmark
+    // everything, terminate nothing), whatever policy the main run uses.
     pretest_cfg.replay = None;
     pretest_cfg.metrics = super::metrics::MetricsMode::Full;
+    pretest_cfg.policy = crate::policy::PolicySpec::Fixed;
     let minos = MinosConfig {
         enabled: true,
         elysium_threshold_ms: f64::INFINITY,
@@ -238,6 +241,11 @@ fn deployment_cfg(base: &ExperimentConfig, profile: &FunctionProfile) -> Experim
     cfg.function = profile.spec.clone();
     cfg.minos = profile.minos.clone();
     cfg.elysium_percentile = profile.elysium_percentile;
+    // Per-function policy override (trace registry) beats the
+    // experiment-wide default.
+    if let Some(policy) = profile.policy {
+        cfg.policy = policy;
+    }
     cfg.open_loop_rate_rps = None;
     cfg.replay = None;
     // Separate deployments get separate platform lotteries.

@@ -7,13 +7,17 @@
 
 use anyhow::Result;
 
+use crate::coordinator::pretest::PretestReport;
+use crate::coordinator::MinosConfig;
+use crate::policy::PolicySpec;
 use crate::sim::SimTime;
 use crate::stats::descriptive::{mean, std_dev};
 use crate::util::csvio::Csv;
 use crate::util::parallel;
 
 use super::config::ExperimentConfig;
-use super::runner::{run_paired, PairedOutcome};
+use super::metrics::RunResult;
+use super::runner::{run_paired, run_pretest, run_single, PairedOutcome};
 
 /// Aggregated outcome of one sweep point.
 #[derive(Debug, Clone)]
@@ -108,6 +112,74 @@ fn aggregate_point(x: f64, outcomes: &[PairedOutcome]) -> SweepPoint {
     }
 }
 
+/// One selection policy's aggregated paired outcome in a policy sweep.
+#[derive(Debug, Clone)]
+pub struct PolicySweepPoint {
+    pub policy: PolicySpec,
+    /// Aggregated deltas (`x` is the policy's index in the swept list).
+    pub stats: SweepPoint,
+}
+
+/// Compare selection policies under one harness (the SeBS argument):
+/// every policy runs `seeds_per_point` paired days against the *same*
+/// baseline arms — same seeds, same platform lotteries — so the deltas
+/// are directly comparable. The pretest and the baseline arm depend only
+/// on the seed, never on the swept policy (the baseline always runs
+/// `NeverTerminate`), so each is simulated once per seed and shared by
+/// every policy instead of re-run inside `run_paired`. All work items
+/// fan out over a thread pool; aggregation is in list order,
+/// bit-identical at any `threads`.
+pub fn policy_sweep(
+    specs: &[PolicySpec],
+    seeds_per_point: u64,
+    horizon_s: f64,
+    threads: usize,
+) -> Result<Vec<PolicySweepPoint>> {
+    anyhow::ensure!(!specs.is_empty(), "policy sweep needs at least one policy");
+    anyhow::ensure!(
+        seeds_per_point > 0,
+        "policy sweep needs at least one seed per point (--reps)"
+    );
+    let seeds = seeds_per_point as usize;
+    // Shared arms: one (pretest, baseline) per seed. Salts match
+    // `run_paired` (minos 0, baseline 2), so each assembled pair is
+    // exactly what `run_paired` would have produced.
+    let bases: Vec<(PretestReport, RunResult)> =
+        parallel::try_map_indexed(seeds, threads, |s| {
+            let cfg = sweep_cfg(s as u64, horizon_s);
+            let pretest = run_pretest(&cfg, None)?;
+            let baseline_cfg = MinosConfig { enabled: false, ..cfg.minos.clone() };
+            let baseline = run_single(&cfg, &baseline_cfg, 2, false, None)?;
+            Ok((pretest, baseline))
+        })?;
+    let n = specs.len() * seeds;
+    let treated: Vec<RunResult> = parallel::try_map_indexed(n, threads, |i| {
+        let s = i % seeds;
+        let mut cfg = sweep_cfg(s as u64, horizon_s);
+        cfg.policy = specs[i / seeds];
+        let minos_cfg = MinosConfig {
+            elysium_threshold_ms: bases[s].0.threshold_ms,
+            ..cfg.minos.clone()
+        };
+        run_single(&cfg, &minos_cfg, 0, false, None)
+    })?;
+    Ok(specs
+        .iter()
+        .enumerate()
+        .map(|(pi, &policy)| {
+            let outcomes: Vec<PairedOutcome> = (0..seeds)
+                .map(|s| PairedOutcome {
+                    day: sweep_cfg(s as u64, horizon_s).day,
+                    pretest: bases[s].0.clone(),
+                    minos: treated[pi * seeds + s].clone(),
+                    baseline: bases[s].1.clone(),
+                })
+                .collect();
+            PolicySweepPoint { policy, stats: aggregate_point(pi as f64, &outcomes) }
+        })
+        .collect())
+}
+
 /// The paper's core premise, quantified: Minos's gain as a function of
 /// platform variability (node-pool sigma). Every other knob at paper
 /// defaults. `threads` follows the crate convention (0 = auto,
@@ -190,6 +262,60 @@ mod tests {
                 "thread count changed a sweep point"
             );
             assert_eq!(a.cost_pct_mean.to_bits(), b.cost_pct_mean.to_bits());
+        }
+    }
+
+    #[test]
+    fn policy_sweep_compares_policies_on_identical_seeds() {
+        let specs = [PolicySpec::Fixed, PolicySpec::NeverTerminate];
+        let pts = policy_sweep(&specs, 2, 90.0, 2).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].policy, PolicySpec::Fixed);
+        assert_eq!(pts[1].policy, PolicySpec::NeverTerminate);
+        // The paper's gate terminates; the no-op policy cannot.
+        assert!(pts[0].stats.termination_rate_mean > 0.0);
+        assert_eq!(pts[1].stats.termination_rate_mean, 0.0);
+        for p in &pts {
+            assert!(p.stats.analysis_pct_mean.is_finite());
+        }
+    }
+
+    #[test]
+    fn policy_sweep_shared_arms_match_run_paired_exactly() {
+        // The shared pretest/baseline optimization must be invisible: a
+        // one-policy, one-seed sweep is bit-identical to run_paired.
+        let pts = policy_sweep(&[PolicySpec::Fixed], 1, 90.0, 1).unwrap();
+        let o = run_paired(&sweep_cfg(0, 90.0), None).unwrap();
+        assert_eq!(
+            pts[0].stats.analysis_pct_mean.to_bits(),
+            o.analysis_improvement_pct().to_bits()
+        );
+        assert_eq!(
+            pts[0].stats.cost_pct_mean.to_bits(),
+            o.cost_saving_pct().to_bits()
+        );
+        assert_eq!(pts[0].stats.termination_rate_mean, o.minos.termination_rate());
+    }
+
+    #[test]
+    fn policy_sweep_rejects_empty_inputs() {
+        assert!(policy_sweep(&[], 2, 60.0, 1).is_err());
+        assert!(policy_sweep(&[PolicySpec::Fixed], 0, 60.0, 1).is_err());
+    }
+
+    #[test]
+    fn policy_sweep_is_deterministic_across_threads() {
+        let specs = [PolicySpec::Fixed, PolicySpec::Budgeted { max_rate: 0.1 }];
+        let a = policy_sweep(&specs, 2, 90.0, 1).unwrap();
+        let b = policy_sweep(&specs, 2, 90.0, 8).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.policy, y.policy);
+            assert_eq!(
+                x.stats.analysis_pct_mean.to_bits(),
+                y.stats.analysis_pct_mean.to_bits(),
+                "thread count changed a policy-sweep point"
+            );
+            assert_eq!(x.stats.cost_pct_mean.to_bits(), y.stats.cost_pct_mean.to_bits());
         }
     }
 

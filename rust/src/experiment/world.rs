@@ -3,12 +3,18 @@
 //!
 //! This is the domain half of what used to be one 850-line event loop in
 //! `runner.rs`: virtual users → invocation queue → platform placement →
-//! Minos cold-start gate → function execution → billing (paper Figs. 1
-//! and 2). The kernel half (queue draining, clock, stop conditions) lives
-//! in `sim::kernel`; the cold-start gate itself ([`gate_and_start`]) is
+//! cold-start gate → function execution → billing (paper Figs. 1 and 2).
+//! The kernel half (queue draining, clock, stop conditions) lives in
+//! `sim::kernel`; the cold-start gate itself ([`gate_and_start`]) is
 //! shared with the multi-function shared-node world in
-//! `experiment::cluster`, so both worlds enforce identical Minos
-//! semantics.
+//! `experiment::cluster`, so both worlds enforce identical semantics.
+//!
+//! *Which* instances the gate keeps is not decided here: every deployment
+//! owns a boxed [`SelectionPolicy`] (built from the config's
+//! [`PolicySpec`](crate::policy::PolicySpec) per run) and the gate only
+//! orchestrates benchmark → `observe` → `judge`. The world tells the
+//! policy when a request completes ([`SelectionPolicy::on_request_complete`])
+//! — the moment online-threshold pushes take effect (§IV).
 //!
 //! Timeline of one invocation attempt on an instance (times relative to
 //! when the instance starts serving it):
@@ -24,6 +30,12 @@
 //!                 [ prepare ][ analysis ][ overhead ]
 //! ```
 //!
+//! §Perf — the bulky per-invocation payloads ([`FinishRecord`],
+//! [`CrashRecord`]) ride the event queue boxed (keeps `Event` ≤ 64 bytes)
+//! and the boxes themselves are recycled through a [`RecordPool`]
+//! free-list, so the steady-state hot path allocates nothing per
+//! invocation.
+//!
 //! When a [`Runtime`] is supplied, every completed invocation *really*
 //! executes the weather-regression HLO artifact through PJRT and the
 //! prediction is verified against the Rust OLS oracle — the simulator
@@ -32,10 +44,10 @@
 use anyhow::Result;
 
 use crate::coordinator::lifecycle::{decide_cold_start, ColdStartDecision};
-use crate::coordinator::online::OnlineThreshold;
 use crate::coordinator::queue::{Invocation, InvocationQueue};
 use crate::coordinator::MinosConfig;
 use crate::platform::{DeployId, FaasPlatform, InstanceId, Placement};
+use crate::policy::{BenchReport, PolicyInit, SelectionPolicy};
 use crate::runtime::Runtime;
 use crate::sim::{EventQueue, SimTime, World};
 use crate::util::prng::Rng;
@@ -65,7 +77,7 @@ pub(crate) enum Event {
     Dispatch,
     /// A cold start finished; the instance begins serving `inv`.
     ColdReady { inst: InstanceId, inv: Invocation },
-    /// A Minos-terminated instance crashes after its benchmark; the
+    /// A policy-terminated instance crashes after its benchmark; the
     /// invocation re-enters the queue.
     CrashRequeue { inst: InstanceId, crash: Box<CrashRecord> },
     /// An invocation completed successfully.
@@ -92,32 +104,97 @@ pub(crate) struct FinishRecord {
     pub bench_ms: Option<f64>,
 }
 
+/// Free-list of spent event-payload boxes (ROADMAP: the last 2
+/// allocations per invocation on the hot path). The gate takes boxes
+/// from here; the world returns them after settling the event. Both
+/// record types are heap-flat, so re-initializing a recycled box is a
+/// plain store. Capped so a burst cannot pin unbounded memory.
+#[derive(Debug, Default)]
+pub(crate) struct RecordPool {
+    finish: Vec<Box<FinishRecord>>,
+    crash: Vec<Box<CrashRecord>>,
+}
+
+/// Retained spent boxes per record kind; beyond this they fall back to
+/// the allocator. 4096 covers every in-flight event the bucket ring
+/// sizes for.
+const RECORD_POOL_CAP: usize = 4_096;
+
+impl RecordPool {
+    pub fn new() -> RecordPool {
+        RecordPool::default()
+    }
+
+    /// Box a finish payload, reusing a spent box when one is free.
+    pub fn alloc_finish(&mut self, rec: FinishRecord) -> Box<FinishRecord> {
+        match self.finish.pop() {
+            Some(mut b) => {
+                *b = rec;
+                b
+            }
+            None => Box::new(rec),
+        }
+    }
+
+    /// Box a crash payload, reusing a spent box when one is free.
+    pub fn alloc_crash(&mut self, rec: CrashRecord) -> Box<CrashRecord> {
+        match self.crash.pop() {
+            Some(mut b) => {
+                *b = rec;
+                b
+            }
+            None => Box::new(rec),
+        }
+    }
+
+    /// Return a settled finish box to the free-list.
+    pub fn recycle_finish(&mut self, b: Box<FinishRecord>) {
+        if self.finish.len() < RECORD_POOL_CAP {
+            self.finish.push(b);
+        }
+    }
+
+    /// Return a settled crash box to the free-list.
+    pub fn recycle_crash(&mut self, b: Box<CrashRecord>) {
+        if self.crash.len() < RECORD_POOL_CAP {
+            self.crash.push(b);
+        }
+    }
+
+    /// Boxes currently pooled (test hook).
+    #[cfg(test)]
+    pub fn pooled(&self) -> (usize, usize) {
+        (self.finish.len(), self.crash.len())
+    }
+}
+
 /// Disjoint borrows of one deployment's state, as [`gate_and_start`]
 /// needs them. Both worlds (single-deployment, shared-node region) call
-/// the gate through this bundle so the Minos semantics — RNG draw order
+/// the gate through this bundle so the semantics — RNG draw order
 /// included — are identical.
 pub(crate) struct DeploymentCtx<'a> {
     pub spec: &'a FunctionSpec,
     pub minos: &'a MinosConfig,
+    pub policy: &'a mut dyn SelectionPolicy,
     pub platform: &'a mut FaasPlatform,
     pub result: &'a mut RunResult,
     pub rng: &'a mut Rng,
-    pub online: &'a mut Option<OnlineThreshold>,
+    pub pool: &'a mut RecordPool,
     pub bench_warm: bool,
 }
 
 /// What an instance does after the cold-start gate, as schedulable facts.
 pub(crate) enum StartOutcome {
-    /// Minos terminated the instance: crash at `at`, re-queue the carried
-    /// invocation.
+    /// The policy terminated the instance: crash at `at`, re-queue the
+    /// carried invocation.
     Terminate { at: SimTime, crash: Box<CrashRecord> },
     /// The invocation runs to completion at `at`.
     Complete { at: SimTime, rec: Box<FinishRecord> },
 }
 
 /// An instance begins serving an invocation (paper Fig. 2's flow): sample
-/// the phase durations, run the cold-start gate (benchmark + elysium
-/// judge) when `cold`, and decide when and how the attempt ends.
+/// the phase durations, run the cold-start gate (benchmark + policy
+/// judgment) when `cold`, and decide when and how the attempt ends.
 pub(crate) fn gate_and_start(
     ctx: DeploymentCtx<'_>,
     now: SimTime,
@@ -125,19 +202,16 @@ pub(crate) fn gate_and_start(
     mut inv: Invocation,
     cold: bool,
 ) -> StartOutcome {
-    let DeploymentCtx { spec, minos, platform, result, rng, online, bench_warm } = ctx;
+    let DeploymentCtx { spec, minos, policy, platform, result, rng, pool, bench_warm } = ctx;
     let perf = platform.perf_factor(inst, now);
     let noise = platform.invocation_noise();
     let phases = spec.sample_scaled(perf, noise, inv.payload_scale, rng);
 
     if cold {
         let draw = rng.f64();
-        let decision = decide_cold_start(minos, &inv, perf, draw, || {
+        let decision = decide_cold_start(minos, policy, &inv, perf, draw, || {
             let b = minos.benchmark.duration_ms(perf, rng);
             result.record_bench(b);
-            if let Some(ot) = online.as_mut() {
-                ot.report(b);
-            }
             b
         });
         match decision {
@@ -145,7 +219,7 @@ pub(crate) fn gate_and_start(
                 platform.scheduler.get_mut(inst).benchmark_score = Some(bench_ms);
                 return StartOutcome::Terminate {
                     at: now.plus_ms(bench_ms),
-                    crash: Box::new(CrashRecord { inv, bench_ms }),
+                    crash: pool.alloc_crash(CrashRecord { inv, bench_ms }),
                 };
             }
             ColdStartDecision::Run { forced, bench_ms } => {
@@ -165,7 +239,7 @@ pub(crate) fn gate_and_start(
                 let exec_ms = gate_ms + phases.analysis_ms + phases.overhead_ms;
                 return StartOutcome::Complete {
                     at: now.plus_ms(exec_ms),
-                    rec: Box::new(FinishRecord {
+                    rec: pool.alloc_finish(FinishRecord {
                         inv,
                         cold: true,
                         forced,
@@ -182,12 +256,10 @@ pub(crate) fn gate_and_start(
     // Warm path: no gate. During the pre-test (`bench_warm`) the benchmark
     // still runs — purely to collect scores; it never terminates a warm
     // instance and its duration hides inside prepare.
-    let bench_ms = if bench_warm && minos.enabled {
+    let bench_ms = if bench_warm && policy.benchmarks() {
         let b = minos.benchmark.duration_ms(perf, rng);
         result.record_bench(b);
-        if let Some(ot) = online.as_mut() {
-            ot.report(b);
-        }
+        policy.observe(BenchReport { score_ms: b, warm: true });
         Some(b)
     } else {
         None
@@ -199,7 +271,7 @@ pub(crate) fn gate_and_start(
     let exec_ms = gate_ms + phases.analysis_ms + phases.overhead_ms;
     StartOutcome::Complete {
         at: now.plus_ms(exec_ms),
-        rec: Box::new(FinishRecord {
+        rec: pool.alloc_finish(FinishRecord {
             inv,
             cold: false,
             forced: false,
@@ -273,6 +345,23 @@ pub(crate) fn finish_record(
     }
 }
 
+/// Build the deployment's selection policy for one run: the configured
+/// spec when Minos is enabled, the baseline [`NeverTerminate`] otherwise
+/// (so the paired baseline arm is identical under *any* `--policy`).
+///
+/// [`NeverTerminate`]: crate::policy::NeverTerminate
+pub(crate) fn build_policy(
+    spec: crate::policy::PolicySpec,
+    minos: &MinosConfig,
+    percentile: f64,
+) -> Box<dyn SelectionPolicy> {
+    if minos.enabled {
+        spec.build(PolicyInit { threshold_ms: minos.elysium_threshold_ms, percentile })
+    } else {
+        Box::new(crate::policy::NeverTerminate)
+    }
+}
+
 /// The paper's single-deployment experiment as a kernel [`World`]: one
 /// function, one platform, closed-loop VUs / open-loop Poisson arrivals /
 /// deterministic trace replay.
@@ -284,8 +373,10 @@ pub(crate) struct MinosWorld<'a> {
     queue: InvocationQueue,
     pub result: RunResult,
     rng_workload: Rng,
-    online: Option<OnlineThreshold>,
-    live_minos: MinosConfig,
+    /// The selection decision for this deployment (fresh state per run).
+    policy: Box<dyn SelectionPolicy>,
+    minos: MinosConfig,
+    pool: RecordPool,
     /// Per-VU weather dataset (location) for real execution.
     datasets: Vec<weather::WeatherData>,
     /// Round-robin dataset assignment for open-loop/replay arrivals.
@@ -308,9 +399,7 @@ impl<'a> MinosWorld<'a> {
             FaasPlatform::new_salted(cfg.platform.clone(), cfg.day, cfg.seed, salt);
         let root = Rng::new(cfg.seed ^ 0x9E3779B97F4A7C15);
         let rng_workload = root.fork(7_000 + cfg.day as u64 + salt * 31);
-        let online = cfg.online_update_every.map(|every| {
-            OnlineThreshold::new(cfg.elysium_percentile, minos.elysium_threshold_ms, every)
-        });
+        let policy = build_policy(cfg.policy, minos, cfg.elysium_percentile);
         let datasets: Vec<weather::WeatherData> = if runtime.is_some() {
             (0..cfg.vus.n_vus)
                 .map(|vu| weather::generate(cfg.seed ^ (vu as u64) << 32))
@@ -328,8 +417,9 @@ impl<'a> MinosWorld<'a> {
             queue: InvocationQueue::new(),
             result,
             rng_workload,
-            online,
-            live_minos: minos.clone(),
+            policy,
+            minos: minos.clone(),
+            pool: RecordPool::new(),
             datasets,
             arrival_rr: 0,
         }
@@ -369,9 +459,7 @@ impl<'a> MinosWorld<'a> {
         result.warm_hits = self.platform.warm_hits;
         result.expired = self.platform.expired;
         result.recycled = self.platform.recycled;
-        if let Some(ot) = self.online {
-            result.online_pushes = ot.pushes;
-        }
+        result.online_pushes = self.policy.pushes();
         result
     }
 
@@ -383,16 +471,17 @@ impl<'a> MinosWorld<'a> {
         inv: Invocation,
         cold: bool,
     ) {
-        let Self { cfg, live_minos, platform, result, rng_workload, online, bench_warm, .. } =
+        let Self { cfg, minos, policy, platform, result, rng_workload, pool, bench_warm, .. } =
             self;
         let outcome = gate_and_start(
             DeploymentCtx {
                 spec: &cfg.function,
-                minos: &*live_minos,
+                minos: &*minos,
+                policy: policy.as_mut(),
                 platform,
                 result,
                 rng: rng_workload,
-                online,
+                pool,
                 bench_warm: *bench_warm,
             },
             now,
@@ -487,15 +576,14 @@ impl World for MinosWorld<'_> {
                     now,
                     &crash,
                 );
-                events.schedule_in_ms(self.live_minos.requeue_overhead_ms, Event::Dispatch);
+                self.pool.recycle_crash(crash);
+                events.schedule_in_ms(self.minos.requeue_overhead_ms, Event::Dispatch);
             }
 
             Event::Finish { inst, rec } => {
                 self.platform.release(inst, now);
-                // Online threshold updates arrive between requests (§IV).
-                if let Some(ot) = self.online.as_mut() {
-                    self.live_minos.elysium_threshold_ms = ot.published();
-                }
+                // Pushed policy updates arrive between requests (§IV).
+                self.policy.on_request_complete();
                 let prediction =
                     match (self.runtime, self.datasets.get(rec.inv.vu as usize)) {
                         (Some(rt), Some(data)) => {
@@ -513,6 +601,7 @@ impl World for MinosWorld<'_> {
                     &rec,
                     prediction,
                 );
+                self.pool.recycle_finish(rec);
                 // Closed loop: the VU thinks, then submits again. (Open-
                 // loop and trace-replay arrivals schedule themselves.)
                 if self.cfg.open_loop_rate_rps.is_none() && self.cfg.replay.is_none() {
@@ -592,5 +681,40 @@ mod tests {
         assert!(r.cold && r.forced);
         assert_eq!(r.completed_at, SimTime::from_ms(400.0));
         assert!((r.latency_ms() - 395.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_pool_recycles_boxes() {
+        let inv = Invocation {
+            id: 1,
+            vu: 0,
+            submitted_at: SimTime::ZERO,
+            retries: 0,
+            forced_pass: false,
+            payload_scale: 1.0,
+        };
+        let mut pool = RecordPool::new();
+        let a = pool.alloc_crash(CrashRecord { inv, bench_ms: 10.0 });
+        let addr = &*a as *const CrashRecord as usize;
+        pool.recycle_crash(a);
+        assert_eq!(pool.pooled(), (0, 1));
+        // The next allocation reuses the same box, re-initialized.
+        let b = pool.alloc_crash(CrashRecord { inv, bench_ms: 20.0 });
+        assert_eq!(&*b as *const CrashRecord as usize, addr);
+        assert_eq!(b.bench_ms, 20.0);
+        assert_eq!(pool.pooled(), (0, 0));
+    }
+
+    #[test]
+    fn baseline_build_ignores_the_spec() {
+        // A disabled MinosConfig must yield the baseline policy whatever
+        // the experiment-level spec says — that is what keeps the paired
+        // baseline arm identical under any --policy.
+        let p = build_policy(
+            crate::policy::PolicySpec::Budgeted { max_rate: 0.5 },
+            &MinosConfig::baseline(),
+            60.0,
+        );
+        assert!(!p.benchmarks());
     }
 }

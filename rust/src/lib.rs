@@ -21,6 +21,7 @@
 pub mod coordinator;
 pub mod experiment;
 pub mod platform;
+pub mod policy;
 pub mod runtime;
 pub mod sim;
 pub mod stats;

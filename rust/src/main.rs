@@ -5,13 +5,17 @@
 //!   fig7       run one day and print the Fig. 7 cost-over-time series
 //!   pretest    run the pre-test calibration and print the threshold
 //!   calibrate  measure real PJRT execution of the AOT artifacts
-//!   sweep      ablation: elysium percentile sweep (termination-rate trade-off)
+//!   sweep      ablation: elysium percentile sweep (termination-rate trade-off),
+//!              or `--policies a,b,c` to compare selection policies
 //!   online     run one day with the SIV online-threshold collector
 //!   openloop   one day with Poisson (async-queue) arrivals instead of VUs
 //!   replay     replay a multi-function trace (CSV file or seeded synthetic);
 //!              `--regions N` = multi-region shared-node cluster replay,
 //!              `--paired` = per-function Minos-vs-baseline figures
 //!
+//! `--policy` selects the instance-selection rule (see `policy/`:
+//! fixed, online:N, never, budget:F, epsilon:F, randomkill:F, oracle:F);
+//! `--routing` selects cross-region admission for cluster replays.
 //! `--real` executes the weather-regression HLO artifact through PJRT for
 //! every completed invocation (verifying numerics against the Rust oracle);
 //! without it the runs are pure simulation (identical decision dynamics).
@@ -22,8 +26,9 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use minos::experiment::{cluster, config::ExperimentConfig, figures, report, runner};
+use minos::experiment::{cluster, config::ExperimentConfig, figures, report, runner, sweep};
 use minos::platform::ClusterConfig;
+use minos::policy::{PolicySpec, RoutingSpec};
 use minos::runtime::{calibrate::Calibration, ArtifactStore, Runtime};
 use minos::trace::{io as trace_io, FunctionRegistry, SynthConfig};
 use minos::util::args::Args;
@@ -66,25 +71,44 @@ minos — FaaS instance selection exploiting cloud performance variation
 USAGE: minos <command> [options]
 
 COMMANDS:
-  week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --threads T --real]
+  week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --threads T --real --policy P]
   fig7       cost-over-time series for one day      [--day N --seed N --step S]
   pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
   calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
-  sweep      elysium-percentile ablation            [--day N --seed N --threads T]
+  sweep      elysium-percentile ablation            [--day N --seed N --threads T --policy P]
+             or policy comparison                   [--policies P1,P2,... --reps N --horizon S]
   online     one day with the online threshold      [--day N --seed N --every N]
-  openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R]
+             (shorthand for --policy online:N on a paired day)
+  openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R --policy P]
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
-             [--regions N --spill F --threads T --paired --full-records]
+             [--regions N --spill F --routing R --threads T --paired]
+             [--policy P --full-records]
 
 REPLAY MODES:
   default    each function replays on its own isolated platform
-  --regions N   multi-region shared-node cluster: the trace's region ids
-             route onto N demo regions (distinct variability/cold-start
-             profiles); functions within a region contend on one shared
-             node pool. With --synth, functions are spread over N home
-             regions and --spill F (default 0.1) of traffic roams.
+  --regions N   multi-region shared-node cluster: invocations route onto
+             N demo regions (distinct variability/cold-start profiles);
+             functions within a region contend on one shared node pool.
+             With --synth, functions are spread over N home regions and
+             --spill F (default 0.1) of traffic roams.
   --paired   per-function Minos-vs-baseline improvement figures
+
+POLICIES (--policy / --policies, syntax `name` or `name:param`):
+  fixed         the paper's gate: fixed pre-tested elysium threshold
+  online[:N]    SIV online collector, republish every N reports (def. 10)
+  never         baseline: no benchmark, never terminate
+  budget[:F]    fixed threshold, termination rate capped at F (def. 0.1)
+  epsilon[:F]   fixed threshold, keep slow instances with prob F (def. 0.05)
+  randomkill[:F] ablation control: random termination at rate F (def. 0.4)
+  oracle[:F]    ablation bound: judge true perf factor >= F (def. 1.0)
+  The baseline arm of paired runs always uses `never`, whatever --policy
+  says; per-function overrides live in the trace registry.
+
+ROUTING (--routing, cluster replays only):
+  trace      honor the trace's region ids (default)
+  fastest    admit to the region with the least outstanding routed work
+  rr         round-robin across regions
 
 METRICS:
   replay and sweep record through O(1)-memory streaming sinks (Welford +
@@ -116,6 +140,15 @@ fn f(args: &Args, key: &str, default: f64) -> Result<f64> {
     args.get_f64(key, default).map_err(anyhow::Error::msg)
 }
 
+/// Apply `--policy SPEC` (e.g. `fixed`, `online:25`, `budget:0.1`) to an
+/// experiment config; no flag leaves the paper default (`fixed`).
+fn apply_policy(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
+    if let Some(spec) = args.get("policy") {
+        cfg.policy = PolicySpec::parse(spec).map_err(anyhow::Error::msg)?;
+    }
+    Ok(())
+}
+
 fn cmd_week(args: &Args) -> Result<()> {
     let days = u(args, "days", 7)? as u32;
     let seed = u(args, "seed", 0x31A5)?;
@@ -123,6 +156,7 @@ fn cmd_week(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
     let mut base = ExperimentConfig::paper_day(0);
     base.seed = seed;
+    apply_policy(args, &mut base)?;
     let outcomes = runner::run_week_threads(&base, days, rt.as_ref(), threads)?;
     print!("{}", report::week_report(&outcomes));
     if let Some(rt) = &rt {
@@ -191,6 +225,40 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let day = u(args, "day", 1)? as u32;
     let seed = u(args, "seed", 0x31A5 + day as u64)?;
     let threads = u(args, "threads", 0)? as usize;
+
+    if let Some(list) = args.get("policies") {
+        // Policy sweep: every listed policy vs the same baseline arms
+        // (same seeds, same platform lotteries — directly comparable).
+        // It runs its own seed ladder on the paper's sweep day; refuse
+        // flags it would silently ignore rather than discard them.
+        for ignored in ["day", "seed", "policy"] {
+            if args.get(ignored).is_some() {
+                bail!("--{ignored} has no effect with --policies (the policy sweep \
+                       uses its own seed ladder); drop it");
+            }
+        }
+        let specs = PolicySpec::parse_list(list).map_err(anyhow::Error::msg)?;
+        let seeds_per_point = u(args, "reps", 3)?;
+        let horizon_s = f(args, "horizon", 600.0)?;
+        let points = sweep::policy_sweep(&specs, seeds_per_point, horizon_s, threads)?;
+        println!(
+            "{:<14} {:>10} {:>12} {:>12} {:>10}",
+            "policy", "term rate", "analysis d%", "requests d%", "cost d%"
+        );
+        for p in &points {
+            let name = p.policy.to_string();
+            println!(
+                "{:<14} {:>10.3} {:>12.2} {:>12.2} {:>10.2}",
+                name,
+                p.stats.termination_rate_mean,
+                p.stats.analysis_pct_mean,
+                p.stats.requests_pct_mean,
+                p.stats.cost_pct_mean,
+            );
+        }
+        return Ok(());
+    }
+
     let pcts = [0.1, 20.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0];
     // Sweep points are independent paired runs: fan them out, print in
     // order (identical output at any thread count).
@@ -198,6 +266,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let mut cfg = ExperimentConfig::paper_day(day);
         cfg.seed = seed;
         cfg.elysium_percentile = pcts[i];
+        apply_policy(args, &mut cfg)?;
         // The sweep table only reads aggregates: stream, don't store.
         cfg.metrics = minos::experiment::MetricsMode::Streaming;
         runner::run_paired(&cfg, None)
@@ -227,6 +296,7 @@ fn cmd_openloop(args: &Args) -> Result<()> {
     let mut cfg = ExperimentConfig::paper_day(day);
     cfg.seed = seed;
     cfg.open_loop_rate_rps = Some(rate);
+    apply_policy(args, &mut cfg)?;
     let o = runner::run_paired(&cfg, None)?;
     println!(
         "open loop @ {rate} req/s (Poisson, {} min horizon):",
@@ -270,6 +340,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
         // --spill only shapes synthetic multi-region traces; refuse rather
         // than silently discard it.
         bail!("--spill requires --synth together with --regions");
+    }
+    if args.get("routing").is_some() && !cluster_mode {
+        // Routing only exists across regions; refuse rather than silently
+        // discard the flag.
+        bail!("--routing requires --regions (cluster replay)");
     }
     let rt = load_runtime(args)?;
     let trace = if let Some(path) = args.get("trace") {
@@ -331,6 +406,10 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let registry = FunctionRegistry::demo(n_functions);
     let mut cfg = ExperimentConfig::paper_day(day);
     cfg.seed = seed;
+    apply_policy(args, &mut cfg)?;
+    if let Some(r) = args.get("routing") {
+        cfg.routing = RoutingSpec::parse(r).map_err(anyhow::Error::msg)?;
+    }
     // Replays default to the O(1)-memory streaming sink; --full-records
     // restores the per-record vectors (needed only for figure extraction).
     cfg.metrics = if args.flag("full-records") {
@@ -375,9 +454,12 @@ fn cmd_online(args: &Args) -> Result<()> {
     let day = u(args, "day", 0)? as u32;
     let seed = u(args, "seed", 0x31A5 + day as u64)?;
     let every = u(args, "every", 10)?;
+    if every == 0 {
+        bail!("--every must be at least 1");
+    }
     let mut cfg = ExperimentConfig::paper_day(day);
     cfg.seed = seed;
-    cfg.online_update_every = Some(every);
+    let cfg = cfg.with_online_threshold(every);
     let outcome = runner::run_paired(&cfg, None)?;
     println!(
         "online threshold (update every {every} reports): {} pushes",

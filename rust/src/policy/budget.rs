@@ -1,0 +1,108 @@
+//! Threshold gate with a hard cap on the running termination rate.
+
+use super::{JudgeCtx, SelectionPolicy, Verdict};
+
+/// Judge like [`super::FixedThreshold`], but never let terminations
+/// exceed `max_rate` of the gates judged so far: a slow instance is kept
+/// (despite failing the threshold) whenever terminating it would push the
+/// running rate over the cap. Every termination bills a wasted benchmark
+/// (Fig. 3's d_term), so the cap is a direct bound on Minos's wasted-cost
+/// overhead — the knob the `--policies budget:0.1` sweep exposes.
+///
+/// Invariant (asserted in tests): after every judgment,
+/// `terminated <= max_rate * judged`.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetedTermination {
+    threshold_ms: f64,
+    max_rate: f64,
+    judged: u64,
+    terminated: u64,
+}
+
+impl BudgetedTermination {
+    pub fn new(threshold_ms: f64, max_rate: f64) -> BudgetedTermination {
+        assert!((0.0..=1.0).contains(&max_rate), "max_rate must be in [0, 1]");
+        BudgetedTermination { threshold_ms, max_rate, judged: 0, terminated: 0 }
+    }
+
+    /// Gates judged so far.
+    pub fn judged(&self) -> u64 {
+        self.judged
+    }
+
+    /// Terminations issued so far.
+    pub fn terminated(&self) -> u64 {
+        self.terminated
+    }
+}
+
+impl SelectionPolicy for BudgetedTermination {
+    fn judge(&mut self, score_ms: f64, _ctx: &JudgeCtx) -> Verdict {
+        self.judged += 1;
+        let slow = score_ms > self.threshold_ms;
+        if slow && (self.terminated + 1) as f64 <= self.max_rate * self.judged as f64 {
+            self.terminated += 1;
+            Verdict::Terminate
+        } else {
+            Verdict::Keep
+        }
+    }
+
+    fn published_threshold(&self) -> f64 {
+        self.threshold_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> JudgeCtx {
+        JudgeCtx { perf_factor: 1.0, draw: 0.5, retries: 0 }
+    }
+
+    #[test]
+    fn caps_the_running_termination_rate() {
+        // Every score fails the threshold; only the budget limits kills.
+        let mut p = BudgetedTermination::new(100.0, 0.25);
+        for _ in 0..400 {
+            p.judge(500.0, &ctx());
+            assert!(
+                p.terminated() as f64 <= 0.25 * p.judged() as f64,
+                "rate cap violated: {}/{}",
+                p.terminated(),
+                p.judged()
+            );
+        }
+        assert_eq!(p.terminated(), 100, "budget should be fully spent");
+    }
+
+    #[test]
+    fn fast_instances_never_spend_budget() {
+        let mut p = BudgetedTermination::new(100.0, 0.5);
+        for _ in 0..10 {
+            assert_eq!(p.judge(50.0, &ctx()), Verdict::Keep);
+        }
+        assert_eq!(p.terminated(), 0);
+        // Budget accumulated while fast instances passed: now available.
+        assert_eq!(p.judge(500.0, &ctx()), Verdict::Terminate);
+    }
+
+    #[test]
+    fn zero_budget_is_never_terminate_with_benchmarks() {
+        let mut p = BudgetedTermination::new(100.0, 0.0);
+        for _ in 0..20 {
+            assert_eq!(p.judge(1e9, &ctx()), Verdict::Keep);
+        }
+        assert!(p.benchmarks(), "still benchmarks (pays the gate cost)");
+    }
+
+    #[test]
+    fn full_budget_matches_fixed_threshold() {
+        let mut b = BudgetedTermination::new(100.0, 1.0);
+        let mut f = super::super::FixedThreshold::new(100.0);
+        for s in [10.0, 200.0, 99.0, 101.0, 100.0, 1e6] {
+            assert_eq!(b.judge(s, &ctx()), f.judge(s, &ctx()), "score {s}");
+        }
+    }
+}

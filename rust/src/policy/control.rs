@@ -1,0 +1,91 @@
+//! Ablation control policies: churn without signal, and perfect signal.
+//!
+//! Together with [`super::FixedThreshold`] these isolate *why* Minos works
+//! (the `ablation_selection_policy` bench): [`RandomKill`] restarts at the
+//! Elysium-matched rate but with no performance signal — if restarts alone
+//! helped, it would match Elysium; it doesn't. [`OracleFactor`] judges on
+//! the true (unobservable) node speed — the per-cold-start upper bound a
+//! perfect centralized scheduler (§V, Ginzburg & Freedman) could achieve.
+
+use super::{JudgeCtx, SelectionPolicy, Verdict};
+
+/// Terminate cold starts uniformly at random with probability `rate`,
+/// ignoring the benchmark score entirely. Matched-churn control.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomKill {
+    rate: f64,
+}
+
+impl RandomKill {
+    pub fn new(rate: f64) -> RandomKill {
+        assert!((0.0..=1.0).contains(&rate), "rate must be in [0, 1]");
+        RandomKill { rate }
+    }
+}
+
+impl SelectionPolicy for RandomKill {
+    fn judge(&mut self, _score_ms: f64, ctx: &JudgeCtx) -> Verdict {
+        if ctx.draw < self.rate {
+            Verdict::Terminate
+        } else {
+            Verdict::Keep
+        }
+    }
+
+    fn published_threshold(&self) -> f64 {
+        f64::INFINITY
+    }
+}
+
+/// Judge on the instance's *true* performance factor: keep at or above
+/// `min_factor`, terminate below. The simulator knows the factor; a real
+/// platform would not — this is an upper bound, not a deployable policy.
+#[derive(Debug, Clone, Copy)]
+pub struct OracleFactor {
+    min_factor: f64,
+}
+
+impl OracleFactor {
+    pub fn new(min_factor: f64) -> OracleFactor {
+        OracleFactor { min_factor }
+    }
+}
+
+impl SelectionPolicy for OracleFactor {
+    fn judge(&mut self, _score_ms: f64, ctx: &JudgeCtx) -> Verdict {
+        if ctx.perf_factor >= self.min_factor {
+            Verdict::Keep
+        } else {
+            Verdict::Terminate
+        }
+    }
+
+    fn published_threshold(&self) -> f64 {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_kill_uses_draw_not_score() {
+        let mut p = RandomKill::new(0.3);
+        let keep = JudgeCtx { perf_factor: 1.0, draw: 0.9, retries: 0 };
+        let kill = JudgeCtx { perf_factor: 1.0, draw: 0.1, retries: 0 };
+        // A terrible score with a high draw passes; a perfect score with a
+        // low draw dies — the benchmark carries no signal here.
+        assert_eq!(p.judge(10_000.0, &keep), Verdict::Keep);
+        assert_eq!(p.judge(10.0, &kill), Verdict::Terminate);
+    }
+
+    #[test]
+    fn oracle_judges_on_true_factor() {
+        let mut p = OracleFactor::new(1.05);
+        let fast = JudgeCtx { perf_factor: 1.2, draw: 0.5, retries: 0 };
+        let slow = JudgeCtx { perf_factor: 0.9, draw: 0.5, retries: 0 };
+        assert_eq!(p.judge(10_000.0, &fast), Verdict::Keep);
+        assert_eq!(p.judge(10.0, &slow), Verdict::Terminate);
+    }
+}

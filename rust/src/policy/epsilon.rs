@@ -1,0 +1,92 @@
+//! Threshold gate with ε-greedy exploration of slow instances.
+
+use super::{JudgeCtx, SelectionPolicy, Verdict};
+
+/// Judge like [`super::FixedThreshold`], but keep a would-be-terminated
+/// instance with probability ε. Night Shift (Schirmer et al., 2023) shows
+/// platform variability drifts diurnally: a pre-tested threshold can go
+/// stale, and a pure exploit gate never re-samples the nodes it rejected.
+/// Occasionally admitting a slow instance keeps fresh measurements of the
+/// "bad" part of the pool flowing (its warm invocations are still
+/// recorded), at a bounded latency cost.
+///
+/// The exploration coin is [`JudgeCtx::draw`] — the caller-supplied
+/// variate drawn once per gate — so the policy adds no RNG of its own and
+/// replays stay bit-identical at any thread count.
+#[derive(Debug, Clone, Copy)]
+pub struct EpsilonGreedy {
+    threshold_ms: f64,
+    epsilon: f64,
+    explored: u64,
+}
+
+impl EpsilonGreedy {
+    pub fn new(threshold_ms: f64, epsilon: f64) -> EpsilonGreedy {
+        assert!((0.0..=1.0).contains(&epsilon), "epsilon must be in [0, 1]");
+        EpsilonGreedy { threshold_ms, epsilon, explored: 0 }
+    }
+
+    /// Slow instances kept for exploration so far.
+    pub fn explored(&self) -> u64 {
+        self.explored
+    }
+}
+
+impl SelectionPolicy for EpsilonGreedy {
+    fn judge(&mut self, score_ms: f64, ctx: &JudgeCtx) -> Verdict {
+        if score_ms <= self.threshold_ms {
+            return Verdict::Keep;
+        }
+        if ctx.draw < self.epsilon {
+            self.explored += 1;
+            Verdict::Keep
+        } else {
+            Verdict::Terminate
+        }
+    }
+
+    fn published_threshold(&self) -> f64 {
+        self.threshold_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(draw: f64) -> JudgeCtx {
+        JudgeCtx { perf_factor: 1.0, draw, retries: 0 }
+    }
+
+    #[test]
+    fn fast_instances_always_pass() {
+        let mut p = EpsilonGreedy::new(400.0, 0.9);
+        assert_eq!(p.judge(399.0, &ctx(0.0)), Verdict::Keep);
+        assert_eq!(p.explored(), 0, "a pass is not exploration");
+    }
+
+    #[test]
+    fn slow_instances_explored_at_epsilon() {
+        let mut p = EpsilonGreedy::new(400.0, 0.3);
+        assert_eq!(p.judge(500.0, &ctx(0.1)), Verdict::Keep);
+        assert_eq!(p.judge(500.0, &ctx(0.9)), Verdict::Terminate);
+        assert_eq!(p.explored(), 1);
+    }
+
+    #[test]
+    fn epsilon_zero_matches_fixed_threshold() {
+        let mut e = EpsilonGreedy::new(400.0, 0.0);
+        let mut f = super::super::FixedThreshold::new(400.0);
+        for (s, d) in [(10.0, 0.0), (400.0, 0.99), (401.0, 0.0), (1e9, 0.5)] {
+            assert_eq!(e.judge(s, &ctx(d)), f.judge(s, &ctx(d)), "score {s}");
+        }
+    }
+
+    #[test]
+    fn epsilon_one_never_terminates() {
+        let mut p = EpsilonGreedy::new(0.0, 1.0);
+        for d in [0.0, 0.5, 0.999_999] {
+            assert_eq!(p.judge(1e9, &ctx(d)), Verdict::Keep);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! The paper's mechanism: a fixed elysium threshold from the pre-test.
+
+use super::{JudgeCtx, SelectionPolicy, Verdict};
+
+/// Judge benchmark scores against a fixed threshold (paper §II-B): at or
+/// below ⇒ keep, above ⇒ terminate. The threshold is calibrated once by
+/// the pre-test and never moves during the run.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedThreshold {
+    threshold_ms: f64,
+}
+
+impl FixedThreshold {
+    pub fn new(threshold_ms: f64) -> FixedThreshold {
+        FixedThreshold { threshold_ms }
+    }
+}
+
+impl SelectionPolicy for FixedThreshold {
+    fn judge(&mut self, score_ms: f64, _ctx: &JudgeCtx) -> Verdict {
+        if score_ms <= self.threshold_ms {
+            Verdict::Keep
+        } else {
+            Verdict::Terminate
+        }
+    }
+
+    fn published_threshold(&self) -> f64 {
+        self.threshold_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> JudgeCtx {
+        JudgeCtx { perf_factor: 1.0, draw: 0.5, retries: 0 }
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        // Must match the pre-redesign ElysiumJudge exactly: <= passes.
+        let mut p = FixedThreshold::new(400.0);
+        assert_eq!(p.judge(399.9, &ctx()), Verdict::Keep);
+        assert_eq!(p.judge(400.0, &ctx()), Verdict::Keep);
+        assert_eq!(p.judge(400.1, &ctx()), Verdict::Terminate);
+    }
+
+    #[test]
+    fn infinite_threshold_keeps_everything() {
+        let mut p = FixedThreshold::new(f64::INFINITY);
+        assert_eq!(p.judge(1e12, &ctx()), Verdict::Keep);
+        assert!(p.published_threshold().is_infinite());
+    }
+
+    #[test]
+    fn keep_rate_matches_pretest_percentile_on_fresh_draws() {
+        // Calibrate at P60 on one sample, judge a fresh sample from the
+        // same distribution: ~60% must be kept (paper §II-B).
+        use crate::stats::descriptive::percentile;
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(1);
+        let pretest: Vec<f64> =
+            (0..5_000).map(|_| 350.0 * rng.lognormal(0.0, 0.12)).collect();
+        let mut p = FixedThreshold::new(percentile(&pretest, 60.0));
+        let mut kept = 0u32;
+        for _ in 0..20_000 {
+            if p.judge(350.0 * rng.lognormal(0.0, 0.12), &ctx()) == Verdict::Keep {
+                kept += 1;
+            }
+        }
+        let rate = kept as f64 / 20_000.0;
+        assert!((rate - 0.60).abs() < 0.02, "keep rate {rate}");
+    }
+}

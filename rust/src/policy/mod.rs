@@ -1,0 +1,145 @@
+//! Pluggable selection & routing policies — the Minos decision as a
+//! first-class value.
+//!
+//! The paper's core mechanism (benchmark a fresh instance, compare against
+//! an elysium threshold, crash-and-requeue if slow) used to be hardcoded
+//! in the experiment world. Night Shift (Schirmer et al., 2023) shows
+//! variability is diurnal and platform-dependent, and SeBS (Copik et al.,
+//! 2021) argues for comparing strategies under one harness — so the
+//! decision is a trait here, and every alternative strategy is a ~50-line
+//! policy file instead of world-kernel surgery.
+//!
+//! Two traits:
+//!
+//! - [`SelectionPolicy`] — judges a cold-started instance's benchmark
+//!   score ([`Verdict::Keep`] or [`Verdict::Terminate`]), observes every
+//!   benchmark report (for online learning), and publishes the threshold
+//!   currently in force (for reporting). Implementations:
+//!   [`FixedThreshold`] (the paper's pre-tested gate), [`OnlineGate`]
+//!   (§IV's collector), [`NeverTerminate`] (the baseline),
+//!   [`BudgetedTermination`] (caps the termination rate so wasted cost is
+//!   bounded), [`EpsilonGreedy`] (occasionally keeps a slow instance to
+//!   re-sample drifted nodes), plus the ablation controls [`RandomKill`]
+//!   and [`OracleFactor`].
+//! - [`RoutingPolicy`] — chooses the region an invocation is admitted to
+//!   in cluster replays, from the front-door router's own snapshots
+//!   ([`TraceRegion`], [`FastestQueue`], [`RoundRobin`]).
+//!
+//! Configurations carry a [`PolicySpec`] / [`RoutingSpec`] (plain
+//! cloneable enums, the CLI's `--policy` / `--routing` syntax); worlds
+//! call [`PolicySpec::build`] per run, so paired and thread-fanned runs
+//! each fork their own deterministic policy state.
+//!
+//! **Determinism contract.** Policies hold no RNG of their own: any
+//! randomness comes through [`JudgeCtx::draw`], a caller-supplied uniform
+//! [0,1) variate drawn once per cold-start gate (whether or not a policy
+//! consumes it). A policy's decisions must be a pure function of its
+//! constructor arguments and the observation sequence — that is what
+//! keeps replays bit-identical at any `--threads` count.
+
+pub mod budget;
+pub mod control;
+pub mod epsilon;
+pub mod fixed;
+pub mod never;
+pub mod online;
+pub mod routing;
+pub mod spec;
+
+pub use budget::BudgetedTermination;
+pub use control::{OracleFactor, RandomKill};
+pub use epsilon::EpsilonGreedy;
+pub use fixed::FixedThreshold;
+pub use never::NeverTerminate;
+pub use online::OnlineGate;
+pub use routing::{FastestQueue, RegionSnapshot, RoundRobin, RoutingPolicy, TraceRegion};
+pub use spec::{PolicyInit, PolicySpec, RoutingSpec};
+
+/// A selection policy's judgment of one cold-started instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Instance is good enough: run the invocation, join the warm pool.
+    Keep,
+    /// Instance is too slow: re-queue the invocation and crash it.
+    Terminate,
+}
+
+/// Everything a policy may condition a judgment on besides the score.
+#[derive(Debug, Clone, Copy)]
+pub struct JudgeCtx {
+    /// The instance's *true* performance factor. Only the simulator knows
+    /// this; a real platform would not. [`OracleFactor`] is the only
+    /// built-in allowed to read it.
+    pub perf_factor: f64,
+    /// Caller-supplied uniform [0,1) variate, drawn once per cold gate
+    /// regardless of policy (so policies never perturb the RNG stream).
+    pub draw: f64,
+    /// Prior Minos terminations of the invocation being served.
+    pub retries: u32,
+}
+
+/// One benchmark measurement reported to a policy's `observe` hook.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchReport {
+    /// Benchmark duration, ms.
+    pub score_ms: f64,
+    /// The benchmark ran on a warm instance (pre-test sampling only; warm
+    /// instances are never judged).
+    pub warm: bool,
+}
+
+/// The instance-selection decision, object-safe and deterministic.
+///
+/// Lifecycle per run: the world builds one policy per deployment via
+/// [`PolicySpec::build`], calls [`SelectionPolicy::observe`] for every
+/// benchmark that runs, [`SelectionPolicy::judge`] for every cold-started
+/// instance that reaches the gate (emergency exit excluded), and
+/// [`SelectionPolicy::on_request_complete`] after every successful
+/// completion — the moment pushed configuration updates land, per §IV
+/// ("online calculation": instances keep using the last pushed threshold
+/// between updates).
+pub trait SelectionPolicy: std::fmt::Debug + Send {
+    /// Judge a cold-started instance by its benchmark score.
+    fn judge(&mut self, score_ms: f64, ctx: &JudgeCtx) -> Verdict;
+
+    /// Whether the cold-start gate should run the benchmark at all.
+    /// `false` reproduces the paper's baseline: no benchmark, no
+    /// judgment, every instance is kept (§III-A).
+    fn benchmarks(&self) -> bool {
+        true
+    }
+
+    /// Observe one benchmark report (including warm pre-test samples).
+    /// Called before `judge` for the same score.
+    fn observe(&mut self, _report: BenchReport) {}
+
+    /// A request completed; any pending published update takes effect now
+    /// (threshold pushes arrive between calls, never mid-gate).
+    fn on_request_complete(&mut self) {}
+
+    /// The threshold currently in force, ms — for reporting. Policies
+    /// that do not judge by threshold return `f64::INFINITY`.
+    fn published_threshold(&self) -> f64;
+
+    /// Collector pushes so far (online policies; 0 otherwise).
+    fn pushes(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The trait must stay object-safe: boxed policies are how worlds
+    /// hold them.
+    #[test]
+    fn trait_is_object_safe() {
+        let mut boxed: Box<dyn SelectionPolicy> = Box::new(FixedThreshold::new(400.0));
+        let ctx = JudgeCtx { perf_factor: 1.0, draw: 0.5, retries: 0 };
+        assert_eq!(boxed.judge(399.0, &ctx), Verdict::Keep);
+        assert_eq!(boxed.judge(401.0, &ctx), Verdict::Terminate);
+        assert!(boxed.benchmarks());
+        assert_eq!(boxed.pushes(), 0);
+    }
+}

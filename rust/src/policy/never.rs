@@ -1,0 +1,41 @@
+//! The baseline: no benchmark, no judgment, keep every instance.
+
+use super::{JudgeCtx, SelectionPolicy, Verdict};
+
+/// The paper's baseline condition ("exactly the same, except that all
+/// components of Minos are disabled", §III-A): the gate never runs the
+/// benchmark, so no instance is ever judged or terminated. Runs under
+/// this policy are bit-identical to the pre-policy `enabled: false`
+/// configuration — asserted by `tests/policy_parity.rs`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NeverTerminate;
+
+impl SelectionPolicy for NeverTerminate {
+    fn judge(&mut self, _score_ms: f64, _ctx: &JudgeCtx) -> Verdict {
+        // Unreachable through the gate (benchmarks() is false), but the
+        // answer is well-defined for direct callers.
+        Verdict::Keep
+    }
+
+    fn benchmarks(&self) -> bool {
+        false
+    }
+
+    fn published_threshold(&self) -> f64 {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_everything_and_skips_the_benchmark() {
+        let mut p = NeverTerminate;
+        assert!(!p.benchmarks());
+        let ctx = JudgeCtx { perf_factor: 0.1, draw: 0.0, retries: 0 };
+        assert_eq!(p.judge(1e9, &ctx), Verdict::Keep);
+        assert!(p.published_threshold().is_infinite());
+    }
+}

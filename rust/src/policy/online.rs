@@ -1,0 +1,97 @@
+//! The §IV online-threshold collector as a selection policy.
+//!
+//! This is the policy form of what used to be special-cased inside the
+//! experiment world (`cfg.online_update_every` + an `Option<OnlineThreshold>`
+//! threaded through the gate): every benchmark report feeds the P²/Welford
+//! collector; the collector republishes the threshold every `update_every`
+//! reports; and the *live* threshold instances judge against only advances
+//! between requests ([`SelectionPolicy::on_request_complete`]) — exactly
+//! the paper's "instances keep using the last pushed threshold" semantics.
+//! Because it is now an ordinary policy value, it also works inside
+//! cluster replays, where each (region, function) deployment owns one.
+
+use crate::coordinator::online::OnlineThreshold;
+
+use super::{BenchReport, JudgeCtx, SelectionPolicy, Verdict};
+
+/// Online elysium gate: judge against a threshold that re-calibrates
+/// itself from the live benchmark stream.
+#[derive(Debug, Clone)]
+pub struct OnlineGate {
+    collector: OnlineThreshold,
+    /// The threshold in force at the gate (lags `collector.published()`
+    /// until the next request completion).
+    live_ms: f64,
+}
+
+impl OnlineGate {
+    /// Seed with an initial threshold (the pre-test's, or `f64::INFINITY`
+    /// to accept everything until data arrives).
+    pub fn new(percentile: f64, initial_threshold_ms: f64, update_every: u64) -> OnlineGate {
+        OnlineGate {
+            collector: OnlineThreshold::new(percentile, initial_threshold_ms, update_every),
+            live_ms: initial_threshold_ms,
+        }
+    }
+}
+
+impl SelectionPolicy for OnlineGate {
+    fn judge(&mut self, score_ms: f64, _ctx: &JudgeCtx) -> Verdict {
+        if score_ms <= self.live_ms {
+            Verdict::Keep
+        } else {
+            Verdict::Terminate
+        }
+    }
+
+    fn observe(&mut self, report: BenchReport) {
+        self.collector.report(report.score_ms);
+    }
+
+    fn on_request_complete(&mut self) {
+        self.live_ms = self.collector.published();
+    }
+
+    fn published_threshold(&self) -> f64 {
+        self.live_ms
+    }
+
+    fn pushes(&self) -> u64 {
+        self.collector.pushes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> JudgeCtx {
+        JudgeCtx { perf_factor: 1.0, draw: 0.5, retries: 0 }
+    }
+
+    #[test]
+    fn updates_land_between_requests_not_mid_gate() {
+        let mut p = OnlineGate::new(50.0, f64::INFINITY, 5);
+        for s in [100.0, 110.0, 120.0, 130.0, 140.0, 150.0] {
+            p.observe(BenchReport { score_ms: s, warm: false });
+        }
+        // The collector has pushed, but no request completed yet: the
+        // live threshold is still the seed value.
+        assert!(p.pushes() >= 1);
+        assert_eq!(p.judge(1e9, &ctx()), Verdict::Keep);
+        p.on_request_complete();
+        assert!(p.published_threshold().is_finite());
+        assert_eq!(p.judge(1e9, &ctx()), Verdict::Terminate);
+    }
+
+    #[test]
+    fn tracks_the_stream_percentile() {
+        let mut p = OnlineGate::new(60.0, f64::INFINITY, 10);
+        for i in 0..1_000 {
+            p.observe(BenchReport { score_ms: 300.0 + (i % 100) as f64, warm: false });
+            p.on_request_complete();
+        }
+        let th = p.published_threshold();
+        assert!((355.0..365.0).contains(&th), "threshold {th}");
+    }
+}

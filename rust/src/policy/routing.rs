@@ -1,0 +1,195 @@
+//! Cross-region routing policies for cluster replays.
+//!
+//! Routing is an *admission-time* decision: the front-door router assigns
+//! each invocation to a region when it arrives, using only its own
+//! bookkeeping ([`RegionSnapshot`]: how much work it has sent where, and
+//! how much of that it estimates is still outstanding). It does not see
+//! live intra-region simulation state — a real global router wouldn't
+//! either (region queue depths are remote and stale by the time they
+//! arrive). This keeps the replay architecture intact: route the whole
+//! trace first in one deterministic O(N) pass ([`route_records`]), then
+//! run the per-region sub-simulations in parallel exactly as before.
+//!
+//! Built-ins: [`TraceRegion`] (honor the trace's region ids — today's
+//! behavior, bit-identical to the pre-policy engine), [`FastestQueue`]
+//! (least-outstanding-work, the classic front-door load balancer), and
+//! [`RoundRobin`].
+
+use crate::platform::RegionId;
+use crate::trace::TraceRecord;
+
+/// Decay scale for the router's outstanding-work estimate, ms: work sent
+/// to a region stops counting against it after a few tens of seconds
+/// (the order of one invocation's end-to-end service time).
+pub const ROUTE_TAU_MS: f64 = 30_000.0;
+
+/// The router's view of one region: its own accounting, not live
+/// simulation state.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionSnapshot {
+    pub region: RegionId,
+    /// Invocations routed to this region so far.
+    pub assigned: u64,
+    /// Exponentially-decayed estimate of work still outstanding there
+    /// (each assignment adds 1; the estimate decays with time constant
+    /// [`ROUTE_TAU_MS`]).
+    pub outstanding: f64,
+}
+
+/// Admission-time region selection, object-safe and deterministic (no
+/// internal RNG; decisions are a pure function of the record sequence).
+pub trait RoutingPolicy: std::fmt::Debug + Send {
+    /// Choose the region for one invocation. Must return one of the ids
+    /// in `regions` (dense `0..n`).
+    fn route(&mut self, rec: &TraceRecord, regions: &[RegionSnapshot]) -> RegionId;
+}
+
+/// Honor the trace's region ids (today's behavior).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceRegion;
+
+impl RoutingPolicy for TraceRegion {
+    fn route(&mut self, rec: &TraceRecord, _regions: &[RegionSnapshot]) -> RegionId {
+        rec.region
+    }
+}
+
+/// Route to the region with the least outstanding work (ties: lowest id).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FastestQueue;
+
+impl RoutingPolicy for FastestQueue {
+    fn route(&mut self, _rec: &TraceRecord, regions: &[RegionSnapshot]) -> RegionId {
+        let mut best = regions[0].region;
+        let mut best_load = regions[0].outstanding;
+        for s in &regions[1..] {
+            if s.outstanding < best_load {
+                best = s.region;
+                best_load = s.outstanding;
+            }
+        }
+        best
+    }
+}
+
+/// Cycle regions in id order, ignoring both the trace and the load.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin {
+    cursor: u64,
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn route(&mut self, _rec: &TraceRecord, regions: &[RegionSnapshot]) -> RegionId {
+        let r = regions[(self.cursor % regions.len() as u64) as usize].region;
+        self.cursor += 1;
+        r
+    }
+}
+
+/// Route a time-sorted record stream onto `n_regions` regions: one O(N)
+/// pass that maintains the snapshots, asks the policy per record, and
+/// splits the records per region (with `region` rewritten to the routed
+/// id, order preserved). Deterministic for a given policy and trace.
+pub fn route_records(
+    records: &[TraceRecord],
+    n_regions: usize,
+    policy: &mut dyn RoutingPolicy,
+) -> Result<Vec<Vec<TraceRecord>>, String> {
+    assert!(n_regions > 0, "routing needs at least one region");
+    let mut snapshots: Vec<RegionSnapshot> = (0..n_regions)
+        .map(|r| RegionSnapshot {
+            region: RegionId(r as u32),
+            assigned: 0,
+            outstanding: 0.0,
+        })
+        .collect();
+    let mut out: Vec<Vec<TraceRecord>> = vec![Vec::new(); n_regions];
+    let mut last_ms = 0.0f64;
+    for rec in records {
+        let now_ms = rec.t.as_ms();
+        let decay = (-(now_ms - last_ms) / ROUTE_TAU_MS).exp();
+        last_ms = now_ms;
+        for s in &mut snapshots {
+            s.outstanding *= decay;
+        }
+        let region = policy.route(rec, &snapshots);
+        let Some(bucket) = out.get_mut(region.0 as usize) else {
+            return Err(format!(
+                "routing policy chose region {} but the cluster has only {n_regions} \
+                 regions",
+                region.0
+            ));
+        };
+        let s = &mut snapshots[region.0 as usize];
+        s.assigned += 1;
+        s.outstanding += 1.0;
+        bucket.push(TraceRecord { region, ..*rec });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::trace::FunctionId;
+
+    fn rec(t_ms: f64, region: u32) -> TraceRecord {
+        TraceRecord {
+            t: SimTime::from_ms(t_ms),
+            function: FunctionId(0),
+            region: RegionId(region),
+            payload_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn trace_region_is_identity() {
+        let records = vec![rec(0.0, 1), rec(10.0, 0), rec(20.0, 1)];
+        let split = route_records(&records, 2, &mut TraceRegion).unwrap();
+        assert_eq!(split[0].len(), 1);
+        assert_eq!(split[1].len(), 2);
+        assert_eq!(split[1][0].t, SimTime::ZERO);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let records: Vec<TraceRecord> = (0..6).map(|i| rec(i as f64, 0)).collect();
+        let split = route_records(&records, 3, &mut RoundRobin::default()).unwrap();
+        for bucket in &split {
+            assert_eq!(bucket.len(), 2);
+        }
+        // Region ids were rewritten to the routed region.
+        assert_eq!(split[2][0].region, RegionId(2));
+    }
+
+    #[test]
+    fn fastest_queue_balances_a_burst() {
+        // 9 simultaneous arrivals, all tagged region 0: least-outstanding
+        // routing must spread them evenly instead of piling on region 0.
+        let records: Vec<TraceRecord> = (0..9).map(|_| rec(0.0, 0)).collect();
+        let split = route_records(&records, 3, &mut FastestQueue).unwrap();
+        for bucket in &split {
+            assert_eq!(bucket.len(), 3, "burst not balanced: {split:?}");
+        }
+    }
+
+    #[test]
+    fn fastest_queue_forgets_old_load() {
+        // A burst to warm region 0's counter, then a long gap: the decayed
+        // estimate ties back to ~0 everywhere and region 0 (lowest id)
+        // wins the tie again.
+        let mut records: Vec<TraceRecord> = (0..4).map(|_| rec(0.0, 0)).collect();
+        records.push(rec(40.0 * ROUTE_TAU_MS, 0));
+        let split = route_records(&records, 2, &mut FastestQueue).unwrap();
+        let late = split[0].iter().find(|r| r.t > SimTime::from_ms(1.0));
+        assert!(late.is_some(), "late arrival should route to region 0: {split:?}");
+    }
+
+    #[test]
+    fn out_of_range_region_is_an_error() {
+        let records = vec![rec(0.0, 5)];
+        let err = route_records(&records, 2, &mut TraceRegion).unwrap_err();
+        assert!(err.contains("region"), "unhelpful: {err}");
+    }
+}

@@ -1,0 +1,298 @@
+//! Serializable policy specifications — the config/CLI surface.
+//!
+//! A [`PolicySpec`] is a plain cloneable value that lives in
+//! `ExperimentConfig` (and per-function overrides in the trace registry);
+//! worlds call [`PolicySpec::build`] once per run to get a boxed
+//! [`SelectionPolicy`] with fresh state, so paired conditions and
+//! thread-fanned runs each fork their own deterministic policy instance.
+//! The text syntax (`name` or `name:param`, e.g. `budget:0.1`) is what
+//! `--policy` and `--policies` accept on the CLI and what `Display`
+//! round-trips.
+
+use super::routing::{FastestQueue, RoundRobin, RoutingPolicy, TraceRegion};
+use super::{
+    BudgetedTermination, EpsilonGreedy, FixedThreshold, NeverTerminate, OnlineGate,
+    OracleFactor, RandomKill, SelectionPolicy,
+};
+
+/// Run-time inputs a policy is built from: the pre-tested threshold and
+/// the elysium percentile (what the online collector re-estimates).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyInit {
+    /// Initial elysium threshold, ms (from the pre-test; `f64::INFINITY`
+    /// before calibration).
+    pub threshold_ms: f64,
+    /// Target percentile for threshold (re)calibration.
+    pub percentile: f64,
+}
+
+/// A selection policy as configuration: cloneable, comparable, parseable.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PolicySpec {
+    /// The paper's gate: fixed pre-tested elysium threshold (`fixed`).
+    #[default]
+    Fixed,
+    /// §IV online collector, republishing every `update_every` reports
+    /// (`online` / `online:N`).
+    Online { update_every: u64 },
+    /// The baseline: no benchmark, never terminate (`never`).
+    NeverTerminate,
+    /// Fixed threshold with the running termination rate capped at
+    /// `max_rate` (`budget:F`).
+    Budgeted { max_rate: f64 },
+    /// Fixed threshold, but keep slow instances with probability
+    /// `epsilon` to re-sample drifted nodes (`epsilon:F`).
+    EpsilonGreedy { epsilon: f64 },
+    /// Ablation control: terminate uniformly at random (`randomkill:F`).
+    RandomKill { rate: f64 },
+    /// Ablation upper bound: judge the true perf factor (`oracle:F`).
+    OracleFactor { min_factor: f64 },
+}
+
+impl PolicySpec {
+    /// Every built-in, at its default parameters — what the check-script
+    /// smoke stage and the policy test matrix iterate over.
+    pub const BUILTINS: [PolicySpec; 7] = [
+        PolicySpec::Fixed,
+        PolicySpec::Online { update_every: 10 },
+        PolicySpec::NeverTerminate,
+        PolicySpec::Budgeted { max_rate: 0.1 },
+        PolicySpec::EpsilonGreedy { epsilon: 0.05 },
+        PolicySpec::RandomKill { rate: 0.4 },
+        PolicySpec::OracleFactor { min_factor: 1.0 },
+    ];
+
+    /// Parse the CLI syntax: `name` or `name:param`.
+    pub fn parse(s: &str) -> Result<PolicySpec, String> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p.trim())),
+            None => (s.trim(), None),
+        };
+        let f = |default: f64| -> Result<f64, String> {
+            match param {
+                None => Ok(default),
+                Some(p) => {
+                    p.parse::<f64>().map_err(|e| format!("policy {name:?}: bad parameter {p:?}: {e}"))
+                }
+            }
+        };
+        let spec = match name {
+            "fixed" | "elysium" => {
+                if param.is_some() {
+                    return Err("policy \"fixed\" takes no parameter (the threshold \
+                                comes from the pre-test)"
+                        .into());
+                }
+                PolicySpec::Fixed
+            }
+            "online" => {
+                let every = match param {
+                    None => 10,
+                    Some(p) => p
+                        .parse::<u64>()
+                        .map_err(|e| format!("policy \"online\": bad parameter {p:?}: {e}"))?,
+                };
+                if every == 0 {
+                    return Err("policy \"online\": update period must be at least 1".into());
+                }
+                PolicySpec::Online { update_every: every }
+            }
+            "never" | "baseline" => {
+                if param.is_some() {
+                    return Err("policy \"never\" takes no parameter".into());
+                }
+                PolicySpec::NeverTerminate
+            }
+            "budget" => {
+                let rate = f(0.1)?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(format!("policy \"budget\": rate {rate} outside [0, 1]"));
+                }
+                PolicySpec::Budgeted { max_rate: rate }
+            }
+            "epsilon" => {
+                let eps = f(0.05)?;
+                if !(0.0..=1.0).contains(&eps) {
+                    return Err(format!("policy \"epsilon\": epsilon {eps} outside [0, 1]"));
+                }
+                PolicySpec::EpsilonGreedy { epsilon: eps }
+            }
+            "randomkill" | "random" => {
+                let rate = f(0.4)?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(format!("policy \"randomkill\": rate {rate} outside [0, 1]"));
+                }
+                PolicySpec::RandomKill { rate }
+            }
+            "oracle" => {
+                let min = f(1.0)?;
+                if !(min.is_finite() && min > 0.0) {
+                    return Err(format!("policy \"oracle\": min factor {min} must be positive"));
+                }
+                PolicySpec::OracleFactor { min_factor: min }
+            }
+            other => {
+                return Err(format!(
+                    "unknown policy {other:?}; known: fixed, online[:N], never, \
+                     budget[:F], epsilon[:F], randomkill[:F], oracle[:F]"
+                ))
+            }
+        };
+        Ok(spec)
+    }
+
+    /// Parse a comma-separated `--policies` list.
+    pub fn parse_list(s: &str) -> Result<Vec<PolicySpec>, String> {
+        let specs: Vec<PolicySpec> = s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(PolicySpec::parse)
+            .collect::<Result<_, _>>()?;
+        if specs.is_empty() {
+            return Err("empty policy list".into());
+        }
+        Ok(specs)
+    }
+
+    /// Build a fresh policy instance for one run.
+    ///
+    /// This is the only place specs become state; calling it per run is
+    /// what lets paired conditions and thread-fanned runs fork identical,
+    /// independent policy state deterministically.
+    pub fn build(&self, init: PolicyInit) -> Box<dyn SelectionPolicy> {
+        match *self {
+            PolicySpec::Fixed => Box::new(FixedThreshold::new(init.threshold_ms)),
+            PolicySpec::Online { update_every } => {
+                Box::new(OnlineGate::new(init.percentile, init.threshold_ms, update_every))
+            }
+            PolicySpec::NeverTerminate => Box::new(NeverTerminate),
+            PolicySpec::Budgeted { max_rate } => {
+                Box::new(BudgetedTermination::new(init.threshold_ms, max_rate))
+            }
+            PolicySpec::EpsilonGreedy { epsilon } => {
+                Box::new(EpsilonGreedy::new(init.threshold_ms, epsilon))
+            }
+            PolicySpec::RandomKill { rate } => Box::new(RandomKill::new(rate)),
+            PolicySpec::OracleFactor { min_factor } => Box::new(OracleFactor::new(min_factor)),
+        }
+    }
+}
+
+impl std::fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            PolicySpec::Fixed => write!(f, "fixed"),
+            PolicySpec::Online { update_every } => write!(f, "online:{update_every}"),
+            PolicySpec::NeverTerminate => write!(f, "never"),
+            PolicySpec::Budgeted { max_rate } => write!(f, "budget:{max_rate}"),
+            PolicySpec::EpsilonGreedy { epsilon } => write!(f, "epsilon:{epsilon}"),
+            PolicySpec::RandomKill { rate } => write!(f, "randomkill:{rate}"),
+            PolicySpec::OracleFactor { min_factor } => write!(f, "oracle:{min_factor}"),
+        }
+    }
+}
+
+/// A cross-region routing policy as configuration (`--routing`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingSpec {
+    /// Honor the trace's region ids (`trace`; today's behavior).
+    #[default]
+    Trace,
+    /// Route to the region with the least router-estimated outstanding
+    /// work (`fastest`).
+    FastestQueue,
+    /// Cycle regions in id order (`rr`).
+    RoundRobin,
+}
+
+impl RoutingSpec {
+    pub fn parse(s: &str) -> Result<RoutingSpec, String> {
+        match s.trim() {
+            "trace" => Ok(RoutingSpec::Trace),
+            "fastest" | "fastest-queue" => Ok(RoutingSpec::FastestQueue),
+            "rr" | "roundrobin" | "round-robin" => Ok(RoutingSpec::RoundRobin),
+            other => Err(format!("unknown routing {other:?}; known: trace, fastest, rr")),
+        }
+    }
+
+    /// Build a fresh router for one replay.
+    pub fn build(&self) -> Box<dyn RoutingPolicy> {
+        match self {
+            RoutingSpec::Trace => Box::new(TraceRegion),
+            RoutingSpec::FastestQueue => Box::new(FastestQueue::default()),
+            RoutingSpec::RoundRobin => Box::new(RoundRobin::default()),
+        }
+    }
+}
+
+impl std::fmt::Display for RoutingSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoutingSpec::Trace => write!(f, "trace"),
+            RoutingSpec::FastestQueue => write!(f, "fastest"),
+            RoutingSpec::RoundRobin => write!(f, "rr"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_syntax() {
+        assert_eq!(PolicySpec::parse("fixed").unwrap(), PolicySpec::Fixed);
+        assert_eq!(
+            PolicySpec::parse("budget:0.1").unwrap(),
+            PolicySpec::Budgeted { max_rate: 0.1 }
+        );
+        assert_eq!(
+            PolicySpec::parse("online:25").unwrap(),
+            PolicySpec::Online { update_every: 25 }
+        );
+        assert_eq!(
+            PolicySpec::parse_list("fixed,online,budget:0.1").unwrap(),
+            vec![
+                PolicySpec::Fixed,
+                PolicySpec::Online { update_every: 10 },
+                PolicySpec::Budgeted { max_rate: 0.1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_nonsense() {
+        assert!(PolicySpec::parse("turbo").is_err());
+        assert!(PolicySpec::parse("budget:2.0").is_err());
+        assert!(PolicySpec::parse("online:0").is_err());
+        assert!(PolicySpec::parse("fixed:3").is_err());
+        assert!(PolicySpec::parse_list("").is_err());
+        assert!(RoutingSpec::parse("teleport").is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for spec in PolicySpec::BUILTINS {
+            let again = PolicySpec::parse(&spec.to_string()).unwrap();
+            assert_eq!(spec, again, "{spec} did not round-trip");
+        }
+        for r in [RoutingSpec::Trace, RoutingSpec::FastestQueue, RoutingSpec::RoundRobin] {
+            assert_eq!(RoutingSpec::parse(&r.to_string()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn build_forks_fresh_state() {
+        let spec = PolicySpec::Budgeted { max_rate: 0.5 };
+        let init = PolicyInit { threshold_ms: 100.0, percentile: 60.0 };
+        let mut a = spec.build(init);
+        let ctx = super::super::JudgeCtx { perf_factor: 1.0, draw: 0.5, retries: 0 };
+        for _ in 0..4 {
+            a.judge(500.0, &ctx);
+        }
+        // A second build starts from zero spent budget.
+        let mut b = spec.build(init);
+        assert_eq!(b.judge(500.0, &ctx), super::super::Verdict::Keep);
+        assert_eq!(a.published_threshold(), b.published_threshold());
+    }
+}

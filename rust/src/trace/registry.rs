@@ -10,6 +10,7 @@
 //! deterministic per-function parameter variation.
 
 use crate::coordinator::MinosConfig;
+use crate::policy::PolicySpec;
 use crate::workload::download::NetworkModel;
 use crate::workload::inference::inference_spec;
 use crate::workload::FunctionSpec;
@@ -26,6 +27,10 @@ pub struct FunctionProfile {
     pub minos: MinosConfig,
     /// Elysium percentile used by this function's pre-test.
     pub elysium_percentile: f64,
+    /// Selection-policy override for this function; `None` inherits the
+    /// experiment-wide `--policy` (the paper stores per-function Minos
+    /// configuration, §II-B — the decision rule is part of it).
+    pub policy: Option<PolicySpec>,
 }
 
 /// Dense id-indexed collection of function profiles.
@@ -86,9 +91,21 @@ impl FunctionRegistry {
                 spec,
                 minos: MinosConfig::paper_default(),
                 elysium_percentile: 60.0,
+                policy: None,
             });
         }
         reg
+    }
+
+    /// Set one function's selection-policy override (panics on an unknown
+    /// id) — builder-style, for tests and custom registries.
+    pub fn with_policy(mut self, id: FunctionId, policy: PolicySpec) -> FunctionRegistry {
+        let p = self
+            .profiles
+            .get_mut(id.0 as usize)
+            .unwrap_or_else(|| panic!("no function {id} in registry"));
+        p.policy = Some(policy);
+        self
     }
 }
 
@@ -148,6 +165,7 @@ mod tests {
             spec: FunctionSpec::weather(),
             minos: MinosConfig::paper_default(),
             elysium_percentile: 60.0,
+            policy: None,
         });
         assert_eq!(reg.len(), 1);
         assert!(!reg.is_empty());
@@ -159,6 +177,7 @@ mod tests {
                 spec: FunctionSpec::weather(),
                 minos: MinosConfig::paper_default(),
                 elysium_percentile: 60.0,
+                policy: None,
             });
         }));
         assert!(r.is_err(), "sparse ids must be rejected");
@@ -169,6 +188,17 @@ mod tests {
         let b = batch_spec();
         assert!(b.base_analysis_ms > FunctionSpec::weather().base_analysis_ms);
         assert!(b.download_bytes > FunctionSpec::weather().download_bytes);
+    }
+
+    #[test]
+    fn policy_overrides_are_per_function() {
+        let reg =
+            FunctionRegistry::demo(3).with_policy(FunctionId(1), PolicySpec::NeverTerminate);
+        assert_eq!(
+            reg.get(FunctionId(1)).unwrap().policy,
+            Some(PolicySpec::NeverTerminate)
+        );
+        assert_eq!(reg.get(FunctionId(0)).unwrap().policy, None);
     }
 
     #[test]

@@ -121,8 +121,7 @@ fn fig7_cost_crossover_dynamics() {
 fn online_threshold_matches_pretest_quality() {
     // §IV: the online collector should reach a similar improvement to the
     // offline pre-test (temporarily suboptimal is acceptable, broken isn't).
-    let mut cfg = medium(1, 404);
-    cfg.online_update_every = Some(10);
+    let cfg = medium(1, 404).with_online_threshold(10);
     let online = runner::run_paired(&cfg, None).unwrap();
     assert!(online.minos.online_pushes > 0, "collector never published");
     let imp = online.analysis_improvement_pct();

@@ -1,0 +1,136 @@
+//! Policy-API safety net: the pluggable `policy/` redesign must be
+//! *invisible* where it re-states existing behavior, and deterministic
+//! everywhere.
+//!
+//! - `NeverTerminate` (enabled) is bit-identical to the baseline arm
+//!   (`MinosConfig::baseline()`) — same RNG stream, same records;
+//! - `EpsilonGreedy { epsilon: 0 }` is bit-identical to `FixedThreshold`
+//!   (the paper's gate), and `Budgeted { max_rate: 1 }` likewise;
+//! - every built-in policy is bit-identical at any `--threads` count;
+//! - `Budgeted` respects its termination-rate cap at run level.
+//!
+//! (`FixedThreshold` itself is pinned to the pre-redesign physics by the
+//! golden-fingerprint test in `hotpath_equivalence.rs` — the default
+//! policy is `Fixed`, so those fingerprints are exactly the old gate.)
+
+use std::sync::Arc;
+
+use minos::coordinator::MinosConfig;
+use minos::experiment::{runner, ExperimentConfig, MetricsMode};
+use minos::policy::PolicySpec;
+use minos::trace::ReplaySchedule;
+
+fn assert_bit_identical(a: &minos::experiment::RunResult, b: &minos::experiment::RunResult) {
+    assert_eq!(a.successful(), b.successful());
+    assert_eq!(a.terminations, b.terminations);
+    assert_eq!(a.forced_passes, b.forced_passes);
+    assert_eq!(a.cold_starts, b.cold_starts);
+    assert_eq!(a.warm_hits, b.warm_hits);
+    assert_eq!(
+        a.total_cost_usd().to_bits(),
+        b.total_cost_usd().to_bits(),
+        "billed streams diverged"
+    );
+    assert_eq!(a.records().len(), b.records().len());
+    for (x, y) in a.records().iter().zip(b.records()) {
+        assert_eq!(x.completed_at, y.completed_at);
+        assert_eq!(x.inv_id, y.inv_id);
+        assert_eq!(x.exec_ms.to_bits(), y.exec_ms.to_bits());
+    }
+}
+
+#[test]
+fn never_terminate_is_bit_identical_to_the_baseline_arm() {
+    let mut cfg = ExperimentConfig::smoke(1, 2_024);
+    cfg.policy = PolicySpec::NeverTerminate;
+    let enabled = MinosConfig::paper_default();
+    let treated = runner::run_single(&cfg, &enabled, 2, false, None).unwrap();
+
+    let base_cfg = ExperimentConfig::smoke(1, 2_024); // default policy
+    let baseline = runner::run_single(&base_cfg, &MinosConfig::baseline(), 2, false, None)
+        .unwrap();
+
+    assert!(treated.bench_scores().is_empty(), "never must not benchmark");
+    assert_bit_identical(&treated, &baseline);
+}
+
+#[test]
+fn epsilon_zero_and_full_budget_match_the_fixed_gate() {
+    let minos = MinosConfig::with_threshold(360.0);
+    let run = |policy: PolicySpec| {
+        let mut cfg = ExperimentConfig::smoke(1, 3_033);
+        cfg.policy = policy;
+        runner::run_single(&cfg, &minos, 0, false, None).unwrap()
+    };
+    let fixed = run(PolicySpec::Fixed);
+    assert!(fixed.terminations > 0, "gate never fired — test is vacuous");
+    assert_bit_identical(&fixed, &run(PolicySpec::EpsilonGreedy { epsilon: 0.0 }));
+    assert_bit_identical(&fixed, &run(PolicySpec::Budgeted { max_rate: 1.0 }));
+}
+
+#[test]
+fn every_builtin_policy_is_bit_identical_across_thread_counts() {
+    let schedule = Arc::new(ReplaySchedule::from_times_ms(
+        &(0..250).map(|i| i as f64 * 420.0).collect::<Vec<f64>>(),
+    ));
+    for spec in PolicySpec::BUILTINS {
+        let mut cfg = ExperimentConfig::smoke(1, 5_150);
+        cfg.policy = spec;
+        cfg.replay = Some(schedule.clone());
+        let seq = runner::run_paired_threads(&cfg, None, 1).unwrap();
+        let par = runner::run_paired_threads(&cfg, None, 8).unwrap();
+        assert_eq!(
+            seq.pretest.threshold_ms.to_bits(),
+            par.pretest.threshold_ms.to_bits(),
+            "{spec}: pretest diverged"
+        );
+        for (a, b) in [(&seq.minos, &par.minos), (&seq.baseline, &par.baseline)] {
+            assert_eq!(a.successful(), b.successful(), "{spec}");
+            assert_eq!(a.terminations, b.terminations, "{spec}");
+            assert_eq!(
+                a.total_cost_usd().to_bits(),
+                b.total_cost_usd().to_bits(),
+                "{spec}: thread count changed the replay"
+            );
+        }
+        // The baseline arm is the baseline arm under *every* policy.
+        assert_eq!(seq.baseline.terminations, 0, "{spec}: baseline terminated");
+        assert!(seq.baseline.bench_scores().is_empty(), "{spec}: baseline benchmarked");
+    }
+}
+
+#[test]
+fn budgeted_policy_caps_the_run_level_termination_rate() {
+    let mut cfg = ExperimentConfig::smoke(1, 7_077);
+    cfg.metrics = MetricsMode::Full;
+    cfg.policy = PolicySpec::Budgeted { max_rate: 0.1 };
+    // Impossible threshold: every benchmark fails, so only the budget
+    // separates this from terminate-everything.
+    let minos = MinosConfig::with_threshold(0.0);
+    let r = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    assert!(r.successful() > 0);
+    assert!(r.terminations > 0, "budget should still allow some terminations");
+    // Policy invariant, observed end-to-end: terminations never exceed
+    // 10% of judged gates (every judged gate records one bench score).
+    assert!(
+        r.terminations as f64 <= 0.1 * r.bench_count() as f64,
+        "cap violated: {} terminations over {} gates",
+        r.terminations,
+        r.bench_count()
+    );
+}
+
+#[test]
+fn online_policy_equals_the_old_online_config_surface() {
+    // The back-compat constructor must produce the policy the removed
+    // `online_update_every` field used to wire up: collector active,
+    // pushes counted, run completes.
+    let mut cfg = ExperimentConfig::smoke(1, 9_099);
+    cfg.vus.horizon = minos::sim::SimTime::from_secs(240.0);
+    let cfg = cfg.with_online_threshold(5);
+    assert_eq!(cfg.policy, PolicySpec::Online { update_every: 5 });
+    let o = runner::run_paired(&cfg, None).unwrap();
+    assert!(o.minos.online_pushes > 0, "collector never published");
+    assert_eq!(o.baseline.online_pushes, 0);
+    assert!(o.minos.successful() > 0 && o.baseline.successful() > 0);
+}

@@ -18,12 +18,29 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== cargo bench --bench hotpath =="
-cargo bench --bench hotpath -- --json "$(pwd)/BENCH_hotpath.json"
+# Benches write their JSON to a temp path that is moved into place only on
+# success: a failing `cargo bench` must exit non-zero here and leave any
+# previously committed BENCH_*.json untouched (no stale/partial results).
+run_bench() { # <bench-name> <output-json>
+    local bench="$1" out="$2" tmp
+    tmp="$(mktemp "${out}.XXXXXX.tmp")"
+    echo "== cargo bench --bench $bench =="
+    if ! cargo bench --bench "$bench" -- --json "$tmp"; then
+        rm -f "$tmp"
+        echo "error: cargo bench --bench $bench failed; $out left untouched" >&2
+        exit 1
+    fi
+    if [ ! -s "$tmp" ]; then
+        rm -f "$tmp"
+        echo "error: bench $bench produced no JSON; $out left untouched" >&2
+        exit 1
+    fi
+    mv "$tmp" "$out"
+}
 
+run_bench hotpath "$(pwd)/BENCH_hotpath.json"
 echo
-echo "== cargo bench --bench cluster_replay =="
-cargo bench --bench cluster_replay -- --json "$(pwd)/BENCH_cluster.json"
+run_bench cluster_replay "$(pwd)/BENCH_cluster.json"
 
 echo
 echo "wrote BENCH_hotpath.json and BENCH_cluster.json"

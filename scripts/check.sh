@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast] [--bench]
-#   --fast   skip the release build and the bench compile (debug tests only)
-#   --bench  additionally run scripts/bench.sh (writes BENCH_*.json at the
-#            repo root — the hot-path perf trajectory)
+# Usage: scripts/check.sh [--fast] [--bench] [--policies]
+#   --fast     skip the release build and the bench compile (debug tests only)
+#   --bench    additionally run scripts/bench.sh (writes BENCH_*.json at the
+#              repo root — the hot-path perf trajectory)
+#   --policies additionally smoke-run a short replay under every built-in
+#              selection policy and assert a non-empty report
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -15,11 +17,13 @@ cd "$(dirname "$0")/.."
 
 FAST=0
 BENCH=0
+POLICIES=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
         --bench) BENCH=1 ;;
-        *) echo "unknown option: $arg (known: --fast --bench)" >&2; exit 2 ;;
+        --policies) POLICIES=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench --policies)" >&2; exit 2 ;;
     esac
 done
 
@@ -51,9 +55,39 @@ else
     echo "(pytest not available; skipping python/tests)"
 fi
 
+if [ "$POLICIES" -eq 1 ]; then
+    echo "== policy smoke (short replay under every built-in policy) =="
+    cargo build --release --quiet
+    MINOS_BIN="$(pwd)/target/release/minos"
+    [ -x "$MINOS_BIN" ] || MINOS_BIN="$(pwd)/rust/target/release/minos"
+    for policy in fixed online:10 never budget:0.1 epsilon:0.05 randomkill:0.4 oracle:1.0; do
+        echo "-- policy $policy"
+        out="$("$MINOS_BIN" replay --synth --functions 2 --hours 0.02 --rate 2 \
+            --policy "$policy" --threads 1)"
+        # A healthy replay prints the per-function table and a non-zero
+        # completion total; an empty report means the policy wiring broke.
+        echo "$out" | grep -q "per-function breakdown" \
+            || { echo "policy $policy: no report produced" >&2; exit 1; }
+        echo "$out" | grep -Eq "total: [0-9]+ arrivals, [1-9][0-9]* completed" \
+            || { echo "policy $policy: replay completed nothing" >&2; exit 1; }
+    done
+    echo "-- routing smoke (cluster replay per routing policy)"
+    for routing in trace fastest rr; do
+        "$MINOS_BIN" replay --synth --functions 2 --hours 0.02 --rate 2 \
+            --regions 2 --routing "$routing" --threads 1 \
+            | grep -q "per-region" \
+            || { echo "routing $routing: no cluster report produced" >&2; exit 1; }
+    done
+fi
+
 if [ "$BENCH" -eq 1 ]; then
     echo "== scripts/bench.sh =="
     scripts/bench.sh
+fi
+
+if [ ! -f rust/tests/golden_fingerprints.txt ]; then
+    echo "NOTE: rust/tests/golden_fingerprints.txt is missing — generate it on a"
+    echo "      known-good build with: MINOS_WRITE_GOLDEN=1 cargo test --test hotpath_equivalence"
 fi
 
 echo "all checks passed"
