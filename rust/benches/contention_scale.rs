@@ -1,0 +1,124 @@
+//! Node-layer scale: the SoA table + batched OU drift from 1k to 50k
+//! nodes per region.
+//!
+//! Two measurements anchor the refactor:
+//!
+//! 1. **drift pass throughput** — one batched epoch advance over the full
+//!    drift column (the per-epoch cost that replaced per-lookup `exp` +
+//!    normal draws), in nodes/second at each pool size;
+//! 2. **contended region replay** — a single-region cluster replay with
+//!    contention on and 60 s drift epochs at 1k / 10k / 50k nodes. The
+//!    50k-node point is the acceptance bar: it must *complete*, and its
+//!    events/second show how node-pool size bends the hot path.
+//!
+//! Run: `cargo bench --bench contention_scale [-- --json OUT.json]`
+
+use minos::experiment::cluster::run_cluster;
+use minos::experiment::config::ExperimentConfig;
+use minos::platform::{ContentionCurve, NodeModel, NodeTable};
+use minos::sim::SimTime;
+use minos::testkit::bench::{json_output_path, throughput, time_median};
+use minos::testkit::scenarios;
+use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::json::Json;
+use minos::util::prng::Rng;
+
+const POOL_SIZES: [usize; 3] = [1_000, 10_000, 50_000];
+
+fn main() {
+    println!("== contention-model scale benchmarks ==\n");
+    let mut json_results: Vec<Json> = Vec::new();
+
+    // 1. Batched drift pass: advance every node across one epoch boundary.
+    println!("-- batched OU drift pass (one epoch, full column)");
+    for &n in &POOL_SIZES {
+        let model = NodeModel {
+            drift_epoch_ms: 60_000.0,
+            contention: ContentionCurve::Power { strength: 0.5, exponent: 0.7 },
+            capacity: 4,
+            ..Default::default()
+        };
+        let bases: Vec<f64> = (0..n).map(|i| 0.8 + 0.4 * (i as f64 / n as f64)).collect();
+        let mut epoch = 0u64;
+        let mut table = NodeTable::with_base_factors(model, &bases);
+        let probe = table.ids()[0];
+        let mut rng = Rng::new(7);
+        let t = time_median(&format!("drift pass over {n} nodes"), 7, || {
+            // Each iteration crosses exactly one fresh epoch boundary, so
+            // the timed work is one full-column batched advance.
+            epoch += 1;
+            table.factor(probe, SimTime::from_ms(60_000.0 * epoch as f64), &mut rng)
+        });
+        println!("{}  ({:.1}M nodes/s)", t.report(), throughput(&t, n as u64) / 1e6);
+        json_results.push(Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("nodes", Json::num(n as f64)),
+            ("median_ms", Json::num(t.median_ms)),
+            ("median_ns", Json::num(t.median_ms * 1e6)),
+            ("nodes_per_s", Json::num(throughput(&t, n as u64))),
+        ]));
+    }
+
+    // 2. Contended single-region replay at growing pool sizes.
+    println!("\n-- contended region replay (single region, 60 s drift epochs)");
+    let synth = SynthConfig {
+        n_functions: 6,
+        n_regions: 1,
+        hours: 0.25,
+        total_rate_rps: 30.0,
+        seed: 515,
+        ..Default::default()
+    };
+    let trace = synth.generate();
+    println!(
+        "trace: {} invocations, {} functions over {:.2} h\n",
+        trace.len(),
+        trace.n_functions(),
+        synth.hours
+    );
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cfg = ExperimentConfig::paper_day(0);
+
+    for &n in &POOL_SIZES {
+        let cluster = scenarios::contended_cluster(1, n);
+        let mut events = 0u64;
+        let mut completed = 0u64;
+        let t = time_median(&format!("contended replay, {n}-node region"), 3, || {
+            let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+            events = o.total_events_handled();
+            completed = o.total_completed();
+            events
+        });
+        assert_eq!(
+            completed,
+            trace.len() as u64,
+            "{n}-node contended replay dropped invocations"
+        );
+        println!(
+            "{}  ({:.0}k events/s, {} completed)",
+            t.report(),
+            throughput(&t, events) / 1e3,
+            completed
+        );
+        json_results.push(Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("nodes", Json::num(n as f64)),
+            ("median_ms", Json::num(t.median_ms)),
+            ("events", Json::num(events as f64)),
+            ("events_per_s", Json::num(throughput(&t, events))),
+            ("completed", Json::num(completed as f64)),
+        ]));
+    }
+    println!("\n50k-node contended region replay completed.");
+
+    if let Some(path) = json_output_path() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("contention_scale")),
+            ("trace_invocations", Json::num(trace.len() as f64)),
+            ("results", Json::arr(json_results)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("machine-readable results written to {path}");
+    }
+}

@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use crate::coordinator::MinosConfig;
 use crate::platform::billing::Billing;
-use crate::platform::PlatformConfig;
+use crate::platform::{ContentionCurve, PlatformConfig};
 use crate::policy::{PolicySpec, RoutingSpec};
 use crate::trace::ReplaySchedule;
 use crate::workload::{FunctionSpec, VirtualUsers};
@@ -98,6 +98,21 @@ impl ExperimentConfig {
         self.policy = PolicySpec::Online { update_every };
         self
     }
+
+    /// Couple node speed to load: instances slow their node down by
+    /// `curve(resident / node_capacity)` (see `platform::contention`).
+    /// Note the feedback loop this opens for the treated arm: terminating
+    /// slow instances *changes* which nodes are slow, so online/epsilon
+    /// policies calibrate against a moving target.
+    pub fn with_contention(
+        mut self,
+        curve: ContentionCurve,
+        node_capacity: u32,
+    ) -> ExperimentConfig {
+        self.platform.contention = curve;
+        self.platform.node_capacity = node_capacity;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -135,5 +150,16 @@ mod tests {
     #[test]
     fn smoke_is_short() {
         assert_eq!(ExperimentConfig::smoke(0, 1).vus.horizon.as_secs(), 120.0);
+    }
+
+    #[test]
+    fn contention_defaults_off_and_builder_applies() {
+        let c = ExperimentConfig::paper_day(0);
+        assert!(c.platform.contention.is_off(), "paper config must stay contention-free");
+        assert_eq!(c.platform.variability.drift_epoch_ms, 0.0);
+        let curve = ContentionCurve::Power { strength: 0.5, exponent: 0.7 };
+        let c = c.with_contention(curve, 4);
+        assert_eq!(c.platform.contention, curve);
+        assert_eq!(c.platform.node_capacity, 4);
     }
 }

@@ -16,6 +16,15 @@
 //! policy when a request completes ([`SelectionPolicy::on_request_complete`])
 //! — the moment online-threshold pushes take effect (§IV).
 //!
+//! The perf factor the gate hands a policy (via benchmark durations and
+//! `JudgeCtx::perf_factor`) is the *contention-coupled* node speed when a
+//! [`ContentionCurve`](crate::platform::ContentionCurve) is configured:
+//! terminating an instance sheds load from its node and speeds the
+//! survivors up, so online/epsilon policies judge against a target their
+//! own verdicts move — the self-interference the paper's fixed-threshold
+//! analysis hand-waves. With contention off (the default) the factor is
+//! load-independent and the physics are pinned by the golden fingerprints.
+//!
 //! Timeline of one invocation attempt on an instance (times relative to
 //! when the instance starts serving it):
 //!

@@ -27,7 +27,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use minos::experiment::{cluster, config::ExperimentConfig, figures, report, runner, sweep};
-use minos::platform::ClusterConfig;
+use minos::platform::{ClusterConfig, ContentionCurve};
 use minos::policy::{PolicySpec, RoutingSpec};
 use minos::runtime::{calibrate::Calibration, ArtifactStore, Runtime};
 use minos::trace::{io as trace_io, FunctionRegistry, SynthConfig};
@@ -72,6 +72,7 @@ USAGE: minos <command> [options]
 
 COMMANDS:
   week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --threads T --real --policy P]
+             [--contention C --node-capacity N --drift-epoch S]
   fig7       cost-over-time series for one day      [--day N --seed N --step S]
   pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
   calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
@@ -84,6 +85,7 @@ COMMANDS:
              [--functions N --hours H --rate R --day N --seed N --out FILE]
              [--regions N --spill F --routing R --threads T --paired]
              [--policy P --full-records]
+             [--contention C --node-capacity N --drift-epoch S]
 
 REPLAY MODES:
   default    each function replays on its own isolated platform
@@ -109,6 +111,20 @@ ROUTING (--routing, cluster replays only):
   trace      honor the trace's region ids (default)
   fastest    admit to the region with the least outstanding routed work
   rr         round-robin across regions
+
+CONTENTION (--contention, week/sweep/openloop/replay):
+  off           no load coupling (default; bit-identical to the
+                contention-free model and the golden fingerprints)
+  linear[:S]    node speed x= 1 - S*load, load = residents/capacity (S def. 0.3)
+  power[:S[,E]] node speed x= 1 - S*load^E, E in (0,1] — concave: the first
+                co-tenants hurt the most (defaults S=0.4, E=0.7)
+  --node-capacity N   residents at which a node counts fully loaded (def. 8)
+  --drift-epoch S     advance node OU drift in batched S-second epochs
+                instead of exactly per lookup (0 = exact, the default;
+                batched keeps 10k+-node regions cheap)
+  Cluster replays scale the curve per demo-region archetype. Caveat: with
+  contention on, a policy's terminations speed surviving nodes up — online
+  and epsilon policies calibrate against a moving target.
 
 METRICS:
   replay and sweep record through O(1)-memory streaming sinks (Welford +
@@ -149,6 +165,32 @@ fn apply_policy(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply the node-model flags: `--contention CURVE` (e.g. `linear:0.3`,
+/// `power:0.4,0.7`, `off`), `--node-capacity N`, and `--drift-epoch S`
+/// (seconds; 0 = exact per-lookup OU transitions). No flags leave the
+/// contention-free, exact-drift model pinned by the golden fingerprints.
+fn apply_platform_model(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
+    if let Some(spec) = args.get("contention") {
+        cfg.platform.contention = ContentionCurve::parse(spec).map_err(anyhow::Error::msg)?;
+    }
+    let capacity = u(args, "node-capacity", cfg.platform.node_capacity as u64)?;
+    if capacity == 0 || capacity > u32::MAX as u64 {
+        bail!("--node-capacity must be between 1 and {}", u32::MAX);
+    }
+    cfg.platform.node_capacity = capacity as u32;
+    let epoch_s = f(args, "drift-epoch", cfg.platform.variability.drift_epoch_ms / 1_000.0)?;
+    if !(epoch_s.is_finite() && epoch_s >= 0.0) {
+        bail!("--drift-epoch must be a non-negative number of seconds");
+    }
+    if epoch_s > 0.0 && epoch_s < 0.001 {
+        // A sub-millisecond epoch would batch-advance every node once per
+        // simulated microsecond — an effective hang, not a model.
+        bail!("--drift-epoch must be 0 (exact) or at least 0.001 seconds");
+    }
+    cfg.platform.variability.drift_epoch_ms = epoch_s * 1_000.0;
+    Ok(())
+}
+
 fn cmd_week(args: &Args) -> Result<()> {
     let days = u(args, "days", 7)? as u32;
     let seed = u(args, "seed", 0x31A5)?;
@@ -157,6 +199,7 @@ fn cmd_week(args: &Args) -> Result<()> {
     let mut base = ExperimentConfig::paper_day(0);
     base.seed = seed;
     apply_policy(args, &mut base)?;
+    apply_platform_model(args, &mut base)?;
     let outcomes = runner::run_week_threads(&base, days, rt.as_ref(), threads)?;
     print!("{}", report::week_report(&outcomes));
     if let Some(rt) = &rt {
@@ -231,10 +274,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // (same seeds, same platform lotteries — directly comparable).
         // It runs its own seed ladder on the paper's sweep day; refuse
         // flags it would silently ignore rather than discard them.
-        for ignored in ["day", "seed", "policy"] {
+        for ignored in ["day", "seed", "policy", "contention", "node-capacity", "drift-epoch"] {
             if args.get(ignored).is_some() {
                 bail!("--{ignored} has no effect with --policies (the policy sweep \
-                       uses its own seed ladder); drop it");
+                       uses its own seed ladder and platform); drop it");
             }
         }
         let specs = PolicySpec::parse_list(list).map_err(anyhow::Error::msg)?;
@@ -267,6 +310,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cfg.seed = seed;
         cfg.elysium_percentile = pcts[i];
         apply_policy(args, &mut cfg)?;
+        apply_platform_model(args, &mut cfg)?;
         // The sweep table only reads aggregates: stream, don't store.
         cfg.metrics = minos::experiment::MetricsMode::Streaming;
         runner::run_paired(&cfg, None)
@@ -297,6 +341,7 @@ fn cmd_openloop(args: &Args) -> Result<()> {
     cfg.seed = seed;
     cfg.open_loop_rate_rps = Some(rate);
     apply_policy(args, &mut cfg)?;
+    apply_platform_model(args, &mut cfg)?;
     let o = runner::run_paired(&cfg, None)?;
     println!(
         "open loop @ {rate} req/s (Poisson, {} min horizon):",
@@ -407,6 +452,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let mut cfg = ExperimentConfig::paper_day(day);
     cfg.seed = seed;
     apply_policy(args, &mut cfg)?;
+    apply_platform_model(args, &mut cfg)?;
     if let Some(r) = args.get("routing") {
         cfg.routing = RoutingSpec::parse(r).map_err(anyhow::Error::msg)?;
     }
@@ -426,7 +472,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
             n_regions,
             trace.span()
         );
-        let cluster_cfg = ClusterConfig::demo(n_regions);
+        // The demo regions inherit the CLI node model, with per-archetype
+        // contention strengths (identical to `demo` when the flags are at
+        // their defaults).
+        let cluster_cfg = ClusterConfig::demo_contended(
+            n_regions,
+            cfg.platform.contention,
+            cfg.platform.node_capacity,
+            cfg.platform.variability.drift_epoch_ms,
+        );
         let outcome = cluster::run_cluster(&cfg, &registry, &trace, &cluster_cfg, threads)?;
         print!("{}", report::cluster_report(&outcome));
         return Ok(());

@@ -9,8 +9,9 @@
 //! identical to the sequential order. Within a region, deployments share
 //! nodes (see [`FaasPlatform::place_deploy`]).
 
+use super::contention::ContentionCurve;
 use super::platform::FaasPlatform;
-use super::region::{RegionConfig, RegionId};
+use super::region::{self, RegionConfig, RegionId};
 
 /// Static description of a multi-region cluster.
 #[derive(Debug, Clone, Default)]
@@ -35,6 +36,44 @@ impl ClusterConfig {
     /// archetypes (see [`RegionConfig::demo`]).
     pub fn demo(n: usize) -> ClusterConfig {
         ClusterConfig::new((0..n as u32).map(RegionConfig::demo).collect())
+    }
+
+    /// The demo cluster with a contention model applied per region: the
+    /// supplied curve is scaled by each archetype's contention scale
+    /// (regions differ in how hard co-tenancy bites), with a shared node
+    /// capacity and drift-advancement epoch. With `curve` off and
+    /// `drift_epoch_ms` 0 this is physically identical to
+    /// [`ClusterConfig::demo`].
+    pub fn demo_contended(
+        n: usize,
+        curve: ContentionCurve,
+        node_capacity: u32,
+        drift_epoch_ms: f64,
+    ) -> ClusterConfig {
+        ClusterConfig::new(
+            (0..n as u32)
+                .map(|i| {
+                    let mut r = RegionConfig::demo(i);
+                    r.platform.contention = curve.scaled(region::demo_contention_scale(i));
+                    r.platform.node_capacity = node_capacity;
+                    r.platform.variability.drift_epoch_ms = drift_epoch_ms;
+                    r
+                })
+                .collect(),
+        )
+    }
+
+    /// Apply an override to every region's config (scenario shaping:
+    /// pool sizes, quotas, curve tweaks). Region ids must stay untouched.
+    pub fn with_region_overrides(
+        mut self,
+        mut f: impl FnMut(&mut RegionConfig),
+    ) -> ClusterConfig {
+        for (i, r) in self.regions.iter_mut().enumerate() {
+            f(r);
+            assert_eq!(r.id.0 as usize, i, "override changed a region id");
+        }
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -85,6 +124,37 @@ mod tests {
         let f0 = platforms[0].node_base_factors();
         let f1 = platforms[1].node_base_factors();
         assert_ne!(f0, f1, "regions must draw independent node pools");
+    }
+
+    #[test]
+    fn demo_contended_scales_per_region_and_off_is_demo() {
+        let curve = ContentionCurve::Linear { strength: 0.4 };
+        let c = ClusterConfig::demo_contended(3, curve, 4, 60_000.0);
+        for (i, r) in c.iter().enumerate() {
+            assert_eq!(
+                r.platform.contention,
+                curve.scaled(region::demo_contention_scale(i as u32)),
+                "region {i} contention"
+            );
+            assert_eq!(r.platform.node_capacity, 4);
+            assert_eq!(r.platform.variability.drift_epoch_ms, 60_000.0);
+        }
+        // Archetypes 0 and 1 differ in contention scale.
+        assert_ne!(
+            c.get(RegionId(0)).unwrap().platform.contention,
+            c.get(RegionId(1)).unwrap().platform.contention
+        );
+        // The off/exact combination degenerates to the plain demo cluster.
+        let off = ClusterConfig::demo_contended(2, ContentionCurve::Off, 8, 0.0);
+        let plain = ClusterConfig::demo(2);
+        for (a, b) in off.iter().zip(plain.iter()) {
+            assert_eq!(a.platform.contention, b.platform.contention);
+            assert_eq!(a.platform.node_capacity, b.platform.node_capacity);
+            assert_eq!(
+                a.platform.variability.drift_epoch_ms,
+                b.platform.variability.drift_epoch_ms
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Load-dependent node contention: the noisy-neighbor coupling.
+//!
+//! The variability the paper exploits is *caused* by co-tenancy — "The
+//! Night Shift" (ref. [8]) measures diurnal, load-coupled platform speed,
+//! and Wen et al. ("Unveiling Overlooked Performance Variance in
+//! Serverless Computing") document co-location variance directly. A
+//! [`ContentionCurve`] closes that loop inside the simulator: a node's
+//! performance factor is multiplied by `contention(load)` where
+//! `load = resident_instances / node_capacity`, so placing instances on a
+//! node slows it down and terminating them speeds it back up.
+//!
+//! Invariants every curve guarantees (property-tested in
+//! `tests/properties.rs`):
+//!
+//! - `contention(0) == 1.0` exactly — an empty node behaves bit-identically
+//!   to the contention-free model, which is what keeps the default
+//!   configuration pinned to the golden fingerprints;
+//! - monotonically non-increasing in load — more co-tenants never speed a
+//!   node up;
+//! - bounded below by [`MIN_CONTENTION_FACTOR`] — a node saturates, it does
+//!   not stall.
+//!
+//! The curves are *concave in the penalty* (steep early degradation that
+//! flattens toward saturation, `power` with exponent < 1): the first few
+//! co-tenants evict the most cache and steal the most turbo headroom.
+
+/// No curve drives the factor below this: a fully-packed node runs at a
+/// quarter speed, it does not stop.
+pub const MIN_CONTENTION_FACTOR: f64 = 0.25;
+
+/// A concave node-slowdown curve, as configuration (`--contention`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ContentionCurve {
+    /// No load coupling (`off`): the pre-contention model, bit-identical.
+    #[default]
+    Off,
+    /// `1 - strength·load` (`linear[:S]`): every co-tenant costs the same.
+    Linear { strength: f64 },
+    /// `1 - strength·load^exponent` (`power[:S[,E]]`, exponent in (0, 1]):
+    /// concave penalty — the first co-tenants hurt the most.
+    Power { strength: f64, exponent: f64 },
+}
+
+impl ContentionCurve {
+    pub fn is_off(&self) -> bool {
+        matches!(self, ContentionCurve::Off)
+    }
+
+    /// The speed multiplier at a given load (`resident / capacity`; may
+    /// exceed 1.0 on oversubscribed nodes).
+    #[inline]
+    pub fn factor(&self, load: f64) -> f64 {
+        debug_assert!(load >= 0.0, "negative load {load}");
+        match *self {
+            ContentionCurve::Off => 1.0,
+            ContentionCurve::Linear { strength } => {
+                (1.0 - strength * load).max(MIN_CONTENTION_FACTOR)
+            }
+            ContentionCurve::Power { strength, exponent } => {
+                (1.0 - strength * load.powf(exponent)).max(MIN_CONTENTION_FACTOR)
+            }
+        }
+    }
+
+    /// The same curve with its strength scaled (region-profile overrides:
+    /// demo archetypes differ in how contended their hardware is).
+    pub fn scaled(&self, scale: f64) -> ContentionCurve {
+        debug_assert!(scale >= 0.0, "negative contention scale {scale}");
+        match *self {
+            ContentionCurve::Off => ContentionCurve::Off,
+            ContentionCurve::Linear { strength } => {
+                ContentionCurve::Linear { strength: strength * scale }
+            }
+            ContentionCurve::Power { strength, exponent } => {
+                ContentionCurve::Power { strength: strength * scale, exponent }
+            }
+        }
+    }
+
+    /// Parse the CLI syntax: `off`, `linear[:S]`, `power[:S[,E]]`.
+    pub fn parse(s: &str) -> Result<ContentionCurve, String> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p.trim())),
+            None => (s.trim(), None),
+        };
+        let strength = |p: Option<&str>, default: f64| -> Result<f64, String> {
+            let v = match p {
+                None => default,
+                Some(p) => p
+                    .parse::<f64>()
+                    .map_err(|e| format!("contention {name:?}: bad strength {p:?}: {e}"))?,
+            };
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("contention {name:?}: strength {v} must be >= 0"));
+            }
+            Ok(v)
+        };
+        match name {
+            "off" | "none" => {
+                if param.is_some() {
+                    return Err("contention \"off\" takes no parameter".into());
+                }
+                Ok(ContentionCurve::Off)
+            }
+            "linear" => Ok(ContentionCurve::Linear { strength: strength(param, 0.3)? }),
+            "power" => {
+                let (s_str, e_str) = match param {
+                    None => (None, None),
+                    Some(p) => match p.split_once(',') {
+                        Some((s, e)) => (Some(s.trim()), Some(e.trim())),
+                        None => (Some(p), None),
+                    },
+                };
+                let exponent = match e_str {
+                    None => 0.7,
+                    Some(e) => e
+                        .parse::<f64>()
+                        .map_err(|err| format!("contention \"power\": bad exponent {e:?}: {err}"))?,
+                };
+                if !(exponent > 0.0 && exponent <= 1.0) {
+                    return Err(format!(
+                        "contention \"power\": exponent {exponent} outside (0, 1] \
+                         (the penalty must stay concave)"
+                    ));
+                }
+                Ok(ContentionCurve::Power { strength: strength(s_str, 0.4)?, exponent })
+            }
+            other => Err(format!(
+                "unknown contention curve {other:?}; known: off, linear[:S], power[:S[,E]]"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for ContentionCurve {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ContentionCurve::Off => write!(f, "off"),
+            ContentionCurve::Linear { strength } => write!(f, "linear:{strength}"),
+            ContentionCurve::Power { strength, exponent } => {
+                write!(f, "power:{strength},{exponent}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_node_is_exactly_nominal() {
+        for c in [
+            ContentionCurve::Off,
+            ContentionCurve::Linear { strength: 0.8 },
+            ContentionCurve::Power { strength: 0.8, exponent: 0.5 },
+        ] {
+            assert_eq!(c.factor(0.0), 1.0, "{c} at load 0");
+        }
+    }
+
+    #[test]
+    fn monotone_and_floored() {
+        let curves = [
+            ContentionCurve::Linear { strength: 0.6 },
+            ContentionCurve::Power { strength: 0.9, exponent: 0.7 },
+        ];
+        for c in curves {
+            let mut prev = f64::INFINITY;
+            for i in 0..40 {
+                let f = c.factor(i as f64 * 0.25);
+                assert!(f <= prev, "{c} not monotone at load {}", i as f64 * 0.25);
+                assert!(f >= MIN_CONTENTION_FACTOR, "{c} under floor: {f}");
+                prev = f;
+            }
+        }
+        // High enough strength saturates at the floor, never below.
+        let c = ContentionCurve::Linear { strength: 10.0 };
+        assert_eq!(c.factor(5.0), MIN_CONTENTION_FACTOR);
+    }
+
+    #[test]
+    fn power_penalty_is_concave() {
+        // Concave penalty: the first co-tenant costs more than the fourth.
+        let c = ContentionCurve::Power { strength: 0.4, exponent: 0.7 };
+        let d1 = c.factor(0.0) - c.factor(0.25);
+        let d4 = c.factor(0.75) - c.factor(1.0);
+        assert!(d1 > d4, "first-tenant penalty {d1} <= later penalty {d4}");
+    }
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for c in [
+            ContentionCurve::Off,
+            ContentionCurve::Linear { strength: 0.3 },
+            ContentionCurve::Power { strength: 0.4, exponent: 0.7 },
+        ] {
+            assert_eq!(ContentionCurve::parse(&c.to_string()).unwrap(), c);
+        }
+        assert_eq!(
+            ContentionCurve::parse("linear").unwrap(),
+            ContentionCurve::Linear { strength: 0.3 }
+        );
+        assert_eq!(
+            ContentionCurve::parse("power:0.5").unwrap(),
+            ContentionCurve::Power { strength: 0.5, exponent: 0.7 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(ContentionCurve::parse("turbo").is_err());
+        assert!(ContentionCurve::parse("off:1").is_err());
+        assert!(ContentionCurve::parse("linear:-0.5").is_err());
+        assert!(ContentionCurve::parse("power:0.4,1.5").is_err());
+        assert!(ContentionCurve::parse("power:0.4,0").is_err());
+        assert!(ContentionCurve::parse("linear:x").is_err());
+    }
+
+    #[test]
+    fn scaling_shapes_strength_only() {
+        let c = ContentionCurve::Power { strength: 0.4, exponent: 0.7 };
+        assert_eq!(
+            c.scaled(1.5),
+            ContentionCurve::Power { strength: 0.4 * 1.5, exponent: 0.7 }
+        );
+        assert_eq!(
+            ContentionCurve::Linear { strength: 0.3 }.scaled(2.0),
+            ContentionCurve::Linear { strength: 0.6 }
+        );
+        assert_eq!(ContentionCurve::Off.scaled(2.0), ContentionCurve::Off);
+    }
+}

@@ -22,6 +22,7 @@
 pub mod billing;
 pub mod cluster;
 pub mod coldstart;
+pub mod contention;
 pub mod instance;
 pub mod node;
 pub mod platform;
@@ -30,7 +31,8 @@ pub mod scheduler;
 pub mod variability;
 
 pub use cluster::ClusterConfig;
+pub use contention::ContentionCurve;
 pub use instance::{DeployId, Instance, InstanceId, InstanceState};
-pub use node::{Node, NodeId};
+pub use node::{NodeId, NodeModel, NodeTable};
 pub use platform::{FaasPlatform, Placement, PlatformConfig};
 pub use region::{RegionConfig, RegionId};

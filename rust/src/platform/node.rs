@@ -2,75 +2,397 @@
 //!
 //! A node's *performance factor* (higher = faster) captures the aggregate
 //! effect of co-tenant contention: context switches, cache pressure, CPU
-//! throttling. The factor is sampled per node per day from the variability
-//! model and drifts slowly via a mean-reverting (Ornstein–Uhlenbeck) walk —
-//! matching the observation (paper §I, refs. [8], [23]) that some machines
-//! are persistently faster over the horizon of one experiment, with mild
-//! temporal wander.
+//! throttling. It composes three terms:
+//!
+//! ```text
+//! factor = base × drift × contention(resident_instances / capacity)
+//! ```
+//!
+//! - `base` is sampled per node per day from the variability model —
+//!   matching the observation (paper §I, refs. [8], [23]) that some
+//!   machines are persistently faster over the horizon of one experiment;
+//! - `drift` is a mean-reverting (Ornstein–Uhlenbeck) walk around 1.0 —
+//!   mild temporal wander;
+//! - `contention` couples speed to load ([`ContentionCurve`]): the
+//!   noisy-neighbor effect that *causes* the variation Minos exploits.
+//!   With the curve off (the default) the model is bit-identical to the
+//!   pre-contention simulator.
+//!
+//! §Perf — storage layout. Nodes live in a struct-of-arrays [`NodeTable`]:
+//! dense parallel columns (`base_factor` / `drift` / `resident` /
+//! `last_advance`) indexed by the slot half of a generation-tagged
+//! [`NodeId`] — the same slab idiom as the instance table in
+//! `scheduler.rs`, so stale ids panic instead of aliasing a recycled
+//! slot's new tenant. The OU drift advances in one of two modes:
+//!
+//! - **exact** (`drift_epoch_ms == 0`, the default): each lookup applies
+//!   the exact OU transition for the elapsed time — the legacy semantics,
+//!   pinned bit-identically by `tests/properties.rs`;
+//! - **batched** (`drift_epoch_ms > 0`): one pass over the `drift` column
+//!   per epoch boundary (constant decay per pass — vectorizable, no `exp`
+//!   on the lookup path), which is what keeps 50k-node regions cheap
+//!   (`benches/contention_scale.rs`). At epoch boundaries the batched
+//!   value equals the exact transition to within 1e-12 (property-tested).
 
 use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
-/// Index of a worker node within the platform's pool.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct NodeId(pub u32);
+use super::contention::ContentionCurve;
 
-/// One shared worker node.
-#[derive(Debug, Clone)]
-pub struct Node {
-    pub id: NodeId,
-    /// Day-level base performance factor (1.0 = nominal speed).
-    base_factor: f64,
-    /// Current OU-drift multiplier (mean 1.0).
-    drift: f64,
-    /// OU mean-reversion rate per hour.
-    ou_theta: f64,
-    /// OU stationary standard deviation.
-    ou_sigma: f64,
-    /// Last time the drift was advanced.
-    last_update: SimTime,
-    /// How many instances this node currently hosts (for utilization stats).
-    pub resident_instances: u32,
+/// Null sentinel for `alive_pos` (slot not in the alive list).
+const NIL: u32 = u32::MAX;
+
+/// Identifier of a worker node within a platform's pool.
+///
+/// Packs a [`NodeTable`] slot index (low 32 bits) with the slot's reuse
+/// generation (high 32 bits), mirroring `InstanceId`: retired slots are
+/// recycled, but a stale id is caught (panics) rather than silently
+/// reading the slot's new tenant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u64);
+
+impl NodeId {
+    /// Pack a slot index with its reuse generation.
+    pub(crate) fn from_parts(slot: u32, generation: u32) -> NodeId {
+        NodeId(((generation as u64) << 32) | slot as u64)
+    }
+
+    /// The table slot this id addresses.
+    pub fn slot(self) -> usize {
+        self.0 as u32 as usize
+    }
+
+    /// The slot generation this id was issued under.
+    pub fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
 }
 
-impl Node {
-    pub fn new(id: NodeId, base_factor: f64, ou_theta: f64, ou_sigma: f64) -> Node {
-        Node {
-            id,
-            base_factor,
-            drift: 1.0,
-            ou_theta,
-            ou_sigma,
-            last_update: SimTime::ZERO,
-            resident_instances: 0,
+/// Static parameters of the node model, shared by every node in a pool.
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    /// OU mean-reversion rate per hour.
+    pub ou_theta: f64,
+    /// OU stationary standard deviation.
+    pub ou_sigma: f64,
+    /// Drift advancement epoch, ms. 0 = exact per-lookup OU transitions
+    /// (the legacy semantics); > 0 = one batched pass per epoch boundary.
+    pub drift_epoch_ms: f64,
+    /// Load coupling of the performance factor.
+    pub contention: ContentionCurve,
+    /// Residents at which a node counts as fully loaded (`load = 1`).
+    pub capacity: u32,
+}
+
+impl Default for NodeModel {
+    fn default() -> Self {
+        NodeModel {
+            ou_theta: 0.8,
+            ou_sigma: 0.015,
+            drift_epoch_ms: 0.0,
+            contention: ContentionCurve::Off,
+            capacity: 8,
+        }
+    }
+}
+
+/// Struct-of-arrays node pool with generational slot recycling.
+#[derive(Debug)]
+pub struct NodeTable {
+    model: NodeModel,
+    // Parallel columns, indexed by slot.
+    base_factor: Vec<f64>,
+    drift: Vec<f64>,
+    resident: Vec<u32>,
+    last_advance: Vec<SimTime>,
+    generation: Vec<u32>,
+    /// Position of each slot in `alive` (`NIL` when retired).
+    alive_pos: Vec<u32>,
+    /// Live slots, in deterministic (spawn/swap-remove) order — the
+    /// placement lottery samples this and batched passes walk it.
+    alive: Vec<u32>,
+    /// Retired slots available for reuse (LIFO).
+    free: Vec<u32>,
+    /// Batched mode: the next epoch boundary not yet advanced (µs).
+    next_epoch: SimTime,
+    /// High-water mark of residents on any single node.
+    peak_resident: u32,
+}
+
+impl NodeTable {
+    pub fn new(model: NodeModel) -> NodeTable {
+        debug_assert!(model.capacity >= 1, "node capacity must be at least 1");
+        debug_assert!(model.drift_epoch_ms >= 0.0, "negative drift epoch");
+        let next_epoch = if model.drift_epoch_ms > 0.0 {
+            SimTime::from_ms(model.drift_epoch_ms)
+        } else {
+            SimTime(u64::MAX)
+        };
+        NodeTable {
+            model,
+            base_factor: Vec::new(),
+            drift: Vec::new(),
+            resident: Vec::new(),
+            last_advance: Vec::new(),
+            generation: Vec::new(),
+            alive_pos: Vec::new(),
+            alive: Vec::new(),
+            free: Vec::new(),
+            next_epoch,
+            peak_resident: 0,
         }
     }
 
-    /// The node's day-level base factor (before drift/diurnal terms).
-    pub fn base_factor(&self) -> f64 {
-        self.base_factor
-    }
-
-    /// Advance the OU drift to `now` and return the current factor
-    /// (base × drift). Exact OU transition: for elapsed time dt,
-    /// `x' = mu + (x - mu) e^{-θ dt} + sigma sqrt(1 - e^{-2θ dt}) · N(0,1)`.
-    pub fn factor_at(&mut self, now: SimTime, rng: &mut Rng) -> f64 {
-        let dt_hours = now.ms_since(self.last_update) / 3_600_000.0;
-        if dt_hours > 0.0 && self.ou_sigma > 0.0 {
-            let decay = (-self.ou_theta * dt_hours).exp();
-            let stationary_mix = (1.0 - decay * decay).sqrt();
-            self.drift = 1.0 + (self.drift - 1.0) * decay
-                + self.ou_sigma * stationary_mix * rng.normal();
-            // Keep the multiplier physical (a node can't be infinitely slow).
-            self.drift = self.drift.clamp(0.5, 1.5);
+    /// Build a pool of `factors.len()` nodes at t=0 (slot order = factor
+    /// order, matching the day's sampling sequence).
+    pub fn with_base_factors(model: NodeModel, factors: &[f64]) -> NodeTable {
+        let mut t = NodeTable::new(model);
+        for &f in factors {
+            t.spawn(f, SimTime::ZERO);
         }
-        self.last_update = now;
-        self.base_factor * self.drift
+        t
     }
 
-    /// Peek the factor without advancing the stochastic state (testing).
-    pub fn factor_nominal(&self) -> f64 {
-        self.base_factor * self.drift
+    /// Number of live nodes.
+    pub fn alive_count(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Slots resident in the table (live + retired-not-yet-recycled):
+    /// memory tracks the high-water mark, not churn history.
+    pub fn slot_count(&self) -> usize {
+        self.base_factor.len()
+    }
+
+    /// High-water mark of residents on any single node.
+    pub fn peak_resident(&self) -> u32 {
+        self.peak_resident
+    }
+
+    /// Resolve an id to its slot, rejecting retired slots and stale ids
+    /// whose slot has been recycled for a newer node.
+    fn index(&self, id: NodeId) -> usize {
+        let s = id.slot();
+        assert!(s < self.generation.len(), "unknown {id:?}");
+        assert_eq!(
+            self.generation[s],
+            id.generation(),
+            "stale {id:?}: slot reused by a newer node"
+        );
+        assert_ne!(self.alive_pos[s], NIL, "retired node {id:?}");
+        s
+    }
+
+    /// Add a node (recycling a retired slot when one is free) and return
+    /// its generation-tagged id.
+    pub fn spawn(&mut self, base_factor: f64, now: SimTime) -> NodeId {
+        let s = match self.free.pop() {
+            Some(s) => {
+                let s = s as usize;
+                self.generation[s] += 1;
+                self.base_factor[s] = base_factor;
+                self.drift[s] = 1.0;
+                self.resident[s] = 0;
+                self.last_advance[s] = now;
+                s
+            }
+            None => {
+                self.base_factor.push(base_factor);
+                self.drift.push(1.0);
+                self.resident.push(0);
+                self.last_advance.push(now);
+                self.generation.push(0);
+                self.alive_pos.push(NIL);
+                self.base_factor.len() - 1
+            }
+        };
+        self.alive_pos[s] = self.alive.len() as u32;
+        self.alive.push(s as u32);
+        NodeId::from_parts(s as u32, self.generation[s])
+    }
+
+    /// Remove a node from the pool (hardware churn scenarios). The slot is
+    /// recycled by a later `spawn` under a fresh generation; the node must
+    /// be empty — retiring a machine with resident instances would orphan
+    /// them.
+    pub fn retire(&mut self, id: NodeId) {
+        let s = self.index(id);
+        assert_eq!(self.resident[s], 0, "retiring {id:?} with resident instances");
+        let pos = self.alive_pos[s] as usize;
+        let last = self.alive.pop().expect("alive list non-empty");
+        if pos < self.alive.len() {
+            self.alive[pos] = last;
+            self.alive_pos[last as usize] = pos as u32;
+        }
+        self.alive_pos[s] = NIL;
+        self.free.push(s as u32);
+    }
+
+    /// Pick a node for a new instance: uniform over the live pool (the
+    /// lottery Minos plays — one `rng.below` draw, exactly as the
+    /// pre-table scheduler drew it for a fixed pool).
+    pub fn sample(&self, rng: &mut Rng) -> NodeId {
+        debug_assert!(!self.alive.is_empty(), "sampling an empty node pool");
+        let s = self.alive[rng.below(self.alive.len())];
+        NodeId::from_parts(s, self.generation[s as usize])
+    }
+
+    /// An instance landed on this node.
+    pub fn occupy(&mut self, id: NodeId) {
+        let s = self.index(id);
+        self.resident[s] += 1;
+        self.peak_resident = self.peak_resident.max(self.resident[s]);
+    }
+
+    /// An instance left this node (crash, idle expiry, lifetime recycle).
+    pub fn depart(&mut self, id: NodeId) {
+        let s = self.index(id);
+        debug_assert!(self.resident[s] > 0, "resident underflow on {id:?}");
+        self.resident[s] = self.resident[s].saturating_sub(1);
+    }
+
+    /// Instances currently resident on this node.
+    pub fn resident(&self, id: NodeId) -> u32 {
+        self.resident[self.index(id)]
+    }
+
+    /// The node's day-level base factor (before drift/contention terms).
+    pub fn base_factor(&self, id: NodeId) -> f64 {
+        self.base_factor[self.index(id)]
+    }
+
+    /// Base factors of the live pool, in `alive` order (calibration
+    /// reports / tests).
+    pub fn base_factors(&self) -> Vec<f64> {
+        self.alive.iter().map(|&s| self.base_factor[s as usize]).collect()
+    }
+
+    /// Generation-tagged ids of the live pool, in `alive` order — the
+    /// order batched drift passes visit nodes in.
+    pub fn ids(&self) -> Vec<NodeId> {
+        self.alive
+            .iter()
+            .map(|&s| NodeId::from_parts(s, self.generation[s as usize]))
+            .collect()
+    }
+
+    /// `base × drift` without advancing the stochastic state and without
+    /// the contention term (testing / pool-quality snapshots).
+    pub fn factor_nominal(&self, id: NodeId) -> f64 {
+        let s = self.index(id);
+        self.base_factor[s] * self.drift[s]
+    }
+
+    /// The contention multiplier this node currently runs at.
+    pub fn contention_multiplier(&self, id: NodeId) -> f64 {
+        let s = self.index(id);
+        self.model.contention.factor(self.load(s))
+    }
+
+    #[inline]
+    fn load(&self, s: usize) -> f64 {
+        self.resident[s] as f64 / self.model.capacity as f64
+    }
+
+    /// Advance the node's drift to `now` and return the current factor
+    /// (`base × drift × contention`). In exact mode this applies the OU
+    /// transition for the elapsed time (one `exp` + one normal draw per
+    /// lookup); in batched mode it only catches up whole epochs (a pass
+    /// over the drift column per boundary), leaving the lookup itself
+    /// multiply-only.
+    pub fn factor(&mut self, id: NodeId, now: SimTime, rng: &mut Rng) -> f64 {
+        if self.model.drift_epoch_ms > 0.0 {
+            self.advance_epochs(now, rng);
+            let s = self.index(id);
+            return self.composed(s);
+        }
+        let s = self.index(id);
+        self.advance_exact(s, now, rng);
+        self.composed(s)
+    }
+
+    #[inline]
+    fn composed(&self, s: usize) -> f64 {
+        let raw = self.base_factor[s] * self.drift[s];
+        match self.model.contention {
+            // Skip the load division entirely: the off path must cost (and
+            // compute) exactly what the pre-contention model did.
+            ContentionCurve::Off => raw,
+            curve => raw * curve.factor(self.load(s)),
+        }
+    }
+
+    /// Exact OU transition for one node: for elapsed time dt,
+    /// `x' = mu + (x - mu) e^{-θ dt} + sigma sqrt(1 - e^{-2θ dt}) · N(0,1)`,
+    /// clamped to keep the multiplier physical (a node can't be infinitely
+    /// slow). Bit-identical to the legacy per-node model.
+    fn advance_exact(&mut self, s: usize, now: SimTime, rng: &mut Rng) {
+        let dt_hours = now.ms_since(self.last_advance[s]) / 3_600_000.0;
+        if dt_hours > 0.0 && self.model.ou_sigma > 0.0 {
+            let decay = (-self.model.ou_theta * dt_hours).exp();
+            let mix = (1.0 - decay * decay).sqrt();
+            self.drift[s] = (1.0
+                + (self.drift[s] - 1.0) * decay
+                + self.model.ou_sigma * mix * rng.normal())
+            .clamp(0.5, 1.5);
+        }
+        self.last_advance[s] = now;
+    }
+
+    /// Batched mode: advance every live node across each elapsed epoch
+    /// boundary, one column pass per boundary. The decay/mix terms are
+    /// constant per pass (one `exp` per epoch, not per lookup) for every
+    /// boundary-aligned node; a node spawned mid-epoch gets its true
+    /// (shorter) dt on its first pass, so the exact-transition
+    /// equivalence holds under churn too. Nodes are visited in `alive`
+    /// order, so the draw sequence is a pure function of the schedule —
+    /// bit-reproducible at any thread count.
+    fn advance_epochs(&mut self, now: SimTime, rng: &mut Rng) {
+        if self.next_epoch > now {
+            return;
+        }
+        let epoch_us = SimTime::from_ms(self.model.drift_epoch_ms).0.max(1);
+        if self.model.ou_sigma <= 0.0 {
+            // Zero-sigma drift never moves and consumes no draws: jump
+            // past the last elapsed boundary instead of column passes.
+            let missed = (now.0 - self.next_epoch.0) / epoch_us;
+            self.next_epoch = SimTime(self.next_epoch.0 + (missed + 1) * epoch_us);
+            return;
+        }
+        // Same dt arithmetic as `ms_since` so a boundary-aligned exact
+        // lookup computes the identical f64 (the 1e-12 equivalence).
+        let dt_hours = (epoch_us as f64 / 1_000.0) / 3_600_000.0;
+        let NodeTable { model, alive, drift, last_advance, .. } = self;
+        while self.next_epoch <= now {
+            let t = self.next_epoch;
+            let prev_boundary = SimTime(t.0.saturating_sub(epoch_us));
+            let decay = (-model.ou_theta * dt_hours).exp();
+            let mix = (1.0 - decay * decay).sqrt();
+            for &s in alive.iter() {
+                let s = s as usize;
+                if last_advance[s] >= t {
+                    // Spawned at/after this catch-up boundary: no time
+                    // has elapsed for it, and drawing here would shift
+                    // the sequence for time the node never lived through
+                    // (exact mode draws nothing at dt == 0 either).
+                    continue;
+                }
+                let (decay, mix) = if last_advance[s] <= prev_boundary {
+                    (decay, mix)
+                } else {
+                    // Spawned mid-epoch: exact dt for the first pass.
+                    let dt = t.ms_since(last_advance[s]) / 3_600_000.0;
+                    let d = (-model.ou_theta * dt).exp();
+                    (d, (1.0 - d * d).sqrt())
+                };
+                drift[s] = (1.0
+                    + (drift[s] - 1.0) * decay
+                    + model.ou_sigma * mix * rng.normal())
+                .clamp(0.5, 1.5);
+                last_advance[s] = t;
+            }
+            self.next_epoch = SimTime(t.0 + epoch_us);
+        }
     }
 }
 
@@ -78,24 +400,31 @@ impl Node {
 mod tests {
     use super::*;
 
+    fn one_node(model: NodeModel, base: f64) -> (NodeTable, NodeId) {
+        let mut t = NodeTable::new(model);
+        let id = t.spawn(base, SimTime::ZERO);
+        (t, id)
+    }
+
     #[test]
     fn factor_starts_at_base() {
-        let mut n = Node::new(NodeId(0), 1.1, 0.5, 0.02);
+        let model = NodeModel { ou_theta: 0.5, ou_sigma: 0.02, ..Default::default() };
+        let (mut t, id) = one_node(model, 1.1);
         let mut rng = Rng::new(1);
-        let f = n.factor_at(SimTime::ZERO, &mut rng);
+        let f = t.factor(id, SimTime::ZERO, &mut rng);
         assert!((f - 1.1).abs() < 1e-12, "no time elapsed, no drift: {f}");
     }
 
     #[test]
     fn drift_is_mean_reverting() {
         // Long-run mean of factor/base must stay near 1.0.
-        let mut n = Node::new(NodeId(0), 1.0, 1.0, 0.05);
+        let model = NodeModel { ou_theta: 1.0, ou_sigma: 0.05, ..Default::default() };
+        let (mut t, id) = one_node(model, 1.0);
         let mut rng = Rng::new(2);
         let mut sum = 0.0;
         let mut count = 0;
         for step in 1..2_000u64 {
-            let t = SimTime::from_secs(step as f64 * 60.0);
-            sum += n.factor_at(t, &mut rng);
+            sum += t.factor(id, SimTime::from_secs(step as f64 * 60.0), &mut rng);
             count += 1;
         }
         let mean = sum / count as f64;
@@ -104,21 +433,187 @@ mod tests {
 
     #[test]
     fn drift_bounded() {
-        let mut n = Node::new(NodeId(0), 1.0, 0.1, 0.2);
+        let model = NodeModel { ou_theta: 0.1, ou_sigma: 0.2, ..Default::default() };
+        let (mut t, id) = one_node(model, 1.0);
         let mut rng = Rng::new(3);
         for step in 1..5_000u64 {
-            let f = n.factor_at(SimTime::from_secs(step as f64 * 30.0), &mut rng);
+            let f = t.factor(id, SimTime::from_secs(step as f64 * 30.0), &mut rng);
             assert!((0.4..=1.6).contains(&f), "factor escaped bounds: {f}");
         }
     }
 
     #[test]
     fn zero_sigma_means_constant() {
-        let mut n = Node::new(NodeId(1), 0.9, 1.0, 0.0);
+        let model = NodeModel { ou_theta: 1.0, ou_sigma: 0.0, ..Default::default() };
+        let (mut t, id) = one_node(model, 0.9);
         let mut rng = Rng::new(4);
         for step in 1..100u64 {
-            let f = n.factor_at(SimTime::from_secs(step as f64), &mut rng);
-            assert_eq!(f, 0.9);
+            assert_eq!(t.factor(id, SimTime::from_secs(step as f64), &mut rng), 0.9);
         }
+    }
+
+    #[test]
+    fn contention_couples_factor_to_residents() {
+        let model = NodeModel {
+            ou_sigma: 0.0,
+            contention: ContentionCurve::Linear { strength: 0.5 },
+            capacity: 4,
+            ..Default::default()
+        };
+        let (mut t, id) = one_node(model, 1.0);
+        let mut rng = Rng::new(5);
+        assert_eq!(t.factor(id, SimTime::ZERO, &mut rng), 1.0);
+        t.occupy(id);
+        t.occupy(id);
+        // load = 2/4 → factor = 1 - 0.5·0.5 = 0.875.
+        let f = t.factor(id, SimTime::from_secs(1.0), &mut rng);
+        assert!((f - 0.875).abs() < 1e-12, "loaded factor {f}");
+        // Terminations speed the node back up — the feedback loop.
+        t.depart(id);
+        t.depart(id);
+        assert_eq!(t.factor(id, SimTime::from_secs(2.0), &mut rng), 1.0);
+        assert_eq!(t.peak_resident(), 2);
+    }
+
+    #[test]
+    fn batched_advance_is_multiply_only_between_epochs() {
+        // With a 60 s epoch, lookups inside an epoch draw nothing: the rng
+        // state is untouched and the factor is constant.
+        let model = NodeModel {
+            ou_theta: 0.8,
+            ou_sigma: 0.1,
+            drift_epoch_ms: 60_000.0,
+            ..Default::default()
+        };
+        let (mut t, id) = one_node(model, 1.0);
+        let mut rng = Rng::new(6);
+        let f1 = t.factor(id, SimTime::from_secs(10.0), &mut rng);
+        let probe = rng.clone().next_u64();
+        let f2 = t.factor(id, SimTime::from_secs(59.0), &mut rng);
+        assert_eq!(f1, f2, "drift moved inside an epoch");
+        assert_eq!(rng.clone().next_u64(), probe, "in-epoch lookup drew randomness");
+        // Crossing the boundary advances once.
+        let f3 = t.factor(id, SimTime::from_secs(61.0), &mut rng);
+        assert_ne!(f2, f3, "epoch boundary did not advance the drift");
+    }
+
+    #[test]
+    fn batched_first_pass_uses_true_dt_for_mid_epoch_spawn() {
+        // Node A exists from t=0; node B spawns 45 s into a 60 s epoch.
+        // At the boundary, B's transition must use dt = 15 s — mirrored
+        // exact-mode lookups with the same draw sequence agree.
+        let model = NodeModel {
+            ou_theta: 0.9,
+            ou_sigma: 0.05,
+            drift_epoch_ms: 60_000.0,
+            ..Default::default()
+        };
+        let exact_model = NodeModel { drift_epoch_ms: 0.0, ..model.clone() };
+        let mut batched = NodeTable::new(model);
+        let mut exact = NodeTable::new(exact_model);
+        let a_b = batched.spawn(1.0, SimTime::ZERO);
+        let a_e = exact.spawn(1.0, SimTime::ZERO);
+        let spawn_t = SimTime::from_secs(45.0);
+        let b_b = batched.spawn(1.1, spawn_t);
+        let b_e = exact.spawn(1.1, spawn_t);
+        let boundary = SimTime::from_secs(60.0);
+        let mut rng_b = Rng::new(11);
+        let mut rng_e = Rng::new(11);
+        let _ = batched.factor(a_b, boundary, &mut rng_b); // pass visits A then B
+        let _ = exact.factor(a_e, boundary, &mut rng_e);
+        let _ = exact.factor(b_e, boundary, &mut rng_e);
+        let da = (batched.factor_nominal(a_b) - exact.factor_nominal(a_e)).abs();
+        let db = (batched.factor_nominal(b_b) - exact.factor_nominal(b_e)).abs();
+        assert!(da < 1e-12, "aligned node diverged by {da}");
+        assert!(db < 1e-12, "mid-epoch spawn got the wrong dt: off by {db}");
+    }
+
+    #[test]
+    fn catch_up_passes_skip_boundaries_before_a_node_existed() {
+        // No lookups happen before B spawns at 130 s, so the 60 s and
+        // 120 s boundaries are still pending when the catch-up runs at
+        // 185 s. Those passes must skip B entirely (no draw, no advance);
+        // only the 180 s boundary advances it, with its true 50 s dt.
+        let model = NodeModel {
+            ou_theta: 0.9,
+            ou_sigma: 0.05,
+            drift_epoch_ms: 60_000.0,
+            ..Default::default()
+        };
+        let exact_model = NodeModel { drift_epoch_ms: 0.0, ..model.clone() };
+        let mut batched = NodeTable::new(model);
+        let mut exact = NodeTable::new(exact_model);
+        let a_b = batched.spawn(1.0, SimTime::ZERO);
+        let a_e = exact.spawn(1.0, SimTime::ZERO);
+        let spawn_t = SimTime::from_secs(130.0);
+        let b_b = batched.spawn(1.0, spawn_t);
+        let b_e = exact.spawn(1.0, spawn_t);
+        let mut rng_b = Rng::new(13);
+        let mut rng_e = Rng::new(13);
+        // One lookup triggers catch-up over boundaries 60/120/180; the
+        // draw order is A, A, A(B skipped twice), then B at 180.
+        let _ = batched.factor(a_b, SimTime::from_secs(185.0), &mut rng_b);
+        for secs in [60.0, 120.0, 180.0] {
+            let _ = exact.factor(a_e, SimTime::from_secs(secs), &mut rng_e);
+        }
+        let _ = exact.factor(b_e, SimTime::from_secs(180.0), &mut rng_e);
+        let da = (batched.factor_nominal(a_b) - exact.factor_nominal(a_e)).abs();
+        let db = (batched.factor_nominal(b_b) - exact.factor_nominal(b_e)).abs();
+        assert!(da < 1e-12, "aligned node diverged by {da}");
+        assert!(db < 1e-12, "late-spawned node advanced through pre-spawn epochs: {db}");
+    }
+
+    #[test]
+    fn slots_recycle_with_fresh_generations() {
+        let mut t = NodeTable::new(NodeModel::default());
+        let a = t.spawn(1.0, SimTime::ZERO);
+        let b = t.spawn(1.1, SimTime::ZERO);
+        t.retire(a);
+        let c = t.spawn(1.2, SimTime::from_secs(1.0));
+        // The slot is reused under a new generation; memory does not grow.
+        assert_eq!(c.slot(), a.slot());
+        assert_eq!(c.generation(), a.generation() + 1);
+        assert_ne!(a, c);
+        assert_eq!(t.slot_count(), 2);
+        assert_eq!(t.alive_count(), 2);
+        assert_eq!(t.base_factor(c), 1.2);
+        assert_eq!(t.base_factor(b), 1.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale")]
+    fn stale_id_after_slot_reuse_is_rejected() {
+        let mut t = NodeTable::new(NodeModel::default());
+        let a = t.spawn(1.0, SimTime::ZERO);
+        t.retire(a);
+        let _b = t.spawn(1.1, SimTime::ZERO);
+        let _ = t.base_factor(a); // a's slot now belongs to b
+    }
+
+    #[test]
+    #[should_panic(expected = "retired")]
+    fn retired_id_is_rejected_before_reuse() {
+        let mut t = NodeTable::new(NodeModel::default());
+        let a = t.spawn(1.0, SimTime::ZERO);
+        t.retire(a);
+        let _ = t.base_factor(a);
+    }
+
+    #[test]
+    fn sample_covers_live_pool_and_skips_retired() {
+        let mut t = NodeTable::new(NodeModel::default());
+        let ids: Vec<NodeId> = (0..16).map(|i| t.spawn(1.0 + i as f64, SimTime::ZERO)).collect();
+        t.retire(ids[3]);
+        t.retire(ids[11]);
+        let mut rng = Rng::new(7);
+        let mut seen = vec![false; 16];
+        for _ in 0..4_000 {
+            let picked = t.sample(&mut rng);
+            assert_ne!(picked, ids[3]);
+            assert_ne!(picked, ids[11]);
+            seen[picked.slot()] = true;
+        }
+        let covered = seen.iter().filter(|&&b| b).count();
+        assert_eq!(covered, 14, "sampling missed live nodes");
     }
 }

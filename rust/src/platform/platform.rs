@@ -5,13 +5,20 @@
 //! crash an instance and it is gone. Everything stochastic is driven by
 //! forked substreams of one seed, so paired Minos/baseline runs share the
 //! identical platform draw sequence.
+//!
+//! Nodes live in a struct-of-arrays [`NodeTable`]; when a
+//! [`ContentionCurve`](super::contention::ContentionCurve) is configured,
+//! every placement/expiry/crash updates the hosting node's resident count
+//! and the node's speed follows its load — so a selection policy's own
+//! terminations feed back into which nodes are slow.
 
 use crate::sim::SimTime;
 use crate::util::prng::Rng;
 
 use super::coldstart::ColdStartModel;
+use super::contention::ContentionCurve;
 use super::instance::{DeployId, InstanceId, InstanceState};
-use super::node::{Node, NodeId};
+use super::node::{NodeModel, NodeTable};
 use super::scheduler::Scheduler;
 use super::variability::VariabilityConfig;
 
@@ -29,6 +36,11 @@ pub struct PlatformConfig {
     pub instance_lifetime_sigma: f64,
     /// Upper bound on concurrently live instances (platform quota).
     pub max_instances: usize,
+    /// Load coupling of node speed (`off` = the contention-free model,
+    /// bit-identical to the pre-contention simulator).
+    pub contention: ContentionCurve,
+    /// Residents at which a node counts as fully loaded (`load = 1`).
+    pub node_capacity: u32,
     pub variability: VariabilityConfig,
     pub coldstart: ColdStartModel,
 }
@@ -41,6 +53,8 @@ impl Default for PlatformConfig {
             instance_lifetime_median_ms: 9.0 * 60.0 * 1000.0,
             instance_lifetime_sigma: 0.45,
             max_instances: 1000,
+            contention: ContentionCurve::Off,
+            node_capacity: 8,
             variability: VariabilityConfig::default(),
             coldstart: ColdStartModel::default(),
         }
@@ -62,7 +76,7 @@ pub enum Placement {
 #[derive(Debug)]
 pub struct FaasPlatform {
     pub cfg: PlatformConfig,
-    nodes: Vec<Node>,
+    nodes: NodeTable,
     pub scheduler: Scheduler,
     /// Substream for placement choices (node picks, cold-start delays).
     rng_place: Rng,
@@ -96,21 +110,21 @@ impl FaasPlatform {
         let root = Rng::new(seed);
         let mut day_rng = root.fork(1000 + day as u64);
         let mut node_rng = root.fork(2000 + day as u64);
-        let nodes = (0..cfg.n_nodes)
-            .map(|i| {
-                let base = cfg
-                    .variability
-                    .sample_node_factor(day, &mut day_rng, &mut node_rng);
-                Node::new(
-                    NodeId(i as u32),
-                    base,
-                    cfg.variability.ou_theta,
-                    cfg.variability.ou_sigma,
-                )
-            })
+        // Column order = sampling order, preserving the day's draw
+        // sequence exactly (slot i gets the i-th factor, as the old
+        // array-of-structs pool did).
+        let factors: Vec<f64> = (0..cfg.n_nodes)
+            .map(|_| cfg.variability.sample_node_factor(day, &mut day_rng, &mut node_rng))
             .collect();
+        let model = NodeModel {
+            ou_theta: cfg.variability.ou_theta,
+            ou_sigma: cfg.variability.ou_sigma,
+            drift_epoch_ms: cfg.variability.drift_epoch_ms,
+            contention: cfg.contention,
+            capacity: cfg.node_capacity.max(1),
+        };
+        let nodes = NodeTable::with_base_factors(model, &factors);
         FaasPlatform {
-            cfg,
             nodes,
             scheduler: Scheduler::new(),
             rng_place: root.fork(3000 + day as u64 + salt * 101),
@@ -121,6 +135,7 @@ impl FaasPlatform {
             expired: 0,
             crashes: 0,
             recycled: 0,
+            cfg,
         }
     }
 
@@ -135,28 +150,42 @@ impl FaasPlatform {
     /// co-located deployments contend on the same machines (and the same
     /// node speed factors); only the warm pool is per deployment.
     pub fn place_deploy(&mut self, deploy: DeployId, now: SimTime) -> Placement {
+        let FaasPlatform {
+            cfg,
+            nodes,
+            scheduler,
+            rng_place,
+            rng_inst,
+            cold_starts,
+            warm_hits,
+            expired,
+            recycled,
+            ..
+        } = self;
         // Allocation-free: the scheduler walks only the expired prefix of
-        // each warm pool and returns a count (§Perf — this sweep runs on
-        // every placement).
-        self.expired += self.scheduler.expire_idle(now, self.cfg.idle_timeout_ms);
+        // each warm pool (§Perf — this sweep runs on every placement);
+        // every reclaimed instance departs its node so contended nodes
+        // speed back up.
+        *expired +=
+            scheduler.expire_idle_notify(now, cfg.idle_timeout_ms, |i| nodes.depart(i.node));
 
-        if let Some(id) = self.scheduler.take_warm(deploy, now, &mut self.recycled) {
-            self.warm_hits += 1;
+        if let Some(id) =
+            scheduler.take_warm_notify(deploy, now, recycled, |i| nodes.depart(i.node))
+        {
+            *warm_hits += 1;
             return Placement::Warm(id);
         }
-        if self.scheduler.live_count() >= self.cfg.max_instances {
+        if scheduler.live_count() >= cfg.max_instances {
             return Placement::Saturated;
         }
-        let node = self.scheduler.pick_node(self.cfg.n_nodes, &mut self.rng_place);
-        let offset = self.cfg.variability.sample_instance_offset(&mut self.rng_inst);
-        let lifetime = self.rng_place.lognormal(
-            self.cfg.instance_lifetime_median_ms.ln(),
-            self.cfg.instance_lifetime_sigma,
-        );
-        let id = self.scheduler.create_instance(node, deploy, offset, lifetime, now);
-        self.nodes[node.0 as usize].resident_instances += 1;
-        let delay = self.cfg.coldstart.sample_ms(&mut self.rng_place);
-        self.cold_starts += 1;
+        let node = nodes.sample(rng_place);
+        let offset = cfg.variability.sample_instance_offset(rng_inst);
+        let lifetime = rng_place
+            .lognormal(cfg.instance_lifetime_median_ms.ln(), cfg.instance_lifetime_sigma);
+        let id = scheduler.create_instance(node, deploy, offset, lifetime, now);
+        nodes.occupy(node);
+        let delay = cfg.coldstart.sample_ms(rng_place);
+        *cold_starts += 1;
         Placement::Cold { id, ready_at: now.plus_ms(delay) }
     }
 
@@ -165,15 +194,15 @@ impl FaasPlatform {
         self.scheduler.mark_running(id);
     }
 
-    /// Current performance factor of an instance (node factor × diurnal ×
-    /// instance offset). Advances the node's OU drift to `now`.
+    /// Current performance factor of an instance (node factor × contention
+    /// × diurnal × instance offset). Advances the node's OU drift to `now`
+    /// (exactly, or by whole epochs in batched-drift mode).
     pub fn perf_factor(&mut self, id: InstanceId, now: SimTime) -> f64 {
-        let inst = self.scheduler.get(id);
+        let FaasPlatform { cfg, nodes, scheduler, rng_drift, .. } = self;
+        let inst = scheduler.get(id);
         debug_assert!(inst.is_live(), "perf_factor of terminated {id:?}");
-        let node_idx = inst.node.0 as usize;
-        let offset = inst.offset;
-        let node_factor = self.nodes[node_idx].factor_at(now, &mut self.rng_drift);
-        node_factor * self.cfg.variability.diurnal(now) * offset
+        let node_factor = nodes.factor(inst.node, now, rng_drift);
+        node_factor * cfg.variability.diurnal(now) * inst.offset
     }
 
     /// Per-invocation multiplicative duration noise.
@@ -181,23 +210,36 @@ impl FaasPlatform {
         self.cfg.variability.sample_invocation_noise(&mut self.rng_inst)
     }
 
-    /// Invocation finished normally; instance joins the warm pool.
+    /// Invocation finished normally; instance joins the warm pool (it
+    /// stays resident on its node — an idle-warm environment still holds
+    /// memory and steals cache from co-tenants).
     pub fn release(&mut self, id: InstanceId, now: SimTime) {
         self.scheduler.release(id, now);
     }
 
-    /// Minos crash (or any abnormal exit): the instance is gone.
+    /// Minos crash (or any abnormal exit): the instance is gone and its
+    /// node sheds the load. A double-crash is a counter no-op in the
+    /// scheduler and must not depart the node twice.
     pub fn crash(&mut self, id: InstanceId) {
-        let node = self.scheduler.get(id).node;
+        let inst = self.scheduler.get(id);
+        let node = inst.node;
+        let was_live = inst.is_live();
         self.scheduler.terminate(id);
-        self.crashes += 1;
-        let n = &mut self.nodes[node.0 as usize];
-        n.resident_instances = n.resident_instances.saturating_sub(1);
+        if was_live {
+            self.crashes += 1;
+            self.nodes.depart(node);
+        }
+    }
+
+    /// The node pool (contention/residency introspection for reports and
+    /// tests).
+    pub fn nodes(&self) -> &NodeTable {
+        &self.nodes
     }
 
     /// Node base-factor snapshot (for calibration reports / tests).
     pub fn node_base_factors(&self) -> Vec<f64> {
-        self.nodes.iter().map(|n| n.base_factor()).collect()
+        self.nodes.base_factors()
     }
 
     /// Warm-pool instance perf offsets paired with their node base factors
@@ -206,7 +248,7 @@ impl FaasPlatform {
         self.scheduler
             .iter_instances()
             .filter(|i| i.is_live() && i.state != InstanceState::Starting)
-            .map(|i| self.nodes[i.node.0 as usize].factor_nominal() * i.offset)
+            .map(|i| self.nodes.factor_nominal(i.node) * i.offset)
             .collect()
     }
 }
@@ -384,5 +426,127 @@ mod tests {
         let cov_hi = Summary::of(&hi.node_base_factors()).unwrap().cov();
         let cov_lo = Summary::of(&lo.node_base_factors()).unwrap().cov();
         assert!(cov_hi > cov_lo * 1.8, "cov_hi {cov_hi} cov_lo {cov_lo}");
+    }
+
+    #[test]
+    fn residency_settles_through_every_exit_path() {
+        // Crash, idle expiry, and lifetime recycling must all depart the
+        // node — contention accounting depends on it. One node makes every
+        // placement land on the same machine.
+        let mut cfg = PlatformConfig { n_nodes: 1, ..Default::default() };
+        cfg.idle_timeout_ms = 1_000.0;
+        let mut p = FaasPlatform::new(cfg, 0, 31);
+        let node_of = |p: &FaasPlatform, id| p.scheduler.get(id).node;
+
+        // Crash path.
+        let a = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        let node = node_of(&p, a);
+        assert_eq!(p.nodes().resident(node), 1);
+        p.cold_start_ready(a);
+        p.crash(a);
+        assert_eq!(p.nodes().resident(node), 0);
+
+        // Idle-expiry path: place, release, then let the sweep reclaim it.
+        let b = match p.place(SimTime::from_ms(10.0)) {
+            Placement::Cold { id, ready_at } => {
+                p.cold_start_ready(id);
+                p.release(id, ready_at);
+                id
+            }
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(p.nodes().resident(node_of(&p, b)), 1);
+        let c = match p.place(SimTime::from_secs(30.0)) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(p.expired, 1);
+        // b departed, c occupies: net one resident.
+        assert_eq!(p.nodes().resident(node_of(&p, c)), 1);
+        p.cold_start_ready(c);
+        p.crash(c);
+
+        // Lifetime-recycle path: a warm instance whose platform lifetime
+        // elapsed is recycled inside take_warm and must also depart.
+        let mut cfg = PlatformConfig { n_nodes: 1, ..Default::default() };
+        cfg.instance_lifetime_median_ms = 50.0;
+        cfg.instance_lifetime_sigma = 0.0;
+        let mut p = FaasPlatform::new(cfg, 0, 37);
+        let d = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, ready_at } => {
+                p.cold_start_ready(id);
+                p.release(id, ready_at);
+                id
+            }
+            other => panic!("{other:?}"),
+        };
+        let node = node_of(&p, d);
+        // Well past the 50 ms lifetime but inside the idle timeout: the
+        // next placement recycles d and cold-starts a replacement.
+        match p.place(SimTime::from_secs(60.0)) {
+            Placement::Cold { .. } => {}
+            other => panic!("expected cold start, got {other:?}"),
+        }
+        assert_eq!(p.recycled, 1);
+        assert_eq!(p.nodes().resident(node), 1, "recycled instance never departed");
+    }
+
+    #[test]
+    fn contention_feedback_slows_and_recovers() {
+        // Linear curve, capacity 2, one node: stacking instances slows the
+        // node; crashing them restores full speed (the self-interference
+        // loop online policies now face).
+        let cfg = PlatformConfig {
+            n_nodes: 1,
+            contention: ContentionCurve::Linear { strength: 0.5 },
+            node_capacity: 2,
+            ..Default::default()
+        };
+        let mut p = FaasPlatform::new(cfg, 0, 41);
+        let ids: Vec<InstanceId> = (0..2)
+            .map(|i| match p.place(SimTime::from_ms(i as f64)) {
+                Placement::Cold { id, .. } => {
+                    p.cold_start_ready(id);
+                    id
+                }
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        let node = p.scheduler.get(ids[0]).node;
+        // load = 2/2 = 1 → multiplier 0.5.
+        assert!((p.nodes().contention_multiplier(node) - 0.5).abs() < 1e-12);
+        let loaded = p.perf_factor(ids[0], SimTime::from_ms(5.0));
+        p.crash(ids[1]);
+        // load = 1/2 → multiplier 0.75; same instant, so drift/diurnal are
+        // unchanged and the ratio is exactly 0.75/0.5.
+        let relieved = p.perf_factor(ids[0], SimTime::from_ms(5.0));
+        assert!(
+            (relieved / loaded - 0.75 / 0.5).abs() < 1e-9,
+            "termination did not speed the node up: {loaded} -> {relieved}"
+        );
+    }
+
+    #[test]
+    fn contention_off_ignores_residents() {
+        let cfg = PlatformConfig { n_nodes: 1, ..Default::default() };
+        let mut p = FaasPlatform::new(cfg, 0, 43);
+        let a = match p.place(SimTime::ZERO) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        p.cold_start_ready(a);
+        let f1 = p.perf_factor(a, SimTime::from_ms(5.0));
+        let b = match p.place(SimTime::from_ms(5.0)) {
+            Placement::Cold { id, .. } => id,
+            other => panic!("{other:?}"),
+        };
+        p.cold_start_ready(b);
+        // Same instant: co-tenancy must not move the factor when the
+        // curve is off.
+        let f2 = p.perf_factor(a, SimTime::from_ms(5.0));
+        assert_eq!(f1, f2, "contention off but load changed the factor");
     }
 }

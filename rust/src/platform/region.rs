@@ -48,6 +48,17 @@ const DEMO_COLDSTART_SCALE: [f64; 6] = [1.0, 1.2, 0.85, 1.1, 0.95, 1.05];
 /// of different strengths per region).
 const DEMO_DIURNAL_AMPLITUDE: [f64; 6] = [0.0, 0.05, 0.02, 0.08, 0.0, 0.04];
 
+/// Per-archetype contention-strength scale: how hard co-tenancy bites on
+/// that region's hardware mix (applied to the CLI-supplied curve by
+/// [`super::ClusterConfig::demo_contended`]; the demo profiles themselves
+/// default to contention off so the golden fingerprints stay pinned).
+const DEMO_CONTENTION_SCALE: [f64; 6] = [1.0, 1.3, 0.7, 1.2, 0.9, 1.05];
+
+/// The contention scale of demo region `i` (cycled like the archetypes).
+pub fn demo_contention_scale(i: u32) -> f64 {
+    DEMO_CONTENTION_SCALE[i as usize % DEMO_CONTENTION_SCALE.len()]
+}
+
 impl RegionConfig {
     /// Deterministic demo profile for region `i`: the six archetypes are
     /// cycled with a mild per-copy drift so sibling regions are similar

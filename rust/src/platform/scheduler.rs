@@ -29,7 +29,6 @@
 //! against full-table scans in debug builds.
 
 use crate::sim::SimTime;
-use crate::util::prng::Rng;
 
 use super::instance::{DeployId, Instance, InstanceId, InstanceState};
 use super::node::NodeId;
@@ -158,6 +157,19 @@ impl Scheduler {
         now: SimTime,
         recycled: &mut u64,
     ) -> Option<InstanceId> {
+        self.take_warm_notify(deploy, now, recycled, |_| {})
+    }
+
+    /// Like [`Scheduler::take_warm`], but reports each recycled instance
+    /// (while its slot data is still intact) so the caller can settle
+    /// node-residency accounting — the platform departs the node table.
+    pub fn take_warm_notify(
+        &mut self,
+        deploy: DeployId,
+        now: SimTime,
+        recycled: &mut u64,
+        mut on_recycled: impl FnMut(&Instance),
+    ) -> Option<InstanceId> {
         let Scheduler { slots, free, warm, live, warm_total } = self;
         let pool = warm.get_mut(deploy.0 as usize)?;
         while pool.tail != NIL {
@@ -172,6 +184,7 @@ impl Scheduler {
                 *live -= 1;
                 free.push(s as u32);
                 *recycled += 1;
+                on_recycled(&slots[s].inst);
                 continue;
             }
             inst.state = InstanceState::Busy;
@@ -215,11 +228,6 @@ impl Scheduler {
                 id
             }
         }
-    }
-
-    /// Pick a node for a new instance: uniform over the pool.
-    pub fn pick_node(&self, n_nodes: usize, rng: &mut Rng) -> NodeId {
-        NodeId(rng.below(n_nodes) as u32)
     }
 
     /// Cold start finished: the instance begins serving.
@@ -291,7 +299,7 @@ impl Scheduler {
     /// deployment (in deployment-id order, so the visit order is
     /// deterministic). Allocation-free; returns the number expired.
     pub fn expire_idle(&mut self, now: SimTime, timeout_ms: f64) -> u64 {
-        self.expire_idle_with(now, timeout_ms, |_| {})
+        self.expire_idle_notify(now, timeout_ms, |_| {})
     }
 
     /// Like [`Scheduler::expire_idle`], but also pushes the expired ids
@@ -302,14 +310,17 @@ impl Scheduler {
         timeout_ms: f64,
         out: &mut Vec<InstanceId>,
     ) -> u64 {
-        self.expire_idle_with(now, timeout_ms, |id| out.push(id))
+        self.expire_idle_notify(now, timeout_ms, |i| out.push(i.id))
     }
 
-    fn expire_idle_with(
+    /// Like [`Scheduler::expire_idle`], but reports each expired instance
+    /// (slot data intact) so the caller can settle node-residency
+    /// accounting.
+    pub fn expire_idle_notify(
         &mut self,
         now: SimTime,
         timeout_ms: f64,
-        mut on_expired: impl FnMut(InstanceId),
+        mut on_expired: impl FnMut(&Instance),
     ) -> u64 {
         let Scheduler { slots, free, warm, live, warm_total } = self;
         let mut expired = 0u64;
@@ -328,7 +339,7 @@ impl Scheduler {
                 *live -= 1;
                 free.push(s as u32);
                 expired += 1;
-                on_expired(slots[s].inst.id);
+                on_expired(&slots[s].inst);
             }
         }
         expired
@@ -361,7 +372,7 @@ mod tests {
         let mut s = Scheduler::new();
         let mut ids = Vec::new();
         for i in 0..n {
-            let id = s.create_instance(NodeId(i as u32), SOLO, 1.0, 1e9, SimTime::ZERO);
+            let id = s.create_instance(NodeId(i as u64), SOLO, 1.0, 1e9, SimTime::ZERO);
             s.mark_running(id);
             s.release(id, SimTime::from_ms(i as f64));
             ids.push(id);
@@ -451,7 +462,7 @@ mod tests {
         let mut s = Scheduler::new();
         let mut ids = Vec::new();
         for d in 0..3u32 {
-            let id = s.create_instance(NodeId(d), DeployId(d), 1.0, 1e9, SimTime::ZERO);
+            let id = s.create_instance(NodeId(d as u64), DeployId(d), 1.0, 1e9, SimTime::ZERO);
             s.mark_running(id);
             s.release(id, SimTime::from_ms(d as f64));
             ids.push(id);
@@ -528,7 +539,7 @@ mod tests {
         let mut s = Scheduler::new();
         let mut ids = Vec::new();
         for i in 0..6 {
-            let id = s.create_instance(NodeId(i as u32), SOLO, 1.0, 1e9, SimTime::ZERO);
+            let id = s.create_instance(NodeId(i as u64), SOLO, 1.0, 1e9, SimTime::ZERO);
             s.mark_running(id);
             ids.push(id);
         }
@@ -622,13 +633,28 @@ mod tests {
     }
 
     #[test]
-    fn pick_node_uniform_coverage() {
-        let s = Scheduler::new();
-        let mut rng = Rng::new(1);
-        let mut seen = vec![false; 16];
-        for _ in 0..2_000 {
-            seen[s.pick_node(16, &mut rng).0 as usize] = true;
-        }
-        assert!(seen.iter().all(|&b| b));
+    fn take_warm_notify_reports_recycled_instances() {
+        let mut s = Scheduler::new();
+        let id = s.create_instance(NodeId(3), SOLO, 1.0, 100.0, SimTime::ZERO);
+        s.mark_running(id);
+        s.release(id, SimTime::from_ms(1.0));
+        let mut rec = 0;
+        let mut nodes = Vec::new();
+        // Lifetime (100 ms) elapsed: the instance is recycled and reported
+        // with its slot data (node id) still intact.
+        let got =
+            s.take_warm_notify(SOLO, SimTime::from_ms(200.0), &mut rec, |i| nodes.push(i.node));
+        assert_eq!(got, None);
+        assert_eq!(rec, 1);
+        assert_eq!(nodes, vec![NodeId(3)]);
+    }
+
+    #[test]
+    fn expire_idle_notify_reports_expired_instances() {
+        let (mut s, ids) = sched_with_idle(3);
+        let mut expired = Vec::new();
+        let n = s.expire_idle_notify(SimTime::from_ms(3.0), 1.5, |i| expired.push(i.id));
+        assert_eq!(n, 2);
+        assert_eq!(expired, vec![ids[0], ids[1]]);
     }
 }

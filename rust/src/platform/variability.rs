@@ -32,6 +32,12 @@ pub struct VariabilityConfig {
     pub ou_theta: f64,
     /// OU stationary sigma for node drift.
     pub ou_sigma: f64,
+    /// Drift advancement epoch, ms. 0 (the default) advances each node's
+    /// OU walk exactly at every factor lookup — the legacy semantics,
+    /// pinned by the golden fingerprints. > 0 switches the node table to
+    /// one batched drift pass per epoch boundary (see `platform::node`),
+    /// which is what keeps ≥10k-node regions cheap.
+    pub drift_epoch_ms: f64,
     /// Lognormal sigma of the instance-level offset at placement.
     pub instance_sigma: f64,
     /// Lognormal sigma of per-invocation duration noise.
@@ -50,6 +56,7 @@ impl Default for VariabilityConfig {
             diurnal_peak_hour: 3.0,
             ou_theta: 0.8,
             ou_sigma: 0.015,
+            drift_epoch_ms: 0.0,
             instance_sigma: 0.03,
             invocation_sigma: 0.02,
         }

@@ -1,7 +1,8 @@
-//! Shared scenario builders for tests and property checks.
+//! Shared scenario builders for tests, property checks, and benches.
 
 use crate::coordinator::MinosConfig;
 use crate::experiment::config::ExperimentConfig;
+use crate::platform::{ClusterConfig, ContentionCurve};
 use crate::sim::SimTime;
 
 /// A fast experiment config (short horizon, fewer nodes) whose statistics
@@ -22,6 +23,44 @@ pub fn minos_with_threshold(threshold_ms: f64) -> MinosConfig {
     }
 }
 
+/// A quick config on a *contended* region: 40 nodes at capacity 4 with a
+/// linear curve, so the closed-loop fleets overlap enough that placement
+/// and termination visibly move node speed.
+pub fn contended_region(seed: u64) -> ExperimentConfig {
+    let mut cfg = quick_config(2, seed, 90.0)
+        .with_contention(ContentionCurve::Linear { strength: 0.35 }, 4);
+    cfg.platform.n_nodes = 40;
+    cfg
+}
+
+/// The noisy-neighbor extreme: 4 nodes at capacity 2 under a concave
+/// power curve — heavy co-location where the first co-tenant already
+/// costs ~25 % of node speed.
+pub fn noisy_neighbor(seed: u64) -> ExperimentConfig {
+    let mut cfg = quick_config(5, seed, 90.0)
+        .with_contention(ContentionCurve::Power { strength: 0.5, exponent: 0.7 }, 2);
+    cfg.platform.n_nodes = 4;
+    cfg
+}
+
+/// A demo cluster whose regions couple node speed to load (per-archetype
+/// contention strengths) and advance OU drift in batched 60 s epochs —
+/// the configuration shared by `tests/contention_parity.rs` and
+/// `benches/contention_scale.rs`. `n_nodes` sets every region's pool size
+/// (the quota scales with it so big pools actually fill).
+pub fn contended_cluster(n_regions: usize, n_nodes: usize) -> ClusterConfig {
+    ClusterConfig::demo_contended(
+        n_regions,
+        ContentionCurve::Power { strength: 0.5, exponent: 0.7 },
+        4,
+        60_000.0,
+    )
+    .with_region_overrides(|r| {
+        r.platform.n_nodes = n_nodes;
+        r.platform.max_instances = (2 * n_nodes).max(1_000);
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -34,5 +73,26 @@ mod tests {
         let m = minos_with_threshold(123.0);
         assert!(m.enabled);
         assert_eq!(m.elysium_threshold_ms, 123.0);
+    }
+
+    #[test]
+    fn contended_builders_enable_the_coupling() {
+        let c = contended_region(7);
+        assert!(!c.platform.contention.is_off());
+        assert_eq!(c.platform.node_capacity, 4);
+        let n = noisy_neighbor(7);
+        assert_eq!(n.platform.n_nodes, 4);
+        assert!(matches!(
+            n.platform.contention,
+            ContentionCurve::Power { .. }
+        ));
+        let cl = contended_cluster(3, 500);
+        assert_eq!(cl.len(), 3);
+        for r in cl.iter() {
+            assert!(!r.platform.contention.is_off());
+            assert_eq!(r.platform.n_nodes, 500);
+            assert_eq!(r.platform.variability.drift_epoch_ms, 60_000.0);
+            assert!(r.platform.max_instances >= 1_000);
+        }
     }
 }

@@ -8,13 +8,21 @@
 //! 4. Minos filtering stochastically improves the warm pool;
 //! 5. P² tracks exact percentiles; Welford matches exact moments;
 //! 6. end-to-end: no run loses or duplicates requests, and every record
-//!    respects the retry cap.
+//!    respects the retry cap;
+//! 7. the contention-coupled node model: curves are anchored at 1.0 and
+//!    monotone in load, the contention-off table is bit-identical to the
+//!    legacy per-node model, batched OU drift equals the exact transition
+//!    at epoch boundaries, and recycled node slots never resurrect stale
+//!    generations.
 
 use minos::coordinator::queue::InvocationQueue;
 use minos::coordinator::MinosConfig;
 use minos::experiment::runner::run_single;
 use minos::platform::billing::{Billing, TIERS};
-use minos::platform::{FaasPlatform, Placement, PlatformConfig};
+use minos::platform::{
+    contention, ContentionCurve, FaasPlatform, NodeId, NodeModel, NodeTable, Placement,
+    PlatformConfig,
+};
 use minos::sim::SimTime;
 use minos::stats::{descriptive, P2Quantile, Welford};
 use minos::testkit::{prop, scenarios};
@@ -293,6 +301,230 @@ fn prop_end_to_end_run_invariants() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_contention_monotone_and_anchored_at_one() {
+    // More co-tenants never speed a node up; an empty node is *exactly*
+    // nominal (contention(0) == 1.0, which is what keeps contention-off
+    // physics bit-identical); the floor bounds every curve.
+    prop::check(
+        "contention-monotone",
+        |rng| {
+            let curve = if rng.chance(0.5) {
+                ContentionCurve::Linear { strength: rng.f64() * 1.5 }
+            } else {
+                ContentionCurve::Power {
+                    strength: rng.f64() * 1.5,
+                    exponent: 0.05 + rng.f64() * 0.95,
+                }
+            };
+            let capacity = 1 + rng.below(16) as u32;
+            (curve, capacity)
+        },
+        |&(curve, capacity)| {
+            if curve.factor(0.0) != 1.0 {
+                return Err(format!("contention(0) = {} != 1", curve.factor(0.0)));
+            }
+            let mut prev = 1.0;
+            for residents in 1..=4 * capacity {
+                let f = curve.factor(residents as f64 / capacity as f64);
+                if f > prev {
+                    return Err(format!(
+                        "factor increased with load at {residents}/{capacity}: {prev} -> {f}"
+                    ));
+                }
+                if f < contention::MIN_CONTENTION_FACTOR {
+                    return Err(format!("factor {f} under the floor"));
+                }
+                prev = f;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_contention_off_node_is_bit_identical_to_legacy() {
+    // The SoA table in exact-drift mode must reproduce the retired
+    // per-node model bit for bit — with the curve off, and with a live
+    // curve on an *empty* node (contention(0) == 1.0 exactly).
+    struct LegacyNode {
+        base: f64,
+        drift: f64,
+        theta: f64,
+        sigma: f64,
+        last: SimTime,
+    }
+    impl LegacyNode {
+        // The pre-SoA `Node::factor_at`, re-stated verbatim.
+        fn factor_at(&mut self, now: SimTime, rng: &mut Rng) -> f64 {
+            let dt_hours = now.ms_since(self.last) / 3_600_000.0;
+            if dt_hours > 0.0 && self.sigma > 0.0 {
+                let decay = (-self.theta * dt_hours).exp();
+                let mix = (1.0 - decay * decay).sqrt();
+                self.drift = 1.0 + (self.drift - 1.0) * decay + self.sigma * mix * rng.normal();
+                self.drift = self.drift.clamp(0.5, 1.5);
+            }
+            self.last = now;
+            self.base * self.drift
+        }
+    }
+    prop::check(
+        "node-table-legacy-bit-parity",
+        |rng| {
+            let seed = rng.next_u64();
+            let base = 0.5 + rng.f64();
+            let theta = 0.1 + rng.f64() * 2.0;
+            let sigma = rng.f64() * 0.1; // sometimes ~0: the no-draw path
+            let n_lookups = prop::sized(rng, 200);
+            let curve_on = rng.chance(0.5);
+            (seed, base, theta, sigma, n_lookups, curve_on)
+        },
+        |&(seed, base, theta, sigma, n_lookups, curve_on)| {
+            let model = NodeModel {
+                ou_theta: theta,
+                ou_sigma: sigma,
+                drift_epoch_ms: 0.0,
+                contention: if curve_on {
+                    ContentionCurve::Power { strength: 0.5, exponent: 0.7 }
+                } else {
+                    ContentionCurve::Off
+                },
+                capacity: 4,
+            };
+            let mut table = NodeTable::new(model);
+            let id = table.spawn(base, SimTime::ZERO);
+            let mut legacy = LegacyNode { base, drift: 1.0, theta, sigma, last: SimTime::ZERO };
+            let mut rng_t = Rng::new(seed);
+            let mut rng_l = Rng::new(seed);
+            let mut schedule = Rng::new(seed ^ 0xD1F7);
+            let mut t = SimTime::ZERO;
+            for i in 0..n_lookups {
+                t = t.plus_ms(schedule.range(0.0, 120_000.0));
+                let a = table.factor(id, t, &mut rng_t);
+                let b = legacy.factor_at(t, &mut rng_l);
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "lookup {i} at {t}: table {a} != legacy {b} (curve_on {curve_on})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_ou_matches_exact_at_epoch_boundaries() {
+    // One batched pass per epoch must land every node exactly where the
+    // per-lookup exact transition would, when sampled at the boundaries
+    // with the same draw sequence (tolerance 1e-12; the arithmetic is in
+    // fact identical).
+    prop::check(
+        "ou-batched-vs-exact",
+        |rng| {
+            let seed = rng.next_u64();
+            let theta = 0.2 + rng.f64() * 1.5;
+            let sigma = 0.005 + rng.f64() * 0.1;
+            let epoch_ms = (1 + rng.below(120)) as f64 * 1_000.0; // whole seconds
+            let n_nodes = 1 + rng.below(6);
+            let n_epochs = 1 + rng.below(16);
+            (seed, theta, sigma, epoch_ms, n_nodes, n_epochs)
+        },
+        |&(seed, theta, sigma, epoch_ms, n_nodes, n_epochs)| {
+            let bases: Vec<f64> = (0..n_nodes).map(|i| 0.8 + 0.05 * i as f64).collect();
+            let batched_model = NodeModel {
+                ou_theta: theta,
+                ou_sigma: sigma,
+                drift_epoch_ms: epoch_ms,
+                contention: ContentionCurve::Off,
+                capacity: 8,
+            };
+            let exact_model = NodeModel { drift_epoch_ms: 0.0, ..batched_model.clone() };
+            let mut batched = NodeTable::with_base_factors(batched_model, &bases);
+            let mut exact = NodeTable::with_base_factors(exact_model, &bases);
+            let ids = batched.ids();
+            let mut rng_b = Rng::new(seed);
+            let mut rng_e = Rng::new(seed);
+            for k in 1..=n_epochs {
+                let t = SimTime::from_ms(epoch_ms * k as f64);
+                // One lookup triggers the batched pass over all nodes (in
+                // `alive` order); the exact table advances each node at
+                // the same boundary in the same order.
+                let _ = batched.factor(ids[0], t, &mut rng_b);
+                for &id in &ids {
+                    let _ = exact.factor(id, t, &mut rng_e);
+                }
+                for &id in &ids {
+                    let a = batched.factor_nominal(id);
+                    let b = exact.factor_nominal(id);
+                    if (a - b).abs() > 1e-12 {
+                        return Err(format!(
+                            "epoch {k}, node {id:?}: batched {a} vs exact {b}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_node_slot_recycling_never_resurrects_stale_generations() {
+    // Random spawn/retire churn: live ids keep reading their own data;
+    // every retired id panics on access — recycled slot or not. Panics
+    // are expected by the hundred here, so the hook is silenced for the
+    // duration.
+    fn churn_case(seed: u64, n_ops: usize) -> Result<(), String> {
+        let mut rng = Rng::new(seed);
+        let mut table = NodeTable::new(NodeModel::default());
+        let mut live: Vec<(NodeId, f64)> = Vec::new();
+        let mut dead: Vec<NodeId> = Vec::new();
+        let mut next_base = 1.0;
+        for _ in 0..n_ops {
+            if live.is_empty() || rng.chance(0.6) {
+                next_base += 0.001;
+                live.push((table.spawn(next_base, SimTime::ZERO), next_base));
+            } else {
+                let (id, _) = live.swap_remove(rng.below(live.len()));
+                table.retire(id);
+                dead.push(id);
+            }
+        }
+        for &(id, base) in &live {
+            if table.base_factor(id) != base {
+                return Err(format!("live {id:?} reads foreign base factor"));
+            }
+        }
+        if table.alive_count() != live.len() {
+            return Err(format!(
+                "alive count {} != tracked {}",
+                table.alive_count(),
+                live.len()
+            ));
+        }
+        // Memory tracks the high-water mark, not churn history.
+        if table.slot_count() > live.len() + dead.len() {
+            return Err("table grew beyond spawn count".into());
+        }
+        for &id in &dead {
+            if !prop::panics(|| {
+                let _ = table.base_factor(id);
+            }) {
+                return Err(format!("retired {id:?} was resurrected"));
+            }
+        }
+        Ok(())
+    }
+    prop::quiet_panics(|| {
+        prop::check(
+            "node-slot-recycling",
+            |rng| (rng.next_u64(), prop::sized(rng, 120)),
+            |&(seed, n_ops)| churn_case(seed, n_ops),
+        );
+    });
 }
 
 #[test]

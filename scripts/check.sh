@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast] [--bench] [--policies]
-#   --fast     skip the release build and the bench compile (debug tests only)
-#   --bench    additionally run scripts/bench.sh (writes BENCH_*.json at the
-#              repo root — the hot-path perf trajectory)
-#   --policies additionally smoke-run a short replay under every built-in
-#              selection policy and assert a non-empty report
+# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention]
+#   --fast       skip the release build and the bench compile (debug tests only)
+#   --bench      additionally run scripts/bench.sh (writes BENCH_*.json at the
+#                repo root — the hot-path perf trajectory)
+#   --policies   additionally smoke-run a short replay under every built-in
+#                selection policy and assert a non-empty report
+#   --contention additionally smoke the contention model: the off path must
+#                be byte-identical to the default (which the goldens pin),
+#                and contention-on replays must reproduce across two
+#                process invocations
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -18,12 +22,14 @@ cd "$(dirname "$0")/.."
 FAST=0
 BENCH=0
 POLICIES=0
+CONTENTION=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
         --bench) BENCH=1 ;;
         --policies) POLICIES=1 ;;
-        *) echo "unknown option: $arg (known: --fast --bench --policies)" >&2; exit 2 ;;
+        --contention) CONTENTION=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench --policies --contention)" >&2; exit 2 ;;
     esac
 done
 
@@ -80,12 +86,47 @@ if [ "$POLICIES" -eq 1 ]; then
     done
 fi
 
+if [ "$CONTENTION" -eq 1 ]; then
+    echo "== contention smoke (off-path identity + on-path reproducibility) =="
+    cargo build --release --quiet
+    MINOS_BIN="$(pwd)/target/release/minos"
+    [ -x "$MINOS_BIN" ] || MINOS_BIN="$(pwd)/rust/target/release/minos"
+    BASE="replay --synth --functions 2 --hours 0.02 --rate 2 --seed 909 --threads 1"
+    # Off path: an explicit `--contention off` must be byte-identical to
+    # the untouched default — the same physics the golden fingerprints pin
+    # (asserted bit-level by `cargo test --test hotpath_equivalence` above).
+    out_default="$("$MINOS_BIN" $BASE)"
+    out_off="$("$MINOS_BIN" $BASE --contention off)"
+    [ "$out_default" = "$out_off" ] \
+        || { echo "contention off diverged from the default replay" >&2; exit 1; }
+    # On path: two separate process invocations must reproduce the report
+    # exactly, single-region and cluster (the never-policy fingerprint
+    # guarantee from tests/contention_parity.rs, held at process level).
+    for extra in "--policy never --contention power:0.5,0.7 --node-capacity 2" \
+                 "--regions 2 --contention linear:0.4 --drift-epoch 60"; do
+        run1="$("$MINOS_BIN" $BASE $extra)"
+        run2="$("$MINOS_BIN" $BASE $extra)"
+        [ "$run1" = "$run2" ] \
+            || { echo "contention replay ($extra) not reproducible across processes" >&2; exit 1; }
+        [ -n "$run1" ] || { echo "contention replay ($extra) produced no report" >&2; exit 1; }
+    done
+    echo "contention smoke passed"
+fi
+
 if [ "$BENCH" -eq 1 ]; then
     echo "== scripts/bench.sh =="
     scripts/bench.sh
 fi
 
 if [ ! -f rust/tests/golden_fingerprints.txt ]; then
+    if git ls-files --error-unmatch rust/tests/golden_fingerprints.txt >/dev/null 2>&1; then
+        # The goldens exist in git but not on disk: someone deleted the
+        # pin. That is a hard failure — the fingerprints are the refactor
+        # safety net, not an optional artifact.
+        echo "error: rust/tests/golden_fingerprints.txt is tracked but missing from disk;" >&2
+        echo "       restore it (or regenerate with MINOS_WRITE_GOLDEN=1 on a known-good build)" >&2
+        exit 1
+    fi
     echo "NOTE: rust/tests/golden_fingerprints.txt is missing — generate it on a"
     echo "      known-good build with: MINOS_WRITE_GOLDEN=1 cargo test --test hotpath_equivalence"
 fi
