@@ -151,6 +151,33 @@ fn main() {
     );
     report.push(&t, n_requests);
 
+    // The same paired day with the flight recorder fully on (detail
+    // probes + 60 s gauges): committed next to the bare number so probe
+    // overhead shows up in the BENCH_hotpath.json trajectory. Physics is
+    // guaranteed identical (tests/obs_parity.rs); only the rate may move.
+    let mut obs_cfg = cfg.clone();
+    obs_cfg.obs = minos::obs::ObsConfig {
+        level: minos::obs::Level::Detail,
+        ring_cap: minos::obs::ObsConfig::DEFAULT_RING_CAP,
+        gauge_every: Some(SimTime::from_secs(60.0)),
+    };
+    let mut n_obs_requests = 0u64;
+    let t = time_median("end-to-end: 1 paired paper day (probes on)", 5, || {
+        let o = runner::run_paired(&obs_cfg, None).unwrap();
+        n_obs_requests = o.minos.successful() + o.baseline.successful();
+        n_obs_requests
+    });
+    println!(
+        "{}  ({:.0}k simulated requests/s, flight recorder on)",
+        t.report(),
+        throughput(&t, n_obs_requests) / 1e3
+    );
+    report.push(&t, n_obs_requests);
+    assert_eq!(
+        n_obs_requests, n_requests,
+        "probes changed the paired day's request totals"
+    );
+
     // Baseline-only single run (the inner loop the harness repeats).
     let base = MinosConfig::baseline();
     let t = time_median("end-to-end: 1 baseline run (30 min)", 5, || {

@@ -31,6 +31,7 @@ use anyhow::Result;
 use crate::coordinator::pretest::PretestReport;
 use crate::coordinator::queue::{Invocation, InvocationQueue};
 use crate::coordinator::MinosConfig;
+use crate::obs::{GaugeSample, ObsData, ObsSink, ProbeEvent};
 use crate::platform::{
     ClusterConfig, DeployId, FaasPlatform, InstanceId, Placement, RegionConfig, RegionId,
 };
@@ -82,6 +83,18 @@ struct DeployState {
     /// seeded with the pre-tested threshold) — online policies included.
     policy: Box<dyn SelectionPolicy>,
     arrivals: usize,
+    /// Last `policy.pushes()` value probed (per-deployment watch — the
+    /// region recorder is shared, so the single-value watch in
+    /// `Recorder::note_policy` would thrash across deployments).
+    obs_last_pushes: u64,
+}
+
+/// Probe invocation ids namespaced by deployment slot: each deployment's
+/// queue numbers its own invocations from 0, so the raw ids collide
+/// across a region's functions. Slot+1 in the high bits keeps a request's
+/// termination/re-queue chain unique within the region track.
+fn obs_inv_base(slot: u32) -> u64 {
+    (slot as u64 + 1) << 40
 }
 
 /// A region's multi-function shared-node simulation state.
@@ -94,6 +107,9 @@ struct RegionWorld<'a> {
     /// Free-list for the boxed event payloads (shared by the region's
     /// deployments — they interleave on one event queue).
     pool: RecordPool,
+    /// The region's flight recorder (one track per region; off by
+    /// default). Probes only observe — never schedule, never draw RNG.
+    obs: ObsSink,
 }
 
 impl RegionWorld<'_> {
@@ -106,7 +122,7 @@ impl RegionWorld<'_> {
         inv: Invocation,
         cold: bool,
     ) {
-        let Self { platform, deploys, pool, .. } = self;
+        let Self { platform, deploys, pool, obs, .. } = self;
         let ds = &mut deploys[slot as usize];
         let outcome = gate_and_start(
             DeploymentCtx {
@@ -118,6 +134,8 @@ impl RegionWorld<'_> {
                 rng: &mut ds.rng,
                 pool,
                 bench_warm: false,
+                obs,
+                obs_inv_base: obs_inv_base(slot),
             },
             now,
             inst,
@@ -147,7 +165,15 @@ impl World for RegionWorld<'_> {
         match ev {
             CEvent::TraceArrival { idx } => {
                 let (_, slot, payload_scale) = self.schedule[idx];
-                self.deploys[slot as usize].queue.submit_scaled(0, payload_scale, now);
+                let inv =
+                    self.deploys[slot as usize].queue.submit_scaled(0, payload_scale, now);
+                self.obs.emit(
+                    now,
+                    ProbeEvent::Submitted {
+                        inv: obs_inv_base(slot) | inv.id,
+                        attempt: inv.retries,
+                    },
+                );
                 events.schedule(now, CEvent::Dispatch { slot });
                 if let Some(&(t_next, _, _)) = self.schedule.get(idx + 1) {
                     events.schedule(t_next, CEvent::TraceArrival { idx: idx + 1 });
@@ -158,19 +184,37 @@ impl World for RegionWorld<'_> {
                 let Some(inv) = self.deploys[slot as usize].queue.take() else {
                     return Ok(());
                 };
-                match self.platform.place_deploy(DeployId(slot), now) {
+                let (expired0, recycled0) =
+                    (self.platform.expired, self.platform.recycled);
+                let placement = self.platform.place_deploy(DeployId(slot), now);
+                if self.platform.expired > expired0 {
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::IdleExpired { count: self.platform.expired - expired0 },
+                    );
+                }
+                if self.platform.recycled > recycled0 {
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Recycled { count: self.platform.recycled - recycled0 },
+                    );
+                }
+                match placement {
                     Placement::Warm(inst) => {
                         self.deploys[slot as usize].result.warm_hits += 1;
+                        self.obs.emit(now, ProbeEvent::WarmHit { inst: inst.0 });
                         self.start(events, now, slot, inst, inv, false);
                     }
                     Placement::Cold { id, ready_at } => {
                         self.deploys[slot as usize].result.cold_starts += 1;
+                        self.obs.emit(now, ProbeEvent::InstanceSpawned { inst: id.0 });
                         events.schedule(ready_at, CEvent::ColdReady { slot, inst: id, inv });
                     }
                     Placement::Saturated => {
                         // Shared quota exhausted (possibly by *another*
                         // function's fleet): back to the queue head,
                         // retry shortly.
+                        self.obs.emit(now, ProbeEvent::Saturated);
                         self.deploys[slot as usize].queue.untake(inv);
                         events.schedule_in_ms(100.0, CEvent::Dispatch { slot });
                     }
@@ -183,6 +227,24 @@ impl World for RegionWorld<'_> {
             }
 
             CEvent::CrashRequeue { slot, inst, crash } => {
+                if self.obs.is_on() {
+                    let tagged = obs_inv_base(slot) | crash.inv.id;
+                    self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Terminated {
+                            inv: tagged,
+                            attempt: crash.inv.retries,
+                            bench_ms: crash.bench_ms,
+                        },
+                    );
+                    // `settle_crash` re-queues via `requeue`, which bumps
+                    // the retry count — probe the next attempt index.
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Requeued { inv: tagged, attempt: crash.inv.retries + 1 },
+                    );
+                }
                 self.platform.crash(inst);
                 let ds = &mut self.deploys[slot as usize];
                 settle_crash(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &crash);
@@ -198,11 +260,56 @@ impl World for RegionWorld<'_> {
                 let ds = &mut self.deploys[slot as usize];
                 // Pushed policy updates arrive between requests (§IV).
                 ds.policy.on_request_complete();
+                if self.obs.is_on() {
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Finished {
+                            inv: obs_inv_base(slot) | rec.inv.id,
+                            attempt: rec.inv.retries,
+                            cold: rec.cold,
+                            e2e_ms: now.ms_since(rec.inv.submitted_at),
+                        },
+                    );
+                    // Per-deployment push watch (no ThresholdUpdated
+                    // probes here: each deployment publishes its own
+                    // threshold, so a single-value watch would thrash).
+                    let pushes = ds.policy.pushes();
+                    if pushes > ds.obs_last_pushes {
+                        self.obs.emit(
+                            now,
+                            ProbeEvent::PolicyPushes { count: pushes - ds.obs_last_pushes },
+                        );
+                        ds.obs_last_pushes = pushes;
+                    }
+                }
                 settle_finish(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &rec, None);
                 self.pool.recycle_finish(rec);
             }
         }
         Ok(())
+    }
+
+    fn observe(&mut self, now: SimTime) {
+        if !self.obs.is_on() {
+            return;
+        }
+        self.obs.note_drift(now, self.platform.nodes().drift_epochs());
+        if let Some(at) = self.obs.gauge_due(now) {
+            let queue_depth: u64 = self.deploys.iter().map(|d| d.queue.len() as u64).sum();
+            let completed: u64 = self.deploys.iter().map(|d| d.result.successful()).sum();
+            let terminations: u64 =
+                self.deploys.iter().map(|d| d.result.terminations).sum();
+            let cost_usd: f64 =
+                self.deploys.iter().map(|d| d.result.total_cost_usd()).sum();
+            self.obs.record_gauge(GaugeSample {
+                at,
+                queue_depth,
+                fleet: self.platform.fleet_gauges(),
+                completed,
+                terminations,
+                cost_usd,
+            });
+        }
     }
 }
 
@@ -234,6 +341,9 @@ pub struct RegionOutcome {
     /// Events the region's sub-simulation handled (throughput metric).
     pub events_handled: u64,
     pub per_function: Vec<DeploymentOutcome>,
+    /// Flight-recorder capture for this region (None unless the replay
+    /// was instrumented). Track label = the region name.
+    pub obs: Option<Box<ObsData>>,
 }
 
 impl RegionOutcome {
@@ -279,6 +389,13 @@ impl ClusterOutcome {
 
     pub fn total_events_handled(&self) -> u64 {
         self.per_region.iter().map(|r| r.events_handled).sum()
+    }
+
+    /// The instrumented regions' captures, in canonical (region id)
+    /// order — the order `run_cluster` merges worker results in, so
+    /// timeline and gauge exports are byte-identical at any thread count.
+    pub fn obs_tracks(&self) -> Vec<&ObsData> {
+        self.per_region.iter().filter_map(|r| r.obs.as_deref()).collect()
     }
 }
 
@@ -421,6 +538,7 @@ fn run_region(
             rng: root.fork(7_000 + base.day as u64 + slot as u64 * 31),
             policy,
             arrivals: 0,
+            obs_last_pushes: 0,
         });
     }
 
@@ -438,13 +556,15 @@ fn run_region(
         deploys,
         schedule,
         pool: RecordPool::new(),
+        obs: ObsSink::from_config(&base.obs),
     });
     if let Some(&(t0, _, _)) = sim.world.schedule.first() {
         sim.events.schedule(t0, CEvent::TraceArrival { idx: 0 });
     }
     sim.run()?;
     let events_handled = sim.events_handled();
-    let world = sim.into_world();
+    let mut world = sim.into_world();
+    let obs = world.obs.take_data(&region.name);
 
     let mut per_function = Vec::with_capacity(world.deploys.len());
     for (mut ds, (_, pretest)) in world.deploys.into_iter().zip(pretests) {
@@ -469,6 +589,7 @@ fn run_region(
         crashes: world.platform.crashes,
         events_handled,
         per_function,
+        obs,
     })
 }
 

@@ -60,6 +60,11 @@ pub struct ExperimentConfig {
     /// O(1)-memory accumulators (the default for `minos replay`/`sweep`).
     /// Sinks only observe — the mode never changes a run's physics.
     pub metrics: MetricsMode,
+    /// Observability: probe level, flight-recorder capacity, gauge
+    /// cadence (`obs::ObsConfig::off()` by default). Probes only
+    /// observe — an instrumented run's physics are bit-identical to an
+    /// uninstrumented one.
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl ExperimentConfig {
@@ -81,6 +86,7 @@ impl ExperimentConfig {
             open_loop_rate_rps: None,
             replay: None,
             metrics: MetricsMode::Full,
+            obs: crate::obs::ObsConfig::off(),
         }
     }
 

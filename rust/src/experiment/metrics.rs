@@ -238,6 +238,9 @@ pub struct RunResult {
     pub threshold_ms: f64,
     /// Published online-threshold updates (when the §IV collector is on).
     pub online_pushes: u64,
+    /// Flight-recorder capture (None unless the run was instrumented —
+    /// see `obs`). Observation only: never feeds back into physics.
+    pub obs: Option<Box<crate::obs::ObsData>>,
 }
 
 impl RunResult {

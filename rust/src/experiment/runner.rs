@@ -73,6 +73,9 @@ pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<
     pretest_cfg.replay = None;
     pretest_cfg.metrics = super::metrics::MetricsMode::Full;
     pretest_cfg.policy = crate::policy::PolicySpec::Fixed;
+    // Pre-tests are calibration machinery, not the run under observation:
+    // keep them out of timelines, gauges, and probe counters.
+    pretest_cfg.obs = crate::obs::ObsConfig::off();
     let minos = MinosConfig {
         enabled: true,
         elysium_threshold_ms: f64::INFINITY,
@@ -80,6 +83,14 @@ pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<
     };
     let run = run_single(&pretest_cfg, &minos, 1, cfg.pretest_bench_warm, runtime)?;
     Ok(PretestReport::from_scores(run.bench_scores().to_vec(), cfg.elysium_percentile))
+}
+
+/// Relabel a run's flight-recorder track. Worlds capture under a generic
+/// label; the orchestrator knows the run's identity (day, arm, function).
+fn label_obs(result: &mut RunResult, track: String) {
+    if let Some(obs) = result.obs.as_deref_mut() {
+        obs.track = track;
+    }
 }
 
 /// Both paper conditions on the identical platform draw.
@@ -143,7 +154,8 @@ pub fn run_paired_threads(
     let baseline_cfg = MinosConfig { enabled: false, ..cfg.minos.clone() };
     // The paper deploys baseline and Minos as *separate functions* run at
     // the same time: same platform day, independent instance lotteries.
-    let (minos, baseline) = if parallel::resolve_threads(threads) >= 2 && runtime.is_none()
+    let (mut minos, mut baseline) = if parallel::resolve_threads(threads) >= 2
+        && runtime.is_none()
     {
         let (minos_res, baseline_res) = std::thread::scope(|s| {
             let handle = s.spawn(|| run_single(cfg, &minos_cfg, 0, false, None));
@@ -161,6 +173,8 @@ pub fn run_paired_threads(
             run_single(cfg, &baseline_cfg, 2, false, runtime)?,
         )
     };
+    label_obs(&mut minos, format!("day{}/minos", cfg.day));
+    label_obs(&mut baseline, format!("day{}/baseline", cfg.day));
     Ok(PairedOutcome { day: cfg.day, pretest, minos, baseline })
 }
 
@@ -272,7 +286,8 @@ fn trace_item(
     };
     let arrivals = schedule.len();
     cfg.replay = Some(schedule);
-    let result = run_single(&cfg, &minos_cfg, 0, false, runtime)?;
+    let mut result = run_single(&cfg, &minos_cfg, 0, false, runtime)?;
+    label_obs(&mut result, profile.name.clone());
     Ok(FunctionRunOutcome {
         id: profile.id,
         name: profile.name.clone(),
@@ -406,8 +421,10 @@ pub fn run_trace_paired(
         let baseline_cfg = MinosConfig { enabled: false, ..cfg.minos.clone() };
         let arrivals = schedule.len();
         cfg.replay = Some(schedule.clone());
-        let minos = run_single(&cfg, &minos_cfg, 0, false, None)?;
-        let baseline = run_single(&cfg, &baseline_cfg, 2, false, None)?;
+        let mut minos = run_single(&cfg, &minos_cfg, 0, false, None)?;
+        let mut baseline = run_single(&cfg, &baseline_cfg, 2, false, None)?;
+        label_obs(&mut minos, format!("{}/minos", profile.name));
+        label_obs(&mut baseline, format!("{}/baseline", profile.name));
         Ok(FunctionPairedOutcome {
             id: profile.id,
             name: profile.name.clone(),

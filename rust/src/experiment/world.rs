@@ -63,6 +63,8 @@ use crate::util::prng::Rng;
 use crate::workload::weather;
 use crate::workload::FunctionSpec;
 
+use crate::obs::{GaugeSample, ObsSink, ProbeEvent};
+
 use super::config::ExperimentConfig;
 use super::metrics::{CostEvent, InvocationRecord, RunResult};
 
@@ -190,6 +192,15 @@ pub(crate) struct DeploymentCtx<'a> {
     pub rng: &'a mut Rng,
     pub pool: &'a mut RecordPool,
     pub bench_warm: bool,
+    /// Flight-recorder sink (observation only: the gate emits
+    /// `AttemptStarted` / `GateVerdict` probes through it, never draws
+    /// RNG for it, and `ObsSink::Off` reduces every emit to one
+    /// discriminant test).
+    pub obs: &'a mut ObsSink,
+    /// High bits OR-ed into probe invocation ids. Cluster regions
+    /// namespace per-deployment queues by slot (each deployment numbers
+    /// its own invocations from 0); the single-deployment world passes 0.
+    pub obs_inv_base: u64,
 }
 
 /// What an instance does after the cold-start gate, as schedulable facts.
@@ -211,7 +222,27 @@ pub(crate) fn gate_and_start(
     mut inv: Invocation,
     cold: bool,
 ) -> StartOutcome {
-    let DeploymentCtx { spec, minos, policy, platform, result, rng, pool, bench_warm } = ctx;
+    let DeploymentCtx {
+        spec,
+        minos,
+        policy,
+        platform,
+        result,
+        rng,
+        pool,
+        bench_warm,
+        obs,
+        obs_inv_base,
+    } = ctx;
+    obs.emit(
+        now,
+        ProbeEvent::AttemptStarted {
+            inv: obs_inv_base | inv.id,
+            attempt: inv.retries,
+            inst: inst.0,
+            cold,
+        },
+    );
     let perf = platform.perf_factor(inst, now);
     let noise = platform.invocation_noise();
     let phases = spec.sample_scaled(perf, noise, inv.payload_scale, rng);
@@ -225,6 +256,19 @@ pub(crate) fn gate_and_start(
         });
         match decision {
             ColdStartDecision::TerminateAndRequeue { bench_ms } => {
+                if obs.is_on() {
+                    obs.emit(
+                        now,
+                        ProbeEvent::GateVerdict {
+                            inv: obs_inv_base | inv.id,
+                            attempt: inv.retries,
+                            bench_ms,
+                            threshold_ms: policy.published_threshold(),
+                            pass: false,
+                            forced: false,
+                        },
+                    );
+                }
                 platform.scheduler.get_mut(inst).benchmark_score = Some(bench_ms);
                 return StartOutcome::Terminate {
                     at: now.plus_ms(bench_ms),
@@ -232,6 +276,21 @@ pub(crate) fn gate_and_start(
                 };
             }
             ColdStartDecision::Run { forced, bench_ms } => {
+                // No verdict probe for the baseline (no gate ran); the
+                // forced pass records NaN for its skipped benchmark.
+                if obs.is_on() && (forced || bench_ms.is_some()) {
+                    obs.emit(
+                        now,
+                        ProbeEvent::GateVerdict {
+                            inv: obs_inv_base | inv.id,
+                            attempt: inv.retries,
+                            bench_ms: bench_ms.unwrap_or(f64::NAN),
+                            threshold_ms: policy.published_threshold(),
+                            pass: true,
+                            forced,
+                        },
+                    );
+                }
                 if forced {
                     inv.forced_pass = true;
                     result.forced_passes += 1;
@@ -390,6 +449,9 @@ pub(crate) struct MinosWorld<'a> {
     datasets: Vec<weather::WeatherData>,
     /// Round-robin dataset assignment for open-loop/replay arrivals.
     arrival_rr: u32,
+    /// Flight recorder (off by default; `cfg.obs` turns it on). Probes
+    /// only observe — they never schedule events or draw RNG.
+    obs: ObsSink,
 }
 
 impl<'a> MinosWorld<'a> {
@@ -431,6 +493,7 @@ impl<'a> MinosWorld<'a> {
             pool: RecordPool::new(),
             datasets,
             arrival_rr: 0,
+            obs: ObsSink::from_config(&cfg.obs),
         }
     }
 
@@ -460,9 +523,12 @@ impl<'a> MinosWorld<'a> {
     }
 
     /// Tear down after the run: fold the platform counters into the
-    /// result and hand it out.
-    pub fn finish(self) -> RunResult {
+    /// result and hand it out. Any flight-recorder capture rides out on
+    /// `RunResult::obs` under a generic track label; callers that know
+    /// the run's identity (function name, day/arm) relabel it.
+    pub fn finish(mut self) -> RunResult {
         debug_assert!(self.queue.conserved(), "invocation conservation violated");
+        self.result.obs = self.obs.take_data("run");
         let mut result = self.result;
         result.cold_starts = self.platform.cold_starts;
         result.warm_hits = self.platform.warm_hits;
@@ -480,8 +546,9 @@ impl<'a> MinosWorld<'a> {
         inv: Invocation,
         cold: bool,
     ) {
-        let Self { cfg, minos, policy, platform, result, rng_workload, pool, bench_warm, .. } =
-            self;
+        let Self {
+            cfg, minos, policy, platform, result, rng_workload, pool, bench_warm, obs, ..
+        } = self;
         let outcome = gate_and_start(
             DeploymentCtx {
                 spec: &cfg.function,
@@ -492,6 +559,8 @@ impl<'a> MinosWorld<'a> {
                 rng: rng_workload,
                 pool,
                 bench_warm: *bench_warm,
+                obs,
+                obs_inv_base: 0,
             },
             now,
             inst,
@@ -505,6 +574,24 @@ impl<'a> MinosWorld<'a> {
             StartOutcome::Complete { at, rec } => {
                 events.schedule(at, Event::Finish { inst, rec });
             }
+        }
+    }
+
+    /// Probe the warm-pool churn a placement caused: the idle reaper and
+    /// the lifetime recycler both run inside `place_deploy`, so their
+    /// effect shows as counter deltas around the call.
+    fn note_placement_churn(&mut self, now: SimTime, expired0: u64, recycled0: u64) {
+        if self.platform.expired > expired0 {
+            self.obs.emit(
+                now,
+                ProbeEvent::IdleExpired { count: self.platform.expired - expired0 },
+            );
+        }
+        if self.platform.recycled > recycled0 {
+            self.obs.emit(
+                now,
+                ProbeEvent::Recycled { count: self.platform.recycled - recycled0 },
+            );
         }
     }
 }
@@ -523,7 +610,11 @@ impl World for MinosWorld<'_> {
                 if self.cfg.vus.may_submit(now) {
                     let vu = self.arrival_rr % self.cfg.vus.n_vus.max(1);
                     self.arrival_rr = self.arrival_rr.wrapping_add(1);
-                    self.queue.submit(vu, now);
+                    let inv = self.queue.submit(vu, now);
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Submitted { inv: inv.id, attempt: inv.retries },
+                    );
                     events.schedule(now, Event::Dispatch);
                     let rate = self.cfg.open_loop_rate_rps.expect("arrival without rate");
                     let gap_ms = self.rng_workload.exponential(rate) * 1_000.0;
@@ -539,7 +630,9 @@ impl World for MinosWorld<'_> {
                 // real execution; the trace, not a think loop, drives load.
                 let vu = self.arrival_rr % self.cfg.vus.n_vus.max(1);
                 self.arrival_rr = self.arrival_rr.wrapping_add(1);
-                self.queue.submit_scaled(vu, payload_scale, now);
+                let inv = self.queue.submit_scaled(vu, payload_scale, now);
+                self.obs
+                    .emit(now, ProbeEvent::Submitted { inv: inv.id, attempt: inv.retries });
                 events.schedule(now, Event::Dispatch);
                 if let Some(&(t_next, _)) = schedule.arrivals.get(idx + 1) {
                     events.schedule(t_next, Event::TraceArrival { idx: idx + 1 });
@@ -548,23 +641,33 @@ impl World for MinosWorld<'_> {
 
             Event::Submit { vu } => {
                 if self.cfg.vus.may_submit(now) {
-                    self.queue.submit(vu, now);
+                    let inv = self.queue.submit(vu, now);
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Submitted { inv: inv.id, attempt: inv.retries },
+                    );
                     events.schedule(now, Event::Dispatch);
                 }
             }
 
             Event::Dispatch => {
                 let Some(inv) = self.queue.take() else { return Ok(()) };
-                match self.platform.place_deploy(DeployId::SOLO, now) {
+                let (expired0, recycled0) = (self.platform.expired, self.platform.recycled);
+                let placement = self.platform.place_deploy(DeployId::SOLO, now);
+                self.note_placement_churn(now, expired0, recycled0);
+                match placement {
                     Placement::Warm(inst) => {
+                        self.obs.emit(now, ProbeEvent::WarmHit { inst: inst.0 });
                         self.start_invocation(events, now, inst, inv, false);
                     }
                     Placement::Cold { id, ready_at } => {
+                        self.obs.emit(now, ProbeEvent::InstanceSpawned { inst: id.0 });
                         events.schedule(ready_at, Event::ColdReady { inst: id, inv });
                     }
                     Placement::Saturated => {
                         // Platform quota: put the invocation back at the
                         // queue head and retry shortly.
+                        self.obs.emit(now, ProbeEvent::Saturated);
                         self.queue.untake(inv);
                         events.schedule_in_ms(100.0, Event::Dispatch);
                     }
@@ -577,6 +680,26 @@ impl World for MinosWorld<'_> {
             }
 
             Event::CrashRequeue { inst, crash } => {
+                if self.obs.is_on() {
+                    self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Terminated {
+                            inv: crash.inv.id,
+                            attempt: crash.inv.retries,
+                            bench_ms: crash.bench_ms,
+                        },
+                    );
+                    // `settle_crash` re-queues via `requeue`, which bumps
+                    // the retry count — probe the next attempt index.
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Requeued {
+                            inv: crash.inv.id,
+                            attempt: crash.inv.retries + 1,
+                        },
+                    );
+                }
                 self.platform.crash(inst);
                 settle_crash(
                     &self.cfg.billing,
@@ -593,6 +716,22 @@ impl World for MinosWorld<'_> {
                 self.platform.release(inst, now);
                 // Pushed policy updates arrive between requests (§IV).
                 self.policy.on_request_complete();
+                if self.obs.is_on() {
+                    self.obs.emit(
+                        now,
+                        ProbeEvent::Finished {
+                            inv: rec.inv.id,
+                            attempt: rec.inv.retries,
+                            cold: rec.cold,
+                            e2e_ms: now.ms_since(rec.inv.submitted_at),
+                        },
+                    );
+                    self.obs.note_policy(
+                        now,
+                        self.policy.published_threshold(),
+                        self.policy.pushes(),
+                    );
+                }
                 let prediction =
                     match (self.runtime, self.datasets.get(rec.inv.vu as usize)) {
                         (Some(rt), Some(data)) => {
@@ -620,6 +759,24 @@ impl World for MinosWorld<'_> {
             }
         }
         Ok(())
+    }
+
+    fn observe(&mut self, now: SimTime) {
+        if !self.obs.is_on() {
+            return;
+        }
+        self.obs.note_drift(now, self.platform.nodes().drift_epochs());
+        if let Some(at) = self.obs.gauge_due(now) {
+            let sample = GaugeSample {
+                at,
+                queue_depth: self.queue.len() as u64,
+                fleet: self.platform.fleet_gauges(),
+                completed: self.result.successful(),
+                terminations: self.result.terminations,
+                cost_usd: self.result.total_cost_usd(),
+            };
+            self.obs.record_gauge(sample);
+        }
     }
 }
 

@@ -73,19 +73,23 @@ USAGE: minos <command> [options]
 COMMANDS:
   week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --threads T --real --policy P]
              [--contention C --node-capacity N --drift-epoch S]
+             [--timeline FILE --gauges-every DUR --probe-level L]
   fig7       cost-over-time series for one day      [--day N --seed N --step S]
   pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
   calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
   sweep      elysium-percentile ablation            [--day N --seed N --threads T --policy P]
+             [--timeline FILE --gauges-every DUR --probe-level L]
              or policy comparison                   [--policies P1,P2,... --reps N --horizon S]
   online     one day with the online threshold      [--day N --seed N --every N]
              (shorthand for --policy online:N on a paired day)
   openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R --policy P]
+             [--timeline FILE --gauges-every DUR --probe-level L]
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
              [--regions N --spill F --routing R --threads T --paired]
              [--policy P --full-records]
              [--contention C --node-capacity N --drift-epoch S]
+             [--timeline FILE --gauges-every DUR --probe-level L]
 
 REPLAY MODES:
   default    each function replays on its own isolated platform
@@ -132,6 +136,28 @@ METRICS:
   memory stays constant per invocation on million-invocation traces.
   --full-records (replay) restores the exact per-record vectors for
   figure extraction. The sink never changes a run's physics.
+
+OBSERVABILITY (week, sweep, openloop, replay):
+  --timeline FILE     export a Chrome trace-event JSON flight record —
+             load it at https://ui.perfetto.dev. One process track per
+             run arm / region / function (canonical order, identical at
+             any --threads): async spans per invocation attempt (wait,
+             attempt #k), gate pass/fail instants with the judged
+             benchmark ms, platform instants (spawn/crash/warm-hit/
+             idle-expire/recycle), threshold counter tracks.
+  --gauges-every DUR  sample sim-time fleet gauges every DUR (60s, 2m,
+             500ms; bare number = seconds) into a CSV series: queue
+             depth, live/warm instances, live nodes, mean node factor,
+             completions, terminations, cost, per-minute rates.
+  --gauges FILE       gauge CSV path (default: TIMELINE.gauges.csv, or
+             gauges.csv without --timeline); needs --gauges-every.
+  --probe-level L     off | summary (platform/policy events + gauges) |
+             detail (adds per-invocation lifecycle). Defaults to detail
+             when --timeline is given, else off.
+  Events are captured in a bounded drop-oldest ring (drops are counted,
+  never reallocated) and merged probe counters print after each run.
+  Probes never draw RNG, schedule events, or touch physics: instrumented
+  runs are bit-identical to uninstrumented ones at any thread count.
 
 THREADS:
   --threads T   fan independent runs (paired conditions, week days,
@@ -191,6 +217,98 @@ fn apply_platform_model(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Parse a duration spec like `60s`, `2m`, `1h`, `500ms`, or a bare
+/// number of seconds.
+fn parse_duration_s(spec: &str) -> Result<f64> {
+    let (num, mult) = if let Some(v) = spec.strip_suffix("ms") {
+        (v, 0.001)
+    } else if let Some(v) = spec.strip_suffix('s') {
+        (v, 1.0)
+    } else if let Some(v) = spec.strip_suffix('m') {
+        (v, 60.0)
+    } else if let Some(v) = spec.strip_suffix('h') {
+        (v, 3_600.0)
+    } else {
+        (spec, 1.0)
+    };
+    let v: f64 = num
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration {spec:?} (e.g. 60s, 2m, 500ms)"))?;
+    if !(v.is_finite() && v > 0.0) {
+        bail!("duration must be positive, got {spec:?}");
+    }
+    Ok(v * mult)
+}
+
+/// The observability flags, parsed once per command:
+/// `--timeline FILE` (Perfetto/chrome-trace JSON; implies detail-level
+/// probes unless `--probe-level` says otherwise), `--gauges-every DUR`
+/// (sim-time fleet gauge cadence), `--gauges FILE` (gauge CSV path,
+/// default `<timeline>.gauges.csv`), `--probe-level off|summary|detail`.
+struct ObsCli {
+    cfg: minos::obs::ObsConfig,
+    timeline: Option<String>,
+    gauges_out: Option<String>,
+}
+
+impl ObsCli {
+    fn active(&self) -> bool {
+        self.cfg.enabled()
+    }
+}
+
+fn parse_obs_cli(args: &Args) -> Result<ObsCli> {
+    use minos::obs::Level;
+    let timeline = args.get("timeline").map(String::from);
+    let gauge_every_s = match args.get("gauges-every") {
+        Some(spec) => Some(parse_duration_s(spec)?),
+        None => None,
+    };
+    if args.get("gauges").is_some() && gauge_every_s.is_none() {
+        bail!("--gauges needs --gauges-every (no sampling cadence set)");
+    }
+    let level = match args.get("probe-level") {
+        Some(s) => Level::parse(s).map_err(anyhow::Error::msg)?,
+        // A timeline without lifecycle events is an empty picture:
+        // asking for one defaults the probes to full detail.
+        None if timeline.is_some() => Level::Detail,
+        None => Level::Off,
+    };
+    let mut cfg = minos::obs::ObsConfig::off();
+    cfg.level = level;
+    cfg.gauge_every = gauge_every_s.map(minos::sim::SimTime::from_secs);
+    let gauges_out = args.get("gauges").map(String::from).or_else(|| {
+        gauge_every_s.map(|_| match &timeline {
+            Some(t) => format!("{t}.gauges.csv"),
+            None => "gauges.csv".to_string(),
+        })
+    });
+    Ok(ObsCli { cfg, timeline, gauges_out })
+}
+
+/// Write the timeline / gauge files and print the merged probe counters
+/// for one command's captures (`tracks` already in canonical order).
+fn export_obs(cli: &ObsCli, tracks: &[&minos::obs::ObsData]) -> Result<()> {
+    if !cli.active() {
+        return Ok(());
+    }
+    if let Some(path) = &cli.timeline {
+        let json = minos::obs::timeline::chrome_trace(tracks).to_string_compact();
+        std::fs::write(path, &json)?;
+        println!("timeline written to {path} ({} tracks)", tracks.len());
+    }
+    if let Some(path) = &cli.gauges_out {
+        std::fs::write(path, minos::obs::gauges::render_csv(tracks))?;
+        println!("gauges written to {path}");
+    }
+    let merged = minos::obs::merged_counters(tracks.iter().copied());
+    if !merged.is_empty() {
+        println!("== probe counters ==");
+        print!("{}", minos::obs::render_counters(&merged));
+    }
+    Ok(())
+}
+
 fn cmd_week(args: &Args) -> Result<()> {
     let days = u(args, "days", 7)? as u32;
     let seed = u(args, "seed", 0x31A5)?;
@@ -200,11 +318,20 @@ fn cmd_week(args: &Args) -> Result<()> {
     base.seed = seed;
     apply_policy(args, &mut base)?;
     apply_platform_model(args, &mut base)?;
+    let obs = parse_obs_cli(args)?;
+    base.obs = obs.cfg;
     let outcomes = runner::run_week_threads(&base, days, rt.as_ref(), threads)?;
     print!("{}", report::week_report(&outcomes));
     if let Some(rt) = &rt {
         println!("\nreal PJRT executions: {}", rt.executions.get());
     }
+    // Tracks in canonical order: day index, then minos/baseline arm.
+    let mut tracks = Vec::new();
+    for o in &outcomes {
+        tracks.extend(o.minos.obs.as_deref());
+        tracks.extend(o.baseline.obs.as_deref());
+    }
+    export_obs(&obs, &tracks)?;
     Ok(())
 }
 
@@ -274,7 +401,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         // (same seeds, same platform lotteries — directly comparable).
         // It runs its own seed ladder on the paper's sweep day; refuse
         // flags it would silently ignore rather than discard them.
-        for ignored in ["day", "seed", "policy", "contention", "node-capacity", "drift-epoch"] {
+        for ignored in [
+            "day",
+            "seed",
+            "policy",
+            "contention",
+            "node-capacity",
+            "drift-epoch",
+            "timeline",
+            "gauges-every",
+            "gauges",
+            "probe-level",
+        ] {
             if args.get(ignored).is_some() {
                 bail!("--{ignored} has no effect with --policies (the policy sweep \
                        uses its own seed ladder and platform); drop it");
@@ -302,10 +440,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    let obs = parse_obs_cli(args)?;
     let pcts = [0.1, 20.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0];
     // Sweep points are independent paired runs: fan them out, print in
     // order (identical output at any thread count).
-    let outcomes = parallel::try_map_indexed(pcts.len(), threads, |i| {
+    let mut outcomes = parallel::try_map_indexed(pcts.len(), threads, |i| {
         let mut cfg = ExperimentConfig::paper_day(day);
         cfg.seed = seed;
         cfg.elysium_percentile = pcts[i];
@@ -313,8 +452,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         apply_platform_model(args, &mut cfg)?;
         // The sweep table only reads aggregates: stream, don't store.
         cfg.metrics = minos::experiment::MetricsMode::Streaming;
+        cfg.obs = obs.cfg;
         runner::run_paired(&cfg, None)
     })?;
+    // Every point runs the same day: relabel tracks by sweep point so
+    // the timeline disambiguates them (canonical order: percentile, arm).
+    for (pct, o) in pcts.iter().zip(&mut outcomes) {
+        if let Some(d) = o.minos.obs.as_deref_mut() {
+            d.track = format!("p{pct}/minos");
+        }
+        if let Some(d) = o.baseline.obs.as_deref_mut() {
+            d.track = format!("p{pct}/baseline");
+        }
+    }
     println!(
         "{:>10} {:>12} {:>10} {:>12} {:>12} {:>10}",
         "percentile", "thresh ms", "term rate", "analysis d%", "requests d%", "cost d%"
@@ -330,6 +480,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             o.cost_saving_pct(),
         );
     }
+    let mut tracks = Vec::new();
+    for o in &outcomes {
+        tracks.extend(o.minos.obs.as_deref());
+        tracks.extend(o.baseline.obs.as_deref());
+    }
+    export_obs(&obs, &tracks)?;
     Ok(())
 }
 
@@ -342,6 +498,8 @@ fn cmd_openloop(args: &Args) -> Result<()> {
     cfg.open_loop_rate_rps = Some(rate);
     apply_policy(args, &mut cfg)?;
     apply_platform_model(args, &mut cfg)?;
+    let obs = parse_obs_cli(args)?;
+    cfg.obs = obs.cfg;
     let o = runner::run_paired(&cfg, None)?;
     println!(
         "open loop @ {rate} req/s (Poisson, {} min horizon):",
@@ -360,6 +518,10 @@ fn cmd_openloop(args: &Args) -> Result<()> {
         o.successful_requests_improvement_pct(),
         o.cost_saving_pct()
     );
+    let mut tracks = Vec::new();
+    tracks.extend(o.minos.obs.as_deref());
+    tracks.extend(o.baseline.obs.as_deref());
+    export_obs(&obs, &tracks)?;
     Ok(())
 }
 
@@ -463,6 +625,8 @@ fn cmd_replay(args: &Args) -> Result<()> {
     } else {
         minos::experiment::MetricsMode::Streaming
     };
+    let obs = parse_obs_cli(args)?;
+    cfg.obs = obs.cfg;
 
     if cluster_mode {
         println!(
@@ -483,6 +647,8 @@ fn cmd_replay(args: &Args) -> Result<()> {
         );
         let outcome = cluster::run_cluster(&cfg, &registry, &trace, &cluster_cfg, threads)?;
         print!("{}", report::cluster_report(&outcome));
+        // One timeline track per region, in config (= report) order.
+        export_obs(&obs, &outcome.obs_tracks())?;
         return Ok(());
     }
 
@@ -494,6 +660,13 @@ fn cmd_replay(args: &Args) -> Result<()> {
     if paired {
         let outcome = runner::run_trace_paired(&cfg, &registry, &trace, threads)?;
         print!("{}", report::trace_paired_report(&outcome));
+        // Canonical order: function (trace order), then minos/baseline arm.
+        let mut tracks = Vec::new();
+        for f in &outcome.per_function {
+            tracks.extend(f.minos.obs.as_deref());
+            tracks.extend(f.baseline.obs.as_deref());
+        }
+        export_obs(&obs, &tracks)?;
         return Ok(());
     }
     let outcome = runner::run_trace_threads(&cfg, &registry, &trace, rt.as_ref(), threads)?;
@@ -501,6 +674,12 @@ fn cmd_replay(args: &Args) -> Result<()> {
     if let Some(rt) = &rt {
         println!("real PJRT executions: {}", rt.executions.get());
     }
+    let tracks: Vec<_> = outcome
+        .per_function
+        .iter()
+        .filter_map(|f| f.result.obs.as_deref())
+        .collect();
+    export_obs(&obs, &tracks)?;
     Ok(())
 }
 

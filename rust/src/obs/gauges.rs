@@ -1,0 +1,132 @@
+//! Sim-time fleet gauges: a periodic snapshot of the platform state the
+//! invocation stream runs against, generalizing the ad-hoc Fig. 7 time
+//! series to any run.
+//!
+//! Sampling is driven by the kernel's post-event `World::observe` hook —
+//! *not* by queue events — so enabling gauges cannot change the event
+//! count, the event order, or any RNG stream. All inputs come from
+//! read-only O(alive) accessors (`FaasPlatform::fleet_gauges`), which
+//! never advance OU drift.
+
+use crate::sim::SimTime;
+
+use super::ObsData;
+
+/// Read-only platform-side snapshot (see `FaasPlatform::fleet_gauges`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FleetGauges {
+    /// Live (starting + busy + idle) instances.
+    pub live_instances: u64,
+    /// Idle warm instances across all deployment pools.
+    pub warm_instances: u64,
+    /// Alive worker nodes.
+    pub live_nodes: u64,
+    /// Mean nominal performance factor (base × drift) over alive nodes,
+    /// computed without advancing drift or drawing RNG.
+    pub mean_node_factor: f64,
+}
+
+/// One gauge sample: fleet snapshot plus the run's cumulative totals at
+/// the sample instant (rates are derived between consecutive samples at
+/// render time).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GaugeSample {
+    pub at: SimTime,
+    /// Requests waiting in the invocation queue (all deployments).
+    pub queue_depth: u64,
+    pub fleet: FleetGauges,
+    /// Cumulative successful completions.
+    pub completed: u64,
+    /// Cumulative Minos self-terminations.
+    pub terminations: u64,
+    /// Cumulative billed cost, USD.
+    pub cost_usd: f64,
+}
+
+/// The gauge CSV header (documented in the README "Observability"
+/// section — keep the two in sync).
+pub const CSV_HEADER: &str = "track,t_s,queue_depth,live_instances,warm_instances,\
+live_nodes,mean_node_factor,completed,terminations,cost_usd,\
+terminations_per_min,cost_usd_per_min";
+
+/// Render every track's gauge series as one CSV (tracks must already be
+/// in canonical order). Rates are per-minute deltas between consecutive
+/// samples of the same track (0 for the first sample).
+pub fn render_csv(tracks: &[&ObsData]) -> String {
+    let mut out = String::with_capacity(256);
+    out.push_str(CSV_HEADER);
+    out.push('\n');
+    for &d in tracks {
+        let mut prev: Option<&GaugeSample> = None;
+        for s in &d.gauges {
+            let (term_rate, cost_rate) = match prev {
+                Some(p) if s.at > p.at => {
+                    let mins = (s.at.0 - p.at.0) as f64 / 60_000_000.0;
+                    (
+                        (s.terminations - p.terminations) as f64 / mins,
+                        (s.cost_usd - p.cost_usd) / mins,
+                    )
+                }
+                _ => (0.0, 0.0),
+            };
+            out.push_str(&format!(
+                "{},{:.3},{},{},{},{},{:.6},{},{},{:.9},{:.4},{:.9}\n",
+                d.track,
+                s.at.as_secs(),
+                s.queue_depth,
+                s.fleet.live_instances,
+                s.fleet.warm_instances,
+                s.fleet.live_nodes,
+                s.fleet.mean_node_factor,
+                s.completed,
+                s.terminations,
+                s.cost_usd,
+                term_rate,
+                cost_rate,
+            ));
+            prev = Some(s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(at_s: f64, completed: u64, terminations: u64, cost: f64) -> GaugeSample {
+        GaugeSample {
+            at: SimTime::from_secs(at_s),
+            queue_depth: 1,
+            fleet: FleetGauges {
+                live_instances: 4,
+                warm_instances: 2,
+                live_nodes: 10,
+                mean_node_factor: 1.25,
+            },
+            completed,
+            terminations,
+            cost_usd: cost,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_per_track_rates() {
+        let mut d = ObsData::default();
+        d.track = "eu-west".into();
+        d.gauges = vec![sample(60.0, 10, 2, 0.5), sample(120.0, 30, 5, 1.1)];
+        let csv = render_csv(&[&d]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], CSV_HEADER);
+        assert!(lines[1].starts_with("eu-west,60.000,1,4,2,10,1.250000,10,2,"));
+        // Second sample: 3 terminations and 0.6 USD over exactly 1 min.
+        assert!(lines[1].ends_with(",0.0000,0.000000000"));
+        assert!(lines[2].contains(",3.0000,"));
+    }
+
+    #[test]
+    fn empty_tracks_render_header_only() {
+        assert_eq!(render_csv(&[]).lines().count(), 1);
+    }
+}

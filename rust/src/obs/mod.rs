@@ -1,0 +1,556 @@
+//! Observability: typed lifecycle probes, a bounded flight-recorder ring,
+//! sim-time fleet gauges, and a deterministic counter registry.
+//!
+//! The paper's whole argument is causal — a slow benchmark verdict
+//! triggers a termination, a re-queue, a cold start on a (hopefully
+//! faster) node — so this subsystem records the *chain*, not just
+//! end-of-run aggregates: every invocation lifecycle step carries an
+//! attempt index, every gate verdict carries the threshold that judged
+//! it, and periodic gauges expose the fleet state the chain ran against.
+//!
+//! Design constraints (the same discipline as PRs 2–5):
+//!
+//! - **Probes never touch physics.** Emitting is observation only: no
+//!   RNG draws, no event scheduling, no reordering. An instrumented run's
+//!   fingerprint is bit-identical to an uninstrumented one at any thread
+//!   count (enforced by `tests/obs_parity.rs`).
+//! - **Zero cost when off.** Worlds hold an [`ObsSink`] enum; the `Off`
+//!   arm makes every emit a single discriminant test with no allocation.
+//! - **Bounded memory.** Events land in a fixed-capacity [`ring::Ring`]
+//!   (drop-oldest, counted drops, never reallocates); gauges are a small
+//!   periodic series; counters are a tiny static-keyed map.
+//! - **Canonical merge order.** Per-worker recorder state rides out
+//!   through the run results and is merged in `util::parallel`'s index
+//!   order, so `--threads 1` and `--threads 8` emit byte-identical
+//!   timeline and gauge files.
+//!
+//! This module subsumes the old `sim::trace` string ring: [`Level`]
+//! keeps its semantics (`Off < Summary < Detail`), counters keep the
+//! always-cheap static-key design, and the bounded-ring idea returns as
+//! a typed binary ring instead of formatted strings.
+
+pub mod gauges;
+pub mod ring;
+pub mod timeline;
+
+pub use gauges::{FleetGauges, GaugeSample};
+pub use ring::Ring;
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+
+/// Probe verbosity. `Summary` admits platform and policy events plus
+/// gauges; `Detail` adds per-invocation lifecycle events. Counters are
+/// maintained whenever a recorder exists (they are O(1) map bumps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Level {
+    #[default]
+    Off,
+    Summary,
+    Detail,
+}
+
+impl Level {
+    /// Parse a CLI spelling (`off` / `summary` / `detail`).
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s {
+            "off" => Ok(Level::Off),
+            "summary" => Ok(Level::Summary),
+            "detail" => Ok(Level::Detail),
+            other => Err(format!("unknown probe level '{other}' (off|summary|detail)")),
+        }
+    }
+}
+
+/// One typed probe record. `Copy`, no heap — the flight recorder stores
+/// these raw, and the exporters interpret them after the run.
+///
+/// Lifecycle events carry the invocation id and an **attempt index**
+/// (the re-queue count at emission time) so a request's full
+/// termination/re-queue chain reads as one causal trace. In cluster
+/// runs the invocation id is namespaced by deployment slot (see
+/// `experiment::cluster`), since each deployment numbers its own queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProbeEvent {
+    // -- invocation lifecycle (Detail) -----------------------------------
+    /// Request entered the queue (first submission: attempt 0).
+    Submitted { inv: u64, attempt: u32 },
+    /// Request re-entered the queue after a Minos self-termination.
+    Requeued { inv: u64, attempt: u32 },
+    /// An instance began serving the request (cold: after the cold-start
+    /// delay elapsed; warm: at dispatch).
+    AttemptStarted { inv: u64, attempt: u32, inst: u64, cold: bool },
+    /// Cold-start gate ruling, with the benchmark score and the threshold
+    /// that judged it. `forced` marks a pass granted by the retry cap.
+    GateVerdict {
+        inv: u64,
+        attempt: u32,
+        bench_ms: f64,
+        threshold_ms: f64,
+        pass: bool,
+        forced: bool,
+    },
+    /// Request completed (prepare + analysis + exec done, billed, warm
+    /// pool updated). `e2e_ms` is time since first submission.
+    Finished { inv: u64, attempt: u32, cold: bool, e2e_ms: f64 },
+    /// Minos terminated the instance after a failed verdict; the request
+    /// will be re-queued.
+    Terminated { inv: u64, attempt: u32, bench_ms: f64 },
+
+    // -- platform (Summary) ----------------------------------------------
+    /// Cold start scheduled: a new instance occupies a node.
+    InstanceSpawned { inst: u64 },
+    /// Instance torn down by a Minos self-termination.
+    InstanceCrashed { inst: u64 },
+    /// Placement reused a warm instance.
+    WarmHit { inst: u64 },
+    /// Warm instances reaped by the idle timeout at this instant.
+    IdleExpired { count: u64 },
+    /// Warm instances recycled by the platform lifetime cap at this
+    /// instant.
+    Recycled { count: u64 },
+    /// Placement failed: the concurrent-instance quota is exhausted.
+    Saturated,
+    /// OU drift epochs the node fleet crossed since the last probe.
+    DriftEpochs { count: u64 },
+
+    // -- policy (Summary) ------------------------------------------------
+    /// The published elysium threshold changed (online collector push or
+    /// initial fix).
+    ThresholdUpdated { threshold_ms: f64 },
+    /// The policy pushed `count` more threshold updates to the fleet.
+    PolicyPushes { count: u64 },
+}
+
+impl ProbeEvent {
+    /// The verbosity level that admits this event.
+    pub fn level(&self) -> Level {
+        use ProbeEvent::*;
+        match self {
+            Submitted { .. } | Requeued { .. } | AttemptStarted { .. }
+            | GateVerdict { .. } | Finished { .. } | Terminated { .. } => Level::Detail,
+            _ => Level::Summary,
+        }
+    }
+
+    /// The counter-registry key this event bumps.
+    pub fn counter_key(&self) -> &'static str {
+        use ProbeEvent::*;
+        match self {
+            Submitted { .. } => "lifecycle.submitted",
+            Requeued { .. } => "lifecycle.requeued",
+            AttemptStarted { .. } => "lifecycle.attempts",
+            GateVerdict { pass: true, forced: false, .. } => "gate.pass",
+            GateVerdict { forced: true, .. } => "gate.forced_pass",
+            GateVerdict { .. } => "gate.fail",
+            Finished { .. } => "lifecycle.finished",
+            Terminated { .. } => "lifecycle.terminated",
+            InstanceSpawned { .. } => "platform.instance_spawned",
+            InstanceCrashed { .. } => "platform.instance_crashed",
+            WarmHit { .. } => "platform.warm_hit",
+            IdleExpired { .. } => "platform.idle_expired",
+            Recycled { .. } => "platform.recycled",
+            Saturated => "platform.saturated",
+            DriftEpochs { .. } => "platform.drift_epochs",
+            ThresholdUpdated { .. } => "policy.threshold_updates",
+            PolicyPushes { .. } => "policy.pushes",
+        }
+    }
+
+    /// How much the counter advances (bulk events count their payload).
+    fn counter_weight(&self) -> u64 {
+        use ProbeEvent::*;
+        match self {
+            IdleExpired { count } | Recycled { count } | DriftEpochs { count }
+            | PolicyPushes { count } => *count,
+            _ => 1,
+        }
+    }
+}
+
+/// The probe interface worlds and substrates emit into. The default
+/// methods are no-ops, so an uninstrumented component pays nothing.
+pub trait Probe {
+    /// Receive one event at virtual time `at`.
+    #[inline]
+    fn on_event(&mut self, _at: SimTime, _ev: ProbeEvent) {}
+
+    /// Whether any event would currently be recorded (lets callers skip
+    /// computing expensive payloads).
+    #[inline]
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// The always-off probe.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoProbe;
+
+impl Probe for NoProbe {}
+
+/// Observability configuration carried on `ExperimentConfig`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObsConfig {
+    /// Event verbosity (counters come with any non-off recorder).
+    pub level: Level,
+    /// Flight-recorder ring capacity, in events.
+    pub ring_cap: usize,
+    /// Gauge sampling period (None = no gauges).
+    pub gauge_every: Option<SimTime>,
+}
+
+impl ObsConfig {
+    pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+    /// Everything disabled — the default for every experiment.
+    pub fn off() -> ObsConfig {
+        ObsConfig { level: Level::Off, ring_cap: Self::DEFAULT_RING_CAP, gauge_every: None }
+    }
+
+    /// Whether a recorder should exist at all.
+    pub fn enabled(&self) -> bool {
+        self.level > Level::Off || self.gauge_every.is_some()
+    }
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig::off()
+    }
+}
+
+/// The flight recorder: ring + counters + gauge series + policy watch.
+/// One per world (per region in cluster runs), never shared across
+/// threads, extracted as an [`ObsData`] when the run finishes.
+#[derive(Debug)]
+pub struct Recorder {
+    level: Level,
+    ring: Ring,
+    counters: BTreeMap<&'static str, u64>,
+    gauges: Vec<GaugeSample>,
+    gauge_every: Option<SimTime>,
+    next_gauge_at: SimTime,
+    /// Last published threshold seen (bit pattern, so ∞ compares exactly).
+    last_threshold_bits: u64,
+    last_pushes: u64,
+    last_drift_epochs: u64,
+}
+
+impl Recorder {
+    pub fn new(cfg: &ObsConfig) -> Recorder {
+        Recorder {
+            level: cfg.level,
+            ring: Ring::new(if cfg.level > Level::Off { cfg.ring_cap } else { 0 }),
+            counters: BTreeMap::new(),
+            gauges: Vec::new(),
+            gauge_every: cfg.gauge_every,
+            next_gauge_at: cfg.gauge_every.unwrap_or(SimTime::ZERO),
+            last_threshold_bits: f64::INFINITY.to_bits(),
+            last_pushes: 0,
+            last_drift_epochs: 0,
+        }
+    }
+
+    /// Record one event: bump its counter, and ring-buffer it when the
+    /// verbosity admits it. Purely observational — no RNG, no scheduling.
+    pub fn emit(&mut self, at: SimTime, ev: ProbeEvent) {
+        *self.counters.entry(ev.counter_key()).or_insert(0) += ev.counter_weight();
+        if self.level >= ev.level() {
+            self.ring.push(at, ev);
+        }
+    }
+
+    /// Watch policy surface state: emits [`ProbeEvent::ThresholdUpdated`]
+    /// / [`ProbeEvent::PolicyPushes`] when the published values changed
+    /// since the last call.
+    pub fn note_policy(&mut self, at: SimTime, threshold_ms: f64, pushes: u64) {
+        let bits = threshold_ms.to_bits();
+        if bits != self.last_threshold_bits {
+            self.last_threshold_bits = bits;
+            self.emit(at, ProbeEvent::ThresholdUpdated { threshold_ms });
+        }
+        if pushes != self.last_pushes {
+            let delta = pushes - self.last_pushes;
+            self.last_pushes = pushes;
+            self.emit(at, ProbeEvent::PolicyPushes { count: delta });
+        }
+    }
+
+    /// Watch the node fleet's cumulative drift-epoch count; emits
+    /// [`ProbeEvent::DriftEpochs`] for the delta since the last call.
+    pub fn note_drift(&mut self, at: SimTime, epochs: u64) {
+        if epochs != self.last_drift_epochs {
+            let delta = epochs - self.last_drift_epochs;
+            self.last_drift_epochs = epochs;
+            self.emit(at, ProbeEvent::DriftEpochs { count: delta });
+        }
+    }
+
+    /// If a gauge sample is due at `now`, return the sample timestamp
+    /// (the last elapsed period boundary) and advance the schedule.
+    /// Long idle stretches yield one sample, not a backlog.
+    pub fn gauge_due(&mut self, now: SimTime) -> Option<SimTime> {
+        let every = self.gauge_every?;
+        if now < self.next_gauge_at || every.0 == 0 {
+            return None;
+        }
+        let periods_past = (now.0 - self.next_gauge_at.0) / every.0;
+        let at = SimTime(self.next_gauge_at.0 + periods_past * every.0);
+        self.next_gauge_at = SimTime(at.0 + every.0);
+        Some(at)
+    }
+
+    pub fn record_gauge(&mut self, sample: GaugeSample) {
+        self.gauges.push(sample);
+    }
+
+    pub fn counters(&self) -> &BTreeMap<&'static str, u64> {
+        &self.counters
+    }
+
+    /// Extract everything recorded, labelling the track (one track per
+    /// region/deployment in the timeline).
+    pub fn into_data(self, track: String) -> ObsData {
+        let (events, dropped) = self.ring.into_ordered();
+        ObsData { track, events, dropped, counters: self.counters, gauges: self.gauges }
+    }
+}
+
+impl Probe for Recorder {
+    #[inline]
+    fn on_event(&mut self, at: SimTime, ev: ProbeEvent) {
+        self.emit(at, ev);
+    }
+
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// Enum-dispatch sink owned by each world: `Off` is a single
+/// discriminant test per emit, `On` forwards to the boxed recorder.
+#[derive(Debug, Default)]
+pub enum ObsSink {
+    #[default]
+    Off,
+    On(Box<Recorder>),
+}
+
+impl ObsSink {
+    pub fn from_config(cfg: &ObsConfig) -> ObsSink {
+        if cfg.enabled() {
+            ObsSink::On(Box::new(Recorder::new(cfg)))
+        } else {
+            ObsSink::Off
+        }
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        matches!(self, ObsSink::On(_))
+    }
+
+    #[inline]
+    pub fn emit(&mut self, at: SimTime, ev: ProbeEvent) {
+        if let ObsSink::On(r) = self {
+            r.emit(at, ev);
+        }
+    }
+
+    #[inline]
+    pub fn note_policy(&mut self, at: SimTime, threshold_ms: f64, pushes: u64) {
+        if let ObsSink::On(r) = self {
+            r.note_policy(at, threshold_ms, pushes);
+        }
+    }
+
+    #[inline]
+    pub fn note_drift(&mut self, at: SimTime, epochs: u64) {
+        if let ObsSink::On(r) = self {
+            r.note_drift(at, epochs);
+        }
+    }
+
+    /// Gauge cadence check (None when off or not yet due).
+    #[inline]
+    pub fn gauge_due(&mut self, now: SimTime) -> Option<SimTime> {
+        match self {
+            ObsSink::Off => None,
+            ObsSink::On(r) => r.gauge_due(now),
+        }
+    }
+
+    #[inline]
+    pub fn record_gauge(&mut self, sample: GaugeSample) {
+        if let ObsSink::On(r) = self {
+            r.record_gauge(sample);
+        }
+    }
+
+    /// Extract the recorded data (None when the sink was off), resetting
+    /// the sink to `Off`.
+    pub fn take_data(&mut self, track: &str) -> Option<Box<ObsData>> {
+        match std::mem::take(self) {
+            ObsSink::Off => None,
+            ObsSink::On(r) => Some(Box::new(r.into_data(track.to_string()))),
+        }
+    }
+}
+
+impl Probe for ObsSink {
+    #[inline]
+    fn on_event(&mut self, at: SimTime, ev: ProbeEvent) {
+        self.emit(at, ev);
+    }
+
+    #[inline]
+    fn enabled(&self) -> bool {
+        self.is_on()
+    }
+}
+
+/// Everything one recorder captured, ready for canonical merge/export.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsData {
+    /// Track label (region or deployment name) for the timeline.
+    pub track: String,
+    /// Ring contents in emission order (oldest surviving record first).
+    pub events: Vec<(SimTime, ProbeEvent)>,
+    /// Records the ring overwrote (drop-oldest).
+    pub dropped: u64,
+    /// The counter registry (static keys, canonical BTreeMap order).
+    pub counters: BTreeMap<&'static str, u64>,
+    /// Periodic fleet gauge samples, in sim-time order.
+    pub gauges: Vec<GaugeSample>,
+}
+
+/// Merge counter registries across tracks. Callers must pass tracks in
+/// canonical (`util::parallel::map_indexed` index) order; addition is
+/// commutative, but keeping the discipline everywhere means the whole
+/// observer state — counters, timeline, gauges — flows through one
+/// deterministic path.
+pub fn merged_counters<'a>(
+    tracks: impl IntoIterator<Item = &'a ObsData>,
+) -> BTreeMap<&'static str, u64> {
+    let mut out = BTreeMap::new();
+    let mut dropped = 0u64;
+    for d in tracks {
+        for (k, v) in &d.counters {
+            *out.entry(*k).or_insert(0) += v;
+        }
+        dropped += d.dropped;
+    }
+    if dropped > 0 {
+        out.insert("ring.dropped", dropped);
+    }
+    out
+}
+
+/// Render a counter registry in the legacy `sim::trace` `# key = value`
+/// form (stable line order: BTreeMap key order).
+pub fn render_counters(counters: &BTreeMap<&'static str, u64>) -> String {
+    let mut out = String::new();
+    for (k, v) in counters {
+        out.push_str(&format!("# {k} = {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn detail_cfg() -> ObsConfig {
+        ObsConfig { level: Level::Detail, ring_cap: 64, gauge_every: None }
+    }
+
+    #[test]
+    fn off_sink_records_nothing() {
+        let mut s = ObsSink::from_config(&ObsConfig::off());
+        assert!(!s.is_on());
+        s.emit(SimTime::ZERO, ProbeEvent::Saturated);
+        assert!(s.take_data("x").is_none());
+    }
+
+    #[test]
+    fn level_filters_lifecycle_but_keeps_counters() {
+        let cfg = ObsConfig { level: Level::Summary, ring_cap: 16, gauge_every: None };
+        let mut r = Recorder::new(&cfg);
+        r.emit(SimTime::ZERO, ProbeEvent::Submitted { inv: 1, attempt: 0 });
+        r.emit(SimTime::ZERO, ProbeEvent::WarmHit { inst: 7 });
+        let d = r.into_data("t".into());
+        // Only the summary-level event is in the ring…
+        assert_eq!(d.events.len(), 1);
+        assert!(matches!(d.events[0].1, ProbeEvent::WarmHit { inst: 7 }));
+        // …but both counters advanced.
+        assert_eq!(d.counters["lifecycle.submitted"], 1);
+        assert_eq!(d.counters["platform.warm_hit"], 1);
+    }
+
+    #[test]
+    fn policy_watch_emits_only_on_change() {
+        let mut r = Recorder::new(&detail_cfg());
+        r.note_policy(SimTime::ZERO, f64::INFINITY, 0); // baseline: no event
+        r.note_policy(SimTime::from_ms(1.0), 350.0, 0); // threshold set
+        r.note_policy(SimTime::from_ms(2.0), 350.0, 0); // unchanged
+        r.note_policy(SimTime::from_ms(3.0), 340.0, 2); // update + pushes
+        let d = r.into_data("t".into());
+        assert_eq!(d.counters["policy.threshold_updates"], 2);
+        assert_eq!(d.counters["policy.pushes"], 2);
+        assert_eq!(d.events.len(), 3);
+    }
+
+    #[test]
+    fn drift_watch_emits_deltas() {
+        let mut r = Recorder::new(&detail_cfg());
+        r.note_drift(SimTime::ZERO, 0);
+        r.note_drift(SimTime::from_ms(1.0), 3);
+        r.note_drift(SimTime::from_ms(2.0), 3);
+        r.note_drift(SimTime::from_ms(3.0), 7);
+        let d = r.into_data("t".into());
+        assert_eq!(d.counters["platform.drift_epochs"], 7);
+        assert_eq!(d.events.len(), 2);
+    }
+
+    #[test]
+    fn gauge_cadence_samples_last_elapsed_boundary() {
+        let cfg = ObsConfig {
+            level: Level::Off,
+            ring_cap: 0,
+            gauge_every: Some(SimTime::from_secs(60.0)),
+        };
+        let mut r = Recorder::new(&cfg);
+        assert_eq!(r.gauge_due(SimTime::from_secs(59.0)), None);
+        assert_eq!(r.gauge_due(SimTime::from_secs(60.0)), Some(SimTime::from_secs(60.0)));
+        assert_eq!(r.gauge_due(SimTime::from_secs(61.0)), None);
+        // A long idle stretch yields one sample at the last boundary.
+        assert_eq!(r.gauge_due(SimTime::from_secs(305.0)), Some(SimTime::from_secs(300.0)));
+        assert_eq!(r.gauge_due(SimTime::from_secs(360.0)), Some(SimTime::from_secs(360.0)));
+    }
+
+    #[test]
+    fn counter_merge_is_canonical_and_counts_drops() {
+        let mut a = ObsData::default();
+        a.counters.insert("gate.pass", 2);
+        a.dropped = 3;
+        let mut b = ObsData::default();
+        b.counters.insert("gate.pass", 1);
+        b.counters.insert("gate.fail", 5);
+        let m = merged_counters([&a, &b]);
+        assert_eq!(m["gate.pass"], 3);
+        assert_eq!(m["gate.fail"], 5);
+        assert_eq!(m["ring.dropped"], 3);
+        let text = render_counters(&m);
+        assert_eq!(text, "# gate.fail = 5\n# gate.pass = 3\n# ring.dropped = 3\n");
+    }
+
+    #[test]
+    fn probe_trait_default_is_noop() {
+        let mut p = NoProbe;
+        assert!(!p.enabled());
+        p.on_event(SimTime::ZERO, ProbeEvent::Saturated); // must not panic
+    }
+}

@@ -1,0 +1,138 @@
+//! The bounded binary flight-recorder ring.
+//!
+//! A fixed-capacity circular buffer of `(SimTime, ProbeEvent)` records:
+//! the storage is allocated once at construction and never grows, and
+//! when full the *oldest* record is overwritten (flight-recorder
+//! semantics — the end of the run is what you want after an anomaly),
+//! with every overwrite counted in `dropped`.
+
+use crate::sim::SimTime;
+
+use super::ProbeEvent;
+
+/// Fixed-capacity drop-oldest ring of typed probe records.
+#[derive(Debug)]
+pub struct Ring {
+    buf: Vec<(SimTime, ProbeEvent)>,
+    cap: usize,
+    /// Index of the oldest record once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    /// A ring holding at most `cap` records. `cap == 0` records nothing
+    /// (every push counts as dropped) — used when only counters/gauges
+    /// are wanted.
+    pub fn new(cap: usize) -> Ring {
+        Ring { buf: Vec::with_capacity(cap), cap, head: 0, dropped: 0 }
+    }
+
+    /// Append a record, overwriting (and counting) the oldest when full.
+    /// Never reallocates.
+    pub fn push(&mut self, at: SimTime, ev: ProbeEvent) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push((at, ev));
+        } else {
+            self.buf[self.head] = (at, ev);
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Records currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Records overwritten (or refused, for a zero-capacity ring).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The allocated capacity — constant for the life of the ring.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Consume the ring, returning the surviving records oldest-first
+    /// plus the drop count.
+    pub fn into_ordered(self) -> (Vec<(SimTime, ProbeEvent)>, u64) {
+        let Ring { mut buf, head, dropped, .. } = self;
+        buf.rotate_left(head);
+        (buf, dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(n: u64) -> ProbeEvent {
+        ProbeEvent::InstanceSpawned { inst: n }
+    }
+
+    fn insts(records: &[(SimTime, ProbeEvent)]) -> Vec<u64> {
+        records
+            .iter()
+            .map(|&(_, e)| match e {
+                ProbeEvent::InstanceSpawned { inst } => inst,
+                _ => unreachable!(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fills_then_drops_oldest() {
+        let mut r = Ring::new(4);
+        for i in 0..6 {
+            r.push(SimTime(i), ev(i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        let (records, dropped) = r.into_ordered();
+        assert_eq!(dropped, 2);
+        // 0 and 1 were overwritten; survivors are oldest-first.
+        assert_eq!(insts(&records), vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn never_reallocates() {
+        let mut r = Ring::new(64);
+        let cap0 = r.capacity();
+        for i in 0..1_000 {
+            r.push(SimTime(i), ev(i));
+        }
+        assert_eq!(r.capacity(), cap0, "overflow must overwrite, not grow");
+        assert_eq!(r.len(), 64);
+        assert_eq!(r.dropped(), 1_000 - 64);
+    }
+
+    #[test]
+    fn zero_capacity_counts_everything_dropped() {
+        let mut r = Ring::new(0);
+        r.push(SimTime::ZERO, ev(1));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.capacity(), 0);
+    }
+
+    #[test]
+    fn partial_fill_preserves_order() {
+        let mut r = Ring::new(8);
+        for i in 0..3 {
+            r.push(SimTime(i), ev(i));
+        }
+        let (records, dropped) = r.into_ordered();
+        assert_eq!(dropped, 0);
+        assert_eq!(insts(&records), vec![0, 1, 2]);
+    }
+}

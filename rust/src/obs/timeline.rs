@@ -1,0 +1,456 @@
+//! Chrome-trace-event export of the flight recorder.
+//!
+//! Produces the JSON object format understood by Perfetto and
+//! `chrome://tracing`: `{"traceEvents": [...], "displayTimeUnit": "ms"}`
+//! with timestamps in microseconds (exactly [`SimTime`]'s unit, so no
+//! rounding). One *track* (trace `pid`) per region/deployment, named via
+//! a `process_name` metadata event.
+//!
+//! Invocation lifecycles become async-nestable `b`/`e` span pairs keyed
+//! by the invocation id: a `wait` span from (re-)submission to attempt
+//! start, then an `attempt` span to finish/termination — so a request's
+//! whole termination/re-queue chain reads as one causal lane. Gate
+//! verdicts and platform events are instants; threshold updates and
+//! gauges are counter (`C`) events, which Perfetto plots as time series.
+//!
+//! The exporter is defensive about ring overflow: a span end whose
+//! beginning was overwritten is dropped, and spans still open at the end
+//! of a track are closed at the track's last timestamp, so the output
+//! always has complete, monotone `b`/`e` pairing.
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+use crate::util::json::Json;
+
+use super::{GaugeSample, ObsData, ProbeEvent};
+
+/// A finite JSON number, or a string for the non-finite sentinels
+/// (`∞` thresholds — never-terminate policies) that raw JSON can't hold.
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::str("inf")
+    }
+}
+
+fn us(at: SimTime) -> Json {
+    Json::num(at.0 as f64)
+}
+
+/// One trace event under construction.
+struct Emitter {
+    pid: usize,
+    out: Vec<Json>,
+}
+
+impl Emitter {
+    fn meta_process_name(&mut self, name: &str) {
+        self.out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("name", Json::str("process_name")),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+
+    fn span(&mut self, ph: &str, name: &str, id: u64, at: SimTime, args: Vec<(&str, Json)>) {
+        self.out.push(Json::obj(vec![
+            ("ph", Json::str(ph)),
+            ("cat", Json::str("invocation")),
+            ("name", Json::str(name)),
+            ("id", Json::str(&format!("{id:x}"))),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("ts", us(at)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    fn instant(&mut self, cat: &str, name: &str, at: SimTime, args: Vec<(&str, Json)>) {
+        self.out.push(Json::obj(vec![
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("cat", Json::str(cat)),
+            ("name", Json::str(name)),
+            ("pid", Json::num(self.pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("ts", us(at)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    fn counter(&mut self, name: &str, at: SimTime, args: Vec<(&str, Json)>) {
+        self.out.push(Json::obj(vec![
+            ("ph", Json::str("C")),
+            ("name", Json::str(name)),
+            ("pid", Json::num(self.pid as f64)),
+            ("ts", us(at)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+
+    fn gauge(&mut self, s: &GaugeSample) {
+        self.counter(
+            "fleet",
+            s.at,
+            vec![
+                ("queue_depth", Json::num(s.queue_depth as f64)),
+                ("live_instances", Json::num(s.fleet.live_instances as f64)),
+                ("warm_instances", Json::num(s.fleet.warm_instances as f64)),
+                ("live_nodes", Json::num(s.fleet.live_nodes as f64)),
+                ("mean_node_factor", num(s.fleet.mean_node_factor)),
+            ],
+        );
+        self.counter(
+            "totals",
+            s.at,
+            vec![
+                ("completed", Json::num(s.completed as f64)),
+                ("terminations", Json::num(s.terminations as f64)),
+                ("cost_usd", num(s.cost_usd)),
+            ],
+        );
+    }
+
+    fn probe(&mut self, at: SimTime, ev: ProbeEvent, open: &mut BTreeMap<u64, SpanState>) {
+        use ProbeEvent::*;
+        match ev {
+            Submitted { inv, attempt } | Requeued { inv, attempt } => {
+                let st = open.entry(inv).or_default();
+                if !st.wait {
+                    st.wait = true;
+                    self.span("b", "wait", inv, at, vec![("attempt", Json::num(attempt as f64))]);
+                }
+            }
+            AttemptStarted { inv, attempt, inst, cold } => {
+                let st = open.entry(inv).or_default();
+                if st.wait {
+                    st.wait = false;
+                    self.span("e", "wait", inv, at, vec![]);
+                }
+                if !st.attempt {
+                    st.attempt = true;
+                    self.span(
+                        "b",
+                        "attempt",
+                        inv,
+                        at,
+                        vec![
+                            ("attempt", Json::num(attempt as f64)),
+                            ("inst", Json::str(&format!("{inst:x}"))),
+                            ("cold", Json::Bool(cold)),
+                        ],
+                    );
+                }
+            }
+            GateVerdict { inv, attempt, bench_ms, threshold_ms, pass, forced } => {
+                self.instant(
+                    "gate",
+                    if pass { "gate-pass" } else { "gate-fail" },
+                    at,
+                    vec![
+                        ("inv", Json::str(&format!("{inv:x}"))),
+                        ("attempt", Json::num(attempt as f64)),
+                        ("bench_ms", num(bench_ms)),
+                        ("threshold_ms", num(threshold_ms)),
+                        ("forced", Json::Bool(forced)),
+                    ],
+                );
+            }
+            Finished { inv, cold, e2e_ms, .. } => {
+                if let Some(st) = open.get_mut(&inv) {
+                    if st.attempt {
+                        st.attempt = false;
+                        self.span(
+                            "e",
+                            "attempt",
+                            inv,
+                            at,
+                            vec![
+                                ("outcome", Json::str("finished")),
+                                ("cold", Json::Bool(cold)),
+                                ("e2e_ms", num(e2e_ms)),
+                            ],
+                        );
+                    }
+                }
+            }
+            Terminated { inv, bench_ms, .. } => {
+                if let Some(st) = open.get_mut(&inv) {
+                    if st.attempt {
+                        st.attempt = false;
+                        self.span(
+                            "e",
+                            "attempt",
+                            inv,
+                            at,
+                            vec![
+                                ("outcome", Json::str("terminated")),
+                                ("bench_ms", num(bench_ms)),
+                            ],
+                        );
+                    }
+                }
+            }
+            InstanceSpawned { inst } => {
+                self.instant(
+                    "platform",
+                    "instance-spawn",
+                    at,
+                    vec![("inst", Json::str(&format!("{inst:x}")))],
+                );
+            }
+            InstanceCrashed { inst } => {
+                self.instant(
+                    "platform",
+                    "instance-crash",
+                    at,
+                    vec![("inst", Json::str(&format!("{inst:x}")))],
+                );
+            }
+            WarmHit { inst } => {
+                self.instant(
+                    "platform",
+                    "warm-hit",
+                    at,
+                    vec![("inst", Json::str(&format!("{inst:x}")))],
+                );
+            }
+            IdleExpired { count } => {
+                self.instant(
+                    "platform",
+                    "idle-expired",
+                    at,
+                    vec![("count", Json::num(count as f64))],
+                );
+            }
+            Recycled { count } => {
+                self.instant("platform", "recycled", at, vec![("count", Json::num(count as f64))]);
+            }
+            Saturated => {
+                self.instant("platform", "saturated", at, vec![]);
+            }
+            DriftEpochs { count } => {
+                self.instant(
+                    "platform",
+                    "drift-epoch",
+                    at,
+                    vec![("count", Json::num(count as f64))],
+                );
+            }
+            ThresholdUpdated { threshold_ms } => {
+                self.counter("threshold_ms", at, vec![("threshold_ms", num(threshold_ms))]);
+            }
+            PolicyPushes { count } => {
+                self.instant("policy", "push", at, vec![("count", Json::num(count as f64))]);
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct SpanState {
+    wait: bool,
+    attempt: bool,
+}
+
+/// Export tracks (in canonical order — index = trace `pid`) as a
+/// Chrome-trace-event JSON object. Per-track timestamps are monotone:
+/// both the ring and the gauge series are recorded in virtual-time
+/// order, and the two streams are merged by timestamp here.
+pub fn chrome_trace(tracks: &[&ObsData]) -> Json {
+    let mut events = Vec::new();
+    for (pid, &d) in tracks.iter().enumerate() {
+        let mut em = Emitter { pid, out: Vec::new() };
+        em.meta_process_name(if d.track.is_empty() { "run" } else { &d.track });
+        let mut open: BTreeMap<u64, SpanState> = BTreeMap::new();
+        let mut last_at = SimTime::ZERO;
+
+        // Merge the event ring and the gauge series by timestamp
+        // (events first at equal instants); both are already sorted.
+        let (mut i, mut g) = (0usize, 0usize);
+        while i < d.events.len() || g < d.gauges.len() {
+            let take_event = match (d.events.get(i), d.gauges.get(g)) {
+                (Some(&(at, _)), Some(s)) => at <= s.at,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_event {
+                let (at, ev) = d.events[i];
+                i += 1;
+                last_at = last_at.max(at);
+                em.probe(at, ev, &mut open);
+            } else {
+                let s = &d.gauges[g];
+                g += 1;
+                last_at = last_at.max(s.at);
+                em.gauge(s);
+            }
+        }
+
+        // Close spans the ring lost the end of (drop-oldest overflow) so
+        // the b/e pairing stays complete.
+        for (inv, st) in open {
+            if st.wait {
+                em.span("e", "wait", inv, last_at, vec![("outcome", Json::str("truncated"))]);
+            }
+            if st.attempt {
+                em.span("e", "attempt", inv, last_at, vec![("outcome", Json::str("truncated"))]);
+            }
+        }
+        if d.dropped > 0 {
+            em.instant(
+                "obs",
+                "ring-dropped",
+                last_at,
+                vec![("count", Json::num(d.dropped as f64))],
+            );
+        }
+        events.extend(em.out);
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::FleetGauges;
+
+    fn demo_track() -> ObsData {
+        use ProbeEvent::*;
+        let mut d = ObsData::default();
+        d.track = "demo".into();
+        let t = |ms: f64| SimTime::from_ms(ms);
+        d.events = vec![
+            (t(0.0), Submitted { inv: 1, attempt: 0 }),
+            (t(1.0), InstanceSpawned { inst: 9 }),
+            (t(5.0), AttemptStarted { inv: 1, attempt: 0, inst: 9, cold: true }),
+            (
+                t(6.0),
+                GateVerdict {
+                    inv: 1,
+                    attempt: 0,
+                    bench_ms: 900.0,
+                    threshold_ms: 350.0,
+                    pass: false,
+                    forced: false,
+                },
+            ),
+            (t(7.0), Terminated { inv: 1, attempt: 0, bench_ms: 900.0 }),
+            (t(7.0), Requeued { inv: 1, attempt: 1 }),
+            (t(9.0), AttemptStarted { inv: 1, attempt: 1, inst: 10, cold: true }),
+            (t(20.0), Finished { inv: 1, attempt: 1, cold: true, e2e_ms: 20.0 }),
+        ];
+        d.gauges = vec![GaugeSample {
+            at: t(10.0),
+            queue_depth: 0,
+            fleet: FleetGauges {
+                live_instances: 1,
+                warm_instances: 0,
+                live_nodes: 3,
+                mean_node_factor: 1.1,
+            },
+            completed: 0,
+            terminations: 1,
+            cost_usd: 0.1,
+        }];
+        d
+    }
+
+    fn spans(trace: &Json) -> Vec<(String, String, String, f64)> {
+        trace
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(|e| {
+                let ph = e.get("ph")?.as_str()?;
+                if ph != "b" && ph != "e" {
+                    return None;
+                }
+                Some((
+                    ph.to_string(),
+                    e.get("name")?.as_str()?.to_string(),
+                    e.get("id")?.as_str()?.to_string(),
+                    e.get("ts")?.as_f64()?,
+                ))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn requeue_chain_is_one_id_with_paired_spans() {
+        let trace = chrome_trace(&[&demo_track()]);
+        let sp = spans(&trace);
+        // wait(b,e), attempt(b,e), wait(b,e), attempt(b,e) — all id "1".
+        assert_eq!(sp.len(), 8);
+        assert!(sp.iter().all(|(_, _, id, _)| id == "1"));
+        let begins = sp.iter().filter(|(ph, ..)| ph == "b").count();
+        let ends = sp.iter().filter(|(ph, ..)| ph == "e").count();
+        assert_eq!(begins, ends);
+        // Timestamps are monotone in emission order.
+        let ts: Vec<f64> = sp.iter().map(|&(.., t)| t).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn output_round_trips_through_the_json_parser() {
+        let text = chrome_trace(&[&demo_track()]).to_string_compact();
+        let parsed = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(
+            parsed.get("displayTimeUnit").and_then(Json::as_str),
+            Some("ms")
+        );
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // Metadata + 8 spans + 1 gate instant + 1 spawn instant + 2 gauge
+        // counters = 13.
+        assert_eq!(events.len(), 13);
+    }
+
+    #[test]
+    fn truncated_spans_are_closed() {
+        use ProbeEvent::*;
+        let mut d = ObsData::default();
+        // The ring lost this invocation's Finished record.
+        d.events = vec![
+            (SimTime::ZERO, Submitted { inv: 4, attempt: 0 }),
+            (SimTime::from_ms(2.0), AttemptStarted { inv: 4, attempt: 0, inst: 1, cold: false }),
+        ];
+        d.dropped = 5;
+        let sp = spans(&chrome_trace(&[&d]));
+        let begins = sp.iter().filter(|(ph, ..)| ph == "b").count();
+        let ends = sp.iter().filter(|(ph, ..)| ph == "e").count();
+        assert_eq!(begins, ends, "dangling spans must be closed at export");
+    }
+
+    #[test]
+    fn tracks_map_to_distinct_pids() {
+        let mut a = ObsData::default();
+        a.track = "r0".into();
+        let mut b = ObsData::default();
+        b.track = "r1".into();
+        let trace = chrome_trace(&[&a, &b]);
+        let events = trace.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let names: Vec<(f64, String)> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .map(|e| {
+                (
+                    e.get("pid").and_then(Json::as_f64).unwrap(),
+                    e.get("args")
+                        .and_then(|a| a.get("name"))
+                        .and_then(Json::as_str)
+                        .unwrap()
+                        .to_string(),
+                )
+            })
+            .collect();
+        assert_eq!(names, vec![(0.0, "r0".into()), (1.0, "r1".into())]);
+    }
+}

@@ -117,6 +117,9 @@ pub struct NodeTable {
     next_epoch: SimTime,
     /// High-water mark of residents on any single node.
     peak_resident: u32,
+    /// Cumulative drift-epoch boundaries crossed (batched mode only) —
+    /// read by the observability probes, never by the physics.
+    epochs_advanced: u64,
 }
 
 impl NodeTable {
@@ -140,6 +143,7 @@ impl NodeTable {
             free: Vec::new(),
             next_epoch,
             peak_resident: 0,
+            epochs_advanced: 0,
         }
     }
 
@@ -283,6 +287,27 @@ impl NodeTable {
         self.base_factor[s] * self.drift[s]
     }
 
+    /// Mean nominal factor (`base × drift`) over the live pool — the
+    /// observability gauge of pool quality. Read-only: never advances
+    /// drift, never draws RNG. 0 for an empty pool.
+    pub fn mean_nominal_factor(&self) -> f64 {
+        if self.alive.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .alive
+            .iter()
+            .map(|&s| self.base_factor[s as usize] * self.drift[s as usize])
+            .sum();
+        sum / self.alive.len() as f64
+    }
+
+    /// Cumulative drift-epoch boundaries the fleet has crossed (0 in
+    /// exact mode, where there are no epochs). Probe-facing counter.
+    pub fn drift_epochs(&self) -> u64 {
+        self.epochs_advanced
+    }
+
     /// The contention multiplier this node currently runs at.
     pub fn contention_multiplier(&self, id: NodeId) -> f64 {
         let s = self.index(id);
@@ -357,6 +382,7 @@ impl NodeTable {
             // past the last elapsed boundary instead of column passes.
             let missed = (now.0 - self.next_epoch.0) / epoch_us;
             self.next_epoch = SimTime(self.next_epoch.0 + (missed + 1) * epoch_us);
+            self.epochs_advanced += missed + 1;
             return;
         }
         // Same dt arithmetic as `ms_since` so a boundary-aligned exact
@@ -392,6 +418,7 @@ impl NodeTable {
                 last_advance[s] = t;
             }
             self.next_epoch = SimTime(t.0 + epoch_us);
+            self.epochs_advanced += 1;
         }
     }
 }

@@ -231,6 +231,18 @@ impl FaasPlatform {
         }
     }
 
+    /// Read-only fleet snapshot for the observability gauge sampler:
+    /// O(alive-nodes), no RNG, no drift advancement — safe to call from
+    /// the kernel's post-event `observe` hook without touching physics.
+    pub fn fleet_gauges(&self) -> crate::obs::FleetGauges {
+        crate::obs::FleetGauges {
+            live_instances: self.scheduler.live_count() as u64,
+            warm_instances: self.scheduler.warm_count() as u64,
+            live_nodes: self.nodes.alive_count() as u64,
+            mean_node_factor: self.nodes.mean_nominal_factor(),
+        }
+    }
+
     /// The node pool (contention/residency introspection for reports and
     /// tests).
     pub fn nodes(&self) -> &NodeTable {

@@ -36,6 +36,13 @@ pub trait World {
         event: Self::Event,
         events: &mut EventQueue<Self::Event>,
     ) -> Result<()>;
+
+    /// Observation hook, called after every handled event. Worlds use it
+    /// to drive sim-time samplers (`obs` fleet gauges) *outside* the
+    /// event queue: the hook cannot schedule events, so enabling it never
+    /// changes the event count, the event order, or any RNG stream. The
+    /// default is a no-op.
+    fn observe(&mut self, _now: SimTime) {}
 }
 
 /// Why a [`Simulation`] run returned.
@@ -134,6 +141,7 @@ impl<W: World> Simulation<W> {
                 return Ok(StopReason::Drained);
             };
             self.world.handle(now, event, &mut self.events)?;
+            self.world.observe(now);
             handled += 1;
         }
     }

@@ -21,7 +21,6 @@
 pub mod clock;
 pub mod event;
 pub mod kernel;
-pub mod trace;
 
 pub use clock::SimTime;
 pub use event::EventQueue;

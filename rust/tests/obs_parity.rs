@@ -1,0 +1,225 @@
+//! Observability safety net: the flight recorder must be *invisible* to a
+//! simulation's physics and *deterministic* in what it records.
+//!
+//! Three layers of evidence:
+//!
+//! 1. fingerprint bit-parity: an instrumented run (detail probes + gauges)
+//!    produces the exact same physics fingerprint as an uninstrumented one,
+//!    for a paired paper day and for a multi-region cluster replay, at
+//!    `--threads 1` and `--threads 8`;
+//! 2. export determinism: the timeline JSON and the gauge CSV are
+//!    byte-identical across thread counts (canonical track order comes
+//!    from `map_indexed` index order, never completion order);
+//! 3. trace well-formedness: the Chrome trace-event export round-trips
+//!    through the JSON parser, timestamps are monotone per track, and
+//!    every async span begin has a matching end on the same (pid, id,
+//!    name). A tiny ring exercises overflow: drops are counted, counters
+//!    stay complete, physics stays identical.
+
+use minos::experiment::cluster::{run_cluster, ClusterOutcome};
+use minos::experiment::{runner, ExperimentConfig};
+use minos::obs::{gauges, timeline, Level, ObsConfig, ObsData};
+use minos::platform::ClusterConfig;
+use minos::sim::SimTime;
+use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::json::{self, Json};
+
+/// Detail-level probes with a 60 s gauge cadence — the heaviest
+/// instrumentation the CLI can switch on.
+fn obs_on() -> ObsConfig {
+    ObsConfig {
+        level: Level::Detail,
+        ring_cap: ObsConfig::DEFAULT_RING_CAP,
+        gauge_every: Some(SimTime::from_secs(60.0)),
+    }
+}
+
+// -- paired day -------------------------------------------------------------
+
+fn run_paired(obs: ObsConfig, threads: usize) -> runner::PairedOutcome {
+    let mut cfg = ExperimentConfig::smoke(1, 0x40B5);
+    cfg.obs = obs;
+    runner::run_paired_threads(&cfg, None, threads).unwrap()
+}
+
+/// A compact, exact fingerprint of a paired run's physics (mirrors the
+/// golden fingerprint in `hotpath_equivalence.rs`).
+fn paired_fp(o: &runner::PairedOutcome) -> String {
+    format!(
+        "successful={}/{} terminations={} threshold_bits={:016x} cost_bits={:016x}/{:016x}",
+        o.minos.successful(),
+        o.baseline.successful(),
+        o.minos.terminations,
+        o.pretest.threshold_ms.to_bits(),
+        o.minos.total_cost_usd().to_bits(),
+        o.baseline.total_cost_usd().to_bits(),
+    )
+}
+
+#[test]
+fn probes_do_not_change_paired_physics() {
+    let bare = paired_fp(&run_paired(ObsConfig::off(), 1));
+    for threads in [1usize, 8] {
+        let on = run_paired(obs_on(), threads);
+        assert_eq!(
+            paired_fp(&on),
+            bare,
+            "probes changed paired physics at {threads} threads"
+        );
+        // The instrumented run actually recorded something.
+        let data = on.minos.obs.as_deref().expect("minos arm captured obs");
+        assert!(!data.events.is_empty(), "detail run recorded no events");
+        assert!(!data.gauges.is_empty(), "gauge cadence produced no samples");
+        assert!(on.baseline.obs.is_some());
+    }
+    // Probes off ⇒ nothing captured, not even empty buffers.
+    assert!(run_paired(ObsConfig::off(), 1).minos.obs.is_none());
+}
+
+// -- cluster replay ---------------------------------------------------------
+
+fn run_cluster_with(obs: ObsConfig, threads: usize) -> ClusterOutcome {
+    let trace = SynthConfig {
+        n_functions: 3,
+        n_regions: 2,
+        hours: 0.04,
+        total_rate_rps: 3.0,
+        region_spill: 0.2,
+        seed: 99,
+        ..Default::default()
+    }
+    .generate();
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(2);
+    let mut cfg = ExperimentConfig::smoke(1, 4_242);
+    cfg.obs = obs;
+    run_cluster(&cfg, &registry, &trace, &cluster, threads).unwrap()
+}
+
+fn cluster_fp(o: &ClusterOutcome) -> String {
+    format!(
+        "arrivals={} completed={} terminations={} cost_bits={:016x} events={}",
+        o.total_arrivals(),
+        o.total_completed(),
+        o.total_terminations(),
+        o.total_cost_usd().to_bits(),
+        o.total_events_handled(),
+    )
+}
+
+#[test]
+fn probes_do_not_change_cluster_physics() {
+    let bare = cluster_fp(&run_cluster_with(ObsConfig::off(), 1));
+    for threads in [1usize, 8] {
+        let on = run_cluster_with(obs_on(), threads);
+        assert_eq!(
+            cluster_fp(&on),
+            bare,
+            "probes changed cluster physics at {threads} threads"
+        );
+        let tracks = on.obs_tracks();
+        assert_eq!(tracks.len(), on.per_region.len(), "one track per region");
+    }
+}
+
+#[test]
+fn timeline_and_gauges_are_byte_identical_across_thread_counts() {
+    let seq = run_cluster_with(obs_on(), 1);
+    let par = run_cluster_with(obs_on(), 8);
+    let (seq_tracks, par_tracks) = (seq.obs_tracks(), par.obs_tracks());
+    assert_eq!(
+        timeline::chrome_trace(&seq_tracks).to_string_compact(),
+        timeline::chrome_trace(&par_tracks).to_string_compact(),
+        "timeline JSON differs across thread counts"
+    );
+    assert_eq!(
+        gauges::render_csv(&seq_tracks),
+        gauges::render_csv(&par_tracks),
+        "gauge CSV differs across thread counts"
+    );
+    // Merged counters are canonical too (BTreeMap order + index order).
+    assert_eq!(
+        minos::obs::render_counters(&minos::obs::merged_counters(seq_tracks.iter().copied())),
+        minos::obs::render_counters(&minos::obs::merged_counters(par_tracks.iter().copied())),
+    );
+}
+
+// -- trace well-formedness --------------------------------------------------
+
+#[test]
+fn timeline_round_trips_with_monotone_tracks_and_paired_spans() {
+    let outcome = run_cluster_with(obs_on(), 1);
+    let tracks = outcome.obs_tracks();
+    let rendered = timeline::chrome_trace(&tracks).to_string_compact();
+    let doc = json::parse(&rendered).expect("timeline is valid JSON");
+
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    use std::collections::HashMap;
+    // pid → last ts (monotonicity), (pid, id, name) → open-begin depth.
+    let mut last_ts: HashMap<u64, f64> = HashMap::new();
+    let mut open: HashMap<(u64, String, String), i64> = HashMap::new();
+    let mut spans = 0u64;
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("ph field");
+        if ph == "M" {
+            continue; // metadata records carry no ts
+        }
+        let pid = ev.get("pid").and_then(Json::as_f64).expect("pid") as u64;
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("ts");
+        let prev = last_ts.entry(pid).or_insert(ts);
+        assert!(ts >= *prev, "track {pid} went back in time: {ts} < {prev}");
+        *prev = ts;
+        match ph {
+            "b" | "e" => {
+                let id = ev.get("id").and_then(Json::as_str).expect("span id").to_string();
+                let name = ev.get("name").and_then(Json::as_str).expect("name").to_string();
+                let depth = open.entry((pid, id, name)).or_insert(0);
+                match ph {
+                    "b" => {
+                        *depth += 1;
+                        spans += 1;
+                    }
+                    _ => {
+                        *depth -= 1;
+                        assert!(*depth >= 0, "span end without begin");
+                    }
+                }
+            }
+            "i" | "C" => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert!(spans > 0, "no invocation spans recorded");
+    for ((pid, id, name), depth) in &open {
+        assert_eq!(*depth, 0, "unbalanced span (pid {pid}, id {id}, name {name})");
+    }
+}
+
+#[test]
+fn tiny_ring_counts_drops_without_changing_physics() {
+    let bare = paired_fp(&run_paired(ObsConfig::off(), 1));
+    let tiny = ObsConfig { ring_cap: 32, ..obs_on() };
+    let on = run_paired(tiny, 1);
+    assert_eq!(paired_fp(&on), bare, "ring pressure changed physics");
+
+    let data: &ObsData = on.minos.obs.as_deref().unwrap();
+    assert!(data.dropped > 0, "expected overflow on a 32-slot ring");
+    assert!(data.events.len() <= 32, "ring grew past its capacity");
+    // Counters see every event, not just the ring survivors.
+    let counted: u64 = data.counters.values().sum();
+    assert!(
+        counted > data.events.len() as u64,
+        "counters should outnumber the surviving ring events"
+    );
+    // The export surfaces the loss instead of hiding it.
+    let tracks = [data];
+    let rendered = timeline::chrome_trace(&tracks).to_string_compact();
+    assert!(rendered.contains("ring-dropped"));
+    let merged = minos::obs::merged_counters(tracks.iter().copied());
+    assert_eq!(merged.get("ring.dropped"), Some(&data.dropped));
+}

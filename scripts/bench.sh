@@ -6,7 +6,8 @@
 #
 # Produces:
 #   BENCH_hotpath.json  — microbench medians (ns) + ops/s, incl. the
-#                         end-to-end paired-paper-day request rate
+#                         end-to-end paired-paper-day request rate, bare
+#                         and with the flight recorder on (probe overhead)
 #   BENCH_cluster.json  — 4-region ≥100k-invocation replay events/s per
 #                         thread count, plus the bit-identity fingerprint
 #

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention]
+# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs]
 #   --fast       skip the release build and the bench compile (debug tests only)
 #   --bench      additionally run scripts/bench.sh (writes BENCH_*.json at the
 #                repo root — the hot-path perf trajectory)
@@ -11,6 +11,10 @@
 #                be byte-identical to the default (which the goldens pin),
 #                and contention-on replays must reproduce across two
 #                process invocations
+#   --obs        additionally smoke the flight recorder: a seeded replay with
+#                --timeline/--gauges-every must leave the report identical to
+#                the probes-off run, export valid JSON (python3-validated) and
+#                a gauge CSV, and be byte-identical across thread counts
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -23,13 +27,15 @@ FAST=0
 BENCH=0
 POLICIES=0
 CONTENTION=0
+OBS=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
         --bench) BENCH=1 ;;
         --policies) POLICIES=1 ;;
         --contention) CONTENTION=1 ;;
-        *) echo "unknown option: $arg (known: --fast --bench --policies --contention)" >&2; exit 2 ;;
+        --obs) OBS=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs)" >&2; exit 2 ;;
     esac
 done
 
@@ -111,6 +117,65 @@ if [ "$CONTENTION" -eq 1 ]; then
         [ -n "$run1" ] || { echo "contention replay ($extra) produced no report" >&2; exit 1; }
     done
     echo "contention smoke passed"
+fi
+
+if [ "$OBS" -eq 1 ]; then
+    echo "== observability smoke (flight recorder must not touch physics) =="
+    cargo build --release --quiet
+    MINOS_BIN="$(pwd)/target/release/minos"
+    [ -x "$MINOS_BIN" ] || MINOS_BIN="$(pwd)/rust/target/release/minos"
+    OBS_TMP="$(mktemp -d)"
+    trap 'rm -rf "$OBS_TMP"' EXIT
+    BASE="replay --synth --functions 2 --hours 0.05 --rate 3 --regions 2 --seed 909"
+    # Probes off: the reference report the instrumented runs must match.
+    "$MINOS_BIN" $BASE --threads 1 > "$OBS_TMP/off.txt"
+    # Probes on, two thread counts: same report + byte-identical exports.
+    for threads in 1 8; do
+        "$MINOS_BIN" $BASE --threads "$threads" \
+            --timeline "$OBS_TMP/t$threads.json" --gauges-every 60s \
+            > "$OBS_TMP/on$threads.txt"
+        # The report is everything before the obs export footer.
+        sed -n '/^timeline written to /q;p' "$OBS_TMP/on$threads.txt" \
+            > "$OBS_TMP/on$threads.report.txt"
+        cmp -s "$OBS_TMP/off.txt" "$OBS_TMP/on$threads.report.txt" \
+            || { echo "probes changed the replay report (threads=$threads)" >&2; exit 1; }
+    done
+    cmp -s "$OBS_TMP/t1.json" "$OBS_TMP/t8.json" \
+        || { echo "timeline differs between --threads 1 and --threads 8" >&2; exit 1; }
+    cmp -s "$OBS_TMP/t1.json.gauges.csv" "$OBS_TMP/t8.json.gauges.csv" \
+        || { echo "gauge CSV differs between --threads 1 and --threads 8" >&2; exit 1; }
+    if command -v python3 >/dev/null 2>&1; then
+        python3 - "$OBS_TMP/t1.json" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+evs = doc["traceEvents"]
+assert doc["displayTimeUnit"] == "ms"
+assert evs, "empty timeline"
+phases = {e["ph"] for e in evs}
+assert "M" in phases and "b" in phases and "e" in phases, phases
+# Per-track monotone timestamps; complete async b/e pairing.
+last, open_spans = {}, {}
+for e in evs:
+    if e["ph"] == "M":
+        continue
+    pid, ts = e["pid"], e["ts"]
+    assert ts >= last.get(pid, ts), f"track {pid} went back in time"
+    last[pid] = ts
+    if e["ph"] in ("b", "e"):
+        key = (pid, e["id"], e["name"])
+        open_spans[key] = open_spans.get(key, 0) + (1 if e["ph"] == "b" else -1)
+        assert open_spans[key] >= 0, f"end before begin: {key}"
+assert all(v == 0 for v in open_spans.values()), "unbalanced spans"
+print(f"timeline OK: {len(evs)} events, {len(last)} tracks")
+PY
+    else
+        echo "(python3 not available; skipping timeline JSON validation)"
+    fi
+    head -1 "$OBS_TMP/t1.json.gauges.csv" | grep -q '^track,t_s,queue_depth,' \
+        || { echo "gauge CSV missing its header" >&2; exit 1; }
+    [ "$(wc -l < "$OBS_TMP/t1.json.gauges.csv")" -gt 1 ] \
+        || { echo "gauge CSV has no samples" >&2; exit 1; }
+    echo "observability smoke passed"
 fi
 
 if [ "$BENCH" -eq 1 ]; then
