@@ -1,15 +1,20 @@
-//! Node-layer scale: the SoA table + batched OU drift from 1k to 50k
-//! nodes per region.
+//! Node-layer scale: the SoA table + batched OU drift from 1k nodes to
+//! the 1M-node fleet target.
 //!
-//! Two measurements anchor the refactor:
+//! Three measurements anchor the refactor:
 //!
 //! 1. **drift pass throughput** — one batched epoch advance over the full
 //!    drift column (the per-epoch cost that replaced per-lookup `exp` +
-//!    normal draws), in nodes/second at each pool size;
+//!    normal draws), in nodes/second from 1k up to 1M nodes;
 //! 2. **contended region replay** — a single-region cluster replay with
 //!    contention on and 60 s drift epochs at 1k / 10k / 50k nodes. The
-//!    50k-node point is the acceptance bar: it must *complete*, and its
-//!    events/second show how node-pool size bends the hot path.
+//!    50k-node point must *complete*, and its events/second show how
+//!    node-pool size bends the hot path;
+//! 3. **sharded fleet replay** — one 1M-node contended region split into
+//!    1 / 4 / 8 sub-pools (`cfg.shards`), the ROADMAP "Fleet-scale
+//!    performance" acceptance bar: the 1M-node replay must complete, and
+//!    the shard sweep shows how intra-region sharding spreads one hot
+//!    region across the worker pool.
 //!
 //! Run: `cargo bench --bench contention_scale [-- --json OUT.json]`
 
@@ -24,6 +29,11 @@ use minos::util::json::Json;
 use minos::util::prng::Rng;
 
 const POOL_SIZES: [usize; 3] = [1_000, 10_000, 50_000];
+/// Drift-pass column sizes: the replay pools plus the 1M-node fleet bar.
+const DRIFT_SIZES: [usize; 4] = [1_000, 10_000, 50_000, 1_000_000];
+/// Shard counts for the 1M-node fleet replay sweep.
+const FLEET_SHARDS: [u32; 3] = [1, 4, 8];
+const FLEET_NODES: usize = 1_000_000;
 
 fn main() {
     println!("== contention-model scale benchmarks ==\n");
@@ -31,7 +41,7 @@ fn main() {
 
     // 1. Batched drift pass: advance every node across one epoch boundary.
     println!("-- batched OU drift pass (one epoch, full column)");
-    for &n in &POOL_SIZES {
+    for &n in &DRIFT_SIZES {
         let model = NodeModel {
             drift_epoch_ms: 60_000.0,
             contention: ContentionCurve::Power { strength: 0.5, exponent: 0.7 },
@@ -111,10 +121,74 @@ fn main() {
     }
     println!("\n50k-node contended region replay completed.");
 
+    // 3. Fleet scale: one 1M-node contended region, sharded 1 / 4 / 8
+    // ways. Shard counts change placement by design (decorrelated
+    // sub-pools), so each point reports its own completion conservation
+    // rather than a shared fingerprint.
+    println!("\n-- sharded fleet replay ({FLEET_NODES} nodes, 1 region)");
+    let fleet_synth = SynthConfig {
+        n_functions: 24,
+        n_regions: 1,
+        hours: 0.1,
+        total_rate_rps: 50.0,
+        seed: 616,
+        ..Default::default()
+    };
+    let fleet_trace = fleet_synth.generate();
+    println!(
+        "trace: {} invocations, {} functions over {:.2} h\n",
+        fleet_trace.len(),
+        fleet_trace.n_functions(),
+        fleet_synth.hours
+    );
+    let fleet_registry = FunctionRegistry::demo(fleet_trace.n_functions());
+    let fleet_cluster = scenarios::contended_cluster(1, FLEET_NODES);
+    for &shards in &FLEET_SHARDS {
+        let mut fleet_cfg = ExperimentConfig::paper_day(0);
+        fleet_cfg.metrics = minos::experiment::MetricsMode::Streaming;
+        fleet_cfg.shards = shards;
+        let mut events = 0u64;
+        let mut completed = 0u64;
+        let t = time_median(
+            &format!("fleet replay, {FLEET_NODES} nodes, {shards} shards"),
+            2,
+            || {
+                let o =
+                    run_cluster(&fleet_cfg, &fleet_registry, &fleet_trace, &fleet_cluster, 0)
+                        .unwrap();
+                events = o.total_events_handled();
+                completed = o.total_completed();
+                events
+            },
+        );
+        assert_eq!(
+            completed,
+            fleet_trace.len() as u64,
+            "{shards}-shard fleet replay dropped invocations"
+        );
+        println!(
+            "{}  ({:.0}k events/s, {} completed)",
+            t.report(),
+            throughput(&t, events) / 1e3,
+            completed
+        );
+        json_results.push(Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("nodes", Json::num(FLEET_NODES as f64)),
+            ("shards", Json::num(shards as f64)),
+            ("median_ms", Json::num(t.median_ms)),
+            ("events", Json::num(events as f64)),
+            ("events_per_s", Json::num(throughput(&t, events))),
+            ("completed", Json::num(completed as f64)),
+        ]));
+    }
+    println!("\n1M-node sharded fleet replay completed.");
+
     if let Some(path) = json_output_path() {
         let doc = Json::obj(vec![
             ("bench", Json::str("contention_scale")),
             ("trace_invocations", Json::num(trace.len() as f64)),
+            ("fleet_trace_invocations", Json::num(fleet_trace.len() as f64)),
             ("results", Json::arr(json_results)),
         ]);
         std::fs::write(&path, doc.to_string_pretty() + "\n")

@@ -19,12 +19,19 @@
 //!    own elysium threshold on that region's platform (paper §II-B-a);
 //!    the pairs are independent, so they fan out over
 //!    `util::parallel::map_indexed`.
-//! 2. **Replay** — one [`RegionWorld`] sub-simulation per region, driven
-//!    by the shared `sim` kernel; regions share nothing, so they also run
-//!    in parallel and merge in region order. Each deployment owns a boxed
-//!    [`SelectionPolicy`] built from its profile's spec (or the
-//!    experiment default), so online thresholds and every other policy
-//!    work inside cluster replays exactly as in single-deployment runs.
+//! 2. **Sharding** — a second admission-time pass
+//!    ([`policy_routing::assign_shards`]) splits every region's records
+//!    into `cfg.shards` sub-streams, functions assigned whole by id
+//!    rank. One shard per region (the default) is the unsharded engine.
+//! 3. **Replay** — one [`RegionWorld`] sub-simulation per (region,
+//!    shard), driven by the shared `sim` kernel; the sub-simulations
+//!    share nothing, so the flat task list fans out over the worker pool
+//!    and one hot region no longer pins a single core. Outcomes merge
+//!    region-major, shard-minor, in canonical order. Each deployment
+//!    owns a boxed [`SelectionPolicy`] built from its profile's spec (or
+//!    the experiment default), so online thresholds and every other
+//!    policy work inside cluster replays exactly as in
+//!    single-deployment runs.
 
 use anyhow::Result;
 
@@ -39,7 +46,7 @@ use crate::policy::{routing as policy_routing, RoutingSpec, SelectionPolicy};
 use crate::sim::{EventQueue, SimTime, Simulation, World};
 use crate::trace::{FunctionId, FunctionRegistry, Trace, TraceRecord};
 use crate::util::parallel;
-use crate::util::prng::Rng;
+use crate::util::prng::{splitmix64, Rng};
 use crate::workload::FunctionSpec;
 
 use super::config::ExperimentConfig;
@@ -341,9 +348,10 @@ pub struct RegionOutcome {
     /// Events the region's sub-simulation handled (throughput metric).
     pub events_handled: u64,
     pub per_function: Vec<DeploymentOutcome>,
-    /// Flight-recorder capture for this region (None unless the replay
-    /// was instrumented). Track label = the region name.
-    pub obs: Option<Box<ObsData>>,
+    /// Flight-recorder captures for this region, shard-index order
+    /// (empty unless the replay was instrumented). Track label = the
+    /// region name, or `{region}/s{shard}` when sharded.
+    pub obs: Vec<Box<ObsData>>,
 }
 
 impl RegionOutcome {
@@ -391,18 +399,20 @@ impl ClusterOutcome {
         self.per_region.iter().map(|r| r.events_handled).sum()
     }
 
-    /// The instrumented regions' captures, in canonical (region id)
+    /// The instrumented captures in canonical (region id, shard index)
     /// order — the order `run_cluster` merges worker results in, so
     /// timeline and gauge exports are byte-identical at any thread count.
     pub fn obs_tracks(&self) -> Vec<&ObsData> {
-        self.per_region.iter().filter_map(|r| r.obs.as_deref()).collect()
+        self.per_region.iter().flat_map(|r| r.obs.iter().map(|d| &**d)).collect()
     }
 }
 
 /// Replay a multi-region trace against a cluster. `threads` follows the
 /// crate convention (0 = auto, 1 = sequential); results are bit-identical
 /// at any thread count. `base.routing` picks the admission-time routing
-/// policy (default: honor the trace's region ids).
+/// policy (default: honor the trace's region ids); `base.shards` splits
+/// every region into that many independent sub-simulations (1 = the
+/// unsharded engine, bit-identical to pre-sharding replays).
 pub fn run_cluster(
     base: &ExperimentConfig,
     registry: &FunctionRegistry,
@@ -411,6 +421,21 @@ pub fn run_cluster(
     threads: usize,
 ) -> Result<ClusterOutcome> {
     anyhow::ensure!(!cluster.is_empty(), "cluster needs at least one region");
+    let n_shards = base.shards.max(1) as usize;
+    if n_shards > 1 {
+        // Every shard carves a non-empty slice of its region's node pool;
+        // a zero-node shard could never place anything and would spin on
+        // dispatch retries forever.
+        for region in cluster.iter() {
+            anyhow::ensure!(
+                region.platform.n_nodes >= n_shards,
+                "region {} has {} nodes but shards={n_shards} needs at least one \
+                 node per sub-pool",
+                region.name,
+                region.platform.n_nodes
+            );
+        }
+    }
     // Refuse partial coverage, like `run_trace`: silently dropping records
     // would make the totals read as a complete replay.
     anyhow::ensure!(
@@ -484,31 +509,127 @@ pub fn run_cluster(
         pretest_by_region[r].push((f, report));
     }
 
-    // Phase B: independent region sub-simulations, in parallel, merged in
-    // region order.
-    let per_region: Vec<RegionOutcome> =
-        parallel::try_map_indexed(cluster.len(), threads, |r| {
+    // Phase B: independent (region, shard) sub-simulations. The second
+    // admission-time pass splits each region's records into shard
+    // sub-streams (functions assigned whole); a shard's pretest list is
+    // the region list filtered to its functions, which keeps the
+    // ascending-function-id slot order. The flat task list load-balances
+    // the whole cluster over the worker pool; outcomes merge
+    // region-major, shard-minor, so results are bit-identical at any
+    // thread count. With `n_shards == 1` every task sees exactly the
+    // inputs the unsharded engine saw.
+    let mut shard_records: Vec<Vec<TraceRecord>> =
+        Vec::with_capacity(cluster.len() * n_shards);
+    let mut shard_pretests: Vec<Vec<(FunctionId, PretestReport)>> =
+        Vec::with_capacity(cluster.len() * n_shards);
+    for (r, records) in by_region.iter().enumerate() {
+        for recs in policy_routing::assign_shards(records, n_shards) {
+            let mut fns: Vec<u32> = recs.iter().map(|rec| rec.function.0).collect();
+            fns.sort_unstable();
+            fns.dedup();
+            shard_pretests.push(
+                pretest_by_region[r]
+                    .iter()
+                    .filter(|(f, _)| fns.binary_search(&f.0).is_ok())
+                    .cloned()
+                    .collect(),
+            );
+            shard_records.push(recs);
+        }
+    }
+    let shard_outcomes: Vec<RegionOutcome> =
+        parallel::try_map_indexed(shard_records.len(), threads, |i| {
+            let (r, k) = (i / n_shards, i % n_shards);
             run_region(
                 base,
                 cluster.get(RegionId(r as u32)).expect("dense region ids"),
                 registry,
-                &pretest_by_region[r],
-                &by_region[r],
+                &shard_pretests[i],
+                &shard_records[i],
+                ShardCtx { index: k as u32, count: n_shards as u32 },
             )
         })?;
+    let mut shard_outcomes = shard_outcomes.into_iter();
+    let per_region: Vec<RegionOutcome> = (0..cluster.len())
+        .map(|_| merge_region_shards(shard_outcomes.by_ref().take(n_shards).collect()))
+        .collect();
     Ok(ClusterOutcome { per_region })
 }
 
-/// Run one region's shared-node sub-simulation.
+/// One shard of a region's replay: `index` of `count` sub-pools. The
+/// unsharded engine is the `count == 1` special case.
+#[derive(Debug, Clone, Copy)]
+struct ShardCtx {
+    index: u32,
+    count: u32,
+}
+
+/// Shard `index`'s slice of an `n`-item budget (nodes, instance quota):
+/// a near-even split with the remainder going to the lowest-indexed
+/// shards, total preserved.
+fn shard_slice(n: usize, shard: ShardCtx) -> usize {
+    let count = shard.count as usize;
+    n / count + usize::from((shard.index as usize) < n % count)
+}
+
+/// Merge one region's shard outcomes (shard-index order) back into a
+/// region-level outcome: platform counters sum, per-function rows
+/// re-sort into the region's canonical ascending-function-id order (each
+/// function lives in exactly one shard), obs captures concatenate in
+/// shard order.
+fn merge_region_shards(mut shards: Vec<RegionOutcome>) -> RegionOutcome {
+    let mut merged = shards.remove(0);
+    for s in shards {
+        merged.cold_starts += s.cold_starts;
+        merged.warm_hits += s.warm_hits;
+        merged.expired += s.expired;
+        merged.recycled += s.recycled;
+        merged.crashes += s.crashes;
+        merged.events_handled += s.events_handled;
+        merged.per_function.extend(s.per_function);
+        merged.obs.extend(s.obs);
+    }
+    merged.per_function.sort_by_key(|f| f.function.0);
+    merged
+}
+
+/// Run one shard of a region's shared-node sub-simulation.
+///
+/// §Determinism: the `count == 1` arm reproduces the unsharded engine
+/// bit-for-bit — same platform seed and salt, same RNG roots, same obs
+/// track label. Sharded pools (`count > 1`) carve the node pool and
+/// instance quota into near-even slices and mix the shard index into the
+/// region seed: each shard is its own decorrelated sub-simulation, so
+/// placement intentionally diverges from the unsharded replay (see
+/// README, "Fleet scale") while staying bit-identical at any thread
+/// count.
 fn run_region(
     base: &ExperimentConfig,
     region: &RegionConfig,
     registry: &FunctionRegistry,
     pretests: &[(FunctionId, PretestReport)],
     records: &[TraceRecord],
+    shard: ShardCtx,
 ) -> Result<RegionOutcome> {
-    let platform = region.build_platform(base.day, base.seed, 0);
-    let root = Rng::new(region.region_seed(base.seed) ^ 0x9E3779B97F4A7C15);
+    let (platform, root, track) = if shard.count <= 1 {
+        (
+            region.build_platform(base.day, base.seed, 0),
+            Rng::new(region.region_seed(base.seed) ^ 0x9E3779B97F4A7C15),
+            region.name.clone(),
+        )
+    } else {
+        let mut pcfg = region.platform.clone();
+        pcfg.n_nodes = shard_slice(region.platform.n_nodes, shard);
+        pcfg.max_instances = shard_slice(region.platform.max_instances, shard).max(1);
+        let mut mix = region.region_seed(base.seed)
+            ^ (shard.index as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let seed = splitmix64(&mut mix);
+        (
+            FaasPlatform::new_salted(pcfg, base.day, seed, 0),
+            Rng::new(seed ^ 0x9E3779B97F4A7C15),
+            format!("{}/s{}", region.name, shard.index),
+        )
+    };
 
     let mut deploys = Vec::with_capacity(pretests.len());
     let mut slot_of: Vec<u32> = vec![u32::MAX; registry.len()];
@@ -564,7 +685,7 @@ fn run_region(
     sim.run()?;
     let events_handled = sim.events_handled();
     let mut world = sim.into_world();
-    let obs = world.obs.take_data(&region.name);
+    let obs = world.obs.take_data(&track);
 
     let mut per_function = Vec::with_capacity(world.deploys.len());
     for (mut ds, (_, pretest)) in world.deploys.into_iter().zip(pretests) {
@@ -589,7 +710,7 @@ fn run_region(
         crashes: world.platform.crashes,
         events_handled,
         per_function,
-        obs,
+        obs: obs.into_iter().collect(),
     })
 }
 
@@ -776,6 +897,94 @@ mod tests {
         let pushes: u64 =
             o.per_region.iter().flat_map(|r| &r.per_function).map(|f| f.result.online_pushes).sum();
         assert!(pushes > 0, "online collector never published in a cluster replay");
+    }
+
+    #[test]
+    fn sharded_replay_is_thread_invariant_and_complete() {
+        let trace = demo_trace(2, 61);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(2);
+        let mut cfg = ExperimentConfig::smoke(0, 88);
+        cfg.shards = 4;
+        let a = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        let b = run_cluster(&cfg, &registry, &trace, &cluster, 8).unwrap();
+        assert_eq!(a.total_arrivals(), trace.len());
+        assert_eq!(a.total_completed(), trace.len() as u64);
+        assert_eq!(
+            a.total_cost_usd().to_bits(),
+            b.total_cost_usd().to_bits(),
+            "thread count changed a sharded replay"
+        );
+        assert_eq!(a.total_events_handled(), b.total_events_handled());
+        assert_eq!(a.total_terminations(), b.total_terminations());
+        for (ra, rb) in a.per_region.iter().zip(&b.per_region) {
+            assert_eq!(ra.cold_starts, rb.cold_starts);
+            assert_eq!(ra.warm_hits, rb.warm_hits);
+            // The merge restores the region's canonical slot order.
+            assert!(
+                ra.per_function.windows(2).all(|w| w[0].function.0 < w[1].function.0),
+                "per-function rows out of order in {}",
+                ra.region_name
+            );
+        }
+    }
+
+    #[test]
+    fn shard_count_changes_placement_but_not_conservation() {
+        let trace = demo_trace(1, 53);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(1);
+        let mut cfg = ExperimentConfig::smoke(0, 44);
+        let unsharded = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        cfg.shards = 2;
+        let sharded = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        // Conservation holds either way: every arrival completes.
+        assert_eq!(unsharded.total_completed(), trace.len() as u64);
+        assert_eq!(sharded.total_completed(), trace.len() as u64);
+        assert_eq!(sharded.total_arrivals(), unsharded.total_arrivals());
+        // But the sub-pools draw their own node lotteries, so placement —
+        // and with it the billed durations — intentionally diverges.
+        assert_ne!(
+            unsharded.total_cost_usd().to_bits(),
+            sharded.total_cost_usd().to_bits(),
+            "sharding left the placement stream untouched"
+        );
+    }
+
+    #[test]
+    fn shard_obs_tracks_are_namespaced() {
+        let trace = demo_trace(1, 19);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let cluster = ClusterConfig::demo(1);
+        let mut cfg = ExperimentConfig::smoke(0, 21);
+        cfg.obs = crate::obs::ObsConfig {
+            level: crate::obs::Level::Summary,
+            ring_cap: 1024,
+            gauge_every: None,
+        };
+        let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        let tracks: Vec<&str> =
+            o.obs_tracks().iter().map(|d| d.track.as_str()).collect();
+        assert_eq!(tracks, vec![cluster.get(RegionId(0)).unwrap().name.as_str()]);
+        cfg.shards = 2;
+        let o = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+        let tracks: Vec<&str> =
+            o.obs_tracks().iter().map(|d| d.track.as_str()).collect();
+        assert_eq!(tracks.len(), 2, "one capture per shard");
+        assert!(tracks[0].ends_with("/s0") && tracks[1].ends_with("/s1"), "{tracks:?}");
+    }
+
+    #[test]
+    fn more_shards_than_nodes_is_an_error() {
+        let trace = demo_trace(1, 13);
+        let registry = FunctionRegistry::demo(trace.n_functions());
+        let mut region = RegionConfig::demo(0);
+        region.platform.n_nodes = 1;
+        let cluster = ClusterConfig::new(vec![region]);
+        let mut cfg = ExperimentConfig::smoke(0, 9);
+        cfg.shards = 2;
+        let err = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("shards"), "unhelpful: {err:#}");
     }
 
     #[test]

@@ -43,6 +43,15 @@ pub struct ExperimentConfig {
     /// Cross-region routing for cluster replays (admission-time; see
     /// `policy::routing`).
     pub routing: RoutingSpec,
+    /// Intra-region sharding for cluster replays: split every region's
+    /// node pool and deployments into this many independent
+    /// sub-simulations (functions are assigned whole, by id rank —
+    /// `policy::routing::assign_shards`). `1`, the default, is the
+    /// unsharded engine, bit-identical to pre-sharding replays; larger
+    /// counts decorrelate the sub-pools, so placement intentionally
+    /// diverges from the unsharded run while staying bit-identical at
+    /// any thread count. Ignored outside `run_cluster`.
+    pub shards: u32,
     /// Open-loop mode: Poisson arrivals at this rate (requests/s) replace
     /// the closed-loop virtual users. This is the paper's actual
     /// deployment model (§IV "Workload Limitations": Minos requires an
@@ -83,6 +92,7 @@ impl ExperimentConfig {
             billing: Billing::paper(),
             policy: PolicySpec::Fixed,
             routing: RoutingSpec::Trace,
+            shards: 1,
             open_loop_rate_rps: None,
             replay: None,
             metrics: MetricsMode::Full,
@@ -149,6 +159,7 @@ mod tests {
         let c = ExperimentConfig::paper_day(0);
         assert_eq!(c.policy, PolicySpec::Fixed);
         assert_eq!(c.routing, RoutingSpec::Trace);
+        assert_eq!(c.shards, 1, "paper config must stay unsharded");
         let online = c.with_online_threshold(25);
         assert_eq!(online.policy, PolicySpec::Online { update_every: 25 });
     }

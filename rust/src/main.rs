@@ -86,7 +86,7 @@ COMMANDS:
              [--timeline FILE --gauges-every DUR --probe-level L]
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
-             [--regions N --spill F --routing R --threads T --paired]
+             [--regions N --shards N --spill F --routing R --threads T --paired]
              [--policy P --full-records]
              [--contention C --node-capacity N --drift-epoch S]
              [--timeline FILE --gauges-every DUR --probe-level L]
@@ -98,6 +98,13 @@ REPLAY MODES:
              functions within a region contend on one shared node pool.
              With --synth, functions are spread over N home regions and
              --spill F (default 0.1) of traffic roams.
+  --shards N    (with --regions) split each region's node pool, instance
+             quota, and deployments into N independent sub-simulations
+             (functions assigned whole, by id rank), fanned over the
+             worker pool — one hot region no longer pins a single core.
+             --shards 1 is bit-identical to the unsharded engine; N > 1
+             decorrelates the sub-pools, so placement intentionally
+             diverges while staying bit-identical at any --threads.
   --paired   per-function Minos-vs-baseline improvement figures
 
 POLICIES (--policy / --policies, syntax `name` or `name:param`):
@@ -161,9 +168,19 @@ OBSERVABILITY (week, sweep, openloop, replay):
 
 THREADS:
   --threads T   fan independent runs (paired conditions, week days,
-             per-function replays, regions, sweep points) over T worker
-             threads; 0 = auto (all cores), 1 = sequential. Results are
-             bit-identical at any thread count.
+             per-function replays, region shards, sweep points) over T
+             worker threads; 0 = auto (all cores), 1 = sequential.
+             Results are bit-identical at any thread count.
+
+BENCH GATE:
+  scripts/bench.sh          rewrite the committed BENCH_*.json (hotpath,
+             cluster replay, and fleet-scale numbers — the repo's perf
+             trajectory)
+  scripts/bench.sh --check  regression gate: run the benches fresh and
+             compare against the committed BENCH_*.json — any events/s,
+             requests/s, or nodes/s series dropping more than 10%, or
+             any change to the replay fingerprint, fails. Wired into
+             scripts/check.sh --bench when baselines exist.
 ";
 
 fn load_runtime(args: &Args) -> Result<Option<Runtime>> {
@@ -553,6 +570,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
         // discard the flag.
         bail!("--routing requires --regions (cluster replay)");
     }
+    let n_shards = u(args, "shards", 1)?;
+    if args.get("shards").is_some() && !cluster_mode {
+        // Sharding splits a region's node pool; there is no region to
+        // split outside cluster replays.
+        bail!("--shards requires --regions (cluster replay)");
+    }
+    if n_shards == 0 || n_shards > u32::MAX as u64 {
+        bail!("--shards must be between 1 and {}", u32::MAX);
+    }
     let rt = load_runtime(args)?;
     let trace = if let Some(path) = args.get("trace") {
         trace_io::read_csv(Path::new(path)).map_err(anyhow::Error::msg)?
@@ -629,8 +655,11 @@ fn cmd_replay(args: &Args) -> Result<()> {
     cfg.obs = obs.cfg;
 
     if cluster_mode {
+        cfg.shards = n_shards as u32;
+        let shard_note =
+            if n_shards > 1 { format!(", {n_shards} shards/region") } else { String::new() };
         println!(
-            "cluster replay: {} invocations, {distinct} functions, {} regions \
+            "cluster replay: {} invocations, {distinct} functions, {} regions{shard_note} \
              (span {})",
             trace.len(),
             n_regions,

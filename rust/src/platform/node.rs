@@ -30,9 +30,18 @@
 //!   pinned bit-identically by `tests/properties.rs`;
 //! - **batched** (`drift_epoch_ms > 0`): one pass over the `drift` column
 //!   per epoch boundary (constant decay per pass — vectorizable, no `exp`
-//!   on the lookup path), which is what keeps 50k-node regions cheap
+//!   on the lookup path), which is what keeps 1M-node regions cheap
 //!   (`benches/contention_scale.rs`). At epoch boundaries the batched
 //!   value equals the exact transition to within 1e-12 (property-tested).
+//!
+//! §Perf — fleet passes. Batched passes and pool gauges stream the dense
+//! columns in **ascending slot order**, driven by a live-slot occupancy
+//! bitmap (`u64` words, `trailing_zeros` iteration) instead of gathering
+//! through the `alive` permutation: sequential column reads, no
+//! indirection, one bit test per retired slot. Contention lookups read a
+//! factor table precomputed per resident count (bit-identical to the
+//! curve, since both divide the same integers), so the hot path never
+//! calls `powf`.
 
 use crate::sim::SimTime;
 use crate::util::prng::Rng;
@@ -109,8 +118,16 @@ pub struct NodeTable {
     /// Position of each slot in `alive` (`NIL` when retired).
     alive_pos: Vec<u32>,
     /// Live slots, in deterministic (spawn/swap-remove) order — the
-    /// placement lottery samples this and batched passes walk it.
+    /// placement lottery samples this.
     alive: Vec<u32>,
+    /// Occupancy bitmap over slots (bit `s` set iff slot `s` is live) —
+    /// batched passes and pool gauges stream the columns through this in
+    /// ascending slot order.
+    live_words: Vec<u64>,
+    /// Contention factor per resident count (`cont_table[r] ==
+    /// contention.factor(r / capacity)` bit-exactly); empty when the
+    /// curve is off. Counts past the table fall back to the curve.
+    cont_table: Vec<f64>,
     /// Retired slots available for reuse (LIFO).
     free: Vec<u32>,
     /// Batched mode: the next epoch boundary not yet advanced (µs).
@@ -131,6 +148,16 @@ impl NodeTable {
         } else {
             SimTime(u64::MAX)
         };
+        // Precompute the contention factor per resident count, covering
+        // loads up to 4× capacity (beyond that `composed` falls back to
+        // the curve). Each entry divides the same integers the curve
+        // would, so the table is bit-identical to calling it.
+        let cont_table: Vec<f64> = match model.contention {
+            ContentionCurve::Off => Vec::new(),
+            curve => (0..=model.capacity.saturating_mul(4))
+                .map(|r| curve.factor(r as f64 / model.capacity as f64))
+                .collect(),
+        };
         NodeTable {
             model,
             base_factor: Vec::new(),
@@ -140,6 +167,8 @@ impl NodeTable {
             generation: Vec::new(),
             alive_pos: Vec::new(),
             alive: Vec::new(),
+            live_words: Vec::new(),
+            cont_table,
             free: Vec::new(),
             next_epoch,
             peak_resident: 0,
@@ -212,6 +241,10 @@ impl NodeTable {
         };
         self.alive_pos[s] = self.alive.len() as u32;
         self.alive.push(s as u32);
+        if s >> 6 >= self.live_words.len() {
+            self.live_words.push(0);
+        }
+        self.live_words[s >> 6] |= 1u64 << (s & 63);
         NodeId::from_parts(s as u32, self.generation[s])
     }
 
@@ -229,6 +262,7 @@ impl NodeTable {
             self.alive_pos[last as usize] = pos as u32;
         }
         self.alive_pos[s] = NIL;
+        self.live_words[s >> 6] &= !(1u64 << (s & 63));
         self.free.push(s as u32);
     }
 
@@ -255,6 +289,16 @@ impl NodeTable {
         self.resident[s] = self.resident[s].saturating_sub(1);
     }
 
+    /// Batched [`NodeTable::depart`]: one call per expiry/recycle sweep
+    /// instead of one callback per reaped instance — a tight decrement
+    /// loop over the resident column (order-independent: decrements
+    /// commute, so sweeps stay bit-identical to per-instance departs).
+    pub fn depart_batch(&mut self, ids: &[NodeId]) {
+        for &id in ids {
+            self.depart(id);
+        }
+    }
+
     /// Instances currently resident on this node.
     pub fn resident(&self, id: NodeId) -> u32 {
         self.resident[self.index(id)]
@@ -271,8 +315,8 @@ impl NodeTable {
         self.alive.iter().map(|&s| self.base_factor[s as usize]).collect()
     }
 
-    /// Generation-tagged ids of the live pool, in `alive` order — the
-    /// order batched drift passes visit nodes in.
+    /// Generation-tagged ids of the live pool, in `alive` (spawn /
+    /// swap-remove) order — the order the placement lottery samples over.
     pub fn ids(&self) -> Vec<NodeId> {
         self.alive
             .iter()
@@ -289,16 +333,22 @@ impl NodeTable {
 
     /// Mean nominal factor (`base × drift`) over the live pool — the
     /// observability gauge of pool quality. Read-only: never advances
-    /// drift, never draws RNG. 0 for an empty pool.
+    /// drift, never draws RNG. 0 for an empty pool. Streams the columns
+    /// in ascending slot order via the occupancy bitmap (summation order
+    /// is fixed by the slot layout, not the churn history).
     pub fn mean_nominal_factor(&self) -> f64 {
         if self.alive.is_empty() {
             return 0.0;
         }
-        let sum: f64 = self
-            .alive
-            .iter()
-            .map(|&s| self.base_factor[s as usize] * self.drift[s as usize])
-            .sum();
+        let mut sum = 0.0;
+        for (w, &word) in self.live_words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let s = (w << 6) + bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                sum += self.base_factor[s] * self.drift[s];
+            }
+        }
         sum / self.alive.len() as f64
     }
 
@@ -311,12 +361,23 @@ impl NodeTable {
     /// The contention multiplier this node currently runs at.
     pub fn contention_multiplier(&self, id: NodeId) -> f64 {
         let s = self.index(id);
-        self.model.contention.factor(self.load(s))
+        self.contention_factor(s)
     }
 
     #[inline]
     fn load(&self, s: usize) -> f64 {
         self.resident[s] as f64 / self.model.capacity as f64
+    }
+
+    /// Contention factor for slot `s`: a table load for every count the
+    /// precomputed table covers, the curve itself past it (and for the
+    /// off curve, whose table is empty and whose factor is 1).
+    #[inline]
+    fn contention_factor(&self, s: usize) -> f64 {
+        match self.cont_table.get(self.resident[s] as usize) {
+            Some(&f) => f,
+            None => self.model.contention.factor(self.load(s)),
+        }
     }
 
     /// Advance the node's drift to `now` and return the current factor
@@ -340,10 +401,10 @@ impl NodeTable {
     fn composed(&self, s: usize) -> f64 {
         let raw = self.base_factor[s] * self.drift[s];
         match self.model.contention {
-            // Skip the load division entirely: the off path must cost (and
+            // Skip the lookup entirely: the off path must cost (and
             // compute) exactly what the pre-contention model did.
             ContentionCurve::Off => raw,
-            curve => raw * curve.factor(self.load(s)),
+            _ => raw * self.contention_factor(s),
         }
     }
 
@@ -369,9 +430,11 @@ impl NodeTable {
     /// constant per pass (one `exp` per epoch, not per lookup) for every
     /// boundary-aligned node; a node spawned mid-epoch gets its true
     /// (shorter) dt on its first pass, so the exact-transition
-    /// equivalence holds under churn too. Nodes are visited in `alive`
-    /// order, so the draw sequence is a pure function of the schedule —
-    /// bit-reproducible at any thread count.
+    /// equivalence holds under churn too. Each pass streams the columns
+    /// in **ascending slot order** through the occupancy bitmap — dense
+    /// sequential reads, and a draw sequence that is a pure function of
+    /// the schedule, bit-reproducible at any thread count. (Without
+    /// churn, slot order and spawn order coincide.)
     fn advance_epochs(&mut self, now: SimTime, rng: &mut Rng) {
         if self.next_epoch > now {
             return;
@@ -388,34 +451,43 @@ impl NodeTable {
         // Same dt arithmetic as `ms_since` so a boundary-aligned exact
         // lookup computes the identical f64 (the 1e-12 equivalence).
         let dt_hours = (epoch_us as f64 / 1_000.0) / 3_600_000.0;
-        let NodeTable { model, alive, drift, last_advance, .. } = self;
+        let NodeTable { model, live_words, drift, last_advance, .. } = self;
         while self.next_epoch <= now {
             let t = self.next_epoch;
             let prev_boundary = SimTime(t.0.saturating_sub(epoch_us));
             let decay = (-model.ou_theta * dt_hours).exp();
             let mix = (1.0 - decay * decay).sqrt();
-            for &s in alive.iter() {
-                let s = s as usize;
-                if last_advance[s] >= t {
-                    // Spawned at/after this catch-up boundary: no time
-                    // has elapsed for it, and drawing here would shift
-                    // the sequence for time the node never lived through
-                    // (exact mode draws nothing at dt == 0 either).
-                    continue;
+            for (w, &word) in live_words.iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let s = (w << 6) + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    if last_advance[s] >= t {
+                        // Spawned at/after this catch-up boundary: no time
+                        // has elapsed for it, and drawing here would shift
+                        // the sequence for time the node never lived
+                        // through (exact mode draws nothing at dt == 0
+                        // either).
+                        continue;
+                    }
+                    let (decay, mix) = if last_advance[s] <= prev_boundary {
+                        // The steady-state lane: this branch and the skip
+                        // above are all-but-never taken outside churn
+                        // windows, so the pass runs as a predictable
+                        // multiply-add stream over the drift column.
+                        (decay, mix)
+                    } else {
+                        // Spawned mid-epoch: exact dt for the first pass.
+                        let dt = t.ms_since(last_advance[s]) / 3_600_000.0;
+                        let d = (-model.ou_theta * dt).exp();
+                        (d, (1.0 - d * d).sqrt())
+                    };
+                    drift[s] = (1.0
+                        + (drift[s] - 1.0) * decay
+                        + model.ou_sigma * mix * rng.normal())
+                    .clamp(0.5, 1.5);
+                    last_advance[s] = t;
                 }
-                let (decay, mix) = if last_advance[s] <= prev_boundary {
-                    (decay, mix)
-                } else {
-                    // Spawned mid-epoch: exact dt for the first pass.
-                    let dt = t.ms_since(last_advance[s]) / 3_600_000.0;
-                    let d = (-model.ou_theta * dt).exp();
-                    (d, (1.0 - d * d).sqrt())
-                };
-                drift[s] = (1.0
-                    + (drift[s] - 1.0) * decay
-                    + model.ou_sigma * mix * rng.normal())
-                .clamp(0.5, 1.5);
-                last_advance[s] = t;
             }
             self.next_epoch = SimTime(t.0 + epoch_us);
             self.epochs_advanced += 1;
@@ -624,6 +696,72 @@ mod tests {
         let a = t.spawn(1.0, SimTime::ZERO);
         t.retire(a);
         let _ = t.base_factor(a);
+    }
+
+    #[test]
+    fn contention_table_matches_curve_past_its_cap() {
+        // Residents far beyond the 4×capacity table must fall back to the
+        // curve and agree with it bit-exactly (as must covered counts).
+        let curve = ContentionCurve::Power { strength: 0.5, exponent: 0.7 };
+        let model = NodeModel { ou_sigma: 0.0, contention: curve, capacity: 2, ..Default::default() };
+        let (mut t, id) = one_node(model, 1.0);
+        for r in 1..=12u32 {
+            t.occupy(id);
+            let expect = curve.factor(r as f64 / 2.0);
+            let got = t.contention_multiplier(id);
+            assert_eq!(got.to_bits(), expect.to_bits(), "residents={r}");
+        }
+    }
+
+    #[test]
+    fn batched_pass_streams_slots_in_ascending_order() {
+        // Retire a mid-table node and respawn it: the bitmap pass visits
+        // slots ascending, so the respawned slot keeps its position in
+        // the draw order. A reference table whose slots were spawned in
+        // that same ascending order must agree draw-for-draw.
+        let model = NodeModel {
+            ou_theta: 0.8,
+            ou_sigma: 0.05,
+            drift_epoch_ms: 60_000.0,
+            ..Default::default()
+        };
+        let mut churned = NodeTable::new(model.clone());
+        let ids: Vec<NodeId> =
+            (0..5).map(|i| churned.spawn(1.0 + i as f64 * 0.1, SimTime::ZERO)).collect();
+        churned.retire(ids[2]);
+        let re = churned.spawn(1.2, SimTime::ZERO);
+        assert_eq!(re.slot(), ids[2].slot(), "freed slot must be recycled");
+        let mut reference =
+            NodeTable::with_base_factors(model, &[1.0, 1.1, 1.2, 1.3, 1.4]);
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let _ = churned.factor(ids[0], SimTime::from_secs(60.0), &mut r1);
+        let _ = reference.factor(reference.ids()[0], SimTime::from_secs(60.0), &mut r2);
+        for s in 0..5 {
+            let a = churned.factor_nominal(NodeId::from_parts(s, churned.generation[s as usize]));
+            let b = reference.factor_nominal(reference.ids()[s as usize]);
+            assert_eq!(a.to_bits(), b.to_bits(), "slot {s} drew out of order");
+        }
+        assert_eq!(
+            churned.mean_nominal_factor().to_bits(),
+            reference.mean_nominal_factor().to_bits(),
+            "gauge summation order must be the slot order"
+        );
+    }
+
+    #[test]
+    fn depart_batch_matches_per_instance_departs() {
+        let model = NodeModel { capacity: 4, ..Default::default() };
+        let mut t = NodeTable::new(model);
+        let a = t.spawn(1.0, SimTime::ZERO);
+        let b = t.spawn(1.1, SimTime::ZERO);
+        for _ in 0..3 {
+            t.occupy(a);
+        }
+        t.occupy(b);
+        t.depart_batch(&[a, b, a]);
+        assert_eq!(t.resident(a), 1);
+        assert_eq!(t.resident(b), 0);
     }
 
     #[test]

@@ -84,6 +84,10 @@ pub struct FaasPlatform {
     rng_drift: Rng,
     /// Substream for instance offsets.
     rng_inst: Rng,
+    /// Scratch buffer for batched node departures (reaped instances'
+    /// nodes, settled in one `NodeTable::depart_batch` per sweep).
+    /// Cleared after every placement; capacity persists.
+    depart_scratch: Vec<super::node::NodeId>,
     pub cold_starts: u64,
     pub warm_hits: u64,
     pub expired: u64,
@@ -130,6 +134,7 @@ impl FaasPlatform {
             rng_place: root.fork(3000 + day as u64 + salt * 101),
             rng_drift: root.fork(4000 + day as u64 + salt * 101),
             rng_inst: root.fork(5000 + day as u64 + salt * 101),
+            depart_scratch: Vec::new(),
             cold_starts: 0,
             warm_hits: 0,
             expired: 0,
@@ -156,22 +161,29 @@ impl FaasPlatform {
             scheduler,
             rng_place,
             rng_inst,
+            depart_scratch,
             cold_starts,
             warm_hits,
             expired,
             recycled,
             ..
         } = self;
-        // Allocation-free: the scheduler walks only the expired prefix of
-        // each warm pool (§Perf — this sweep runs on every placement);
-        // every reclaimed instance departs its node so contended nodes
-        // speed back up.
-        *expired +=
-            scheduler.expire_idle_notify(now, cfg.idle_timeout_ms, |i| nodes.depart(i.node));
-
-        if let Some(id) =
-            scheduler.take_warm_notify(deploy, now, recycled, |i| nodes.depart(i.node))
-        {
+        // The scheduler walks only the expired prefix of each warm pool
+        // (§Perf — this sweep runs on every placement) and batches the
+        // reaped instances' nodes into the scratch buffer; one
+        // `depart_batch` then settles residency so contended nodes speed
+        // back up — a tight pass over the resident column instead of a
+        // node-table round-trip per reaped instance. Departs commute and
+        // nothing reads residency before the batch lands, so this is
+        // bit-identical to the per-instance callbacks it replaces.
+        debug_assert!(depart_scratch.is_empty(), "stale departure scratch");
+        *expired += scheduler.expire_idle_nodes(now, cfg.idle_timeout_ms, depart_scratch);
+        let warm = scheduler.take_warm_nodes(deploy, now, recycled, depart_scratch);
+        if !depart_scratch.is_empty() {
+            nodes.depart_batch(depart_scratch);
+            depart_scratch.clear();
+        }
+        if let Some(id) = warm {
             *warm_hits += 1;
             return Placement::Warm(id);
         }

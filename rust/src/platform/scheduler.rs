@@ -160,6 +160,20 @@ impl Scheduler {
         self.take_warm_notify(deploy, now, recycled, |_| {})
     }
 
+    /// Like [`Scheduler::take_warm`], but collects each recycled
+    /// instance's node id into a caller-owned scratch buffer, so the
+    /// platform settles residency with one `NodeTable::depart_batch`
+    /// after the sweep instead of a node-table round-trip per instance.
+    pub fn take_warm_nodes(
+        &mut self,
+        deploy: DeployId,
+        now: SimTime,
+        recycled: &mut u64,
+        nodes_out: &mut Vec<NodeId>,
+    ) -> Option<InstanceId> {
+        self.take_warm_notify(deploy, now, recycled, |i| nodes_out.push(i.node))
+    }
+
     /// Like [`Scheduler::take_warm`], but reports each recycled instance
     /// (while its slot data is still intact) so the caller can settle
     /// node-residency accounting — the platform departs the node table.
@@ -311,6 +325,18 @@ impl Scheduler {
         out: &mut Vec<InstanceId>,
     ) -> u64 {
         self.expire_idle_notify(now, timeout_ms, |i| out.push(i.id))
+    }
+
+    /// Like [`Scheduler::expire_idle`], but collects the expired
+    /// instances' node ids into a caller-owned scratch buffer — the
+    /// batched-departure form of [`Scheduler::expire_idle_notify`].
+    pub fn expire_idle_nodes(
+        &mut self,
+        now: SimTime,
+        timeout_ms: f64,
+        nodes_out: &mut Vec<NodeId>,
+    ) -> u64 {
+        self.expire_idle_notify(now, timeout_ms, |i| nodes_out.push(i.node))
     }
 
     /// Like [`Scheduler::expire_idle`], but reports each expired instance
@@ -656,5 +682,27 @@ mod tests {
         let n = s.expire_idle_notify(SimTime::from_ms(3.0), 1.5, |i| expired.push(i.id));
         assert_eq!(n, 2);
         assert_eq!(expired, vec![ids[0], ids[1]]);
+    }
+
+    #[test]
+    fn batched_node_sweeps_collect_the_same_departures() {
+        // The *_nodes variants must report exactly the nodes the notify
+        // callbacks would have departed, in the same sweep order.
+        let (mut s, _) = sched_with_idle(3); // nodes 0,1,2; idle at 0,1,2 ms
+        let mut nodes = Vec::new();
+        let n = s.expire_idle_nodes(SimTime::from_ms(3.0), 1.5, &mut nodes);
+        assert_eq!(n, 2);
+        assert_eq!(nodes, vec![NodeId(0), NodeId(1)]);
+
+        let mut s = Scheduler::new();
+        let id = s.create_instance(NodeId(7), SOLO, 1.0, 100.0, SimTime::ZERO);
+        s.mark_running(id);
+        s.release(id, SimTime::from_ms(1.0));
+        let mut rec = 0;
+        let mut nodes = Vec::new();
+        let got = s.take_warm_nodes(SOLO, SimTime::from_ms(200.0), &mut rec, &mut nodes);
+        assert_eq!(got, None);
+        assert_eq!(rec, 1);
+        assert_eq!(nodes, vec![NodeId(7)]);
     }
 }

@@ -128,6 +128,28 @@ pub fn route_records(
     Ok(out)
 }
 
+/// Second-level admission pass for intra-region sharding: split one
+/// region's (time-sorted) record stream into `n_shards` independent
+/// sub-simulations. Functions are assigned *whole* — every record of a
+/// function follows it to the same shard — by the rank of the function id
+/// among the region's distinct ids, modulo `n_shards`. That makes the
+/// assignment deterministic, independent of record order and thread
+/// count, and balanced whenever the per-function volumes are. Record
+/// order is preserved within each shard. Shards beyond the number of
+/// distinct functions come back empty.
+pub fn assign_shards(records: &[TraceRecord], n_shards: usize) -> Vec<Vec<TraceRecord>> {
+    assert!(n_shards > 0, "sharding needs at least one shard");
+    let mut fn_ids: Vec<u32> = records.iter().map(|r| r.function.0).collect();
+    fn_ids.sort_unstable();
+    fn_ids.dedup();
+    let mut out: Vec<Vec<TraceRecord>> = vec![Vec::new(); n_shards];
+    for rec in records {
+        let rank = fn_ids.binary_search(&rec.function.0).expect("id collected above");
+        out[rank % n_shards].push(*rec);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +213,48 @@ mod tests {
         let records = vec![rec(0.0, 5)];
         let err = route_records(&records, 2, &mut TraceRegion).unwrap_err();
         assert!(err.contains("region"), "unhelpful: {err}");
+    }
+
+    fn rec_fn(t_ms: f64, function: u32) -> TraceRecord {
+        TraceRecord { function: FunctionId(function), ..rec(t_ms, 0) }
+    }
+
+    #[test]
+    fn one_shard_is_the_identity() {
+        let records = vec![rec_fn(0.0, 3), rec_fn(5.0, 1), rec_fn(9.0, 3)];
+        let split = assign_shards(&records, 1);
+        assert_eq!(split.len(), 1);
+        assert_eq!(split[0].len(), 3);
+        assert_eq!(split[0][1].t, SimTime::from_ms(5.0));
+        assert_eq!(split[0][1].function, FunctionId(1));
+    }
+
+    #[test]
+    fn shards_assign_functions_whole_and_preserve_order() {
+        // Distinct ids {0, 2, 5, 7} rank to 0..4, so with two shards the
+        // even ranks {0, 5} and odd ranks {2, 7} split — whatever order
+        // the records interleave in.
+        let records: Vec<TraceRecord> = (0..12)
+            .map(|i| rec_fn(i as f64, [0, 2, 5, 7][i % 4]))
+            .collect();
+        let split = assign_shards(&records, 2);
+        assert_eq!(split[0].len() + split[1].len(), records.len());
+        assert!(split[0].iter().all(|r| matches!(r.function.0, 0 | 5)));
+        assert!(split[1].iter().all(|r| matches!(r.function.0, 2 | 7)));
+        for shard in &split {
+            assert!(
+                shard.windows(2).all(|w| w[0].t <= w[1].t),
+                "shard reordered its records: {shard:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn spare_shards_come_back_empty() {
+        let records = vec![rec_fn(0.0, 4), rec_fn(1.0, 9)];
+        let split = assign_shards(&records, 4);
+        assert_eq!(split[0].len(), 1);
+        assert_eq!(split[1].len(), 1);
+        assert!(split[2].is_empty() && split[3].is_empty());
     }
 }

@@ -164,6 +164,22 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock. None when drained.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.pop_bounded(None)
+    }
+
+    /// Pop the next event only if it is scheduled at or before `horizon`.
+    /// A later event stays in the queue (clock and counters untouched), so
+    /// a horizon-bounded drive loop pays one bucket scan per event instead
+    /// of the peek-then-pop double scan — and after a `None` the activated
+    /// drain view makes the next [`EventQueue::peek_time`] O(1).
+    pub fn pop_before(&mut self, horizon: SimTime) -> Option<(SimTime, E)> {
+        self.pop_bounded(Some(horizon))
+    }
+
+    /// Shared pop core: locate the (time, seq) minimum across the ring's
+    /// drain view and the far heap, then remove it — unless a `horizon`
+    /// bound says it is too late, in which case the queue is left intact.
+    fn pop_bounded(&mut self, horizon: Option<SimTime>) -> Option<(SimTime, E)> {
         if self.active.is_empty() {
             self.active_bucket = NO_BUCKET;
             if self.ring_len > 0 {
@@ -178,6 +194,16 @@ impl<E> EventQueue<E> {
             // bucket lies in a strictly later bucket window.
             (Some(r), Some(Reverse(f))) => (f.time, f.seq) < (r.time, r.seq),
         };
+        if let Some(h) = horizon {
+            let next_time = if take_far {
+                self.far.peek().map(|Reverse(e)| e.time)
+            } else {
+                self.active.last().map(|e| e.time)
+            };
+            if next_time.expect("chosen side is non-empty") > h {
+                return None;
+            }
+        }
         let entry = if take_far {
             let Reverse(e) = self.far.pop().expect("peeked far entry exists");
             e
@@ -448,6 +474,28 @@ mod tests {
             last = pt;
         }
         assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn pop_before_holds_late_events_in_place() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_ms(10.0), "a");
+        q.schedule(SimTime::from_ms(30.0), "b");
+        q.schedule(SimTime::from_ms(2.0 * WINDOW_MS), "far");
+        let h = SimTime::from_ms(20.0);
+        assert_eq!(q.pop_before(h), Some((SimTime::from_ms(10.0), "a")));
+        // The 30 ms event is past the horizon: left queued, clock held.
+        assert_eq!(q.pop_before(h), None);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.now(), SimTime::from_ms(10.0));
+        assert_eq!(q.peek_time(), Some(SimTime::from_ms(30.0)));
+        // The horizon is inclusive, and counters only count real pops.
+        assert_eq!(q.pop_before(SimTime::from_ms(30.0)), Some((SimTime::from_ms(30.0), "b")));
+        // The far-heap tier respects the bound too.
+        assert_eq!(q.pop_before(SimTime::from_ms(30.0)), None);
+        assert_eq!(q.counters(), (3, 2));
+        assert_eq!(q.pop(), Some((SimTime::from_ms(2.0 * WINDOW_MS), "far")));
+        assert!(q.is_empty());
     }
 
     #[test]

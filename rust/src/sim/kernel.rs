@@ -117,10 +117,11 @@ impl<W: World> Simulation<W> {
 
     /// Drive the loop until `stop` triggers or the queue drains.
     ///
-    /// §Perf: without a horizon the loop pops directly instead of
-    /// peek-then-pop — peeking the two-tier queue costs a bucket scan,
-    /// and every experiment run is horizonless (workload drivers stop
-    /// injecting events past their own horizon).
+    /// §Perf: both paths cost one bucket scan per event. Horizonless runs
+    /// (every experiment run — workload drivers stop injecting events past
+    /// their own horizon) pop directly; horizon-bounded runs use
+    /// [`EventQueue::pop_before`], which checks the bound during the pop
+    /// itself instead of a separate peek-then-pop double scan.
     pub fn run_until(&mut self, stop: StopCondition) -> Result<StopReason> {
         let mut handled: u64 = 0;
         loop {
@@ -129,16 +130,16 @@ impl<W: World> Simulation<W> {
                     return Ok(StopReason::EventLimit);
                 }
             }
-            if let Some(h) = stop.horizon {
-                let Some(next_at) = self.events.peek_time() else {
-                    return Ok(StopReason::Drained);
-                };
-                if next_at > h {
-                    return Ok(StopReason::Horizon);
-                }
-            }
-            let Some((now, event)) = self.events.pop() else {
-                return Ok(StopReason::Drained);
+            let popped = match stop.horizon {
+                None => self.events.pop(),
+                Some(h) => self.events.pop_before(h),
+            };
+            let Some((now, event)) = popped else {
+                return Ok(if self.events.is_empty() {
+                    StopReason::Drained
+                } else {
+                    StopReason::Horizon
+                });
             };
             self.world.handle(now, event, &mut self.events)?;
             self.world.observe(now);

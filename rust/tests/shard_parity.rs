@@ -1,0 +1,147 @@
+//! Intra-region sharding safety net.
+//!
+//! The sharding determinism contract (`experiment::cluster`):
+//!
+//! 1. `shards = 1` is the unsharded engine — not "close to", the same
+//!    code path with the same seeds. Its physics versus the pre-sharding
+//!    engine are pinned at fingerprint level by
+//!    `tests/golden_fingerprints.txt` (the cluster fingerprint in
+//!    `hotpath_equivalence.rs` runs an unsharded paper-day config); here
+//!    we assert the run is bit-identical at any thread count, down to
+//!    individual records.
+//! 2. For any fixed shard count, results are bit-identical at any
+//!    `--threads`.
+//! 3. Shard count *does* change placement: each sub-pool draws its own
+//!    node lottery, so the billed stream diverges from the unsharded
+//!    replay by design — only conservation (every arrival completes) is
+//!    shared. Asserted so nobody mistakes the divergence for a bug.
+//!
+//! Plus an `#[ignore]`d fleet-scale smoke: a 1M-node region, month-long
+//! trace, 8 shards (`cargo test --test shard_parity -- --ignored`).
+
+use minos::experiment::{cluster::run_cluster, ClusterOutcome, ExperimentConfig};
+use minos::platform::ClusterConfig;
+use minos::testkit::scenarios;
+use minos::trace::{FunctionRegistry, SynthConfig, Trace};
+
+fn demo_trace(n_regions: usize, seed: u64) -> Trace {
+    SynthConfig {
+        n_functions: 5,
+        n_regions,
+        hours: 0.05,
+        total_rate_rps: 4.0,
+        region_spill: 0.2,
+        seed,
+        ..Default::default()
+    }
+    .generate()
+}
+
+/// Bitwise per-record equality of two cluster outcomes (requires the
+/// full metrics sink).
+fn assert_bit_identical(a: &ClusterOutcome, b: &ClusterOutcome, what: &str) {
+    assert_eq!(a.total_completed(), b.total_completed(), "{what}: completed");
+    assert_eq!(a.total_terminations(), b.total_terminations(), "{what}: terminations");
+    assert_eq!(
+        a.total_cost_usd().to_bits(),
+        b.total_cost_usd().to_bits(),
+        "{what}: cost bits"
+    );
+    assert_eq!(a.total_events_handled(), b.total_events_handled(), "{what}: events");
+    for (ra, rb) in a.per_region.iter().zip(&b.per_region) {
+        assert_eq!(ra.cold_starts, rb.cold_starts, "{what}: {} cold", ra.region_name);
+        assert_eq!(ra.warm_hits, rb.warm_hits, "{what}: {} warm", ra.region_name);
+        assert_eq!(ra.expired, rb.expired, "{what}: {} expired", ra.region_name);
+        for (fa, fb) in ra.per_function.iter().zip(&rb.per_function) {
+            assert_eq!(fa.function, fb.function, "{what}: slot order");
+            assert_eq!(fa.result.records().len(), fb.result.records().len());
+            for (x, y) in fa.result.records().iter().zip(fb.result.records()) {
+                assert_eq!(x.completed_at, y.completed_at, "{what}: record time");
+                assert_eq!(x.inv_id, y.inv_id, "{what}: record id");
+            }
+        }
+    }
+}
+
+#[test]
+fn shards_1_is_the_unsharded_engine_at_any_thread_count() {
+    let trace = demo_trace(1, 301);
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(1);
+    let base = ExperimentConfig::smoke(0, 111); // shards defaults to 1
+    let mut explicit = base.clone();
+    explicit.shards = 1;
+    let a = run_cluster(&base, &registry, &trace, &cluster, 1).unwrap();
+    let b = run_cluster(&explicit, &registry, &trace, &cluster, 8).unwrap();
+    assert_bit_identical(&a, &b, "single-region shards=1");
+    // The capture keeps the unsharded track label (no /s0 suffix).
+    let c = {
+        let mut cfg = explicit.clone();
+        cfg.obs = minos::obs::ObsConfig {
+            level: minos::obs::Level::Summary,
+            ring_cap: 512,
+            gauge_every: None,
+        };
+        run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap()
+    };
+    assert_eq!(c.obs_tracks().len(), 1);
+    assert!(!c.obs_tracks()[0].track.contains("/s"), "unsharded run grew a shard suffix");
+}
+
+#[test]
+fn fixed_shard_count_is_thread_invariant() {
+    let trace = demo_trace(2, 302);
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(2);
+    let mut cfg = ExperimentConfig::smoke(0, 112);
+    cfg.shards = 4;
+    let a = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+    let b = run_cluster(&cfg, &registry, &trace, &cluster, 8).unwrap();
+    assert_eq!(a.total_completed(), trace.len() as u64, "sharded replay dropped arrivals");
+    assert_bit_identical(&a, &b, "shards=4 threads 1 vs 8");
+}
+
+#[test]
+fn shard_count_changes_placement_by_design() {
+    let trace = demo_trace(1, 303);
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(1);
+    let mut cfg = ExperimentConfig::smoke(0, 113);
+    let one = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+    cfg.shards = 2;
+    let two = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+    // Conservation is invariant; the placement stream is not.
+    assert_eq!(one.total_completed(), trace.len() as u64);
+    assert_eq!(two.total_completed(), trace.len() as u64);
+    assert_ne!(
+        one.total_cost_usd().to_bits(),
+        two.total_cost_usd().to_bits(),
+        "2-shard sub-pools reproduced the unsharded placement — the \
+         decorrelation is supposed to diverge"
+    );
+}
+
+/// Fleet-scale smoke: a month of traffic into one 1M-node contended
+/// region split 8 ways. Run explicitly with
+/// `cargo test --release --test shard_parity -- --ignored`.
+#[test]
+#[ignore = "fleet-scale smoke: minutes of runtime, run with --ignored"]
+fn million_node_month_long_sharded_smoke() {
+    let synth = SynthConfig {
+        n_functions: 16,
+        n_regions: 1,
+        hours: 720.0, // one month
+        total_rate_rps: 0.5,
+        seed: 909,
+        ..Default::default()
+    };
+    let trace = synth.generate();
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = scenarios::contended_cluster(1, 1_000_000);
+    let mut cfg = ExperimentConfig::paper_day(0);
+    cfg.metrics = minos::experiment::MetricsMode::Streaming;
+    cfg.shards = 8;
+    let o = run_cluster(&cfg, &registry, &trace, &cluster, 0).unwrap();
+    assert_eq!(o.total_completed(), trace.len() as u64, "month-long smoke dropped work");
+    assert!(o.total_events_handled() > trace.len() as u64);
+}

@@ -1,23 +1,52 @@
 #!/usr/bin/env bash
-# Perf-trajectory gate: run the two hot-path benches and write their
-# machine-readable results to the repo root.
+# Perf-trajectory gate: run the hot-path benches and write their
+# machine-readable results to the repo root — or, with --check, compare a
+# fresh run against the committed numbers and fail on regression.
 #
-# Usage: scripts/bench.sh
+# Usage: scripts/bench.sh [--check]
 #
-# Produces:
+# Produces (default mode):
 #   BENCH_hotpath.json  — microbench medians (ns) + ops/s, incl. the
 #                         end-to-end paired-paper-day request rate, bare
 #                         and with the flight recorder on (probe overhead)
 #   BENCH_cluster.json  — 4-region ≥100k-invocation replay events/s per
-#                         thread count, plus the bit-identity fingerprint
+#                         thread count, the bit-identity fingerprint, and
+#                         a fleet_scale section (contention_scale bench:
+#                         drift-pass nodes/s up to 1M nodes + sharded
+#                         1M-node replay events/s at 1 / 4 / 8 shards)
 #
-# Compare the events/s and requests/s numbers against the previous
-# committed BENCH_*.json before overwriting them: the perf acceptance
-# bar for hot-path PRs is ≥1.5x on both end-to-end rates with an
-# unchanged cluster fingerprint (cost_bits_hex / completed /
-# terminations must not move).
+# --check mode (the regression gate wired into `scripts/check.sh --bench`)
+# runs the same benches into a temp dir and compares every named rate
+# series (ops_per_s / events_per_s / nodes_per_s) against the committed
+# BENCH_*.json: a series regressing by more than 10%, a vanished series,
+# or any change to the cluster replay fingerprint (completed /
+# terminations / cost_bits_hex) fails the gate. The committed files are
+# left untouched either way until a clean default-mode run overwrites
+# them.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+CHECK=0
+for arg in "$@"; do
+    case "$arg" in
+        --check) CHECK=1 ;;
+        *) echo "unknown option: $arg (known: --check)" >&2; exit 2 ;;
+    esac
+done
+
+OUT_DIR="$(pwd)"
+if [ "$CHECK" -eq 1 ]; then
+    for f in BENCH_hotpath.json BENCH_cluster.json; do
+        [ -s "$f" ] || {
+            echo "error: --check needs a committed $f baseline; run scripts/bench.sh first" >&2
+            exit 2
+        }
+    done
+    command -v python3 >/dev/null 2>&1 \
+        || { echo "error: --check needs python3 for the comparison" >&2; exit 2; }
+    OUT_DIR="$(mktemp -d)"
+    trap 'rm -rf "$OUT_DIR"' EXIT
+fi
 
 # Benches write their JSON to a temp path that is moved into place only on
 # success: a failing `cargo bench` must exit non-zero here and leave any
@@ -39,9 +68,104 @@ run_bench() { # <bench-name> <output-json>
     mv "$tmp" "$out"
 }
 
-run_bench hotpath "$(pwd)/BENCH_hotpath.json"
+run_bench hotpath "$OUT_DIR/BENCH_hotpath.json"
 echo
-run_bench cluster_replay "$(pwd)/BENCH_cluster.json"
+run_bench cluster_replay "$OUT_DIR/BENCH_cluster.json"
+echo
+run_bench contention_scale "$OUT_DIR/BENCH_fleet.json"
+
+# Fold the fleet-scale numbers into BENCH_cluster.json so the whole
+# cluster perf trajectory lives in one committed file.
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$OUT_DIR/BENCH_cluster.json" "$OUT_DIR/BENCH_fleet.json" <<'PY'
+import json, sys
+cluster_path, fleet_path = sys.argv[1], sys.argv[2]
+with open(cluster_path) as f:
+    cluster = json.load(f)
+with open(fleet_path) as f:
+    cluster["fleet_scale"] = json.load(f)
+with open(cluster_path, "w") as f:
+    json.dump(cluster, f, indent=2)
+    f.write("\n")
+PY
+    rm -f "$OUT_DIR/BENCH_fleet.json"
+else
+    echo "warning: python3 unavailable; fleet-scale numbers left in BENCH_fleet.json" >&2
+fi
+
+if [ "$CHECK" -eq 0 ]; then
+    echo
+    echo "wrote BENCH_hotpath.json and BENCH_cluster.json"
+    exit 0
+fi
 
 echo
-echo "wrote BENCH_hotpath.json and BENCH_cluster.json"
+echo "== bench regression gate (fresh vs committed, 10% tolerance) =="
+python3 - "$(pwd)" "$OUT_DIR" <<'PY'
+import json, sys
+
+repo, fresh_dir = sys.argv[1], sys.argv[2]
+RATE_KEYS = ("ops_per_s", "events_per_s", "nodes_per_s")
+
+
+def rate_series(doc):
+    """Yield (name, rate-key, value) for every named measurement."""
+    if isinstance(doc, dict):
+        name = doc.get("name")
+        if isinstance(name, str):
+            for key in RATE_KEYS:
+                if isinstance(doc.get(key), (int, float)):
+                    yield name, key, float(doc[key])
+        for v in doc.values():
+            yield from rate_series(v)
+    elif isinstance(doc, list):
+        for v in doc:
+            yield from rate_series(v)
+
+
+def fingerprints(doc, path=""):
+    """Yield (json-path, fingerprint-object) pairs."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            if k == "fingerprint":
+                yield path + k, v
+            else:
+                yield from fingerprints(v, f"{path}{k}/")
+    elif isinstance(doc, list):
+        for v in doc:
+            yield from fingerprints(v, path)
+
+
+failures = []
+for fname in ("BENCH_hotpath.json", "BENCH_cluster.json"):
+    with open(f"{repo}/{fname}") as f:
+        committed = json.load(f)
+    with open(f"{fresh_dir}/{fname}") as f:
+        fresh = json.load(f)
+    fresh_rates = {(n, k): v for n, k, v in rate_series(fresh)}
+    for name, key, old in rate_series(committed):
+        new = fresh_rates.get((name, key))
+        if new is None:
+            failures.append(f"{fname}: series '{name}' ({key}) vanished")
+        elif old > 0 and new < 0.9 * old:
+            drop = 100.0 * (1.0 - new / old)
+            failures.append(
+                f"{fname}: '{name}' {key} regressed {old:.0f} -> {new:.0f} "
+                f"({drop:.1f}% drop)"
+            )
+    fresh_fps = dict(fingerprints(fresh))
+    for where, fp in fingerprints(committed):
+        if fresh_fps.get(where) != fp:
+            failures.append(
+                f"{fname}: replay fingerprint at {where} changed: "
+                f"{fp} -> {fresh_fps.get(where)}"
+            )
+
+if failures:
+    print("bench regression gate FAILED:")
+    for msg in failures:
+        print(f"  - {msg}")
+    sys.exit(1)
+print("bench regression gate passed: all rate series within 10% of the")
+print("committed numbers, replay fingerprint unchanged")
+PY

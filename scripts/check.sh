@@ -3,8 +3,10 @@
 #
 # Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs]
 #   --fast       skip the release build and the bench compile (debug tests only)
-#   --bench      additionally run scripts/bench.sh (writes BENCH_*.json at the
-#                repo root — the hot-path perf trajectory)
+#   --bench      additionally run the bench gate: scripts/bench.sh --check
+#                (fails on >10% rate regression or a fingerprint change vs
+#                the committed BENCH_*.json) when baselines exist, else
+#                scripts/bench.sh to write them
 #   --policies   additionally smoke-run a short replay under every built-in
 #                selection policy and assert a non-empty report
 #   --contention additionally smoke the contention model: the off path must
@@ -179,8 +181,13 @@ PY
 fi
 
 if [ "$BENCH" -eq 1 ]; then
-    echo "== scripts/bench.sh =="
-    scripts/bench.sh
+    if [ -s BENCH_hotpath.json ] && [ -s BENCH_cluster.json ]; then
+        echo "== scripts/bench.sh --check (regression gate vs committed numbers) =="
+        scripts/bench.sh --check
+    else
+        echo "== scripts/bench.sh (no committed baselines yet; writing them) =="
+        scripts/bench.sh
+    fi
 fi
 
 if [ ! -f rust/tests/golden_fingerprints.txt ]; then
