@@ -1,0 +1,140 @@
+//! Fault-plane throughput: a churned 50k-node region replay.
+//!
+//! The robustness plane (node churn off a seeded Weibull plan, spawn and
+//! in-flight fault injection, the unified retry gate) rides the same hot
+//! loop as the plain replay, so its overhead must stay in the noise and
+//! its physics must stay bit-identical at any thread count. This bench
+//! measures events/second of a ≥25k-record replay against one 50k-node
+//! region under aggressive churn, at 1 and max threads, and asserts the
+//! failure ledger is identical across thread counts.
+//!
+//! Run: `cargo bench --bench fault_churn [-- --json BENCH_faults.json]`
+//!
+//! `scripts/bench.sh` folds the JSON into `BENCH_cluster.json` (key
+//! `fault_churn`) so the `--check` regression gate watches the churned
+//! events/s series alongside the fault-free ones.
+
+use minos::experiment::{cluster::run_cluster, config::ExperimentConfig, MetricsMode};
+use minos::fault::FaultSpec;
+use minos::platform::ClusterConfig;
+use minos::testkit::bench::{json_output_path, throughput, time_median};
+use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::json::Json;
+use minos::util::parallel;
+
+fn main() {
+    println!("== fault-churn benchmarks ==\n");
+
+    const N_NODES: usize = 50_000;
+    let synth = SynthConfig {
+        n_functions: 12,
+        n_regions: 1,
+        hours: 0.25,
+        total_rate_rps: 30.0,
+        seed: 8484,
+        ..Default::default()
+    };
+    let trace = synth.generate();
+    assert!(
+        trace.len() >= 25_000,
+        "benchmark needs a ≥25k-invocation trace, got {}",
+        trace.len()
+    );
+
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(1).with_region_overrides(|r| {
+        r.platform.n_nodes = N_NODES;
+        r.platform.max_instances = 2 * N_NODES;
+    });
+    let mut cfg = ExperimentConfig::paper_day(0);
+    cfg.metrics = MetricsMode::Streaming;
+    // Aggressive churn: most of the pool dies inside the 15-minute trace,
+    // a third of the replacements fail, and attempts fault mid-flight.
+    cfg.fault.spec = FaultSpec::Weibull { shape: 1.0, scale_s: 600.0, warmup_s: 10.0 };
+    cfg.fault.spawn_fail_p = 0.3;
+    cfg.fault.inflight_p = 0.02;
+    cfg.retry = cfg.retry.parse("budget:5,backoff:10,200").unwrap();
+
+    println!(
+        "trace: {} invocations, {} functions; region: {N_NODES} nodes, {}\n",
+        trace.len(),
+        trace.n_functions(),
+        cfg.fault.spec
+    );
+
+    let max_threads = parallel::available_threads();
+    let mut thread_counts = vec![1usize, max_threads];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    // (completed, failed, shed, node_faults, cost bits) — must not move
+    // with the thread count.
+    let mut reference: Option<(u64, u64, u64, u64, u64)> = None;
+    let mut json_results: Vec<Json> = Vec::new();
+    for &threads in &thread_counts {
+        let mut events = 0u64;
+        let mut ledger = (0u64, 0u64, 0u64, 0u64, 0u64);
+        let t = time_median(
+            &format!("churned replay: 50k nodes, --threads {threads}"),
+            3,
+            || {
+                let o = run_cluster(&cfg, &registry, &trace, &cluster, threads).unwrap();
+                events = o.total_events_handled();
+                let r = &o.per_region[0];
+                ledger = (
+                    o.total_completed(),
+                    r.failed(),
+                    r.shed(),
+                    r.node_faults,
+                    o.total_cost_usd().to_bits(),
+                );
+                events
+            },
+        );
+        match &reference {
+            None => reference = Some(ledger),
+            Some(want) => assert_eq!(
+                &ledger, want,
+                "--threads {threads} changed the churned replay outcome"
+            ),
+        }
+        println!("{}  ({:.0}k events/s)", t.report(), throughput(&t, events) / 1e3);
+        json_results.push(Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("threads", Json::num(threads as f64)),
+            ("median_ms", Json::num(t.median_ms)),
+            ("median_ns", Json::num(t.median_ms * 1e6)),
+            ("events", Json::num(events as f64)),
+            ("events_per_s", Json::num(throughput(&t, events))),
+        ]));
+    }
+    let (completed, failed, shed, node_faults, cost_bits) =
+        reference.expect("at least one measurement");
+    assert!(node_faults > 0, "a 600 s scale over 15 min must churn nodes");
+    println!(
+        "\nledger (thread-invariant): {completed} completed, {failed} failed, \
+         {shed} shed, {node_faults} node faults"
+    );
+
+    if let Some(path) = json_output_path() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("fault_churn")),
+            ("trace_invocations", Json::num(trace.len() as f64)),
+            ("nodes", Json::num(N_NODES as f64)),
+            (
+                "fingerprint",
+                Json::obj(vec![
+                    ("completed", Json::num(completed as f64)),
+                    ("failed", Json::num(failed as f64)),
+                    ("shed", Json::num(shed as f64)),
+                    ("node_faults", Json::num(node_faults as f64)),
+                    ("cost_bits_hex", Json::str(&format!("{cost_bits:016x}"))),
+                ]),
+            ),
+            ("results", Json::arr(json_results)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("machine-readable results written to {path}");
+    }
+}

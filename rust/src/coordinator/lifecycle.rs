@@ -52,6 +52,23 @@ pub fn decide_cold_start(
     draw: f64,
     bench_ms: impl FnOnce() -> f64,
 ) -> ColdStartDecision {
+    decide_cold_start_doomed(cfg, policy, inv, perf_factor, draw, false, bench_ms)
+}
+
+/// [`decide_cold_start`] with fault awareness: when `doomed` is set (the
+/// fault plane has already decided this attempt will crash mid-flight),
+/// the gate still runs and bills the benchmark, but the sample is *not*
+/// fed to the policy collector — a crashed attempt never reports back, so
+/// an online threshold must not learn from it.
+pub fn decide_cold_start_doomed(
+    cfg: &MinosConfig,
+    policy: &mut dyn SelectionPolicy,
+    inv: &Invocation,
+    perf_factor: f64,
+    draw: f64,
+    doomed: bool,
+    bench_ms: impl FnOnce() -> f64,
+) -> ColdStartDecision {
     if !policy.benchmarks() {
         return ColdStartDecision::Run { forced: false, bench_ms: None };
     }
@@ -61,7 +78,9 @@ pub fn decide_cold_start(
         return ColdStartDecision::Run { forced: true, bench_ms: None };
     }
     let bench = bench_ms();
-    policy.observe(BenchReport { score_ms: bench, warm: false });
+    if !doomed {
+        policy.observe(BenchReport { score_ms: bench, warm: false });
+    }
     let ctx = JudgeCtx { perf_factor, draw, retries: inv.retries };
     match policy.judge(bench, &ctx) {
         Verdict::Keep => ColdStartDecision::Run { forced: false, bench_ms: Some(bench) },
@@ -146,6 +165,36 @@ mod tests {
         assert!(matches!(d, ColdStartDecision::Run { forced: false, .. }));
         let d = decide_cold_start(&cfg(), &mut p, &inv(0), 0.9, 0.5, || 10.0);
         assert!(matches!(d, ColdStartDecision::TerminateAndRequeue { .. }));
+    }
+
+    #[test]
+    fn doomed_attempt_never_reaches_observe() {
+        // Counts observe() calls — stands in for the online collector.
+        #[derive(Debug)]
+        struct Counting {
+            observed: u32,
+        }
+        impl SelectionPolicy for Counting {
+            fn judge(&mut self, _score_ms: f64, _ctx: &JudgeCtx) -> Verdict {
+                Verdict::Keep
+            }
+            fn observe(&mut self, _report: BenchReport) {
+                self.observed += 1;
+            }
+            fn published_threshold(&self) -> f64 {
+                f64::INFINITY
+            }
+        }
+
+        // A doomed (fault-crashing) attempt is still judged and billed, but
+        // its benchmark sample must never enter the policy collector.
+        let mut p = Counting { observed: 0 };
+        let d = decide_cold_start_doomed(&cfg(), &mut p, &inv(0), 1.0, 0.5, true, || 350.0);
+        assert!(matches!(d, ColdStartDecision::Run { forced: false, .. }));
+        assert_eq!(p.observed, 0, "doomed sample must be suppressed");
+        // The same attempt, not doomed, does feed the collector.
+        let _ = decide_cold_start_doomed(&cfg(), &mut p, &inv(0), 1.0, 0.5, false, || 350.0);
+        assert_eq!(p.observed, 1);
     }
 
     #[test]

@@ -1,12 +1,17 @@
 //! The invocation queue (paper §II): users put invocations into a queue;
 //! terminated instances re-queue the invocation that triggered them before
-//! crashing, so no request is ever lost.
+//! crashing, so no request is ever lost *silently* — with bounded
+//! admission or a retry budget configured, a request that leaves the
+//! system does so as a counted `failed` or `shed`, never by vanishing.
 //!
 //! Conservation is a first-class invariant here — the property tests assert
-//! `submitted == completed + in_queue + in_flight` at every step.
+//! `submitted == completed + failed + shed + in_queue + in_flight` at
+//! every step (`failed` and `shed` are 0 in the default unbounded
+//! configuration, reducing to the historical invariant).
 
 use std::collections::VecDeque;
 
+use crate::fault::{AdmissionConfig, ShedPolicy};
 use crate::sim::SimTime;
 
 /// One user request travelling through the system.
@@ -28,15 +33,36 @@ pub struct Invocation {
     pub payload_scale: f64,
 }
 
-/// FIFO invocation queue with conservation counters.
+/// Outcome of one bounded-admission submit: the new invocation (queued
+/// unless `shed_new`), plus any previously queued invocation evicted by a
+/// drop-head / drop-tail discipline. Every shed is already counted; the
+/// caller's job is only to probe/record the casualties.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Admission {
+    pub inv: Invocation,
+    /// The new arrival itself was shed (`ShedPolicy::Reject` at capacity).
+    pub shed_new: bool,
+    /// Queued invocation evicted to admit the arrival (drop-head/tail).
+    pub evicted: Option<Invocation>,
+}
+
+/// FIFO invocation queue with conservation counters and (optionally)
+/// bounded admission.
 #[derive(Debug, Default)]
 pub struct InvocationQueue {
     q: VecDeque<Invocation>,
     next_id: u64,
+    admission: AdmissionConfig,
     pub submitted: u64,
     pub requeued: u64,
     pub completed: u64,
     pub in_flight: u64,
+    /// Terminal failures (retry budget / deadline) of in-flight work.
+    pub failed: u64,
+    /// Arrivals dropped by bounded admission.
+    pub shed: u64,
+    /// High-water mark of the queued depth (never exceeds the cap).
+    pub peak_depth: u64,
 }
 
 impl InvocationQueue {
@@ -44,13 +70,20 @@ impl InvocationQueue {
         Self::default()
     }
 
+    /// A queue with a bounded-admission discipline (`new()` is unbounded).
+    pub fn with_admission(admission: AdmissionConfig) -> Self {
+        InvocationQueue { admission, ..Self::default() }
+    }
+
     /// Submit a brand-new invocation from a virtual user.
-    pub fn submit(&mut self, vu: u32, now: SimTime) -> Invocation {
+    pub fn submit(&mut self, vu: u32, now: SimTime) -> Admission {
         self.submit_scaled(vu, 1.0, now)
     }
 
     /// Submit with an explicit payload scale (trace-replay arrivals).
-    pub fn submit_scaled(&mut self, vu: u32, payload_scale: f64, now: SimTime) -> Invocation {
+    /// At capacity the shed discipline decides who pays: the arrival
+    /// (reject) or a queued request (drop-head / drop-tail).
+    pub fn submit_scaled(&mut self, vu: u32, payload_scale: f64, now: SimTime) -> Admission {
         debug_assert!(payload_scale > 0.0, "payload scale must be positive");
         self.next_id += 1;
         self.submitted += 1;
@@ -62,17 +95,59 @@ impl InvocationQueue {
             forced_pass: false,
             payload_scale,
         };
-        self.q.push_back(inv);
-        inv
+        let at_cap = self.admission.cap.is_some_and(|c| self.q.len() >= c);
+        if !at_cap {
+            self.q.push_back(inv);
+            self.note_depth();
+            return Admission { inv, shed_new: false, evicted: None };
+        }
+        match self.admission.shed {
+            ShedPolicy::Reject => {
+                self.shed += 1;
+                Admission { inv, shed_new: true, evicted: None }
+            }
+            ShedPolicy::DropHead => {
+                let evicted = self.q.pop_front();
+                self.shed += 1;
+                self.q.push_back(inv);
+                self.note_depth();
+                Admission { inv, shed_new: false, evicted }
+            }
+            ShedPolicy::DropTail => {
+                let evicted = self.q.pop_back();
+                self.shed += 1;
+                self.q.push_back(inv);
+                self.note_depth();
+                Admission { inv, shed_new: false, evicted }
+            }
+        }
     }
 
-    /// Re-queue an invocation whose instance was terminated (retries bump).
+    /// Re-queue an invocation whose instance was terminated (retries
+    /// bump). Re-queues bypass the admission cap — they are triggered by
+    /// instance death, not by new load, and dropping them here would
+    /// double-count the failure the retry policy already adjudicated.
+    /// (A later drop-head/tail *admission* may still evict them.)
     pub fn requeue(&mut self, mut inv: Invocation) {
         debug_assert!(self.in_flight > 0, "requeue without matching take");
         self.in_flight -= 1;
         inv.retries += 1;
         self.requeued += 1;
         self.q.push_back(inv);
+        self.note_depth();
+    }
+
+    /// An in-flight invocation failed terminally (retry budget exhausted
+    /// or deadline exceeded). Pairs with a `take` like `complete` does.
+    pub fn fail(&mut self, _inv: &Invocation) {
+        debug_assert!(self.in_flight > 0, "fail without matching take");
+        self.in_flight -= 1;
+        self.failed += 1;
+    }
+
+    #[inline]
+    fn note_depth(&mut self) {
+        self.peak_depth = self.peak_depth.max(self.q.len() as u64);
     }
 
     /// Take the next invocation for placement.
@@ -88,6 +163,7 @@ impl InvocationQueue {
         debug_assert!(self.in_flight > 0, "untake without matching take");
         self.in_flight -= 1;
         self.q.push_front(inv);
+        self.note_depth();
     }
 
     /// An in-flight invocation completed successfully.
@@ -106,10 +182,13 @@ impl InvocationQueue {
     }
 
     /// Conservation check: every submitted invocation is exactly one of
-    /// completed, queued, or in flight. (Re-queues move an invocation from
-    /// in-flight back to queued without affecting the total.)
+    /// completed, failed, shed, queued, or in flight. (Re-queues move an
+    /// invocation from in-flight back to queued without affecting the
+    /// total; with faults and admission off, `failed` and `shed` stay 0
+    /// and this reduces to the historical invariant.)
     pub fn conserved(&self) -> bool {
-        self.submitted == self.completed + self.q.len() as u64 + self.in_flight
+        self.submitted
+            == self.completed + self.failed + self.shed + self.q.len() as u64 + self.in_flight
     }
 }
 
@@ -134,7 +213,7 @@ mod tests {
     #[test]
     fn requeue_preserves_identity_and_bumps_retries() {
         let mut q = InvocationQueue::new();
-        let orig = q.submit(3, SimTime::from_ms(10.0));
+        let orig = q.submit(3, SimTime::from_ms(10.0)).inv;
         let taken = q.take().unwrap();
         q.requeue(taken);
         assert!(q.conserved());
@@ -148,7 +227,7 @@ mod tests {
     #[test]
     fn fifo_order_with_requeue_at_back() {
         let mut q = InvocationQueue::new();
-        let a = q.submit(0, SimTime::ZERO);
+        let a = q.submit(0, SimTime::ZERO).inv;
         let _b = q.submit(1, SimTime::ZERO);
         let taken_a = q.take().unwrap();
         assert_eq!(taken_a.id, a.id);
@@ -161,7 +240,7 @@ mod tests {
     #[test]
     fn ids_are_unique() {
         let mut q = InvocationQueue::new();
-        let ids: Vec<u64> = (0..100).map(|v| q.submit(v, SimTime::ZERO).id).collect();
+        let ids: Vec<u64> = (0..100).map(|v| q.submit(v, SimTime::ZERO).inv.id).collect();
         let mut sorted = ids.clone();
         sorted.sort();
         sorted.dedup();
@@ -171,7 +250,7 @@ mod tests {
     #[test]
     fn untake_returns_to_head_without_retry_bump() {
         let mut q = InvocationQueue::new();
-        let a = q.submit(0, SimTime::ZERO);
+        let a = q.submit(0, SimTime::ZERO).inv;
         let _b = q.submit(1, SimTime::ZERO);
         let taken = q.take().unwrap();
         q.untake(taken);
@@ -184,8 +263,8 @@ mod tests {
     #[test]
     fn payload_scale_defaults_and_survives_requeue() {
         let mut q = InvocationQueue::new();
-        assert_eq!(q.submit(0, SimTime::ZERO).payload_scale, 1.0);
-        let big = q.submit_scaled(1, 3.5, SimTime::ZERO);
+        assert_eq!(q.submit(0, SimTime::ZERO).inv.payload_scale, 1.0);
+        let big = q.submit_scaled(1, 3.5, SimTime::ZERO).inv;
         assert_eq!(big.payload_scale, 3.5);
         let _ = q.take().unwrap(); // the plain one
         let taken = q.take().unwrap();
@@ -199,6 +278,100 @@ mod tests {
         let mut q = InvocationQueue::new();
         assert!(q.take().is_none());
         assert!(q.is_empty());
+        assert!(q.conserved());
+    }
+
+    #[test]
+    fn unbounded_submit_never_sheds() {
+        let mut q = InvocationQueue::new();
+        for v in 0..1_000 {
+            let a = q.submit(v, SimTime::ZERO);
+            assert!(!a.shed_new);
+            assert!(a.evicted.is_none());
+        }
+        assert_eq!(q.shed, 0);
+        assert_eq!(q.peak_depth, 1_000);
+        assert!(q.conserved());
+    }
+
+    #[test]
+    fn reject_sheds_the_arrival_at_cap() {
+        let adm = AdmissionConfig { cap: Some(2), shed: ShedPolicy::Reject };
+        let mut q = InvocationQueue::with_admission(adm);
+        let _ = q.submit(0, SimTime::ZERO);
+        let _ = q.submit(1, SimTime::ZERO);
+        let a = q.submit(2, SimTime::ZERO);
+        assert!(a.shed_new);
+        assert!(a.evicted.is_none());
+        assert_eq!(q.shed, 1);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak_depth, 2);
+        assert!(q.conserved());
+        // The queue drains in original order: the reject left it intact.
+        assert_eq!(q.take().unwrap().vu, 0);
+    }
+
+    #[test]
+    fn drop_head_evicts_oldest_and_admits() {
+        let adm = AdmissionConfig { cap: Some(2), shed: ShedPolicy::DropHead };
+        let mut q = InvocationQueue::with_admission(adm);
+        let first = q.submit(0, SimTime::ZERO).inv;
+        let _ = q.submit(1, SimTime::ZERO);
+        let a = q.submit(2, SimTime::ZERO);
+        assert!(!a.shed_new);
+        assert_eq!(a.evicted.unwrap().id, first.id);
+        assert_eq!(q.shed, 1);
+        assert_eq!(q.len(), 2);
+        assert!(q.conserved());
+        assert_eq!(q.take().unwrap().vu, 1);
+        assert_eq!(q.take().unwrap().vu, 2);
+    }
+
+    #[test]
+    fn drop_tail_evicts_newest_queued() {
+        let adm = AdmissionConfig { cap: Some(2), shed: ShedPolicy::DropTail };
+        let mut q = InvocationQueue::with_admission(adm);
+        let _ = q.submit(0, SimTime::ZERO);
+        let second = q.submit(1, SimTime::ZERO).inv;
+        let a = q.submit(2, SimTime::ZERO);
+        assert!(!a.shed_new);
+        assert_eq!(a.evicted.unwrap().id, second.id);
+        assert_eq!(q.len(), 2);
+        assert!(q.conserved());
+        assert_eq!(q.take().unwrap().vu, 0);
+        assert_eq!(q.take().unwrap().vu, 2);
+    }
+
+    #[test]
+    fn requeue_and_untake_bypass_the_cap() {
+        let adm = AdmissionConfig { cap: Some(1), shed: ShedPolicy::Reject };
+        let mut q = InvocationQueue::with_admission(adm);
+        let _ = q.submit(0, SimTime::ZERO);
+        let taken = q.take().unwrap();
+        let _ = q.submit(1, SimTime::ZERO); // fills the cap while a is out
+        q.requeue(taken); // must not shed
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.shed, 0);
+        assert!(q.conserved());
+        let back = q.take().unwrap();
+        q.untake(back); // must not shed either
+        assert_eq!(q.len(), 2);
+        assert!(q.conserved());
+    }
+
+    #[test]
+    fn fail_counts_and_conserves() {
+        let mut q = InvocationQueue::new();
+        let _ = q.submit(0, SimTime::ZERO);
+        let _ = q.submit(1, SimTime::ZERO);
+        let a = q.take().unwrap();
+        q.fail(&a);
+        assert_eq!(q.failed, 1);
+        assert_eq!(q.in_flight, 0);
+        assert!(q.conserved());
+        let b = q.take().unwrap();
+        q.complete(&b);
+        assert_eq!(q.submitted, q.completed + q.failed);
         assert!(q.conserved());
     }
 }

@@ -49,12 +49,14 @@ use crate::util::parallel;
 use crate::util::prng::{splitmix64, Rng};
 use crate::workload::FunctionSpec;
 
+use crate::fault::FailReason;
+
 use super::config::ExperimentConfig;
 use super::metrics::RunResult;
 use super::runner::run_pretest;
 use super::world::{
-    build_policy, gate_and_start, settle_crash, settle_finish, CrashRecord, DeploymentCtx,
-    FinishRecord, RecordPool, StartOutcome,
+    adjudicate_requeue, build_policy, gate_and_start, settle_crash, settle_finish, ChurnState,
+    CrashRecord, DeploymentCtx, FinishRecord, RecordPool, StartOutcome,
 };
 
 /// Domain events of a region sub-simulation. `slot` indexes the region's
@@ -73,6 +75,11 @@ enum CEvent {
     CrashRequeue { slot: u32, inst: InstanceId, crash: Box<CrashRecord> },
     /// An invocation completed successfully.
     Finish { slot: u32, inst: InstanceId, rec: Box<FinishRecord> },
+    /// An injected mid-flight fault kills this attempt partway through
+    /// execution (`--fault-inflight`); nothing is billed.
+    FaultCrash { slot: u32, inst: InstanceId, inv: Invocation },
+    /// The next planned node death is due (`--faults weibull:…`).
+    NodeFault,
 }
 
 /// One function's deployment inside a region.
@@ -117,6 +124,15 @@ struct RegionWorld<'a> {
     /// The region's flight recorder (one track per region; off by
     /// default). Probes only observe — never schedule, never draw RNG.
     obs: ObsSink,
+    /// The shard's dedicated fault/retry RNG (6000-family off the shard's
+    /// own root, so every shard churns its own decorrelated stream).
+    /// Nothing draws from it while the robustness knobs are at defaults.
+    rng_fault: Rng,
+    /// Node-churn state (`None` ⇔ `cfg.fault.spec` is off).
+    churn: Option<ChurnState>,
+    /// Replacement-node spawns eaten by `--fault-spawn` (platform-level:
+    /// no single deployment owns a machine).
+    spawn_failed: u64,
 }
 
 impl RegionWorld<'_> {
@@ -129,8 +145,11 @@ impl RegionWorld<'_> {
         inv: Invocation,
         cold: bool,
     ) {
-        let Self { platform, deploys, pool, obs, .. } = self;
+        let Self { cfg, platform, deploys, pool, obs, rng_fault, .. } = self;
         let ds = &mut deploys[slot as usize];
+        // Fault plane: sentence the attempt up front so the gate can
+        // suppress the doomed benchmark sample (its report never arrives).
+        let doomed = cfg.fault.inflight_p > 0.0 && rng_fault.f64() < cfg.fault.inflight_p;
         let outcome = gate_and_start(
             DeploymentCtx {
                 spec: &ds.spec,
@@ -148,14 +167,92 @@ impl RegionWorld<'_> {
             inst,
             inv,
             cold,
+            doomed,
         );
         match outcome {
             StartOutcome::Terminate { at, crash } => {
                 events.schedule(at, CEvent::CrashRequeue { slot, inst, crash });
             }
             StartOutcome::Complete { at, rec } => {
-                events.schedule(at, CEvent::Finish { slot, inst, rec });
+                if doomed {
+                    // Crash at a uniform point inside the exec window.
+                    let frac = rng_fault.f64();
+                    let at = SimTime(now.0 + ((at.0 - now.0) as f64 * frac) as u64);
+                    events.schedule(at, CEvent::FaultCrash { slot, inst, inv: rec.inv });
+                    pool.recycle_finish(rec);
+                } else {
+                    events.schedule(at, CEvent::Finish { slot, inst, rec });
+                }
             }
+        }
+    }
+
+    /// An in-flight attempt was killed by the fault plane: count it
+    /// against its deployment and put the invocation back through the
+    /// retry gate. Never billed.
+    fn settle_fault_casualty(
+        &mut self,
+        events: &mut EventQueue<CEvent>,
+        now: SimTime,
+        slot: u32,
+        inv: Invocation,
+    ) {
+        let ds = &mut self.deploys[slot as usize];
+        ds.result.inflight_faults += 1;
+        if let Some(delay_ms) = adjudicate_requeue(
+            &self.cfg.retry,
+            &mut ds.queue,
+            &mut ds.result,
+            &mut self.obs,
+            obs_inv_base(slot),
+            &mut self.rng_fault,
+            now,
+            inv,
+        ) {
+            events.schedule_in_ms(
+                ds.live_minos.requeue_overhead_ms + delay_ms,
+                CEvent::Dispatch { slot },
+            );
+        }
+    }
+
+    /// Execute every planned node death due now (mirrors the
+    /// single-deployment world's handler; victims' in-flight events
+    /// settle as fault casualties when they fire).
+    fn process_churn(&mut self, now: SimTime, events: &mut EventQueue<CEvent>) {
+        let Some(churn) = self.churn.as_mut() else { return };
+        let mut due = std::mem::take(&mut churn.due);
+        churn.plan.pop_due(now, &mut due);
+        for death in due.drain(..) {
+            let victim = churn.nodes[death.ordinal as usize];
+            let mut victims = std::mem::take(&mut churn.victims);
+            // Refuses stale ids and the last machine standing.
+            if self.platform.fail_node(victim, &mut victims) {
+                self.obs
+                    .emit(now, ProbeEvent::NodeFault { victims: victims.len() as u64 });
+                if self.obs.is_on() {
+                    for v in &victims {
+                        self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: v.0 });
+                    }
+                }
+                if self.cfg.fault.spawn_fail_p > 0.0
+                    && self.rng_fault.f64() < self.cfg.fault.spawn_fail_p
+                {
+                    self.obs.emit(now, ProbeEvent::SpawnFailed);
+                    self.spawn_failed += 1;
+                } else {
+                    let fresh =
+                        self.platform.spawn_node(self.cfg.day, &mut self.rng_fault, now);
+                    let ordinal = churn.plan.add_node(now, &mut self.rng_fault);
+                    debug_assert_eq!(ordinal as usize, churn.nodes.len());
+                    churn.nodes.push(fresh);
+                }
+            }
+            churn.victims = victims;
+        }
+        churn.due = due;
+        if let Some(at) = churn.plan.next_at() {
+            events.schedule(at.max(now), CEvent::NodeFault);
         }
     }
 }
@@ -172,16 +269,27 @@ impl World for RegionWorld<'_> {
         match ev {
             CEvent::TraceArrival { idx } => {
                 let (_, slot, payload_scale) = self.schedule[idx];
-                let inv =
+                let adm =
                     self.deploys[slot as usize].queue.submit_scaled(0, payload_scale, now);
                 self.obs.emit(
                     now,
                     ProbeEvent::Submitted {
-                        inv: obs_inv_base(slot) | inv.id,
-                        attempt: inv.retries,
+                        inv: obs_inv_base(slot) | adm.inv.id,
+                        attempt: adm.inv.retries,
                     },
                 );
-                events.schedule(now, CEvent::Dispatch { slot });
+                // Sheds are terminal (the queue already counted them);
+                // dispatch only runs when the arrival actually queued.
+                if let Some(victim) = adm.evicted {
+                    self.obs
+                        .emit(now, ProbeEvent::Shed { inv: obs_inv_base(slot) | victim.id });
+                }
+                if adm.shed_new {
+                    self.obs
+                        .emit(now, ProbeEvent::Shed { inv: obs_inv_base(slot) | adm.inv.id });
+                } else {
+                    events.schedule(now, CEvent::Dispatch { slot });
+                }
                 if let Some(&(t_next, _, _)) = self.schedule.get(idx + 1) {
                     events.schedule(t_next, CEvent::TraceArrival { idx: idx + 1 });
                 }
@@ -219,21 +327,67 @@ impl World for RegionWorld<'_> {
                     }
                     Placement::Saturated => {
                         // Shared quota exhausted (possibly by *another*
-                        // function's fleet): back to the queue head,
-                        // retry shortly.
+                        // function's fleet): back to the queue head and
+                        // retry after the configurable saturation delay —
+                        // unless the request's deadline already passed.
                         self.obs.emit(now, ProbeEvent::Saturated);
-                        self.deploys[slot as usize].queue.untake(inv);
-                        events.schedule_in_ms(100.0, CEvent::Dispatch { slot });
+                        if self.cfg.retry.past_deadline(inv.submitted_at, now) {
+                            self.obs.emit(
+                                now,
+                                ProbeEvent::RequestFailed {
+                                    inv: obs_inv_base(slot) | inv.id,
+                                    attempt: inv.retries,
+                                    reason: FailReason::DeadlineExceeded,
+                                },
+                            );
+                            let ds = &mut self.deploys[slot as usize];
+                            ds.queue.fail(&inv);
+                            ds.result.failed_deadline += 1;
+                            // The quota may still fit a fresher request.
+                            events.schedule(now, CEvent::Dispatch { slot });
+                        } else {
+                            self.deploys[slot as usize].queue.untake(inv);
+                            events.schedule_in_ms(
+                                self.cfg.retry.saturated_delay_ms,
+                                CEvent::Dispatch { slot },
+                            );
+                        }
                     }
                 }
             }
 
             CEvent::ColdReady { slot, inst, inv } => {
+                // The node died while this cold start was booting.
+                if !self.platform.scheduler.is_current(inst) {
+                    self.settle_fault_casualty(events, now, slot, inv);
+                    return Ok(());
+                }
                 self.platform.cold_start_ready(inst);
+                // Spawn fault: the instance dies before it ever serves.
+                if self.cfg.fault.spawn_fail_p > 0.0
+                    && self.rng_fault.f64() < self.cfg.fault.spawn_fail_p
+                {
+                    if self.obs.is_on() {
+                        self.obs.emit(now, ProbeEvent::SpawnFailed);
+                        self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
+                    }
+                    self.deploys[slot as usize].result.spawn_failed += 1;
+                    self.platform.crash(inst);
+                    self.settle_fault_casualty(events, now, slot, inv);
+                    return Ok(());
+                }
                 self.start(events, now, slot, inst, inv, true);
             }
 
             CEvent::CrashRequeue { slot, inst, crash } => {
+                // A node fault beat the scheduled termination: the attempt
+                // is a plain fault casualty — nothing billed or terminated.
+                if !self.platform.scheduler.is_current(inst) {
+                    let inv = crash.inv;
+                    self.pool.recycle_crash(crash);
+                    self.settle_fault_casualty(events, now, slot, inv);
+                    return Ok(());
+                }
                 if self.obs.is_on() {
                     let tagged = obs_inv_base(slot) | crash.inv.id;
                     self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
@@ -245,24 +399,43 @@ impl World for RegionWorld<'_> {
                             bench_ms: crash.bench_ms,
                         },
                     );
-                    // `settle_crash` re-queues via `requeue`, which bumps
-                    // the retry count — probe the next attempt index.
-                    self.obs.emit(
-                        now,
-                        ProbeEvent::Requeued { inv: tagged, attempt: crash.inv.retries + 1 },
-                    );
                 }
                 self.platform.crash(inst);
-                let ds = &mut self.deploys[slot as usize];
-                settle_crash(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &crash);
-                self.pool.recycle_crash(crash);
-                events.schedule_in_ms(
-                    self.deploys[slot as usize].live_minos.requeue_overhead_ms,
-                    CEvent::Dispatch { slot },
+                let inv = crash.inv;
+                settle_crash(
+                    &self.cfg.billing,
+                    &mut self.deploys[slot as usize].result,
+                    now,
+                    &crash,
                 );
+                self.pool.recycle_crash(crash);
+                let ds = &mut self.deploys[slot as usize];
+                if let Some(delay_ms) = adjudicate_requeue(
+                    &self.cfg.retry,
+                    &mut ds.queue,
+                    &mut ds.result,
+                    &mut self.obs,
+                    obs_inv_base(slot),
+                    &mut self.rng_fault,
+                    now,
+                    inv,
+                ) {
+                    events.schedule_in_ms(
+                        ds.live_minos.requeue_overhead_ms + delay_ms,
+                        CEvent::Dispatch { slot },
+                    );
+                }
             }
 
             CEvent::Finish { slot, inst, rec } => {
+                // The node died mid-execution: the completion never
+                // happened — settle as a fault casualty instead.
+                if !self.platform.scheduler.is_current(inst) {
+                    let inv = rec.inv;
+                    self.pool.recycle_finish(rec);
+                    self.settle_fault_casualty(events, now, slot, inv);
+                    return Ok(());
+                }
                 self.platform.release(inst, now);
                 let ds = &mut self.deploys[slot as usize];
                 // Pushed policy updates arrive between requests (§IV).
@@ -292,6 +465,18 @@ impl World for RegionWorld<'_> {
                 settle_finish(&self.cfg.billing, &mut ds.result, &mut ds.queue, now, &rec, None);
                 self.pool.recycle_finish(rec);
             }
+
+            CEvent::FaultCrash { slot, inst, inv } => {
+                // Injected mid-flight fault. If the node already died the
+                // instance is gone; either way the attempt is a casualty.
+                if self.platform.scheduler.is_current(inst) {
+                    self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
+                    self.platform.crash(inst);
+                }
+                self.settle_fault_casualty(events, now, slot, inv);
+            }
+
+            CEvent::NodeFault => self.process_churn(now, events),
         }
         Ok(())
     }
@@ -308,6 +493,8 @@ impl World for RegionWorld<'_> {
                 self.deploys.iter().map(|d| d.result.terminations).sum();
             let cost_usd: f64 =
                 self.deploys.iter().map(|d| d.result.total_cost_usd()).sum();
+            let failed: u64 = self.deploys.iter().map(|d| d.result.failed()).sum();
+            let shed: u64 = self.deploys.iter().map(|d| d.queue.shed).sum();
             self.obs.record_gauge(GaugeSample {
                 at,
                 queue_depth,
@@ -315,6 +502,9 @@ impl World for RegionWorld<'_> {
                 completed,
                 terminations,
                 cost_usd,
+                failed,
+                shed,
+                node_faults: self.platform.node_faults,
             });
         }
     }
@@ -345,6 +535,11 @@ pub struct RegionOutcome {
     pub expired: u64,
     pub recycled: u64,
     pub crashes: u64,
+    /// Fault-injected node deaths (0 unless `--faults` is on).
+    pub node_faults: u64,
+    /// Failed replacement-node spawns (platform-level; per-attempt cold
+    /// spawn failures are counted in `RunResult::spawn_failed`).
+    pub spawn_failed: u64,
     /// Events the region's sub-simulation handled (throughput metric).
     pub events_handled: u64,
     pub per_function: Vec<DeploymentOutcome>,
@@ -369,6 +564,16 @@ impl RegionOutcome {
 
     pub fn cost_usd(&self) -> f64 {
         self.per_function.iter().map(|f| f.result.total_cost_usd()).sum()
+    }
+
+    /// Terminal failures (retry budget exhausted or deadline exceeded).
+    pub fn failed(&self) -> u64 {
+        self.per_function.iter().map(|f| f.result.failed()).sum()
+    }
+
+    /// Arrivals shed at admission (bounded queue).
+    pub fn shed(&self) -> u64 {
+        self.per_function.iter().map(|f| f.result.shed).sum()
     }
 }
 
@@ -585,6 +790,8 @@ fn merge_region_shards(mut shards: Vec<RegionOutcome>) -> RegionOutcome {
         merged.expired += s.expired;
         merged.recycled += s.recycled;
         merged.crashes += s.crashes;
+        merged.node_faults += s.node_faults;
+        merged.spawn_failed += s.spawn_failed;
         merged.events_handled += s.events_handled;
         merged.per_function.extend(s.per_function);
         merged.obs.extend(s.obs);
@@ -655,7 +862,7 @@ fn run_region(
             spec: profile.spec.clone(),
             result,
             live_minos,
-            queue: InvocationQueue::new(),
+            queue: InvocationQueue::with_admission(base.admission),
             rng: root.fork(7_000 + base.day as u64 + slot as u64 * 31),
             policy,
             arrivals: 0,
@@ -671,6 +878,13 @@ fn run_region(
         schedule.push((r.t, slot, r.payload_scale));
     }
 
+    // Per-shard fault stream: `root` is already shard-seed-mixed, so each
+    // shard churns its own decorrelated slice of the node pool. Faults-off
+    // draws nothing (fork reads the parent state without advancing it).
+    let mut rng_fault = root.fork(6_000 + base.day as u64);
+    let horizon = records.last().map_or(SimTime::ZERO, |r| r.t);
+    let churn = ChurnState::build(base.fault.spec, &platform, horizon, &mut rng_fault);
+
     let mut sim = Simulation::new(RegionWorld {
         cfg: base,
         platform,
@@ -678,9 +892,15 @@ fn run_region(
         schedule,
         pool: RecordPool::new(),
         obs: ObsSink::from_config(&base.obs),
+        rng_fault,
+        churn,
+        spawn_failed: 0,
     });
     if let Some(&(t0, _, _)) = sim.world.schedule.first() {
         sim.events.schedule(t0, CEvent::TraceArrival { idx: 0 });
+    }
+    if let Some(at) = sim.world.churn.as_ref().and_then(|c| c.plan.next_at()) {
+        sim.events.schedule(at, CEvent::NodeFault);
     }
     sim.run()?;
     let events_handled = sim.events_handled();
@@ -690,7 +910,10 @@ fn run_region(
     let mut per_function = Vec::with_capacity(world.deploys.len());
     for (mut ds, (_, pretest)) in world.deploys.into_iter().zip(pretests) {
         debug_assert!(ds.queue.conserved(), "invocation conservation violated");
+        debug_assert_eq!(ds.queue.failed, ds.result.failed(), "failure ledger divergence");
         ds.result.online_pushes = ds.policy.pushes();
+        ds.result.shed = ds.queue.shed;
+        ds.result.queue_peak_depth = ds.queue.peak_depth;
         per_function.push(DeploymentOutcome {
             region: region.id,
             function: ds.function,
@@ -708,6 +931,8 @@ fn run_region(
         expired: world.platform.expired,
         recycled: world.platform.recycled,
         crashes: world.platform.crashes,
+        node_faults: world.platform.node_faults,
+        spawn_failed: world.spawn_failed,
         events_handled,
         per_function,
         obs: obs.into_iter().collect(),

@@ -3,6 +3,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::MinosConfig;
+use crate::fault::{AdmissionConfig, FaultConfig, RetryConfig};
 use crate::platform::billing::Billing;
 use crate::platform::{ContentionCurve, PlatformConfig};
 use crate::policy::{PolicySpec, RoutingSpec};
@@ -74,6 +75,18 @@ pub struct ExperimentConfig {
     /// observe — an instrumented run's physics are bit-identical to an
     /// uninstrumented one.
     pub obs: crate::obs::ObsConfig,
+    /// Failure injection: node churn (Weibull lifetimes), spawn failures,
+    /// mid-flight invocation faults. Off by default — a faults-off run
+    /// draws nothing from the fault RNG stream and is bit-identical to a
+    /// build without the fault plane.
+    pub fault: FaultConfig,
+    /// Retry budget / backoff / per-invocation deadline governing every
+    /// requeue path (Minos termination, crash, saturation, injected
+    /// fault). The default is the historical unbounded-retry behaviour.
+    pub retry: RetryConfig,
+    /// Bounded admission for the coordinator queue (capacity + shedding).
+    /// Default: unbounded, never sheds.
+    pub admission: AdmissionConfig,
 }
 
 impl ExperimentConfig {
@@ -97,6 +110,9 @@ impl ExperimentConfig {
             replay: None,
             metrics: MetricsMode::Full,
             obs: crate::obs::ObsConfig::off(),
+            fault: FaultConfig::default(),
+            retry: RetryConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 
@@ -167,6 +183,17 @@ mod tests {
     #[test]
     fn smoke_is_short() {
         assert_eq!(ExperimentConfig::smoke(0, 1).vus.horizon.as_secs(), 120.0);
+    }
+
+    #[test]
+    fn robustness_knobs_default_off() {
+        // The entire fault/retry/admission plane must be inert by default:
+        // paper runs draw nothing from the fault stream and never shed.
+        let c = ExperimentConfig::paper_day(0);
+        assert!(c.fault.is_off(), "paper config must stay fault-free");
+        assert!(c.retry.is_default(), "paper config must keep unbounded retries");
+        assert!(c.admission.is_off(), "paper config must keep an unbounded queue");
+        assert_eq!(c.retry.saturated_delay_ms, 100.0);
     }
 
     #[test]

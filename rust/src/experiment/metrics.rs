@@ -238,6 +238,23 @@ pub struct RunResult {
     pub threshold_ms: f64,
     /// Published online-threshold updates (when the §IV collector is on).
     pub online_pushes: u64,
+    /// Terminal failures: the retry budget ran out.
+    pub failed_exhausted: u64,
+    /// Terminal failures: the per-invocation deadline passed.
+    pub failed_deadline: u64,
+    /// Requests shed by bounded admission (rejects + evictions).
+    pub shed: u64,
+    /// In-flight attempts killed by injected invocation faults.
+    pub inflight_faults: u64,
+    /// Cold starts killed by injected spawn failures.
+    pub spawn_failed: u64,
+    /// Fault-injected node deaths.
+    pub node_faults: u64,
+    /// High-water mark of the invocation queue depth.
+    pub queue_peak_depth: u64,
+    /// Histogram of attempts-per-completed-request: bucket `i` counts
+    /// requests that took `i + 1` attempts; the last bucket is `8+`.
+    pub retry_histogram: [u64; 8],
     /// Flight-recorder capture (None unless the run was instrumented —
     /// see `obs`). Observation only: never feeds back into physics.
     pub obs: Option<Box<crate::obs::ObsData>>,
@@ -258,9 +275,33 @@ impl RunResult {
 
     /// Record one successful completion.
     pub fn record_invocation(&mut self, rec: InvocationRecord) {
+        self.note_attempts(rec.attempts);
         match &mut self.sink {
             MetricsSink::Full { records, .. } => records.push(rec),
             MetricsSink::Streaming(s) => s.record(&rec),
+        }
+    }
+
+    /// Fold one completed request's attempt count into the retry histogram.
+    fn note_attempts(&mut self, attempts: u32) {
+        let bucket = (attempts.max(1) as usize - 1).min(self.retry_histogram.len() - 1);
+        self.retry_histogram[bucket] += 1;
+    }
+
+    /// Terminal failures of both kinds (goodput denominator companion).
+    pub fn failed(&self) -> u64 {
+        self.failed_exhausted + self.failed_deadline
+    }
+
+    /// Fraction of adjudicated requests (completed + failed + shed) that
+    /// failed or were shed. 0 for an all-success run.
+    pub fn failure_rate(&self) -> f64 {
+        let bad = self.failed() + self.shed;
+        let total = self.successful() + bad;
+        if total == 0 {
+            0.0
+        } else {
+            bad as f64 / total as f64
         }
     }
 
@@ -682,6 +723,27 @@ mod tests {
 
     fn cost(at_s: f64, usd: f64) -> CostEvent {
         CostEvent { at: SimTime::from_secs(at_s), usd, terminated: false }
+    }
+
+    #[test]
+    fn retry_histogram_and_failure_rate() {
+        let mut r = RunResult::new(MetricsMode::Full);
+        for attempts in [1, 1, 2, 3, 99] {
+            let mut rc = rec(1.0, 100.0);
+            rc.attempts = attempts;
+            r.record_invocation(rc);
+        }
+        assert_eq!(r.retry_histogram[0], 2, "one-attempt requests");
+        assert_eq!(r.retry_histogram[1], 1);
+        assert_eq!(r.retry_histogram[2], 1);
+        assert_eq!(r.retry_histogram[7], 1, "8+ attempts land in the last bucket");
+        assert_eq!(r.failure_rate(), 0.0);
+        r.failed_exhausted = 2;
+        r.failed_deadline = 1;
+        r.shed = 2;
+        assert_eq!(r.failed(), 3);
+        // 5 completed + 5 failed/shed.
+        assert!((r.failure_rate() - 0.5).abs() < 1e-12);
     }
 
     fn full_with(records: Vec<InvocationRecord>, costs: Vec<CostEvent>) -> RunResult {

@@ -76,6 +76,11 @@ pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<
     // Pre-tests are calibration machinery, not the run under observation:
     // keep them out of timelines, gauges, and probe counters.
     pretest_cfg.obs = crate::obs::ObsConfig::off();
+    // Calibration must stay churn-free and unbounded: thresholds measured
+    // on a dying or shedding fleet would poison every main-run arm.
+    pretest_cfg.fault = crate::fault::FaultConfig::default();
+    pretest_cfg.retry = crate::fault::RetryConfig::default();
+    pretest_cfg.admission = crate::fault::AdmissionConfig::default();
     let minos = MinosConfig {
         enabled: true,
         elysium_threshold_ms: f64::INFINITY,

@@ -52,10 +52,11 @@
 
 use anyhow::Result;
 
-use crate::coordinator::lifecycle::{decide_cold_start, ColdStartDecision};
-use crate::coordinator::queue::{Invocation, InvocationQueue};
+use crate::coordinator::lifecycle::{decide_cold_start_doomed, ColdStartDecision};
+use crate::coordinator::queue::{Admission, Invocation, InvocationQueue};
 use crate::coordinator::MinosConfig;
-use crate::platform::{DeployId, FaasPlatform, InstanceId, Placement};
+use crate::fault::{FailReason, FaultPlan, FaultSpec, PlannedDeath, RetryConfig, RetryDecision};
+use crate::platform::{DeployId, FaasPlatform, InstanceId, NodeId, Placement};
 use crate::policy::{BenchReport, PolicyInit, SelectionPolicy};
 use crate::runtime::Runtime;
 use crate::sim::{EventQueue, SimTime, World};
@@ -93,6 +94,13 @@ pub(crate) enum Event {
     CrashRequeue { inst: InstanceId, crash: Box<CrashRecord> },
     /// An invocation completed successfully.
     Finish { inst: InstanceId, rec: Box<FinishRecord> },
+    /// An injected mid-flight fault kills this attempt partway through
+    /// execution (`--fault-inflight`); the invocation re-enters the retry
+    /// gate and nothing is billed.
+    FaultCrash { inst: InstanceId, inv: Invocation },
+    /// The next planned node death is due (`--faults weibull:…`); the
+    /// handler pops every death due now and reschedules itself.
+    NodeFault,
 }
 
 /// Payload of a termination: the invocation to re-queue and the billed
@@ -215,12 +223,19 @@ pub(crate) enum StartOutcome {
 /// An instance begins serving an invocation (paper Fig. 2's flow): sample
 /// the phase durations, run the cold-start gate (benchmark + policy
 /// judgment) when `cold`, and decide when and how the attempt ends.
+///
+/// `doomed` marks an attempt the fault plane has already sentenced to a
+/// mid-flight crash: the gate still runs (and bills) the benchmark, but
+/// the sample never reaches the policy collector — a crashed attempt
+/// never reports back. The caller converts a doomed `Complete` outcome
+/// into a [`Event::FaultCrash`]-style termination.
 pub(crate) fn gate_and_start(
     ctx: DeploymentCtx<'_>,
     now: SimTime,
     inst: InstanceId,
     mut inv: Invocation,
     cold: bool,
+    doomed: bool,
 ) -> StartOutcome {
     let DeploymentCtx {
         spec,
@@ -249,7 +264,7 @@ pub(crate) fn gate_and_start(
 
     if cold {
         let draw = rng.f64();
-        let decision = decide_cold_start(minos, policy, &inv, perf, draw, || {
+        let decision = decide_cold_start_doomed(minos, policy, &inv, perf, draw, doomed, || {
             let b = minos.benchmark.duration_ms(perf, rng);
             result.record_bench(b);
             b
@@ -327,7 +342,9 @@ pub(crate) fn gate_and_start(
     let bench_ms = if bench_warm && policy.benchmarks() {
         let b = minos.benchmark.duration_ms(perf, rng);
         result.record_bench(b);
-        policy.observe(BenchReport { score_ms: b, warm: true });
+        if !doomed {
+            policy.observe(BenchReport { score_ms: b, warm: true });
+        }
         Some(b)
     } else {
         None
@@ -352,12 +369,12 @@ pub(crate) fn gate_and_start(
 }
 
 /// Settle a termination (shared by both worlds): bill the crashed attempt
-/// (Fig. 3's d_term) and re-queue its invocation. The caller crashes the
-/// instance on its platform and schedules the post-requeue dispatch.
+/// (Fig. 3's d_term) and count it. The caller crashes the instance on its
+/// platform, then puts the invocation through [`adjudicate_requeue`] and
+/// schedules the post-requeue dispatch.
 pub(crate) fn settle_crash(
     billing: &crate::platform::billing::Billing,
     result: &mut RunResult,
-    queue: &mut InvocationQueue,
     now: SimTime,
     crash: &CrashRecord,
 ) {
@@ -367,7 +384,64 @@ pub(crate) fn settle_crash(
         terminated: true,
     });
     result.terminations += 1;
-    queue.requeue(crash.inv);
+}
+
+/// Put an in-flight invocation that needs another attempt (Minos
+/// termination, fault casualty) through the unified retry gate (shared by
+/// both worlds). On `Retry` it re-enters its queue and the backoff delay
+/// comes back for the caller to add to its dispatch schedule; on `Fail`
+/// it leaves the system as a counted terminal failure and `None` comes
+/// back. With the default [`RetryConfig`] this always retries with zero
+/// delay and draws nothing — bit-identical to the historical unbounded
+/// requeue loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn adjudicate_requeue(
+    retry: &RetryConfig,
+    queue: &mut InvocationQueue,
+    result: &mut RunResult,
+    obs: &mut ObsSink,
+    obs_inv_base: u64,
+    rng_fault: &mut Rng,
+    now: SimTime,
+    inv: Invocation,
+) -> Option<f64> {
+    match retry.on_requeue(inv.retries, inv.submitted_at, now, rng_fault) {
+        RetryDecision::Retry { delay_ms } => {
+            if obs.is_on() {
+                obs.emit(
+                    now,
+                    ProbeEvent::RetryScheduled {
+                        inv: obs_inv_base | inv.id,
+                        attempt: inv.retries + 1,
+                        delay_ms,
+                    },
+                );
+                // `requeue` bumps the retry count — probe the next attempt.
+                obs.emit(
+                    now,
+                    ProbeEvent::Requeued { inv: obs_inv_base | inv.id, attempt: inv.retries + 1 },
+                );
+            }
+            queue.requeue(inv);
+            Some(delay_ms)
+        }
+        RetryDecision::Fail(reason) => {
+            obs.emit(
+                now,
+                ProbeEvent::RequestFailed {
+                    inv: obs_inv_base | inv.id,
+                    attempt: inv.retries,
+                    reason,
+                },
+            );
+            queue.fail(&inv);
+            match reason {
+                FailReason::DeadlineExceeded => result.failed_deadline += 1,
+                _ => result.failed_exhausted += 1,
+            }
+            None
+        }
+    }
 }
 
 /// Settle a successful completion (shared by both worlds): account the
@@ -430,6 +504,37 @@ pub(crate) fn build_policy(
     }
 }
 
+/// Node-churn bookkeeping for one platform (shared by both worlds): the
+/// seeded death plan, the ordinal → [`NodeId`] map it is keyed by, and
+/// reusable scratch. Built only when the churn spec is on; the plan's
+/// draws come from the owning world's fault stream in a fixed order, so
+/// churn is a pure function of `(seed, day, salt)`.
+pub(crate) struct ChurnState {
+    pub plan: FaultPlan,
+    /// `NodeId` by spawn ordinal (initial pool in slot order, then
+    /// replacements in spawn order) — mirrors the plan's key space.
+    pub nodes: Vec<NodeId>,
+    /// Scratch for deaths due at one instant.
+    pub due: Vec<PlannedDeath>,
+    /// Scratch for the instances resident on a dying node.
+    pub victims: Vec<InstanceId>,
+}
+
+impl ChurnState {
+    /// Draw the initial pool's lifetimes from the fault stream; `None`
+    /// when the churn spec is off (no fault state, no draws).
+    pub(crate) fn build(
+        spec: FaultSpec,
+        platform: &FaasPlatform,
+        horizon: SimTime,
+        rng: &mut Rng,
+    ) -> Option<ChurnState> {
+        let nodes = platform.nodes().ids();
+        let plan = FaultPlan::build(spec, nodes.len(), horizon, rng)?;
+        Some(ChurnState { plan, nodes, due: Vec::new(), victims: Vec::new() })
+    }
+}
+
 /// The paper's single-deployment experiment as a kernel [`World`]: one
 /// function, one platform, closed-loop VUs / open-loop Poisson arrivals /
 /// deterministic trace replay.
@@ -452,6 +557,15 @@ pub(crate) struct MinosWorld<'a> {
     /// Flight recorder (off by default; `cfg.obs` turns it on). Probes
     /// only observe — they never schedule events or draw RNG.
     obs: ObsSink,
+    /// Dedicated fault/retry RNG (6000-family substream): churn
+    /// lifetimes, doom and spawn-failure draws, backoff jitter. With
+    /// every robustness knob at its default nothing ever draws from it,
+    /// so the default configuration stays bit-identical to the pre-fault
+    /// engine; with faults on it is a pure function of `(seed, day,
+    /// salt)`, independent of thread scheduling.
+    rng_fault: Rng,
+    /// Node-churn state (`None` ⇔ `cfg.fault.spec` is off).
+    churn: Option<ChurnState>,
 }
 
 impl<'a> MinosWorld<'a> {
@@ -480,12 +594,24 @@ impl<'a> MinosWorld<'a> {
         };
         let mut result = RunResult::new(cfg.metrics);
         result.threshold_ms = minos.elysium_threshold_ms;
+        // The fault stream exists even when faults are off (constructing
+        // an RNG draws nothing); churn state only when the spec is on.
+        // Deaths stop at the submission horizon so the event loop drains.
+        let mut rng_fault = root.fork(6_000 + cfg.day as u64 + salt * 101);
+        let horizon = match &cfg.replay {
+            Some(s) => s
+                .arrivals
+                .last()
+                .map_or(cfg.vus.horizon, |&(t, _)| t.max(cfg.vus.horizon)),
+            None => cfg.vus.horizon,
+        };
+        let churn = ChurnState::build(cfg.fault.spec, &platform, horizon, &mut rng_fault);
         MinosWorld {
             cfg,
             runtime,
             bench_warm,
             platform,
-            queue: InvocationQueue::new(),
+            queue: InvocationQueue::with_admission(cfg.admission),
             result,
             rng_workload,
             policy,
@@ -494,11 +620,18 @@ impl<'a> MinosWorld<'a> {
             datasets,
             arrival_rr: 0,
             obs: ObsSink::from_config(&cfg.obs),
+            rng_fault,
+            churn,
         }
     }
 
     /// Schedule the workload driver's initial events.
     pub fn seed_initial(&self, events: &mut EventQueue<Event>) {
+        if let Some(churn) = &self.churn {
+            if let Some(at) = churn.plan.next_at() {
+                events.schedule(at, Event::NodeFault);
+            }
+        }
         if let Some(schedule) = &self.cfg.replay {
             // Trace replay: arrivals happen exactly when the trace says.
             if let Some(&(t0, _)) = schedule.arrivals.first() {
@@ -535,6 +668,14 @@ impl<'a> MinosWorld<'a> {
         result.expired = self.platform.expired;
         result.recycled = self.platform.recycled;
         result.online_pushes = self.policy.pushes();
+        result.shed = self.queue.shed;
+        result.queue_peak_depth = self.queue.peak_depth;
+        result.node_faults = self.platform.node_faults;
+        debug_assert_eq!(
+            self.queue.failed,
+            result.failed(),
+            "queue/result terminal-failure split diverged"
+        );
         result
     }
 
@@ -547,8 +688,21 @@ impl<'a> MinosWorld<'a> {
         cold: bool,
     ) {
         let Self {
-            cfg, minos, policy, platform, result, rng_workload, pool, bench_warm, obs, ..
+            cfg,
+            minos,
+            policy,
+            platform,
+            result,
+            rng_workload,
+            pool,
+            bench_warm,
+            obs,
+            rng_fault,
+            ..
         } = self;
+        // Fault plane: sentence the attempt up front so the gate can
+        // suppress the doomed benchmark sample (its report never arrives).
+        let doomed = cfg.fault.inflight_p > 0.0 && rng_fault.f64() < cfg.fault.inflight_p;
         let outcome = gate_and_start(
             DeploymentCtx {
                 spec: &cfg.function,
@@ -566,13 +720,23 @@ impl<'a> MinosWorld<'a> {
             inst,
             inv,
             cold,
+            doomed,
         );
         match outcome {
             StartOutcome::Terminate { at, crash } => {
                 events.schedule(at, Event::CrashRequeue { inst, crash });
             }
             StartOutcome::Complete { at, rec } => {
-                events.schedule(at, Event::Finish { inst, rec });
+                if doomed {
+                    // Crash at a uniform point inside the exec window; the
+                    // finish never happens.
+                    let frac = rng_fault.f64();
+                    let at = SimTime(now.0 + ((at.0 - now.0) as f64 * frac) as u64);
+                    events.schedule(at, Event::FaultCrash { inst, inv: rec.inv });
+                    pool.recycle_finish(rec);
+                } else {
+                    events.schedule(at, Event::Finish { inst, rec });
+                }
             }
         }
     }
@@ -594,6 +758,104 @@ impl<'a> MinosWorld<'a> {
             );
         }
     }
+
+    /// Probe and settle one admission outcome: sheds are terminal (the
+    /// queue already counted them) and dispatch only runs when the
+    /// arrival actually queued.
+    fn settle_admission(&mut self, events: &mut EventQueue<Event>, now: SimTime, adm: Admission) {
+        self.obs
+            .emit(now, ProbeEvent::Submitted { inv: adm.inv.id, attempt: adm.inv.retries });
+        if let Some(victim) = adm.evicted {
+            self.obs.emit(now, ProbeEvent::Shed { inv: victim.id });
+            self.revive_vu(events, now, victim.vu);
+        }
+        if adm.shed_new {
+            self.obs.emit(now, ProbeEvent::Shed { inv: adm.inv.id });
+            self.revive_vu(events, now, adm.inv.vu);
+        } else {
+            events.schedule(now, Event::Dispatch);
+        }
+    }
+
+    /// Closed-loop VUs block on their one outstanding request; when it
+    /// leaves the system without completing (terminal failure or shed),
+    /// the VU behaves like a user seeing an error: think, then resubmit.
+    /// Open-loop and trace arrivals drive themselves.
+    fn revive_vu(&self, events: &mut EventQueue<Event>, now: SimTime, vu: u32) {
+        if self.cfg.open_loop_rate_rps.is_none() && self.cfg.replay.is_none() {
+            events.schedule(self.cfg.vus.next_submit_at(now), Event::Submit { vu });
+        }
+    }
+
+    /// An in-flight attempt was killed by the fault plane (node death,
+    /// spawn failure, or injected mid-flight crash): count it and put the
+    /// invocation back through the retry gate. Never billed — the tenant
+    /// doesn't pay for infrastructure failure.
+    fn settle_fault_casualty(
+        &mut self,
+        events: &mut EventQueue<Event>,
+        now: SimTime,
+        inv: Invocation,
+    ) {
+        self.result.inflight_faults += 1;
+        match adjudicate_requeue(
+            &self.cfg.retry,
+            &mut self.queue,
+            &mut self.result,
+            &mut self.obs,
+            0,
+            &mut self.rng_fault,
+            now,
+            inv,
+        ) {
+            Some(delay_ms) => {
+                events.schedule_in_ms(self.minos.requeue_overhead_ms + delay_ms, Event::Dispatch);
+            }
+            None => self.revive_vu(events, now, inv.vu),
+        }
+    }
+
+    /// Execute every planned node death due now: kill the machine and its
+    /// resident instances (their in-flight events settle as fault
+    /// casualties when they fire), then spawn a replacement unless the
+    /// spawn fault eats it. Reschedules itself for the next death.
+    fn process_churn(&mut self, now: SimTime, events: &mut EventQueue<Event>) {
+        let Some(churn) = self.churn.as_mut() else { return };
+        let mut due = std::mem::take(&mut churn.due);
+        churn.plan.pop_due(now, &mut due);
+        for death in due.drain(..) {
+            let victim = churn.nodes[death.ordinal as usize];
+            let mut victims = std::mem::take(&mut churn.victims);
+            // `fail_node` refuses stale ids and the last machine standing
+            // (a fleet of zero nodes could never serve the rest of the
+            // queue) — a refused death is simply dropped.
+            if self.platform.fail_node(victim, &mut victims) {
+                self.obs
+                    .emit(now, ProbeEvent::NodeFault { victims: victims.len() as u64 });
+                if self.obs.is_on() {
+                    for v in &victims {
+                        self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: v.0 });
+                    }
+                }
+                if self.cfg.fault.spawn_fail_p > 0.0
+                    && self.rng_fault.f64() < self.cfg.fault.spawn_fail_p
+                {
+                    self.obs.emit(now, ProbeEvent::SpawnFailed);
+                    self.result.spawn_failed += 1;
+                } else {
+                    let fresh = self.platform.spawn_node(self.cfg.day, &mut self.rng_fault, now);
+                    let ordinal = churn.plan.add_node(now, &mut self.rng_fault);
+                    debug_assert_eq!(ordinal as usize, churn.nodes.len());
+                    churn.nodes.push(fresh);
+                }
+            }
+            churn.victims = victims;
+        }
+        churn.due = due;
+        if let Some(at) = churn.plan.next_at() {
+            events.schedule(at.max(now), Event::NodeFault);
+        }
+    }
 }
 
 impl World for MinosWorld<'_> {
@@ -610,12 +872,8 @@ impl World for MinosWorld<'_> {
                 if self.cfg.vus.may_submit(now) {
                     let vu = self.arrival_rr % self.cfg.vus.n_vus.max(1);
                     self.arrival_rr = self.arrival_rr.wrapping_add(1);
-                    let inv = self.queue.submit(vu, now);
-                    self.obs.emit(
-                        now,
-                        ProbeEvent::Submitted { inv: inv.id, attempt: inv.retries },
-                    );
-                    events.schedule(now, Event::Dispatch);
+                    let adm = self.queue.submit(vu, now);
+                    self.settle_admission(events, now, adm);
                     let rate = self.cfg.open_loop_rate_rps.expect("arrival without rate");
                     let gap_ms = self.rng_workload.exponential(rate) * 1_000.0;
                     events.schedule_in_ms(gap_ms, Event::Arrival);
@@ -630,23 +888,18 @@ impl World for MinosWorld<'_> {
                 // real execution; the trace, not a think loop, drives load.
                 let vu = self.arrival_rr % self.cfg.vus.n_vus.max(1);
                 self.arrival_rr = self.arrival_rr.wrapping_add(1);
-                let inv = self.queue.submit_scaled(vu, payload_scale, now);
-                self.obs
-                    .emit(now, ProbeEvent::Submitted { inv: inv.id, attempt: inv.retries });
-                events.schedule(now, Event::Dispatch);
-                if let Some(&(t_next, _)) = schedule.arrivals.get(idx + 1) {
+                let t_next = schedule.arrivals.get(idx + 1).map(|&(t, _)| t);
+                let adm = self.queue.submit_scaled(vu, payload_scale, now);
+                self.settle_admission(events, now, adm);
+                if let Some(t_next) = t_next {
                     events.schedule(t_next, Event::TraceArrival { idx: idx + 1 });
                 }
             }
 
             Event::Submit { vu } => {
                 if self.cfg.vus.may_submit(now) {
-                    let inv = self.queue.submit(vu, now);
-                    self.obs.emit(
-                        now,
-                        ProbeEvent::Submitted { inv: inv.id, attempt: inv.retries },
-                    );
-                    events.schedule(now, Event::Dispatch);
+                    let adm = self.queue.submit(vu, now);
+                    self.settle_admission(events, now, adm);
                 }
             }
 
@@ -665,21 +918,68 @@ impl World for MinosWorld<'_> {
                         events.schedule(ready_at, Event::ColdReady { inst: id, inv });
                     }
                     Placement::Saturated => {
-                        // Platform quota: put the invocation back at the
-                        // queue head and retry shortly.
+                        // Platform quota: park the invocation at the queue
+                        // head and retry after the (configurable)
+                        // saturation delay — unless its deadline already
+                        // passed, in which case it fails terminally.
                         self.obs.emit(now, ProbeEvent::Saturated);
-                        self.queue.untake(inv);
-                        events.schedule_in_ms(100.0, Event::Dispatch);
+                        if self.cfg.retry.past_deadline(inv.submitted_at, now) {
+                            self.obs.emit(
+                                now,
+                                ProbeEvent::RequestFailed {
+                                    inv: inv.id,
+                                    attempt: inv.retries,
+                                    reason: FailReason::DeadlineExceeded,
+                                },
+                            );
+                            self.queue.fail(&inv);
+                            self.result.failed_deadline += 1;
+                            self.revive_vu(events, now, inv.vu);
+                            // The quota may still fit a fresher request.
+                            events.schedule(now, Event::Dispatch);
+                        } else {
+                            self.queue.untake(inv);
+                            events.schedule_in_ms(
+                                self.cfg.retry.saturated_delay_ms,
+                                Event::Dispatch,
+                            );
+                        }
                     }
                 }
             }
 
             Event::ColdReady { inst, inv } => {
+                // The node died while this cold start was booting.
+                if !self.platform.scheduler.is_current(inst) {
+                    self.settle_fault_casualty(events, now, inv);
+                    return Ok(());
+                }
                 self.platform.cold_start_ready(inst);
+                // Spawn fault: the instance dies before it ever serves.
+                if self.cfg.fault.spawn_fail_p > 0.0
+                    && self.rng_fault.f64() < self.cfg.fault.spawn_fail_p
+                {
+                    if self.obs.is_on() {
+                        self.obs.emit(now, ProbeEvent::SpawnFailed);
+                        self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
+                    }
+                    self.result.spawn_failed += 1;
+                    self.platform.crash(inst);
+                    self.settle_fault_casualty(events, now, inv);
+                    return Ok(());
+                }
                 self.start_invocation(events, now, inst, inv, true);
             }
 
             Event::CrashRequeue { inst, crash } => {
+                // A node fault beat the scheduled termination: the attempt
+                // is a plain fault casualty — nothing billed or terminated.
+                if !self.platform.scheduler.is_current(inst) {
+                    let inv = crash.inv;
+                    self.pool.recycle_crash(crash);
+                    self.settle_fault_casualty(events, now, inv);
+                    return Ok(());
+                }
                 if self.obs.is_on() {
                     self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
                     self.obs.emit(
@@ -690,29 +990,40 @@ impl World for MinosWorld<'_> {
                             bench_ms: crash.bench_ms,
                         },
                     );
-                    // `settle_crash` re-queues via `requeue`, which bumps
-                    // the retry count — probe the next attempt index.
-                    self.obs.emit(
-                        now,
-                        ProbeEvent::Requeued {
-                            inv: crash.inv.id,
-                            attempt: crash.inv.retries + 1,
-                        },
-                    );
                 }
                 self.platform.crash(inst);
-                settle_crash(
-                    &self.cfg.billing,
-                    &mut self.result,
-                    &mut self.queue,
-                    now,
-                    &crash,
-                );
+                settle_crash(&self.cfg.billing, &mut self.result, now, &crash);
+                let inv = crash.inv;
                 self.pool.recycle_crash(crash);
-                events.schedule_in_ms(self.minos.requeue_overhead_ms, Event::Dispatch);
+                match adjudicate_requeue(
+                    &self.cfg.retry,
+                    &mut self.queue,
+                    &mut self.result,
+                    &mut self.obs,
+                    0,
+                    &mut self.rng_fault,
+                    now,
+                    inv,
+                ) {
+                    Some(delay_ms) => {
+                        events.schedule_in_ms(
+                            self.minos.requeue_overhead_ms + delay_ms,
+                            Event::Dispatch,
+                        );
+                    }
+                    None => self.revive_vu(events, now, inv.vu),
+                }
             }
 
             Event::Finish { inst, rec } => {
+                // The node died mid-execution: the completion never
+                // happened — settle as a fault casualty instead.
+                if !self.platform.scheduler.is_current(inst) {
+                    let inv = rec.inv;
+                    self.pool.recycle_finish(rec);
+                    self.settle_fault_casualty(events, now, inv);
+                    return Ok(());
+                }
                 self.platform.release(inst, now);
                 // Pushed policy updates arrive between requests (§IV).
                 self.policy.on_request_complete();
@@ -757,6 +1068,19 @@ impl World for MinosWorld<'_> {
                     events.schedule(next, Event::Submit { vu: rec.inv.vu });
                 }
             }
+
+            Event::FaultCrash { inst, inv } => {
+                // Injected mid-flight fault. A node fault may have razed
+                // the instance first — either way the attempt is dead and
+                // the invocation goes back through the retry gate.
+                if self.platform.scheduler.is_current(inst) {
+                    self.obs.emit(now, ProbeEvent::InstanceCrashed { inst: inst.0 });
+                    self.platform.crash(inst);
+                }
+                self.settle_fault_casualty(events, now, inv);
+            }
+
+            Event::NodeFault => self.process_churn(now, events),
         }
         Ok(())
     }
@@ -774,6 +1098,9 @@ impl World for MinosWorld<'_> {
                 completed: self.result.successful(),
                 terminations: self.result.terminations,
                 cost_usd: self.result.total_cost_usd(),
+                failed: self.result.failed(),
+                shed: self.queue.shed,
+                node_faults: self.platform.node_faults,
             };
             self.obs.record_gauge(sample);
         }

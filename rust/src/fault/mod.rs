@@ -1,0 +1,627 @@
+//! The fault plane: deterministic failure injection and honest request
+//! lifecycles.
+//!
+//! Minos deliberately crashes slow instances, but until this module the
+//! *platform* never failed: nodes lived forever, spawns always succeeded,
+//! saturated placements retried every 100 ms with no deadline, and queues
+//! grew without bound. Real FaaS fleets churn hardware underneath the
+//! tenant ("The Night Shift", Schirmer et al.) and list reliability next
+//! to performance as a first-class metric (SeBS) — so the engine needs a
+//! seeded, bit-reproducible failure model to ask the ROADMAP's question:
+//! does an online threshold track a dying fleet, or keep killing
+//! instances that are now typical?
+//!
+//! Three independent pieces, all **off by default** and all drawn from a
+//! dedicated fault RNG substream (family `6000 + day`, decorrelated from
+//! the platform's `3000/4000/5000` families) so the off path draws
+//! nothing and is bit-identical to the pre-fault engine, while the on
+//! path is bit-identical at any `--threads` / `--shards`:
+//!
+//! 1. **Node churn** ([`FaultSpec::Weibull`] / [`FaultPlan`]): every node
+//!    draws a Weibull lifetime; when it expires the node crashes — its
+//!    resident in-flight invocations die with it — and a replacement
+//!    spawns unless the replacement itself fails (`spawn_fail_p`, so
+//!    `--fault-spawn 1` is a *dying fleet*). Mid-flight invocation faults
+//!    (`inflight_p`) kill attempts without killing nodes.
+//! 2. **Retry discipline** ([`RetryConfig`]): every requeue path — Minos
+//!    termination, crash, saturation, injected fault — consults one
+//!    policy: bounded retry budget, exponential backoff with cap and
+//!    jitter, per-invocation deadlines, and a terminal
+//!    [`FailReason`]`::{Exhausted, DeadlineExceeded, Shed}` outcome
+//!    instead of the old unbounded hard-coded 100 ms saturation loop.
+//! 3. **Bounded admission** ([`AdmissionConfig`]): the invocation queue
+//!    gains a capacity and a shedding discipline (reject / drop-head /
+//!    drop-tail), so overload produces latency and *counted* sheds, not
+//!    silent infinite concurrency. Conservation becomes
+//!    `submitted == completed + failed + shed + queued + in_flight`.
+
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+
+/// The node-lifetime process (`--faults off|weibull:SHAPE,SCALE[,WARMUP]`).
+///
+/// `SCALE` and `WARMUP` are *seconds* of sim time: a node's lifetime is
+/// `warmup + Weibull(shape, scale)` — the warmup offset keeps short
+/// calibration windows churn-free when wanted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// No node churn (the default; draws nothing).
+    Off,
+    /// Weibull node lifetimes: `P(life > t) = exp(-(t/scale)^shape)`.
+    Weibull { shape: f64, scale_s: f64, warmup_s: f64 },
+}
+
+impl FaultSpec {
+    pub fn is_off(&self) -> bool {
+        matches!(self, FaultSpec::Off)
+    }
+
+    /// Parse `off` or `weibull:SHAPE,SCALE[,WARMUP]` (seconds).
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        if spec == "off" {
+            return Ok(FaultSpec::Off);
+        }
+        let Some(body) = spec.strip_prefix("weibull:") else {
+            return Err(format!(
+                "bad fault spec {spec:?}: expected `off` or `weibull:SHAPE,SCALE[,WARMUP]`"
+            ));
+        };
+        let parts: Vec<&str> = body.split(',').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            return Err(format!(
+                "bad fault spec {spec:?}: weibull takes SHAPE,SCALE[,WARMUP]"
+            ));
+        }
+        let num = |s: &str, what: &str| -> Result<f64, String> {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("bad fault {what} {s:?} in {spec:?}"))
+        };
+        let shape = num(parts[0], "shape")?;
+        let scale_s = num(parts[1], "scale")?;
+        let warmup_s = if parts.len() == 3 { num(parts[2], "warmup")? } else { 0.0 };
+        if !(shape.is_finite() && shape > 0.0) {
+            return Err(format!("fault shape must be positive, got {shape}"));
+        }
+        if !(scale_s.is_finite() && scale_s > 0.0) {
+            return Err(format!("fault scale must be positive seconds, got {scale_s}"));
+        }
+        if !(warmup_s.is_finite() && warmup_s >= 0.0) {
+            return Err(format!("fault warmup must be non-negative seconds, got {warmup_s}"));
+        }
+        Ok(FaultSpec::Weibull { shape, scale_s, warmup_s })
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultSpec::Off => write!(f, "off"),
+            FaultSpec::Weibull { shape, scale_s, warmup_s } => {
+                write!(f, "weibull:{shape},{scale_s}")?;
+                if *warmup_s > 0.0 {
+                    write!(f, ",{warmup_s}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Failure-injection knobs (`--faults`, `--fault-spawn`, `--fault-inflight`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// The node-lifetime churn process.
+    pub spec: FaultSpec,
+    /// Probability that the replacement spawn after a node crash fails
+    /// (1.0 = no replacements: the fleet decays — `scenarios::dying_fleet`).
+    pub spawn_fail_p: f64,
+    /// Per-attempt probability that a dispatched invocation faults
+    /// mid-flight (the attempt crashes partway through execution; its
+    /// benchmark sample is lost and never reaches the policy).
+    pub inflight_p: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { spec: FaultSpec::Off, spawn_fail_p: 0.0, inflight_p: 0.0 }
+    }
+}
+
+impl FaultConfig {
+    /// True when no fault mechanism is active: the world must not build a
+    /// fault RNG, draw from one, or branch into any fault path.
+    pub fn is_off(&self) -> bool {
+        self.spec.is_off() && self.spawn_fail_p == 0.0 && self.inflight_p == 0.0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (p, what) in [(self.spawn_fail_p, "--fault-spawn"), (self.inflight_p, "--fault-inflight")]
+        {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{what} must be a probability in [0, 1], got {p}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why a request terminally failed (recorded in metrics and probes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The retry budget ran out.
+    Exhausted,
+    /// The per-invocation deadline passed.
+    DeadlineExceeded,
+    /// Admission control dropped it (queue over capacity).
+    Shed,
+}
+
+/// What to do with a request that needs another attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetryDecision {
+    /// Try again after this extra delay (on top of any requeue overhead).
+    Retry { delay_ms: f64 },
+    /// Give up: record a terminal failure.
+    Fail(FailReason),
+}
+
+/// The unified retry/timeout/backoff policy
+/// (`--retry budget:N,backoff:BASE[,CAP][,JITTER]`, `--timeout DUR`,
+/// `--saturated-delay DUR`).
+///
+/// Defaults reproduce the pre-fault engine exactly: unbounded retries, no
+/// deadline, no backoff, and the historical 100 ms saturation retry delay
+/// — and with those defaults [`RetryConfig::on_requeue`] never draws RNG.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryConfig {
+    /// Maximum re-queues per invocation (`None` = unbounded, the default).
+    pub budget: Option<u32>,
+    /// Exponential backoff base, ms (`base * 2^retries`); 0 = no backoff.
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling, ms.
+    pub backoff_cap_ms: f64,
+    /// Jitter fraction in [0, 1]: the backoff delay is scaled by a uniform
+    /// factor in `[1 - jitter, 1 + jitter]` drawn from the fault stream.
+    /// 0 (the default) draws nothing.
+    pub jitter: f64,
+    /// Delay before re-dispatching after a saturated placement, ms
+    /// (historically hard-coded at 100.0 in both worlds).
+    pub saturated_delay_ms: f64,
+    /// Per-invocation deadline measured from first submission (`None` =
+    /// no deadline, the default).
+    pub timeout_ms: Option<f64>,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            budget: None,
+            backoff_base_ms: 0.0,
+            backoff_cap_ms: f64::INFINITY,
+            jitter: 0.0,
+            saturated_delay_ms: 100.0,
+            timeout_ms: None,
+        }
+    }
+}
+
+impl RetryConfig {
+    /// True when every knob is at its pre-fault default (used by tests;
+    /// the hot paths don't branch on this — the default *values* already
+    /// reproduce the old behavior).
+    pub fn is_default(&self) -> bool {
+        *self == RetryConfig::default()
+    }
+
+    /// Parse `budget:N,backoff:BASE[,CAP][,JITTER]` (BASE/CAP in ms,
+    /// JITTER a fraction). Either clause may appear alone.
+    pub fn parse(&self, spec: &str) -> Result<RetryConfig, String> {
+        let mut out = *self;
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if let Some(n) = clause.strip_prefix("budget:") {
+                let n: u32 = n
+                    .parse()
+                    .map_err(|_| format!("bad retry budget {n:?} in {spec:?}"))?;
+                out.budget = Some(n);
+            } else if let Some(b) = clause.strip_prefix("backoff:") {
+                let base: f64 =
+                    b.parse().map_err(|_| format!("bad backoff base {b:?} in {spec:?}"))?;
+                if !(base.is_finite() && base >= 0.0) {
+                    return Err(format!("backoff base must be non-negative ms, got {base}"));
+                }
+                out.backoff_base_ms = base;
+            } else if clause.is_empty() {
+                continue;
+            } else if let Ok(v) = clause.parse::<f64>() {
+                // Positional continuation of a backoff clause: CAP then
+                // JITTER (`backoff:50,2000,0.2`).
+                if out.backoff_cap_ms.is_infinite() {
+                    if !(v.is_finite() && v >= 0.0) {
+                        return Err(format!("backoff cap must be non-negative ms, got {v}"));
+                    }
+                    out.backoff_cap_ms = v;
+                } else if out.jitter == 0.0 {
+                    if !(0.0..=1.0).contains(&v) {
+                        return Err(format!("backoff jitter must be in [0, 1], got {v}"));
+                    }
+                    out.jitter = v;
+                } else {
+                    return Err(format!("too many positional values in retry spec {spec:?}"));
+                }
+            } else {
+                return Err(format!(
+                    "bad retry clause {clause:?} in {spec:?}: expected \
+                     budget:N,backoff:BASE[,CAP][,JITTER]"
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Exponential backoff delay for an invocation that has already been
+    /// re-queued `retries` times. 0 with no backoff configured; jitter
+    /// (when set) draws one uniform from the fault stream.
+    pub fn backoff_ms(&self, retries: u32, rng: &mut Rng) -> f64 {
+        if self.backoff_base_ms <= 0.0 {
+            return 0.0;
+        }
+        let exp = retries.min(52); // 2^53 saturates f64 integer precision
+        let mut d = (self.backoff_base_ms * (1u64 << exp) as f64).min(self.backoff_cap_ms);
+        if self.jitter > 0.0 {
+            d *= 1.0 + self.jitter * (2.0 * rng.f64() - 1.0);
+        }
+        d
+    }
+
+    /// Is this invocation past its deadline at `now`?
+    pub fn past_deadline(&self, submitted_at: SimTime, now: SimTime) -> bool {
+        match self.timeout_ms {
+            Some(t) => now.ms_since(submitted_at) > t,
+            None => false,
+        }
+    }
+
+    /// The single retry gate every requeue path goes through. `retries` is
+    /// the number of re-queues *already* performed for this invocation.
+    /// With default config this always returns `Retry { delay_ms: 0.0 }`
+    /// and draws nothing.
+    pub fn on_requeue(
+        &self,
+        retries: u32,
+        submitted_at: SimTime,
+        now: SimTime,
+        rng: &mut Rng,
+    ) -> RetryDecision {
+        if self.past_deadline(submitted_at, now) {
+            return RetryDecision::Fail(FailReason::DeadlineExceeded);
+        }
+        if let Some(budget) = self.budget {
+            if retries >= budget {
+                return RetryDecision::Fail(FailReason::Exhausted);
+            }
+        }
+        RetryDecision::Retry { delay_ms: self.backoff_ms(retries, rng) }
+    }
+}
+
+/// What to do with a new arrival when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Refuse the arrival (it is shed; the queue is untouched).
+    #[default]
+    Reject,
+    /// Evict the oldest queued request to admit the arrival.
+    DropHead,
+    /// Evict the newest queued request to admit the arrival.
+    DropTail,
+}
+
+impl ShedPolicy {
+    pub fn parse(spec: &str) -> Result<ShedPolicy, String> {
+        match spec {
+            "reject" => Ok(ShedPolicy::Reject),
+            "drop-head" => Ok(ShedPolicy::DropHead),
+            "drop-tail" => Ok(ShedPolicy::DropTail),
+            other => Err(format!(
+                "bad shed policy {other:?}: expected reject, drop-head, or drop-tail"
+            )),
+        }
+    }
+}
+
+/// Bounded-admission knobs (`--queue-cap N --shed reject|drop-head|drop-tail`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AdmissionConfig {
+    /// Maximum queued (not in-flight) requests; `None` = unbounded, the
+    /// default. Re-queues and untakes always bypass the cap — accepted
+    /// work is never shed.
+    pub cap: Option<usize>,
+    pub shed: ShedPolicy,
+}
+
+impl AdmissionConfig {
+    pub fn is_off(&self) -> bool {
+        self.cap.is_none()
+    }
+}
+
+/// One scheduled node death: when, and which spawn-ordinal node dies.
+/// The plan tracks nodes by their *spawn ordinal* (0-based order of
+/// spawning), which the world maps to the live `NodeId` at kill time —
+/// plans stay value-typed and serializable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannedDeath {
+    pub at: SimTime,
+    /// Spawn ordinal of the doomed node (initial pool: slot order).
+    pub ordinal: u64,
+}
+
+/// The seeded node-churn plan: a time-ordered queue of node deaths, grown
+/// lazily as replacements spawn. All draws come from the fault stream the
+/// plan was built with, in a fixed order (initial pool in slot order,
+/// replacements in death order) — the plan is a pure function of
+/// `(seed, day, shard)` and never of thread scheduling.
+#[derive(Debug)]
+pub struct FaultPlan {
+    shape: f64,
+    scale_ms: f64,
+    warmup_ms: f64,
+    /// Pending deaths, sorted by time descending (pop from the back).
+    pending: Vec<PlannedDeath>,
+    /// Next spawn ordinal to assign to a replacement node.
+    next_ordinal: u64,
+    /// No deaths are scheduled past this time (keeps the event loop
+    /// finite: an eternal churn chain would never drain the queue).
+    horizon: SimTime,
+}
+
+impl FaultPlan {
+    /// Draw lifetimes for the initial pool of `n_nodes` nodes (ordinals
+    /// `0..n_nodes`, matching slot order). Returns `None` when the spec
+    /// is off — callers must not construct fault state at all then.
+    pub fn build(
+        spec: FaultSpec,
+        n_nodes: usize,
+        horizon: SimTime,
+        rng: &mut Rng,
+    ) -> Option<FaultPlan> {
+        let FaultSpec::Weibull { shape, scale_s, warmup_s } = spec else {
+            return None;
+        };
+        let mut plan = FaultPlan {
+            shape,
+            scale_ms: scale_s * 1_000.0,
+            warmup_ms: warmup_s * 1_000.0,
+            pending: Vec::new(),
+            next_ordinal: 0,
+            horizon,
+        };
+        for _ in 0..n_nodes {
+            plan.add_node(SimTime::ZERO, rng);
+        }
+        plan
+            .pending
+            .sort_by(|a, b| b.at.cmp(&a.at).then(b.ordinal.cmp(&a.ordinal)));
+        Some(plan)
+    }
+
+    /// Register a node spawned at `born`: draws its Weibull lifetime and,
+    /// if death lands before the horizon, schedules it. Returns the
+    /// node's ordinal.
+    pub fn add_node(&mut self, born: SimTime, rng: &mut Rng) -> u64 {
+        let ordinal = self.next_ordinal;
+        self.next_ordinal += 1;
+        let life_ms = self.warmup_ms + rng.weibull(self.shape, self.scale_ms);
+        let at = SimTime(born.0 + SimTime::from_ms(life_ms).0);
+        if at <= self.horizon {
+            // Insert keeping descending-time order (back = soonest).
+            let pos = self
+                .pending
+                .partition_point(|d| d.at > at || (d.at == at && d.ordinal > ordinal));
+            self.pending.insert(pos, PlannedDeath { at, ordinal });
+        }
+        ordinal
+    }
+
+    /// The next scheduled death, if any.
+    pub fn next_at(&self) -> Option<SimTime> {
+        self.pending.last().map(|d| d.at)
+    }
+
+    /// Pop every death due at or before `now`.
+    pub fn pop_due(&mut self, now: SimTime, out: &mut Vec<PlannedDeath>) {
+        while let Some(d) = self.pending.last() {
+            if d.at > now {
+                break;
+            }
+            out.push(*d);
+            self.pending.pop();
+        }
+    }
+
+    /// Deaths still scheduled (testing / gauges).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Weibull survival `P(life > t)` for a lifetime measured from spawn
+    /// (warmup included) — the dying-fleet property tests compare the
+    /// fleet's decay against this.
+    pub fn survival(&self, t_ms: f64) -> f64 {
+        let t = (t_ms - self.warmup_ms).max(0.0);
+        (-(t / self.scale_ms).powf(self.shape)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        assert_eq!(FaultSpec::parse("off").unwrap(), FaultSpec::Off);
+        let w = FaultSpec::parse("weibull:1.5,600").unwrap();
+        assert_eq!(w, FaultSpec::Weibull { shape: 1.5, scale_s: 600.0, warmup_s: 0.0 });
+        let w = FaultSpec::parse("weibull:0.8,120,30").unwrap();
+        assert_eq!(w, FaultSpec::Weibull { shape: 0.8, scale_s: 120.0, warmup_s: 30.0 });
+        assert_eq!(w.to_string(), "weibull:0.8,120,30");
+        for bad in ["", "weibull", "weibull:1", "weibull:0,10", "weibull:1,-2", "gamma:1,2"] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn config_defaults_are_off() {
+        let c = FaultConfig::default();
+        assert!(c.is_off());
+        assert!(c.validate().is_ok());
+        let r = RetryConfig::default();
+        assert!(r.is_default());
+        assert_eq!(r.saturated_delay_ms, 100.0);
+        assert!(AdmissionConfig::default().is_off());
+    }
+
+    #[test]
+    fn retry_spec_parses() {
+        let base = RetryConfig::default();
+        let r = base.parse("budget:3").unwrap();
+        assert_eq!(r.budget, Some(3));
+        assert_eq!(r.backoff_base_ms, 0.0);
+        let r = base.parse("budget:5,backoff:50,2000,0.2").unwrap();
+        assert_eq!(r.budget, Some(5));
+        assert_eq!(r.backoff_base_ms, 50.0);
+        assert_eq!(r.backoff_cap_ms, 2_000.0);
+        assert_eq!(r.jitter, 0.2);
+        let r = base.parse("backoff:10").unwrap();
+        assert_eq!(r.budget, None);
+        assert_eq!(r.backoff_base_ms, 10.0);
+        for bad in ["budget:x", "backoff:-1", "nope:3", "backoff:1,2,3,4"] {
+            assert!(base.parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn default_retry_gate_never_fails_and_never_draws() {
+        let r = RetryConfig::default();
+        let mut rng = Rng::new(1);
+        let before = rng.clone();
+        for retries in [0, 5, 1_000] {
+            let d = r.on_requeue(retries, SimTime::ZERO, SimTime::from_secs(1e6), &mut rng);
+            assert_eq!(d, RetryDecision::Retry { delay_ms: 0.0 });
+        }
+        // No RNG consumed: the off path must be bit-identical to the
+        // pre-fault engine.
+        let mut a = rng;
+        let mut b = before;
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn budget_and_deadline_fail_terminally() {
+        let mut r = RetryConfig { budget: Some(2), ..RetryConfig::default() };
+        let mut rng = Rng::new(2);
+        assert!(matches!(
+            r.on_requeue(1, SimTime::ZERO, SimTime::from_ms(5.0), &mut rng),
+            RetryDecision::Retry { .. }
+        ));
+        assert_eq!(
+            r.on_requeue(2, SimTime::ZERO, SimTime::from_ms(5.0), &mut rng),
+            RetryDecision::Fail(FailReason::Exhausted)
+        );
+        r.timeout_ms = Some(1_000.0);
+        assert_eq!(
+            r.on_requeue(0, SimTime::ZERO, SimTime::from_ms(1_500.0), &mut rng),
+            RetryDecision::Fail(FailReason::DeadlineExceeded)
+        );
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let r = RetryConfig {
+            backoff_base_ms: 50.0,
+            backoff_cap_ms: 300.0,
+            ..RetryConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        assert_eq!(r.backoff_ms(0, &mut rng), 50.0);
+        assert_eq!(r.backoff_ms(1, &mut rng), 100.0);
+        assert_eq!(r.backoff_ms(2, &mut rng), 200.0);
+        assert_eq!(r.backoff_ms(3, &mut rng), 300.0); // capped
+        assert_eq!(r.backoff_ms(60, &mut rng), 300.0); // no overflow
+    }
+
+    #[test]
+    fn jittered_backoff_stays_in_band_and_is_seeded() {
+        let r = RetryConfig {
+            backoff_base_ms: 100.0,
+            backoff_cap_ms: 100.0,
+            jitter: 0.25,
+            ..RetryConfig::default()
+        };
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        for _ in 0..100 {
+            let d = r.backoff_ms(0, &mut a);
+            assert!((75.0..=125.0).contains(&d), "jitter out of band: {d}");
+            assert_eq!(d, r.backoff_ms(0, &mut b), "jitter not seeded");
+        }
+    }
+
+    #[test]
+    fn plan_orders_deaths_and_respects_horizon() {
+        let spec = FaultSpec::Weibull { shape: 1.0, scale_s: 10.0, warmup_s: 0.0 };
+        let mut rng = Rng::new(5);
+        let horizon = SimTime::from_secs(30.0);
+        let mut plan = FaultPlan::build(spec, 50, horizon, &mut rng).unwrap();
+        assert!(plan.pending_len() <= 50);
+        let mut due = Vec::new();
+        plan.pop_due(horizon, &mut due);
+        let mut last = SimTime::ZERO;
+        for d in &due {
+            assert!(d.at >= last, "deaths out of order");
+            assert!(d.at <= horizon, "death past the horizon");
+            last = d.at;
+        }
+        assert_eq!(plan.pending_len(), 0);
+        // A replacement spawned near the horizon usually outlives it.
+        let ord = plan.add_node(SimTime::from_secs(29.9), &mut rng);
+        assert_eq!(ord, 50);
+    }
+
+    #[test]
+    fn plan_off_spec_is_none() {
+        let mut rng = Rng::new(6);
+        assert!(FaultPlan::build(FaultSpec::Off, 10, SimTime::from_secs(1.0), &mut rng).is_none());
+    }
+
+    #[test]
+    fn plan_deaths_match_weibull_survival() {
+        // Empirical death fraction by time t tracks 1 - S(t).
+        let spec = FaultSpec::Weibull { shape: 1.5, scale_s: 100.0, warmup_s: 10.0 };
+        let n = 4_000;
+        let mut rng = Rng::new(7);
+        let horizon = SimTime::from_secs(10_000.0);
+        let mut plan = FaultPlan::build(spec, n, horizon, &mut rng).unwrap();
+        let mut due = Vec::new();
+        plan.pop_due(horizon, &mut due);
+        for t_s in [50.0, 100.0, 200.0, 400.0] {
+            let dead = due.iter().filter(|d| d.at <= SimTime::from_secs(t_s)).count();
+            let expect = (1.0 - plan.survival(t_s * 1_000.0)) * n as f64;
+            let sd = (n as f64 * 0.25f64).sqrt().max(1.0);
+            assert!(
+                (dead as f64 - expect).abs() < 5.0 * sd,
+                "t={t_s}s: {dead} dead, expected ~{expect:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn shed_policy_parses() {
+        assert_eq!(ShedPolicy::parse("reject").unwrap(), ShedPolicy::Reject);
+        assert_eq!(ShedPolicy::parse("drop-head").unwrap(), ShedPolicy::DropHead);
+        assert_eq!(ShedPolicy::parse("drop-tail").unwrap(), ShedPolicy::DropTail);
+        assert!(ShedPolicy::parse("lifo").is_err());
+    }
+}

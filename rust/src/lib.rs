@@ -20,6 +20,7 @@
 
 pub mod coordinator;
 pub mod experiment;
+pub mod fault;
 pub mod obs;
 pub mod platform;
 pub mod policy;

@@ -74,6 +74,7 @@ COMMANDS:
   week       7-day paired experiment (Figs. 4-6)    [--days N --seed N --threads T --real --policy P]
              [--contention C --node-capacity N --drift-epoch S]
              [--timeline FILE --gauges-every DUR --probe-level L]
+             [--faults F --retry R --timeout DUR --queue-cap N --shed S]
   fig7       cost-over-time series for one day      [--day N --seed N --step S]
   pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
   calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
@@ -84,12 +85,14 @@ COMMANDS:
              (shorthand for --policy online:N on a paired day)
   openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R --policy P]
              [--timeline FILE --gauges-every DUR --probe-level L]
+             [--faults F --retry R --timeout DUR --queue-cap N --shed S]
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
              [--regions N --shards N --spill F --routing R --threads T --paired]
              [--policy P --full-records]
              [--contention C --node-capacity N --drift-epoch S]
              [--timeline FILE --gauges-every DUR --probe-level L]
+             [--faults F --retry R --timeout DUR --queue-cap N --shed S]
 
 REPLAY MODES:
   default    each function replays on its own isolated platform
@@ -136,6 +139,40 @@ CONTENTION (--contention, week/sweep/openloop/replay):
   Cluster replays scale the curve per demo-region archetype. Caveat: with
   contention on, a policy's terminations speed surviving nodes up — online
   and epsilon policies calibrate against a moving target.
+
+FAULTS (--faults, week/sweep/openloop/replay; default off):
+  off                no failure injection (bit-identical to the
+                     fault-free engine — the golden fingerprints)
+  weibull:SHAPE,SCALE[,WARMUP]  seeded node churn: every node draws a
+                     Weibull(SHAPE, SCALE-seconds) lifetime (SHAPE < 1
+                     infant mortality, 1 = exponential, > 1 wear-out);
+                     a dying node kills its resident in-flight attempts
+                     (they re-enter the retry gate, nothing is billed)
+                     and a replacement spawns, WARMUP seconds of grace
+                     before the first death. All draws come from a
+                     dedicated per-shard fault RNG stream: runs are
+                     bit-identical at any --threads / --shards.
+  --fault-spawn P    each (re)spawn fails with probability P
+  --fault-inflight P each attempt is killed mid-flight with prob. P
+
+RETRY (--retry, with --timeout / --saturated-delay; default unbounded):
+  budget:N[,backoff:BASE[,CAP[,JITTER]]]  at most N retries per request
+             (then a counted Failed{Exhausted}); exponential backoff
+             BASE*2^k ms capped at CAP with +-JITTER fraction of jitter.
+  --timeout DUR      per-request deadline from submission; an attempt
+             past it fails as Failed{DeadlineExceeded}
+  --saturated-delay DUR  re-dispatch delay after Placement::Saturated
+             (default 100ms — the historical hard-coded value)
+  Every requeue path (Minos termination, node crash, injected fault)
+  passes through the same gate; the default config retries forever with
+  zero delay, bit-identical to the historical engine.
+
+QUEUE (--queue-cap, --shed; default unbounded):
+  --queue-cap N      bound each deployment's admission queue at N
+  --shed reject|drop-head|drop-tail   full-queue policy: refuse the
+             arrival, evict the oldest waiter, or evict the newest
+  Sheds are terminal and counted; conservation holds in every mode:
+  submitted = completed + failed + shed + in flight.
 
 METRICS:
   replay and sweep record through O(1)-memory streaming sinks (Welford +
@@ -232,6 +269,70 @@ fn apply_platform_model(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
     }
     cfg.platform.variability.drift_epoch_ms = epoch_s * 1_000.0;
     Ok(())
+}
+
+/// Apply the robustness flags (week/sweep/openloop/replay): `--faults`,
+/// `--fault-spawn`, `--fault-inflight` (failure injection), `--retry`,
+/// `--timeout`, `--saturated-delay` (the unified retry gate), and
+/// `--queue-cap`/`--shed` (bounded admission). No flags leave every knob
+/// at its default — bit-identical to the fault-free engine.
+fn apply_fault_cli(args: &Args, cfg: &mut ExperimentConfig) -> Result<()> {
+    use minos::fault::{FaultSpec, ShedPolicy};
+    if let Some(spec) = args.get("faults") {
+        cfg.fault.spec = FaultSpec::parse(spec).map_err(anyhow::Error::msg)?;
+    }
+    cfg.fault.spawn_fail_p = f(args, "fault-spawn", cfg.fault.spawn_fail_p)?;
+    cfg.fault.inflight_p = f(args, "fault-inflight", cfg.fault.inflight_p)?;
+    cfg.fault.validate().map_err(anyhow::Error::msg)?;
+    if let Some(spec) = args.get("retry") {
+        cfg.retry = cfg.retry.parse(spec).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(spec) = args.get("timeout") {
+        cfg.retry.timeout_ms = Some(parse_duration_s(spec)? * 1_000.0);
+    }
+    if let Some(spec) = args.get("saturated-delay") {
+        let delay_ms = parse_duration_s(spec)? * 1_000.0;
+        cfg.retry.saturated_delay_ms = delay_ms;
+    }
+    if let Some(cap) = args.get("queue-cap") {
+        let cap: usize =
+            cap.parse().map_err(|_| anyhow::anyhow!("bad --queue-cap {cap:?}"))?;
+        if cap == 0 {
+            bail!("--queue-cap must be at least 1 (omit the flag for unbounded)");
+        }
+        cfg.admission.cap = Some(cap);
+    }
+    if let Some(spec) = args.get("shed") {
+        if cfg.admission.cap.is_none() {
+            bail!("--shed needs --queue-cap (an unbounded queue never sheds)");
+        }
+        cfg.admission.shed = ShedPolicy::parse(spec).map_err(anyhow::Error::msg)?;
+    }
+    Ok(())
+}
+
+/// True when any robustness knob left its default — the only case where
+/// the extra failure-summary lines may print (default output must stay
+/// byte-identical to the fault-free CLI).
+fn robustness_on(cfg: &ExperimentConfig) -> bool {
+    !cfg.fault.is_off() || !cfg.retry.is_default() || !cfg.admission.is_off()
+}
+
+/// One failure-ledger line for a run arm (printed only under
+/// [`robustness_on`]): terminal failures, sheds, fault casualties, and
+/// the peak admission queue depth.
+fn robustness_line(label: &str, r: &minos::experiment::metrics::RunResult) -> String {
+    format!(
+        "  {label} failed {} (exhausted {}, deadline {}), shed {}, \
+         inflight faults {}, spawn failures {}, peak queue {}",
+        r.failed(),
+        r.failed_exhausted,
+        r.failed_deadline,
+        r.shed,
+        r.inflight_faults,
+        r.spawn_failed,
+        r.queue_peak_depth,
+    )
 }
 
 /// Parse a duration spec like `60s`, `2m`, `1h`, `500ms`, or a bare
@@ -335,10 +436,17 @@ fn cmd_week(args: &Args) -> Result<()> {
     base.seed = seed;
     apply_policy(args, &mut base)?;
     apply_platform_model(args, &mut base)?;
+    apply_fault_cli(args, &mut base)?;
     let obs = parse_obs_cli(args)?;
     base.obs = obs.cfg;
     let outcomes = runner::run_week_threads(&base, days, rt.as_ref(), threads)?;
     print!("{}", report::week_report(&outcomes));
+    if robustness_on(&base) {
+        println!("\n== robustness (per day, minos arm) ==");
+        for o in &outcomes {
+            println!("{}", robustness_line(&format!("day {}:", o.day), &o.minos));
+        }
+    }
     if let Some(rt) = &rt {
         println!("\nreal PJRT executions: {}", rt.executions.get());
     }
@@ -429,6 +537,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "gauges-every",
             "gauges",
             "probe-level",
+            "faults",
+            "fault-spawn",
+            "fault-inflight",
+            "retry",
+            "timeout",
+            "saturated-delay",
+            "queue-cap",
+            "shed",
         ] {
             if args.get(ignored).is_some() {
                 bail!("--{ignored} has no effect with --policies (the policy sweep \
@@ -467,6 +583,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cfg.elysium_percentile = pcts[i];
         apply_policy(args, &mut cfg)?;
         apply_platform_model(args, &mut cfg)?;
+        apply_fault_cli(args, &mut cfg)?;
         // The sweep table only reads aggregates: stream, don't store.
         cfg.metrics = minos::experiment::MetricsMode::Streaming;
         cfg.obs = obs.cfg;
@@ -515,6 +632,7 @@ fn cmd_openloop(args: &Args) -> Result<()> {
     cfg.open_loop_rate_rps = Some(rate);
     apply_policy(args, &mut cfg)?;
     apply_platform_model(args, &mut cfg)?;
+    apply_fault_cli(args, &mut cfg)?;
     let obs = parse_obs_cli(args)?;
     cfg.obs = obs.cfg;
     let o = runner::run_paired(&cfg, None)?;
@@ -529,6 +647,10 @@ fn cmd_openloop(args: &Args) -> Result<()> {
         o.minos.cold_starts
     );
     println!("  baseline {} successful", o.baseline.successful());
+    if robustness_on(&cfg) {
+        println!("{}", robustness_line("minos:   ", &o.minos));
+        println!("{}", robustness_line("baseline:", &o.baseline));
+    }
     println!(
         "  analysis {:+.2}%  requests {:+.2}%  cost {:+.2}%",
         o.analysis_improvement_pct(),
@@ -641,6 +763,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
     cfg.seed = seed;
     apply_policy(args, &mut cfg)?;
     apply_platform_model(args, &mut cfg)?;
+    apply_fault_cli(args, &mut cfg)?;
     if let Some(r) = args.get("routing") {
         cfg.routing = RoutingSpec::parse(r).map_err(anyhow::Error::msg)?;
     }
@@ -676,6 +799,17 @@ fn cmd_replay(args: &Args) -> Result<()> {
         );
         let outcome = cluster::run_cluster(&cfg, &registry, &trace, &cluster_cfg, threads)?;
         print!("{}", report::cluster_report(&outcome));
+        if robustness_on(&cfg) {
+            let failed: u64 = outcome.per_region.iter().map(|r| r.failed()).sum();
+            let shed: u64 = outcome.per_region.iter().map(|r| r.shed()).sum();
+            let node_faults: u64 = outcome.per_region.iter().map(|r| r.node_faults).sum();
+            let spawn_failed: u64 =
+                outcome.per_region.iter().map(|r| r.spawn_failed).sum();
+            println!(
+                "robustness: {failed} failed, {shed} shed, {node_faults} node faults, \
+                 {spawn_failed} replacement spawns failed"
+            );
+        }
         // One timeline track per region, in config (= report) order.
         export_obs(&obs, &outcome.obs_tracks())?;
         return Ok(());
@@ -700,6 +834,13 @@ fn cmd_replay(args: &Args) -> Result<()> {
     }
     let outcome = runner::run_trace_threads(&cfg, &registry, &trace, rt.as_ref(), threads)?;
     print!("{}", report::trace_report(&outcome));
+    if robustness_on(&cfg) {
+        let failed: u64 = outcome.per_function.iter().map(|f| f.result.failed()).sum();
+        let shed: u64 = outcome.per_function.iter().map(|f| f.result.shed).sum();
+        let peak: u64 =
+            outcome.per_function.iter().map(|f| f.result.queue_peak_depth).max().unwrap_or(0);
+        println!("robustness: {failed} failed, {shed} shed, peak queue {peak}");
+    }
     if let Some(rt) = &rt {
         println!("real PJRT executions: {}", rt.executions.get());
     }

@@ -41,13 +41,19 @@ pub struct GaugeSample {
     pub terminations: u64,
     /// Cumulative billed cost, USD.
     pub cost_usd: f64,
+    /// Cumulative terminal failures (retry budget / deadline).
+    pub failed: u64,
+    /// Cumulative admission sheds (rejected arrivals + evictions).
+    pub shed: u64,
+    /// Cumulative fault-injected node deaths.
+    pub node_faults: u64,
 }
 
 /// The gauge CSV header (documented in the README "Observability"
 /// section — keep the two in sync).
 pub const CSV_HEADER: &str = "track,t_s,queue_depth,live_instances,warm_instances,\
 live_nodes,mean_node_factor,completed,terminations,cost_usd,\
-terminations_per_min,cost_usd_per_min";
+terminations_per_min,cost_usd_per_min,failed,shed,node_faults,churn_per_min";
 
 /// Render every track's gauge series as one CSV (tracks must already be
 /// in canonical order). Rates are per-minute deltas between consecutive
@@ -59,18 +65,19 @@ pub fn render_csv(tracks: &[&ObsData]) -> String {
     for &d in tracks {
         let mut prev: Option<&GaugeSample> = None;
         for s in &d.gauges {
-            let (term_rate, cost_rate) = match prev {
+            let (term_rate, cost_rate, churn_rate) = match prev {
                 Some(p) if s.at > p.at => {
                     let mins = (s.at.0 - p.at.0) as f64 / 60_000_000.0;
                     (
                         (s.terminations - p.terminations) as f64 / mins,
                         (s.cost_usd - p.cost_usd) / mins,
+                        (s.node_faults - p.node_faults) as f64 / mins,
                     )
                 }
-                _ => (0.0, 0.0),
+                _ => (0.0, 0.0, 0.0),
             };
             out.push_str(&format!(
-                "{},{:.3},{},{},{},{},{:.6},{},{},{:.9},{:.4},{:.9}\n",
+                "{},{:.3},{},{},{},{},{:.6},{},{},{:.9},{:.4},{:.9},{},{},{},{:.4}\n",
                 d.track,
                 s.at.as_secs(),
                 s.queue_depth,
@@ -83,6 +90,10 @@ pub fn render_csv(tracks: &[&ObsData]) -> String {
                 s.cost_usd,
                 term_rate,
                 cost_rate,
+                s.failed,
+                s.shed,
+                s.node_faults,
+                churn_rate,
             ));
             prev = Some(s);
         }
@@ -107,6 +118,7 @@ mod tests {
             completed,
             terminations,
             cost_usd: cost,
+            ..GaugeSample::default()
         }
     }
 
@@ -120,9 +132,31 @@ mod tests {
         assert_eq!(lines.len(), 3);
         assert_eq!(lines[0], CSV_HEADER);
         assert!(lines[1].starts_with("eu-west,60.000,1,4,2,10,1.250000,10,2,"));
+        // First sample has no predecessor: all rates are 0. The failure
+        // columns (failed, shed, node_faults, churn_per_min) close the row.
+        assert!(lines[1].ends_with(",0.0000,0.000000000,0,0,0,0.0000"));
         // Second sample: 3 terminations and 0.6 USD over exactly 1 min.
-        assert!(lines[1].ends_with(",0.0000,0.000000000"));
         assert!(lines[2].contains(",3.0000,"));
+    }
+
+    #[test]
+    fn failure_columns_and_churn_rate_render() {
+        let mut d = ObsData::default();
+        d.track = "r".into();
+        let mut a = sample(60.0, 1, 0, 0.0);
+        a.failed = 2;
+        a.shed = 3;
+        a.node_faults = 4;
+        let mut b = sample(120.0, 2, 0, 0.0);
+        b.failed = 5;
+        b.shed = 6;
+        b.node_faults = 10;
+        d.gauges = vec![a, b];
+        let csv = render_csv(&[&d]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[1].ends_with(",2,3,4,0.0000"));
+        // 6 node faults over one minute → churn 6/min.
+        assert!(lines[2].ends_with(",5,6,10,6.0000"));
     }
 
     #[test]

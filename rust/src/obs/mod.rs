@@ -97,6 +97,15 @@ pub enum ProbeEvent {
     /// Minos terminated the instance after a failed verdict; the request
     /// will be re-queued.
     Terminated { inv: u64, attempt: u32, bench_ms: f64 },
+    /// A requeue was granted by the retry policy; the request re-enters
+    /// the queue after the backoff delay.
+    RetryScheduled { inv: u64, attempt: u32, delay_ms: f64 },
+    /// Terminal failure: the retry policy refused another attempt
+    /// (budget exhausted or deadline exceeded).
+    RequestFailed { inv: u64, attempt: u32, reason: crate::fault::FailReason },
+    /// Bounded admission shed the request: a rejected arrival, or a
+    /// queued request evicted by drop-head/drop-tail. Terminal.
+    Shed { inv: u64 },
 
     // -- platform (Summary) ----------------------------------------------
     /// Cold start scheduled: a new instance occupies a node.
@@ -114,6 +123,12 @@ pub enum ProbeEvent {
     Saturated,
     /// OU drift epochs the node fleet crossed since the last probe.
     DriftEpochs { count: u64 },
+    /// Fault-injected node death: the machine and its `victims` resident
+    /// instances are gone; their in-flight work crashes.
+    NodeFault { victims: u64 },
+    /// A replacement node failed to come up (`--fault-spawn`), or a
+    /// cold start was killed by a spawn fault before the instance booted.
+    SpawnFailed,
 
     // -- policy (Summary) ------------------------------------------------
     /// The published elysium threshold changed (online collector push or
@@ -129,7 +144,8 @@ impl ProbeEvent {
         use ProbeEvent::*;
         match self {
             Submitted { .. } | Requeued { .. } | AttemptStarted { .. }
-            | GateVerdict { .. } | Finished { .. } | Terminated { .. } => Level::Detail,
+            | GateVerdict { .. } | Finished { .. } | Terminated { .. }
+            | RetryScheduled { .. } | RequestFailed { .. } | Shed { .. } => Level::Detail,
             _ => Level::Summary,
         }
     }
@@ -146,6 +162,12 @@ impl ProbeEvent {
             GateVerdict { .. } => "gate.fail",
             Finished { .. } => "lifecycle.finished",
             Terminated { .. } => "lifecycle.terminated",
+            RetryScheduled { .. } => "lifecycle.retry_scheduled",
+            RequestFailed { reason: crate::fault::FailReason::DeadlineExceeded, .. } => {
+                "lifecycle.failed_deadline"
+            }
+            RequestFailed { .. } => "lifecycle.failed_exhausted",
+            Shed { .. } => "lifecycle.shed",
             InstanceSpawned { .. } => "platform.instance_spawned",
             InstanceCrashed { .. } => "platform.instance_crashed",
             WarmHit { .. } => "platform.warm_hit",
@@ -153,6 +175,8 @@ impl ProbeEvent {
             Recycled { .. } => "platform.recycled",
             Saturated => "platform.saturated",
             DriftEpochs { .. } => "platform.drift_epochs",
+            NodeFault { .. } => "platform.node_fault",
+            SpawnFailed => "platform.spawn_failed",
             ThresholdUpdated { .. } => "policy.threshold_updates",
             PolicyPushes { .. } => "policy.pushes",
         }

@@ -195,6 +195,83 @@ impl Emitter {
                     }
                 }
             }
+            RetryScheduled { inv, attempt, delay_ms } => {
+                self.instant(
+                    "lifecycle",
+                    "retry-scheduled",
+                    at,
+                    vec![
+                        ("inv", Json::str(&format!("{inv:x}"))),
+                        ("attempt", Json::num(attempt as f64)),
+                        ("delay_ms", num(delay_ms)),
+                    ],
+                );
+            }
+            RequestFailed { inv, attempt, reason } => {
+                // Terminal: close whichever spans are still open so the
+                // b/e pairing stays complete on failed lifecycles.
+                if let Some(st) = open.get_mut(&inv) {
+                    let reason_str = match reason {
+                        crate::fault::FailReason::Exhausted => "exhausted",
+                        crate::fault::FailReason::DeadlineExceeded => "deadline",
+                        crate::fault::FailReason::Shed => "shed",
+                    };
+                    if st.attempt {
+                        st.attempt = false;
+                        self.span(
+                            "e",
+                            "attempt",
+                            inv,
+                            at,
+                            vec![("outcome", Json::str("failed")), ("reason", Json::str(reason_str))],
+                        );
+                    }
+                    if st.wait {
+                        st.wait = false;
+                        self.span(
+                            "e",
+                            "wait",
+                            inv,
+                            at,
+                            vec![("outcome", Json::str("failed")), ("reason", Json::str(reason_str))],
+                        );
+                    }
+                }
+                self.instant(
+                    "lifecycle",
+                    "request-failed",
+                    at,
+                    vec![
+                        ("inv", Json::str(&format!("{inv:x}"))),
+                        ("attempt", Json::num(attempt as f64)),
+                    ],
+                );
+            }
+            Shed { inv } => {
+                if let Some(st) = open.get_mut(&inv) {
+                    if st.wait {
+                        st.wait = false;
+                        self.span("e", "wait", inv, at, vec![("outcome", Json::str("shed"))]);
+                    }
+                }
+                self.instant(
+                    "lifecycle",
+                    "shed",
+                    at,
+                    vec![("inv", Json::str(&format!("{inv:x}")))],
+                );
+            }
+            NodeFault { victims } => {
+                self.instant(
+                    "platform",
+                    "node-fault",
+                    at,
+                    vec![("victims", Json::num(victims as f64))],
+                );
+            }
+            SpawnFailed => {
+                self.instant("platform", "spawn-failed", at, vec![]);
+            }
             InstanceSpawned { inst } => {
                 self.instant(
                     "platform",
@@ -359,6 +436,7 @@ mod tests {
             completed: 0,
             terminations: 1,
             cost_usd: 0.1,
+            ..GaugeSample::default()
         }];
         d
     }
@@ -427,6 +505,34 @@ mod tests {
         let begins = sp.iter().filter(|(ph, ..)| ph == "b").count();
         let ends = sp.iter().filter(|(ph, ..)| ph == "e").count();
         assert_eq!(begins, ends, "dangling spans must be closed at export");
+    }
+
+    #[test]
+    fn failed_and_shed_lifecycles_close_their_spans() {
+        use crate::fault::FailReason;
+        use ProbeEvent::*;
+        let t = |ms: f64| SimTime::from_ms(ms);
+        // Invocation 1: retries then fails terminally mid-wait.
+        // Invocation 2: shed from the queue while waiting.
+        let mut d = ObsData::default();
+        d.events = vec![
+            (t(0.0), Submitted { inv: 1, attempt: 0 }),
+            (t(1.0), AttemptStarted { inv: 1, attempt: 0, inst: 3, cold: true }),
+            (t(2.0), Terminated { inv: 1, attempt: 0, bench_ms: 900.0 }),
+            (t(2.0), RetryScheduled { inv: 1, attempt: 1, delay_ms: 10.0 }),
+            (t(2.0), Requeued { inv: 1, attempt: 1 }),
+            (t(3.0), RequestFailed { inv: 1, attempt: 1, reason: FailReason::Exhausted }),
+            (t(4.0), Submitted { inv: 2, attempt: 0 }),
+            (t(5.0), Shed { inv: 2 }),
+        ];
+        let sp = spans(&chrome_trace(&[&d]));
+        let begins = sp.iter().filter(|(ph, ..)| ph == "b").count();
+        let ends = sp.iter().filter(|(ph, ..)| ph == "e").count();
+        assert_eq!(begins, ends, "terminal failures must close open spans inline");
+        // No truncated closures needed: everything was closed at its own
+        // timestamp, so the final ts is the shed at 5 ms, not a synthetic
+        // end-of-track close.
+        assert!(sp.iter().all(|&(.., ts)| ts <= 5_000.0));
     }
 
     #[test]

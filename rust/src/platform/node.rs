@@ -216,6 +216,17 @@ impl NodeTable {
         s
     }
 
+    /// Whether `id` still names a live node: slot known, generation
+    /// current, not retired. Non-panicking counterpart of the internal
+    /// resolver — the fault plane checks victims against this before
+    /// touching them, since a planned death may race a churn retirement.
+    pub fn is_alive(&self, id: NodeId) -> bool {
+        let s = id.slot();
+        s < self.generation.len()
+            && self.generation[s] == id.generation()
+            && self.alive_pos[s] != NIL
+    }
+
     /// Add a node (recycling a retired slot when one is free) and return
     /// its generation-tagged id.
     pub fn spawn(&mut self, base_factor: f64, now: SimTime) -> NodeId {
@@ -677,6 +688,19 @@ mod tests {
         assert_eq!(t.alive_count(), 2);
         assert_eq!(t.base_factor(c), 1.2);
         assert_eq!(t.base_factor(b), 1.1);
+    }
+
+    #[test]
+    fn is_alive_rejects_retired_stale_and_unknown() {
+        let mut t = NodeTable::new(NodeModel::default());
+        let a = t.spawn(1.0, SimTime::ZERO);
+        assert!(t.is_alive(a));
+        t.retire(a);
+        assert!(!t.is_alive(a), "retired node is not alive");
+        let b = t.spawn(1.1, SimTime::ZERO); // recycles a's slot
+        assert!(!t.is_alive(a), "stale generation is not alive");
+        assert!(t.is_alive(b));
+        assert!(!t.is_alive(NodeId::from_parts(99, 0)), "unknown slot");
     }
 
     #[test]

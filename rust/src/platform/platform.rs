@@ -94,6 +94,8 @@ pub struct FaasPlatform {
     pub crashes: u64,
     /// Instances recycled because their platform lifetime elapsed.
     pub recycled: u64,
+    /// Fault-injected node deaths ([`FaasPlatform::fail_node`]).
+    pub node_faults: u64,
 }
 
 impl FaasPlatform {
@@ -140,6 +142,7 @@ impl FaasPlatform {
             expired: 0,
             crashes: 0,
             recycled: 0,
+            node_faults: 0,
             cfg,
         }
     }
@@ -241,6 +244,37 @@ impl FaasPlatform {
             self.crashes += 1;
             self.nodes.depart(node);
         }
+    }
+
+    /// Fault-injected node death: every live instance resident on the
+    /// machine dies with it, the node sheds all residents in one pass and
+    /// retires (its slot recycles under a fresh generation). The victims
+    /// (slot order — deterministic) are left in `victims_out` so the
+    /// caller can turn their in-flight work into crash casualties.
+    /// Returns `false` without side effects when the id is stale/retired
+    /// or the node is the pool's last machine — the placement lottery
+    /// samples a non-empty pool, so the final node is never killed.
+    pub fn fail_node(&mut self, victim: super::node::NodeId, victims_out: &mut Vec<InstanceId>) -> bool {
+        victims_out.clear();
+        if !self.nodes.is_alive(victim) || self.nodes.alive_count() <= 1 {
+            return false;
+        }
+        self.scheduler.live_on_node(victim, victims_out);
+        for &id in victims_out.iter() {
+            self.scheduler.terminate(id);
+            self.nodes.depart(victim);
+        }
+        self.crashes += victims_out.len() as u64;
+        self.nodes.retire(victim);
+        self.node_faults += 1;
+        true
+    }
+
+    /// Spawn a replacement node mid-run, sampling its base factor from the
+    /// day's variability regime via the caller's (fault) RNG stream.
+    pub fn spawn_node(&mut self, day: u32, rng: &mut Rng, now: SimTime) -> super::node::NodeId {
+        let f = self.cfg.variability.sample_node_factor_single(day, rng);
+        self.nodes.spawn(f, now)
     }
 
     /// Read-only fleet snapshot for the observability gauge sampler:
@@ -516,6 +550,38 @@ mod tests {
         }
         assert_eq!(p.recycled, 1);
         assert_eq!(p.nodes().resident(node), 1, "recycled instance never departed");
+    }
+
+    #[test]
+    fn fail_node_kills_residents_and_retires_the_machine() {
+        use crate::util::prng::Rng;
+        // One node: both instances are co-resident victims.
+        let cfg = PlatformConfig { n_nodes: 1, ..Default::default() };
+        let mut p = FaasPlatform::new(cfg, 0, 51);
+        let ids: Vec<InstanceId> = (0..2)
+            .map(|_| match p.place(SimTime::ZERO) {
+                Placement::Cold { id, .. } => id,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        let node = p.scheduler.get(ids[0]).node;
+        // Last node in the pool: refuse (the lottery needs a machine).
+        let mut victims = Vec::new();
+        assert!(!p.fail_node(node, &mut victims));
+        assert_eq!(p.node_faults, 0);
+        // Spawn a replacement first, then the kill goes through.
+        let mut rng = Rng::new(5);
+        let fresh = p.spawn_node(0, &mut rng, SimTime::from_ms(1.0));
+        assert!(p.fail_node(node, &mut victims));
+        assert_eq!(victims, ids, "victims in slot order");
+        assert!(!p.nodes().is_alive(node));
+        assert!(p.nodes().is_alive(fresh));
+        assert_eq!(p.node_faults, 1);
+        assert_eq!(p.crashes, 2);
+        assert!(victims.iter().all(|&v| !p.scheduler.is_current(v)));
+        // Stale / double kill: no-op.
+        assert!(!p.fail_node(node, &mut victims));
+        assert_eq!(p.node_faults, 1);
     }
 
     #[test]

@@ -386,6 +386,29 @@ impl Scheduler {
         let s = self.index_of(id);
         &mut self.slots[s].inst
     }
+
+    /// Whether `id` still names a live instance: its slot exists, has not
+    /// been recycled for a newer generation, and the instance has not been
+    /// terminated. Non-panicking — the fault plane uses this to drop
+    /// in-flight events that outlived their (fault-killed) instance, where
+    /// [`Scheduler::get`] would panic on a recycled slot.
+    pub fn is_current(&self, id: InstanceId) -> bool {
+        self.slots
+            .get(id.slot())
+            .is_some_and(|s| s.generation == id.generation() && s.inst.is_live())
+    }
+
+    /// Collect the ids of every live instance resident on `node`, in slot
+    /// order (deterministic), into a caller-owned scratch buffer. Used by
+    /// the fault plane to enumerate a crashing node's victims. O(slab).
+    pub fn live_on_node(&self, node: NodeId, out: &mut Vec<InstanceId>) {
+        out.clear();
+        for slot in &self.slots {
+            if slot.inst.is_live() && slot.inst.node == node {
+                out.push(slot.inst.id);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -508,6 +531,37 @@ mod tests {
         let ids = expire_ids(&mut s2, SimTime::from_ms(10.0), 8.0);
         assert_eq!(count as usize, ids.len());
         assert_eq!(count, 3); // idle at 0,1,2,3 ms; >= 8 ms idle at t=10
+    }
+
+    #[test]
+    fn is_current_rejects_stale_terminated_and_unknown_ids() {
+        let (mut s, ids) = sched_with_idle(2);
+        assert!(s.is_current(ids[0]));
+        s.terminate(ids[0]);
+        assert!(!s.is_current(ids[0]), "terminated instance is not current");
+        // Recycle the slot: the old id's generation is now stale.
+        let newer = s.create_instance(NodeId(9), SOLO, 1.0, 1e9, SimTime::ZERO);
+        assert_eq!(newer.slot(), ids[0].slot());
+        assert!(!s.is_current(ids[0]), "stale generation is not current");
+        assert!(s.is_current(newer));
+        // Unknown slot index: no panic, just false.
+        assert!(!s.is_current(InstanceId::from_parts(999, 0)));
+    }
+
+    #[test]
+    fn live_on_node_lists_residents_in_slot_order() {
+        let mut s = Scheduler::new();
+        let a = s.create_instance(NodeId(7), SOLO, 1.0, 1e9, SimTime::ZERO);
+        let b = s.create_instance(NodeId(8), SOLO, 1.0, 1e9, SimTime::ZERO);
+        let c = s.create_instance(NodeId(7), DeployId(1), 1.0, 1e9, SimTime::ZERO);
+        let mut out = Vec::new();
+        s.live_on_node(NodeId(7), &mut out);
+        assert_eq!(out, vec![a, c], "slot order, across deployments");
+        s.terminate(a);
+        s.live_on_node(NodeId(7), &mut out);
+        assert_eq!(out, vec![c], "terminated instances are excluded");
+        s.live_on_node(NodeId(8), &mut out);
+        assert_eq!(out, vec![b]);
     }
 
     #[test]

@@ -83,6 +83,18 @@ impl VariabilityConfig {
         (ln * day_shift).clamp(0.4, 2.5)
     }
 
+    /// Single-stream variant of [`VariabilityConfig::sample_node_factor`]
+    /// for nodes spawned mid-run (fault-churn replacements): identical
+    /// distribution, but both the day-shift and the node lognormal draw
+    /// from one RNG — replacements are driven by the fault stream, which
+    /// has no split day/node substreams.
+    pub fn sample_node_factor_single(&self, day: u32, rng: &mut Rng) -> f64 {
+        let sigma = self.node_sigma(day);
+        let day_shift = 1.0 + self.day_mean_sigma * rng.normal();
+        let ln = rng.lognormal(-0.5 * sigma * sigma, sigma);
+        (ln * day_shift).clamp(0.4, 2.5)
+    }
+
     /// Diurnal speed multiplier at a virtual time-of-day.
     pub fn diurnal(&self, now: SimTime) -> f64 {
         if self.diurnal_amplitude == 0.0 {

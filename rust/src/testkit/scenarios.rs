@@ -61,6 +61,23 @@ pub fn contended_cluster(n_regions: usize, n_nodes: usize) -> ClusterConfig {
     })
 }
 
+/// A fleet under aggressive seeded churn: 50 nodes drawing short Weibull
+/// wear-out lifetimes (median well inside the 120 s horizon) and every
+/// replacement spawn failing, so the pool monotonically decays toward the
+/// last machine standing. Shared by the fault parity/property tests and
+/// `benches/fault_churn.rs`.
+pub fn dying_fleet(seed: u64) -> ExperimentConfig {
+    let mut cfg = quick_config(2, seed, 120.0);
+    cfg.platform.n_nodes = 50;
+    cfg.fault.spec = crate::fault::FaultSpec::Weibull {
+        shape: 1.5,
+        scale_s: 60.0,
+        warmup_s: 5.0,
+    };
+    cfg.fault.spawn_fail_p = 1.0;
+    cfg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +90,15 @@ mod tests {
         let m = minos_with_threshold(123.0);
         assert!(m.enabled);
         assert_eq!(m.elysium_threshold_ms, 123.0);
+    }
+
+    #[test]
+    fn dying_fleet_is_churned_and_unreplenished() {
+        let cfg = dying_fleet(11);
+        assert!(!cfg.fault.is_off());
+        assert_eq!(cfg.platform.n_nodes, 50);
+        assert_eq!(cfg.fault.spawn_fail_p, 1.0);
+        cfg.fault.validate().expect("a valid fault config");
     }
 
     #[test]

@@ -134,6 +134,16 @@ impl Rng {
         -self.f64().ln_1p_neg() / rate
     }
 
+    /// Weibull with the given shape and scale via inverse transform:
+    /// `scale * (-ln(1 - U))^(1/shape)`. Shape 1 reduces to
+    /// `exponential(1/scale)` draw-for-draw (same `ln(1-U)` path). Used
+    /// by the fault plane for node lifetimes.
+    #[inline]
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        scale * (-self.f64().ln_1p_neg()).powf(1.0 / shape)
+    }
+
     /// Shuffle a slice in place (Fisher–Yates).
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -243,6 +253,20 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.exponential(0.5)).sum::<f64>() / n as f64;
         assert!((mean - 2.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn weibull_median_and_shape1_mean() {
+        let mut r = Rng::new(10);
+        // Shape 1 is exponential: mean == scale.
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.weibull(1.0, 3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.1, "shape-1 mean {mean}");
+        // Median of Weibull(k, λ) is λ (ln 2)^(1/k).
+        let mut xs: Vec<f64> = (0..50_001).map(|_| r.weibull(2.0, 1.0)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want = (2.0f64.ln()).powf(0.5);
+        assert!((xs[25_000] - want).abs() < 0.02, "median {}", xs[25_000]);
     }
 
     #[test]

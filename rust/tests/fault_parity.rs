@@ -1,0 +1,298 @@
+//! Robustness-plane safety net: failure injection, the unified retry
+//! gate, and bounded admission.
+//!
+//! The contract (`fault/`, `experiment::world`, `experiment::cluster`):
+//!
+//! 1. Every knob defaults off, and the off position is *inert*: nothing
+//!    draws from the fault RNG stream, so the default config is
+//!    bit-identical to the pre-fault engine (the golden fingerprints in
+//!    `hotpath_equivalence.rs` pin that statement across releases; here
+//!    we pin the counters and the neutral-gate equivalence).
+//! 2. Faults on are deterministic: a seeded churn/fault plan is a pure
+//!    function of `(seed, day, shard)` — bit-identical at any `--threads`
+//!    for a fixed shard count, and reproducible run over run.
+//! 3. Failures are *accounted*, never dropped: submitted = completed +
+//!    failed + shed in every mode (the queues also self-check this via
+//!    debug asserts on every run).
+//! 4. A bounded queue never exceeds its cap, and overload turns into
+//!    counted sheds instead of unbounded memory.
+//! 5. A dying fleet (churn with no replacements) decays at the rate the
+//!    Weibull plan prescribes.
+
+use minos::experiment::{cluster::run_cluster, runner, ClusterOutcome, ExperimentConfig};
+use minos::fault::{FaultPlan, FaultSpec, ShedPolicy};
+use minos::platform::ClusterConfig;
+use minos::sim::SimTime;
+use minos::testkit::scenarios;
+use minos::trace::{FunctionRegistry, SynthConfig, Trace};
+use minos::util::prng::Rng;
+
+fn demo_trace(n_regions: usize, seed: u64) -> Trace {
+    SynthConfig {
+        n_functions: 4,
+        n_regions,
+        hours: 0.05,
+        total_rate_rps: 4.0,
+        region_spill: 0.2,
+        seed,
+        ..Default::default()
+    }
+    .generate()
+}
+
+/// A config with the whole fault plane lit up: node churn, spawn and
+/// in-flight fault injection, a finite retry budget with backoff.
+fn faulted_cfg(day: u32, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::smoke(day, seed);
+    cfg.fault.spec = FaultSpec::Weibull { shape: 1.2, scale_s: 90.0, warmup_s: 5.0 };
+    cfg.fault.spawn_fail_p = 0.2;
+    cfg.fault.inflight_p = 0.05;
+    cfg.retry = cfg.retry.parse("budget:3,backoff:20,500").unwrap();
+    cfg
+}
+
+fn assert_bit_identical(a: &ClusterOutcome, b: &ClusterOutcome, what: &str) {
+    assert_eq!(a.total_completed(), b.total_completed(), "{what}: completed");
+    assert_eq!(a.total_terminations(), b.total_terminations(), "{what}: terminations");
+    assert_eq!(
+        a.total_cost_usd().to_bits(),
+        b.total_cost_usd().to_bits(),
+        "{what}: cost bits"
+    );
+    for (ra, rb) in a.per_region.iter().zip(&b.per_region) {
+        assert_eq!(ra.crashes, rb.crashes, "{what}: {} crashes", ra.region_name);
+        assert_eq!(ra.node_faults, rb.node_faults, "{what}: {} node faults", ra.region_name);
+        assert_eq!(
+            ra.spawn_failed, rb.spawn_failed,
+            "{what}: {} spawn failures",
+            ra.region_name
+        );
+        assert_eq!(ra.failed(), rb.failed(), "{what}: {} failed", ra.region_name);
+        assert_eq!(ra.shed(), rb.shed(), "{what}: {} shed", ra.region_name);
+        for (fa, fb) in ra.per_function.iter().zip(&rb.per_function) {
+            assert_eq!(fa.function, fb.function, "{what}: slot order");
+            assert_eq!(
+                fa.result.retry_histogram, fb.result.retry_histogram,
+                "{what}: retry histogram"
+            );
+            assert_eq!(fa.result.records().len(), fb.result.records().len());
+            for (x, y) in fa.result.records().iter().zip(fb.result.records()) {
+                assert_eq!(x.completed_at, y.completed_at, "{what}: record time");
+                assert_eq!(x.inv_id, y.inv_id, "{what}: record id");
+            }
+        }
+    }
+}
+
+/// Contract 1: with every knob at its default, the failure ledger is
+/// all-zero and the retry histogram only ever fills from real requeues.
+#[test]
+fn defaults_leave_the_failure_ledger_empty() {
+    let cfg = ExperimentConfig::smoke(0, 41);
+    let minos = scenarios::minos_with_threshold(600.0);
+    let r = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    assert!(r.successful() > 0);
+    assert_eq!(r.failed(), 0, "nothing may fail terminally by default");
+    assert_eq!(r.shed, 0, "an unbounded queue never sheds");
+    assert_eq!(r.node_faults, 0);
+    assert_eq!(r.inflight_faults, 0);
+    assert_eq!(r.spawn_failed, 0);
+    assert_eq!(r.failure_rate(), 0.0);
+    let completions: u64 = r.retry_histogram.iter().sum();
+    assert_eq!(completions, r.successful(), "histogram counts every completion");
+}
+
+/// Contract 1, the sharper form: a retry gate that is configured but can
+/// never fire (a huge budget, zero backoff) routes every requeue through
+/// the new code path yet stays bit-identical to the default engine.
+#[test]
+fn neutral_retry_gate_is_bit_identical_to_default() {
+    let cfg = ExperimentConfig::smoke(1, 42);
+    let mut gated = cfg.clone();
+    gated.retry = gated.retry.parse("budget:4000000000").unwrap();
+    let minos = scenarios::minos_with_threshold(450.0);
+    let a = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    let b = runner::run_single(&gated, &minos, 0, false, None).unwrap();
+    assert!(a.terminations > 0, "threshold must actually terminate for this to bite");
+    assert_eq!(a.successful(), b.successful());
+    assert_eq!(a.terminations, b.terminations);
+    assert_eq!(a.total_cost_usd().to_bits(), b.total_cost_usd().to_bits());
+    assert_eq!(a.retry_histogram, b.retry_histogram);
+    assert_eq!(b.failed(), 0, "an unreachable budget never fails anything");
+}
+
+/// Contract 2: the same faulted run twice is the same run, bit for bit.
+#[test]
+fn faulted_run_is_reproducible() {
+    let cfg = faulted_cfg(2, 43);
+    let minos = scenarios::minos_with_threshold(500.0);
+    let a = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    let b = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    assert!(a.node_faults > 0, "a 90 s scale over 120 s must kill nodes");
+    assert_eq!(a.node_faults, b.node_faults);
+    assert_eq!(a.inflight_faults, b.inflight_faults);
+    assert_eq!(a.spawn_failed, b.spawn_failed);
+    assert_eq!(a.failed(), b.failed());
+    assert_eq!(a.successful(), b.successful());
+    assert_eq!(a.total_cost_usd().to_bits(), b.total_cost_usd().to_bits());
+}
+
+/// Contract 2 at the week level: faulted paired days fan out over
+/// threads bit-identically.
+#[test]
+fn faulted_week_is_thread_invariant() {
+    let base = faulted_cfg(0, 44);
+    let a = runner::run_week_threads(&base, 2, None, 1).unwrap();
+    let b = runner::run_week_threads(&base, 2, None, 4).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.minos.successful(), y.minos.successful());
+        assert_eq!(x.minos.failed(), y.minos.failed());
+        assert_eq!(x.minos.node_faults, y.minos.node_faults);
+        assert_eq!(
+            x.minos.total_cost_usd().to_bits(),
+            y.minos.total_cost_usd().to_bits()
+        );
+        assert_eq!(
+            x.baseline.total_cost_usd().to_bits(),
+            y.baseline.total_cost_usd().to_bits()
+        );
+    }
+}
+
+/// Contract 2 in the cluster world: faults on, fixed shard count,
+/// threads 1 vs 8 — bit-identical, for both the unsharded engine and a
+/// 4-way sharded region (each shard churns its own decorrelated stream).
+#[test]
+fn faulted_cluster_replay_is_thread_and_shard_deterministic() {
+    let trace = demo_trace(2, 401);
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(2);
+    let mut cfg = faulted_cfg(0, 45);
+    let a1 = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+    let a8 = run_cluster(&cfg, &registry, &trace, &cluster, 8).unwrap();
+    assert_bit_identical(&a1, &a8, "faulted shards=1 threads 1 vs 8");
+    let total_faults: u64 = a1.per_region.iter().map(|r| r.node_faults).sum();
+    assert!(total_faults > 0, "the faulted replay never churned a node");
+    cfg.shards = 4;
+    let b1 = run_cluster(&cfg, &registry, &trace, &cluster, 1).unwrap();
+    let b8 = run_cluster(&cfg, &registry, &trace, &cluster, 8).unwrap();
+    assert_bit_identical(&b1, &b8, "faulted shards=4 threads 1 vs 8");
+}
+
+/// Contract 3: an exhausted retry budget turns every doomed request into
+/// a *counted* terminal failure, and the ledger still balances against
+/// the trace's arrival count — in the single-deployment world.
+#[test]
+fn retry_exhaustion_is_counted_and_conserved() {
+    let trace = demo_trace(1, 402);
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let mut cfg = ExperimentConfig::smoke(0, 46);
+    // Every attempt dies mid-flight and no retries are allowed: the whole
+    // trace must come out the Failed{Exhausted} door.
+    cfg.fault.inflight_p = 1.0;
+    cfg.retry = cfg.retry.parse("budget:0").unwrap();
+    let o = runner::run_trace_threads(&cfg, &registry, &trace, None, 1).unwrap();
+    let arrivals = o.total_arrivals() as u64;
+    let completed = o.total_completed();
+    let failed: u64 = o.per_function.iter().map(|f| f.result.failed()).sum();
+    let shed: u64 = o.per_function.iter().map(|f| f.result.shed).sum();
+    assert_eq!(completed, 0, "a p=1 in-flight fault rate lets nothing finish");
+    assert!(failed > 0);
+    assert_eq!(completed + failed + shed, arrivals, "requests leaked from the ledger");
+    for f in &o.per_function {
+        assert!(f.result.failure_rate() > 0.99);
+    }
+}
+
+/// Contract 3 in the cluster world: same exhaustion setup through
+/// `RegionWorld`, same conservation invariant.
+#[test]
+fn cluster_retry_exhaustion_is_conserved() {
+    let trace = demo_trace(2, 403);
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(2);
+    let mut cfg = ExperimentConfig::smoke(0, 47);
+    cfg.fault.inflight_p = 1.0;
+    cfg.retry = cfg.retry.parse("budget:0").unwrap();
+    let o = run_cluster(&cfg, &registry, &trace, &cluster, 2).unwrap();
+    let arrivals = o.total_arrivals() as u64;
+    let failed: u64 = o.per_region.iter().map(|r| r.failed()).sum();
+    let shed: u64 = o.per_region.iter().map(|r| r.shed()).sum();
+    assert_eq!(o.total_completed(), 0);
+    assert!(failed > 0);
+    assert_eq!(failed + shed, arrivals, "requests leaked from the cluster ledger");
+}
+
+/// Contract 3, deadline flavor: a tight timeout fails slow requests as
+/// DeadlineExceeded instead of retrying them forever.
+#[test]
+fn deadlines_fail_requests_under_a_starved_quota() {
+    let mut cfg = ExperimentConfig::smoke(0, 48);
+    // One instance for 10 closed-loop VUs: most requests sit saturated
+    // far past a 2 s deadline.
+    cfg.platform.max_instances = 1;
+    cfg.vus.n_vus = 10;
+    cfg.retry.timeout_ms = Some(2_000.0);
+    let minos = scenarios::minos_with_threshold(f64::INFINITY);
+    let r = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    assert!(r.failed_deadline > 0, "a starved quota must blow deadlines");
+    assert!(r.successful() > 0, "the single instance still serves someone");
+    assert_eq!(r.failed_exhausted, 0, "no budget was configured");
+}
+
+/// Contract 4: a capped queue under a 10x-overload open loop never
+/// exceeds its cap, sheds the excess, and counts every shed — for both
+/// reject and drop-head policies.
+#[test]
+fn bounded_queue_caps_depth_and_counts_sheds() {
+    for shed in [ShedPolicy::Reject, ShedPolicy::DropHead, ShedPolicy::DropTail] {
+        let mut cfg = ExperimentConfig::smoke(0, 49);
+        cfg.vus.horizon = SimTime::from_secs(60.0);
+        // ~50 req/s against a quota of a few instances: deep overload.
+        cfg.open_loop_rate_rps = Some(50.0);
+        cfg.platform.max_instances = 4;
+        cfg.admission.cap = Some(16);
+        cfg.admission.shed = shed;
+        let minos = scenarios::minos_with_threshold(f64::INFINITY);
+        let r = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+        assert!(
+            r.queue_peak_depth <= 16,
+            "{shed:?}: queue depth {} exceeded the cap",
+            r.queue_peak_depth
+        );
+        assert!(r.shed > 0, "{shed:?}: a 10x overload must shed");
+        assert!(r.successful() > 0, "{shed:?}: shedding must not starve the system");
+        assert!(r.failure_rate() > 0.0);
+    }
+}
+
+/// Contract 5: the dying fleet decays at the rate its Weibull plan
+/// prescribes. With every replacement spawn failing, the death count at
+/// the horizon is a binomial draw around `n * (1 - survival(horizon))`,
+/// clamped by the last-node-standing guard.
+#[test]
+fn dying_fleet_decays_with_the_weibull_plan() {
+    let cfg = scenarios::dying_fleet(50);
+    let minos = scenarios::minos_with_threshold(600.0);
+    let r = runner::run_single(&cfg, &minos, 0, false, None).unwrap();
+    // Expected deaths from the plan's own survival curve.
+    let horizon_ms = cfg.vus.horizon.as_secs() * 1_000.0;
+    let plan = FaultPlan::build(cfg.fault.spec, 1, SimTime::from_secs(1.0), &mut Rng::new(1))
+        .expect("spec is on");
+    let n = cfg.platform.n_nodes as f64;
+    let p_dead = 1.0 - plan.survival(horizon_ms);
+    let expected = n * p_dead;
+    let sigma = (n * p_dead * (1.0 - p_dead)).sqrt();
+    let lo = (expected - 5.0 * sigma - 1.0).max(0.0) as u64;
+    let hi = ((expected + 5.0 * sigma + 1.0) as u64).min(cfg.platform.n_nodes as u64 - 1);
+    assert!(
+        (lo..=hi).contains(&r.node_faults),
+        "node faults {} outside the plan's 5-sigma band [{lo}, {hi}] \
+         (expected {expected:.1})",
+        r.node_faults
+    );
+    // Every successful node kill attempts exactly one replacement, and
+    // p=1 fails them all.
+    assert_eq!(r.spawn_failed, r.node_faults);
+    assert!(r.successful() > 0, "the shrinking fleet still served requests");
+}

@@ -10,10 +10,13 @@
 #                         end-to-end paired-paper-day request rate, bare
 #                         and with the flight recorder on (probe overhead)
 #   BENCH_cluster.json  — 4-region ≥100k-invocation replay events/s per
-#                         thread count, the bit-identity fingerprint, and
-#                         a fleet_scale section (contention_scale bench:
+#                         thread count, the bit-identity fingerprint, a
+#                         fleet_scale section (contention_scale bench:
 #                         drift-pass nodes/s up to 1M nodes + sharded
-#                         1M-node replay events/s at 1 / 4 / 8 shards)
+#                         1M-node replay events/s at 1 / 4 / 8 shards),
+#                         and a fault_churn section (fault_churn bench:
+#                         churned 50k-node replay events/s + the
+#                         thread-invariant failure-ledger fingerprint)
 #
 # --check mode (the regression gate wired into `scripts/check.sh --bench`)
 # runs the same benches into a temp dir and compares every named rate
@@ -73,24 +76,29 @@ echo
 run_bench cluster_replay "$OUT_DIR/BENCH_cluster.json"
 echo
 run_bench contention_scale "$OUT_DIR/BENCH_fleet.json"
+echo
+run_bench fault_churn "$OUT_DIR/BENCH_faults.json"
 
-# Fold the fleet-scale numbers into BENCH_cluster.json so the whole
-# cluster perf trajectory lives in one committed file.
+# Fold the fleet-scale and fault-churn numbers into BENCH_cluster.json so
+# the whole cluster perf trajectory lives in one committed file.
 if command -v python3 >/dev/null 2>&1; then
-    python3 - "$OUT_DIR/BENCH_cluster.json" "$OUT_DIR/BENCH_fleet.json" <<'PY'
+    python3 - "$OUT_DIR/BENCH_cluster.json" "$OUT_DIR/BENCH_fleet.json" \
+        "$OUT_DIR/BENCH_faults.json" <<'PY'
 import json, sys
-cluster_path, fleet_path = sys.argv[1], sys.argv[2]
+cluster_path, fleet_path, faults_path = sys.argv[1], sys.argv[2], sys.argv[3]
 with open(cluster_path) as f:
     cluster = json.load(f)
 with open(fleet_path) as f:
     cluster["fleet_scale"] = json.load(f)
+with open(faults_path) as f:
+    cluster["fault_churn"] = json.load(f)
 with open(cluster_path, "w") as f:
     json.dump(cluster, f, indent=2)
     f.write("\n")
 PY
-    rm -f "$OUT_DIR/BENCH_fleet.json"
+    rm -f "$OUT_DIR/BENCH_fleet.json" "$OUT_DIR/BENCH_faults.json"
 else
-    echo "warning: python3 unavailable; fleet-scale numbers left in BENCH_fleet.json" >&2
+    echo "warning: python3 unavailable; extra numbers left in BENCH_fleet.json/BENCH_faults.json" >&2
 fi
 
 if [ "$CHECK" -eq 0 ]; then

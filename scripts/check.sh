@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs]
+# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs] [--faults]
 #   --fast       skip the release build and the bench compile (debug tests only)
 #   --bench      additionally run the bench gate: scripts/bench.sh --check
 #                (fails on >10% rate regression or a fingerprint change vs
@@ -17,6 +17,11 @@
 #                --timeline/--gauges-every must leave the report identical to
 #                the probes-off run, export valid JSON (python3-validated) and
 #                a gauge CSV, and be byte-identical across thread counts
+#   --faults     additionally smoke the robustness plane: an explicit
+#                `--faults off` must be byte-identical to the default
+#                replay, a seeded dying-fleet replay must reproduce across
+#                two process invocations (and across thread counts), and an
+#                overloaded bounded queue must report counted sheds
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -30,6 +35,7 @@ BENCH=0
 POLICIES=0
 CONTENTION=0
 OBS=0
+FAULTS=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
@@ -37,7 +43,8 @@ for arg in "$@"; do
         --policies) POLICIES=1 ;;
         --contention) CONTENTION=1 ;;
         --obs) OBS=1 ;;
-        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs)" >&2; exit 2 ;;
+        --faults) FAULTS=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs --faults)" >&2; exit 2 ;;
     esac
 done
 
@@ -178,6 +185,44 @@ PY
     [ "$(wc -l < "$OBS_TMP/t1.json.gauges.csv")" -gt 1 ] \
         || { echo "gauge CSV has no samples" >&2; exit 1; }
     echo "observability smoke passed"
+fi
+
+if [ "$FAULTS" -eq 1 ]; then
+    echo "== robustness smoke (faults off = identity; faults on = reproducible) =="
+    cargo build --release --quiet
+    MINOS_BIN="$(pwd)/target/release/minos"
+    [ -x "$MINOS_BIN" ] || MINOS_BIN="$(pwd)/rust/target/release/minos"
+    BASE="replay --synth --functions 2 --hours 0.02 --rate 2 --seed 909 --threads 1"
+    # Off path: an explicit `--faults off` must be byte-identical to the
+    # untouched default — the knobs default inert and draw nothing.
+    out_default="$("$MINOS_BIN" $BASE)"
+    out_off="$("$MINOS_BIN" $BASE --faults off)"
+    [ "$out_default" = "$out_off" ] \
+        || { echo "--faults off diverged from the default replay" >&2; exit 1; }
+    # On path: a seeded dying-fleet replay (aggressive churn, failing
+    # replacements, budgeted retries) must reproduce byte-for-byte across
+    # process invocations and across thread counts — single-region and a
+    # sharded cluster.
+    DYING="--faults weibull:1.5,60,5 --fault-spawn 1.0 --fault-inflight 0.05 \
+--retry budget:3,backoff:20 --timeout 30s"
+    for extra in "$DYING" "--regions 2 --shards 2 $DYING"; do
+        run1="$("$MINOS_BIN" $BASE $extra)"
+        run2="$("$MINOS_BIN" $BASE $extra)"
+        [ "$run1" = "$run2" ] \
+            || { echo "faulted replay ($extra) not reproducible across processes" >&2; exit 1; }
+        run8="$("$MINOS_BIN" $BASE $extra --threads 8)"
+        # $BASE pins --threads 1; the later flag wins in the arg parser,
+        # and the report must not move.
+        [ "$run1" = "$run8" ] \
+            || { echo "faulted replay ($extra) differs between --threads 1 and 8" >&2; exit 1; }
+        echo "$run1" | grep -q "robustness:" \
+            || { echo "faulted replay ($extra) printed no robustness ledger" >&2; exit 1; }
+    done
+    # Overload: a 10x-overloaded bounded queue must shed (and count it).
+    shed_out="$("$MINOS_BIN" openloop --rate 50 --seed 909 --queue-cap 16 --shed reject)"
+    echo "$shed_out" | grep -Eq "shed [1-9][0-9]*," \
+        || { echo "overloaded bounded queue reported no sheds" >&2; exit 1; }
+    echo "robustness smoke passed"
 fi
 
 if [ "$BENCH" -eq 1 ]; then
