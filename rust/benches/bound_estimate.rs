@@ -1,0 +1,127 @@
+//! Optimality-estimator throughput: bound a recorded multi-function
+//! replay.
+//!
+//! The offline estimators (`bound::estimate`: clairvoyant greedy, the
+//! warm-reuse local search, the segment lower bound) run over every
+//! attempt of a recorded replay, so their cost scales with trace size.
+//! This bench records a ≥10k-invocation paired replay once (recording
+//! itself is physics-invisible; the replay is not what is measured), then
+//! measures estimator attempts/second over the per-function logs, and
+//! asserts the estimates are pure: bit-identical across repeats and
+//! ordered `segment_lb <= local_search <= greedy <= achieved`.
+//!
+//! Run: `cargo bench --bench bound_estimate [-- --json BENCH_bound.json]`
+//!
+//! `scripts/bench.sh` folds the JSON into `BENCH_cluster.json` (key
+//! `bound_estimate`) so the `--check` regression gate watches the
+//! estimator events/s series alongside the replay ones.
+
+use minos::bound::{estimate, BoundEstimate};
+use minos::experiment::{config::ExperimentConfig, runner, MetricsMode};
+use minos::testkit::bench::{json_output_path, throughput, time_median};
+use minos::trace::{FunctionRegistry, SynthConfig};
+use minos::util::json::Json;
+use minos::util::parallel;
+
+fn main() {
+    println!("== optimality-bound estimator benchmarks ==\n");
+
+    let synth = SynthConfig {
+        n_functions: 8,
+        n_regions: 1,
+        hours: 0.15,
+        total_rate_rps: 20.0,
+        seed: 9292,
+        ..Default::default()
+    };
+    let trace = synth.generate();
+    assert!(
+        trace.len() >= 10_000,
+        "benchmark needs a ≥10k-invocation trace, got {}",
+        trace.len()
+    );
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let mut cfg = ExperimentConfig::paper_day(0);
+    cfg.metrics = MetricsMode::Streaming;
+    cfg.record_attempts = true;
+
+    // Record once, off the clock: the estimators are the unit under test.
+    let outcome =
+        runner::run_trace_paired(&cfg, &registry, &trace, parallel::available_threads())
+            .unwrap();
+    let logs: Vec<_> = outcome
+        .per_function
+        .iter()
+        .filter_map(|f| f.minos.attempts.as_deref())
+        .collect();
+    let attempts: u64 = logs.iter().map(|l| l.len() as u64).sum();
+    assert!(!logs.is_empty() && attempts > 0, "replay recorded no attempts");
+    println!(
+        "recorded: {} invocations, {} functions, {attempts} attempts\n",
+        trace.len(),
+        logs.len()
+    );
+
+    let mut reference: Option<Vec<BoundEstimate>> = None;
+    let t = time_median("bound estimate: all function logs", 5, || {
+        let ests: Vec<BoundEstimate> = logs
+            .iter()
+            .map(|log| estimate(log, &cfg.billing, cfg.platform.idle_timeout_ms, cfg.seed))
+            .collect();
+        match &reference {
+            None => reference = Some(ests.clone()),
+            Some(want) => assert_eq!(&ests, want, "estimate is not a pure function"),
+        }
+        ests
+    });
+    let ests = reference.expect("at least one measurement");
+    let sum = |f: fn(&BoundEstimate) -> f64| ests.iter().map(f).sum::<f64>();
+    let (achieved, bound) = (sum(|e| e.achieved_usd), sum(|e| e.local_search_usd));
+    for e in &ests {
+        assert!(
+            e.segment_lb_usd <= e.local_search_usd + 1e-12
+                && e.local_search_usd <= e.greedy_usd + 1e-12
+                && e.greedy_usd <= e.achieved_usd + 1e-12,
+            "estimator ordering violated: {e:?}"
+        );
+    }
+    println!(
+        "{}  ({:.0}k attempts/s)",
+        t.report(),
+        throughput(&t, attempts) / 1e3
+    );
+    println!(
+        "\nachieved ${achieved:.4} vs bound ${bound:.4} ({} moves applied)",
+        ests.iter().map(|e| e.moves).sum::<u64>()
+    );
+
+    if let Some(path) = json_output_path() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("bound_estimate")),
+            ("trace_invocations", Json::num(trace.len() as f64)),
+            ("attempts", Json::num(attempts as f64)),
+            (
+                "fingerprint",
+                Json::obj(vec![
+                    ("achieved_bits_hex", Json::str(&format!("{:016x}", achieved.to_bits()))),
+                    ("bound_bits_hex", Json::str(&format!("{:016x}", bound.to_bits()))),
+                    (
+                        "moves",
+                        Json::num(ests.iter().map(|e| e.moves).sum::<u64>() as f64),
+                    ),
+                ]),
+            ),
+            ("results", Json::arr(vec![Json::obj(vec![
+                ("name", Json::str(&t.name)),
+                ("threads", Json::num(1.0)),
+                ("median_ms", Json::num(t.median_ms)),
+                ("median_ns", Json::num(t.median_ms * 1e6)),
+                ("events", Json::num(attempts as f64)),
+                ("events_per_s", Json::num(throughput(&t, attempts))),
+            ])])),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("machine-readable results written to {path}");
+    }
+}

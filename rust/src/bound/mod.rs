@@ -1,0 +1,21 @@
+//! Offline optimality bounds: how far from oracle is a policy?
+//!
+//! The paper reports Minos' improvement over never-terminating, but not
+//! the *denominator* — how much improvement a clairvoyant scheduler could
+//! have extracted from the same randomness. This subsystem answers that:
+//!
+//! 1. [`record`] — a deterministic attempt-log recorder fed by the shared
+//!    cold-start gate (`--record-attempts`; off is bit-identical to the
+//!    unrecorded engine).
+//! 2. [`estimators`] — greedy stopping oracle, seeded warm-reuse local
+//!    search, and a relaxed segment lower bound, with
+//!    `segment_lb ≤ local_search ≤ greedy ≤ achieved` debug-asserted.
+//! 3. `minos bound` (CLI) and regret/capture columns in
+//!    `sweep::policy_sweep` turn "X% faster than baseline" into "X% of an
+//!    achievable Y%".
+
+pub mod estimators;
+pub mod record;
+
+pub use estimators::{capture_pct, estimate, BoundEstimate};
+pub use record::{AttemptLog, AttemptOutcome, AttemptRecord, AttemptSink};

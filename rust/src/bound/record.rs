@@ -1,0 +1,351 @@
+//! Attempt-log recorder: deterministic ground truth for offline bounds.
+//!
+//! When `ExperimentConfig::record_attempts` is on, the cold-start gate in
+//! `experiment/world.rs` (shared by the single-deployment and cluster
+//! engines) writes one [`AttemptRecord`] per attempt into an
+//! [`AttemptSink`]: the realized node factor, the benchmark score, the
+//! sampled phase durations, the cold-start delay, and the keep/terminate
+//! verdict. That is exactly enough for `bound/estimators.rs` to re-cost
+//! any alternative keep/terminate (or clairvoyant warm-reuse) schedule of
+//! the *same randomness* without re-simulating.
+//!
+//! Discipline mirrors the flight recorder (`obs::ObsSink`):
+//!
+//! - **Recording draws nothing.** The sink only copies values the engine
+//!   already computed; the RNG streams are untouched, so a recording run
+//!   is physics-identical to an unrecorded one.
+//! - **Off is free.** `AttemptSink::Off` reduces every call to one
+//!   discriminant test — a recording-off run is bit-identical to the
+//!   pre-recorder engine.
+//! - **Data rides out on the result.** `take_log` moves the log onto
+//!   `RunResult::attempts` at `finish()`, same as `ObsSink::take_data`.
+
+use crate::sim::SimTime;
+
+/// How one attempt ended, as the gate decided it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttemptOutcome {
+    /// The instance served the request (gate passed, or no gate ran).
+    Kept,
+    /// The policy terminated the instance; the request re-queued.
+    Terminated,
+    /// Kept because the retry cap forced a pass (benchmark skipped).
+    Forced,
+    /// Kept by the gate but sentenced to a mid-flight fault crash. The
+    /// estimators treat chains containing crashes conservatively (no
+    /// improvement claimed) — a crash is not a schedule choice.
+    Crashed,
+}
+
+impl AttemptOutcome {
+    /// Did the instance go on to serve the request?
+    pub fn kept(self) -> bool {
+        matches!(self, AttemptOutcome::Kept | AttemptOutcome::Forced)
+    }
+}
+
+/// Ground truth of one attempt: everything needed to re-cost it under a
+/// different keep/terminate decision or on a different (recorded)
+/// instance. Times are ms of sim time; durations are ms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttemptRecord {
+    /// Invocation id (stable across re-queues; deployment-local).
+    pub inv: u64,
+    /// Attempt ordinal within the invocation (0 = first).
+    pub attempt: u32,
+    /// When the request first entered the system.
+    pub submitted_at_ms: f64,
+    /// When this attempt's gate ran (instance ready).
+    pub started_at_ms: f64,
+    /// Realized performance factor of the instance (higher = faster; only
+    /// the analysis phase scales with it).
+    pub factor: f64,
+    /// Cold start (gate ran) vs. warm reuse.
+    pub cold: bool,
+    /// Spawn-to-ready delay of the instance (0 for warm serves).
+    pub cold_delay_ms: f64,
+    /// Benchmark score, when one ran (None: warm serve, baseline arm, or
+    /// forced pass).
+    pub bench_ms: Option<f64>,
+    /// Sampled download/prepare duration (factor-independent).
+    pub prepare_ms: f64,
+    /// Sampled analysis duration *as realized at `factor`*.
+    pub analysis_ms: f64,
+    /// Fixed per-invocation overhead (factor-independent).
+    pub overhead_ms: f64,
+    pub outcome: AttemptOutcome,
+}
+
+impl AttemptRecord {
+    /// The factor-invariant work of the analysis phase: re-costing this
+    /// attempt on an instance with factor `f` realizes
+    /// `analysis_work_ms() / f` of analysis time.
+    pub fn analysis_work_ms(&self) -> f64 {
+        self.analysis_ms * self.factor
+    }
+
+    /// Billed duration had this attempt been kept: analysis starts once
+    /// both prepare and (any) benchmark finish, then overhead
+    /// (`gate_and_start`'s `exec_ms`).
+    pub fn kept_exec_ms(&self) -> f64 {
+        let gate_ms = match self.bench_ms {
+            Some(b) => self.prepare_ms.max(b),
+            None => self.prepare_ms,
+        };
+        gate_ms + self.analysis_ms + self.overhead_ms
+    }
+
+    /// Billed duration of this attempt as a termination (Fig. 3's
+    /// `d_term`: the benchmark ran, nothing else was billed).
+    pub fn term_exec_ms(&self) -> f64 {
+        self.bench_ms.unwrap_or(0.0)
+    }
+
+    /// Billed duration as the engine actually settled this attempt.
+    pub fn realized_exec_ms(&self) -> f64 {
+        if self.outcome == AttemptOutcome::Terminated {
+            self.term_exec_ms()
+        } else {
+            self.kept_exec_ms()
+        }
+    }
+
+    /// Serve duration without a gate (warm reuse re-cost at factor `f`):
+    /// prepare and overhead are factor-independent, analysis scales.
+    pub fn warm_exec_ms_at(&self, f: f64) -> f64 {
+        debug_assert!(f > 0.0);
+        self.prepare_ms + self.analysis_work_ms() / f + self.overhead_ms
+    }
+}
+
+/// The recorded run: every attempt, in settlement order. Chains (all
+/// attempts of one invocation) are reassembled by the estimators.
+#[derive(Debug, Clone, Default)]
+pub struct AttemptLog {
+    pub attempts: Vec<AttemptRecord>,
+}
+
+impl AttemptLog {
+    pub fn len(&self) -> usize {
+        self.attempts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.attempts.is_empty()
+    }
+
+    /// Largest realized factor in the log (the segment lower bound's
+    /// "best instance anyone ever saw"). `None` on an empty log.
+    pub fn max_factor(&self) -> Option<f64> {
+        self.attempts.iter().map(|a| a.factor).fold(None, |m, f| match m {
+            Some(m) if m >= f => Some(m),
+            _ => Some(f),
+        })
+    }
+}
+
+/// Per-instance spawn note, pending until the instance's first (cold)
+/// attempt claims its delay.
+#[derive(Debug, Clone, Copy)]
+struct PendingSpawn {
+    inst: u64,
+    delay_ms: f64,
+}
+
+/// Recorder state behind the `On` arm (boxed: the worlds embed the sink
+/// by value and Off must stay pointer-sized-ish).
+#[derive(Debug, Clone, Default)]
+pub struct SinkState {
+    log: AttemptLog,
+    /// Spawn delays awaiting their cold attempt. A handful of instances
+    /// are in flight between spawn and gate at any instant, so a linear
+    /// scan beats a hash map and keeps iteration order deterministic.
+    pending: Vec<PendingSpawn>,
+}
+
+/// Attempt recorder: `Off` (default, free) or `On` (collecting).
+#[derive(Debug, Clone, Default)]
+pub enum AttemptSink {
+    #[default]
+    Off,
+    On(Box<SinkState>),
+}
+
+impl AttemptSink {
+    pub fn from_flag(on: bool) -> AttemptSink {
+        if on {
+            AttemptSink::On(Box::default())
+        } else {
+            AttemptSink::Off
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, AttemptSink::On(_))
+    }
+
+    /// Note a cold spawn: the instance (raw id) becomes ready
+    /// `delay_ms` from now. Claimed by the next [`AttemptSink::record`]
+    /// for that instance with `cold = true`.
+    pub fn note_cold_spawn(&mut self, inst: u64, delay_ms: f64) {
+        if let AttemptSink::On(s) = self {
+            s.pending.push(PendingSpawn { inst, delay_ms });
+        }
+    }
+
+    /// Record one gate outcome. `inst` is the raw instance id (used only
+    /// to claim the pending spawn delay). No-op when off.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &mut self,
+        now: SimTime,
+        inst: u64,
+        inv: u64,
+        attempt: u32,
+        submitted_at: SimTime,
+        factor: f64,
+        cold: bool,
+        bench_ms: Option<f64>,
+        prepare_ms: f64,
+        analysis_ms: f64,
+        overhead_ms: f64,
+        outcome: AttemptOutcome,
+    ) {
+        let AttemptSink::On(s) = self else { return };
+        let cold_delay_ms = if cold {
+            match s.pending.iter().position(|p| p.inst == inst) {
+                Some(i) => s.pending.swap_remove(i).delay_ms,
+                None => 0.0,
+            }
+        } else {
+            0.0
+        };
+        s.log.attempts.push(AttemptRecord {
+            inv,
+            attempt,
+            submitted_at_ms: submitted_at.as_ms(),
+            started_at_ms: now.as_ms(),
+            factor,
+            cold,
+            cold_delay_ms,
+            bench_ms,
+            prepare_ms,
+            analysis_ms,
+            overhead_ms,
+            outcome,
+        });
+    }
+
+    /// Move the collected log out (None when off or empty). Mirrors
+    /// `ObsSink::take_data`: called once at world `finish()`.
+    pub fn take_log(&mut self) -> Option<Box<AttemptLog>> {
+        match std::mem::take(self) {
+            AttemptSink::Off => None,
+            AttemptSink::On(s) if s.log.is_empty() => None,
+            AttemptSink::On(s) => Some(Box::new(s.log)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(sink: &mut AttemptSink, inst: u64, inv: u64, cold: bool, outcome: AttemptOutcome) {
+        sink.record(
+            SimTime::from_secs(1.0),
+            inst,
+            inv,
+            0,
+            SimTime::from_secs(0.5),
+            1.1,
+            cold,
+            Some(300.0),
+            500.0,
+            2_000.0,
+            90.0,
+            outcome,
+        );
+    }
+
+    #[test]
+    fn off_sink_is_inert_and_yields_nothing() {
+        let mut s = AttemptSink::from_flag(false);
+        assert!(!s.is_on());
+        s.note_cold_spawn(7, 1_000.0);
+        rec(&mut s, 7, 0, true, AttemptOutcome::Kept);
+        assert!(s.take_log().is_none());
+    }
+
+    #[test]
+    fn cold_spawn_delay_claimed_once_by_matching_instance() {
+        let mut s = AttemptSink::from_flag(true);
+        assert!(s.is_on());
+        s.note_cold_spawn(7, 1_234.0);
+        s.note_cold_spawn(9, 555.0);
+        rec(&mut s, 7, 0, true, AttemptOutcome::Kept);
+        // Warm serve on the same instance must not claim a delay.
+        rec(&mut s, 7, 1, false, AttemptOutcome::Kept);
+        rec(&mut s, 9, 2, true, AttemptOutcome::Terminated);
+        let log = s.take_log().expect("log collected");
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.attempts[0].cold_delay_ms, 1_234.0);
+        assert_eq!(log.attempts[1].cold_delay_ms, 0.0);
+        assert_eq!(log.attempts[2].cold_delay_ms, 555.0);
+        assert_eq!(log.attempts[2].outcome, AttemptOutcome::Terminated);
+    }
+
+    #[test]
+    fn take_log_drains_and_resets() {
+        let mut s = AttemptSink::from_flag(true);
+        rec(&mut s, 1, 0, true, AttemptOutcome::Kept);
+        assert!(s.take_log().is_some());
+        // Drained: the sink reverts to Off, a second take yields None.
+        assert!(s.take_log().is_none());
+        // An On sink that never recorded yields None, not an empty box.
+        let mut empty = AttemptSink::from_flag(true);
+        assert!(empty.take_log().is_none());
+    }
+
+    #[test]
+    fn exec_ms_mirrors_gate_billing() {
+        let a = AttemptRecord {
+            inv: 0,
+            attempt: 0,
+            submitted_at_ms: 0.0,
+            started_at_ms: 0.0,
+            factor: 1.25,
+            cold: true,
+            cold_delay_ms: 800.0,
+            bench_ms: Some(700.0),
+            prepare_ms: 500.0,
+            analysis_ms: 2_000.0,
+            overhead_ms: 90.0,
+            outcome: AttemptOutcome::Kept,
+        };
+        // Bench (700) hides the prepare (500): gate = max of the two.
+        assert_eq!(a.kept_exec_ms(), 700.0 + 2_000.0 + 90.0);
+        assert_eq!(a.term_exec_ms(), 700.0);
+        assert_eq!(a.realized_exec_ms(), a.kept_exec_ms());
+        // Analysis work is factor-invariant: re-costing at the realized
+        // factor reproduces the realized serve (no bench on warm reuse).
+        assert!((a.warm_exec_ms_at(1.25) - (500.0 + 2_000.0 + 90.0)).abs() < 1e-9);
+        // A faster donor shortens only the analysis part.
+        assert!(a.warm_exec_ms_at(2.5) < a.warm_exec_ms_at(1.25));
+        let term = AttemptRecord { outcome: AttemptOutcome::Terminated, ..a };
+        assert_eq!(term.realized_exec_ms(), 700.0);
+        assert!(AttemptOutcome::Forced.kept());
+        assert!(!AttemptOutcome::Terminated.kept());
+    }
+
+    #[test]
+    fn max_factor_scans_the_log() {
+        let mut s = AttemptSink::from_flag(true);
+        rec(&mut s, 1, 0, true, AttemptOutcome::Kept);
+        let mut log = *s.take_log().unwrap();
+        assert_eq!(log.max_factor(), Some(1.1));
+        log.attempts[0].factor = 0.8;
+        assert_eq!(log.max_factor(), Some(0.8));
+        assert_eq!(AttemptLog::default().max_factor(), None);
+    }
+}

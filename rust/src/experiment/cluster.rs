@@ -35,6 +35,7 @@
 
 use anyhow::Result;
 
+use crate::bound::AttemptSink;
 use crate::coordinator::pretest::PretestReport;
 use crate::coordinator::queue::{Invocation, InvocationQueue};
 use crate::coordinator::MinosConfig;
@@ -101,6 +102,10 @@ struct DeployState {
     /// region recorder is shared, so the single-value watch in
     /// `Recorder::note_policy` would thrash across deployments).
     obs_last_pushes: u64,
+    /// Per-deployment attempt recorder for the offline bounds (off by
+    /// default; `cfg.record_attempts` turns it on). Each deployment owns
+    /// its own sink so the log rides out on its own `RunResult`.
+    rec: AttemptSink,
 }
 
 /// Probe invocation ids namespaced by deployment slot: each deployment's
@@ -162,6 +167,7 @@ impl RegionWorld<'_> {
                 bench_warm: false,
                 obs,
                 obs_inv_base: obs_inv_base(slot),
+                rec: &mut ds.rec,
             },
             now,
             inst,
@@ -323,6 +329,9 @@ impl World for RegionWorld<'_> {
                     Placement::Cold { id, ready_at } => {
                         self.deploys[slot as usize].result.cold_starts += 1;
                         self.obs.emit(now, ProbeEvent::InstanceSpawned { inst: id.0 });
+                        self.deploys[slot as usize]
+                            .rec
+                            .note_cold_spawn(id.0, ready_at.ms_since(now));
                         events.schedule(ready_at, CEvent::ColdReady { slot, inst: id, inv });
                     }
                     Placement::Saturated => {
@@ -867,6 +876,7 @@ fn run_region(
             policy,
             arrivals: 0,
             obs_last_pushes: 0,
+            rec: AttemptSink::from_flag(base.record_attempts),
         });
     }
 
@@ -914,6 +924,7 @@ fn run_region(
         ds.result.online_pushes = ds.policy.pushes();
         ds.result.shed = ds.queue.shed;
         ds.result.queue_peak_depth = ds.queue.peak_depth;
+        ds.result.attempts = ds.rec.take_log();
         per_function.push(DeploymentOutcome {
             region: region.id,
             function: ds.function,

@@ -87,6 +87,11 @@ pub struct ExperimentConfig {
     /// Bounded admission for the coordinator queue (capacity + shedding).
     /// Default: unbounded, never sheds.
     pub admission: AdmissionConfig,
+    /// Record per-attempt ground truth (realized factors, bench scores,
+    /// phase durations, cold-start delays) for the offline optimality
+    /// bounds (`bound/`). Off by default — recording draws no RNG and a
+    /// recording-off run is bit-identical to the pre-recorder engine.
+    pub record_attempts: bool,
 }
 
 impl ExperimentConfig {
@@ -113,6 +118,7 @@ impl ExperimentConfig {
             fault: FaultConfig::default(),
             retry: RetryConfig::default(),
             admission: AdmissionConfig::default(),
+            record_attempts: false,
         }
     }
 
@@ -193,6 +199,7 @@ mod tests {
         assert!(c.fault.is_off(), "paper config must stay fault-free");
         assert!(c.retry.is_default(), "paper config must keep unbounded retries");
         assert!(c.admission.is_off(), "paper config must keep an unbounded queue");
+        assert!(!c.record_attempts, "paper config must not record attempts");
         assert_eq!(c.retry.saturated_delay_ms, 100.0);
     }
 

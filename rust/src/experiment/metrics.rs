@@ -258,6 +258,9 @@ pub struct RunResult {
     /// Flight-recorder capture (None unless the run was instrumented —
     /// see `obs`). Observation only: never feeds back into physics.
     pub obs: Option<Box<crate::obs::ObsData>>,
+    /// Attempt log for the offline optimality bounds (None unless
+    /// `cfg.record_attempts`). Observation only, like `obs`.
+    pub attempts: Option<Box<crate::bound::AttemptLog>>,
 }
 
 impl RunResult {

@@ -309,6 +309,73 @@ pub fn trace_paired_report(outcome: &TracePairedOutcome) -> String {
     out
 }
 
+/// Render the per-function optimality-bound table of a recorded paired
+/// replay (`minos bound`). `bounds[i]` is the estimate for
+/// `outcome.per_function[i]`'s recorded Minos arm.
+pub fn bound_report(
+    outcome: &TracePairedOutcome,
+    bounds: &[crate::bound::BoundEstimate],
+) -> String {
+    debug_assert_eq!(outcome.per_function.len(), bounds.len());
+    let mut out = String::new();
+    let _ = writeln!(out, "== optimality bounds: achieved vs clairvoyant, per function ==");
+    let _ = writeln!(
+        out,
+        "{:>4} {:<14} {:>8} {:>12} {:>11} {:>11} {:>11} {:>9} {:>9} {:>6}",
+        "id", "function", "arrived", "achieved $/M", "bound $/M", "greedy $/M",
+        "seg-lb $/M", "regret", "capture", "moves"
+    );
+    let mut tot_achieved = 0.0;
+    let mut tot_bound = 0.0;
+    let mut tot_never = 0.0;
+    for (f, est) in outcome.per_function.iter().zip(bounds) {
+        let n = f.minos.successful();
+        let per_m = |usd: f64| if n > 0 { usd / n as f64 * 1e6 } else { 0.0 };
+        let achieved_cpm = f.minos.cost_per_million_usd();
+        let bound_cpm = per_m(est.bound_usd());
+        let never_cpm = f.baseline.cost_per_million_usd();
+        tot_achieved += f.minos.total_cost_usd();
+        tot_bound += est.bound_usd();
+        tot_never += f.baseline.total_cost_usd();
+        let _ = writeln!(
+            out,
+            "{:>4} {:<14} {:>8} {:>12.3} {:>11.3} {:>11.3} {:>11.3} {:>9} {:>9} {:>6}",
+            f.id.0,
+            f.name,
+            f.arrivals,
+            achieved_cpm,
+            bound_cpm,
+            per_m(est.greedy_usd),
+            per_m(est.segment_lb_usd),
+            signed_pct(est.regret_pct_of(f.minos.total_cost_usd())),
+            signed_pct(crate::bound::capture_pct(never_cpm, achieved_cpm, bound_cpm)),
+            est.moves,
+        );
+    }
+    let regret_total = if tot_bound > 0.0 {
+        (tot_achieved - tot_bound) / tot_bound * 100.0
+    } else {
+        0.0
+    };
+    let _ = writeln!(
+        out,
+        "total: achieved ${:.6}, bound ${:.6}, never ${:.6} — regret {}, \
+         capture {} of the never→bound room",
+        tot_achieved,
+        tot_bound,
+        tot_never,
+        signed_pct(regret_total),
+        signed_pct(crate::bound::capture_pct(tot_never, tot_achieved, tot_bound)),
+    );
+    let _ = writeln!(
+        out,
+        "(bound = greedy stopping oracle tightened by warm-reuse local \
+         search; seg-lb is an infeasible relaxation — see README \
+         \"Optimality bounds\")"
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,6 +442,52 @@ mod tests {
         assert!(rpt.contains("Minos vs baseline"), "{rpt}");
         assert!(rpt.contains("analysis d%"), "{rpt}");
         assert!(rpt.contains('%'), "{rpt}");
+    }
+
+    #[test]
+    fn bound_report_renders_regret_per_function() {
+        let trace = crate::trace::SynthConfig {
+            n_functions: 2,
+            hours: 0.03,
+            total_rate_rps: 2.0,
+            seed: 11,
+            ..Default::default()
+        }
+        .generate();
+        let registry = crate::trace::FunctionRegistry::demo(trace.n_functions());
+        let mut cfg = ExperimentConfig::smoke(0, 54);
+        cfg.record_attempts = true;
+        let o = crate::experiment::runner::run_trace_paired(&cfg, &registry, &trace, 1)
+            .unwrap();
+        let bounds: Vec<crate::bound::BoundEstimate> = o
+            .per_function
+            .iter()
+            .map(|f| {
+                // None only for a function that never saw an attempt.
+                f.minos
+                    .attempts
+                    .as_deref()
+                    .map(|log| {
+                        crate::bound::estimate(
+                            log,
+                            &cfg.billing,
+                            cfg.platform.idle_timeout_ms,
+                            cfg.seed,
+                        )
+                    })
+                    .unwrap_or_default()
+            })
+            .collect();
+        assert!(
+            bounds.iter().any(|b| b.attempts > 0),
+            "recording on, but no function captured attempts"
+        );
+        let rpt = bound_report(&o, &bounds);
+        assert!(rpt.contains("optimality bounds"), "{rpt}");
+        assert!(rpt.contains("regret"), "{rpt}");
+        assert!(rpt.contains("capture"), "{rpt}");
+        assert!(rpt.contains("weather-0"), "{rpt}");
+        assert!(rpt.contains("total:"), "{rpt}");
     }
 
     #[test]

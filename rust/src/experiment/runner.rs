@@ -81,6 +81,8 @@ pub fn run_pretest(cfg: &ExperimentConfig, runtime: Option<&Runtime>) -> Result<
     pretest_cfg.fault = crate::fault::FaultConfig::default();
     pretest_cfg.retry = crate::fault::RetryConfig::default();
     pretest_cfg.admission = crate::fault::AdmissionConfig::default();
+    // Same for the attempt recorder: bounds are about the main run.
+    pretest_cfg.record_attempts = false;
     let minos = MinosConfig {
         enabled: true,
         elysium_threshold_ms: f64::INFINITY,

@@ -64,6 +64,7 @@ use crate::util::prng::Rng;
 use crate::workload::weather;
 use crate::workload::FunctionSpec;
 
+use crate::bound::{AttemptOutcome, AttemptSink};
 use crate::obs::{GaugeSample, ObsSink, ProbeEvent};
 
 use super::config::ExperimentConfig;
@@ -209,6 +210,11 @@ pub(crate) struct DeploymentCtx<'a> {
     /// namespace per-deployment queues by slot (each deployment numbers
     /// its own invocations from 0); the single-deployment world passes 0.
     pub obs_inv_base: u64,
+    /// Attempt-log recorder for the offline optimality bounds
+    /// (`bound::record`). Same discipline as `obs`: observation only,
+    /// never draws RNG, and `AttemptSink::Off` reduces every record call
+    /// to one discriminant test.
+    pub rec: &'a mut AttemptSink,
 }
 
 /// What an instance does after the cold-start gate, as schedulable facts.
@@ -248,6 +254,7 @@ pub(crate) fn gate_and_start(
         bench_warm,
         obs,
         obs_inv_base,
+        rec,
     } = ctx;
     obs.emit(
         now,
@@ -285,6 +292,22 @@ pub(crate) fn gate_and_start(
                     );
                 }
                 platform.scheduler.get_mut(inst).benchmark_score = Some(bench_ms);
+                if rec.is_on() {
+                    rec.record(
+                        now,
+                        inst.0,
+                        inv.id,
+                        inv.retries,
+                        inv.submitted_at,
+                        perf,
+                        true,
+                        Some(bench_ms),
+                        phases.prepare_ms,
+                        phases.analysis_ms,
+                        phases.overhead_ms,
+                        AttemptOutcome::Terminated,
+                    );
+                }
                 return StartOutcome::Terminate {
                     at: now.plus_ms(bench_ms),
                     crash: pool.alloc_crash(CrashRecord { inv, bench_ms }),
@@ -320,6 +343,28 @@ pub(crate) fn gate_and_start(
                     None => phases.prepare_ms,
                 };
                 let exec_ms = gate_ms + phases.analysis_ms + phases.overhead_ms;
+                if rec.is_on() {
+                    rec.record(
+                        now,
+                        inst.0,
+                        inv.id,
+                        inv.retries,
+                        inv.submitted_at,
+                        perf,
+                        true,
+                        bench_ms,
+                        phases.prepare_ms,
+                        phases.analysis_ms,
+                        phases.overhead_ms,
+                        if doomed {
+                            AttemptOutcome::Crashed
+                        } else if forced {
+                            AttemptOutcome::Forced
+                        } else {
+                            AttemptOutcome::Kept
+                        },
+                    );
+                }
                 return StartOutcome::Complete {
                     at: now.plus_ms(exec_ms),
                     rec: pool.alloc_finish(FinishRecord {
@@ -354,6 +399,22 @@ pub(crate) fn gate_and_start(
         None => phases.prepare_ms,
     };
     let exec_ms = gate_ms + phases.analysis_ms + phases.overhead_ms;
+    if rec.is_on() {
+        rec.record(
+            now,
+            inst.0,
+            inv.id,
+            inv.retries,
+            inv.submitted_at,
+            perf,
+            false,
+            bench_ms,
+            phases.prepare_ms,
+            phases.analysis_ms,
+            phases.overhead_ms,
+            if doomed { AttemptOutcome::Crashed } else { AttemptOutcome::Kept },
+        );
+    }
     StartOutcome::Complete {
         at: now.plus_ms(exec_ms),
         rec: pool.alloc_finish(FinishRecord {
@@ -566,6 +627,9 @@ pub(crate) struct MinosWorld<'a> {
     rng_fault: Rng,
     /// Node-churn state (`None` ⇔ `cfg.fault.spec` is off).
     churn: Option<ChurnState>,
+    /// Attempt recorder for the offline bounds (off by default;
+    /// `cfg.record_attempts` turns it on). Draws nothing, like `obs`.
+    rec: AttemptSink,
 }
 
 impl<'a> MinosWorld<'a> {
@@ -622,6 +686,7 @@ impl<'a> MinosWorld<'a> {
             obs: ObsSink::from_config(&cfg.obs),
             rng_fault,
             churn,
+            rec: AttemptSink::from_flag(cfg.record_attempts),
         }
     }
 
@@ -662,6 +727,7 @@ impl<'a> MinosWorld<'a> {
     pub fn finish(mut self) -> RunResult {
         debug_assert!(self.queue.conserved(), "invocation conservation violated");
         self.result.obs = self.obs.take_data("run");
+        self.result.attempts = self.rec.take_log();
         let mut result = self.result;
         result.cold_starts = self.platform.cold_starts;
         result.warm_hits = self.platform.warm_hits;
@@ -698,6 +764,7 @@ impl<'a> MinosWorld<'a> {
             bench_warm,
             obs,
             rng_fault,
+            rec,
             ..
         } = self;
         // Fault plane: sentence the attempt up front so the gate can
@@ -715,6 +782,7 @@ impl<'a> MinosWorld<'a> {
                 bench_warm: *bench_warm,
                 obs,
                 obs_inv_base: 0,
+                rec,
             },
             now,
             inst,
@@ -915,6 +983,7 @@ impl World for MinosWorld<'_> {
                     }
                     Placement::Cold { id, ready_at } => {
                         self.obs.emit(now, ProbeEvent::InstanceSpawned { inst: id.0 });
+                        self.rec.note_cold_spawn(id.0, ready_at.ms_since(now));
                         events.schedule(ready_at, Event::ColdReady { inst: id, inv });
                     }
                     Placement::Saturated => {

@@ -18,6 +18,7 @@
 //! The [`runtime`] module loads the AOT artifacts through PJRT and executes
 //! them from the Rust request path; Python never runs at request time.
 
+pub mod bound;
 pub mod coordinator;
 pub mod experiment;
 pub mod fault;

@@ -12,6 +12,8 @@
 //!   replay     replay a multi-function trace (CSV file or seeded synthetic);
 //!              `--regions N` = multi-region shared-node cluster replay,
 //!              `--paired` = per-function Minos-vs-baseline figures
+//!   bound      replay with the attempt recorder on, then print the offline
+//!              optimality bounds (bound vs achieved cost per function)
 //!
 //! `--policy` selects the instance-selection rule (see `policy/`:
 //! fixed, online:N, never, budget:F, epsilon:F, randomkill:F, oracle:F);
@@ -44,7 +46,7 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["real", "verbose", "synth", "paired", "full-records"],
+        &["real", "verbose", "synth", "paired", "full-records", "record-attempts"],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -57,6 +59,7 @@ fn run() -> Result<()> {
         "online" => cmd_online(&args),
         "openloop" => cmd_openloop(&args),
         "replay" => cmd_replay(&args),
+        "bound" => cmd_bound(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -89,10 +92,12 @@ COMMANDS:
   replay     multi-function trace replay             [--trace FILE | --synth]
              [--functions N --hours H --rate R --day N --seed N --out FILE]
              [--regions N --shards N --spill F --routing R --threads T --paired]
-             [--policy P --full-records]
+             [--policy P --full-records --record-attempts]
              [--contention C --node-capacity N --drift-epoch S]
              [--timeline FILE --gauges-every DUR --probe-level L]
              [--faults F --retry R --timeout DUR --queue-cap N --shed S]
+  bound      offline optimality bounds for a replay   [--trace FILE | --synth]
+             [--functions N --hours H --rate R --day N --seed N --threads T]
 
 REPLAY MODES:
   default    each function replays on its own isolated platform
@@ -120,6 +125,26 @@ POLICIES (--policy / --policies, syntax `name` or `name:param`):
   oracle[:F]    ablation bound: judge true perf factor >= F (def. 1.0)
   The baseline arm of paired runs always uses `never`, whatever --policy
   says; per-function overrides live in the trace registry.
+
+BOUNDS (minos bound, sweep --policies, replay --record-attempts):
+  `minos bound` replays a trace (or synth workload) with the recorder on,
+  then runs the offline estimators over the realized attempt log and
+  prints bound vs achieved cost per function. Three estimators, always
+  ordered  seg-lb <= local-search <= greedy <= achieved:
+    greedy        clairvoyant stopping oracle: with the realized factor
+                  and bench draws known, stop each retry chain at its
+                  cheapest prefix (never worse than what the run did)
+    local-search  greedy tightened by warm reuse: seeded pass that moves
+                  cold keeps onto faster instances already paid for,
+                  respecting idle-timeout windows (the reported bound)
+    seg-lb        infeasible relaxation: every request billed warm at the
+                  best factor ever seen — a floor, often loose
+  sweep --policies adds `bound $/M`, `regret%` ((achieved-bound)/bound)
+  and `capture%` (share of the never->bound room realized) per policy;
+  `oracle:F` / `never` rows are labeled as controls anchoring that scale.
+  --record-attempts (replay) records the log without printing bounds.
+  Recording draws no RNG: recording-off runs are bit-identical to the
+  pre-recorder engine, and bounds are bit-identical at any --threads.
 
 ROUTING (--routing, cluster replays only):
   trace      honor the trace's region ids (default)
@@ -556,20 +581,36 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let horizon_s = f(args, "horizon", 600.0)?;
         let points = sweep::policy_sweep(&specs, seeds_per_point, horizon_s, threads)?;
         println!(
-            "{:<14} {:>10} {:>12} {:>12} {:>10}",
-            "policy", "term rate", "analysis d%", "requests d%", "cost d%"
+            "{:<20} {:>10} {:>12} {:>12} {:>10} {:>11} {:>8} {:>9}",
+            "policy", "term rate", "analysis d%", "requests d%", "cost d%", "bound $/M", "regret%", "capture%"
         );
         for p in &points {
-            let name = p.policy.to_string();
+            // `oracle:F` and `never` are bounds-related control arms, not
+            // deployable policies: oracle judges the true factor (anchors
+            // capture near 100%), never anchors it at 0%.
+            let mut name = p.policy.to_string();
+            if name == "never" || name.starts_with("oracle") {
+                name.push_str(" (control)");
+            }
             println!(
-                "{:<14} {:>10.3} {:>12.2} {:>12.2} {:>10.2}",
+                "{:<20} {:>10.3} {:>12.2} {:>12.2} {:>10.2} {:>11.2} {:>8.2} {:>9.2}",
                 name,
                 p.stats.termination_rate_mean,
                 p.stats.analysis_pct_mean,
                 p.stats.requests_pct_mean,
                 p.stats.cost_pct_mean,
+                p.bound_cpm_mean,
+                p.regret_pct_mean,
+                p.capture_pct_mean,
             );
         }
+        println!(
+            "\nbound $/M is the offline local-search bound on the same seeds \
+             (identical for every row); regret% = (achieved - bound) / bound, \
+             capture% = share of the never -> bound room a policy realizes. \
+             (control) rows anchor that scale rather than compete on it. \
+             See README \"Optimality bounds\"."
+        );
         return Ok(());
     }
 
@@ -774,6 +815,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
     } else {
         minos::experiment::MetricsMode::Streaming
     };
+    // Attempt-log recording for the offline bounds (`minos bound` turns
+    // this on itself); off is bit-identical to the pre-recorder engine.
+    cfg.record_attempts = args.flag("record-attempts");
     let obs = parse_obs_cli(args)?;
     cfg.obs = obs.cfg;
 
@@ -850,6 +894,83 @@ fn cmd_replay(args: &Args) -> Result<()> {
         .filter_map(|f| f.result.obs.as_deref())
         .collect();
     export_obs(&obs, &tracks)?;
+    Ok(())
+}
+
+fn cmd_bound(args: &Args) -> Result<()> {
+    let day = u(args, "day", 0)? as u32;
+    let seed = u(args, "seed", 0x31A5)?;
+    let threads = u(args, "threads", 0)? as usize;
+    let trace = if let Some(path) = args.get("trace") {
+        trace_io::read_csv(Path::new(path)).map_err(anyhow::Error::msg)?
+    } else if args.flag("synth") {
+        let n_functions = u(args, "functions", 8)? as usize;
+        let hours = f(args, "hours", 2.0)?;
+        let rate = f(args, "rate", 2.0)?;
+        if n_functions == 0 {
+            bail!("--functions must be at least 1");
+        }
+        if !(hours.is_finite() && hours > 0.0) {
+            bail!("--hours must be a positive number");
+        }
+        if !(rate.is_finite() && rate >= 0.0) {
+            bail!("--rate must be a non-negative number");
+        }
+        SynthConfig {
+            n_functions,
+            hours,
+            total_rate_rps: rate,
+            n_regions: 1,
+            region_spill: 0.0,
+            seed,
+            ..SynthConfig::default()
+        }
+        .generate()
+    } else {
+        bail!("bound needs --trace FILE or --synth (see `minos help`)");
+    };
+    if trace.is_empty() {
+        bail!("trace contains no invocations");
+    }
+    let n_functions = trace.n_functions();
+    if n_functions > 65_536 {
+        bail!("trace addresses {n_functions} functions; the demo registry caps at 65536");
+    }
+    let registry = FunctionRegistry::demo(n_functions);
+    let mut cfg = ExperimentConfig::paper_day(day);
+    cfg.seed = seed;
+    cfg.metrics = minos::experiment::MetricsMode::Streaming;
+    // The whole point of the command: record the realized draws, then run
+    // the offline estimators over the per-function attempt logs. The
+    // recorder never draws RNG, so the paired replay's physics (and the
+    // bounds computed from it) are bit-identical at any --threads.
+    cfg.record_attempts = true;
+    println!(
+        "bound replay: {} invocations across {} functions (span {})",
+        trace.len(),
+        trace.function_ids().len(),
+        trace.span()
+    );
+    let outcome = runner::run_trace_paired(&cfg, &registry, &trace, threads)?;
+    let bounds: Vec<minos::bound::BoundEstimate> = outcome
+        .per_function
+        .iter()
+        .map(|f| {
+            f.minos
+                .attempts
+                .as_deref()
+                .map(|log| {
+                    minos::bound::estimate(
+                        log,
+                        &cfg.billing,
+                        cfg.platform.idle_timeout_ms,
+                        cfg.seed,
+                    )
+                })
+                .unwrap_or_default()
+        })
+        .collect();
+    print!("{}", report::bound_report(&outcome, &bounds));
     Ok(())
 }
 

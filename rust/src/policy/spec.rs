@@ -141,12 +141,16 @@ impl PolicySpec {
         Ok(spec)
     }
 
-    /// Parse a comma-separated `--policies` list.
+    /// Parse a comma-separated `--policies` list. Errors name the
+    /// offending spec so a typo inside a long list is findable.
     pub fn parse_list(s: &str) -> Result<Vec<PolicySpec>, String> {
         let specs: Vec<PolicySpec> = s
             .split(',')
             .filter(|p| !p.trim().is_empty())
-            .map(PolicySpec::parse)
+            .map(|p| {
+                PolicySpec::parse(p)
+                    .map_err(|e| format!("in policy spec {:?}: {e}", p.trim()))
+            })
             .collect::<Result<_, _>>()?;
         if specs.is_empty() {
             return Err("empty policy list".into());
@@ -279,6 +283,18 @@ mod tests {
         for r in [RoutingSpec::Trace, RoutingSpec::FastestQueue, RoutingSpec::RoundRobin] {
             assert_eq!(RoutingSpec::parse(&r.to_string()).unwrap(), r);
         }
+    }
+
+    #[test]
+    fn list_errors_name_the_offending_spec() {
+        // A typo buried in a long --policies list must be findable from
+        // the error alone.
+        let err = PolicySpec::parse_list("fixed,onlnie:10,never").unwrap_err();
+        assert!(err.contains("\"onlnie:10\""), "error does not name the spec: {err}");
+        let err = PolicySpec::parse_list("fixed, budget:2.0 ,never").unwrap_err();
+        assert!(err.contains("\"budget:2.0\""), "error does not name the spec: {err}");
+        // Whitespace-only segments are skipped, not errors.
+        assert!(PolicySpec::parse_list("fixed, ,never").is_ok());
     }
 
     #[test]

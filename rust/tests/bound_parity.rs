@@ -1,0 +1,211 @@
+//! Safety net for the attempt recorder and the offline optimality bounds:
+//! recording must be *invisible* to a run's physics, and the bounds must
+//! be a pure, thread-invariant function of the recorded log.
+//!
+//! 1. record-on/off bit-parity: a run with `record_attempts` produces the
+//!    exact same physics fingerprint (completions, terminations, cost
+//!    bits) as one without, for a single run, a paired smoke day, and a
+//!    multi-region cluster replay — the recorder draws no RNG and
+//!    schedules nothing;
+//! 2. thread invariance: per-function bound estimates off a paired trace
+//!    replay are bit-identical at `--threads 1` and `--threads 8`;
+//! 3. plumbing: recording-on results actually carry logs (single runs,
+//!    every paired-function arm, every cluster deployment), recording-off
+//!    results carry `None`.
+
+use minos::bound::{estimate, BoundEstimate};
+use minos::experiment::cluster::{run_cluster, ClusterOutcome};
+use minos::experiment::runner::{self, run_single, TracePairedOutcome};
+use minos::experiment::ExperimentConfig;
+use minos::platform::ClusterConfig;
+use minos::testkit::scenarios;
+use minos::trace::{FunctionRegistry, SynthConfig};
+
+/// Exact physics fingerprint of one run (mirrors `obs_parity.rs`).
+fn run_fp(r: &minos::experiment::metrics::RunResult) -> String {
+    format!(
+        "successful={} terminations={} failed={} cost_bits={:016x}",
+        r.successful(),
+        r.terminations,
+        r.failed(),
+        r.total_cost_usd().to_bits(),
+    )
+}
+
+#[test]
+fn recording_does_not_change_single_run_physics() {
+    let minos = scenarios::minos_with_threshold(350.0);
+    for scenario in 0..3u8 {
+        let build = |record: bool| {
+            let mut cfg = match scenario {
+                0 => scenarios::quick_config(2, 0xB0D5, 90.0),
+                1 => scenarios::noisy_neighbor(0xB0D5),
+                _ => scenarios::dying_fleet(0xB0D5),
+            };
+            cfg.record_attempts = record;
+            run_single(&cfg, &minos, 0, false, None).unwrap()
+        };
+        let off = build(false);
+        let on = build(true);
+        assert_eq!(
+            run_fp(&on),
+            run_fp(&off),
+            "recording changed physics (scenario {scenario})"
+        );
+        assert!(off.attempts.is_none(), "recording off still produced a log");
+        let log = on.attempts.as_deref().expect("recording on produced a log");
+        assert!(!log.is_empty(), "recording on produced an empty log");
+    }
+}
+
+fn paired_with(record: bool, threads: usize) -> runner::PairedOutcome {
+    let mut cfg = ExperimentConfig::smoke(1, 0xB0D5);
+    cfg.record_attempts = record;
+    runner::run_paired_threads(&cfg, None, threads).unwrap()
+}
+
+#[test]
+fn recording_does_not_change_paired_physics() {
+    let off = paired_with(false, 1);
+    for threads in [1usize, 8] {
+        let on = paired_with(true, threads);
+        assert_eq!(
+            format!("{} / {}", run_fp(&on.minos), run_fp(&on.baseline)),
+            format!("{} / {}", run_fp(&off.minos), run_fp(&off.baseline)),
+            "recording changed paired physics at {threads} threads"
+        );
+        assert_eq!(
+            on.pretest.threshold_ms.to_bits(),
+            off.pretest.threshold_ms.to_bits(),
+            "recording moved the pretest threshold"
+        );
+        assert!(on.minos.attempts.is_some() && on.baseline.attempts.is_some());
+    }
+    assert!(off.minos.attempts.is_none() && off.baseline.attempts.is_none());
+}
+
+fn cluster_with(record: bool, threads: usize) -> ClusterOutcome {
+    let trace = SynthConfig {
+        n_functions: 3,
+        n_regions: 2,
+        hours: 0.04,
+        total_rate_rps: 3.0,
+        region_spill: 0.2,
+        seed: 99,
+        ..Default::default()
+    }
+    .generate();
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let cluster = ClusterConfig::demo(2);
+    let mut cfg = ExperimentConfig::smoke(1, 4_242);
+    cfg.record_attempts = record;
+    run_cluster(&cfg, &registry, &trace, &cluster, threads).unwrap()
+}
+
+#[test]
+fn recording_does_not_change_cluster_physics() {
+    let fp = |o: &ClusterOutcome| {
+        format!(
+            "arrivals={} completed={} terminations={} cost_bits={:016x}",
+            o.total_arrivals(),
+            o.total_completed(),
+            o.total_terminations(),
+            o.total_cost_usd().to_bits(),
+        )
+    };
+    let off = cluster_with(false, 1);
+    for threads in [1usize, 8] {
+        let on = cluster_with(true, threads);
+        assert_eq!(
+            fp(&on),
+            fp(&off),
+            "recording changed cluster physics at {threads} threads"
+        );
+        // Every deployment that saw traffic rode its log out.
+        for region in &on.per_region {
+            for d in &region.per_function {
+                if d.result.successful() > 0 {
+                    assert!(
+                        d.result.attempts.as_deref().is_some_and(|l| !l.is_empty()),
+                        "deployment {}/{} lost its attempt log",
+                        d.region.0,
+                        d.name
+                    );
+                }
+            }
+        }
+    }
+    for region in &off.per_region {
+        assert!(region.per_function.iter().all(|d| d.result.attempts.is_none()));
+    }
+}
+
+// -- thread invariance of the bounds ----------------------------------------
+
+fn bounds_at(threads: usize) -> (TracePairedOutcome, Vec<BoundEstimate>) {
+    let trace = SynthConfig {
+        n_functions: 4,
+        hours: 0.05,
+        total_rate_rps: 3.0,
+        n_regions: 1,
+        region_spill: 0.0,
+        seed: 77,
+        ..Default::default()
+    }
+    .generate();
+    let registry = FunctionRegistry::demo(trace.n_functions());
+    let mut cfg = ExperimentConfig::smoke(0, 0xB0D5);
+    cfg.record_attempts = true;
+    let outcome = runner::run_trace_paired(&cfg, &registry, &trace, threads).unwrap();
+    let bounds = outcome
+        .per_function
+        .iter()
+        .map(|f| {
+            f.minos
+                .attempts
+                .as_deref()
+                .map(|log| estimate(log, &cfg.billing, cfg.platform.idle_timeout_ms, cfg.seed))
+                .unwrap_or_default()
+        })
+        .collect();
+    (outcome, bounds)
+}
+
+#[test]
+fn bound_estimates_are_bit_identical_across_thread_counts() {
+    let (seq_outcome, seq) = bounds_at(1);
+    let (_, par) = bounds_at(8);
+    assert_eq!(seq.len(), par.len());
+    assert!(
+        seq.iter().any(|b| b.attempts > 0),
+        "replay recorded nothing to bound"
+    );
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        let name = &seq_outcome.per_function[i].name;
+        assert_eq!(
+            a.achieved_usd.to_bits(),
+            b.achieved_usd.to_bits(),
+            "achieved differs for {name}"
+        );
+        assert_eq!(
+            a.greedy_usd.to_bits(),
+            b.greedy_usd.to_bits(),
+            "greedy differs for {name}"
+        );
+        assert_eq!(
+            a.local_search_usd.to_bits(),
+            b.local_search_usd.to_bits(),
+            "local search differs for {name}"
+        );
+        assert_eq!(
+            a.segment_lb_usd.to_bits(),
+            b.segment_lb_usd.to_bits(),
+            "segment LB differs for {name}"
+        );
+        assert_eq!(
+            (a.chains, a.attempts, a.moves),
+            (b.chains, b.attempts, b.moves),
+            "counters differ for {name}"
+        );
+    }
+}

@@ -13,8 +13,13 @@
 //!    monotone in load, the contention-off table is bit-identical to the
 //!    legacy per-node model, batched OU drift equals the exact transition
 //!    at epoch boundaries, and recycled node slots never resurrect stale
-//!    generations.
+//!    generations;
+//! 8. the offline optimality estimators respect their ordering invariant
+//!    (segment-LB <= local-search <= greedy <= achieved) on arbitrary
+//!    synthetic attempt logs and on logs recorded from real runs, where
+//!    the log's achieved cost also matches the run's billed total.
 
+use minos::bound::{self, AttemptLog, AttemptOutcome, AttemptRecord};
 use minos::coordinator::queue::InvocationQueue;
 use minos::coordinator::MinosConfig;
 use minos::experiment::runner::run_single;
@@ -525,6 +530,164 @@ fn prop_node_slot_recycling_never_resurrects_stale_generations() {
             |&(seed, n_ops)| churn_case(seed, n_ops),
         );
     });
+}
+
+/// Checks `segment_lb <= local_search <= greedy <= achieved` with a
+/// relative tolerance, plus basic sanity (finite, non-negative).
+fn check_bound_ordering(est: &minos::bound::BoundEstimate) -> Result<(), String> {
+    for (name, v) in [
+        ("achieved", est.achieved_usd),
+        ("greedy", est.greedy_usd),
+        ("local_search", est.local_search_usd),
+        ("segment_lb", est.segment_lb_usd),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{name} is {v}"));
+        }
+    }
+    let eps = 1e-9 * est.achieved_usd.max(1e-12);
+    if est.greedy_usd > est.achieved_usd + eps {
+        return Err(format!(
+            "greedy {} > achieved {}",
+            est.greedy_usd, est.achieved_usd
+        ));
+    }
+    if est.local_search_usd > est.greedy_usd + eps {
+        return Err(format!(
+            "local search {} > greedy {}",
+            est.local_search_usd, est.greedy_usd
+        ));
+    }
+    if est.segment_lb_usd > est.local_search_usd + eps {
+        return Err(format!(
+            "segment LB {} > local search {}",
+            est.segment_lb_usd, est.local_search_usd
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_bound_ordering_on_synthetic_attempt_logs() {
+    // Arbitrary retry chains — terminated prefixes, kept/forced/crashed
+    // finals, incomplete chains, warm and cold serves — never break the
+    // estimator ordering, whatever the factors and durations drawn.
+    prop::check(
+        "bound-ordering-synthetic",
+        |rng| {
+            let seed = rng.next_u64();
+            let n_chains = 1 + prop::sized(rng, 40);
+            (seed, n_chains)
+        },
+        |&(seed, n_chains)| {
+            let mut rng = Rng::new(seed);
+            let mut log = AttemptLog::default();
+            let mut t = 0.0;
+            for inv in 0..n_chains as u64 {
+                t += rng.range(1.0, 5_000.0);
+                let submitted = t;
+                let n_attempts = 1 + rng.below(5);
+                let mut start = submitted + rng.range(0.0, 400.0);
+                for k in 0..n_attempts {
+                    let factor = 0.5 + rng.f64();
+                    let analysis_work = 200.0 + rng.f64() * 600.0;
+                    let bench = 250.0 / factor * (0.9 + rng.f64() * 0.2);
+                    let last = k + 1 == n_attempts;
+                    let (outcome, bench_ms) = if !last || rng.chance(0.15) {
+                        // Terminated prefix; a terminated *last* attempt
+                        // models an incomplete chain at horizon.
+                        (AttemptOutcome::Terminated, Some(bench))
+                    } else {
+                        match rng.below(4) {
+                            0 => (AttemptOutcome::Kept, None), // warm serve
+                            1 => (AttemptOutcome::Forced, None),
+                            2 => (AttemptOutcome::Crashed, Some(bench)),
+                            _ => (AttemptOutcome::Kept, Some(bench)),
+                        }
+                    };
+                    let cold = bench_ms.is_some()
+                        || outcome == AttemptOutcome::Forced
+                        || rng.chance(0.5);
+                    log.attempts.push(AttemptRecord {
+                        inv,
+                        attempt: k as u32,
+                        submitted_at_ms: submitted,
+                        started_at_ms: start,
+                        factor,
+                        cold,
+                        cold_delay_ms: if cold { rng.range(0.0, 900.0) } else { 0.0 },
+                        bench_ms,
+                        prepare_ms: 20.0 + rng.f64() * 100.0,
+                        analysis_ms: analysis_work / factor,
+                        overhead_ms: 5.0 + rng.f64() * 20.0,
+                        outcome,
+                    });
+                    start += rng.range(10.0, 2_000.0);
+                }
+            }
+            let billing = Billing::paper();
+            let est = bound::estimate(&log, &billing, 600_000.0, seed);
+            check_bound_ordering(&est)?;
+            if est.attempts != log.len() as u64 {
+                return Err(format!(
+                    "estimate saw {} attempts, log has {}",
+                    est.attempts,
+                    log.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bound_ordering_on_recorded_runs() {
+    // End to end: record a real run (calm, contended, noisy-neighbor, or
+    // dying-fleet scenario), estimate, and require the ordering invariant.
+    // On fault-free scenarios the log's achieved cost must also match the
+    // run's billed total (same settles, summed in a different order).
+    prop::check(
+        "bound-ordering-recorded",
+        |rng| {
+            let seed = rng.next_u64();
+            let scenario = rng.below(4) as u8;
+            let threshold = 250.0 + rng.f64() * 300.0;
+            (seed, scenario, threshold)
+        },
+        |&(seed, scenario, threshold)| {
+            let mut cfg = match scenario {
+                0 => scenarios::quick_config(seed as u32 % 7, seed, 60.0),
+                1 => scenarios::contended_region(seed),
+                2 => scenarios::noisy_neighbor(seed),
+                _ => scenarios::dying_fleet(seed),
+            };
+            cfg.record_attempts = true;
+            let minos = scenarios::minos_with_threshold(threshold);
+            let r = run_single(&cfg, &minos, 0, false, None).map_err(|e| e.to_string())?;
+            let log = r
+                .attempts
+                .as_deref()
+                .ok_or("recording on but no attempt log on the result")?;
+            if log.is_empty() {
+                return Err("recording on but the log is empty".into());
+            }
+            let est =
+                bound::estimate(log, &cfg.billing, cfg.platform.idle_timeout_ms, cfg.seed);
+            check_bound_ordering(&est)?;
+            if scenario != 3 {
+                // No faults: every billed settle is in the log and vice
+                // versa, so the totals agree up to summation order.
+                let total = r.total_cost_usd();
+                if (est.achieved_usd - total).abs() > 1e-6 * total.max(1e-12) {
+                    return Err(format!(
+                        "log achieved {} != run billed total {} (scenario {scenario})",
+                        est.achieved_usd, total
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

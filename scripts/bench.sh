@@ -16,7 +16,11 @@
 #                         1M-node replay events/s at 1 / 4 / 8 shards),
 #                         and a fault_churn section (fault_churn bench:
 #                         churned 50k-node replay events/s + the
-#                         thread-invariant failure-ledger fingerprint)
+#                         thread-invariant failure-ledger fingerprint),
+#                         and a bound_estimate section (bound_estimate
+#                         bench: optimality-estimator attempts/s over a
+#                         recorded >=10k-invocation replay + the pure-
+#                         function bound fingerprint)
 #
 # --check mode (the regression gate wired into `scripts/check.sh --bench`)
 # runs the same benches into a temp dir and compares every named rate
@@ -78,27 +82,33 @@ echo
 run_bench contention_scale "$OUT_DIR/BENCH_fleet.json"
 echo
 run_bench fault_churn "$OUT_DIR/BENCH_faults.json"
+echo
+run_bench bound_estimate "$OUT_DIR/BENCH_bound.json"
 
-# Fold the fleet-scale and fault-churn numbers into BENCH_cluster.json so
-# the whole cluster perf trajectory lives in one committed file.
+# Fold the fleet-scale, fault-churn, and bound-estimator numbers into
+# BENCH_cluster.json so the whole cluster perf trajectory lives in one
+# committed file.
 if command -v python3 >/dev/null 2>&1; then
     python3 - "$OUT_DIR/BENCH_cluster.json" "$OUT_DIR/BENCH_fleet.json" \
-        "$OUT_DIR/BENCH_faults.json" <<'PY'
+        "$OUT_DIR/BENCH_faults.json" "$OUT_DIR/BENCH_bound.json" <<'PY'
 import json, sys
-cluster_path, fleet_path, faults_path = sys.argv[1], sys.argv[2], sys.argv[3]
+cluster_path, fleet_path, faults_path, bound_path = (
+    sys.argv[1], sys.argv[2], sys.argv[3], sys.argv[4])
 with open(cluster_path) as f:
     cluster = json.load(f)
 with open(fleet_path) as f:
     cluster["fleet_scale"] = json.load(f)
 with open(faults_path) as f:
     cluster["fault_churn"] = json.load(f)
+with open(bound_path) as f:
+    cluster["bound_estimate"] = json.load(f)
 with open(cluster_path, "w") as f:
     json.dump(cluster, f, indent=2)
     f.write("\n")
 PY
-    rm -f "$OUT_DIR/BENCH_fleet.json" "$OUT_DIR/BENCH_faults.json"
+    rm -f "$OUT_DIR/BENCH_fleet.json" "$OUT_DIR/BENCH_faults.json" "$OUT_DIR/BENCH_bound.json"
 else
-    echo "warning: python3 unavailable; extra numbers left in BENCH_fleet.json/BENCH_faults.json" >&2
+    echo "warning: python3 unavailable; extra numbers left in BENCH_fleet.json/BENCH_faults.json/BENCH_bound.json" >&2
 fi
 
 if [ "$CHECK" -eq 0 ]; then

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs] [--faults]
+# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs] [--faults] [--bounds]
 #   --fast       skip the release build and the bench compile (debug tests only)
 #   --bench      additionally run the bench gate: scripts/bench.sh --check
 #                (fails on >10% rate regression or a fingerprint change vs
@@ -22,6 +22,12 @@
 #                replay, a seeded dying-fleet replay must reproduce across
 #                two process invocations (and across thread counts), and an
 #                overloaded bounded queue must report counted sheds
+#   --bounds     additionally smoke the optimality bounds: a record->
+#                bound->regret round-trip on a small synth replay must
+#                print the per-function bound table with the estimator
+#                ordering intact, reproduce byte-for-byte across two
+#                process invocations and across thread counts, and the
+#                policy sweep must print the regret/capture columns
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -36,6 +42,7 @@ POLICIES=0
 CONTENTION=0
 OBS=0
 FAULTS=0
+BOUNDS=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
@@ -44,7 +51,8 @@ for arg in "$@"; do
         --contention) CONTENTION=1 ;;
         --obs) OBS=1 ;;
         --faults) FAULTS=1 ;;
-        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs --faults)" >&2; exit 2 ;;
+        --bounds) BOUNDS=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs --faults --bounds)" >&2; exit 2 ;;
     esac
 done
 
@@ -223,6 +231,42 @@ if [ "$FAULTS" -eq 1 ]; then
     echo "$shed_out" | grep -Eq "shed [1-9][0-9]*," \
         || { echo "overloaded bounded queue reported no sheds" >&2; exit 1; }
     echo "robustness smoke passed"
+fi
+
+if [ "$BOUNDS" -eq 1 ]; then
+    echo "== bounds smoke (record -> bound -> regret round-trip) =="
+    cargo build --release --quiet
+    MINOS_BIN="$(pwd)/target/release/minos"
+    [ -x "$MINOS_BIN" ] || MINOS_BIN="$(pwd)/rust/target/release/minos"
+    BASE="bound --synth --functions 2 --hours 0.02 --rate 2 --seed 909"
+    # The round-trip must reproduce byte-for-byte across two process
+    # invocations and across thread counts (the bounds are a pure function
+    # of the recorded log, and recording is thread-invariant).
+    run1="$("$MINOS_BIN" $BASE --threads 1)"
+    run2="$("$MINOS_BIN" $BASE --threads 1)"
+    [ "$run1" = "$run2" ] \
+        || { echo "bound replay not reproducible across processes" >&2; exit 1; }
+    run8="$("$MINOS_BIN" $BASE --threads 8)"
+    [ "$run1" = "$run8" ] \
+        || { echo "bound replay differs between --threads 1 and 8" >&2; exit 1; }
+    echo "$run1" | grep -q "optimality bounds" \
+        || { echo "bound replay printed no bound table" >&2; exit 1; }
+    echo "$run1" | grep -q "regret" \
+        || { echo "bound replay printed no regret column" >&2; exit 1; }
+    # Recording must be invisible: a replay with --record-attempts prints
+    # the same report as one without.
+    REPLAY="replay --synth --functions 2 --hours 0.02 --rate 2 --seed 909 --threads 1"
+    rep_off="$("$MINOS_BIN" $REPLAY)"
+    rep_on="$("$MINOS_BIN" $REPLAY --record-attempts)"
+    [ "$rep_off" = "$rep_on" ] \
+        || { echo "--record-attempts changed the replay report" >&2; exit 1; }
+    # The policy sweep surfaces the same bounds as regret/capture columns.
+    sweep_out="$("$MINOS_BIN" sweep --policies fixed,never --reps 1 --horizon 60 --threads 1)"
+    echo "$sweep_out" | grep -q "regret%" \
+        || { echo "policy sweep printed no regret column" >&2; exit 1; }
+    echo "$sweep_out" | grep -q "never (control)" \
+        || { echo "policy sweep did not label the never control arm" >&2; exit 1; }
+    echo "bounds smoke passed"
 fi
 
 if [ "$BENCH" -eq 1 ]; then
