@@ -1,0 +1,137 @@
+//! Azure-trace calibration throughput: how fast the streaming reader
+//! ingests a dataset-shaped CSV, how fast the fit turns it into a
+//! registry, and how fast the fitted workload expands into a replayable
+//! trace.
+//!
+//! The ingest path is the one the `minos calibrate --trace` command
+//! exercises on real multi-hundred-MB Azure files: a chunked one-pass
+//! reader whose peak memory is the dataset model, never the file text.
+//! The fit fingerprint is asserted identical across repeat runs — it is
+//! the bit-identity anchor `scripts/check.sh --calibrate` compares
+//! across processes.
+//!
+//! Run: `cargo bench --bench calibrate_ingest [-- --json BENCH_calibrate.json]`
+
+use minos::testkit::bench::{json_output_path, throughput, time_median};
+use minos::trace::azure::{parse_azure_csv, render_azure_csv};
+use minos::trace::{AzureSynthConfig, CalibratedWorkload};
+use minos::util::json::Json;
+
+fn main() {
+    println!("== azure-trace calibration benchmarks ==\n");
+
+    let synth = AzureSynthConfig {
+        n_functions: 2_000,
+        minutes: 1_440,
+        total_rate_rps: 50.0,
+        seed: 0xBE5,
+        ..Default::default()
+    };
+
+    // Dataset synthesis: 2k functions × one day of per-minute counts.
+    let mut invocations = 0u64;
+    let t = time_median("synth: 2k fn × 1440 min dataset", 3, || {
+        let ds = synth.generate();
+        invocations = ds.total_invocations();
+        invocations
+    });
+    println!(
+        "{}  ({:.2} M invocations, {:.2} M counts/s)",
+        t.report(),
+        invocations as f64 / 1e6,
+        throughput(&t, invocations) / 1e6
+    );
+    let synth_result = bench_json(&t, invocations);
+
+    let ds = synth.generate();
+    let csv = render_azure_csv(&ds);
+    let csv_bytes = csv.len() as u64;
+
+    // Streaming ingestion: the chunked one-pass reader over the rendered
+    // text (same code path as `read_azure_csv` minus the file handle).
+    let mut parsed_invocations = 0u64;
+    let t = time_median("ingest: streaming parse of the CSV", 3, || {
+        let parsed = parse_azure_csv(&csv).unwrap();
+        parsed_invocations = parsed.total_invocations();
+        parsed_invocations
+    });
+    assert_eq!(
+        parsed_invocations, invocations,
+        "ingestion must preserve every invocation count"
+    );
+    println!(
+        "{}  ({:.1} MB, {:.1} MB/s)",
+        t.report(),
+        csv_bytes as f64 / 1e6,
+        throughput(&t, csv_bytes) / 1e6
+    );
+    let ingest_result = bench_json(&t, csv_bytes);
+
+    // Fitting: dataset rows → deployable profiles + arrival processes.
+    let n_functions = ds.functions.len() as u64;
+    let mut fingerprint = 0u64;
+    let t = time_median("fit: dataset → calibrated registry", 3, || {
+        let w = CalibratedWorkload::fit(&ds).unwrap();
+        fingerprint = w.fingerprint();
+        n_functions
+    });
+    println!(
+        "{}  ({:.1}k functions/s, fingerprint {:016x})",
+        t.report(),
+        throughput(&t, n_functions) / 1e3,
+        fingerprint
+    );
+    let fit_result = bench_json(&t, n_functions);
+
+    // Trace expansion: the fitted arrival processes sampled into a
+    // replayable trace (2 h slice of the day).
+    let workload = CalibratedWorkload::fit(&ds).unwrap();
+    assert_eq!(workload.fingerprint(), fingerprint, "fit must be deterministic");
+    let mut records = 0u64;
+    let t = time_median("expand: fitted workload → 2 h trace", 3, || {
+        let trace = workload.generate_trace(0xA90E, 2.0, 1);
+        records = trace.len() as u64;
+        records
+    });
+    println!(
+        "{}  ({:.2} M records, {:.2} M records/s)",
+        t.report(),
+        records as f64 / 1e6,
+        throughput(&t, records) / 1e6
+    );
+    let expand_result = bench_json(&t, records);
+
+    if let Some(path) = json_output_path() {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("calibrate_ingest")),
+            ("functions", Json::num(n_functions as f64)),
+            ("minutes", Json::num(synth.minutes as f64)),
+            ("csv_bytes", Json::num(csv_bytes as f64)),
+            ("trace_records", Json::num(records as f64)),
+            (
+                "fingerprint",
+                Json::obj(vec![(
+                    "registry_fp_hex",
+                    Json::str(&format!("{fingerprint:016x}")),
+                )]),
+            ),
+            (
+                "results",
+                Json::arr(vec![synth_result, ingest_result, fit_result, expand_result]),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("machine-readable results written to {path}");
+    }
+}
+
+fn bench_json(t: &minos::testkit::bench::Timing, ops: u64) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&t.name)),
+        ("median_ms", Json::num(t.median_ms)),
+        ("median_ns", Json::num(t.median_ms * 1e6)),
+        ("ops", Json::num(ops as f64)),
+        ("ops_per_s", Json::num(throughput(t, ops))),
+    ])
+}

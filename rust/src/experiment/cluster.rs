@@ -619,6 +619,25 @@ impl ClusterOutcome {
     pub fn obs_tracks(&self) -> Vec<&ObsData> {
         self.per_region.iter().flat_map(|r| r.obs.iter().map(|d| &**d)).collect()
     }
+
+    /// Every deployment's report row, region-major (the deterministic
+    /// order `per_region` holds) — the input the workload-class rollup
+    /// pools across regions.
+    pub fn function_breakdowns(&self) -> Vec<crate::experiment::metrics::FunctionBreakdown> {
+        self.per_region
+            .iter()
+            .flat_map(|r| {
+                r.per_function.iter().map(|f| {
+                    crate::experiment::metrics::FunctionBreakdown::from_run(
+                        f.function.0,
+                        &f.name,
+                        f.arrivals as u64,
+                        &f.result,
+                    )
+                })
+            })
+            .collect()
+    }
 }
 
 /// Replay a multi-region trace against a cluster. `threads` follows the
@@ -1009,6 +1028,12 @@ mod tests {
                 assert_eq!(f.result.threshold_ms, f.pretest.threshold_ms);
             }
         }
+        let rows = o.function_breakdowns();
+        assert_eq!(
+            rows.len(),
+            o.per_region.iter().map(|r| r.per_function.len()).sum::<usize>()
+        );
+        assert_eq!(rows.iter().map(|b| b.arrivals).sum::<u64>(), trace.len() as u64);
     }
 
     #[test]

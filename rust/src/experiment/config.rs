@@ -130,6 +130,17 @@ impl ExperimentConfig {
         cfg
     }
 
+    /// The configuration a trace-calibrated replay runs under: the paper
+    /// platform, streaming metrics (calibrated traces reach millions of
+    /// invocations — full per-record sinks would hold them all), and the
+    /// caller's seed.
+    pub fn calibrated(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_day(0);
+        cfg.seed = seed;
+        cfg.metrics = MetricsMode::Streaming;
+        cfg
+    }
+
     /// Back-compat constructor for the old `online_update_every: Some(n)`
     /// field: the same configuration, expressed as a policy.
     pub fn with_online_threshold(mut self, update_every: u64) -> ExperimentConfig {
@@ -189,6 +200,14 @@ mod tests {
     #[test]
     fn smoke_is_short() {
         assert_eq!(ExperimentConfig::smoke(0, 1).vus.horizon.as_secs(), 120.0);
+    }
+
+    #[test]
+    fn calibrated_streams_metrics() {
+        let c = ExperimentConfig::calibrated(0xCAFE);
+        assert_eq!(c.seed, 0xCAFE);
+        assert_eq!(c.metrics, MetricsMode::Streaming);
+        assert!(c.minos.enabled);
     }
 
     #[test]

@@ -602,6 +602,141 @@ impl FunctionBreakdown {
     }
 }
 
+/// Billed-execution p50 at or above this is a "long" function, ms.
+pub const LONG_EXEC_MS: f64 = 1_000.0;
+/// Warm-start share at or above this is "hot" (almost every start warm).
+pub const HOT_WARM_SHARE: f64 = 0.9;
+/// Warm-start share at or above this (below hot) is "warm"; below it the
+/// function is cold-dominant.
+pub const WARM_WARM_SHARE: f64 = 0.5;
+
+/// Start temperature of a function's run: what share of its instance
+/// starts were warm hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TempClass {
+    Hot,
+    Warm,
+    Cold,
+}
+
+/// Duration class by p50 billed execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DurClass {
+    Short,
+    Long,
+}
+
+/// SeBS-style workload class of one function's run: start temperature ×
+/// duration. This is the axis the paper's claim is conditioned on — the
+/// gate only fires on cold starts, so cold-dominant long functions are
+/// where Minos has both opportunity and payoff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadClass {
+    pub temp: TempClass,
+    pub dur: DurClass,
+}
+
+impl WorkloadClass {
+    /// Classify one function's report row.
+    pub fn of(b: &FunctionBreakdown) -> WorkloadClass {
+        let starts = b.cold_starts + b.warm_hits;
+        let warm_share = if starts == 0 { 0.0 } else { b.warm_hits as f64 / starts as f64 };
+        let temp = if warm_share >= HOT_WARM_SHARE {
+            TempClass::Hot
+        } else if warm_share >= WARM_WARM_SHARE {
+            TempClass::Warm
+        } else {
+            TempClass::Cold
+        };
+        let dur = if b.p50_exec_ms >= LONG_EXEC_MS { DurClass::Long } else { DurClass::Short };
+        WorkloadClass { temp, dur }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match (self.temp, self.dur) {
+            (TempClass::Hot, DurClass::Short) => "hot/short",
+            (TempClass::Hot, DurClass::Long) => "hot/long",
+            (TempClass::Warm, DurClass::Short) => "warm/short",
+            (TempClass::Warm, DurClass::Long) => "warm/long",
+            (TempClass::Cold, DurClass::Short) => "cold/short",
+            (TempClass::Cold, DurClass::Long) => "cold/long",
+        }
+    }
+
+    /// Every class, in fixed report order.
+    pub fn all() -> [WorkloadClass; 6] {
+        [TempClass::Hot, TempClass::Warm, TempClass::Cold]
+            .into_iter()
+            .flat_map(|temp| {
+                [DurClass::Short, DurClass::Long]
+                    .into_iter()
+                    .map(move |dur| WorkloadClass { temp, dur })
+            })
+            .collect::<Vec<_>>()
+            .try_into()
+            .expect("3 x 2 classes")
+    }
+}
+
+/// One row of the workload-class rollup: every function of the class
+/// pooled.
+#[derive(Debug, Clone)]
+pub struct ClassBreakdown {
+    pub class: WorkloadClass,
+    pub functions: usize,
+    pub arrivals: u64,
+    pub successful: u64,
+    pub terminations: u64,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub total_cost_usd: f64,
+    pub cost_per_million_usd: f64,
+    /// Success-weighted mean of the members' p50 billed execution, ms.
+    pub mean_p50_exec_ms: f64,
+}
+
+/// Roll per-function rows up into workload classes (fixed class order,
+/// empty classes omitted) — deterministic for a deterministic input.
+pub fn class_rollup(rows: &[FunctionBreakdown]) -> Vec<ClassBreakdown> {
+    WorkloadClass::all()
+        .into_iter()
+        .filter_map(|class| {
+            let members: Vec<&FunctionBreakdown> =
+                rows.iter().filter(|b| WorkloadClass::of(b) == class).collect();
+            if members.is_empty() {
+                return None;
+            }
+            let mut c = ClassBreakdown {
+                class,
+                functions: members.len(),
+                arrivals: 0,
+                successful: 0,
+                terminations: 0,
+                cold_starts: 0,
+                warm_hits: 0,
+                total_cost_usd: 0.0,
+                cost_per_million_usd: 0.0,
+                mean_p50_exec_ms: 0.0,
+            };
+            let mut exec_weighted = 0.0f64;
+            for b in &members {
+                c.arrivals += b.arrivals;
+                c.successful += b.successful;
+                c.terminations += b.terminations;
+                c.cold_starts += b.cold_starts;
+                c.warm_hits += b.warm_hits;
+                c.total_cost_usd += b.total_cost_usd;
+                exec_weighted += b.p50_exec_ms * b.successful as f64;
+            }
+            if c.successful > 0 {
+                c.cost_per_million_usd = c.total_cost_usd / c.successful as f64 * 1e6;
+                c.mean_p50_exec_ms = exec_weighted / c.successful as f64;
+            }
+            Some(c)
+        })
+        .collect()
+}
+
 /// Per-region aggregate of a cluster replay: the region's functions
 /// pooled into one row (latency percentiles over every completed
 /// invocation in the region, plus the shared platform counters the
@@ -993,5 +1128,72 @@ mod tests {
         assert!((s[1].1 - 5.0).abs() < 1e-9); // still $5/M average
         assert_eq!(s[0].0, 60.0);
         assert_eq!(s[1].0, 120.0);
+    }
+
+    // -- workload classes -------------------------------------------------
+
+    fn class_row(cold: u64, warm: u64, p50_exec: f64, successful: u64) -> FunctionBreakdown {
+        FunctionBreakdown {
+            function: 0,
+            name: "f".into(),
+            arrivals: successful,
+            successful,
+            p50_latency_ms: 0.0,
+            p95_latency_ms: 0.0,
+            p50_exec_ms: p50_exec,
+            p95_exec_ms: p50_exec,
+            terminations: 1,
+            termination_rate: 0.0,
+            cold_starts: cold,
+            warm_hits: warm,
+            total_cost_usd: 1e-5,
+            cost_per_million_usd: 0.0,
+            threshold_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn workload_class_boundaries() {
+        // 95% warm, long.
+        let b = class_row(5, 95, 2_000.0, 100);
+        assert_eq!(WorkloadClass::of(&b).label(), "hot/long");
+        // Exactly at the hot boundary counts as hot.
+        let b = class_row(10, 90, 100.0, 100);
+        assert_eq!(WorkloadClass::of(&b).label(), "hot/short");
+        let b = class_row(40, 60, LONG_EXEC_MS, 100);
+        assert_eq!(WorkloadClass::of(&b).label(), "warm/long");
+        // Mostly cold starts, short executions.
+        let b = class_row(80, 20, 100.0, 100);
+        assert_eq!(WorkloadClass::of(&b).label(), "cold/short");
+        // No starts at all classifies as cold (nothing was ever warm).
+        let b = class_row(0, 0, 100.0, 0);
+        assert_eq!(WorkloadClass::of(&b).temp, TempClass::Cold);
+        assert_eq!(WorkloadClass::all().len(), 6);
+    }
+
+    #[test]
+    fn class_rollup_pools_members_and_skips_empty_classes() {
+        let rows = vec![
+            class_row(80, 20, 2_000.0, 100), // cold/long
+            class_row(90, 10, 4_000.0, 300), // cold/long
+            class_row(2, 98, 50.0, 50),      // hot/short
+        ];
+        let rollup = class_rollup(&rows);
+        assert_eq!(rollup.len(), 2, "empty classes must be omitted");
+        // Fixed order: hot/short before cold/long.
+        assert_eq!(rollup[0].class.label(), "hot/short");
+        assert_eq!(rollup[1].class.label(), "cold/long");
+        let cl = &rollup[1];
+        assert_eq!(cl.functions, 2);
+        assert_eq!(cl.arrivals, 400);
+        assert_eq!(cl.successful, 400);
+        assert_eq!(cl.terminations, 2);
+        assert_eq!(cl.cold_starts, 170);
+        assert_eq!(cl.warm_hits, 30);
+        assert!((cl.total_cost_usd - 2e-5).abs() < 1e-18);
+        assert!((cl.cost_per_million_usd - 0.05).abs() < 1e-9);
+        // Success-weighted: (2000*100 + 4000*300) / 400 = 3500.
+        assert!((cl.mean_p50_exec_ms - 3_500.0).abs() < 1e-9);
+        assert!(class_rollup(&[]).is_empty());
     }
 }

@@ -9,7 +9,7 @@ use crate::util::timefmt::signed_pct;
 
 use super::cluster::ClusterOutcome;
 use super::figures;
-use super::metrics::{FunctionBreakdown, RegionBreakdown};
+use super::metrics::{class_rollup, FunctionBreakdown, RegionBreakdown};
 use super::runner::{PairedOutcome, TraceOutcome, TracePairedOutcome};
 
 /// Render the full week report (Figs. 4–6 tables + overall numbers).
@@ -201,6 +201,40 @@ pub fn trace_report(outcome: &TraceOutcome) -> String {
             0.0
         },
     );
+    out.push_str(&class_section(&rows));
+    out
+}
+
+/// Render the workload-class rollup (hot/warm/cold-dominant ×
+/// short/long) of a set of per-function rows. Empty classes are
+/// omitted; empty input renders nothing.
+fn class_section(rows: &[FunctionBreakdown]) -> String {
+    let rollup = class_rollup(rows);
+    if rollup.is_empty() {
+        return String::new();
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "== workload classes ==");
+    let _ = writeln!(
+        out,
+        "{:<12} {:>5} {:>9} {:>9} {:>6} {:>8} {:>8} {:>11} {:>10}",
+        "class", "fns", "arrived", "done", "term", "cold", "warm", "exec p50", "$ / M"
+    );
+    for c in &rollup {
+        let _ = writeln!(
+            out,
+            "{:<12} {:>5} {:>9} {:>9} {:>6} {:>8} {:>8} {:>11.0} {:>10.3}",
+            c.class.label(),
+            c.functions,
+            c.arrivals,
+            c.successful,
+            c.terminations,
+            c.cold_starts,
+            c.warm_hits,
+            c.mean_p50_exec_ms,
+            c.cost_per_million_usd,
+        );
+    }
     out
 }
 
@@ -281,6 +315,7 @@ pub fn cluster_report(outcome: &ClusterOutcome) -> String {
         },
         outcome.total_events_handled(),
     );
+    out.push_str(&class_section(&outcome.function_breakdowns()));
     out
 }
 
@@ -399,6 +434,34 @@ mod tests {
         assert!(rpt.contains("per-function breakdown"), "{rpt}");
         assert!(rpt.contains("weather-0"), "{rpt}");
         assert!(rpt.contains("total:"), "{rpt}");
+        assert!(rpt.contains("workload classes"), "{rpt}");
+    }
+
+    #[test]
+    fn class_section_rolls_functions_into_classes() {
+        use crate::experiment::metrics::FunctionBreakdown;
+        let row = |cold: u64, warm: u64, exec: f64| FunctionBreakdown {
+            function: 0,
+            name: "f".into(),
+            arrivals: 10,
+            successful: 10,
+            p50_latency_ms: 0.0,
+            p95_latency_ms: 0.0,
+            p50_exec_ms: exec,
+            p95_exec_ms: exec,
+            terminations: 0,
+            termination_rate: 0.0,
+            cold_starts: cold,
+            warm_hits: warm,
+            total_cost_usd: 1e-6,
+            cost_per_million_usd: 0.1,
+            threshold_ms: 0.0,
+        };
+        let s = class_section(&[row(9, 1, 2_000.0), row(0, 10, 50.0)]);
+        assert!(s.contains("cold/long"), "{s}");
+        assert!(s.contains("hot/short"), "{s}");
+        assert!(!s.contains("warm/long"), "empty classes must be omitted: {s}");
+        assert!(class_section(&[]).is_empty());
     }
 
     #[test]
@@ -422,6 +485,7 @@ mod tests {
         assert!(rpt.contains("frankfurt-0"), "{rpt}");
         assert!(rpt.contains("iowa-1"), "{rpt}");
         assert!(rpt.contains("total:"), "{rpt}");
+        assert!(rpt.contains("workload classes"), "{rpt}");
     }
 
     #[test]

@@ -15,9 +15,11 @@ use crate::stats::descriptive::{mean, std_dev};
 use crate::util::csvio::Csv;
 use crate::util::parallel;
 
+use crate::trace::{CalibratedWorkload, Trace};
+
 use super::config::ExperimentConfig;
 use super::metrics::RunResult;
-use super::runner::{run_paired, run_pretest, run_single, PairedOutcome};
+use super::runner::{run_paired, run_pretest, run_single, run_trace_paired, PairedOutcome};
 
 /// Aggregated outcome of one sweep point.
 #[derive(Debug, Clone)]
@@ -253,6 +255,102 @@ pub fn variability_sensitivity(
     })
 }
 
+/// One elysium-percentile point of a calibrated-workload sweep: the
+/// whole fitted registry replayed paired (Minos vs baseline) with every
+/// function's pre-test reading the same percentile.
+#[derive(Debug, Clone)]
+pub struct CalibratedSweepPoint {
+    pub percentile: f64,
+    /// Trace arrivals across every function (identical on every row —
+    /// the trace is fixed, only the threshold knob moves).
+    pub arrivals: u64,
+    pub terminations: u64,
+    /// Terminations / benchmarked cold starts, pooled over functions.
+    pub termination_rate: f64,
+    /// Success-weighted mean analysis improvement over baseline, %.
+    pub analysis_pct: f64,
+    /// Pooled cost-per-success saving over baseline, %.
+    pub cost_pct: f64,
+}
+
+/// Sweep the elysium percentile over a calibrated workload: each point
+/// re-runs the *same* fitted registry and trace paired, with every
+/// function's pre-test reading percentile `p`. Points fan out over a
+/// thread pool (0 = auto); each point replays sequentially inside, so
+/// results are bit-identical at any `threads`.
+pub fn calibrated_percentile_sweep(
+    workload: &CalibratedWorkload,
+    percentiles: &[f64],
+    base: &ExperimentConfig,
+    trace: &Trace,
+    threads: usize,
+) -> Result<Vec<CalibratedSweepPoint>> {
+    anyhow::ensure!(!percentiles.is_empty(), "calibrated sweep needs at least one percentile");
+    parallel::try_map_indexed(percentiles.len(), threads, |i| {
+        let p = percentiles[i];
+        let registry = workload.registry().with_elysium_percentile(p);
+        let o = run_trace_paired(base, &registry, trace, 1)?;
+        let mut arrivals = 0u64;
+        let mut terminations = 0u64;
+        let mut bench = 0u64;
+        let mut successful_m = 0u64;
+        let mut successful_b = 0u64;
+        let mut analysis_m = 0.0f64;
+        let mut analysis_b = 0.0f64;
+        let mut cost_m = 0.0f64;
+        let mut cost_b = 0.0f64;
+        for f in &o.per_function {
+            arrivals += f.arrivals as u64;
+            terminations += f.minos.terminations;
+            bench += f.minos.bench_count();
+            successful_m += f.minos.successful();
+            successful_b += f.baseline.successful();
+            analysis_m += f.minos.analysis_mean_ms() * f.minos.successful() as f64;
+            analysis_b += f.baseline.analysis_mean_ms() * f.baseline.successful() as f64;
+            cost_m += f.minos.total_cost_usd();
+            cost_b += f.baseline.total_cost_usd();
+        }
+        let mean_m = if successful_m > 0 { analysis_m / successful_m as f64 } else { 0.0 };
+        let mean_b = if successful_b > 0 { analysis_b / successful_b as f64 } else { 0.0 };
+        let cps_m = if successful_m > 0 { cost_m / successful_m as f64 } else { 0.0 };
+        let cps_b = if successful_b > 0 { cost_b / successful_b as f64 } else { 0.0 };
+        Ok(CalibratedSweepPoint {
+            percentile: p,
+            arrivals,
+            terminations,
+            termination_rate: if bench > 0 { terminations as f64 / bench as f64 } else { 0.0 },
+            analysis_pct: if mean_b > 0.0 { (mean_b - mean_m) / mean_b * 100.0 } else { 0.0 },
+            cost_pct: if cps_b > 0.0 { (cps_b - cps_m) / cps_b * 100.0 } else { 0.0 },
+        })
+    })
+}
+
+/// Render a calibrated-percentile sweep as the table the CLI prints
+/// (fixed-width, deterministic — check scripts compare it byte-exact
+/// across processes and thread counts).
+pub fn calibrated_table(points: &[CalibratedSweepPoint]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:>6} {:>9} {:>7} {:>10} {:>12} {:>9}",
+        "pct", "arrived", "term", "term rate", "analysis d%", "cost d%"
+    );
+    for p in points {
+        let _ = writeln!(
+            out,
+            "{:>6.1} {:>9} {:>7} {:>10.3} {:>12.3} {:>9.3}",
+            p.percentile,
+            p.arrivals,
+            p.terminations,
+            p.termination_rate,
+            p.analysis_pct,
+            p.cost_pct,
+        );
+    }
+    out
+}
+
 /// Render sweep points as CSV.
 pub fn to_csv(x_name: &str, points: &[SweepPoint]) -> Csv {
     let mut csv = Csv::new(&[
@@ -405,6 +503,43 @@ mod tests {
             "fixed-arm regret went negative: {}",
             pts[0].regret_pct_mean
         );
+    }
+
+    #[test]
+    fn calibrated_sweep_is_deterministic_across_threads() {
+        let ds = crate::trace::AzureSynthConfig {
+            n_functions: 4,
+            minutes: 60,
+            total_rate_rps: 1.0,
+            seed: 77,
+            ..Default::default()
+        }
+        .generate();
+        let workload = CalibratedWorkload::fit(&ds).unwrap();
+        let trace = workload.generate_trace(0xB0B, 0.02, 1);
+        let base = ExperimentConfig::calibrated(123);
+        let pcts = [50.0, 90.0];
+        let a = calibrated_percentile_sweep(&workload, &pcts, &base, &trace, 1).unwrap();
+        let b = calibrated_percentile_sweep(&workload, &pcts, &base, &trace, 4).unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.percentile, y.percentile);
+            assert_eq!(x.arrivals, y.arrivals);
+            assert_eq!(x.terminations, y.terminations);
+            assert_eq!(
+                x.analysis_pct.to_bits(),
+                y.analysis_pct.to_bits(),
+                "thread count changed a calibrated sweep point"
+            );
+            assert_eq!(x.cost_pct.to_bits(), y.cost_pct.to_bits());
+        }
+        // The trace is fixed: every percentile row sees the same arrivals.
+        assert_eq!(a[0].arrivals, a[1].arrivals);
+        assert_eq!(a[0].arrivals, trace.len() as u64);
+        let table = calibrated_table(&a);
+        assert!(table.contains("analysis d%"), "{table}");
+        assert_eq!(table.lines().count(), 3);
+        assert!(calibrated_percentile_sweep(&workload, &[], &base, &trace, 1).is_err());
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //!   week       run the paper's 7-day experiment (Figs. 4-6) and print the report
 //!   fig7       run one day and print the Fig. 7 cost-over-time series
 //!   pretest    run the pre-test calibration and print the threshold
-//!   calibrate  measure real PJRT execution of the AOT artifacts
+//!   calibrate  fit an Azure-shaped dataset (--trace FILE or --synth-azure)
+//!              into a function registry and replay it calibrated; with
+//!              neither flag, measure real PJRT execution of the AOT artifacts
 //!   sweep      ablation: elysium percentile sweep (termination-rate trade-off),
 //!              or `--policies a,b,c` to compare selection policies
 //!   online     run one day with the SIV online-threshold collector
@@ -46,7 +48,7 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["real", "verbose", "synth", "paired", "full-records", "record-attempts"],
+        &["real", "verbose", "synth", "synth-azure", "paired", "full-records", "record-attempts"],
     )
     .map_err(|e| anyhow::anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -54,7 +56,7 @@ fn run() -> Result<()> {
         "week" => cmd_week(&args),
         "fig7" => cmd_fig7(&args),
         "pretest" => cmd_pretest(&args),
-        "calibrate" => cmd_calibrate(),
+        "calibrate" => cmd_calibrate(&args),
         "sweep" => cmd_sweep(&args),
         "online" => cmd_online(&args),
         "openloop" => cmd_openloop(&args),
@@ -80,10 +82,14 @@ COMMANDS:
              [--faults F --retry R --timeout DUR --queue-cap N --shed S]
   fig7       cost-over-time series for one day      [--day N --seed N --step S]
   pretest    pre-test threshold calibration         [--day N --seed N --percentile P]
-  calibrate  real PJRT timing of the AOT artifacts  (needs `make artifacts`)
+  calibrate  fit an Azure-shaped dataset and replay  [--trace FILE | --synth-azure]
+             it calibrated                          [--functions N --minutes M --rate R]
+             [--seed N --hours H --regions N --threads T --out FILE]
+             (neither flag: real PJRT timing of the AOT artifacts)
   sweep      elysium-percentile ablation            [--day N --seed N --threads T --policy P]
              [--timeline FILE --gauges-every DUR --probe-level L]
              or policy comparison                   [--policies P1,P2,... --reps N --horizon S]
+             or calibrated-workload sweep           [--calibrate trace.csv --hours H]
   online     one day with the online threshold      [--day N --seed N --every N]
              (shorthand for --policy online:N on a paired day)
   openloop   Poisson-arrival (async queue) mode      [--day N --seed N --rate R --policy P]
@@ -114,6 +120,25 @@ REPLAY MODES:
              decorrelates the sub-pools, so placement intentionally
              diverges while staying bit-identical at any --threads.
   --paired   per-function Minos-vs-baseline improvement figures
+
+CALIBRATE (minos calibrate, sweep --calibrate):
+  Ingests the Azure Functions 2019 dataset shape — one row per function,
+  per-minute invocation-count columns (headers 1..N), duration
+  percentiles (percentile_Average_50/99 or Average) and memory
+  (AverageAllocatedMb) — through the streaming CSV reader (peak memory
+  independent of file size), and fits each function into a deployable
+  profile: lognormal payload sigma from p99/p50, phase profile scaled to
+  p50, download size from memory, and a diurnal arrival process fitted
+  from the hourly histogram (first-harmonic; near-flat histograms fall
+  back to Poisson). The fitted registry prints with a fingerprint — the
+  same dataset fits to the same fingerprint in any process, at any
+  --threads — then replays calibrated (streaming sinks; report ends with
+  the workload-class rollup: hot/warm/cold-dominant x short/long).
+  --synth-azure generates a seeded same-shape dataset instead of reading
+  one (--functions, --minutes, --rate; --out FILE writes the CSV, which
+  re-ingests to a bit-identical fit). `sweep --calibrate trace.csv`
+  sweeps the elysium percentile over the fitted workload; --hours caps
+  the replayed span for both commands.
 
 POLICIES (--policy / --policies, syntax `name` or `name:param`):
   fixed         the paper's gate: fixed pre-tested elysium threshold
@@ -521,7 +546,103 @@ fn cmd_pretest(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_calibrate() -> Result<()> {
+/// `minos calibrate`: with `--trace FILE` or `--synth-azure`, fit an
+/// Azure-shaped dataset into a function registry and replay it
+/// calibrated; with neither flag, the legacy PJRT artifact timing.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    if args.get("trace").is_none() && !args.flag("synth-azure") {
+        return cmd_calibrate_pjrt();
+    }
+    if args.get("trace").is_some() && args.flag("synth-azure") {
+        bail!("--trace and --synth-azure are mutually exclusive (pick one dataset source)");
+    }
+    let seed = u(args, "seed", 0xA90E)?;
+    let threads = u(args, "threads", 0)? as usize;
+    let cluster_mode = args.get("regions").is_some();
+    let n_regions = u(args, "regions", 1)? as usize;
+    if cluster_mode && n_regions == 0 {
+        bail!("--regions must be at least 1");
+    }
+    let ds = if let Some(path) = args.get("trace") {
+        if args.get("out").is_some() {
+            // --out writes the *synthetic* dataset; re-writing an ingested
+            // file would silently shadow the input.
+            bail!("--out writes the synthetic dataset; it needs --synth-azure");
+        }
+        minos::trace::azure::read_azure_csv(Path::new(path)).map_err(anyhow::Error::msg)?
+    } else {
+        let n_functions = u(args, "functions", 128)? as usize;
+        let minutes = u(args, "minutes", 1_440)? as usize;
+        let rate = f(args, "rate", 12.0)?;
+        if n_functions == 0 {
+            bail!("--functions must be at least 1");
+        }
+        if minutes == 0 {
+            bail!("--minutes must be at least 1");
+        }
+        if !(rate.is_finite() && rate >= 0.0) {
+            bail!("--rate must be a non-negative number");
+        }
+        let ds = minos::trace::AzureSynthConfig {
+            n_functions,
+            minutes,
+            total_rate_rps: rate,
+            seed,
+            ..Default::default()
+        }
+        .generate();
+        if let Some(out) = args.get("out") {
+            minos::trace::azure::write_azure_csv(&ds, Path::new(out))
+                .map_err(anyhow::Error::msg)?;
+            println!(
+                "azure-shaped dataset written to {out} ({} functions, {} minutes)",
+                ds.functions.len(),
+                ds.minutes
+            );
+        }
+        ds
+    };
+    // Everything below depends only on the fitted parameters: a dataset
+    // round-tripped through its own CSV prints byte-identical output
+    // (the fit quantizes at generation, so f64s survive the text form).
+    let workload = minos::trace::CalibratedWorkload::fit(&ds).map_err(anyhow::Error::msg)?;
+    print!("{}", workload.summary_table(24));
+    println!("registry fingerprint: {:016x}", workload.fingerprint());
+    let hours = f(args, "hours", workload.span_hours)?;
+    if !(hours.is_finite() && hours > 0.0) {
+        bail!("--hours must be a positive number");
+    }
+    let trace = workload.generate_trace(seed, hours, n_regions);
+    if trace.is_empty() {
+        bail!("calibrated trace contains no invocations (raise --rate or --hours)");
+    }
+    let registry = workload.registry();
+    let cfg = ExperimentConfig::calibrated(seed);
+    if cluster_mode {
+        println!(
+            "calibrated cluster replay: {} invocations, {} functions, {n_regions} regions \
+             (span {})",
+            trace.len(),
+            workload.len(),
+            trace.span()
+        );
+        let cluster_cfg = ClusterConfig::demo(n_regions);
+        let outcome = cluster::run_cluster(&cfg, &registry, &trace, &cluster_cfg, threads)?;
+        print!("{}", report::cluster_report(&outcome));
+        return Ok(());
+    }
+    println!(
+        "calibrated replay: {} invocations across {} functions (span {})",
+        trace.len(),
+        workload.len(),
+        trace.span()
+    );
+    let outcome = runner::run_trace_threads(&cfg, &registry, &trace, None, threads)?;
+    print!("{}", report::trace_report(&outcome));
+    Ok(())
+}
+
+fn cmd_calibrate_pjrt() -> Result<()> {
     // Skip (exit 0) with a clear message when the prerequisites are
     // absent, rather than failing: calibration is optional tooling.
     if ArtifactStore::discover_default().is_err() {
@@ -545,6 +666,37 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let day = u(args, "day", 1)? as u32;
     let seed = u(args, "seed", 0x31A5 + day as u64)?;
     let threads = u(args, "threads", 0)? as usize;
+
+    if let Some(path) = args.get("calibrate") {
+        // Calibrated-workload percentile sweep: fit the dataset, then
+        // turn only the elysium-percentile knob over the same fitted
+        // registry and trace.
+        if args.get("policies").is_some() {
+            bail!("--calibrate and --policies are mutually exclusive (pick one sweep)");
+        }
+        let ds = minos::trace::azure::read_azure_csv(Path::new(path))
+            .map_err(anyhow::Error::msg)?;
+        let workload = minos::trace::CalibratedWorkload::fit(&ds).map_err(anyhow::Error::msg)?;
+        let hours = f(args, "hours", workload.span_hours)?;
+        if !(hours.is_finite() && hours > 0.0) {
+            bail!("--hours must be a positive number");
+        }
+        let trace = workload.generate_trace(seed, hours, 1);
+        if trace.is_empty() {
+            bail!("calibrated trace contains no invocations (raise --hours)");
+        }
+        println!(
+            "calibrated sweep: {} functions, {} invocations (fingerprint {:016x})",
+            workload.len(),
+            trace.len(),
+            workload.fingerprint()
+        );
+        let base = ExperimentConfig::calibrated(seed);
+        let pcts = [0.1, 20.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0];
+        let points = sweep::calibrated_percentile_sweep(&workload, &pcts, &base, &trace, threads)?;
+        print!("{}", sweep::calibrated_table(&points));
+        return Ok(());
+    }
 
     if let Some(list) = args.get("policies") {
         // Policy sweep: every listed policy vs the same baseline arms
@@ -782,20 +934,12 @@ fn cmd_replay(args: &Args) -> Result<()> {
         trace_io::write_csv(&trace, Path::new(out))?;
         println!("trace written to {out} ({} records)", trace.len());
     }
-    // Numeric ids are used verbatim, so the demo registry is sized
-    // max-id+1: guard against sparse hashed numeric ids blowing it up.
-    // Name labels are interned to dense ids (max id + 1 == distinct
-    // count), so they only hit the absolute cap, never the sparsity one.
+    // Sparse numeric id spaces are densified at parse time (first-seen
+    // interning, see `trace::io`), so `n_functions` here is the distinct
+    // count for any freshly-parsed trace; only the absolute registry cap
+    // remains.
     let n_functions = trace.n_functions();
     let distinct = trace.function_ids().len();
-    if n_functions > 4_096 && n_functions > 4 * distinct {
-        bail!(
-            "trace uses sparse numeric function ids (max id {}, only {distinct} \
-             distinct): renumber them densely, or use name labels — those are \
-             interned to dense ids",
-            n_functions - 1
-        );
-    }
     if n_functions > 65_536 {
         bail!("trace addresses {n_functions} functions; the demo registry caps at 65536");
     }

@@ -29,8 +29,16 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 }
 
 /// Percentile over an already-sorted slice (no copy) — the hot-path variant.
+///
+/// Empty input returns 0.0, the same error-adjacent sentinel `mean` and
+/// `std_dev` use (the checked entry point, [`percentile`], still panics
+/// loudly). Without the guard, `(n - 1)` on a `usize` panics in debug and
+/// wraps to a garbage rank — then an out-of-bounds index — in release.
 pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
     let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
     if n == 1 {
         return sorted[0];
     }
@@ -132,6 +140,15 @@ mod tests {
     #[should_panic]
     fn percentile_empty_panics() {
         percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn percentile_of_sorted_empty_is_zero() {
+        // Regression: pre-fix, `(n - 1)` wrapped on the empty slice and
+        // this call panicked (debug) or indexed out of bounds (release).
+        for q in [0.0, 50.0, 100.0] {
+            assert_eq!(percentile_of_sorted(&[], q), 0.0);
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub struct Histogram {
     overflow: u64,
     count: u64,
     sum: f64,
+    nan_rejected: u64,
 }
 
 impl Histogram {
@@ -23,10 +24,23 @@ impl Histogram {
             overflow: 0,
             count: 0,
             sum: 0.0,
+            nan_rejected: 0,
         }
     }
 
     pub fn record(&mut self, x: f64) {
+        // NaN fails both range checks (`x < lo` and `x >= hi` are false),
+        // so pre-fix it fell through to the bucket path where
+        // `(NaN / w) as usize == 0` silently landed it in bucket 0 — and
+        // `sum += NaN` poisoned `mean` for every later reader. Reject it
+        // as a counted bad sample instead. The counter is bumped before
+        // the debug assert so debug builds that catch the panic still see
+        // the rejection recorded.
+        if x.is_nan() {
+            self.nan_rejected += 1;
+            debug_assert!(false, "NaN sample recorded into histogram");
+            return;
+        }
         self.count += 1;
         self.sum += x;
         if x < self.lo {
@@ -43,6 +57,11 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Samples rejected as NaN (never counted into `count`/`sum`).
+    pub fn rejected(&self) -> u64 {
+        self.nan_rejected
     }
 
     /// Merge another histogram with identical bounds and bucket count
@@ -68,6 +87,7 @@ impl Histogram {
         self.overflow += other.overflow;
         self.count += other.count;
         self.sum += other.sum;
+        self.nan_rejected += other.nan_rejected;
     }
 
     pub fn mean(&self) -> f64 {
@@ -187,6 +207,32 @@ mod tests {
     fn merge_rejects_different_shapes() {
         let mut a = Histogram::new(0.0, 100.0, 50);
         a.merge(&Histogram::new(0.0, 100.0, 60));
+    }
+
+    #[test]
+    fn nan_is_rejected_not_bucketed() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.record(2.0);
+        h.record(4.0);
+        // Regression: pre-fix, NaN landed in bucket 0 (no panic anywhere)
+        // and `sum += NaN` made `mean` NaN. Post-fix it debug-asserts, and
+        // in all builds it is counted as rejected without touching
+        // count/sum/buckets.
+        let r = catch_unwind(AssertUnwindSafe(|| h.record(f64::NAN)));
+        assert_eq!(r.is_err(), cfg!(debug_assertions));
+        assert_eq!(h.rejected(), 1);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 3.0).abs() < 1e-12, "mean poisoned: {}", h.mean());
+        assert_eq!(h.quantile(0.0), h.quantile(0.0)); // still not NaN
+
+        // Rejections survive merges.
+        let mut other = Histogram::new(0.0, 10.0, 10);
+        other.record(6.0);
+        let _ = catch_unwind(AssertUnwindSafe(|| other.record(f64::NAN)));
+        h.merge(&other);
+        assert_eq!(h.rejected(), 2);
+        assert_eq!(h.count(), 3);
     }
 
     #[test]

@@ -45,7 +45,47 @@ pub enum ArrivalProcess {
     Replay { times_ms: Vec<f64> },
 }
 
+/// Fitted amplitudes are clamped below the sampler's `[0, 1)` bound.
+pub const MAX_FITTED_AMPLITUDE: f64 = 0.95;
+/// Below this fitted amplitude the diurnal signal is noise; fit Poisson.
+pub const MIN_FITTED_AMPLITUDE: f64 = 0.05;
+
 impl ArrivalProcess {
+    /// Fit an arrival process to an hour-of-day invocation histogram
+    /// (Azure-trace style: per-minute counts folded into 24 hour bins —
+    /// any bin count works, the bins are assumed to tile one 24 h day).
+    ///
+    /// First-harmonic Fourier fit: the relative amplitude is `2|c₁|/c₀`
+    /// clamped to [`MAX_FITTED_AMPLITUDE`], the peak hour comes from the
+    /// phase of `c₁`. Histograms flatter than [`MIN_FITTED_AMPLITUDE`]
+    /// (or degenerate inputs) fit as homogeneous Poisson — the diurnal
+    /// machinery costs thinning draws for no modulation.
+    pub fn fit_from_hourly(base_rate_rps: f64, hourly: &[u64]) -> ArrivalProcess {
+        let n = hourly.len();
+        let total: f64 = hourly.iter().map(|&c| c as f64).sum();
+        if n < 2 || total <= 0.0 || base_rate_rps <= 0.0 {
+            return ArrivalProcess::Poisson { rate_rps: base_rate_rps.max(0.0) };
+        }
+        let mut re = 0.0;
+        let mut im = 0.0;
+        for (h, &c) in hourly.iter().enumerate() {
+            // Bin centers, one full period across the histogram.
+            let theta = 2.0 * std::f64::consts::PI * (h as f64 + 0.5) / n as f64;
+            re += c as f64 * theta.cos();
+            im += c as f64 * theta.sin();
+        }
+        let amplitude = (2.0 * (re * re + im * im).sqrt() / total).min(MAX_FITTED_AMPLITUDE);
+        if amplitude < MIN_FITTED_AMPLITUDE {
+            return ArrivalProcess::Poisson { rate_rps: base_rate_rps };
+        }
+        // counts(θ) ≈ mean·(1 + a·cos(θ − φ)): the peak sits at phase φ.
+        let mut peak_hour = im.atan2(re) / (2.0 * std::f64::consts::PI) * 24.0;
+        if peak_hour < 0.0 {
+            peak_hour += 24.0;
+        }
+        ArrivalProcess::Diurnal { base_rate_rps, amplitude, peak_hour }
+    }
+
     /// Long-run mean arrival rate, requests/second (replay: empirical).
     pub fn mean_rate_rps(&self) -> f64 {
         match self {
@@ -265,6 +305,62 @@ mod tests {
             peak as f64 > trough as f64 * 2.0,
             "peak {peak} vs trough {trough}: diurnal modulation missing"
         );
+    }
+
+    #[test]
+    fn fit_recovers_diurnal_parameters() {
+        // Hourly counts drawn from the model itself: the first harmonic
+        // must recover amplitude and peak to within a bin.
+        let (amp, peak) = (0.6f64, 3.0f64);
+        let hourly: Vec<u64> = (0..24)
+            .map(|h| {
+                let phase = 2.0 * std::f64::consts::PI * ((h as f64 + 0.5) - peak) / 24.0;
+                (1_000.0 * (1.0 + amp * phase.cos())).round() as u64
+            })
+            .collect();
+        match ArrivalProcess::fit_from_hourly(2.0, &hourly) {
+            ArrivalProcess::Diurnal { base_rate_rps, amplitude, peak_hour } => {
+                assert_eq!(base_rate_rps, 2.0);
+                assert!((amplitude - amp).abs() < 0.05, "amplitude {amplitude}");
+                assert!((peak_hour - peak).abs() < 0.6, "peak {peak_hour}");
+            }
+            other => panic!("expected Diurnal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fit_flat_or_degenerate_is_poisson() {
+        // Flat histogram: no diurnal signal.
+        let flat = vec![500u64; 24];
+        assert!(matches!(
+            ArrivalProcess::fit_from_hourly(1.5, &flat),
+            ArrivalProcess::Poisson { rate_rps } if rate_rps == 1.5
+        ));
+        // Empty / zero-count / zero-rate inputs degrade gracefully.
+        assert!(matches!(
+            ArrivalProcess::fit_from_hourly(1.5, &[]),
+            ArrivalProcess::Poisson { .. }
+        ));
+        assert!(matches!(
+            ArrivalProcess::fit_from_hourly(1.5, &[0; 24]),
+            ArrivalProcess::Poisson { .. }
+        ));
+        assert!(matches!(
+            ArrivalProcess::fit_from_hourly(0.0, &flat),
+            ArrivalProcess::Poisson { rate_rps } if rate_rps == 0.0
+        ));
+        // An extreme spike clamps below the sampler's amplitude bound and
+        // still samples without panicking.
+        let mut spike = vec![1u64; 24];
+        spike[3] = 1_000_000;
+        let p = ArrivalProcess::fit_from_hourly(2.0, &spike);
+        match &p {
+            ArrivalProcess::Diurnal { amplitude, .. } => {
+                assert!(*amplitude <= MAX_FITTED_AMPLITUDE);
+            }
+            other => panic!("expected Diurnal, got {other:?}"),
+        }
+        assert!(!p.sample_times_ms(600.0, &mut Rng::new(1)).is_empty());
     }
 
     #[test]

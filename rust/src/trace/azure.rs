@@ -1,0 +1,493 @@
+//! Azure Functions 2019 trace-shape ingestion and generation.
+//!
+//! The public Azure Functions dataset ships per-app/per-function rows:
+//! 1440 per-minute invocation-count columns (headers `1..1440`), duration
+//! percentiles (`percentile_Average_50`, …), and allocated memory — the
+//! shape dslab's `process_azure_trace` consumes. This module ingests that
+//! shape *streaming* (one row at a time through `trace::io::RecordReader`,
+//! folding minute counts into hour-of-day histograms as they go, so peak
+//! memory is O(functions), independent of file size) and can generate
+//! seeded synthetic datasets of the same shape for benchmarks and smoke
+//! tests. Fitting the ingested shape into deployable registries lives in
+//! [`super::calibrate`].
+
+use std::fs;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::util::prng::Rng;
+
+use super::io::RecordReader;
+use super::synth::zipf_weights;
+
+/// Accepted names for the function/app identity column, most specific
+/// first (the real dataset has both `HashApp` and `HashFunction`; the
+/// per-function column wins).
+pub const AZURE_NAME_COLUMNS: &[&str] = &["HashFunction", "function", "func", "HashApp", "app"];
+/// Accepted names for the median-duration column (milliseconds).
+pub const AZURE_P50_COLUMNS: &[&str] = &["percentile_Average_50", "p50_ms"];
+/// Accepted names for the tail-duration column (milliseconds).
+pub const AZURE_P99_COLUMNS: &[&str] = &["percentile_Average_99", "p99_ms"];
+/// Accepted names for the mean-duration column (milliseconds).
+pub const AZURE_AVG_COLUMNS: &[&str] = &["Average", "avg_ms"];
+/// Accepted names for the allocated-memory column (megabytes).
+pub const AZURE_MEMORY_COLUMNS: &[&str] = &["AverageAllocatedMb", "memory_mb"];
+
+/// Hour-of-day bins the per-minute counts fold into.
+pub const HOURS_PER_DAY: usize = 24;
+
+/// One function's streamed ingest summary: everything the calibrator
+/// needs, nothing per-minute except the hour-of-day fold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AzureFunctionRow {
+    pub name: String,
+    pub total_invocations: u64,
+    /// Invocation counts folded into hour-of-day bins (minute columns
+    /// beyond one day wrap around).
+    pub hourly: Vec<u64>,
+    pub p50_ms: Option<f64>,
+    pub p99_ms: Option<f64>,
+    pub avg_ms: Option<f64>,
+    pub memory_mb: Option<f64>,
+}
+
+/// An ingested Azure-shape dataset: per-function summaries plus the trace
+/// span implied by the minute columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AzureDataset {
+    pub functions: Vec<AzureFunctionRow>,
+    /// Number of per-minute count columns in the source.
+    pub minutes: usize,
+}
+
+impl AzureDataset {
+    /// Trace span implied by the minute columns, hours.
+    pub fn span_hours(&self) -> f64 {
+        self.minutes as f64 / 60.0
+    }
+
+    pub fn total_invocations(&self) -> u64 {
+        self.functions.iter().map(|f| f.total_invocations).sum()
+    }
+}
+
+/// Read an Azure-shape CSV from a file, streaming in fixed-size chunks.
+pub fn read_azure_csv(path: &Path) -> Result<AzureDataset, String> {
+    let file = fs::File::open(path)
+        .map_err(|e| format!("reading azure trace {}: {e}", path.display()))?;
+    read_records(RecordReader::new(file)).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Parse Azure-shape CSV text. Identical records to [`read_azure_csv`]
+/// on a file with the same contents.
+pub fn parse_azure_csv(text: &str) -> Result<AzureDataset, String> {
+    read_records(RecordReader::new(text.as_bytes()))
+}
+
+fn col_any(header: &[String], names: &[&str]) -> Option<usize> {
+    names.iter().find_map(|n| header.iter().position(|h| h == n))
+}
+
+fn read_records<R: Read>(mut reader: RecordReader<R>) -> Result<AzureDataset, String> {
+    let header = reader.next_record()?.ok_or_else(|| "empty CSV".to_string())?;
+    let name_col = col_any(&header, AZURE_NAME_COLUMNS)
+        .ok_or_else(|| format!("no function column; expected one of {AZURE_NAME_COLUMNS:?}"))?;
+    let p50_col = col_any(&header, AZURE_P50_COLUMNS);
+    let p99_col = col_any(&header, AZURE_P99_COLUMNS);
+    let avg_col = col_any(&header, AZURE_AVG_COLUMNS);
+    let mem_col = col_any(&header, AZURE_MEMORY_COLUMNS);
+    // Minute columns are the numeric headers, Azure-style 1-based.
+    let minute_cols: Vec<(usize, u32)> = header
+        .iter()
+        .enumerate()
+        .filter_map(|(c, h)| h.parse::<u32>().ok().filter(|&m| m >= 1).map(|m| (c, m - 1)))
+        .collect();
+    if minute_cols.is_empty() {
+        return Err("no per-minute count columns (numeric headers 1..N)".into());
+    }
+    let minutes = minute_cols.iter().map(|&(_, m)| m as usize).max().expect("non-empty") + 1;
+
+    let mut functions = Vec::new();
+    let mut row_no = 0usize;
+    while let Some(row) = reader.next_record()? {
+        row_no += 1;
+        if row.len() != header.len() {
+            return Err(format!(
+                "row {} has {} fields, header has {}",
+                row_no,
+                row.len(),
+                header.len()
+            ));
+        }
+        let mut hourly = vec![0u64; HOURS_PER_DAY];
+        let mut total = 0u64;
+        for &(col, minute) in &minute_cols {
+            let raw = row[col].trim();
+            if raw.is_empty() {
+                continue;
+            }
+            let v: f64 = raw
+                .parse()
+                .map_err(|e| format!("row {row_no}: bad count {raw:?}: {e}"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("row {row_no}: count {v} out of range"));
+            }
+            let c = v.round() as u64;
+            if c == 0 {
+                continue;
+            }
+            total += c;
+            hourly[(minute as usize / 60) % HOURS_PER_DAY] += c;
+        }
+        functions.push(AzureFunctionRow {
+            name: row[name_col].clone(),
+            total_invocations: total,
+            hourly,
+            p50_ms: opt_cell(&row, p50_col, row_no)?,
+            p99_ms: opt_cell(&row, p99_col, row_no)?,
+            avg_ms: opt_cell(&row, avg_col, row_no)?,
+            memory_mb: opt_cell(&row, mem_col, row_no)?,
+        });
+    }
+    if functions.is_empty() {
+        return Err("no function rows".into());
+    }
+    Ok(AzureDataset { functions, minutes })
+}
+
+fn opt_cell(row: &[String], col: Option<usize>, row_no: usize) -> Result<Option<f64>, String> {
+    let Some(c) = col else { return Ok(None) };
+    let raw = row[c].trim();
+    if raw.is_empty() {
+        return Ok(None);
+    }
+    let v: f64 = raw
+        .parse()
+        .map_err(|e| format!("row {row_no}: bad value {raw:?}: {e}"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("row {row_no}: value {v} out of range"));
+    }
+    Ok(Some(v))
+}
+
+/// Quantize to the 1e-3 grid the CSV writer prints at, so a generated
+/// dataset round-trips through text bit-exactly.
+fn q3(x: f64) -> f64 {
+    (x * 1_000.0).round() / 1_000.0
+}
+
+/// Seeded generator of an Azure-shaped synthetic dataset: Zipf popularity
+/// across functions, per-minute counts with steady / bursty / diurnal
+/// archetypes cycled by function index, duration percentiles and memory
+/// with deterministic per-function variation. Every emitted value sits on
+/// the CSV print grid (counts integral, durations quantized to 1e-3), so
+/// generate → write → read reproduces the dataset bit-for-bit — the
+/// anchor the calibration smoke test compares fingerprints across.
+#[derive(Debug, Clone)]
+pub struct AzureSynthConfig {
+    pub n_functions: usize,
+    /// Minute columns to emit (1440 = one day, the Azure file shape).
+    pub minutes: usize,
+    /// Aggregate arrival rate across all functions, requests/second.
+    pub total_rate_rps: f64,
+    /// Zipf popularity exponent across functions.
+    pub zipf_exponent: f64,
+    pub seed: u64,
+}
+
+impl Default for AzureSynthConfig {
+    fn default() -> Self {
+        AzureSynthConfig {
+            n_functions: 128,
+            minutes: 1_440,
+            total_rate_rps: 12.0,
+            zipf_exponent: 1.0,
+            seed: 0xA90E,
+        }
+    }
+}
+
+impl AzureSynthConfig {
+    /// Generate the dataset. A pure function of the config.
+    pub fn generate(&self) -> AzureDataset {
+        assert!(self.n_functions > 0 && self.minutes > 0);
+        assert!(self.total_rate_rps >= 0.0);
+        let root = Rng::new(self.seed);
+        let weights = zipf_weights(self.n_functions, self.zipf_exponent);
+        let mut functions = Vec::with_capacity(self.n_functions);
+        for (i, w) in weights.iter().enumerate() {
+            let mut rng = root.fork(10 + i as u64);
+            let per_minute = w * self.total_rate_rps * 60.0;
+            let mut hourly = vec![0u64; HOURS_PER_DAY];
+            let mut total = 0u64;
+            for m in 0..self.minutes {
+                let lambda = match i % 3 {
+                    // Steady.
+                    0 => per_minute,
+                    // Bursty: 1/3 duty cycle at 3x keeps the mean.
+                    1 => {
+                        if rng.chance(1.0 / 3.0) {
+                            per_minute * 3.0
+                        } else {
+                            0.0
+                        }
+                    }
+                    // Diurnal, peaking at hour 3 like the synth generator.
+                    _ => {
+                        let h = (m as f64 + 0.5) / 60.0;
+                        let phase = 2.0 * std::f64::consts::PI * (h - 3.0) / 24.0;
+                        per_minute * (1.0 + 0.6 * phase.cos())
+                    }
+                };
+                let c = poisson(&mut rng, lambda);
+                if c > 0 {
+                    total += c;
+                    hourly[(m / 60) % HOURS_PER_DAY] += c;
+                }
+            }
+            // Deterministic per-function duration/memory variation, the
+            // same ±12 % scheme as `FunctionRegistry::demo`.
+            let base_p50 = match i % 3 {
+                0 => 2_200.0,
+                1 => 700.0,
+                _ => 3_600.0,
+            };
+            let variation = (1.0 + 0.04 * ((i / 3) % 7) as f64 - 0.12).max(0.7);
+            let p50 = q3(base_p50 * variation);
+            let p99 = q3(p50 * (1.7 + 0.1 * (i % 4) as f64));
+            let avg = q3(p50 * 1.12);
+            let memory = q3(120.0 + 35.0 * (i % 9) as f64);
+            functions.push(AzureFunctionRow {
+                name: format!("azure-synth-{i:05}"),
+                total_invocations: total,
+                hourly,
+                p50_ms: Some(p50),
+                p99_ms: Some(p99),
+                avg_ms: Some(avg),
+                memory_mb: Some(memory),
+            });
+        }
+        AzureDataset { functions, minutes: self.minutes }
+    }
+}
+
+/// Deterministic Poisson sampler on the shared RNG: Knuth's product of
+/// uniforms for small means, a rounded normal approximation for large.
+fn poisson(rng: &mut Rng, mean: f64) -> u64 {
+    if mean <= 0.0 {
+        return 0;
+    }
+    if mean < 32.0 {
+        let limit = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    rng.normal_ms(mean, mean.sqrt()).round().max(0.0) as u64
+}
+
+/// Render a dataset as Azure-shape CSV text.
+///
+/// The hour-of-day fold is lossy (we keep no per-minute detail), so the
+/// emitted file spreads each hour's count evenly over its minutes with
+/// the remainder on the first minute — totals and hourly folds survive
+/// the round trip exactly, which is all the fitters read.
+pub fn render_azure_csv(ds: &AzureDataset) -> String {
+    let mut out = Vec::new();
+    write_azure_records(&mut out, ds).expect("writing to memory cannot fail");
+    String::from_utf8(out).expect("CSV text is ASCII")
+}
+
+/// Write a dataset to `path` as Azure-shape CSV (buffered, streaming).
+pub fn write_azure_csv(ds: &AzureDataset, path: &Path) -> Result<(), String> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)
+            .map_err(|e| format!("creating {}: {e}", parent.display()))?;
+    }
+    let file =
+        fs::File::create(path).map_err(|e| format!("writing {}: {e}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    write_azure_records(&mut w, ds).map_err(|e| format!("writing {}: {e}", path.display()))?;
+    w.flush().map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+fn write_azure_records<W: Write>(w: &mut W, ds: &AzureDataset) -> std::io::Result<()> {
+    write!(w, "HashApp,HashFunction")?;
+    for m in 1..=ds.minutes {
+        write!(w, ",{m}")?;
+    }
+    writeln!(w, ",Average,percentile_Average_50,percentile_Average_99,AverageAllocatedMb")?;
+    // Minutes contributing to each hour-of-day bin (multi-day spans fold
+    // several wall-clock hours into one bin).
+    let mut bin_minutes = [0u64; HOURS_PER_DAY];
+    for m in 0..ds.minutes {
+        bin_minutes[(m / 60) % HOURS_PER_DAY] += 1;
+    }
+    for f in &ds.functions {
+        write!(w, "{},{}", f.name, f.name)?;
+        for m in 0..ds.minutes {
+            let hour = (m / 60) % HOURS_PER_DAY;
+            let n = bin_minutes[hour];
+            let count = f.hourly[hour];
+            // Spread evenly over the bin's minutes, remainder on the
+            // bin's first minute, so totals and folds round-trip exactly.
+            let c = count / n + if m == hour * 60 { count % n } else { 0 };
+            if c == 0 {
+                write!(w, ",")?;
+            } else {
+                write!(w, ",{c}")?;
+            }
+        }
+        for v in [f.avg_ms, f.p50_ms, f.p99_ms, f.memory_mb] {
+            match v {
+                Some(x) => write!(w, ",{x:.3}")?,
+                None => write!(w, ",")?,
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_azure_shape() {
+        let text = "HashApp,HashFunction,1,2,61,Average,percentile_Average_50,percentile_Average_99,AverageAllocatedMb\n\
+                    app1,f1,3,2,5,800.5,700,1900,170\n\
+                    app1,f2,,,1,,,,\n";
+        let ds = parse_azure_csv(text).unwrap();
+        assert_eq!(ds.minutes, 61);
+        assert_eq!(ds.functions.len(), 2);
+        let f1 = &ds.functions[0];
+        assert_eq!(f1.name, "f1");
+        assert_eq!(f1.total_invocations, 10);
+        assert_eq!(f1.hourly[0], 5, "minutes 1,2 fold into hour 0");
+        assert_eq!(f1.hourly[1], 5, "minute 61 folds into hour 1");
+        assert_eq!(f1.p50_ms, Some(700.0));
+        assert_eq!(f1.avg_ms, Some(800.5));
+        assert_eq!(f1.memory_mb, Some(170.0));
+        let f2 = &ds.functions[1];
+        assert_eq!(f2.total_invocations, 1);
+        assert_eq!(f2.p50_ms, None, "blank cells are missing, not zero");
+        assert_eq!(ds.total_invocations(), 11);
+    }
+
+    #[test]
+    fn rejects_malformed_datasets() {
+        assert!(parse_azure_csv("").is_err(), "empty");
+        assert!(
+            parse_azure_csv("HashFunction,Average\nf1,5\n").is_err(),
+            "no minute columns"
+        );
+        assert!(parse_azure_csv("1,2\n3,4\n").is_err(), "no name column");
+        assert!(
+            parse_azure_csv("HashFunction,1\nf1,nope\n").is_err(),
+            "bad count"
+        );
+        assert!(
+            parse_azure_csv("HashFunction,1\nf1,-2\n").is_err(),
+            "negative count"
+        );
+        assert!(parse_azure_csv("HashFunction,1\nf1,1,9\n").is_err(), "ragged row");
+        assert!(parse_azure_csv("HashFunction,1\n").is_err(), "no rows");
+    }
+
+    #[test]
+    fn synth_is_deterministic_and_shaped() {
+        let cfg = AzureSynthConfig {
+            n_functions: 9,
+            minutes: 240,
+            total_rate_rps: 3.0,
+            ..Default::default()
+        };
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a, b, "same config must reproduce the dataset");
+        let c = AzureSynthConfig { seed: 1, ..cfg.clone() }.generate();
+        assert_ne!(a, c, "different seed must differ");
+        assert_eq!(a.functions.len(), 9);
+        assert_eq!(a.minutes, 240);
+        // Zipf head dominates the tail.
+        assert!(
+            a.functions[0].total_invocations > 2 * a.functions[8].total_invocations,
+            "head {} tail {}",
+            a.functions[0].total_invocations,
+            a.functions[8].total_invocations
+        );
+        // Aggregate count tracks rate x span (4 h x 3 rps = 43200).
+        let total = a.total_invocations() as f64;
+        assert!((30_000.0..58_000.0).contains(&total), "total {total}");
+        // Hourly folds are consistent with totals.
+        for f in &a.functions {
+            assert_eq!(f.hourly.iter().sum::<u64>(), f.total_invocations);
+        }
+    }
+
+    #[test]
+    fn synth_round_trips_through_csv_bit_exactly() {
+        let cfg = AzureSynthConfig {
+            n_functions: 7,
+            minutes: 180,
+            total_rate_rps: 2.0,
+            ..Default::default()
+        };
+        let ds = cfg.generate();
+        let text = render_azure_csv(&ds);
+        let back = parse_azure_csv(&text).unwrap();
+        assert_eq!(back, ds, "write -> read must reproduce the dataset exactly");
+        // Multi-day spans fold several hours into one bin; the spread on
+        // write must still conserve totals and folds.
+        let two_days = AzureSynthConfig {
+            n_functions: 3,
+            minutes: 2 * 1_440,
+            total_rate_rps: 0.5,
+            ..Default::default()
+        }
+        .generate();
+        let back = parse_azure_csv(&render_azure_csv(&two_days)).unwrap();
+        assert_eq!(back, two_days);
+    }
+
+    #[test]
+    fn file_write_matches_in_memory_render() {
+        let dir = std::env::temp_dir().join("minos-azure-io-test");
+        let path = dir.join("azure.csv");
+        let ds = AzureSynthConfig {
+            n_functions: 3,
+            minutes: 120,
+            total_rate_rps: 1.0,
+            ..Default::default()
+        }
+        .generate();
+        write_azure_csv(&ds, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, render_azure_csv(&ds));
+        let back = read_azure_csv(&path).unwrap();
+        assert_eq!(back, ds);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poisson_sampler_tracks_mean() {
+        let mut rng = Rng::new(77);
+        for mean in [0.3, 4.0, 64.0] {
+            let n = 4_000;
+            let sum: u64 = (0..n).map(|_| poisson(&mut rng, mean)).sum();
+            let got = sum as f64 / n as f64;
+            assert!(
+                (got - mean).abs() < mean.max(1.0) * 0.1,
+                "mean {mean}: got {got}"
+            );
+        }
+        assert_eq!(poisson(&mut Rng::new(1), 0.0), 0);
+    }
+}

@@ -1,0 +1,459 @@
+//! Fit an ingested Azure-shape dataset into a deployable workload.
+//!
+//! Each [`super::azure::AzureFunctionRow`] becomes one
+//! [`CalibratedFunction`]: a [`FunctionSpec`] mapped from the duration
+//! percentiles and memory, plus an arrival process fitted from the
+//! hour-of-day histogram (`ArrivalProcess::fit_from_hourly` — diurnal
+//! thinning when the histogram carries a daily harmonic, Poisson when
+//! flat). The calibrated workload then expands into a deterministic
+//! replayable [`Trace`] and a [`FunctionRegistry`], so every existing
+//! replay/sweep path runs over trace-fitted functions unchanged.
+//!
+//! The fit is intentionally coarse — median duration to CPU share, p99/p50
+//! dispersion to payload sigma, memory to download size — but every step
+//! is a pure function of the dataset, pinned by [`CalibratedWorkload::
+//! fingerprint`] so smoke tests can assert cross-process identity.
+
+use crate::coordinator::MinosConfig;
+use crate::platform::RegionId;
+use crate::sim::SimTime;
+use crate::util::prng::Rng;
+use crate::workload::download::NetworkModel;
+use crate::workload::FunctionSpec;
+
+use super::arrivals::ArrivalProcess;
+use super::azure::AzureDataset;
+use super::model::{FunctionId, Trace, TraceRecord};
+use super::registry::{FunctionProfile, FunctionRegistry};
+
+/// Median duration assumed when the dataset has no duration columns
+/// (the paper's weather-function regime).
+pub const DEFAULT_P50_MS: f64 = 2_200.0;
+/// Allocated memory assumed when absent, MB (≈ the weather function's
+/// 15 KB download under [`DOWNLOAD_BYTES_PER_MB`]).
+pub const DEFAULT_MEMORY_MB: f64 = 170.0;
+/// Download-size proxy: bytes of input object per MB of allocated memory.
+pub const DOWNLOAD_BYTES_PER_MB: f64 = 90.0;
+/// Payload-scale lognormal sigma when the dataset has no p99 column.
+pub const DEFAULT_PAYLOAD_SIGMA: f64 = 0.25;
+/// Standard normal quantile at 0.99 — `ln(p99/p50) = Z99·sigma` under a
+/// lognormal duration model.
+const Z99: f64 = 2.326_347_874_040_841;
+
+/// One trace-fitted function.
+#[derive(Debug, Clone)]
+pub struct CalibratedFunction {
+    pub id: FunctionId,
+    pub name: String,
+    pub spec: FunctionSpec,
+    pub process: ArrivalProcess,
+    /// Lognormal sigma of per-invocation payload scale.
+    pub payload_sigma: f64,
+    /// Fitted long-run arrival rate, requests/second.
+    pub mean_rate_rps: f64,
+    /// Invocations observed in the source dataset.
+    pub total_invocations: u64,
+}
+
+/// A whole dataset fitted into deployable functions.
+#[derive(Debug, Clone)]
+pub struct CalibratedWorkload {
+    pub functions: Vec<CalibratedFunction>,
+    /// Span of the source dataset, hours.
+    pub span_hours: f64,
+}
+
+impl CalibratedWorkload {
+    /// Fit every function of an ingested dataset.
+    pub fn fit(ds: &AzureDataset) -> Result<CalibratedWorkload, String> {
+        if ds.functions.is_empty() {
+            return Err("dataset has no functions".into());
+        }
+        if ds.minutes == 0 {
+            return Err("dataset has no minute columns".into());
+        }
+        let span_s = ds.minutes as f64 * 60.0;
+        let functions = ds
+            .functions
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let rate = row.total_invocations as f64 / span_s;
+                let p50 = row.p50_ms.filter(|&p| p > 0.0).unwrap_or(DEFAULT_P50_MS).max(1.0);
+                let payload_sigma = match row.p99_ms.filter(|&p| p > p50) {
+                    Some(p99) => ((p99 / p50).ln() / Z99).clamp(0.0, 1.5),
+                    None => DEFAULT_PAYLOAD_SIGMA,
+                };
+                let memory = row.memory_mb.filter(|&m| m > 0.0).unwrap_or(DEFAULT_MEMORY_MB);
+                let spec = FunctionSpec {
+                    // The CPU-bound share dominates the median; prepare
+                    // (download) and overhead ride on top of it.
+                    base_analysis_ms: (0.85 * p50).max(1.0),
+                    overhead_ms: (0.05 * p50).clamp(5.0, 150.0),
+                    download_bytes: (memory * DOWNLOAD_BYTES_PER_MB).round().max(1_024.0)
+                        as usize,
+                    network: NetworkModel::default(),
+                };
+                CalibratedFunction {
+                    id: FunctionId(i as u32),
+                    name: row.name.clone(),
+                    spec,
+                    process: ArrivalProcess::fit_from_hourly(rate, &row.hourly),
+                    payload_sigma,
+                    mean_rate_rps: rate,
+                    total_invocations: row.total_invocations,
+                }
+            })
+            .collect();
+        Ok(CalibratedWorkload { functions, span_hours: ds.span_hours() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+
+    pub fn total_invocations(&self) -> u64 {
+        self.functions.iter().map(|f| f.total_invocations).sum()
+    }
+
+    /// Expected invocation count of a generated trace over `hours`.
+    pub fn expected_invocations(&self, hours: f64) -> f64 {
+        self.functions.iter().map(|f| f.process.mean_rate_rps()).sum::<f64>() * 3_600.0 * hours
+    }
+
+    /// The fitted registry: dense ids, paper-default Minos config per
+    /// function (elysium percentile 60, the paper's default knob — sweeps
+    /// rotate it via `FunctionRegistry::with_elysium_percentile`).
+    pub fn registry(&self) -> FunctionRegistry {
+        let mut reg = FunctionRegistry::new();
+        for f in &self.functions {
+            reg.push(FunctionProfile {
+                id: f.id,
+                name: f.name.clone(),
+                spec: f.spec.clone(),
+                minos: MinosConfig::paper_default(),
+                elysium_percentile: 60.0,
+                policy: None,
+            });
+        }
+        reg
+    }
+
+    /// Expand the fitted processes into a replayable trace over `hours`,
+    /// functions cycled over `n_regions` home regions. Pure function of
+    /// `(self, seed, hours, n_regions)` — the same fork-stream layout as
+    /// the synthetic generator, so thread count never changes the trace.
+    pub fn generate_trace(&self, seed: u64, hours: f64, n_regions: usize) -> Trace {
+        assert!(hours > 0.0, "trace span must be positive");
+        assert!(n_regions >= 1, "need at least one region");
+        let root = Rng::new(seed);
+        let horizon_s = hours * 3_600.0;
+        let mut records = Vec::new();
+        for (i, f) in self.functions.iter().enumerate() {
+            let mut rng_arrivals = root.fork(10 + i as u64);
+            let mut rng_payload = root.fork(100_000 + i as u64);
+            let sigma = f.payload_sigma;
+            let region = RegionId((i % n_regions) as u32);
+            for t_ms in f.process.sample_times_ms(horizon_s, &mut rng_arrivals) {
+                let payload_scale = if sigma > 0.0 {
+                    rng_payload.lognormal(-0.5 * sigma * sigma, sigma)
+                } else {
+                    1.0
+                };
+                records.push(TraceRecord {
+                    t: SimTime::from_ms(t_ms),
+                    function: f.id,
+                    region,
+                    payload_scale,
+                });
+            }
+        }
+        Trace::from_records(records)
+    }
+
+    /// FNV-1a fingerprint over every fitted parameter — the identity the
+    /// calibration smoke test asserts across processes, thread counts,
+    /// and the in-memory vs round-tripped-through-CSV paths.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.u64(self.functions.len() as u64);
+        h.f64(self.span_hours);
+        for f in &self.functions {
+            h.bytes(f.name.as_bytes());
+            h.u64(f.total_invocations);
+            h.f64(f.mean_rate_rps);
+            h.f64(f.payload_sigma);
+            h.f64(f.spec.base_analysis_ms);
+            h.f64(f.spec.overhead_ms);
+            h.u64(f.spec.download_bytes as u64);
+            h.f64(f.spec.network.base_latency_ms);
+            h.f64(f.spec.network.bandwidth_mbps);
+            match &f.process {
+                ArrivalProcess::Poisson { rate_rps } => {
+                    h.u64(1);
+                    h.f64(*rate_rps);
+                }
+                ArrivalProcess::OnOff { rate_on_rps, mean_on_s, mean_off_s } => {
+                    h.u64(2);
+                    h.f64(*rate_on_rps);
+                    h.f64(*mean_on_s);
+                    h.f64(*mean_off_s);
+                }
+                ArrivalProcess::Diurnal { base_rate_rps, amplitude, peak_hour } => {
+                    h.u64(3);
+                    h.f64(*base_rate_rps);
+                    h.f64(*amplitude);
+                    h.f64(*peak_hour);
+                }
+                ArrivalProcess::Replay { times_ms } => {
+                    h.u64(4);
+                    h.u64(times_ms.len() as u64);
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Deterministic human-readable summary, at most `max_rows` function
+    /// rows (hottest first by source invocation count, id as tiebreak).
+    pub fn summary_table(&self, max_rows: usize) -> String {
+        let mut order: Vec<usize> = (0..self.functions.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (fa, fb) = (&self.functions[a], &self.functions[b]);
+            fb.total_invocations.cmp(&fa.total_invocations).then(a.cmp(&b))
+        });
+        let mut out = format!(
+            "calibrated registry: {} functions, span {:.1} h, {} invocations (fitted rate {:.2} rps)\n",
+            self.functions.len(),
+            self.span_hours,
+            self.total_invocations(),
+            self.total_invocations() as f64 / (self.span_hours * 3_600.0).max(1e-9),
+        );
+        out.push_str(&format!(
+            "  {:<22} {:>9} {:>12} {:>12} {:>6}  {}\n",
+            "function", "rate_rps", "invocations", "analysis_ms", "sigma", "process"
+        ));
+        for &i in order.iter().take(max_rows) {
+            let f = &self.functions[i];
+            out.push_str(&format!(
+                "  {:<22} {:>9.4} {:>12} {:>12.1} {:>6.2}  {}\n",
+                f.name,
+                f.mean_rate_rps,
+                f.total_invocations,
+                f.spec.base_analysis_ms,
+                f.payload_sigma,
+                process_label(&f.process),
+            ));
+        }
+        if self.functions.len() > max_rows {
+            out.push_str(&format!("  (+{} more)\n", self.functions.len() - max_rows));
+        }
+        out
+    }
+}
+
+fn process_label(p: &ArrivalProcess) -> String {
+    match p {
+        ArrivalProcess::Poisson { .. } => "poisson".into(),
+        ArrivalProcess::OnOff { .. } => "onoff".into(),
+        ArrivalProcess::Diurnal { amplitude, peak_hour, .. } => {
+            format!("diurnal({amplitude:.2}@{peak_hour:.1}h)")
+        }
+        ArrivalProcess::Replay { .. } => "replay".into(),
+    }
+}
+
+/// Minimal FNV-1a 64-bit hasher (stable across platforms and runs).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        self.u64(bs.len() as u64);
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::azure::{AzureFunctionRow, AzureSynthConfig};
+
+    fn tiny_dataset() -> AzureDataset {
+        // One strongly diurnal function with full duration columns, one
+        // flat function with everything missing.
+        let diurnal_hourly: Vec<u64> = (0..24)
+            .map(|h| {
+                let phase = 2.0 * std::f64::consts::PI * (h as f64 + 0.5 - 3.0) / 24.0;
+                (600.0 * (1.0 + 0.7 * phase.cos())).round() as u64
+            })
+            .collect();
+        let total: u64 = diurnal_hourly.iter().sum();
+        AzureDataset {
+            functions: vec![
+                AzureFunctionRow {
+                    name: "diurnal-fn".into(),
+                    total_invocations: total,
+                    hourly: diurnal_hourly,
+                    p50_ms: Some(1_000.0),
+                    p99_ms: Some(3_000.0),
+                    avg_ms: Some(1_200.0),
+                    memory_mb: Some(200.0),
+                },
+                AzureFunctionRow {
+                    name: "bare-fn".into(),
+                    total_invocations: 2_400,
+                    hourly: vec![100; 24],
+                    p50_ms: None,
+                    p99_ms: None,
+                    avg_ms: None,
+                    memory_mb: None,
+                },
+            ],
+            minutes: 1_440,
+        }
+    }
+
+    #[test]
+    fn fit_maps_rows_to_specs_and_processes() {
+        let w = CalibratedWorkload::fit(&tiny_dataset()).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.span_hours, 24.0);
+
+        let d = &w.functions[0];
+        assert_eq!(d.id, FunctionId(0));
+        assert!((d.mean_rate_rps - d.total_invocations as f64 / 86_400.0).abs() < 1e-12);
+        assert!((d.spec.base_analysis_ms - 850.0).abs() < 1e-9, "0.85 x p50");
+        assert_eq!(d.spec.overhead_ms, 50.0);
+        assert_eq!(d.spec.download_bytes, (200.0 * DOWNLOAD_BYTES_PER_MB) as usize);
+        // ln(3)/Z99 ≈ 0.472.
+        assert!((d.payload_sigma - (3.0f64).ln() / Z99).abs() < 1e-12);
+        match &d.process {
+            ArrivalProcess::Diurnal { amplitude, peak_hour, .. } => {
+                assert!((amplitude - 0.7).abs() < 0.05, "amplitude {amplitude}");
+                assert!((peak_hour - 3.0).abs() < 0.6, "peak {peak_hour}");
+            }
+            other => panic!("expected Diurnal, got {other:?}"),
+        }
+
+        let b = &w.functions[1];
+        assert!((b.spec.base_analysis_ms - 0.85 * DEFAULT_P50_MS).abs() < 1e-9);
+        assert_eq!(b.payload_sigma, DEFAULT_PAYLOAD_SIGMA);
+        assert!(matches!(b.process, ArrivalProcess::Poisson { .. }), "flat ⇒ Poisson");
+        assert!((b.mean_rate_rps - 2_400.0 / 86_400.0).abs() < 1e-12);
+
+        assert!(CalibratedWorkload::fit(&AzureDataset { functions: vec![], minutes: 10 })
+            .is_err());
+    }
+
+    #[test]
+    fn registry_carries_fitted_specs() {
+        let w = CalibratedWorkload::fit(&tiny_dataset()).unwrap();
+        let reg = w.registry();
+        assert_eq!(reg.len(), 2);
+        let p = reg.get(FunctionId(0)).unwrap();
+        assert_eq!(p.name, "diurnal-fn");
+        assert_eq!(p.spec.base_analysis_ms, w.functions[0].spec.base_analysis_ms);
+        assert_eq!(p.elysium_percentile, 60.0);
+        assert!(p.minos.enabled);
+        let swept = w.registry().with_elysium_percentile(80.0);
+        assert!(swept.iter().all(|p| p.elysium_percentile == 80.0));
+    }
+
+    #[test]
+    fn generated_trace_is_deterministic_and_sized() {
+        let w = CalibratedWorkload::fit(&tiny_dataset()).unwrap();
+        let a = w.generate_trace(7, 2.0, 1);
+        let b = w.generate_trace(7, 2.0, 1);
+        assert_eq!(a.records(), b.records());
+        let c = w.generate_trace(8, 2.0, 1);
+        assert_ne!(a.records(), c.records());
+        // Expected count: total fitted rate x horizon.
+        let expected = w.expected_invocations(2.0);
+        let got = a.len() as f64;
+        assert!(
+            (got - expected).abs() < expected * 0.2 + 50.0,
+            "got {got}, expected ~{expected}"
+        );
+        assert!(a.n_functions() <= w.registry().len());
+        assert!(a.records().iter().all(|r| r.payload_scale > 0.0));
+        // Regions cycle per function index.
+        let t = w.generate_trace(7, 0.5, 2);
+        assert_eq!(t.n_regions(), 2);
+    }
+
+    #[test]
+    fn fingerprint_pins_the_fit() {
+        let ds = tiny_dataset();
+        let a = CalibratedWorkload::fit(&ds).unwrap().fingerprint();
+        let b = CalibratedWorkload::fit(&ds).unwrap().fingerprint();
+        assert_eq!(a, b, "same dataset ⇒ same fingerprint");
+        let mut altered = ds.clone();
+        altered.functions[0].p50_ms = Some(1_001.0);
+        let c = CalibratedWorkload::fit(&altered).unwrap().fingerprint();
+        assert_ne!(a, c, "fit inputs must move the fingerprint");
+    }
+
+    #[test]
+    fn fit_of_synth_dataset_round_trips_through_csv() {
+        use crate::trace::azure::{parse_azure_csv, render_azure_csv};
+        let ds = AzureSynthConfig {
+            n_functions: 6,
+            minutes: 240,
+            total_rate_rps: 2.0,
+            ..Default::default()
+        }
+        .generate();
+        let direct = CalibratedWorkload::fit(&ds).unwrap();
+        let via_csv =
+            CalibratedWorkload::fit(&parse_azure_csv(&render_azure_csv(&ds)).unwrap()).unwrap();
+        assert_eq!(direct.fingerprint(), via_csv.fingerprint());
+        // And the expanded traces are bit-identical too.
+        let a = direct.generate_trace(5, 1.0, 1);
+        let b = via_csv.generate_trace(5, 1.0, 1);
+        assert_eq!(a.records(), b.records());
+    }
+
+    #[test]
+    fn summary_table_caps_rows() {
+        let ds = AzureSynthConfig {
+            n_functions: 30,
+            minutes: 60,
+            total_rate_rps: 1.0,
+            ..Default::default()
+        }
+        .generate();
+        let w = CalibratedWorkload::fit(&ds).unwrap();
+        let s = w.summary_table(5);
+        assert!(s.contains("calibrated registry: 30 functions"));
+        assert!(s.contains("(+25 more)"));
+        assert_eq!(s.lines().count(), 2 + 5 + 1, "header + cap + more-line");
+        // Hottest (Zipf head) listed first.
+        assert!(s.contains("azure-synth-00000"));
+    }
+}

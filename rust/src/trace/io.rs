@@ -1,16 +1,29 @@
-//! Trace CSV I/O on top of `util::csvio`.
+//! Trace CSV I/O: a streaming record reader feeding a one-pass builder.
 //!
 //! Canonical columns: `t_ms,function_id,region,payload_scale`. The reader
 //! is deliberately liberal, dslab/Azure-trace style: alternate column
-//! names are accepted (resolved via the shared `Csv::col_any` alias
-//! lookup), `payload_scale` and `region` are optional (defaults 1.0 and
-//! region 0), and the function/region columns may hold either numeric ids
-//! or opaque names (Azure publishes hashed app names) — names are interned
-//! to dense ids in first-seen order via the shared
-//! `util::csvio::LabelInterner`. Rows may be unsorted; parsing
-//! stable-sorts by time, so same-timestamp rows replay in file order.
+//! names are accepted, `payload_scale` and `region` are optional (defaults
+//! 1.0 and region 0), and the function/region columns may hold either
+//! numeric ids or opaque names (Azure publishes hashed app names). Rows
+//! may be unsorted; parsing stable-sorts by time, so same-timestamp rows
+//! replay in file order.
+//!
+//! Ingestion is streaming: [`RecordReader`] walks the file in fixed-size
+//! chunks (quoted fields, `""` escapes, and embedded newlines survive
+//! chunk boundaries), so peak memory is O(parsed records), independent of
+//! file size — no whole-file slurp, and every row is scanned exactly once.
+//!
+//! Id columns are interned to dense ids in first-seen order via the shared
+//! `util::csvio::LabelInterner`. All-numeric id columns keep their ids
+//! verbatim only while the id space is dense ([`DENSE_NUMERIC_MAX`] /
+//! [`DENSE_NUMERIC_SLACK`]); genuinely sparse numeric ids — Azure-style
+//! hashed app ids like `40000001` — are densified through the same
+//! interner, because `Trace::n_functions()`/`n_regions()` are max id + 1
+//! and sparse ids would otherwise allocate millions of phantom
+//! deployments downstream.
 
 use std::fs;
+use std::io::Read;
 use std::path::Path;
 
 use crate::platform::RegionId;
@@ -27,6 +40,18 @@ pub const FUNCTION_COLUMNS: &[&str] = &["function_id", "function", "func", "app"
 pub const REGION_COLUMNS: &[&str] = &["region", "region_id", "datacenter"];
 /// Accepted names for the optional payload-scale column.
 pub const PAYLOAD_COLUMNS: &[&str] = &["payload_scale", "scale", "payload"];
+
+/// Numeric id spaces whose max id stays below this keep their ids
+/// verbatim — the historical behaviour every existing dense-id fixture
+/// and golden fingerprint relies on.
+pub const DENSE_NUMERIC_MAX: u64 = 4_096;
+/// Above [`DENSE_NUMERIC_MAX`], numeric ids stay verbatim only while
+/// max id + 1 is within this factor of the distinct count — the same
+/// threshold the replay CLI used to enforce by refusing the trace.
+pub const DENSE_NUMERIC_SLACK: u64 = 4;
+
+/// Chunk size for streaming reads (bytes).
+const READ_CHUNK: usize = 64 * 1024;
 
 /// Render a trace as a canonical CSV table.
 pub fn to_csv(trace: &Trace) -> Csv {
@@ -47,82 +72,288 @@ pub fn write_csv(trace: &Trace, path: &Path) -> std::io::Result<()> {
     to_csv(trace).save(path)
 }
 
-/// Read a trace from a CSV file.
+/// Read a trace from a CSV file, streaming in fixed-size chunks.
 pub fn read_csv(path: &Path) -> Result<Trace, String> {
-    let text = fs::read_to_string(path)
+    let file = fs::File::open(path)
         .map_err(|e| format!("reading trace {}: {e}", path.display()))?;
-    parse_csv(&text)
+    read_records(RecordReader::new(file)).map_err(|e| format!("{}: {e}", path.display()))
 }
 
-/// An id-like column: either every row parses as `u32` (ids used
-/// verbatim) or values are opaque names interned densely in first-seen
-/// order. Azure traces have ~10k distinct apps, so interning is O(1)/row.
-struct IdColumn {
-    col: usize,
-    all_numeric: bool,
-    interner: LabelInterner,
-}
-
-impl IdColumn {
-    fn scan(csv: &Csv, col: usize) -> IdColumn {
-        let all_numeric = csv.rows.iter().all(|r| r[col].parse::<u32>().is_ok());
-        IdColumn { col, all_numeric, interner: LabelInterner::new() }
-    }
-
-    fn id(&mut self, row: &[String]) -> u32 {
-        if self.all_numeric {
-            row[self.col].parse::<u32>().expect("checked numeric")
-        } else {
-            self.interner.intern(&row[self.col])
-        }
-    }
-}
-
-/// Parse CSV text into a [`Trace`].
+/// Parse CSV text into a [`Trace`]. Byte-for-byte the same records as
+/// [`read_csv`] on a file with the same contents.
 pub fn parse_csv(text: &str) -> Result<Trace, String> {
-    let csv = Csv::parse(text)?;
-    let tcol = csv.col_any(TIME_COLUMNS).ok_or_else(|| {
-        format!("no time column; expected one of {TIME_COLUMNS:?}")
-    })?;
-    let fcol = csv.col_any(FUNCTION_COLUMNS).ok_or_else(|| {
-        format!("no function column; expected one of {FUNCTION_COLUMNS:?}")
-    })?;
-    let rcol = csv.col_any(REGION_COLUMNS);
-    let pcol = csv.col_any(PAYLOAD_COLUMNS);
+    read_records(RecordReader::new(text.as_bytes()))
+}
 
-    let mut functions = IdColumn::scan(&csv, fcol);
-    let mut regions = rcol.map(|c| IdColumn::scan(&csv, c));
+fn read_records<R: Read>(mut reader: RecordReader<R>) -> Result<Trace, String> {
+    let header = reader.next_record()?.ok_or_else(|| "empty CSV".to_string())?;
+    let mut builder = TraceBuilder::from_header(&header)?;
+    while let Some(row) = reader.next_record()? {
+        builder.push_row(&row)?;
+    }
+    Ok(builder.finish())
+}
 
-    let mut records = Vec::with_capacity(csv.rows.len());
-    for (i, row) in csv.rows.iter().enumerate() {
-        let t_ms: f64 = row[tcol]
-            .parse()
-            .map_err(|e| format!("row {}: bad time {:?}: {e}", i + 1, row[tcol]))?;
-        if !t_ms.is_finite() || t_ms < 0.0 {
-            return Err(format!("row {}: time {t_ms} out of range", i + 1));
+/// Streaming CSV record reader: yields one record (Vec of fields) at a
+/// time from any `Read` source, holding only a fixed chunk buffer plus
+/// the record under construction. Semantics match `util::csvio`'s
+/// in-memory splitter exactly: quoted fields with `""` escapes, quoted
+/// newlines kept, `\r` skipped, and a trailing record without a final
+/// newline still emitted.
+pub struct RecordReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+    pos: usize,
+    len: usize,
+    eof: bool,
+    in_quotes: bool,
+    /// Saw a `"` while quoted; the next byte decides escape vs close.
+    quote_pending: bool,
+    field: Vec<u8>,
+    row: Vec<String>,
+}
+
+impl<R: Read> RecordReader<R> {
+    pub fn new(src: R) -> RecordReader<R> {
+        RecordReader::with_chunk(src, READ_CHUNK)
+    }
+
+    /// Test hook: a tiny chunk size forces every state-machine transition
+    /// across a buffer boundary.
+    pub fn with_chunk(src: R, chunk: usize) -> RecordReader<R> {
+        assert!(chunk > 0);
+        RecordReader {
+            src,
+            buf: vec![0; chunk],
+            pos: 0,
+            len: 0,
+            eof: false,
+            in_quotes: false,
+            quote_pending: false,
+            field: Vec::new(),
+            row: Vec::new(),
         }
-        let function = FunctionId(functions.id(row));
-        let region = match regions.as_mut() {
+    }
+
+    /// Next record, or `None` at end of input.
+    pub fn next_record(&mut self) -> Result<Option<Vec<String>>, String> {
+        loop {
+            while self.pos < self.len {
+                let c = self.buf[self.pos];
+                self.pos += 1;
+                if self.in_quotes {
+                    if self.quote_pending {
+                        self.quote_pending = false;
+                        if c == b'"' {
+                            self.field.push(b'"');
+                            continue;
+                        }
+                        // Closing quote; `c` falls through as unquoted.
+                        self.in_quotes = false;
+                    } else if c == b'"' {
+                        self.quote_pending = true;
+                        continue;
+                    } else {
+                        self.field.push(c);
+                        continue;
+                    }
+                }
+                match c {
+                    b'"' => self.in_quotes = true,
+                    b',' => self.end_field()?,
+                    b'\r' => {}
+                    b'\n' => {
+                        self.end_field()?;
+                        return Ok(Some(std::mem::take(&mut self.row)));
+                    }
+                    other => self.field.push(other),
+                }
+            }
+            if self.eof {
+                if self.quote_pending {
+                    // Input ended right after a quote: it was the closer.
+                    self.quote_pending = false;
+                    self.in_quotes = false;
+                }
+                if !self.field.is_empty() || !self.row.is_empty() {
+                    self.end_field()?;
+                    return Ok(Some(std::mem::take(&mut self.row)));
+                }
+                return Ok(None);
+            }
+            self.refill()?;
+        }
+    }
+
+    fn end_field(&mut self) -> Result<(), String> {
+        let bytes = std::mem::take(&mut self.field);
+        let s = String::from_utf8(bytes).map_err(|_| "invalid UTF-8 in CSV field".to_string())?;
+        self.row.push(s);
+        Ok(())
+    }
+
+    fn refill(&mut self) -> Result<(), String> {
+        self.pos = 0;
+        self.len = 0;
+        loop {
+            match self.src.read(&mut self.buf) {
+                Ok(0) => {
+                    self.eof = true;
+                    return Ok(());
+                }
+                Ok(n) => {
+                    self.len = n;
+                    return Ok(());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("reading trace: {e}")),
+            }
+        }
+    }
+}
+
+/// An id-like column fed one value at a time. Every value is interned in
+/// first-seen order; numeric parses are tracked on the side so that a
+/// dense all-numeric id space can be restored verbatim at the end (the
+/// compat path existing fixtures rely on), while sparse numeric spaces
+/// keep the dense interned ids.
+struct IdIntern {
+    interner: LabelInterner,
+    all_numeric: bool,
+    /// Original numeric value per interned id; valid while `all_numeric`.
+    numeric_by_id: Vec<u32>,
+}
+
+impl IdIntern {
+    fn new() -> IdIntern {
+        IdIntern { interner: LabelInterner::new(), all_numeric: true, numeric_by_id: Vec::new() }
+    }
+
+    fn intern(&mut self, label: &str) -> u32 {
+        let first_sight = self.interner.len();
+        let id = self.interner.intern(label);
+        if id as usize == first_sight && self.all_numeric {
+            match label.parse::<u32>() {
+                Ok(n) => self.numeric_by_id.push(n),
+                Err(_) => {
+                    self.all_numeric = false;
+                    self.numeric_by_id = Vec::new();
+                }
+            }
+        }
+        id
+    }
+
+    /// The interned-id → original-numeric-id map, if this column should
+    /// keep numeric ids verbatim: all values numeric AND the id space
+    /// dense enough that max id + 1 allocations are acceptable.
+    fn verbatim_ids(&self) -> Option<&[u32]> {
+        if !self.all_numeric || self.numeric_by_id.is_empty() {
+            return None;
+        }
+        let distinct = self.numeric_by_id.len() as u64;
+        let max_plus_1 = *self.numeric_by_id.iter().max().expect("non-empty") as u64 + 1;
+        if max_plus_1 <= DENSE_NUMERIC_MAX || max_plus_1 <= DENSE_NUMERIC_SLACK * distinct {
+            Some(&self.numeric_by_id)
+        } else {
+            None
+        }
+    }
+}
+
+/// One-pass trace builder: header resolution up front, then each row is
+/// validated, interned, and appended exactly once.
+struct TraceBuilder {
+    ncols: usize,
+    tcol: usize,
+    fcol: usize,
+    rcol: Option<usize>,
+    pcol: Option<usize>,
+    functions: IdIntern,
+    regions: IdIntern,
+    records: Vec<TraceRecord>,
+    rows_seen: usize,
+}
+
+fn col_any(header: &[String], names: &[&str]) -> Option<usize> {
+    names.iter().find_map(|n| header.iter().position(|h| h == n))
+}
+
+impl TraceBuilder {
+    fn from_header(header: &[String]) -> Result<TraceBuilder, String> {
+        let tcol = col_any(header, TIME_COLUMNS)
+            .ok_or_else(|| format!("no time column; expected one of {TIME_COLUMNS:?}"))?;
+        let fcol = col_any(header, FUNCTION_COLUMNS)
+            .ok_or_else(|| format!("no function column; expected one of {FUNCTION_COLUMNS:?}"))?;
+        Ok(TraceBuilder {
+            ncols: header.len(),
+            tcol,
+            fcol,
+            rcol: col_any(header, REGION_COLUMNS),
+            pcol: col_any(header, PAYLOAD_COLUMNS),
+            functions: IdIntern::new(),
+            regions: IdIntern::new(),
+            records: Vec::new(),
+            rows_seen: 0,
+        })
+    }
+
+    fn push_row(&mut self, row: &[String]) -> Result<(), String> {
+        self.rows_seen += 1;
+        let i = self.rows_seen;
+        if row.len() != self.ncols {
+            return Err(format!(
+                "row {} has {} fields, header has {}",
+                i,
+                row.len(),
+                self.ncols
+            ));
+        }
+        let t_ms: f64 = row[self.tcol]
+            .parse()
+            .map_err(|e| format!("row {}: bad time {:?}: {e}", i, row[self.tcol]))?;
+        if !t_ms.is_finite() || t_ms < 0.0 {
+            return Err(format!("row {}: time {t_ms} out of range", i));
+        }
+        let function = FunctionId(self.functions.intern(&row[self.fcol]));
+        let region = match self.rcol {
             None => RegionId(0),
-            Some(rc) => RegionId(rc.id(row)),
+            Some(c) => RegionId(self.regions.intern(&row[c])),
         };
-        let payload_scale = match pcol {
+        let payload_scale = match self.pcol {
             None => 1.0,
             Some(c) => row[c]
                 .parse::<f64>()
-                .map_err(|e| format!("row {}: bad payload {:?}: {e}", i + 1, row[c]))?,
+                .map_err(|e| format!("row {}: bad payload {:?}: {e}", i, row[c]))?,
         };
         if !payload_scale.is_finite() || payload_scale <= 0.0 {
-            return Err(format!("row {}: payload scale {payload_scale} must be positive", i + 1));
+            return Err(format!("row {}: payload scale {payload_scale} must be positive", i));
         }
-        records.push(TraceRecord {
+        self.records.push(TraceRecord {
             t: SimTime::from_ms(t_ms),
             function,
             region,
             payload_scale,
         });
+        Ok(())
     }
-    Ok(Trace::from_records(records))
+
+    fn finish(self) -> Trace {
+        let mut records = self.records;
+        if let Some(map) = self.functions.verbatim_ids() {
+            for r in &mut records {
+                r.function = FunctionId(map[r.function.0 as usize]);
+            }
+        }
+        if self.rcol.is_some() {
+            if let Some(map) = self.regions.verbatim_ids() {
+                for r in &mut records {
+                    r.region = RegionId(map[r.region.0 as usize]);
+                }
+            }
+        }
+        Trace::from_records(records)
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +418,65 @@ mod tests {
     }
 
     #[test]
+    fn sparse_numeric_ids_are_densified() {
+        // Regression: Azure-style hashed-numeric app ids used verbatim
+        // made n_functions() = max id + 1, allocating tens of millions of
+        // phantom slots in every per-function vector downstream.
+        let text = "t_ms,app\n0,40000001\n1,90000005\n2,40000001\n";
+        let t = parse_csv(text).unwrap();
+        let ids: Vec<u32> = t.records().iter().map(|r| r.function.0).collect();
+        assert_eq!(ids, vec![0, 1, 0], "sparse ids must densify in first-seen order");
+        assert_eq!(t.n_functions(), 2);
+
+        // Same blowup existed for numeric region ids.
+        let text = "t_ms,function_id,region\n0,0,70000002\n1,0,70000009\n";
+        let t = parse_csv(text).unwrap();
+        assert_eq!(t.n_regions(), 2);
+        assert_eq!(t.records()[0].region, RegionId(0));
+        assert_eq!(t.records()[1].region, RegionId(1));
+    }
+
+    #[test]
+    fn dense_numeric_ids_stay_verbatim() {
+        // Compat gate: ids at or below DENSE_NUMERIC_MAX keep historical
+        // verbatim behaviour even when only a few are distinct...
+        let text = format!("t_ms,function_id\n0,{}\n1,2\n", DENSE_NUMERIC_MAX - 1);
+        let t = parse_csv(&text).unwrap();
+        assert_eq!(t.records()[0].function, FunctionId(DENSE_NUMERIC_MAX as u32 - 1));
+        assert_eq!(t.n_functions(), DENSE_NUMERIC_MAX as usize);
+        // ...and bigger id spaces stay verbatim while dense enough
+        // (max + 1 within 4x distinct).
+        let mut text = String::from("t_ms,function_id\n");
+        for i in 0..2_000u32 {
+            text.push_str(&format!("{i},{}\n", 3 * i));
+        }
+        let t = parse_csv(&text).unwrap();
+        assert_eq!(t.records()[1_999].function, FunctionId(5_997));
+    }
+
+    #[test]
+    fn mixed_numeric_and_named_function_column_interns_all() {
+        // One named value makes the whole column opaque: numeric-looking
+        // strings are labels too, interned in first-seen order.
+        let text = "t_ms,function\n0,7\n1,checkout\n2,7\n3,checkout\n";
+        let t = parse_csv(text).unwrap();
+        let ids: Vec<u32> = t.records().iter().map(|r| r.function.0).collect();
+        assert_eq!(ids, vec![0, 1, 0, 1]);
+        assert_eq!(t.n_functions(), 2);
+    }
+
+    #[test]
+    fn scientific_notation_payloads() {
+        let text = "t_ms,function_id,payload_scale\n0,0,1.5e0\n1,0,2.5E-1\n2,0,1e1\n";
+        let t = parse_csv(text).unwrap();
+        let scales: Vec<f64> = t.records().iter().map(|r| r.payload_scale).collect();
+        assert_eq!(scales, vec![1.5, 0.25, 10.0]);
+        // Times accept scientific notation too (f64 grammar).
+        let t = parse_csv("t_ms,function_id\n1.5e3,0\n").unwrap();
+        assert!((t.records()[0].t.as_ms() - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn unsorted_rows_sort_stably() {
         // Equal timestamps: file order is the tiebreak.
         let text = "t_ms,function_id,payload_scale\n50,1,2.0\n10,0,1.0\n50,1,3.0\n";
@@ -204,7 +494,102 @@ mod tests {
             parse_csv("t_ms,function_id,payload_scale\n1,0,0\n").is_err(),
             "zero payload"
         );
+        assert!(parse_csv("t_ms,function_id\n1,0,9\n").is_err(), "ragged row");
         assert!(parse_csv("", ).is_err(), "empty text");
+    }
+
+    /// The pre-streaming parser: slurp via `Csv::parse`, scan the id
+    /// columns a second time for all-numeric detection, then build. Kept
+    /// here as the reference the streaming reader must match byte-for-byte
+    /// on dense-id fixtures.
+    fn parse_csv_slurp(text: &str) -> Result<Trace, String> {
+        let csv = Csv::parse(text)?;
+        let tcol = csv.col_any(TIME_COLUMNS).unwrap();
+        let fcol = csv.col_any(FUNCTION_COLUMNS).unwrap();
+        let rcol = csv.col_any(REGION_COLUMNS);
+        let pcol = csv.col_any(PAYLOAD_COLUMNS);
+        let f_numeric = csv.rows.iter().all(|r| r[fcol].parse::<u32>().is_ok());
+        let mut f_interner = LabelInterner::new();
+        let r_numeric =
+            rcol.map(|c| csv.rows.iter().all(|r| r[c].parse::<u32>().is_ok()));
+        let mut r_interner = LabelInterner::new();
+        let mut records = Vec::new();
+        for row in &csv.rows {
+            let function = FunctionId(if f_numeric {
+                row[fcol].parse().unwrap()
+            } else {
+                f_interner.intern(&row[fcol])
+            });
+            let region = match rcol {
+                None => RegionId(0),
+                Some(c) => RegionId(if r_numeric == Some(true) {
+                    row[c].parse().unwrap()
+                } else {
+                    r_interner.intern(&row[c])
+                }),
+            };
+            records.push(TraceRecord {
+                t: SimTime::from_ms(row[tcol].parse().unwrap()),
+                function,
+                region,
+                payload_scale: pcol.map(|c| row[c].parse().unwrap()).unwrap_or(1.0),
+            });
+        }
+        Ok(Trace::from_records(records))
+    }
+
+    fn assert_traces_identical(a: &Trace, b: &Trace) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.records().iter().zip(b.records()) {
+            assert_eq!(x.t, y.t);
+            assert_eq!(x.function, y.function);
+            assert_eq!(x.region, y.region);
+            assert_eq!(x.payload_scale.to_bits(), y.payload_scale.to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_reader_matches_slurping_parser() {
+        // On dense-id fixtures the new one-pass streaming parser must be
+        // bit-identical to the old two-pass slurping one.
+        let synth = SynthConfig { hours: 0.05, n_regions: 2, ..Default::default() }.generate();
+        let fixtures = [
+            to_csv(&synth).to_string(),
+            "timestamp_ms,app\n1000,7\n500,3\n".to_string(),
+            "t_ms,function\n0,checkout\n1,thumbnail\n2,checkout\n".to_string(),
+            "t_ms,function_id,datacenter,scale\n5,0,eu,2.0\n5,1,us,1e-1\n1,0,eu,3.5\n"
+                .to_string(),
+        ];
+        for text in &fixtures {
+            let new = parse_csv(text).unwrap();
+            let old = parse_csv_slurp(text).unwrap();
+            assert_traces_identical(&new, &old);
+        }
+    }
+
+    #[test]
+    fn record_reader_survives_chunk_boundaries() {
+        // Quoted fields, "" escapes, quoted newlines, CRLF, and a missing
+        // trailing newline must parse identically at every chunk size —
+        // chunk=1 forces each state transition across a refill.
+        let text = "a,b,c\r\n\"x,1\",\"say \"\"hi\"\"\",\"two\nlines\"\n1,2,3";
+        let mut expected: Option<Vec<Vec<String>>> = None;
+        for chunk in [1usize, 2, 3, 7, 64, 4096] {
+            let mut rr = RecordReader::with_chunk(text.as_bytes(), chunk);
+            let mut records = Vec::new();
+            while let Some(rec) = rr.next_record().unwrap() {
+                records.push(rec);
+            }
+            assert_eq!(records.len(), 3, "chunk={chunk}");
+            assert_eq!(records[1][0], "x,1");
+            assert_eq!(records[1][1], "say \"hi\"");
+            assert_eq!(records[1][2], "two\nlines");
+            assert_eq!(records[2], vec!["1", "2", "3"]);
+            match &expected {
+                None => expected = Some(records),
+                Some(e) => assert_eq!(&records, e, "chunk={chunk}"),
+            }
+        }
     }
 
     #[test]
@@ -215,6 +600,9 @@ mod tests {
         write_csv(&trace, &path).unwrap();
         let back = read_csv(&path).unwrap();
         assert_eq!(back.len(), trace.len());
+        // Streaming file read and in-memory parse agree bit-for-bit.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_traces_identical(&back, &parse_csv(&text).unwrap());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

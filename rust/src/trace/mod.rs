@@ -13,14 +13,23 @@
 //! - [`model`] — the trace data model: [`TraceRecord`]s sorted by time
 //!   (each carrying a function id, a region id, and a payload scale), plus
 //!   per-function [`ReplaySchedule`] and per-region record extraction;
-//! - [`io`] — Azure-Functions-style CSV read/write on `util::csvio`
-//!   (optional `region` column, numeric or interned names);
+//! - [`io`] — Azure-Functions-style CSV read/write (optional `region`
+//!   column, numeric or interned names) on a streaming chunked
+//!   [`io::RecordReader`], with sparse numeric id spaces densified in
+//!   first-seen order;
 //! - [`synth`] — a seeded synthetic trace generator: multi-hour,
 //!   multi-function, heavy-tailed (Zipf) per-function popularity, with
 //!   multi-region mixes (home region per function + spill fraction);
 //! - [`registry`] — function id → [`registry::FunctionProfile`] mapping
 //!   (phase profile + per-function Minos config), so warm pools and
-//!   elysium thresholds are judged per function.
+//!   elysium thresholds are judged per function;
+//! - [`azure`] — Azure Functions 2019 dataset-shape ingestion (per-minute
+//!   invocation histograms + duration percentiles + memory, streamed) and
+//!   a seeded same-shape synthetic generator;
+//! - [`calibrate`] — fits an ingested dataset into a deployable
+//!   [`calibrate::CalibratedWorkload`]: per-function `FunctionSpec` +
+//!   arrival process (diurnal thinning fitted from the hourly histogram),
+//!   expanded on demand into a registry and a replayable trace.
 //!
 //! The experiment side lives in `experiment::runner::run_trace` (isolated
 //! per-function deployments), `experiment::cluster::run_cluster`
@@ -29,12 +38,16 @@
 //! `minos replay [--regions N]`.
 
 pub mod arrivals;
+pub mod azure;
+pub mod calibrate;
 pub mod io;
 pub mod model;
 pub mod registry;
 pub mod synth;
 
 pub use arrivals::ArrivalProcess;
+pub use azure::{AzureDataset, AzureSynthConfig};
+pub use calibrate::CalibratedWorkload;
 pub use model::{FunctionId, ReplaySchedule, Trace, TraceRecord};
 pub use registry::{FunctionProfile, FunctionRegistry};
 pub use synth::SynthConfig;

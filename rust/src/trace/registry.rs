@@ -107,6 +107,17 @@ impl FunctionRegistry {
         p.policy = Some(policy);
         self
     }
+
+    /// Set every profile's elysium percentile — builder-style, the knob a
+    /// calibrated percentile sweep turns between runs of the same fitted
+    /// registry.
+    pub fn with_elysium_percentile(mut self, percentile: f64) -> FunctionRegistry {
+        assert!((0.0..=100.0).contains(&percentile), "percentile out of range");
+        for p in &mut self.profiles {
+            p.elysium_percentile = percentile;
+        }
+        self
+    }
 }
 
 /// The payload-scaled batch-analytics archetype: a large object download
@@ -199,6 +210,12 @@ mod tests {
             Some(PolicySpec::NeverTerminate)
         );
         assert_eq!(reg.get(FunctionId(0)).unwrap().policy, None);
+    }
+
+    #[test]
+    fn with_elysium_percentile_sets_every_profile() {
+        let reg = FunctionRegistry::demo(3).with_elysium_percentile(80.0);
+        assert!(reg.iter().all(|p| p.elysium_percentile == 80.0));
     }
 
     #[test]

@@ -55,14 +55,19 @@ impl Default for SynthConfig {
     }
 }
 
+/// Normalized Zipf weights over `n` ranks, hottest first (exponent 0 =
+/// uniform; ~1 matches Azure per-app invocation counts). Shared by the
+/// synthetic generator and the Azure-shape dataset generator.
+pub fn zipf_weights(n: usize, exponent: f64) -> Vec<f64> {
+    let raw: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(exponent)).collect();
+    let sum: f64 = raw.iter().sum();
+    raw.into_iter().map(|w| w / sum).collect()
+}
+
 impl SynthConfig {
     /// Normalized Zipf popularity weights, hottest function first.
     pub fn popularity(&self) -> Vec<f64> {
-        let raw: Vec<f64> = (0..self.n_functions)
-            .map(|i| 1.0 / ((i + 1) as f64).powf(self.zipf_exponent))
-            .collect();
-        let sum: f64 = raw.iter().sum();
-        raw.into_iter().map(|w| w / sum).collect()
+        zipf_weights(self.n_functions, self.zipf_exponent)
     }
 
     /// The arrival-process archetype assigned to function `i`, carrying

@@ -20,7 +20,11 @@
 #                         and a bound_estimate section (bound_estimate
 #                         bench: optimality-estimator attempts/s over a
 #                         recorded >=10k-invocation replay + the pure-
-#                         function bound fingerprint)
+#                         function bound fingerprint),
+#                         and a calibrate_ingest section (calibrate_ingest
+#                         bench: streaming Azure-CSV ingestion bytes/s,
+#                         dataset→registry fit rate + its fingerprint,
+#                         and fitted-trace expansion records/s)
 #
 # --check mode (the regression gate wired into `scripts/check.sh --bench`)
 # runs the same benches into a temp dir and compares every named rate
@@ -84,16 +88,19 @@ echo
 run_bench fault_churn "$OUT_DIR/BENCH_faults.json"
 echo
 run_bench bound_estimate "$OUT_DIR/BENCH_bound.json"
+echo
+run_bench calibrate_ingest "$OUT_DIR/BENCH_calibrate.json"
 
-# Fold the fleet-scale, fault-churn, and bound-estimator numbers into
-# BENCH_cluster.json so the whole cluster perf trajectory lives in one
-# committed file.
+# Fold the fleet-scale, fault-churn, bound-estimator, and calibration
+# numbers into BENCH_cluster.json so the whole cluster perf trajectory
+# lives in one committed file.
 if command -v python3 >/dev/null 2>&1; then
     python3 - "$OUT_DIR/BENCH_cluster.json" "$OUT_DIR/BENCH_fleet.json" \
-        "$OUT_DIR/BENCH_faults.json" "$OUT_DIR/BENCH_bound.json" <<'PY'
+        "$OUT_DIR/BENCH_faults.json" "$OUT_DIR/BENCH_bound.json" \
+        "$OUT_DIR/BENCH_calibrate.json" <<'PY'
 import json, sys
-cluster_path, fleet_path, faults_path, bound_path = (
-    sys.argv[1], sys.argv[2], sys.argv[3], sys.argv[4])
+cluster_path, fleet_path, faults_path, bound_path, calibrate_path = (
+    sys.argv[1], sys.argv[2], sys.argv[3], sys.argv[4], sys.argv[5])
 with open(cluster_path) as f:
     cluster = json.load(f)
 with open(fleet_path) as f:
@@ -102,13 +109,16 @@ with open(faults_path) as f:
     cluster["fault_churn"] = json.load(f)
 with open(bound_path) as f:
     cluster["bound_estimate"] = json.load(f)
+with open(calibrate_path) as f:
+    cluster["calibrate_ingest"] = json.load(f)
 with open(cluster_path, "w") as f:
     json.dump(cluster, f, indent=2)
     f.write("\n")
 PY
-    rm -f "$OUT_DIR/BENCH_fleet.json" "$OUT_DIR/BENCH_faults.json" "$OUT_DIR/BENCH_bound.json"
+    rm -f "$OUT_DIR/BENCH_fleet.json" "$OUT_DIR/BENCH_faults.json" \
+        "$OUT_DIR/BENCH_bound.json" "$OUT_DIR/BENCH_calibrate.json"
 else
-    echo "warning: python3 unavailable; extra numbers left in BENCH_fleet.json/BENCH_faults.json/BENCH_bound.json" >&2
+    echo "warning: python3 unavailable; extra numbers left in BENCH_fleet.json/BENCH_faults.json/BENCH_bound.json/BENCH_calibrate.json" >&2
 fi
 
 if [ "$CHECK" -eq 0 ]; then

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Repo-wide check gate: formatting, lints, and the tier-1 test suite.
 #
-# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs] [--faults] [--bounds]
+# Usage: scripts/check.sh [--fast] [--bench] [--policies] [--contention] [--obs] [--faults] [--bounds] [--calibrate]
 #   --fast       skip the release build and the bench compile (debug tests only)
 #   --bench      additionally run the bench gate: scripts/bench.sh --check
 #                (fails on >10% rate regression or a fingerprint change vs
@@ -28,6 +28,13 @@
 #                ordering intact, reproduce byte-for-byte across two
 #                process invocations and across thread counts, and the
 #                policy sweep must print the regret/capture columns
+#   --calibrate  additionally smoke the Azure-trace calibration: a seeded
+#                synthetic dataset must fit to the same registry
+#                fingerprint and calibrated-replay report across two
+#                process invocations, across thread counts, and after a
+#                CSV round-trip (--synth-azure vs re-ingesting the file
+#                it wrote), and `sweep --calibrate` must reproduce its
+#                percentile table the same three ways
 #
 # Tier-1 (ROADMAP.md): `cargo build --release && cargo test -q`.
 # Python-side tests (python/tests, via the repo-root conftest.py) run when
@@ -43,6 +50,7 @@ CONTENTION=0
 OBS=0
 FAULTS=0
 BOUNDS=0
+CALIBRATE=0
 for arg in "$@"; do
     case "$arg" in
         --fast) FAST=1 ;;
@@ -52,7 +60,8 @@ for arg in "$@"; do
         --obs) OBS=1 ;;
         --faults) FAULTS=1 ;;
         --bounds) BOUNDS=1 ;;
-        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs --faults --bounds)" >&2; exit 2 ;;
+        --calibrate) CALIBRATE=1 ;;
+        *) echo "unknown option: $arg (known: --fast --bench --policies --contention --obs --faults --bounds --calibrate)" >&2; exit 2 ;;
     esac
 done
 
@@ -267,6 +276,49 @@ if [ "$BOUNDS" -eq 1 ]; then
     echo "$sweep_out" | grep -q "never (control)" \
         || { echo "policy sweep did not label the never control arm" >&2; exit 1; }
     echo "bounds smoke passed"
+fi
+
+if [ "$CALIBRATE" -eq 1 ]; then
+    echo "== calibrate smoke (fit fingerprint + calibrated replay identity) =="
+    cargo build --release --quiet
+    MINOS_BIN="$(pwd)/target/release/minos"
+    [ -x "$MINOS_BIN" ] || MINOS_BIN="$(pwd)/rust/target/release/minos"
+    CAL_TMP="$(mktemp -d)"
+    trap 'rm -rf ${OBS_TMP:-} "$CAL_TMP"' EXIT
+    SYNTH="calibrate --synth-azure --functions 6 --minutes 120 --rate 2 --seed 909"
+    # Synth mode, dataset written: the reference fit + calibrated replay.
+    "$MINOS_BIN" $SYNTH --out "$CAL_TMP/azure.csv" --threads 1 > "$CAL_TMP/synth1.txt"
+    grep -q "registry fingerprint:" "$CAL_TMP/synth1.txt" \
+        || { echo "calibrate printed no registry fingerprint" >&2; exit 1; }
+    grep -q "workload classes" "$CAL_TMP/synth1.txt" \
+        || { echo "calibrated replay printed no workload-class rollup" >&2; exit 1; }
+    # Everything but the "written to" line must reproduce without --out,
+    # across a second process, and across thread counts.
+    sed '/^azure-shaped dataset written to /d' "$CAL_TMP/synth1.txt" > "$CAL_TMP/ref.txt"
+    "$MINOS_BIN" $SYNTH --threads 1 > "$CAL_TMP/synth2.txt"
+    cmp -s "$CAL_TMP/ref.txt" "$CAL_TMP/synth2.txt" \
+        || { echo "calibrate not reproducible across processes" >&2; exit 1; }
+    "$MINOS_BIN" $SYNTH --threads 8 > "$CAL_TMP/synth8.txt"
+    cmp -s "$CAL_TMP/ref.txt" "$CAL_TMP/synth8.txt" \
+        || { echo "calibrate differs between --threads 1 and 8" >&2; exit 1; }
+    # Round-trip: re-ingesting the CSV the synth run wrote must fit to the
+    # same fingerprint and replay to the same report, byte for byte.
+    "$MINOS_BIN" calibrate --trace "$CAL_TMP/azure.csv" --seed 909 --threads 1 \
+        > "$CAL_TMP/ingest.txt"
+    cmp -s "$CAL_TMP/ref.txt" "$CAL_TMP/ingest.txt" \
+        || { echo "re-ingested dataset fit/replay diverged from the synth run" >&2; exit 1; }
+    # Calibrated percentile sweep: same three-way identity.
+    SWEEP="sweep --calibrate $CAL_TMP/azure.csv --hours 0.5 --seed 909"
+    "$MINOS_BIN" $SWEEP --threads 1 > "$CAL_TMP/sweep1.txt"
+    grep -q "analysis d%" "$CAL_TMP/sweep1.txt" \
+        || { echo "calibrated sweep printed no percentile table" >&2; exit 1; }
+    "$MINOS_BIN" $SWEEP --threads 1 > "$CAL_TMP/sweep2.txt"
+    cmp -s "$CAL_TMP/sweep1.txt" "$CAL_TMP/sweep2.txt" \
+        || { echo "calibrated sweep not reproducible across processes" >&2; exit 1; }
+    "$MINOS_BIN" $SWEEP --threads 8 > "$CAL_TMP/sweep8.txt"
+    cmp -s "$CAL_TMP/sweep1.txt" "$CAL_TMP/sweep8.txt" \
+        || { echo "calibrated sweep differs between --threads 1 and 8" >&2; exit 1; }
+    echo "calibrate smoke passed"
 fi
 
 if [ "$BENCH" -eq 1 ]; then
